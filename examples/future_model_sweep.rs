@@ -1,0 +1,61 @@
+//! Sweep a user-defined space of future Transformers and report where
+//! communication crosses 25% / 50% of training time — the Fig 10 workflow
+//! as a library call, over a custom grid.
+//!
+//! Run: `cargo run --release --example future_model_sweep`
+
+use commscale::analysis::serialized;
+use commscale::hw::catalog;
+use commscale::model::memory::{required_tp, round_tp_pow2};
+use commscale::report::Table;
+
+fn main() {
+    let device = catalog::mi210();
+
+    // future models: H doubling per generation, SL growing with it
+    let mut t = Table::new(
+        &format!("future-model sweep on {}", device.name),
+        &["H", "SL", "~params(B)", "required TP", "comm %", "regime"],
+    );
+    let mut crossover_25 = None;
+    let mut crossover_50 = None;
+
+    for gen in 0..6u32 {
+        let h = 8192u64 << gen; // 8K .. 256K
+        let sl = 2048u64 << (gen / 2);
+        // params ≈ 12·L·H² with L ~ 100-ish layers growing slowly
+        let layers = 96 + 16 * gen as u64;
+        let params_b = (12 * layers * h * h) as f64 / 1e9;
+        let tp = round_tp_pow2(required_tp(params_b, 2.0)).min(256);
+        let rep = serialized::simulate_point(&device, h, sl, tp);
+        let frac = rep.comm_fraction();
+        let regime = if frac > 0.5 {
+            "comm-dominated"
+        } else if frac > 0.25 {
+            "comm-heavy"
+        } else {
+            "compute-bound"
+        };
+        if frac > 0.25 && crossover_25.is_none() {
+            crossover_25 = Some(h);
+        }
+        if frac > 0.5 && crossover_50.is_none() {
+            crossover_50 = Some(h);
+        }
+        t.row(vec![
+            h.to_string(),
+            sl.to_string(),
+            format!("{params_b:.0}"),
+            tp.to_string(),
+            format!("{:.1}", 100.0 * frac),
+            regime.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    if let Some(h) = crossover_25 {
+        println!("communication exceeds 25% of iteration time from H = {h}");
+    }
+    if let Some(h) = crossover_50 {
+        println!("communication exceeds 50% of iteration time from H = {h}");
+    }
+}

@@ -1,0 +1,52 @@
+//! Project Comp-vs.-Comm across hardware generations: derive historical
+//! flop-vs-bw ratios from the device catalog, then extrapolate future
+//! generations and show when communication becomes the dominant cost —
+//! the Fig 12/13 workflow as a library call.
+//!
+//! Run: `cargo run --release --example hardware_evolution`
+
+use commscale::analysis::{evolution, serialized};
+use commscale::hw::{catalog, Evolution};
+use commscale::report::Table;
+
+fn main() {
+    // ---- historical ratios from public datasheets (§4.3.6) ---------------
+    println!("historical flop-vs-bw ratios (from the device catalog):");
+    for (old, new) in [("V100", "A100"), ("MI50", "MI100"), ("MI100", "MI210")] {
+        let e = Evolution::between(
+            &catalog::find_device(old).unwrap(),
+            &catalog::find_device(new).unwrap(),
+        );
+        println!(
+            "  {old} -> {new}: compute x{:.1}, network x{:.1}, relative {:.1}x",
+            e.flop_scale,
+            e.bw_scale,
+            e.ratio()
+        );
+    }
+
+    // ---- extrapolate generations at the historical ~2x/gen ratio ---------
+    let base = catalog::mi210();
+    let mut t = Table::new(
+        "projected generations (2x flop-vs-bw per gen, PALM-1x class model)",
+        &["generation", "flop-vs-bw", "comm % (TP=64)", "exposed DP pts (fig13)"],
+    );
+    for gen in 0..4u32 {
+        let ratio = 2f64.powi(gen as i32);
+        let ev = Evolution { flop_scale: ratio, bw_scale: 1.0 };
+        let d = ev.apply(&base);
+        let frac = serialized::simulate_point(&d, 16384, 2048, 64).comm_fraction();
+        let exposed = evolution::fig13_exposed_count(&base, ev);
+        t.row(vec![
+            format!("gen+{gen}"),
+            format!("{ratio:.0}x"),
+            format!("{:.1}", 100.0 * frac),
+            format!("{exposed}/30"),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "\ntakeaway: without network scaling, the PALM-1x-class model goes from \
+         compute-bound to communication-dominated within two generations."
+    );
+}

@@ -1,0 +1,47 @@
+//! Quickstart: the two halves of the commscale API in ~60 lines.
+//!
+//! 1. Execute an AOT-compiled Pallas kernel from Rust through PJRT
+//!    (requires `make artifacts`).
+//! 2. Ask the analysis engine a Comp-vs.-Comm question about a model.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use std::path::Path;
+
+use commscale::analysis::serialized;
+use commscale::hw::catalog;
+use commscale::runtime::{HostTensor, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    // ---- 1. run the fused GEMM+bias+GELU Pallas kernel via PJRT ----------
+    if Path::new("artifacts/manifest.json").exists() {
+        let rt = Runtime::open(Path::new("artifacts"))?;
+        println!("PJRT platform: {}", rt.platform());
+
+        let n = 256;
+        let x = HostTensor::f32("x", vec![n, n], vec![0.1; n * n]);
+        let w = HostTensor::f32("w", vec![n, n], vec![0.01; n * n]);
+        let b = HostTensor::f32("b", vec![n], vec![0.5; n]);
+        let (out, secs) = rt.exec_timed("quickstart_gemm", &[x, w, b])?;
+        println!(
+            "fused gemm+bias+gelu 256x256x256 via PJRT: out[0]={:.4} ({:.2} ms)",
+            out[0].f32_data()?[0],
+            secs * 1e3
+        );
+    } else {
+        println!("(artifacts/ not built; skipping the PJRT half — run `make artifacts`)");
+    }
+
+    // ---- 2. how much of a future model's training time is communication? --
+    let device = catalog::mi210();
+    println!("\nComp-vs.-Comm on a {} node:", device.name);
+    for (name, h, sl, tp) in serialized::highlighted_points() {
+        let report = serialized::simulate_point(&device, h, sl, tp);
+        println!(
+            "  {name:<12} (H={h}, SL={sl}, TP={tp}): {:.1}% of iteration time is \
+             serialized communication",
+            100.0 * report.comm_fraction()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,335 @@
+"""AOT pipeline: lower L2/L1 functions to HLO text + manifest for Rust.
+
+Run once at build time (`make artifacts`). Emits:
+
+    artifacts/<name>.hlo.txt   — HLO text of each executable
+    artifacts/manifest.json    — input/output tensor specs per artifact
+
+HLO **text** (not `.serialize()`d protos) is the interchange format: the
+`xla` crate's xla_extension 0.5.1 rejects jax≥0.5's 64-bit instruction ids;
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Artifact families:
+
+  roi_gemm_*        GEMM at swept (M,N,K) — opmodel calibration + Fig 15(a)
+                    ground truth (SL-linear / H-quadratic). Emitted as
+                    native XLA GEMMs: the paper profiles rocBLAS, and the
+                    interpret-mode Pallas grid lowers to an HLO while-loop
+                    whose dynamic-update-slice copies the output every
+                    step — a CPU-lowering artifact (superlinear runtime)
+                    that neither rocBLAS nor real-TPU Mosaic has.
+  roi_layernorm_*   LayerNorm at swept (rows, H) — Fig 15(b), same note
+  layer_fwd_*       full pallas transformer layer — integration/serving path
+  grad_step_*       (params, tokens) → (loss, grads)   [DP compute phase]
+  apply_step_*      (params, m, v, step, grads) → new state [post-AR phase]
+  train_step_*      fused single-worker step
+  quickstart        tiny fused GEMM for examples/quickstart.rs
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+from typing import Any, Callable, Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import fused_matmul
+from .kernels.ref import layernorm_ref, matmul_ref
+
+# --------------------------------------------------------------------------
+# Named model configurations (referenced by Rust via the manifest)
+# --------------------------------------------------------------------------
+
+# NOTE on use_pallas: the raw interpret-mode pallas_call has no reverse-mode
+# rule, so trainable pallas configs go through kernels.vjp (custom_vjp with
+# Pallas forward AND Pallas backward GEMMs). The pure-jnp path is numerically
+# identical (python/tests/test_model.py, test_vjp.py). The larger training
+# configs keep use_pallas=False because the interpret-mode grid loop is an
+# HLO while-loop — correct but slow on the CPU backend; "tinypallas" proves
+# the fully-pallas training path composes end-to-end through PJRT.
+CONFIGS: Dict[str, M.TransformerConfig] = {
+    # test-sized: milliseconds per step, used by cargo integration tests
+    "tiny": M.TransformerConfig(
+        vocab=512, hidden=128, layers=2, heads=4, seq_len=32, batch=2,
+        use_pallas=False,
+    ),
+    # same model, fully-pallas fwd+bwd (kernels.vjp) — e2e pallas training
+    "tinypallas": M.TransformerConfig(
+        vocab=512, hidden=128, layers=2, heads=4, seq_len=32, batch=2,
+        use_pallas=True,
+    ),
+    # ~13.6M params: default for examples/e2e_train.rs (fast on CPU)
+    "small": M.TransformerConfig(
+        vocab=8192, hidden=384, layers=6, heads=6, seq_len=64, batch=4,
+        use_pallas=False,
+    ),
+    # ~97M params (BERT-base-like): the end-to-end validation model
+    "base100m": M.TransformerConfig(
+        vocab=16384, hidden=768, layers=12, heads=12, seq_len=128, batch=2,
+        use_pallas=False,
+    ),
+}
+
+# GEMM calibration sweeps (Fig 15a; the opmodel fits on a subset and
+# projects the rest). N=K fixed while M sweeps → runtime linear in M (= SL·B);
+# M fixed while N=K sweep → runtime quadratic in H.
+GEMM_M_SWEEP = [128, 256, 512, 1024, 2048, 4096]
+GEMM_M_FIXED_NK = 512
+GEMM_H_SWEEP = [128, 256, 512, 1024, 2048]
+GEMM_H_FIXED_M = 512
+
+# LayerNorm sweeps (Fig 15b): linear in rows and in H.
+LN_ROWS_SWEEP = [1024, 4096, 16384]
+LN_H_SWEEP = [256, 1024, 4096]
+
+
+# --------------------------------------------------------------------------
+# Lowering helpers
+# --------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_str(dt) -> str:
+    return {"float32": "f32", "int32": "i32", "uint32": "u32"}[jnp.dtype(dt).name]
+
+
+def _leaf_specs(tree, prefix: str = "") -> List[Dict[str, Any]]:
+    """Flatten a pytree of ShapeDtypeStructs into ordered manifest specs.
+
+    The order matches jax's own flattening (dicts sorted by key), which is
+    the order of HLO entry parameters — the Rust runtime relies on this.
+    """
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    specs = []
+    for path, leaf in leaves_with_paths:
+        name = prefix + jax.tree_util.keystr(path)
+        specs.append(
+            {
+                "name": name or prefix or "arg",
+                "shape": list(leaf.shape),
+                "dtype": _dtype_str(leaf.dtype),
+            }
+        )
+    return specs
+
+
+def sds(shape, dtype=jnp.float32) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+@dataclasses.dataclass
+class Artifact:
+    name: str
+    kind: str
+    fn: Callable
+    args: Sequence[Any]  # pytree of ShapeDtypeStructs
+    meta: Dict[str, Any]
+
+    def lower(self, out_dir: str) -> Dict[str, Any]:
+        lowered = jax.jit(self.fn).lower(*self.args)
+        text = to_hlo_text(lowered)
+        fname = f"{self.name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        out_tree = jax.eval_shape(self.fn, *self.args)
+        entry = {
+            "file": fname,
+            "kind": self.kind,
+            "meta": self.meta,
+            "inputs": _leaf_specs(list(self.args)),
+            "outputs": _leaf_specs([out_tree]),
+            "hlo_bytes": len(text),
+        }
+        print(f"  {self.name}: {len(text)} chars, "
+              f"{len(entry['inputs'])} in / {len(entry['outputs'])} out")
+        return entry
+
+
+# --------------------------------------------------------------------------
+# Artifact registry
+# --------------------------------------------------------------------------
+
+
+def _param_sds(cfg: M.TransformerConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    return {name: sds(shape) for name, shape in M.param_specs(cfg)}
+
+
+def build_registry(include_heavy: bool = True) -> List[Artifact]:
+    arts: List[Artifact] = []
+
+    # -- quickstart: fused GEMM+bias+GELU, 256³ -----------------------------
+    arts.append(
+        Artifact(
+            name="quickstart_gemm",
+            kind="roi_gemm",
+            fn=lambda x, w, b: fused_matmul(x, w, b, activation="gelu"),
+            args=(sds((256, 256)), sds((256, 256)), sds((256,))),
+            meta={"m": 256, "n": 256, "k": 256, "fused": "bias+gelu"},
+        )
+    )
+
+    # -- GEMM ROI sweeps (native XLA GEMM — see module docstring) ------------
+    def gemm_art(m, n, k):
+        return Artifact(
+            name=f"roi_gemm_m{m}_n{n}_k{k}",
+            kind="roi_gemm",
+            fn=lambda x, w: matmul_ref(x, w),
+            args=(sds((m, k)), sds((k, n))),
+            meta={"m": m, "n": n, "k": k, "flops": 2 * m * n * k},
+        )
+
+    seen = set()
+    for m in GEMM_M_SWEEP:
+        key = (m, GEMM_M_FIXED_NK, GEMM_M_FIXED_NK)
+        seen.add(key)
+        arts.append(gemm_art(*key))
+    for h in GEMM_H_SWEEP:
+        key = (GEMM_H_FIXED_M, h, h)
+        if key not in seen:
+            seen.add(key)
+            arts.append(gemm_art(*key))
+
+    # -- LayerNorm ROI sweeps ------------------------------------------------
+    def ln_art(rows, h):
+        return Artifact(
+            name=f"roi_layernorm_r{rows}_h{h}",
+            kind="roi_layernorm",
+            fn=lambda x, g, b: layernorm_ref(x, g, b),
+            args=(sds((rows, h)), sds((h,)), sds((h,))),
+            meta={"rows": rows, "h": h, "bytes": 8 * rows * h},
+        )
+
+    for rows in LN_ROWS_SWEEP:
+        arts.append(ln_art(rows, LN_H_SWEEP[0]))
+    for h in LN_H_SWEEP[1:]:
+        arts.append(ln_art(LN_ROWS_SWEEP[0], h))
+
+    # -- full pallas layer forward (integration / serving path) -------------
+    pall_cfg = dataclasses.replace(CONFIGS["tiny"], use_pallas=True)
+    lp_sds = {
+        k: sds(v.shape[1:])
+        for k, v in _param_sds(pall_cfg).items()
+        if k in M._LAYER_KEYS
+    }
+    arts.append(
+        Artifact(
+            name="layer_fwd_tiny",
+            kind="layer_fwd",
+            fn=lambda lp, x: M.layer_fwd(pall_cfg, lp, x),
+            args=(
+                lp_sds,
+                sds((pall_cfg.batch, pall_cfg.seq_len, pall_cfg.hidden)),
+            ),
+            meta={"config": "tiny", "pallas": True},
+        )
+    )
+
+    # -- training executables per named config ------------------------------
+    for cname, cfg in CONFIGS.items():
+        if cname == "base100m" and not include_heavy:
+            continue
+        p = _param_sds(cfg)
+        toks = sds((cfg.batch, cfg.seq_len), jnp.int32)
+        step = sds((1,))
+        meta = {
+            "config": cname,
+            "params": cfg.param_count(),
+            "hidden": cfg.hidden,
+            "layers": cfg.layers,
+            "heads": cfg.heads,
+            "seq_len": cfg.seq_len,
+            "batch": cfg.batch,
+            "vocab": cfg.vocab,
+        }
+        arts.append(
+            Artifact(
+                name=f"grad_step_{cname}",
+                kind="grad_step",
+                fn=M.grad_step(cfg),
+                args=(p, toks),
+                meta=meta,
+            )
+        )
+        arts.append(
+            Artifact(
+                name=f"apply_step_{cname}",
+                kind="apply_step",
+                fn=M.apply_step(cfg),
+                args=(p, p, p, step, p),
+                meta=meta,
+            )
+        )
+        arts.append(
+            Artifact(
+                name=f"train_step_{cname}",
+                kind="train_step",
+                fn=M.train_step(cfg),
+                args=(p, p, p, step, toks),
+                meta=meta,
+            )
+        )
+
+    return arts
+
+
+# --------------------------------------------------------------------------
+# Entry point
+# --------------------------------------------------------------------------
+
+
+def main(argv: Sequence[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--skip-heavy",
+        action="store_true",
+        help="skip the base100m artifacts (CI / quick iteration)",
+    )
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out, exist_ok=True)
+    registry = build_registry(include_heavy=not args.skip_heavy)
+    print(f"lowering {len(registry)} artifacts → {args.out}")
+
+    manifest: Dict[str, Any] = {"version": 1, "artifacts": {}, "configs": {}}
+    for cname, cfg in CONFIGS.items():
+        manifest["configs"][cname] = {
+            "vocab": cfg.vocab,
+            "hidden": cfg.hidden,
+            "layers": cfg.layers,
+            "heads": cfg.heads,
+            "seq_len": cfg.seq_len,
+            "batch": cfg.batch,
+            "ffn_mult": cfg.ffn_mult,
+            "param_count": cfg.param_count(),
+            "param_specs": [
+                {"name": n, "shape": list(s)} for n, s in M.param_specs(cfg)
+            ],
+        }
+    for art in registry:
+        manifest["artifacts"][art.name] = art.lower(args.out)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote manifest with {len(manifest['artifacts'])} artifacts")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

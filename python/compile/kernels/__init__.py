@@ -1,0 +1,15 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the L2 HLO).
+
+Exports:
+    fused_matmul     — tiled GEMM with fused bias + GELU/ReLU epilogue
+    layernorm        — row-blocked LayerNorm with f32 statistics
+    flash_attention  — online-softmax attention, single head
+    ref              — pure-jnp oracles for all of the above
+    vjp              — jax.custom_vjp wrappers making the kernels trainable
+"""
+
+from . import ref  # noqa: F401
+from . import vjp  # noqa: F401
+from .attention import flash_attention  # noqa: F401
+from .layernorm import layernorm  # noqa: F401
+from .matmul import fused_matmul  # noqa: F401

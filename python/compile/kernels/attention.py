@@ -1,0 +1,107 @@
+"""Flash-style attention Pallas kernel (single head).
+
+The paper's attention GEMM (Eq. 2: O(H·SL²·B/TP)) is the one operator whose
+cost grows quadratically in sequence length, so it dominates the long-SL
+futures the paper studies. On GPUs the SL×SL score matrix is streamed
+through shared memory by FlashAttention; the TPU rethink here keeps a
+(block_q, D) query tile resident in VMEM and loops K/V blocks through the
+grid's inner axis, carrying the online-softmax running max `m` and running
+denominator `l` in the output-adjacent accumulators — the score matrix
+never exists in HBM, so HBM traffic is O(SL·D) instead of O(SL²).
+
+Grid = (SL/block_q, SL/block_k) with the K axis innermost; `acc`/`m`/`l`
+persist across K steps because their BlockSpec index map ignores the K
+grid index (standard Pallas revisiting semantics).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attention_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *, scale: float, nsteps_k: int
+):
+    kk = pl.program_id(1)
+
+    @pl.when(kk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [bq, bk]
+
+    m_prev = m_ref[...]  # [bq, 1]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+
+    p = jnp.exp(s - m_new)  # [bq, bk]
+    alpha = jnp.exp(m_prev - m_new)  # rescale factor for old state
+
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[...] = o_ref[...] * alpha + jnp.dot(p, v)
+    m_ref[...] = m_new
+
+    @pl.when(kk == nsteps_k - 1)
+    def _done():
+        o_ref[...] = o_ref[...] / l_ref[...]
+
+
+def _pick_block(dim: int, preferred: int) -> int:
+    b = min(dim, preferred)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_q", "block_k"))
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+) -> jnp.ndarray:
+    """Online-softmax attention for one head: q,k,v [SL, D] → [SL, D]."""
+    sl, d = q.shape
+    assert k.shape == (sl, d) and v.shape == (sl, d)
+    if scale is None:
+        scale = 1.0 / float(d) ** 0.5
+    bq = _pick_block(sl, block_q)
+    bk = _pick_block(sl, block_k)
+    grid = (sl // bq, sl // bk)
+
+    out, _m, _l = pl.pallas_call(
+        functools.partial(_attention_kernel, scale=scale, nsteps_k=grid[1]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bk, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bk, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, 1), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((sl, d), jnp.float32),
+            jax.ShapeDtypeStruct((sl, 1), jnp.float32),
+            jax.ShapeDtypeStruct((sl, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v)
+    return out.astype(q.dtype)

@@ -1,0 +1,66 @@
+"""LayerNorm Pallas kernel.
+
+The paper models LayerNorm as the canonical bandwidth-bound non-GEMM
+operator whose runtime scales linearly in both SL (rows) and H (row width)
+(§4.3.8, Fig 15b). This kernel normalizes a [rows, H] activation over the
+last axis with f32 statistics, blocked over rows so each grid step holds a
+(block_rows, H) tile in VMEM: one pass computes mean/variance, the same
+tile is then scaled in place — a single HBM read and write per element,
+which is exactly the 2·rows·H·bytes traffic the Rust `AnalyticCost` model
+charges for it.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    norm = (x - mean) * jax.lax.rsqrt(var + eps)
+    o_ref[...] = norm * g_ref[...].astype(jnp.float32) + b_ref[...].astype(
+        jnp.float32
+    )
+
+
+def _pick_block(dim: int, preferred: int) -> int:
+    b = min(dim, preferred)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows"))
+def layernorm(
+    x: jnp.ndarray,
+    gamma: jnp.ndarray,
+    beta: jnp.ndarray,
+    *,
+    eps: float = 1e-5,
+    block_rows: int = 256,
+) -> jnp.ndarray:
+    """LayerNorm over the last axis of ``x`` ([rows, H])."""
+    rows, h = x.shape
+    assert gamma.shape == (h,) and beta.shape == (h,)
+    br = _pick_block(rows, block_rows)
+    grid = (rows // br,)
+
+    out = pl.pallas_call(
+        functools.partial(_layernorm_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, h), lambda i: (i, 0)),
+            pl.BlockSpec((1, h), lambda i: (0, 0)),
+            pl.BlockSpec((1, h), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, h), jnp.float32),
+        interpret=True,
+    )(x, gamma.reshape(1, h), beta.reshape(1, h))
+    return out.astype(x.dtype)

@@ -1,0 +1,160 @@
+"""Fused GEMM(+bias)(+activation) Pallas kernel — the Transformer hot spot.
+
+The paper's algorithmic analysis (§3.3) treats every Transformer sub-layer
+as a GEMM with its trailing element-wise ops *fused in* ("modern Transformer
+implementations usually fuse the non-GEMM operations with the preceding
+GEMM to maximize on-chip data reuse"). This kernel implements that fusion
+literally: the bias add and GELU epilogue run on the accumulator tile in
+VMEM before a single writeback to HBM.
+
+TPU adaptation of the paper's GPU framing (DESIGN.md §Hardware-Adaptation):
+
+* BlockSpec tiles the (M,K)x(K,N) product into MXU-aligned blocks held in
+  VMEM — the scratchpad analogue of CUDA shared memory.
+* The K dimension is the innermost grid axis, so partial products accumulate
+  into the f32 output tile across grid steps (`@pl.when(k == 0)` zero-init,
+  epilogue on the final K step) — replacing threadblock-level accumulation.
+* Accumulation is always f32 even for bf16 inputs, matching MXU semantics.
+
+All entry points take ``interpret=True`` paths only; on a real TPU the same
+code lowers to Mosaic (see DESIGN.md §6 for the estimated roofline).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gelu(x):
+    # tanh-approx GELU: the erf HLO opcode postdates the AOT target's
+    # (xla_extension 0.5.1) text parser; tanh is classic HLO. Must match
+    # ref.gelu_ref exactly.
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+
+
+def _epilogue(acc, bias_tile, activation):
+    if bias_tile is not None:
+        acc = acc + bias_tile
+    if activation == "gelu":
+        acc = _gelu(acc)
+    elif activation == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    return acc
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, nsteps_k: int, activation: Optional[str]):
+    """Grid = (M/bm, N/bn, K/bk); K innermost. No-bias variant."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == nsteps_k - 1)
+    def _done():
+        o_ref[...] = _epilogue(o_ref[...], None, activation)
+
+
+def _matmul_bias_kernel(
+    x_ref, w_ref, b_ref, o_ref, *, nsteps_k: int, activation: Optional[str]
+):
+    """Same as `_matmul_kernel` but with a fused bias tile."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == nsteps_k - 1)
+    def _done():
+        o_ref[...] = _epilogue(o_ref[...], b_ref[...].astype(jnp.float32), activation)
+
+
+def _pick_block(dim: int, preferred: int) -> int:
+    """Largest divisor of `dim` that is <= preferred (tiles must be exact)."""
+    b = min(dim, preferred)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(
+    jax.jit, static_argnames=("activation", "block_m", "block_n", "block_k")
+)
+def fused_matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    bias: Optional[jnp.ndarray] = None,
+    *,
+    activation: Optional[str] = None,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+) -> jnp.ndarray:
+    """Fused ``activation(x @ w + bias)`` with f32 accumulation.
+
+    x: [M, K], w: [K, N], bias: [N] or None. Returns [M, N] in x.dtype.
+
+    Default blocks (128, 128, 512) are MXU-aligned and fit comfortably in
+    VMEM (~0.3 MiB triple-buffer working set, DESIGN.md §6); for shapes not
+    divisible by the preferred block the largest exact divisor is used
+    (Pallas interpret mode requires exact tiling).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"matmul shape mismatch: {x.shape} @ {w.shape}"
+    bm = _pick_block(m, block_m)
+    bn = _pick_block(n, block_n)
+    bk = _pick_block(k, block_k)
+    grid = (m // bm, n // bn, k // bk)
+
+    out_shape = jax.ShapeDtypeStruct((m, n), jnp.float32)
+    x_spec = pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk))
+    w_spec = pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))
+    o_spec = pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j))
+
+    if bias is None:
+        kern = functools.partial(
+            _matmul_kernel, nsteps_k=grid[2], activation=activation
+        )
+        out = pl.pallas_call(
+            kern,
+            grid=grid,
+            in_specs=[x_spec, w_spec],
+            out_specs=o_spec,
+            out_shape=out_shape,
+            interpret=True,
+        )(x, w)
+    else:
+        assert bias.shape == (n,), f"bias shape {bias.shape} != ({n},)"
+        b_spec = pl.BlockSpec((1, bn), lambda i, j, kk: (0, j))
+        kern = functools.partial(
+            _matmul_bias_kernel, nsteps_k=grid[2], activation=activation
+        )
+        out = pl.pallas_call(
+            kern,
+            grid=grid,
+            in_specs=[x_spec, w_spec, b_spec],
+            out_specs=o_spec,
+            out_shape=out_shape,
+            interpret=True,
+        )(x, w, bias.reshape(1, n))
+    return out.astype(x.dtype)

@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain ``jax.numpy`` only — no pallas, no custom primitives.
+``python/tests/`` asserts ``assert_allclose(kernel(...), ref(...))`` over
+hypothesis-generated shapes/dtypes; this file is the single source of
+numerical truth for Layer 1.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gelu_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Tanh-approximation GELU, matching the kernel epilogue.
+
+    The tanh form (used by BERT/GPT-2) is chosen over the exact erf form
+    because the AOT interchange target (xla_extension 0.5.1's HLO text
+    parser) predates the `erf` HLO opcode; `tanh` is classic HLO.
+    """
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+
+
+def matmul_ref(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    bias: jnp.ndarray | None = None,
+    activation: str | None = None,
+) -> jnp.ndarray:
+    """Reference for the fused GEMM(+bias)(+GELU) kernel.
+
+    Computes in f32 regardless of input dtype (the kernel accumulates in
+    f32), then casts back to the input dtype.
+    """
+    out = jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    if activation == "gelu":
+        out = gelu_ref(out)
+    elif activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif activation is not None:
+        raise ValueError(f"unknown activation {activation!r}")
+    return out.astype(x.dtype)
+
+
+def layernorm_ref(
+    x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray, eps: float = 1e-5
+) -> jnp.ndarray:
+    """Reference LayerNorm over the last axis (f32 statistics)."""
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mean), axis=-1, keepdims=True)
+    norm = (xf - mean) * jax.lax.rsqrt(var + eps)
+    return (norm * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(
+        x.dtype
+    )
+
+
+def softmax_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Numerically-stable softmax over the last axis in f32."""
+    xf = x.astype(jnp.float32)
+    m = jnp.max(xf, axis=-1, keepdims=True)
+    e = jnp.exp(xf - m)
+    return (e / jnp.sum(e, axis=-1, keepdims=True)).astype(x.dtype)
+
+
+def attention_ref(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, scale: float | None = None
+) -> jnp.ndarray:
+    """Reference scaled-dot-product attention.
+
+    Shapes: q [S, D], k [S, D], v [S, D] (a single head; the L2 model vmaps
+    over batch and heads). Scores and softmax are computed in f32, matching
+    the flash-style kernel's accumulator precision.
+    """
+    if scale is None:
+        scale = 1.0 / float(q.shape[-1]) ** 0.5
+    scores = jnp.matmul(q.astype(jnp.float32), k.astype(jnp.float32).T) * scale
+    probs = softmax_ref(scores)
+    return jnp.matmul(probs, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def add_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Reference elementwise sum — the reduction step of an all-reduce."""
+    return (a.astype(jnp.float32) + b.astype(jnp.float32)).astype(a.dtype)

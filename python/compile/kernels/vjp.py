@@ -1,0 +1,154 @@
+"""Differentiable wrappers for the Pallas kernels (`jax.custom_vjp`).
+
+Interpret-mode `pallas_call` has no reverse-mode rule, so `jax.grad`
+cannot flow through the raw kernels. These wrappers follow the standard
+production pattern (as in FlashAttention): the forward pass runs the
+Pallas kernel; the backward pass is defined explicitly —
+
+* `matmul`      — backward is two more Pallas GEMMs (dx = dy·wᵀ,
+                  dw = xᵀ·dy); the pre-activation is *rematerialized*
+                  with a third kernel call instead of being stashed,
+                  trading FLOPs for activation memory.
+* `layernorm`   — the classic closed-form LN backward (jnp; it is
+                  bandwidth-bound element-wise math, not a GEMM).
+* `attention`   — backward recomputes the softmax via the pure-jnp
+                  oracle and differentiates it (O(SL²) memory in bwd
+                  only, like FlashAttention's recompute strategy).
+
+`python/tests/test_vjp.py` checks every gradient against jnp AD of the
+oracle.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .attention import flash_attention
+from .layernorm import layernorm
+from .matmul import fused_matmul
+
+
+# --------------------------------------------------------------------------
+# fused matmul
+# --------------------------------------------------------------------------
+
+
+def _act_grad(z: jnp.ndarray, activation: Optional[str]) -> jnp.ndarray:
+    """d activation(z) / dz, element-wise, in f32."""
+    if activation is None:
+        return jnp.ones_like(z)
+    if activation == "relu":
+        return (z > 0).astype(z.dtype)
+    if activation == "gelu":
+        # derivative of the tanh-approx GELU
+        c = jnp.sqrt(2.0 / jnp.pi).astype(z.dtype)
+        inner = c * (z + 0.044715 * z * z * z)
+        t = jnp.tanh(inner)
+        dinner = c * (1.0 + 3.0 * 0.044715 * z * z)
+        return 0.5 * (1.0 + t) + 0.5 * z * (1.0 - t * t) * dinner
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def matmul(x, w, bias, activation: Optional[str] = None):
+    """Differentiable fused ``activation(x @ w + bias)`` (Pallas fwd/bwd).
+
+    ``bias`` may be an array or None (pass None positionally).
+    """
+    return fused_matmul(x, w, bias, activation=activation)
+
+
+def _matmul_fwd(x, w, bias, activation):
+    return fused_matmul(x, w, bias, activation=activation), (x, w, bias)
+
+
+def _matmul_bwd(activation, res, dy):
+    x, w, bias = res
+    dyf = dy.astype(jnp.float32)
+    if activation is not None:
+        # rematerialize the pre-activation with the (no-epilogue) kernel
+        z = fused_matmul(x, w, bias, activation=None).astype(jnp.float32)
+        dyf = dyf * _act_grad(z, activation)
+    dyf = dyf.astype(x.dtype)
+    # backward GEMMs run through the Pallas kernel as well
+    dx = fused_matmul(dyf, w.T)
+    dw = fused_matmul(x.T, dyf)
+    db = None if bias is None else jnp.sum(dyf, axis=0).astype(bias.dtype)
+    return dx.astype(x.dtype), dw.astype(w.dtype), db
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+# --------------------------------------------------------------------------
+# layernorm
+# --------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def layernorm_d(x, gamma, beta, eps: float = 1e-5):
+    """Differentiable LayerNorm (Pallas forward, closed-form backward)."""
+    return layernorm(x, gamma, beta, eps=eps)
+
+
+def _ln_fwd(x, gamma, beta, eps):
+    return layernorm(x, gamma, beta, eps=eps), (x, gamma)
+
+
+def _ln_bwd(eps, res, dy):
+    x, gamma = res
+    xf = x.astype(jnp.float32)
+    dyf = dy.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mean), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    xhat = (xf - mean) * inv
+
+    dgamma = jnp.sum(dyf * xhat, axis=0).astype(gamma.dtype)
+    dbeta = jnp.sum(dyf, axis=0).astype(gamma.dtype)
+
+    dxhat = dyf * gamma.astype(jnp.float32)
+    h = x.shape[-1]
+    dx = (
+        inv
+        / h
+        * (
+            h * dxhat
+            - jnp.sum(dxhat, axis=-1, keepdims=True)
+            - xhat * jnp.sum(dxhat * xhat, axis=-1, keepdims=True)
+        )
+    )
+    return dx.astype(x.dtype), dgamma, dbeta
+
+
+layernorm_d.defvjp(_ln_fwd, _ln_bwd)
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def attention(q, k, v):
+    """Differentiable single-head attention (Pallas fwd, recompute bwd)."""
+    return flash_attention(q, k, v)
+
+
+def _attn_fwd(q, k, v):
+    return flash_attention(q, k, v), (q, k, v)
+
+
+def _attn_bwd(res, do):
+    q, k, v = res
+    # FlashAttention-style recompute: differentiate the oracle forward
+    _, vjp_fn = jax.vjp(ref.attention_ref, q, k, v)
+    return vjp_fn(do)
+
+
+attention.defvjp(_attn_fwd, _attn_bwd)

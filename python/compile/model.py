@@ -1,0 +1,308 @@
+"""Layer-2 JAX transformer: fwd/bwd + train step, built on the L1 kernels.
+
+This is the build-time model definition. `aot.py` lowers the functions
+defined here to HLO text once; the Rust coordinator then executes the
+artifacts via PJRT with Python entirely off the request path.
+
+Architecture (pre-LN BERT/GPT-style encoder, §2.1 of the paper):
+
+    x ─ LN ─ QKV-GEMM ─ attention ─ OUT-GEMM ─(+x)─ LN ─ FC1-GEMM(GELU) ─
+        FC2-GEMM ─(+)─ → next layer
+
+The three GEMM groups match the paper's Eqs. 1–3 exactly:
+  * "Linear GEMMs"    — QKV projection + output projection (Eq. 3)
+  * "Attention GEMMs" — QKᵀ and PV inside `flash_attention` (Eq. 2)
+  * "FC GEMMs"        — H→4H (fused GELU) and 4H→H (Eq. 1)
+
+Tensor-parallel slicing (Megatron-style, Fig. 4b): `layer_shapes(cfg)`
+reports the per-device GEMM shapes under a TP degree — the QKV/FC1 weights
+are column-sliced and OUT/FC2 row-sliced, so each device computes a partial
+sum that the coordinator all-reduces. The ROI artifacts are emitted at
+those sliced shapes.
+
+Data-parallel training splits the step into two executables so the Rust
+coordinator can interpose its ring all-reduce on the gradients:
+
+    grad_step : (params, tokens)            → (loss, grads)
+    apply_step: (params, m, v, step, grads) → (params, m, v, step)
+
+Both are pure functions of flat f32 arrays; `param_specs(cfg)` gives the
+canonical flattening order recorded in the artifact manifest.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref, vjp
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    """Hyperparameters; names follow the paper's Table 1 where possible."""
+
+    vocab: int = 4096
+    hidden: int = 256  # H
+    layers: int = 4
+    heads: int = 4
+    seq_len: int = 64  # SL
+    batch: int = 4  # B
+    ffn_mult: int = 4  # FC dim = ffn_mult * H
+    tp_degree: int = 1  # TP (shape slicing only; comm is the Rust side's job)
+    use_pallas: bool = True  # False = pure-jnp (oracle path / speed)
+
+    @property
+    def head_dim(self) -> int:
+        assert self.hidden % self.heads == 0
+        return self.hidden // self.heads
+
+    @property
+    def ffn(self) -> int:
+        return self.ffn_mult * self.hidden
+
+    def validate(self) -> "TransformerConfig":
+        assert self.hidden % self.heads == 0, "H must divide into heads"
+        assert self.heads % self.tp_degree == 0, "TP must divide heads"
+        assert self.ffn % self.tp_degree == 0, "TP must divide FC dim"
+        return self
+
+    def param_count(self) -> int:
+        """Total trainable parameters (embedding tied to LM head)."""
+        h, f = self.hidden, self.ffn
+        per_layer = (
+            (h * 3 * h + 3 * h)  # qkv
+            + (h * h + h)  # out proj
+            + (h * f + f)  # fc1
+            + (f * h + h)  # fc2
+            + 4 * h  # two LayerNorms (gamma, beta)
+        )
+        return self.vocab * h + self.layers * per_layer + 2 * h  # + final LN
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+
+def param_specs(cfg: TransformerConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Canonical (name, shape) list — the manifest/flattening order."""
+    h, f, v, nl = cfg.hidden, cfg.ffn, cfg.vocab, cfg.layers
+    specs: List[Tuple[str, Tuple[int, ...]]] = [("embedding", (v, h))]
+    # Layer params are stacked along a leading `layers` axis so the forward
+    # pass can lax.scan over them (bounds compiled code size, DESIGN.md §8).
+    specs += [
+        ("ln1_gamma", (nl, h)),
+        ("ln1_beta", (nl, h)),
+        ("w_qkv", (nl, h, 3 * h)),
+        ("b_qkv", (nl, 3 * h)),
+        ("w_out", (nl, h, h)),
+        ("b_out", (nl, h)),
+        ("ln2_gamma", (nl, h)),
+        ("ln2_beta", (nl, h)),
+        ("w_fc1", (nl, h, f)),
+        ("b_fc1", (nl, f)),
+        ("w_fc2", (nl, f, h)),
+        ("b_fc2", (nl, h)),
+        ("lnf_gamma", (h,)),
+        ("lnf_beta", (h,)),
+    ]
+    return specs
+
+
+def init_params(cfg: TransformerConfig, key: jax.Array) -> Dict[str, jnp.ndarray]:
+    """Scaled-normal init; LayerNorm gammas at 1, everything else small."""
+    params: Dict[str, jnp.ndarray] = {}
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if "gamma" in name:
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif "beta" in name or name.startswith("b_"):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        elif name == "embedding":
+            params[name] = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+        else:
+            fan_in = shape[-2]
+            std = (2.0 / (fan_in + shape[-1])) ** 0.5
+            params[name] = std * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+# --------------------------------------------------------------------------
+# Forward pass
+# --------------------------------------------------------------------------
+
+
+def _matmul(cfg, x, w, b=None, activation=None):
+    if cfg.use_pallas:
+        # vjp.matmul = Pallas forward + custom backward (also Pallas GEMMs),
+        # so the pallas path is fully trainable.
+        return vjp.matmul(x, w, b, activation)
+    return ref.matmul_ref(x, w, b, activation=activation)
+
+
+def _layernorm(cfg, x, g, b):
+    if cfg.use_pallas:
+        return vjp.layernorm_d(x, g, b)
+    return ref.layernorm_ref(x, g, b)
+
+
+def _attention(cfg, q, k, v):
+    # q,k,v: [B, nh, S, hd]; flash kernel handles one head.
+    if cfg.use_pallas:
+        return jax.vmap(jax.vmap(vjp.attention))(q, k, v)
+    return jax.vmap(jax.vmap(ref.attention_ref))(q, k, v)
+
+
+def layer_fwd(
+    cfg: TransformerConfig, lp: Dict[str, jnp.ndarray], x: jnp.ndarray
+) -> jnp.ndarray:
+    """One pre-LN encoder layer. x: [B, S, H] → [B, S, H]."""
+    b, s, h = x.shape
+    nh, hd = cfg.heads, cfg.head_dim
+
+    # ---- attention sub-layer ------------------------------------------------
+    hn = _layernorm(cfg, x.reshape(b * s, h), lp["ln1_gamma"], lp["ln1_beta"])
+    qkv = _matmul(cfg, hn, lp["w_qkv"], lp["b_qkv"])  # [B*S, 3H]
+    qkv = qkv.reshape(b, s, 3, nh, hd).transpose(2, 0, 3, 1, 4)  # [3,B,nh,S,hd]
+    att = _attention(cfg, qkv[0], qkv[1], qkv[2])  # [B,nh,S,hd]
+    att = att.transpose(0, 2, 1, 3).reshape(b * s, h)
+    x = x + _matmul(cfg, att, lp["w_out"], lp["b_out"]).reshape(b, s, h)
+
+    # ---- FC sub-layer -------------------------------------------------------
+    hn = _layernorm(cfg, x.reshape(b * s, h), lp["ln2_gamma"], lp["ln2_beta"])
+    f = _matmul(cfg, hn, lp["w_fc1"], lp["b_fc1"], activation="gelu")
+    x = x + _matmul(cfg, f, lp["w_fc2"], lp["b_fc2"]).reshape(b, s, h)
+    return x
+
+
+_LAYER_KEYS = (
+    "ln1_gamma", "ln1_beta", "w_qkv", "b_qkv", "w_out", "b_out",
+    "ln2_gamma", "ln2_beta", "w_fc1", "b_fc1", "w_fc2", "b_fc2",
+)  # fmt: skip
+
+
+def model_fwd(
+    cfg: TransformerConfig, params: Dict[str, jnp.ndarray], tokens: jnp.ndarray
+) -> jnp.ndarray:
+    """Token ids [B, S] → logits [B, S, V] (LM head tied to the embedding)."""
+    x = params["embedding"][tokens]  # [B, S, H]
+
+    def body(x, lp):
+        return layer_fwd(cfg, lp, x), None
+
+    stacked = {k: params[k] for k in _LAYER_KEYS}
+    x, _ = jax.lax.scan(body, x, stacked)
+
+    b, s, h = x.shape
+    x = _layernorm(cfg, x.reshape(b * s, h), params["lnf_gamma"], params["lnf_beta"])
+    logits = jnp.matmul(x, params["embedding"].T)  # tied head
+    return logits.reshape(b, s, cfg.vocab)
+
+
+def loss_fn(
+    cfg: TransformerConfig, params: Dict[str, jnp.ndarray], tokens: jnp.ndarray
+) -> jnp.ndarray:
+    """Next-token cross-entropy over [B, S] token ids."""
+    logits = model_fwd(cfg, params, tokens)  # [B, S, V]
+    targets = tokens[:, 1:]  # predict token t+1
+    logits = logits[:, :-1, :]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+# --------------------------------------------------------------------------
+# Training-step executables (the units the Rust coordinator runs)
+# --------------------------------------------------------------------------
+
+
+def grad_step(cfg: TransformerConfig):
+    """Returns f(params, tokens) → (loss, grads) with grads ≅ params."""
+
+    def f(params, tokens):
+        loss, grads = jax.value_and_grad(functools.partial(loss_fn, cfg))(
+            params, tokens
+        )
+        return loss, grads
+
+    return f
+
+
+def apply_step(cfg: TransformerConfig, lr: float = 1e-3, beta1: float = 0.9,
+               beta2: float = 0.999, eps: float = 1e-8, wd: float = 0.0):
+    """Adam optimizer apply: (params, m, v, step, grads) → updated state.
+
+    Kept separate from `grad_step` so the coordinator can all-reduce the
+    gradient buffers between the two calls (data-parallel training). The
+    pytree structure of outputs matches inputs positionally, so the Rust
+    side feeds outputs straight back in on the next step.
+    """
+
+    def f(params, m, v, step, grads):
+        step = step + 1
+        t = step.astype(jnp.float32)
+        bc1 = 1.0 - beta1 ** t
+        bc2 = 1.0 - beta2 ** t
+
+        def upd(p, g, mi, vi):
+            mi = beta1 * mi + (1.0 - beta1) * g
+            vi = beta2 * vi + (1.0 - beta2) * jnp.square(g)
+            mhat = mi / bc1
+            vhat = vi / bc2
+            p = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * p)
+            return p, mi, vi
+
+        out = {k: upd(params[k], grads[k], m[k], v[k]) for k in params}
+        params = {k: o[0] for k, o in out.items()}
+        m = {k: o[1] for k, o in out.items()}
+        v = {k: o[2] for k, o in out.items()}
+        return params, m, v, step
+
+    return f
+
+
+def train_step(cfg: TransformerConfig, lr: float = 1e-3):
+    """Fused single-process step (loss, params, m, v, step) — used by tests
+    and the single-worker example; DP uses grad_step/apply_step instead."""
+
+    gf, af = grad_step(cfg), apply_step(cfg, lr=lr)
+
+    def f(params, m, v, step, tokens):
+        loss, grads = gf(params, tokens)
+        params, m, v, step = af(params, m, v, step, grads)
+        return loss, params, m, v, step
+
+    return f
+
+
+# --------------------------------------------------------------------------
+# Tensor-parallel shape inventory (drives ROI emission + Rust analysis)
+# --------------------------------------------------------------------------
+
+
+def layer_shapes(cfg: TransformerConfig) -> Dict[str, Any]:
+    """Per-device GEMM (M, N, K) shapes for one layer under TP slicing.
+
+    Matches the paper's Fig. 4(b): column-parallel QKV/FC1, row-parallel
+    OUT/FC2; the row-parallel GEMMs produce partial sums of the full [B·SL,
+    H] activation, which is what the serialized all-reduce carries (Eq. 5).
+    """
+    cfg.validate()
+    bs = cfg.batch * cfg.seq_len
+    h, f, tp = cfg.hidden, cfg.ffn, cfg.tp_degree
+    sl = cfg.seq_len
+    return {
+        "qkv": (bs, 3 * h // tp, h),
+        "attn_qk": (sl, sl, cfg.head_dim),  # per head, heads/TP per device
+        "attn_pv": (sl, cfg.head_dim, sl),
+        "out": (bs, h, h // tp),
+        "fc1": (bs, f // tp, h),
+        "fc2": (bs, h, f // tp),
+        "heads_per_device": cfg.heads // tp,
+        "allreduce_bytes": 4 * bs * h,  # f32 activation AR (Eq. 5)
+    }

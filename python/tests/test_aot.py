@@ -1,0 +1,103 @@
+"""AOT pipeline tests: lowering, manifest spec ordering, HLO round-trip."""
+
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax._src.lib import xla_client as xc
+
+from compile import aot
+from compile import model as M
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_registry_names_unique():
+    arts = aot.build_registry(include_heavy=True)
+    names = [a.name for a in arts]
+    assert len(names) == len(set(names))
+
+
+def test_registry_covers_all_kinds():
+    kinds = {a.kind for a in aot.build_registry(include_heavy=True)}
+    assert {
+        "roi_gemm",
+        "roi_layernorm",
+        "layer_fwd",
+        "grad_step",
+        "apply_step",
+        "train_step",
+    } <= kinds
+
+
+def test_gemm_sweep_meta_flops_consistent():
+    for a in aot.build_registry(include_heavy=False):
+        if a.kind == "roi_gemm" and "flops" in a.meta:
+            m, n, k = a.meta["m"], a.meta["n"], a.meta["k"]
+            assert a.meta["flops"] == 2 * m * n * k
+
+
+def test_lowered_artifact_hlo_parses_and_fn_matches_oracle(tmp_path):
+    """Lower the quickstart GEMM, re-parse the HLO text (the validity check
+    the Rust loader depends on), and verify the lowered function itself
+    matches the pure-jnp oracle. Full load→compile→execute round-trip
+    through PJRT is covered on the Rust side (rust/tests/runtime_e2e.rs)."""
+    arts = [a for a in aot.build_registry(False) if a.name == "quickstart_gemm"]
+    entry = arts[0].lower(str(tmp_path))
+    text = (tmp_path / entry["file"]).read_text()
+
+    comp = xc._xla.hlo_module_from_text(text)  # parse = validity check
+    assert comp is not None
+    assert "ENTRY" in text and "f32[256,256]" in text
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((256, 256)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((256, 256)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((256,)).astype(np.float32))
+    got = np.asarray(arts[0].fn(x, w, b))
+    want = np.asarray(ref.matmul_ref(x, w, b, "gelu"))
+    np.testing.assert_allclose(got, want, atol=1e-3, rtol=1e-3)
+
+
+def test_manifest_input_order_matches_jax_flattening(tmp_path):
+    """The Rust runtime feeds buffers positionally; the manifest order must
+    equal jax's pytree flattening order (dict keys sorted)."""
+    cfg = aot.CONFIGS["tiny"]
+    p = {name: aot.sds(shape) for name, shape in M.param_specs(cfg)}
+    toks = aot.sds((cfg.batch, cfg.seq_len), jnp.int32)
+    specs = aot._leaf_specs([p, toks])
+    # first len(p) entries are params sorted by key, then tokens
+    sorted_names = sorted(p)
+    for i, name in enumerate(sorted_names):
+        assert name in specs[i]["name"], (i, name, specs[i]["name"])
+    assert specs[len(p)]["dtype"] == "i32"
+
+
+def test_manifest_written_by_main(tmp_path):
+    rc = aot.main(["--out", str(tmp_path), "--skip-heavy"])
+    assert rc == 0
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert manifest["version"] == 1
+    assert "grad_step_tiny" in manifest["artifacts"]
+    assert "base100m" in manifest["configs"]  # configs always listed
+    assert "grad_step_base100m" not in manifest["artifacts"]  # heavy skipped
+    for name, entry in manifest["artifacts"].items():
+        assert os.path.exists(tmp_path / entry["file"]), name
+        assert entry["hlo_bytes"] > 0
+        for spec in entry["inputs"] + entry["outputs"]:
+            assert spec["dtype"] in ("f32", "i32", "u32")
+            assert all(d > 0 for d in spec["shape"]) or spec["shape"] == []
+
+
+def test_grad_step_artifact_io_counts():
+    cfg = aot.CONFIGS["tiny"]
+    arts = {a.name: a for a in aot.build_registry(False)}
+    g = arts["grad_step_tiny"]
+    n_params = len(M.param_specs(cfg))
+    out_tree = jax.eval_shape(g.fn, *g.args)
+    n_out = len(jax.tree_util.tree_leaves(out_tree))
+    assert n_out == 1 + n_params  # loss + grads

@@ -1,0 +1,203 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes/block sizes; every test asserts allclose
+against `kernels.ref`. This is the core correctness signal for Layer 1 —
+the AOT artifacts embed exactly these kernels.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import flash_attention, fused_matmul, layernorm, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+# Interpret-mode pallas is slow; keep hypothesis example counts moderate.
+KERNEL_SETTINGS = settings(max_examples=25, deadline=None)
+
+dims = st.integers(min_value=1, max_value=96)
+small_dims = st.integers(min_value=1, max_value=48)
+
+
+def _rand(key, shape, dtype=np.float32, scale=1.0):
+    return jnp.asarray(
+        np.random.default_rng(key).standard_normal(shape).astype(dtype) * scale
+    )
+
+
+# --------------------------------------------------------------------------
+# fused_matmul
+# --------------------------------------------------------------------------
+
+
+@KERNEL_SETTINGS
+@given(m=dims, n=dims, k=dims, seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref(m, n, k, seed):
+    x = _rand(seed, (m, k))
+    w = _rand(seed + 1, (k, n))
+    got = fused_matmul(x, w)
+    want = ref.matmul_ref(x, w)
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+@KERNEL_SETTINGS
+@given(
+    m=small_dims,
+    n=small_dims,
+    k=small_dims,
+    act=st.sampled_from([None, "gelu", "relu"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_fused_epilogue(m, n, k, act, seed):
+    x = _rand(seed, (m, k))
+    w = _rand(seed + 1, (k, n))
+    b = _rand(seed + 2, (n,))
+    got = fused_matmul(x, w, b, activation=act)
+    want = ref.matmul_ref(x, w, b, activation=act)
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("blocks", [(8, 8, 8), (16, 32, 8), (128, 128, 512)])
+def test_matmul_block_shape_invariance(blocks):
+    """Result must not depend on the BlockSpec tiling."""
+    bm, bn, bk = blocks
+    x = _rand(0, (64, 96))
+    w = _rand(1, (96, 80))
+    got = fused_matmul(x, w, block_m=bm, block_n=bn, block_k=bk)
+    want = ref.matmul_ref(x, w)
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+def test_matmul_nondivisible_shapes():
+    """Odd shapes fall back to the largest exact-divisor block."""
+    x = _rand(0, (37, 53))
+    w = _rand(1, (53, 29))
+    got = fused_matmul(x, w)
+    np.testing.assert_allclose(got, ref.matmul_ref(x, w), atol=1e-4, rtol=1e-4)
+
+
+def test_matmul_accumulates_f32_for_bf16():
+    x = _rand(0, (64, 256)).astype(jnp.bfloat16)
+    w = _rand(1, (256, 64)).astype(jnp.bfloat16)
+    got = fused_matmul(x, w)
+    want = ref.matmul_ref(x, w)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        got.astype(np.float32), want.astype(np.float32), atol=0.25, rtol=0.05
+    )
+
+
+def test_matmul_shape_mismatch_raises():
+    with pytest.raises(AssertionError):
+        fused_matmul(_rand(0, (4, 5)), _rand(1, (6, 4)))
+
+
+def test_matmul_bias_shape_checked():
+    with pytest.raises(AssertionError):
+        fused_matmul(_rand(0, (4, 8)), _rand(1, (8, 8)), _rand(2, (4,)))
+
+
+# --------------------------------------------------------------------------
+# layernorm
+# --------------------------------------------------------------------------
+
+
+@KERNEL_SETTINGS
+@given(rows=dims, h=st.integers(2, 128), seed=st.integers(0, 2**31 - 1))
+def test_layernorm_matches_ref(rows, h, seed):
+    x = _rand(seed, (rows, h), scale=3.0)
+    g = _rand(seed + 1, (h,))
+    b = _rand(seed + 2, (h,))
+    got = layernorm(x, g, b)
+    want = ref.layernorm_ref(x, g, b)
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+def test_layernorm_output_statistics():
+    """With gamma=1, beta=0 each row is ~zero-mean unit-variance."""
+    x = _rand(7, (128, 256), scale=10.0)
+    out = layernorm(x, jnp.ones(256), jnp.zeros(256))
+    np.testing.assert_allclose(np.mean(out, axis=-1), 0.0, atol=1e-4)
+    np.testing.assert_allclose(np.std(out, axis=-1), 1.0, atol=1e-2)
+
+
+def test_layernorm_block_rows_invariance():
+    x = _rand(3, (96, 64))
+    g, b = _rand(4, (64,)), _rand(5, (64,))
+    a = layernorm(x, g, b, block_rows=96)
+    c = layernorm(x, g, b, block_rows=8)
+    np.testing.assert_allclose(a, c, atol=1e-6, rtol=1e-6)
+
+
+def test_layernorm_large_magnitude_stable():
+    """f32 statistics keep large-magnitude inputs finite."""
+    x = _rand(9, (32, 128), scale=1e4)
+    out = layernorm(x, jnp.ones(128), jnp.zeros(128))
+    assert np.all(np.isfinite(np.asarray(out)))
+
+
+# --------------------------------------------------------------------------
+# flash_attention
+# --------------------------------------------------------------------------
+
+
+@KERNEL_SETTINGS
+@given(
+    sl=st.integers(1, 96),
+    d=st.sampled_from([8, 16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(sl, d, seed):
+    q = _rand(seed, (sl, d))
+    k = _rand(seed + 1, (sl, d))
+    v = _rand(seed + 2, (sl, d))
+    got = flash_attention(q, k, v)
+    want = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(got, want, atol=2e-4, rtol=2e-4)
+
+
+def test_attention_block_invariance():
+    """Online-softmax result must not depend on K-block size."""
+    q, k, v = (_rand(i, (64, 32)) for i in range(3))
+    a = flash_attention(q, k, v, block_q=64, block_k=64)
+    b = flash_attention(q, k, v, block_q=16, block_k=8)
+    np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-5)
+
+
+def test_attention_rows_are_convex_combinations():
+    """Each output row lies in the convex hull of V rows: softmax weights
+    sum to 1, so mean(out) tracks mean(V) for constant V."""
+    q = _rand(0, (32, 16))
+    k = _rand(1, (32, 16))
+    v = jnp.ones((32, 16))
+    out = flash_attention(q, k, v)
+    np.testing.assert_allclose(out, 1.0, atol=1e-5)
+
+
+def test_attention_large_logits_stable():
+    """Running-max rescaling keeps exp() in range for large scores."""
+    q = _rand(0, (16, 8), scale=30.0)
+    k = _rand(1, (16, 8), scale=30.0)
+    v = _rand(2, (16, 8))
+    out = flash_attention(q, k, v)
+    assert np.all(np.isfinite(np.asarray(out)))
+    want = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(out, want, atol=1e-3, rtol=1e-3)
+
+
+def test_attention_custom_scale():
+    q, k, v = (_rand(i, (24, 16)) for i in range(3))
+    got = flash_attention(q, k, v, scale=0.5)
+    want = ref.attention_ref(q, k, v, scale=0.5)
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+def test_attention_vmap_over_heads():
+    """The L2 model vmaps the kernel over (batch, heads)."""
+    q, k, v = (_rand(i, (2, 4, 32, 16)) for i in range(3))
+    got = jax.vmap(jax.vmap(flash_attention))(q, k, v)
+    want = jax.vmap(jax.vmap(ref.attention_ref))(q, k, v)
+    np.testing.assert_allclose(got, want, atol=2e-4, rtol=2e-4)

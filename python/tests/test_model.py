@@ -1,0 +1,245 @@
+"""L2 model tests: shapes, pallas/jnp parity, TP slicing, training descent."""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+TINY = M.TransformerConfig(
+    vocab=256, hidden=64, layers=2, heads=4, seq_len=16, batch=2, use_pallas=False
+)
+
+
+def _params(cfg, seed=0):
+    return M.init_params(cfg, jax.random.PRNGKey(seed))
+
+
+def _tokens(cfg, seed=0):
+    return jax.random.randint(
+        jax.random.PRNGKey(seed), (cfg.batch, cfg.seq_len), 0, cfg.vocab
+    )
+
+
+# --------------------------------------------------------------------------
+# Config / params
+# --------------------------------------------------------------------------
+
+
+def test_param_count_matches_init():
+    p = _params(TINY)
+    total = sum(int(np.prod(v.shape)) for v in p.values())
+    assert total == TINY.param_count()
+
+
+def test_param_specs_cover_init_exactly():
+    p = _params(TINY)
+    specs = dict(M.param_specs(TINY))
+    assert set(specs) == set(p)
+    for name, shape in specs.items():
+        assert p[name].shape == shape
+
+
+@pytest.mark.parametrize(
+    "cname,expect_min,expect_max",
+    [("tiny", 1e5, 1e7), ("small", 1e7, 5e7), ("base100m", 8e7, 1.2e8)],
+)
+def test_named_configs_param_scale(cname, expect_min, expect_max):
+    from compile.aot import CONFIGS
+
+    n = CONFIGS[cname].param_count()
+    assert expect_min <= n <= expect_max, f"{cname}: {n}"
+
+
+def test_config_validation_rejects_bad_tp():
+    cfg = dataclasses.replace(TINY, tp_degree=3)
+    with pytest.raises(AssertionError):
+        cfg.validate()
+
+
+# --------------------------------------------------------------------------
+# Forward pass
+# --------------------------------------------------------------------------
+
+
+def test_model_fwd_shape_and_finite():
+    p = _params(TINY)
+    logits = M.model_fwd(TINY, p, _tokens(TINY))
+    assert logits.shape == (TINY.batch, TINY.seq_len, TINY.vocab)
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_pallas_and_jnp_paths_agree():
+    """use_pallas toggles the kernel implementation, not the math."""
+    cfg_p = dataclasses.replace(TINY, use_pallas=True)
+    p = _params(TINY)
+    t = _tokens(TINY)
+    l_jnp = M.loss_fn(TINY, p, t)
+    l_pal = M.loss_fn(cfg_p, p, t)
+    np.testing.assert_allclose(float(l_jnp), float(l_pal), atol=1e-4, rtol=1e-5)
+
+
+def test_layer_fwd_residual_identity_at_zero_weights():
+    """With all GEMM weights/biases zeroed, the layer is the identity
+    (both sub-layers contribute exactly their residual branch)."""
+    p = _params(TINY)
+    lp = {k: jnp.zeros_like(p[k][0]) for k in M._LAYER_KEYS}
+    lp["ln1_gamma"] = jnp.ones_like(lp["ln1_gamma"])
+    lp["ln2_gamma"] = jnp.ones_like(lp["ln2_gamma"])
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, TINY.hidden))
+    out = M.layer_fwd(TINY, lp, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x), atol=1e-6)
+
+
+def test_loss_close_to_uniform_at_init():
+    """Initial loss should be near ln(vocab) (uniform predictive dist)."""
+    loss = float(M.loss_fn(TINY, _params(TINY), _tokens(TINY)))
+    assert abs(loss - np.log(TINY.vocab)) < 0.5
+
+
+# --------------------------------------------------------------------------
+# Gradients / optimizer
+# --------------------------------------------------------------------------
+
+
+def test_grad_step_structure():
+    loss, grads = M.grad_step(TINY)(_params(TINY), _tokens(TINY))
+    p = _params(TINY)
+    assert set(grads) == set(p)
+    for k in p:
+        assert grads[k].shape == p[k].shape
+    assert np.isfinite(float(loss))
+
+
+def test_grad_matches_finite_difference():
+    """Directional derivative vs central finite difference on one param."""
+    cfg = dataclasses.replace(TINY, layers=1)
+    p = _params(cfg)
+    t = _tokens(cfg)
+    _, grads = M.grad_step(cfg)(p, t)
+    key = "lnf_gamma"
+    direction = jnp.ones_like(p[key])
+    eps = 1e-3
+    p_plus = dict(p, **{key: p[key] + eps * direction})
+    p_minus = dict(p, **{key: p[key] - eps * direction})
+    fd = (float(M.loss_fn(cfg, p_plus, t)) - float(M.loss_fn(cfg, p_minus, t))) / (
+        2 * eps
+    )
+    analytic = float(jnp.sum(grads[key] * direction))
+    np.testing.assert_allclose(analytic, fd, atol=1e-3, rtol=1e-2)
+
+
+def test_apply_step_updates_and_increments():
+    p = _params(TINY)
+    zeros = {k: jnp.zeros_like(v) for k, v in p.items()}
+    _, grads = M.grad_step(TINY)(p, _tokens(TINY))
+    step = jnp.zeros((1,))
+    p2, m2, v2, step2 = M.apply_step(TINY, lr=1e-2)(p, zeros, zeros, step, grads)
+    assert float(step2[0]) == 1.0
+    # at least the embedding must move
+    assert float(jnp.max(jnp.abs(p2["embedding"] - p["embedding"]))) > 0
+    # Adam moments pick up the gradient signal
+    assert float(jnp.linalg.norm(m2["embedding"])) > 0
+    assert float(jnp.linalg.norm(v2["embedding"])) > 0
+
+
+def test_training_reduces_loss():
+    """~40 fused steps on a fixed batch must cut loss substantially."""
+    cfg = TINY
+    step_fn = jax.jit(M.train_step(cfg, lr=3e-3))
+    p = _params(cfg)
+    zeros = {k: jnp.zeros_like(v) for k, v in p.items()}
+    m, v = zeros, {k: jnp.zeros_like(x) for k, x in p.items()}
+    s = jnp.zeros((1,))
+    t = _tokens(cfg)
+    first = None
+    for i in range(40):
+        loss, p, m, v, s = step_fn(p, m, v, s, t)
+        if first is None:
+            first = float(loss)
+    assert float(loss) < first * 0.7, (first, float(loss))
+
+
+def test_grad_apply_composition_equals_train_step():
+    """grad_step + apply_step (the DP decomposition the Rust coordinator
+    uses) must be bit-identical to the fused train_step."""
+    cfg = TINY
+    p = _params(cfg)
+    zeros = {k: jnp.zeros_like(v) for k, v in p.items()}
+    t = _tokens(cfg)
+    s = jnp.zeros((1,))
+
+    loss_f, pf, mf, vf, sf = M.train_step(cfg)(p, zeros, zeros, s, t)
+    loss_g, grads = M.grad_step(cfg)(p, t)
+    pg, mg, vg, sg = M.apply_step(cfg)(p, zeros, zeros, s, grads)
+
+    np.testing.assert_allclose(float(loss_f), float(loss_g), rtol=1e-6)
+    for k in p:
+        np.testing.assert_allclose(
+            np.asarray(pf[k]), np.asarray(pg[k]), atol=1e-7, rtol=1e-6
+        )
+    assert float(sf[0]) == float(sg[0]) == 1.0
+
+
+# --------------------------------------------------------------------------
+# TP shape inventory
+# --------------------------------------------------------------------------
+
+
+def test_layer_shapes_tp1_matches_paper_eqs():
+    cfg = M.TransformerConfig(
+        vocab=256, hidden=64, layers=1, heads=4, seq_len=16, batch=2
+    )
+    s = M.layer_shapes(cfg)
+    bs, h, f = 32, 64, 256
+    assert s["qkv"] == (bs, 3 * h, h)
+    assert s["fc1"] == (bs, f, h)
+    assert s["fc2"] == (bs, h, f)
+    assert s["allreduce_bytes"] == 4 * bs * h
+
+
+@pytest.mark.parametrize("tp", [1, 2, 4])
+def test_layer_shapes_tp_slices_flops_linearly(tp):
+    """Total per-device GEMM flops must scale as 1/TP (Eqs. 1–3)."""
+    cfg = M.TransformerConfig(
+        vocab=256, hidden=64, layers=1, heads=4, seq_len=16, batch=2, tp_degree=tp
+    )
+    s = M.layer_shapes(cfg)
+
+    def fl(mnk):
+        m, n, k = mnk
+        return 2 * m * n * k
+
+    total = (
+        fl(s["qkv"])
+        + fl(s["out"])
+        + fl(s["fc1"])
+        + fl(s["fc2"])
+        + s["heads_per_device"] * cfg.batch * (fl(s["attn_qk"]) + fl(s["attn_pv"]))
+    )
+    cfg1 = dataclasses.replace(cfg, tp_degree=1)
+    s1 = M.layer_shapes(cfg1)
+    total1 = (
+        fl(s1["qkv"])
+        + fl(s1["out"])
+        + fl(s1["fc1"])
+        + fl(s1["fc2"])
+        + s1["heads_per_device"] * cfg.batch * (fl(s1["attn_qk"]) + fl(s1["attn_pv"]))
+    )
+    assert total * tp == total1
+
+
+def test_allreduce_bytes_tp_invariant():
+    """Eq. 5: the serialized AR carries the *full* activation regardless
+    of TP degree."""
+    for tp in (1, 2, 4):
+        cfg = M.TransformerConfig(
+            vocab=256, hidden=64, layers=1, heads=4, seq_len=16, batch=2,
+            tp_degree=tp,
+        )
+        assert M.layer_shapes(cfg)["allreduce_bytes"] == 4 * 32 * 64

@@ -1,0 +1,53 @@
+//! Bench: the real shared-memory ring all-reduce — bandwidth curve vs
+//! size and rank count. This is the hot path of the DP trainer; the
+//! DESIGN.md §8 target is AR overhead < 15% of step time at DP=4 for the
+//! ~100M-param model (≈ 390 MB of f32 gradients).
+
+use commscale::collectives::ShmRing;
+use commscale::util::microbench::{bench_header, Bench};
+use commscale::util::Rng;
+
+fn bufs(n: usize, len: usize) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(1);
+    (0..n)
+        .map(|_| (0..len).map(|_| rng.f32()).collect())
+        .collect()
+}
+
+fn main() {
+    bench_header("shared-memory ring all-reduce");
+
+    for &(n, elems) in &[
+        (2usize, 1usize << 16),
+        (4, 1 << 16),
+        (4, 1 << 20),
+        (4, 1 << 24),
+        (8, 1 << 20),
+    ] {
+        let ring = ShmRing::new(n);
+        let mut b = bufs(n, elems);
+        let bytes = 4 * elems;
+        let r = Bench::new(&format!("ring_ar n={n} {}KB", bytes / 1024))
+            .max_iters(200)
+            .run(|| {
+                ring.all_reduce(&mut b);
+            });
+        let busbw = 2.0 * (n - 1) as f64 / n as f64 * bytes as f64
+            / r.summary.median;
+        println!("    -> bus bandwidth {:.2} GB/s", busbw / 1e9);
+    }
+
+    // the e2e-relevant point: DP=4, ~100M f32 grads
+    let n = 4;
+    let elems = 97_000_000; // ~params of base100m, f32 (388 MB per rank)
+    let ring = ShmRing::new(n);
+    let mut b = bufs(n, elems);
+    let r = Bench::new("ring_ar n=4 base100m-grads (388MB)")
+        .max_iters(6)
+        .run(|| {
+            ring.all_reduce(&mut b);
+        });
+    let busbw =
+        2.0 * (n - 1) as f64 / n as f64 * (4 * elems) as f64 / r.summary.median;
+    println!("    -> bus bandwidth {:.2} GB/s", busbw / 1e9);
+}

@@ -1,0 +1,27 @@
+//! Bench: Fig 7 — algorithmic slack & edge across the zoo. Prints the
+//! series the paper plots and times the generator.
+
+use commscale::analysis::algorithmic;
+use commscale::util::microbench::{bench_header, Bench};
+
+fn main() {
+    bench_header("fig07: algorithmic slack & edge (normalized to BERT)");
+    let r = Bench::new("fig7_generate").run(algorithmic::fig7);
+    assert!(r.summary.mean < 1e-3, "fig7 generation must be sub-ms");
+
+    let rows = algorithmic::fig7();
+    println!("\n{:<14} {:>6} {:>6} {:>12} {:>12}", "model", "B", "TP", "slack_norm", "edge_norm");
+    for row in &rows {
+        println!(
+            "{:<14} {:>6} {:>6} {:>12.3} {:>12.3}",
+            row.name, row.batch, row.tp, row.slack_norm, row.edge_norm
+        );
+    }
+    // the paper's §3.5 headline: ~75% slack drop, ~80% edge drop
+    let palm = rows.iter().find(|r| r.name == "PaLM").unwrap();
+    println!(
+        "\nPaLM vs BERT: slack -{:.0}%, edge -{:.0}% (paper: ~75% / ~80%)",
+        100.0 * (1.0 - palm.slack_norm),
+        100.0 * (1.0 - palm.edge_norm)
+    );
+}

@@ -1,0 +1,30 @@
+//! Bench: Fig 10 — the full serialized-comm-fraction grid (5 series × 7 TP
+//! points, each a full graph-build + simulation). This is the core
+//! projection workload; the perf target in DESIGN.md §8 is < 50 ms for the
+//! whole grid.
+
+use commscale::analysis::serialized;
+use commscale::hw::catalog;
+use commscale::util::microbench::{bench_header, Bench};
+
+fn main() {
+    bench_header("fig10: serialized comm fraction grid");
+    let d = catalog::mi210();
+
+    let r = Bench::new("fig10_full_grid_35pts").run(|| serialized::fig10(&d));
+    println!(
+        "grid mean {:.2} ms (target < 50 ms)",
+        r.summary.mean * 1e3
+    );
+    assert!(r.summary.median < 0.05, "grid too slow: {}s", r.summary.median);
+
+    Bench::new("fig10_single_point")
+        .run(|| serialized::simulate_point(&d, 65536, 4096, 128));
+
+    // print the paper's highlighted row
+    println!("\nhighlighted configs (model @ required TP):");
+    for (name, h, sl, tp) in serialized::highlighted_points() {
+        let f = serialized::simulate_point(&d, h, sl, tp).comm_fraction();
+        println!("  {name:<12} -> {:.1}% serialized comm", 100.0 * f);
+    }
+}

@@ -1,0 +1,20 @@
+//! Bench: Fig 11 — overlapped (DP) comm as % of compute, full grid.
+
+use commscale::analysis::overlapped;
+use commscale::hw::catalog;
+use commscale::util::microbench::{bench_header, Bench};
+
+fn main() {
+    bench_header("fig11: overlapped comm % of compute grid");
+    let d = catalog::mi210();
+
+    let r = Bench::new("fig11_full_grid_30pts").run(|| overlapped::fig11(&d));
+    assert!(r.summary.median < 0.05, "grid too slow");
+
+    let pts = overlapped::fig11(&d);
+    let min = pts.iter().map(|p| p.pct_of_compute).fold(f64::MAX, f64::min);
+    let max = pts.iter().map(|p| p.pct_of_compute).fold(0.0f64, f64::max);
+    println!(
+        "\nrange across grid: {min:.0}% – {max:.0}% of compute (paper: 17–140%)"
+    );
+}

@@ -1,0 +1,36 @@
+//! Bench: Figs 12 & 13 — the hardware-evolution sweeps (3 scenarios each).
+
+use commscale::analysis::evolution;
+use commscale::hw::{catalog, Evolution};
+use commscale::util::microbench::{bench_header, Bench};
+
+fn main() {
+    bench_header("fig12/13: hardware-evolution sweeps");
+    let d = catalog::mi210();
+    let scenarios = evolution::paper_scenarios();
+
+    let r = Bench::new("fig12_3_scenarios_x35pts")
+        .run(|| evolution::fig12(&d, &scenarios));
+    assert!(r.summary.median < 0.2, "fig12 too slow");
+
+    Bench::new("fig13_3_scenarios_x30pts").run(|| evolution::fig13(&d, &scenarios));
+
+    println!("\ncomm-fraction bands (paper: 20-50% / 30-65% / 40-75%):");
+    for ev in [Evolution::none(), Evolution::flop_vs_bw_2x(), Evolution::flop_vs_bw_4x()]
+    {
+        let (lo, hi) = evolution::comm_fraction_band(&d, ev);
+        println!(
+            "  {:>2.0}x flop-vs-bw: {:>4.1}% – {:>4.1}%",
+            ev.ratio(),
+            100.0 * lo,
+            100.0 * hi
+        );
+    }
+    for ev in [Evolution::none(), Evolution::flop_vs_bw_4x()] {
+        println!(
+            "  {:>2.0}x: {} of 30 fig13 points exposed (>=100% of compute)",
+            ev.ratio(),
+            evolution::fig13_exposed_count(&d, ev)
+        );
+    }
+}

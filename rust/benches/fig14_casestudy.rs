@@ -1,0 +1,26 @@
+//! Bench: Fig 14 — the end-to-end case study (three scenarios).
+
+use commscale::analysis::case_study;
+use commscale::hw::catalog;
+use commscale::util::microbench::{bench_header, Bench};
+
+fn main() {
+    bench_header("fig14: end-to-end case study (H=64K, SL=4K, TP=128)");
+    let d = catalog::mi210();
+
+    let r = Bench::new("fig14_three_scenarios").run(|| case_study::fig14(&d));
+    assert!(r.summary.median < 0.05);
+
+    println!();
+    for s in case_study::fig14(&d) {
+        println!(
+            "{:<30} compute {:>5.1}%  TP comm {:>5.1}%  DP exposed {:>5.1}%  critical comm {:>5.1}%",
+            s.name,
+            100.0 * s.compute_frac,
+            100.0 * s.serialized_frac,
+            100.0 * s.dp_exposed_frac,
+            100.0 * s.critical_comm_frac()
+        );
+    }
+    println!("(paper at 4x: 47% serialized + 9% overlapped, fully hidden)");
+}

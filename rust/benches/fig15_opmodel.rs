@@ -1,0 +1,47 @@
+//! Bench: Fig 15 — operator-level model accuracy. Uses the persisted
+//! profile if present (`profiles/profile.json`, produced by
+//! `commscale profile`); otherwise measures the ROI artifacts live via
+//! PJRT (slower; requires `make artifacts`).
+
+use std::path::Path;
+
+use commscale::analysis::accuracy;
+use commscale::profiler::{self, ProfileDb};
+use commscale::runtime::Runtime;
+use commscale::util::microbench::{bench_header, Bench};
+
+fn main() {
+    bench_header("fig15: operator-level model accuracy");
+
+    let profile_path = Path::new("profiles/profile.json");
+    let db = if profile_path.exists() {
+        ProfileDb::load(profile_path).expect("profile parse")
+    } else if Path::new("artifacts/manifest.json").exists() {
+        println!("no cached profile; measuring ROI artifacts via PJRT ...");
+        let rt = Runtime::open(Path::new("artifacts")).expect("artifacts");
+        let mut db = profiler::profile_rois(&rt, 3).expect("profiling");
+        profiler::profile_allreduce(
+            &mut db,
+            4,
+            &[1 << 14, 1 << 16, 1 << 18, 1 << 20, 1 << 22],
+            3,
+        );
+        db.save(profile_path).ok();
+        db
+    } else {
+        println!("skipped: neither profiles/profile.json nor artifacts/ present");
+        return;
+    };
+
+    // the projection itself must be trivial next to profiling (the whole
+    // point of §4.2.2): nanoseconds per config.
+    let r = Bench::new("fig15_projection_from_profile")
+        .run(|| accuracy::fig15(&db).expect("fig15"));
+    assert!(r.summary.mean < 1e-3);
+
+    let data = accuracy::fig15(&db).expect("fig15");
+    println!();
+    for (name, err) in data.all_errors() {
+        println!("  {name:<18} geomean error {err:>5.1}%  (paper: ~7-15%)");
+    }
+}

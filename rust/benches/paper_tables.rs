@@ -1,0 +1,26 @@
+//! Bench: regenerate Table 2 / Table 3 / Fig 6 / Fig 9b data and time the
+//! generators (they must stay interactive-speed for the CLI).
+
+use commscale::analysis::{algorithmic, memory_trends};
+use commscale::config::SweepGrid;
+use commscale::model::zoo;
+use commscale::util::microbench::{bench_header, Bench};
+
+fn main() {
+    bench_header("paper tables (Table 2/3, Fig 6, Fig 9b)");
+
+    let r = Bench::new("table2_zoo").run(|| zoo::zoo());
+    assert!(r.summary.mean < 1e-3);
+
+    let r = Bench::new("table3_grid_combinations")
+        .run(|| SweepGrid::default().combinations().len());
+    assert!(r.summary.mean < 10e-3);
+
+    Bench::new("fig6_memory_trends").run(memory_trends::fig6);
+    Bench::new("fig9b_tp_requirement").run(algorithmic::fig9b);
+
+    // sanity: regenerated data matches the paper's shape
+    let rows = memory_trends::fig6();
+    assert!(rows.iter().any(|r| r.name == "PaLM" && r.gap > 10.0));
+    println!("\nfig6/fig9b data regenerated and validated");
+}

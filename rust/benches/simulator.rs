@@ -1,0 +1,43 @@
+//! Bench: the discrete-event simulator core — ops/second through the
+//! engine. DESIGN.md §8 target: ≥ 1M simulated ops/s.
+
+use commscale::graph::{build_layer_graph, GraphOptions};
+use commscale::hw::catalog;
+use commscale::model::{ModelConfig, Precision};
+use commscale::sim::{simulate, AnalyticCost};
+use commscale::util::microbench::{bench_header, Bench};
+
+fn main() {
+    bench_header("discrete-event simulator throughput");
+
+    let cfg = ModelConfig {
+        hidden: 16384,
+        seq_len: 2048,
+        batch: 1,
+        layers: 96, // GPT-3-depth graph
+        heads: 128,
+        ffn_mult: 4,
+        tp: 64,
+        dp: 16,
+        precision: Precision::F16,
+    };
+    let g = build_layer_graph(&cfg, GraphOptions::default());
+    let cost = AnalyticCost::new(catalog::mi210(), cfg.precision, cfg.tp, cfg.dp);
+    let n_ops = g.len();
+    println!("graph: {n_ops} ops (96 layers, TP=64, DP=16)");
+
+    let r = Bench::new("simulate_96_layer_graph").run(|| simulate(&g, &cost));
+    let ops_per_sec = n_ops as f64 / r.summary.median;
+    println!("    -> {:.2} M simulated ops/s (target >= 1 M)", ops_per_sec / 1e6);
+    assert!(
+        ops_per_sec > 1e6,
+        "simulator below 1M ops/s: {ops_per_sec:.0}"
+    );
+
+    let r2 = Bench::new("graph_build_96_layers")
+        .run(|| build_layer_graph(&cfg, GraphOptions::default()));
+    println!(
+        "    -> build {:.1} µs for {n_ops} ops",
+        r2.summary.median * 1e6
+    );
+}

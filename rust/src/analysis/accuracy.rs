@@ -1,0 +1,314 @@
+//! Fig 15 — operator-level model accuracy (§4.3.8): project each
+//! operator's runtime from two *calibration* measurements using the
+//! algebraic scaling law, then compare against the measured sweep.
+//!
+//! * GEMM (SL axis): runtime affine in M — `t = a·M + c` through the two
+//!   smallest profiled points; the intercept absorbs dispatch overhead
+//!   (the paper's "error may improve by using a larger baseline" caveat
+//!   is much larger on a CPU substrate, so the affine form is the faithful
+//!   adaptation of its "linear with SL" law).
+//! * GEMM (H axis): `t = a·H² + c` through two points ("quadratic with H").
+//! * LayerNorm: `t = a·(rows·H) + c` through two points.
+//! * All-reduce: α–β model fitted on the small half of the measured curve,
+//!   validated on the large half.
+//!
+//! Calibration points appear in the tables marked `(cal)` and are excluded
+//! from the error statistics (they are exact by construction).
+
+use crate::opmodel::{AccuracyReport, AllReduceModel, OperatorModel as _};
+use crate::profiler::ProfileDb;
+use crate::{Error, Result};
+
+/// The three Fig 15 panels.
+#[derive(Debug, Clone)]
+pub struct Fig15Data {
+    pub gemm_sl: AccuracyReport,
+    pub gemm_h: AccuracyReport,
+    pub layernorm: AccuracyReport,
+    pub allreduce: Option<AccuracyReport>,
+}
+
+impl Fig15Data {
+    /// The paper's headline: every panel under ~15% geomean error.
+    pub fn all_errors(&self) -> Vec<(String, f64)> {
+        let mut v = vec![
+            ("gemm(SL sweep)".to_string(), self.gemm_sl.geomean_error_pct()),
+            ("gemm(H sweep)".to_string(), self.gemm_h.geomean_error_pct()),
+            ("layernorm".to_string(), self.layernorm.geomean_error_pct()),
+        ];
+        if let Some(ar) = &self.allreduce {
+            v.push(("allreduce".to_string(), ar.geomean_error_pct()));
+        }
+        v
+    }
+}
+
+/// Two-point calibration: returns (slope, intercept) of t = a·x + c through
+/// (x0,t0), (x1,t1). Intercept clamps at 0 (no negative overhead).
+fn two_point(x0: f64, t0: f64, x1: f64, t1: f64) -> (f64, f64) {
+    let a = (t1 - t0) / (x1 - x0);
+    let c = (t0 - a * x0).max(0.0);
+    (a, c)
+}
+
+/// Assemble report points, marking the `cal` calibration indices and
+/// forcing their error to exactly zero so error stats skip them.
+fn report(
+    name: String,
+    pts: Vec<(String, f64, f64)>,
+    cal: &[usize],
+) -> AccuracyReport {
+    let points = pts
+        .into_iter()
+        .enumerate()
+        .map(|(i, (label, meas, pred))| {
+            if cal.contains(&i) {
+                (format!("{label} (cal)"), meas, meas)
+            } else {
+                (label, meas, pred)
+            }
+        })
+        .collect();
+    AccuracyReport { name, points }
+}
+
+/// GEMM panel, SL axis: t(M) affine through the two smallest profiled M
+/// at fixed (N, K) — Fig 15a "linear with SL".
+pub fn fig15_gemm_sl(db: &ProfileDb, n: u64, k: u64) -> Result<AccuracyReport> {
+    let mut pts: Vec<(u64, f64)> = db
+        .of_kind("roi_gemm")
+        .into_iter()
+        .filter(|e| e.meta.get("n") == Some(&n) && e.meta.get("k") == Some(&k))
+        .map(|e| (e.meta["m"], e.secs))
+        .collect();
+    pts.sort_by_key(|p| p.0);
+    if pts.len() < 3 {
+        return Err(Error::OpModel(format!(
+            "need >= 3 GEMM M-sweep points at n={n} k={k}, have {}",
+            pts.len()
+        )));
+    }
+    let (a, c) = two_point(
+        pts[0].0 as f64,
+        pts[0].1,
+        pts[1].0 as f64,
+        pts[1].1,
+    );
+    let rows = pts
+        .iter()
+        .map(|&(m, t)| (format!("M={m}"), t, a * m as f64 + c))
+        .collect();
+    Ok(report(
+        format!("gemm linear-in-M (N=K={n})"),
+        rows,
+        &[0, 1],
+    ))
+}
+
+/// GEMM panel, H axis: t(H) = a·H² + c through two points — Fig 15a
+/// "quadratic with H".
+pub fn fig15_gemm_h(db: &ProfileDb, m: u64) -> Result<AccuracyReport> {
+    let mut pts: Vec<(u64, f64)> = db
+        .of_kind("roi_gemm")
+        .into_iter()
+        .filter(|e| {
+            e.meta.get("m") == Some(&m) && e.meta.get("n") == e.meta.get("k")
+        })
+        .map(|e| (e.meta["n"], e.secs))
+        .collect();
+    pts.sort_by_key(|p| p.0);
+    pts.dedup_by_key(|p| p.0);
+    if pts.len() < 3 {
+        return Err(Error::OpModel(format!(
+            "need >= 3 GEMM H-sweep points at m={m}, have {}",
+            pts.len()
+        )));
+    }
+    let sq = |h: u64| (h as f64) * (h as f64);
+    let (a, c) = two_point(sq(pts[0].0), pts[0].1, sq(pts[1].0), pts[1].1);
+    let rows = pts
+        .iter()
+        .map(|&(h, t)| (format!("H={h}"), t, a * sq(h) + c))
+        .collect();
+    Ok(report(format!("gemm quadratic-in-H (M={m})"), rows, &[0, 1]))
+}
+
+/// LayerNorm panel: t affine in rows·H through two points (Fig 15b).
+pub fn fig15_layernorm(db: &ProfileDb) -> Result<AccuracyReport> {
+    let mut pts: Vec<(u64, u64, f64)> = db
+        .of_kind("roi_layernorm")
+        .into_iter()
+        .map(|e| (e.meta["rows"], e.meta["h"], e.secs))
+        .collect();
+    pts.sort_by_key(|p| (p.0 * p.1, p.0));
+    if pts.len() < 3 {
+        return Err(Error::OpModel("need >= 3 LayerNorm points".into()));
+    }
+    let elems = |p: &(u64, u64, f64)| (p.0 * p.1) as f64;
+    let (a, c) = two_point(elems(&pts[0]), pts[0].2, elems(&pts[1]), pts[1].2);
+    let rows = pts
+        .iter()
+        .map(|p| {
+            (
+                format!("rows={},H={}", p.0, p.1),
+                p.2,
+                a * elems(p) + c,
+            )
+        })
+        .collect();
+    Ok(report("layernorm linear-in-elems".into(), rows, &[0, 1]))
+}
+
+/// All-reduce panel: fit α–β on the smaller half of the measured curve,
+/// validate on the larger half (Fig 15c).
+pub fn fig15_allreduce(db: &ProfileDb) -> Result<AccuracyReport> {
+    let mut pts: Vec<(u64, f64)> =
+        db.allreduce.iter().map(|&(b, s, _)| (b, s)).collect();
+    pts.sort_by_key(|p| p.0);
+    if pts.len() < 4 {
+        return Err(Error::OpModel(
+            "need >= 4 all-reduce points (run `commscale profile`)".into(),
+        ));
+    }
+    let split = (pts.len() / 2).max(2);
+    let model = AllReduceModel::fit(&pts[..split])?;
+    let rows = pts
+        .iter()
+        .map(|&(b, t)| {
+            (
+                crate::report::fmt_bytes(b),
+                t,
+                model.predict_bytes(b),
+            )
+        })
+        .collect();
+    let cal: Vec<usize> = (0..split).collect();
+    Ok(report(format!("allreduce {}", model.describe()), rows, &cal))
+}
+
+/// Assemble all Fig 15 panels from a profile (GEMM sweep anchors follow
+/// `aot.py`'s `GEMM_M_FIXED_NK` / `GEMM_H_FIXED_M` = 512).
+pub fn fig15(db: &ProfileDb) -> Result<Fig15Data> {
+    Ok(Fig15Data {
+        gemm_sl: fig15_gemm_sl(db, 512, 512)?,
+        gemm_h: fig15_gemm_h(db, 512)?,
+        layernorm: fig15_layernorm(db)?,
+        allreduce: fig15_allreduce(db).ok(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profiler::ProfileEntry;
+    use std::collections::BTreeMap;
+
+    /// Synthesize a profile obeying t = a·flops + overhead, with mild
+    /// size-dependent efficiency drift (the error source §4.3.8 names).
+    fn synth_db() -> ProfileDb {
+        let mut db = ProfileDb::default();
+        let gemm = |m: u64, n: u64, k: u64| {
+            let flops = (2 * m * n * k) as f64;
+            // efficiency improves slightly with size → sublinear runtime
+            let eff = 0.7 + 0.25 * flops / (flops + 5e8);
+            ProfileEntry {
+                name: format!("roi_gemm_m{m}_n{n}_k{k}"),
+                kind: "roi_gemm".into(),
+                meta: [("m", m), ("n", n), ("k", k)]
+                    .into_iter()
+                    .map(|(a, b)| (a.to_string(), b))
+                    .collect(),
+                secs: flops / (50e9 * eff) + 2e-5,
+            }
+        };
+        for m in [128u64, 256, 512, 1024, 2048, 4096] {
+            db.insert(gemm(m, 512, 512));
+        }
+        for h in [128u64, 256, 1024, 2048] {
+            db.insert(gemm(512, h, h));
+        }
+        let ln = |rows: u64, h: u64| ProfileEntry {
+            name: format!("roi_layernorm_r{rows}_h{h}"),
+            kind: "roi_layernorm".into(),
+            meta: [("rows", rows), ("h", h)]
+                .into_iter()
+                .map(|(a, b)| (a.to_string(), b))
+                .collect::<BTreeMap<_, _>>(),
+            secs: (rows * h) as f64 * 2e-10 + 1e-5,
+        };
+        for rows in [1024u64, 4096, 16384] {
+            db.insert(ln(rows, 256));
+        }
+        for h in [1024u64, 4096] {
+            db.insert(ln(1024, h));
+        }
+        for bytes in [1u64 << 16, 1 << 18, 1 << 20, 1 << 22, 1 << 24] {
+            db.allreduce.push((bytes, 30e-6 + bytes as f64 / 12e9, 4));
+        }
+        db
+    }
+
+    #[test]
+    fn fig15_errors_under_paper_threshold() {
+        // §4.3.8: GEMM ~15%, LayerNorm ~7%, all-reduce ~11% geomean error.
+        let data = fig15(&synth_db()).unwrap();
+        for (name, err) in data.all_errors() {
+            assert!(err < 20.0, "{name}: {err:.1}% exceeds the paper band");
+        }
+    }
+
+    #[test]
+    fn calibration_points_are_marked_and_exact() {
+        let rep = fig15_gemm_sl(&synth_db(), 512, 512).unwrap();
+        let cal: Vec<_> = rep
+            .points
+            .iter()
+            .filter(|p| p.0.ends_with("(cal)"))
+            .collect();
+        assert_eq!(cal.len(), 2);
+        for p in cal {
+            assert_eq!(p.1, p.2);
+        }
+    }
+
+    #[test]
+    fn gemm_sl_projection_extrapolates_affine() {
+        let rep = fig15_gemm_sl(&synth_db(), 512, 512).unwrap();
+        // beyond calibration, prediction keeps the affine law:
+        // (pred(4096) - pred(2048)) == (pred(2048) - pred(1024)) * 2
+        let p = |label: &str| {
+            rep.points.iter().find(|x| x.0 == label).unwrap().2
+        };
+        let d1 = p("M=2048") - p("M=1024");
+        let d2 = p("M=4096") - p("M=2048");
+        assert!((d2 / d1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gemm_h_projection_is_quadratic_plus_overhead() {
+        let rep = fig15_gemm_h(&synth_db(), 512).unwrap();
+        let p = |label: &str| {
+            rep.points.iter().find(|x| x.0 == label).unwrap().2
+        };
+        // second differences of t(H)/H² vanish: pure a·H² + c
+        let f = |h: f64, t: f64| (t, h * h);
+        let (t1, x1) = f(1024.0, p("H=1024"));
+        let (t2, x2) = f(2048.0, p("H=2048"));
+        let slope = (t2 - t1) / (x2 - x1);
+        assert!(slope > 0.0);
+    }
+
+    #[test]
+    fn allreduce_fit_validates_on_holdout() {
+        let rep = fig15_allreduce(&synth_db()).unwrap();
+        assert!(rep.geomean_error_pct() < 5.0);
+    }
+
+    #[test]
+    fn insufficient_points_is_an_error() {
+        let db = ProfileDb::default();
+        assert!(fig15_gemm_sl(&db, 512, 512).is_err());
+        assert!(fig15_layernorm(&db).is_err());
+        assert!(fig15_allreduce(&db).is_err());
+    }
+}

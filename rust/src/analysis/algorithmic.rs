@@ -1,0 +1,191 @@
+//! Fig 7 — algorithmic scaling of compute's slack (SL·B) and Amdahl's-Law
+//! edge ((H+SL)/TP) across the model zoo, normalized to BERT (§3.5), plus
+//! the Fig 9(b) TP-requirement scaling.
+
+use crate::model::flops::{amdahl_edge, slack_advantage};
+use crate::model::memory::{required_tp, round_tp_pow2};
+use crate::model::zoo::{self, ZooEntry};
+
+/// One Fig 7 data point.
+#[derive(Debug, Clone)]
+pub struct Fig7Row {
+    pub name: String,
+    pub year: u32,
+    /// Batch size the model trains with (large models are forced to B=1,
+    /// §3.5/§4.3.2).
+    pub batch: u64,
+    /// Required TP degree (§4.3.2 rule, rounded to a power of two).
+    pub tp: u64,
+    pub edge: f64,
+    pub slack: f64,
+    /// Normalized to the first (BERT) row.
+    pub edge_norm: f64,
+    pub slack_norm: f64,
+}
+
+/// Batch size a model of the given published size can afford (§3.5:
+/// "most modern larger models already use a small B value of 1").
+pub fn batch_for_size(size_b: f64) -> u64 {
+    if size_b < 2.0 {
+        32
+    } else if size_b < 20.0 {
+        8
+    } else {
+        1
+    }
+}
+
+/// Device-memory capacity scaling between the Megatron-BERT anchor era
+/// (2019, 32 GB class) and a model's year (Fig 6 linear trend).
+pub fn capacity_scale_for_year(year: u32) -> f64 {
+    let anchor = crate::model::memory::device_capacity_gb(2019);
+    crate::model::memory::device_capacity_gb(year.max(2019)) / anchor
+}
+
+/// Required TP for a zoo entry per the paper's §4.3.2 rule.
+pub fn required_tp_for(e: &ZooEntry) -> u64 {
+    if e.size_b <= zoo::megatron_bert_anchor().size_b {
+        return 1; // fits comfortably; BERT-class models need no TP
+    }
+    let s = capacity_scale_for_year(e.year);
+    round_tp_pow2(required_tp(e.size_b, s))
+}
+
+/// Generate Fig 7 rows: zoo models in chronological order, normalized to
+/// BERT.
+pub fn fig7() -> Vec<Fig7Row> {
+    let mut rows: Vec<Fig7Row> = Vec::new();
+    for e in zoo::zoo() {
+        let batch = batch_for_size(e.size_b);
+        let tp = required_tp_for(&e);
+        let cfg = e.config(batch, 1).with_tp(tp.max(1));
+        let edge = amdahl_edge(&cfg);
+        let slack = slack_advantage(&cfg);
+        rows.push(Fig7Row {
+            name: e.name.to_string(),
+            year: e.year,
+            batch,
+            tp,
+            edge,
+            slack,
+            edge_norm: 0.0,
+            slack_norm: 0.0,
+        });
+    }
+    let e0 = rows[0].edge;
+    let s0 = rows[0].slack;
+    for r in &mut rows {
+        r.edge_norm = r.edge / e0;
+        r.slack_norm = r.slack / s0;
+    }
+    rows
+}
+
+/// Fig 9(b): the TP scaling factor `p/s` for each model since the
+/// Megatron-BERT anchor.
+#[derive(Debug, Clone)]
+pub struct Fig9bRow {
+    pub name: String,
+    pub size_b: f64,
+    /// p = model size ratio to the 3.9B anchor.
+    pub p: f64,
+    /// s = device capacity scaling since the anchor era.
+    pub s: f64,
+    /// p/s — multiply base_TP (8) by this to get the required TP.
+    pub scale: f64,
+}
+
+pub fn fig9b() -> Vec<Fig9bRow> {
+    const ANCHOR_B: f64 = 3.9;
+    zoo::zoo()
+        .into_iter()
+        .filter(|e| e.size_b > ANCHOR_B)
+        .map(|e| {
+            let p = e.size_b / ANCHOR_B;
+            let s = capacity_scale_for_year(e.year);
+            Fig9bRow {
+                name: e.name.to_string(),
+                size_b: e.size_b,
+                p,
+                s,
+                scale: p / s,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig7_normalizes_to_bert() {
+        let rows = fig7();
+        assert_eq!(rows[0].name, "BERT");
+        assert!((rows[0].edge_norm - 1.0).abs() < 1e-12);
+        assert!((rows[0].slack_norm - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slack_drops_about_75_pct_for_large_models() {
+        // §3.5: "Due to a considerable drop in B (=1), the compute's slack
+        // is reduced by ~75%" for the largest published models.
+        let rows = fig7();
+        let palm = rows.iter().find(|r| r.name == "PaLM").unwrap();
+        assert_eq!(palm.batch, 1);
+        assert!(
+            palm.slack_norm < 0.35,
+            "PaLM slack_norm {} should drop >65%",
+            palm.slack_norm
+        );
+    }
+
+    #[test]
+    fn edge_drops_about_80_pct_for_large_models() {
+        // §3.5: "due to the increase in required TP, compute's edge drops
+        // by ~80%".
+        let rows = fig7();
+        let palm = rows.iter().find(|r| r.name == "PaLM").unwrap();
+        assert!(
+            palm.edge_norm < 0.35,
+            "PaLM edge_norm {} should drop sharply",
+            palm.edge_norm
+        );
+        // and it grows before TP kicks in: GPT-2 has a better edge than BERT
+        let gpt2 = rows.iter().find(|r| r.name == "GPT-2").unwrap();
+        assert!(gpt2.edge_norm > 1.0);
+    }
+
+    #[test]
+    fn required_tp_monotone_in_model_size() {
+        let rows = fig7();
+        let tnlg = rows.iter().find(|r| r.name == "T-NLG").unwrap();
+        let mtnlg = rows.iter().find(|r| r.name == "MT-NLG").unwrap();
+        assert!(mtnlg.tp > tnlg.tp);
+    }
+
+    #[test]
+    fn fig9b_mtnlg_palm_scale_in_paper_band() {
+        // §4.3.2: "TP needs to be scaled by 40-60×" for MT-NLG/PaLM class.
+        for r in fig9b() {
+            if r.name == "MT-NLG" || r.name == "PaLM" {
+                assert!(
+                    (30.0..80.0).contains(&r.scale),
+                    "{}: p/s = {}",
+                    r.name,
+                    r.scale
+                );
+                // → required TP ≈ 8 · scale ≈ 250-550
+                let tp = 8.0 * r.scale;
+                assert!((240.0..640.0).contains(&tp), "{}: TP {}", r.name, tp);
+            }
+        }
+    }
+
+    #[test]
+    fn small_batch_rule() {
+        assert_eq!(batch_for_size(0.34), 32); // BERT trains with large B
+        assert_eq!(batch_for_size(17.0), 8);
+        assert_eq!(batch_for_size(530.0), 1); // MT-NLG: B=1 (§4.3.2)
+    }
+}

@@ -1,0 +1,142 @@
+//! Fig 14 — end-to-end Comp-vs.-Comm case study combining serialized (TP)
+//! and overlapped (DP) communication for a large futuristic Transformer:
+//! H=64K, B=1, SL=4K, TP=128, flop-vs-bw = 4× (§4.3.7).
+
+use crate::config;
+use crate::graph::{build_layer_graph, GraphOptions};
+use crate::hw::{DeviceSpec, Evolution};
+use crate::sim::{simulate, AnalyticCost, OverlapModel, SimReport};
+
+/// One Fig 14 scenario's breakdown (fractions of iteration time).
+#[derive(Debug, Clone)]
+pub struct Fig14Scenario {
+    pub name: String,
+    pub compute_frac: f64,
+    pub serialized_frac: f64,
+    /// DP comm that ended up exposed on the critical path.
+    pub dp_exposed_frac: f64,
+    /// DP comm hidden under compute, as a fraction of iteration time.
+    pub dp_hidden_frac: f64,
+    pub report: SimReport,
+}
+
+impl Fig14Scenario {
+    /// Total communication on the critical path.
+    pub fn critical_comm_frac(&self) -> f64 {
+        self.serialized_frac + self.dp_exposed_frac
+    }
+}
+
+fn breakdown(name: &str, r: SimReport) -> Fig14Scenario {
+    let t = r.makespan.max(1e-12);
+    // serialized comm is exposed by construction (successors block on it);
+    // whatever exposure remains beyond it is DP comm that ran out of slack.
+    let serialized_frac = r.serialized_comm.min(r.exposed_comm) / t;
+    let dp_exposed = (r.exposed_comm - r.serialized_comm).max(0.0);
+    Fig14Scenario {
+        name: name.to_string(),
+        compute_frac: r.compute_time / t,
+        serialized_frac,
+        dp_exposed_frac: dp_exposed / t,
+        dp_hidden_frac: (r.overlapped_comm - dp_exposed).max(0.0) / t,
+        report: r,
+    }
+}
+
+/// The three scenarios of Fig 14:
+/// 1. today's hardware (1×), intra-node DP links;
+/// 2. flop-vs-bw 4× (the paper's headline case);
+/// 3. 4× plus inter-node DP links and interference (§4.3.7's ~8× [53]).
+pub fn fig14(device: &DeviceSpec) -> Vec<Fig14Scenario> {
+    let cfg = config::fig14_config();
+    let g = build_layer_graph(&cfg, GraphOptions::default());
+    let mut out = Vec::new();
+
+    let today = AnalyticCost::new(device.clone(), cfg.precision, cfg.tp, cfg.dp);
+    out.push(breakdown("today (1x)", simulate(&g, &today)));
+
+    let d4 = Evolution::flop_vs_bw_4x().apply(device);
+    let evolved = AnalyticCost::new(d4.clone(), cfg.precision, cfg.tp, cfg.dp);
+    out.push(breakdown("flop-vs-bw 4x", simulate(&g, &evolved)));
+
+    let pessimistic = AnalyticCost::new(d4, cfg.precision, cfg.tp, cfg.dp)
+        .with_overlap(OverlapModel::pessimistic());
+    out.push(breakdown(
+        "4x + inter-node/interference",
+        simulate(&g, &pessimistic),
+    ));
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::catalog;
+
+    fn scenarios() -> Vec<Fig14Scenario> {
+        fig14(&catalog::mi210())
+    }
+
+    #[test]
+    fn three_scenarios() {
+        assert_eq!(scenarios().len(), 3);
+    }
+
+    #[test]
+    fn headline_case_near_half_serialized() {
+        // §4.3.7: "47% of time is spent on serialized communication while
+        // 9% is spent on overlapped communication. Since the latter is
+        // completely hidden ... the overall communication proportion that
+        // ends up on the critical path is 47%."
+        let s = &scenarios()[1]; // 4× scenario
+        // paper: 47%; ours lands somewhat higher (§Deviations in
+        // EXPERIMENTS.md) but inside the paper's 40-75% headline band.
+        assert!(
+            (0.35..0.72).contains(&s.serialized_frac),
+            "serialized {}",
+            s.serialized_frac
+        );
+        assert!(
+            s.dp_exposed_frac < 0.05,
+            "DP comm should be ~hidden at intra-node bw: {}",
+            s.dp_exposed_frac
+        );
+        assert!(s.dp_hidden_frac > 0.0, "there is DP comm to hide");
+    }
+
+    #[test]
+    fn pessimistic_scenario_exposes_dp_comm() {
+        // §4.3.7: with inter-node links + interference "DP-directed
+        // communication is no longer completely hidden".
+        let sc = scenarios();
+        assert!(
+            sc[2].dp_exposed_frac > sc[1].dp_exposed_frac,
+            "{} vs {}",
+            sc[2].dp_exposed_frac,
+            sc[1].dp_exposed_frac
+        );
+        assert!(
+            sc[2].critical_comm_frac() > sc[1].critical_comm_frac(),
+            "total critical-path comm must grow"
+        );
+    }
+
+    #[test]
+    fn evolution_grows_comm_share() {
+        let sc = scenarios();
+        assert!(sc[1].critical_comm_frac() > sc[0].critical_comm_frac());
+    }
+
+    #[test]
+    fn fractions_are_consistent() {
+        for s in scenarios() {
+            let r = &s.report;
+            assert!(r.makespan >= r.compute_time);
+            let sum = s.compute_frac + s.serialized_frac + s.dp_exposed_frac;
+            // compute + exposed comm ≈ makespan (streams don't idle
+            // elsewhere in this chain-structured graph)
+            assert!((sum - 1.0).abs() < 0.05, "sum {sum}");
+        }
+    }
+}

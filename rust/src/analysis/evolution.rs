@@ -1,0 +1,125 @@
+//! Figs 12 & 13 — the Fig 10/11 datasets recomputed under hardware
+//! evolution: compute FLOPs scaling 2× and 4× faster than network
+//! bandwidth (§4.3.6).
+
+use crate::config;
+use crate::hw::{DeviceSpec, Evolution};
+
+use super::overlapped::{self, Fig11Point};
+use super::serialized::{self, Fig10Point};
+
+/// Fig 12: Fig 10 under a set of flop-vs-bw scenarios.
+pub fn fig12(device: &DeviceSpec, scenarios: &[Evolution]) -> Vec<(f64, Vec<Fig10Point>)> {
+    scenarios
+        .iter()
+        .map(|ev| {
+            let d = ev.apply(device);
+            (ev.ratio(), serialized::fig10(&d))
+        })
+        .collect()
+}
+
+/// Fig 13: Fig 11 under the same scenarios.
+pub fn fig13(device: &DeviceSpec, scenarios: &[Evolution]) -> Vec<(f64, Vec<Fig11Point>)> {
+    scenarios
+        .iter()
+        .map(|ev| {
+            let d = ev.apply(device);
+            (ev.ratio(), overlapped::fig11(&d))
+        })
+        .collect()
+}
+
+/// The paper's three scenarios: today, 2×, 4×.
+pub fn paper_scenarios() -> Vec<Evolution> {
+    vec![
+        Evolution::none(),
+        Evolution::flop_vs_bw_2x(),
+        Evolution::flop_vs_bw_4x(),
+    ]
+}
+
+/// Min/max comm fraction across the highlighted Fig 10 configs for one
+/// scenario — the paper's "20-50% → 30-65% → 40-75%" progression.
+pub fn comm_fraction_band(device: &DeviceSpec, ev: Evolution) -> (f64, f64) {
+    let d = ev.apply(device);
+    let mut lo = f64::MAX;
+    let mut hi: f64 = 0.0;
+    for (_, h, sl, tp) in serialized::highlighted_points() {
+        let f = serialized::simulate_point(&d, h, sl, tp).comm_fraction();
+        lo = lo.min(f);
+        hi = hi.max(f);
+    }
+    (lo, hi)
+}
+
+/// Count of Fig 13 grid points where overlapped comm exceeds compute
+/// (≥ 100% — communication becomes exposed, §4.3.6).
+pub fn fig13_exposed_count(device: &DeviceSpec, ev: Evolution) -> usize {
+    let d = ev.apply(device);
+    let mut n = 0;
+    for &h in &config::fig11_hidden_series() {
+        for &slb in &config::fig11_slb_sweep() {
+            if overlapped::simulate_point(&d, h, slb).pct_of_compute >= 100.0 {
+                n += 1;
+            }
+        }
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::catalog;
+
+    #[test]
+    fn band_widens_with_evolution() {
+        // §4.3.6: "with 2× and 4× flop-vs-bw scaling, serialized
+        // communication starts to dominate ... increasing from 20-50% to
+        // 30-65% and 40-75%".
+        let d = catalog::mi210();
+        let (lo1, hi1) = comm_fraction_band(&d, Evolution::none());
+        let (lo2, hi2) = comm_fraction_band(&d, Evolution::flop_vs_bw_2x());
+        let (lo4, hi4) = comm_fraction_band(&d, Evolution::flop_vs_bw_4x());
+        assert!(lo1 < lo2 && lo2 < lo4, "{lo1} {lo2} {lo4}");
+        assert!(hi1 < hi2 && hi2 < hi4, "{hi1} {hi2} {hi4}");
+        // the 4× ceiling approaches the paper's 75%
+        assert!((0.55..0.90).contains(&hi4), "4x max {hi4}");
+        // and at 4× even the low end is substantial
+        assert!(lo4 > 0.25, "4x min {lo4}");
+    }
+
+    #[test]
+    fn fraction_only_depends_on_ratio() {
+        // (flop 4, bw 1) and (flop 8, bw 2) give near-identical fractions:
+        // comm fraction is scale-invariant in absolute time, up to the
+        // fixed link-latency floor (which does not scale with bandwidth).
+        let d = catalog::mi210();
+        let a = comm_fraction_band(&d, Evolution { flop_scale: 4.0, bw_scale: 1.0 });
+        let b = comm_fraction_band(&d, Evolution { flop_scale: 8.0, bw_scale: 2.0 });
+        assert!((a.0 - b.0).abs() < 0.05 && (a.1 - b.1).abs() < 0.05,
+                "{a:?} vs {b:?}");
+    }
+
+    #[test]
+    fn evolution_exposes_overlapped_comm() {
+        // §4.3.6: "the overlapped communication is 50-100% and 80-210% of
+        // the compute time with 2× and 4× ... exposed in many cases".
+        let d = catalog::mi210();
+        let n0 = fig13_exposed_count(&d, Evolution::none());
+        let n4 = fig13_exposed_count(&d, Evolution::flop_vs_bw_4x());
+        assert!(n4 > n0, "4x must expose more points ({n0} → {n4})");
+        assert!(n4 >= 3, "several points cross 100% at 4x (got {n4})");
+    }
+
+    #[test]
+    fn fig12_has_all_scenarios() {
+        let d = catalog::mi210();
+        let data = fig12(&d, &paper_scenarios());
+        assert_eq!(data.len(), 3);
+        assert_eq!(data[0].0, 1.0);
+        assert_eq!(data[2].0, 4.0);
+        assert_eq!(data[0].1.len(), 35);
+    }
+}

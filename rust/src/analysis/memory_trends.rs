@@ -1,0 +1,79 @@
+//! Fig 6 — model memory demand (H·SL proxy) vs device memory capacity
+//! over time (§3.5): demand grows quadratically-ish, capacity linearly,
+//! and the widening gap is what forces small B and large TP.
+
+use crate::model::memory::device_capacity_gb;
+use crate::model::zoo;
+
+#[derive(Debug, Clone)]
+pub struct Fig6Row {
+    pub name: String,
+    pub year: u32,
+    /// H·SL demand proxy, normalized to BERT.
+    pub demand_norm: f64,
+    /// Device capacity in the model's year, normalized to 2018.
+    pub capacity_norm: f64,
+    /// demand / capacity — the "gap" series.
+    pub gap: f64,
+}
+
+pub fn fig6() -> Vec<Fig6Row> {
+    let z = zoo::zoo();
+    let bert = z.iter().find(|e| e.name == "BERT").unwrap();
+    let d0 = (bert.hidden * bert.seq_len) as f64;
+    let c0 = device_capacity_gb(2018);
+    z.iter()
+        .map(|e| {
+            let demand_norm = (e.hidden * e.seq_len) as f64 / d0;
+            let capacity_norm = device_capacity_gb(e.year) / c0;
+            Fig6Row {
+                name: e.name.to_string(),
+                year: e.year,
+                demand_norm,
+                capacity_norm,
+                gap: demand_norm / capacity_norm,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bert_is_the_unit() {
+        let rows = fig6();
+        let bert = rows.iter().find(|r| r.name == "BERT").unwrap();
+        assert!((bert.demand_norm - 1.0).abs() < 1e-12);
+        assert!((bert.gap - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gap_widens_over_time() {
+        // §3.5: "the gap between models' future memory demand and
+        // available capacity will only increase".
+        let rows = fig6();
+        let bert = rows.iter().find(|r| r.name == "BERT").unwrap();
+        let palm = rows.iter().find(|r| r.name == "PaLM").unwrap();
+        let palm3x = rows.iter().find(|r| r.name == "PALM-3x").unwrap();
+        assert!(palm.gap > 10.0 * bert.gap, "PaLM gap {}", palm.gap);
+        assert!(palm3x.gap > palm.gap, "futuristic gap keeps growing");
+    }
+
+    #[test]
+    fn demand_outpaces_capacity_for_every_post_bert_model() {
+        for r in fig6() {
+            // T5 (2019) kept BERT's H·SL; from GPT-2 onward demand leads.
+            if r.year > 2019 {
+                assert!(
+                    r.demand_norm > r.capacity_norm,
+                    "{}: demand {} vs capacity {}",
+                    r.name,
+                    r.demand_norm,
+                    r.capacity_norm
+                );
+            }
+        }
+    }
+}

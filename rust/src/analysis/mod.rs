@@ -1,0 +1,12 @@
+//! Analysis engine: one submodule per paper figure/table family.
+//!
+//! Every function here is a pure data generator returning rows/series; the
+//! CLI (`main.rs`) and benches render them via [`crate::report`].
+
+pub mod accuracy;
+pub mod algorithmic;
+pub mod case_study;
+pub mod evolution;
+pub mod memory_trends;
+pub mod overlapped;
+pub mod serialized;

@@ -1,0 +1,161 @@
+//! Fig 10 — fraction of training time spent on serialized (TP)
+//! communication, swept over (H, SL) series × TP degree (§4.3.4).
+
+use crate::config;
+use crate::graph::{build_layer_graph, GraphOptions};
+use crate::hw::DeviceSpec;
+use crate::model::{ModelConfig, Precision};
+use crate::sim::{simulate, AnalyticCost, CostProvider, SimReport};
+
+/// One Fig 10 point: a (series, TP) cell.
+#[derive(Debug, Clone)]
+pub struct Fig10Point {
+    pub series: String,
+    pub hidden: u64,
+    pub seq_len: u64,
+    pub tp: u64,
+    /// Fraction of iteration time on (exposed) serialized communication.
+    pub comm_fraction: f64,
+    pub report: SimReport,
+}
+
+/// Build the per-point model config (B = 1 per §4.3.2; one representative
+/// layer — the fraction is layer-count invariant since every layer is
+/// identical, which `tests::fraction_is_layer_invariant` asserts).
+pub fn point_config(hidden: u64, seq_len: u64, tp: u64) -> ModelConfig {
+    ModelConfig {
+        hidden,
+        seq_len,
+        batch: 1,
+        layers: 1,
+        heads: config::heads_for(hidden),
+        ffn_mult: 4,
+        tp,
+        dp: 1,
+        precision: Precision::F16,
+    }
+}
+
+/// Simulate one point on a device.
+pub fn simulate_point(
+    device: &DeviceSpec,
+    hidden: u64,
+    seq_len: u64,
+    tp: u64,
+) -> SimReport {
+    let cfg = point_config(hidden, seq_len, tp);
+    let cost = AnalyticCost::new(device.clone(), cfg.precision, tp, 1);
+    simulate_point_with(&cfg, &cost)
+}
+
+/// Simulate one point with an arbitrary cost provider (used by the
+/// opmodel-driven variant and the evolution figures).
+pub fn simulate_point_with(cfg: &ModelConfig, cost: &dyn CostProvider) -> SimReport {
+    let g = build_layer_graph(cfg, GraphOptions::default());
+    simulate(&g, cost)
+}
+
+/// Generate the full Fig 10 dataset on a device.
+pub fn fig10(device: &DeviceSpec) -> Vec<Fig10Point> {
+    let mut out = Vec::new();
+    for (label, h, sl) in config::fig10_series() {
+        for &tp in &config::fig10_tp_sweep() {
+            let report = simulate_point(device, h, sl, tp);
+            out.push(Fig10Point {
+                series: label.to_string(),
+                hidden: h,
+                seq_len: sl,
+                tp,
+                comm_fraction: report.comm_fraction(),
+                report,
+            });
+        }
+    }
+    out
+}
+
+/// The paper's highlighted (model, TP) pairings in Fig 10: the TP degree
+/// each model class actually needs (§4.3.4).
+pub fn highlighted_points() -> Vec<(&'static str, u64, u64, u64)> {
+    vec![
+        // (label, H, SL, required TP)
+        ("T-NLG-like", 4096, 2048, 16),
+        ("PALM-1x", 16384, 2048, 64),
+        ("PALM-3x", 65536, 4096, 128),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::catalog;
+
+    #[test]
+    fn fraction_grows_with_tp_for_fixed_model() {
+        // §4.3.4: "For a fixed H and SL·B, the communication proportion
+        // increases with increasing TP degree."
+        let d = catalog::mi210();
+        let fr = |tp| simulate_point(&d, 16384, 2048, tp).comm_fraction();
+        assert!(fr(8) < fr(32));
+        assert!(fr(32) < fr(128));
+    }
+
+    #[test]
+    fn fraction_drops_with_h_at_fixed_tp() {
+        // "Conversely, with fixed TP it drops with either an increasing H
+        // or SL."
+        let d = catalog::mi210();
+        let a = simulate_point(&d, 4096, 2048, 16).comm_fraction();
+        let b = simulate_point(&d, 16384, 2048, 16).comm_fraction();
+        assert!(b < a, "H=4K: {a}, H=16K: {b}");
+        let c = simulate_point(&d, 16384, 4096, 16).comm_fraction();
+        assert!(c < b, "SL=2K: {b}, SL=4K: {c}");
+    }
+
+    #[test]
+    fn comm_reaches_about_half_for_future_models() {
+        // §4.3.4: "communication proportion increases as models scale -
+        // it can be a considerable 50%". On our substrate the highlighted
+        // configs span ~20-55%, with the maximum near the paper's 50%
+        // headline (which model sits at the top differs — see
+        // EXPERIMENTS.md §Deviations).
+        let d = catalog::mi210();
+        let fracs: Vec<f64> = highlighted_points()
+            .iter()
+            .map(|&(_, h, sl, tp)| simulate_point(&d, h, sl, tp).comm_fraction())
+            .collect();
+        let max = fracs.iter().copied().fold(0.0, f64::max);
+        assert!((0.40..0.62).contains(&max), "max comm fraction {max}");
+    }
+
+    #[test]
+    fn todays_models_in_20_to_50_band() {
+        // §4.3.6: baseline (1×) spans roughly 20–50% across the
+        // highlighted configs.
+        let d = catalog::mi210();
+        for (name, h, sl, tp) in highlighted_points() {
+            let f = simulate_point(&d, h, sl, tp).comm_fraction();
+            assert!((0.15..0.62).contains(&f), "{name}: {f}");
+        }
+    }
+
+    #[test]
+    fn fraction_is_layer_invariant() {
+        let d = catalog::mi210();
+        let one = simulate_point(&d, 16384, 2048, 64).comm_fraction();
+        let cfg = point_config(16384, 2048, 64).with_layers(8);
+        let cost = AnalyticCost::new(d.clone(), cfg.precision, 64, 1);
+        let eight = simulate_point_with(&cfg, &cost).comm_fraction();
+        // tolerance: the optimizer op amortizes differently across layers
+        assert!((one - eight).abs() < 1e-3, "1-layer {one} vs 8-layer {eight}");
+    }
+
+    #[test]
+    fn full_fig10_grid_size() {
+        let pts = fig10(&catalog::mi210());
+        assert_eq!(pts.len(), 5 * 7); // 5 series × 7 TP values
+        for p in &pts {
+            assert!(p.comm_fraction >= 0.0 && p.comm_fraction < 1.0);
+        }
+    }
+}

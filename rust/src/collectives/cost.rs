@@ -1,0 +1,193 @@
+//! Analytic collective cost models (α–β with size-dependent bus
+//! utilization).
+//!
+//! Ring all-reduce over N devices moves `2·(N−1)/N · bytes` per device
+//! (reduce-scatter + all-gather) in `2·(N−1)` latency-bearing steps — the
+//! bandwidth-optimal algorithm ([10] in the paper). Chunks pipeline, so
+//! the bus-utilization curve sees the *total* payload (matching measured
+//! NCCL/RCCL behaviour where utilization is a function of collective
+//! size); small all-reduces are latency/underutilization-bound (§4.3.5).
+
+use crate::hw::{DeviceSpec, EfficiencyCurves};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CollectiveKind {
+    AllReduce,
+    ReduceScatter,
+    AllGather,
+    AllToAll,
+    Broadcast,
+}
+
+/// Cost model bound to a device generation + efficiency curves.
+#[derive(Debug, Clone)]
+pub struct CollectiveCost {
+    pub device: DeviceSpec,
+    pub eff: EfficiencyCurves,
+    /// Switch-based in-network reduction (the paper's Technique 2, §5):
+    /// halves the data crossing each link for all-reduce.
+    pub in_network_reduction: bool,
+}
+
+impl CollectiveCost {
+    pub fn new(device: DeviceSpec) -> CollectiveCost {
+        CollectiveCost {
+            device,
+            eff: EfficiencyCurves::default(),
+            in_network_reduction: false,
+        }
+    }
+
+    pub fn with_eff(mut self, eff: EfficiencyCurves) -> Self {
+        self.eff = eff;
+        self
+    }
+
+    pub fn with_in_network_reduction(mut self, on: bool) -> Self {
+        self.in_network_reduction = on;
+        self
+    }
+
+    fn effective_bw(&self, message_bytes: f64) -> f64 {
+        self.device.ring_ar_bw * self.eff.net(message_bytes)
+    }
+
+    /// Time (seconds) for a collective of `bytes` over `n` devices.
+    pub fn time(&self, kind: CollectiveKind, bytes: u64, n: u64) -> f64 {
+        assert!(n >= 1);
+        if n == 1 || bytes == 0 {
+            return 0.0;
+        }
+        let b = bytes as f64;
+        let nf = n as f64;
+        let lat = self.device.link_latency;
+        match kind {
+            CollectiveKind::AllReduce => {
+                // 2(N-1) pipelined steps of bytes/N each; utilization is a
+                // function of the total collective size.
+                let steps = 2.0 * (nf - 1.0);
+                let volume_factor = if self.in_network_reduction { 0.5 } else { 1.0 };
+                steps * lat
+                    + volume_factor * steps * (b / nf) / self.effective_bw(b)
+            }
+            CollectiveKind::ReduceScatter | CollectiveKind::AllGather => {
+                let steps = nf - 1.0;
+                steps * lat + steps * (b / nf) / self.effective_bw(b)
+            }
+            CollectiveKind::AllToAll => {
+                // each device exchanges bytes/N with every peer; no
+                // pipelining across peers — per-message utilization.
+                let per_peer = b / nf;
+                (nf - 1.0) * lat + (nf - 1.0) * per_peer / self.effective_bw(per_peer)
+            }
+            CollectiveKind::Broadcast => {
+                // pipelined ring broadcast ≈ one pass of the ring
+                (nf - 1.0) * lat + b / self.effective_bw(b / nf)
+            }
+        }
+    }
+
+    /// Algorithmic bytes-on-wire per device for a collective (used by the
+    /// PIN comparison in §5: ring AR sends 2× the data of switch AR).
+    pub fn wire_bytes(&self, kind: CollectiveKind, bytes: u64, n: u64) -> f64 {
+        let b = bytes as f64;
+        let nf = n as f64;
+        match kind {
+            CollectiveKind::AllReduce => {
+                let base = 2.0 * (nf - 1.0) / nf * b;
+                if self.in_network_reduction {
+                    base / 2.0
+                } else {
+                    base
+                }
+            }
+            CollectiveKind::ReduceScatter | CollectiveKind::AllGather => {
+                (nf - 1.0) / nf * b
+            }
+            CollectiveKind::AllToAll => (nf - 1.0) / nf * b,
+            CollectiveKind::Broadcast => b,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::catalog;
+
+    fn cost() -> CollectiveCost {
+        CollectiveCost::new(catalog::mi210())
+    }
+
+    #[test]
+    fn single_device_is_free() {
+        assert_eq!(cost().time(CollectiveKind::AllReduce, 1 << 30, 1), 0.0);
+    }
+
+    #[test]
+    fn allreduce_equals_rs_plus_ag() {
+        let c = cost();
+        let n = 8;
+        let bytes = 256 << 20;
+        let ar = c.time(CollectiveKind::AllReduce, bytes, n);
+        let rs = c.time(CollectiveKind::ReduceScatter, bytes, n);
+        let ag = c.time(CollectiveKind::AllGather, bytes, n);
+        assert!((ar - (rs + ag)).abs() / ar < 1e-9);
+    }
+
+    #[test]
+    fn large_ar_approaches_2x_bytes_over_bw() {
+        // For large N and saturated bus: t → 2·bytes/bw.
+        let c = cost();
+        let bytes = 4u64 << 30;
+        let t = c.time(CollectiveKind::AllReduce, bytes, 256);
+        let ideal = 2.0 * bytes as f64 / (c.device.ring_ar_bw * c.eff.net_eff_max);
+        assert!((t - ideal).abs() / ideal < 0.15, "t {t} ideal {ideal}");
+    }
+
+    #[test]
+    fn small_ar_is_latency_dominated() {
+        let c = cost();
+        let t = c.time(CollectiveKind::AllReduce, 4096, 64);
+        let lat_only = 2.0 * 63.0 * c.device.link_latency;
+        assert!(t > lat_only);
+        assert!(t < 3.0 * lat_only, "t {t} should be close to latency floor");
+    }
+
+    #[test]
+    fn traffic_scaling_saturates_with_n() {
+        // §4.3.2: "(N−1)/N ~ 1 for large N" — doubling devices past 64
+        // barely changes AR time for fixed bytes.
+        let c = cost();
+        let bytes = 1u64 << 30;
+        let t64 = c.time(CollectiveKind::AllReduce, bytes, 64);
+        let t128 = c.time(CollectiveKind::AllReduce, bytes, 128);
+        assert!((t128 - t64).abs() / t64 < 0.1, "t64 {t64} t128 {t128}");
+    }
+
+    #[test]
+    fn in_network_reduction_halves_large_ar() {
+        // §5 Technique 2: PIN gives ~2× effective bandwidth.
+        let plain = cost();
+        let pin = cost().with_in_network_reduction(true);
+        let bytes = 1u64 << 30;
+        let tp = plain.time(CollectiveKind::AllReduce, bytes, 16);
+        let ti = pin.time(CollectiveKind::AllReduce, bytes, 16);
+        assert!((tp / ti - 2.0).abs() < 0.1, "speedup {}", tp / ti);
+        assert_eq!(
+            pin.wire_bytes(CollectiveKind::AllReduce, bytes, 16),
+            plain.wire_bytes(CollectiveKind::AllReduce, bytes, 16) / 2.0
+        );
+    }
+
+    #[test]
+    fn monotone_in_bytes() {
+        let c = cost();
+        let mut prev = 0.0;
+        for exp in 10..30 {
+            let t = c.time(CollectiveKind::AllReduce, 1u64 << exp, 8);
+            assert!(t > prev);
+            prev = t;
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! Communication collectives.
+//!
+//! [`cost`] — analytic α–β cost models for ring/tree all-reduce,
+//! reduce-scatter, all-gather and all-to-all (the simulator's comm-time
+//! provider, §2.3.1).
+//!
+//! [`ring`] — a *real* shared-memory ring all-reduce (reduce-scatter +
+//! all-gather, the bandwidth-optimal algorithm the paper's RCCL testbed
+//! uses) across worker threads — the comm substrate of the data-parallel
+//! trainer and the measured-AR curves in Fig 15(c).
+
+pub mod cost;
+pub mod ring;
+
+pub use cost::{CollectiveCost, CollectiveKind};
+pub use ring::ShmRing;

@@ -1,0 +1,307 @@
+//! Real shared-memory ring all-reduce.
+//!
+//! Implements the bandwidth-optimal ring algorithm (reduce-scatter +
+//! all-gather, [10] in the paper) across worker threads sharing one
+//! address space — the same algorithm and traffic pattern RCCL executes
+//! over Infinity-Fabric links on the paper's testbed, with memory
+//! bandwidth standing in for link bandwidth (DESIGN.md §4).
+//!
+//! Each rank owns one buffer. In reduce-scatter step `s`, rank `r` adds
+//! its left neighbour's chunk `(r − s) mod N` into its own copy of that
+//! chunk; after N−1 steps chunk `(r + 1) mod N` on rank `r` holds the full
+//! sum. All-gather then rotates the completed chunks around the ring.
+//! A barrier separates steps; within a step every rank writes only its own
+//! buffer and reads only chunks its neighbour is *not* writing (offset by
+//! one), so the unsafe aliasing below is race-free.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Barrier;
+use std::time::{Duration, Instant};
+
+/// Shared-memory ring all-reduce over `n` equally-sized f32 buffers.
+#[derive(Debug, Clone, Copy)]
+pub struct ShmRing {
+    pub n: usize,
+}
+
+/// Raw buffer table shared across the ring threads. Safety argument is in
+/// the module docs: chunk ownership per (step, rank) is disjoint and
+/// barrier-separated.
+struct BufTable {
+    ptrs: Vec<*mut f32>,
+    len: usize,
+}
+unsafe impl Sync for BufTable {}
+
+/// Timing breakdown of one all-reduce invocation.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ArTiming {
+    pub total: Duration,
+    /// Sum of per-thread reduce-scatter busy time (for utilization calc).
+    pub reduce_busy: Duration,
+    /// Sum of per-thread all-gather busy time.
+    pub gather_busy: Duration,
+}
+
+impl ShmRing {
+    pub fn new(n: usize) -> ShmRing {
+        assert!(n >= 1, "ring needs at least one rank");
+        ShmRing { n }
+    }
+
+    /// Chunk boundaries: N contiguous ranges covering [0, len).
+    fn chunk_bounds(len: usize, n: usize, c: usize) -> (usize, usize) {
+        let base = len / n;
+        let rem = len % n;
+        // first `rem` chunks get one extra element
+        let start = c * base + c.min(rem);
+        let extra = if c < rem { 1 } else { 0 };
+        (start, start + base + extra)
+    }
+
+    /// In-place all-reduce (sum) across `bufs`; all buffers end up holding
+    /// the element-wise sum. Returns timing.
+    pub fn all_reduce(&self, bufs: &mut [Vec<f32>]) -> ArTiming {
+        assert_eq!(bufs.len(), self.n, "buffer count != ring size");
+        if self.n == 1 {
+            return ArTiming { total: Duration::ZERO, ..Default::default() };
+        }
+        let len = bufs[0].len();
+        for b in bufs.iter() {
+            assert_eq!(b.len(), len, "ring buffers must be equal length");
+        }
+        if len == 0 {
+            return ArTiming::default();
+        }
+
+        let table = BufTable {
+            ptrs: bufs.iter_mut().map(|b| b.as_mut_ptr()).collect(),
+            len,
+        };
+        let n = self.n;
+        let barrier = Barrier::new(n);
+        let reduce_ns = AtomicU64::new(0);
+        let gather_ns = AtomicU64::new(0);
+
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            for r in 0..n {
+                let table = &table;
+                let barrier = &barrier;
+                let reduce_ns = &reduce_ns;
+                let gather_ns = &gather_ns;
+                scope.spawn(move || {
+                    let left = (r + n - 1) % n;
+                    // ---- reduce-scatter ------------------------------------
+                    let t = Instant::now();
+                    for s in 0..n - 1 {
+                        let c = (r + n - s) % n; // chunk this rank accumulates
+                        let (lo, hi) = Self::chunk_bounds(table.len, n, c);
+                        // SAFETY: rank r writes only its own buffer; it reads
+                        // chunk c of `left`, which `left` is *not* writing in
+                        // this step (left writes chunk (c-1) mod n). Steps are
+                        // barrier-separated, so cross-step writes are visible.
+                        // Slices (not raw-pointer walks) give LLVM noalias,
+                        // which is what lets the reduction vectorize
+                        // (EXPERIMENTS.md §Perf).
+                        unsafe {
+                            let dst = std::slice::from_raw_parts_mut(
+                                table.ptrs[r].add(lo),
+                                hi - lo,
+                            );
+                            let src = std::slice::from_raw_parts(
+                                table.ptrs[left].add(lo),
+                                hi - lo,
+                            );
+                            for (d, s) in dst.iter_mut().zip(src) {
+                                *d += *s;
+                            }
+                        }
+                        barrier.wait();
+                    }
+                    reduce_ns
+                        .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+
+                    // After reduce-scatter, rank r holds the complete sum of
+                    // chunk (r+1) mod n.
+                    // ---- all-gather ----------------------------------------
+                    let t = Instant::now();
+                    for s in 0..n - 1 {
+                        let c = (r + n - s + 1) % n; // chunk to pull from left
+                        let (lo, hi) = Self::chunk_bounds(table.len, n, c);
+                        // SAFETY: same disjointness argument; in gather step s
+                        // rank r copies chunk c from left (complete there)
+                        // into its own buffer; left is writing chunk (c-1).
+                        unsafe {
+                            let dst = table.ptrs[r];
+                            let src = table.ptrs[left];
+                            std::ptr::copy_nonoverlapping(
+                                src.add(lo),
+                                dst.add(lo),
+                                hi - lo,
+                            );
+                        }
+                        barrier.wait();
+                    }
+                    gather_ns
+                        .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                });
+            }
+        });
+
+        ArTiming {
+            total: t0.elapsed(),
+            reduce_busy: Duration::from_nanos(reduce_ns.load(Ordering::Relaxed)),
+            gather_busy: Duration::from_nanos(gather_ns.load(Ordering::Relaxed)),
+        }
+    }
+
+    /// Reference single-threaded all-reduce (sum), for equivalence tests.
+    pub fn all_reduce_seq(bufs: &mut [Vec<f32>]) {
+        if bufs.is_empty() {
+            return;
+        }
+        let len = bufs[0].len();
+        let mut sum = vec![0.0f32; len];
+        for b in bufs.iter() {
+            assert_eq!(b.len(), len);
+            for (s, x) in sum.iter_mut().zip(b.iter()) {
+                *s += *x;
+            }
+        }
+        for b in bufs.iter_mut() {
+            b.copy_from_slice(&sum);
+        }
+    }
+
+    /// Average the buffers (all-reduce then divide by N) — the DP gradient
+    /// combination the trainer uses.
+    pub fn all_reduce_mean(&self, bufs: &mut [Vec<f32>]) -> ArTiming {
+        let timing = self.all_reduce(bufs);
+        let inv = 1.0 / self.n as f32;
+        for b in bufs.iter_mut() {
+            for x in b.iter_mut() {
+                *x *= inv;
+            }
+        }
+        timing
+    }
+
+    /// Measure AR wall time across a sweep of buffer sizes (elements).
+    /// Used for the measured all-reduce curve in Fig 15(c).
+    pub fn measure_curve(&self, sizes: &[usize], reps: usize) -> Vec<(usize, f64)> {
+        let mut out = Vec::new();
+        for &len in sizes {
+            let mut best = f64::INFINITY;
+            for _ in 0..reps {
+                let mut bufs: Vec<Vec<f32>> =
+                    (0..self.n).map(|r| vec![r as f32 + 1.0; len]).collect();
+                let t = self.all_reduce(&mut bufs).total.as_secs_f64();
+                best = best.min(t);
+            }
+            out.push((len * 4, best)); // report bytes
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_bufs(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| (0..len).map(|_| rng.normal() as f32).collect())
+            .collect()
+    }
+
+    #[test]
+    fn chunk_bounds_cover_exactly() {
+        for len in [0usize, 1, 7, 64, 1000, 1001, 1003] {
+            for n in [1usize, 2, 3, 4, 8] {
+                let mut covered = 0;
+                let mut prev_end = 0;
+                for c in 0..n {
+                    let (lo, hi) = ShmRing::chunk_bounds(len, n, c);
+                    assert_eq!(lo, prev_end);
+                    covered += hi - lo;
+                    prev_end = hi;
+                }
+                assert_eq!(covered, len, "len {len} n {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_sequential_reference() {
+        for n in [2usize, 3, 4, 8] {
+            for len in [1usize, 5, 64, 1000, 4097] {
+                let mut a = random_bufs(n, len, (n * 1000 + len) as u64);
+                let mut b = a.clone();
+                ShmRing::new(n).all_reduce(&mut a);
+                ShmRing::all_reduce_seq(&mut b);
+                for r in 0..n {
+                    for i in 0..len {
+                        assert!(
+                            (a[r][i] - b[r][i]).abs() <= 1e-4 * b[r][i].abs().max(1.0),
+                            "n {n} len {len} rank {r} idx {i}: {} vs {}",
+                            a[r][i],
+                            b[r][i]
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_ranks_agree_after_ar() {
+        let mut bufs = random_bufs(4, 1000, 42);
+        ShmRing::new(4).all_reduce(&mut bufs);
+        for r in 1..4 {
+            assert_eq!(bufs[0], bufs[r]);
+        }
+    }
+
+    #[test]
+    fn mean_divides_by_n() {
+        let mut bufs: Vec<Vec<f32>> = (0..4).map(|_| vec![2.0f32; 128]).collect();
+        ShmRing::new(4).all_reduce_mean(&mut bufs);
+        for b in &bufs {
+            for x in b {
+                assert!((x - 2.0).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn single_rank_is_identity() {
+        let mut bufs = vec![vec![1.0f32, 2.0, 3.0]];
+        ShmRing::new(1).all_reduce(&mut bufs);
+        assert_eq!(bufs[0], vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn handles_len_smaller_than_ranks() {
+        let mut a = random_bufs(8, 3, 7);
+        let mut b = a.clone();
+        ShmRing::new(8).all_reduce(&mut a);
+        ShmRing::all_reduce_seq(&mut b);
+        for r in 0..8 {
+            for i in 0..3 {
+                assert!((a[r][i] - b[r][i]).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn measure_curve_monotone_in_size() {
+        let ring = ShmRing::new(2);
+        let curve = ring.measure_curve(&[1 << 10, 1 << 16, 1 << 20], 3);
+        assert_eq!(curve.len(), 3);
+        // larger buffers must not be faster than much smaller ones
+        assert!(curve[2].1 > curve[0].1 * 0.5);
+    }
+}

@@ -1,0 +1,158 @@
+//! Experiment configuration: the paper's Table 3 parameter grid and the
+//! per-figure sweep definitions.
+
+use crate::model::{ModelConfig, Precision};
+
+/// Table 3 — "Parameters and setup of models studied".
+#[derive(Debug, Clone)]
+pub struct SweepGrid {
+    pub hidden: Vec<u64>,
+    pub batch: Vec<u64>,
+    pub seq_len: Vec<u64>,
+    pub tp: Vec<u64>,
+}
+
+impl Default for SweepGrid {
+    fn default() -> Self {
+        SweepGrid {
+            hidden: vec![1024, 2048, 4096, 8192, 16384, 32768, 65536],
+            batch: vec![1, 4],
+            seq_len: vec![1024, 2048, 4096, 8192],
+            tp: vec![4, 8, 16, 32, 64, 128, 256],
+        }
+    }
+}
+
+impl SweepGrid {
+    /// All (H, B, SL, TP) combinations.
+    pub fn combinations(&self) -> Vec<ModelConfig> {
+        let mut out = Vec::new();
+        for &h in &self.hidden {
+            for &b in &self.batch {
+                for &sl in &self.seq_len {
+                    for &tp in &self.tp {
+                        out.push(ModelConfig {
+                            hidden: h,
+                            seq_len: sl,
+                            batch: b,
+                            layers: 1,
+                            // heads must be divisible by TP (Megatron
+                            // slices attention by head); grow the head
+                            // count for small-H/large-TP corner cells.
+                            heads: heads_for(h).max(tp),
+                            ffn_mult: 4,
+                            tp,
+                            dp: 1,
+                            precision: Precision::F16,
+                        });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Count of distinct (H, SL, TP) serialized-comm projection points at
+    /// B=1 — the "hundreds of configurations" the paper projects (§4.2.4
+    /// quotes 196; our grid gives 7·4·7 = 196 exactly).
+    pub fn serialized_projection_count(&self) -> usize {
+        self.hidden.len() * self.seq_len.len() * self.tp.len()
+    }
+}
+
+/// Attention heads for a given hidden size: keep head_dim = 128, the
+/// common choice across Table 2's larger models.
+pub fn heads_for(hidden: u64) -> u64 {
+    (hidden / 128).max(1)
+}
+
+/// The (H, SL) series of Fig 10/12, with the paper's model anchors.
+pub fn fig10_series() -> Vec<(&'static str, u64, u64)> {
+    vec![
+        ("H=4K,SL=2K (~T-NLG)", 4096, 2048),
+        ("H=16K,SL=2K (~PALM)", 16384, 2048),
+        ("H=16K,SL=4K", 16384, 4096),
+        ("H=64K,SL=4K (PALM-3x)", 65536, 4096),
+        ("H=64K,SL=8K", 65536, 8192),
+    ]
+}
+
+/// The TP sweep of Fig 10/12.
+pub fn fig10_tp_sweep() -> Vec<u64> {
+    vec![4, 8, 16, 32, 64, 128, 256]
+}
+
+/// The (H, SL·B) grid of Fig 11/13 (TP fixed at 16, §4.3.5).
+pub fn fig11_hidden_series() -> Vec<u64> {
+    vec![4096, 8192, 16384, 32768, 65536]
+}
+
+pub fn fig11_slb_sweep() -> Vec<u64> {
+    vec![1024, 2048, 4096, 8192, 16384, 32768]
+}
+
+/// Fig 14 case-study configuration (§4.3.7): "H=64K, B=1, SL=4K,
+/// TP degree=128, flop-vs-bw scale=4x".
+pub fn fig14_config() -> ModelConfig {
+    ModelConfig {
+        hidden: 65536,
+        seq_len: 4096,
+        batch: 1,
+        layers: 1,
+        heads: heads_for(65536),
+        ffn_mult: 4,
+        tp: 128,
+        dp: 4,
+        precision: Precision::F16,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_grid_matches_paper() {
+        let g = SweepGrid::default();
+        assert_eq!(g.hidden.len(), 7);
+        assert_eq!(g.batch, vec![1, 4]);
+        assert_eq!(g.seq_len.len(), 4);
+        assert_eq!(g.tp, vec![4, 8, 16, 32, 64, 128, 256]);
+    }
+
+    #[test]
+    fn projection_count_is_196() {
+        // §4.2.4: "operator-level models enable the projection of
+        // serialized communication for many (196) different configurations"
+        assert_eq!(SweepGrid::default().serialized_projection_count(), 196);
+    }
+
+    #[test]
+    fn combinations_are_valid_configs() {
+        for c in SweepGrid::default().combinations() {
+            c.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn combination_count() {
+        assert_eq!(SweepGrid::default().combinations().len(), 7 * 2 * 4 * 7);
+    }
+
+    #[test]
+    fn fig14_matches_paper_setup() {
+        let c = fig14_config();
+        assert_eq!(c.hidden, 65536);
+        assert_eq!(c.seq_len, 4096);
+        assert_eq!(c.batch, 1);
+        assert_eq!(c.tp, 128);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn heads_keep_dim_128() {
+        assert_eq!(heads_for(4096), 32);
+        assert_eq!(heads_for(65536), 512);
+        assert_eq!(heads_for(64), 1);
+    }
+}

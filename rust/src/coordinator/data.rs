@@ -1,0 +1,110 @@
+//! Synthetic training corpus for the end-to-end driver.
+//!
+//! A fixed pool of random sequences with an injected bigram structure
+//! (each sentence is built from a per-sentence seed token by a noisy
+//! affine walk over the vocabulary). Batches are sampled from the pool,
+//! so the model has both memorizable content and local statistical
+//! structure — enough for the cross-entropy to fall well below the
+//! uniform ln(V) baseline within a few hundred steps.
+
+use crate::runtime::HostTensor;
+use crate::util::Rng;
+
+/// A pool of fixed training sequences over a vocabulary.
+#[derive(Debug, Clone)]
+pub struct Corpus {
+    pub vocab: usize,
+    pub seq_len: usize,
+    sequences: Vec<Vec<i32>>,
+}
+
+impl Corpus {
+    /// Build `pool` sequences of `seq_len` tokens over `vocab`.
+    pub fn new(vocab: usize, seq_len: usize, pool: usize, seed: u64) -> Corpus {
+        assert!(vocab >= 4 && seq_len >= 2 && pool >= 1);
+        let mut rng = Rng::new(seed);
+        let sequences = (0..pool)
+            .map(|_| {
+                let mut seq = Vec::with_capacity(seq_len);
+                let mut tok = rng.range(0, vocab as u64) as i64;
+                let stride = 1 + rng.range(0, 16) as i64; // per-sentence rule
+                for _ in 0..seq_len {
+                    seq.push(tok as i32);
+                    // noisy affine walk: mostly deterministic, 12% jumps
+                    tok = if rng.f64() < 0.12 {
+                        rng.range(0, vocab as u64) as i64
+                    } else {
+                        (tok + stride) % vocab as i64
+                    };
+                }
+                seq
+            })
+            .collect();
+        Corpus { vocab, seq_len, sequences }
+    }
+
+    pub fn pool_size(&self) -> usize {
+        self.sequences.len()
+    }
+
+    /// Sample a [batch, seq_len] i32 token tensor.
+    pub fn sample_batch(&self, batch: usize, rng: &mut Rng) -> HostTensor {
+        let mut data = Vec::with_capacity(batch * self.seq_len);
+        for _ in 0..batch {
+            let idx = rng.range(0, self.sequences.len() as u64) as usize;
+            data.extend_from_slice(&self.sequences[idx]);
+        }
+        HostTensor::i32("tokens", vec![batch, self.seq_len], data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_in_vocab_range() {
+        let c = Corpus::new(512, 32, 16, 7);
+        let mut rng = Rng::new(1);
+        let t = c.sample_batch(4, &mut rng);
+        assert_eq!(t.dims, vec![4, 32]);
+        for &tok in t.i32_data().unwrap() {
+            assert!((0..512).contains(&tok));
+        }
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a = Corpus::new(256, 16, 8, 42);
+        let b = Corpus::new(256, 16, 8, 42);
+        assert_eq!(a.sequences, b.sequences);
+    }
+
+    #[test]
+    fn sequences_have_local_structure() {
+        // consecutive-token deltas should repeat (the affine rule):
+        // far more repeated deltas than a uniform random sequence would have.
+        let c = Corpus::new(1024, 64, 4, 3);
+        let seq = &c.sequences[0];
+        let mut repeated = 0;
+        for w in seq.windows(3) {
+            let d1 = (w[1] - w[0]).rem_euclid(1024);
+            let d2 = (w[2] - w[1]).rem_euclid(1024);
+            if d1 == d2 {
+                repeated += 1;
+            }
+        }
+        assert!(repeated > seq.len() / 2, "repeated deltas: {repeated}");
+    }
+
+    #[test]
+    fn batch_reuses_pool() {
+        let c = Corpus::new(128, 8, 2, 5);
+        let mut rng = Rng::new(9);
+        let t = c.sample_batch(8, &mut rng);
+        // with pool=2, 8 rows must contain duplicates
+        let rows: Vec<&[i32]> = t.i32_data().unwrap().chunks(8).collect();
+        let distinct: std::collections::HashSet<_> = rows.iter().collect();
+        assert!(distinct.len() <= 2);
+    }
+}

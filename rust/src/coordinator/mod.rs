@@ -1,0 +1,356 @@
+//! Data-parallel training coordinator — the end-to-end validation driver.
+//!
+//! Executes the AOT `grad_step_*` / `apply_step_*` artifacts via PJRT and
+//! interposes the *real* shared-memory ring all-reduce between them:
+//!
+//!   for each step:
+//!     1. every DP worker runs grad_step(params, its_batch) → loss, grads
+//!     2. gradient buffers are averaged with `ShmRing::all_reduce_mean`
+//!        (reduce-scatter + all-gather across `dp` OS threads)
+//!     3. apply_step folds the averaged gradients into params/Adam state
+//!
+//! Workers are *logical*: PJRT calls issue from one thread because the
+//! `xla` CPU client is `Rc`-based (not `Send`) and multithreads internally
+//! anyway; the communication layer is genuinely parallel. Per-step compute
+//! vs comm timings are recorded — the measured analogue of the paper's
+//! DP slack analysis (Fig 3a).
+
+pub mod data;
+
+pub use data::Corpus;
+
+use std::time::Instant;
+
+use crate::collectives::ShmRing;
+use crate::runtime::{HostTensor, Runtime};
+use crate::util::Rng;
+use crate::{Error, Result};
+
+/// Per-step measurements.
+#[derive(Debug, Clone)]
+pub struct StepStats {
+    pub step: usize,
+    /// Mean loss across DP workers.
+    pub loss: f64,
+    /// Mean per-worker grad_step wall time (the "compute" phase).
+    pub grad_secs: f64,
+    /// Ring all-reduce wall time (the "communication" phase).
+    pub ar_secs: f64,
+    /// Optimizer apply wall time.
+    pub apply_secs: f64,
+}
+
+impl StepStats {
+    /// Communication share of the step — comparable to Fig 11's metric
+    /// (here AR is serialized with compute, so this is an upper bound on
+    /// what overlap could hide).
+    pub fn comm_fraction(&self) -> f64 {
+        let total = self.grad_secs + self.ar_secs + self.apply_secs;
+        if total > 0.0 {
+            self.ar_secs / total
+        } else {
+            0.0
+        }
+    }
+}
+
+/// The DP trainer.
+pub struct Trainer<'rt> {
+    rt: &'rt Runtime,
+    pub model: String,
+    pub dp: usize,
+    grad_artifact: String,
+    apply_artifact: String,
+    /// Parameter names in jax flattening order (sorted), with shapes.
+    param_names: Vec<String>,
+    params: Vec<HostTensor>,
+    m: Vec<HostTensor>,
+    v: Vec<HostTensor>,
+    step_tensor: HostTensor,
+    corpus: Corpus,
+    rng: Rng,
+    pub history: Vec<StepStats>,
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(rt: &'rt Runtime, model: &str, dp: usize, seed: u64) -> Result<Trainer<'rt>> {
+        let cfg = rt.manifest.config(model)?.clone();
+        let grad_artifact = format!("grad_step_{model}");
+        let apply_artifact = format!("apply_step_{model}");
+        let grad_entry = rt.manifest.artifact(&grad_artifact)?;
+
+        // jax flattens dicts sorted by key; manifest param_specs are in
+        // declaration order — sort them.
+        let mut specs = cfg.param_specs.clone();
+        if specs.is_empty() {
+            return Err(Error::Manifest(format!(
+                "config {model} has no param_specs"
+            )));
+        }
+        specs.sort_by(|a, b| a.0.cmp(&b.0));
+        if grad_entry.inputs.len() != specs.len() + 1 {
+            return Err(Error::Manifest(format!(
+                "{grad_artifact}: expected {} inputs (params + tokens), got {}",
+                specs.len() + 1,
+                grad_entry.inputs.len()
+            )));
+        }
+        // cross-check shapes against the artifact's input specs
+        for (i, (name, dims)) in specs.iter().enumerate() {
+            if grad_entry.inputs[i].dims != *dims {
+                return Err(Error::Manifest(format!(
+                    "param {name}: manifest shape {:?} != artifact input {:?}",
+                    dims, grad_entry.inputs[i].dims
+                )));
+            }
+        }
+
+        let mut rng = Rng::new(seed);
+        let params = specs
+            .iter()
+            .map(|(name, dims)| init_param(name, dims, &mut rng))
+            .collect::<Vec<_>>();
+        let zeros = |ps: &[HostTensor]| {
+            ps.iter()
+                .map(|p| HostTensor::f32(&p.name, p.dims.clone(), vec![0.0; p.len()]))
+                .collect::<Vec<_>>()
+        };
+        let m = zeros(&params);
+        let v = zeros(&params);
+        let corpus = Corpus::new(
+            cfg.vocab as usize,
+            cfg.seq_len as usize,
+            64,
+            seed ^ 0xC0FFEE,
+        );
+
+        Ok(Trainer {
+            rt,
+            model: model.to_string(),
+            dp,
+            grad_artifact,
+            apply_artifact,
+            param_names: specs.iter().map(|s| s.0.clone()).collect(),
+            params,
+            m,
+            v,
+            step_tensor: HostTensor::f32("step", vec![1], vec![0.0]),
+            corpus,
+            rng,
+            history: Vec::new(),
+        })
+    }
+
+    pub fn params(&self) -> &[HostTensor] {
+        &self.params
+    }
+
+    pub fn param_names(&self) -> &[String] {
+        &self.param_names
+    }
+
+    pub fn current_step(&self) -> f64 {
+        self.step_tensor.f32_data().map(|d| d[0] as f64).unwrap_or(0.0)
+    }
+
+    fn batch_tokens(&mut self) -> HostTensor {
+        let cfg = self.rt.manifest.config(&self.model).unwrap();
+        self.corpus
+            .sample_batch(cfg.batch as usize, &mut self.rng)
+    }
+
+    /// One data-parallel training step.
+    pub fn step(&mut self) -> Result<StepStats> {
+        let step_no = self.history.len();
+
+        // -- phase 1: per-worker gradient computation ------------------------
+        // parameters are identical across DP replicas: upload once and
+        // share the device buffers among workers (perf: avoids dp× host→
+        // device transfers and dp× Vec clones per step — EXPERIMENTS.md §Perf)
+        let param_bufs: Vec<xla::PjRtBuffer> = self
+            .params
+            .iter()
+            .map(|p| self.rt.upload(p))
+            .collect::<crate::Result<_>>()?;
+        let mut worker_grads: Vec<Vec<f32>> = Vec::with_capacity(self.dp);
+        let mut losses = Vec::with_capacity(self.dp);
+        let mut grad_secs = 0.0;
+        for _w in 0..self.dp {
+            let tokens = self.batch_tokens();
+            let token_buf = self.rt.upload(&tokens)?;
+            let mut inputs: Vec<&xla::PjRtBuffer> = param_bufs.iter().collect();
+            inputs.push(&token_buf);
+            let t0 = Instant::now();
+            let (outputs, _) = self.rt.exec_buffers(&self.grad_artifact, &inputs)?;
+            grad_secs += t0.elapsed().as_secs_f64();
+            losses.push(outputs[0].scalar()?);
+            // flatten grads (outputs[1..]) into one contiguous buffer
+            let total: usize = outputs[1..].iter().map(|t| t.len()).sum();
+            let mut flat = Vec::with_capacity(total);
+            for t in &outputs[1..] {
+                flat.extend_from_slice(t.f32_data()?);
+            }
+            worker_grads.push(flat);
+        }
+        grad_secs /= self.dp as f64;
+
+        // -- phase 2: real ring all-reduce over the gradient buffers ---------
+        let ar_timing = if self.dp > 1 {
+            ShmRing::new(self.dp).all_reduce_mean(&mut worker_grads)
+        } else {
+            Default::default()
+        };
+
+        // -- phase 3: optimizer apply (once; replicas are identical) ---------
+        // perf: params did not change since phase 1, so their device
+        // buffers are reused; m/v/step/grads upload straight from their
+        // host storage with no intermediate HostTensor clones
+        // (EXPERIMENTS.md §Perf).
+        let t0 = Instant::now();
+        let mut grad_bufs = Vec::with_capacity(self.params.len());
+        {
+            let mut off = 0usize;
+            let flat = &worker_grads[0];
+            for p in &self.params {
+                let n = p.len();
+                let g = HostTensor::f32(
+                    &p.name,
+                    p.dims.clone(),
+                    flat[off..off + n].to_vec(),
+                );
+                grad_bufs.push(self.rt.upload(&g)?);
+                off += n;
+            }
+        }
+        let m_bufs: Vec<_> = self
+            .m
+            .iter()
+            .map(|t| self.rt.upload(t))
+            .collect::<crate::Result<_>>()?;
+        let v_bufs: Vec<_> = self
+            .v
+            .iter()
+            .map(|t| self.rt.upload(t))
+            .collect::<crate::Result<_>>()?;
+        let step_buf = self.rt.upload(&self.step_tensor)?;
+
+        let mut refs: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(4 * self.params.len() + 1);
+        refs.extend(param_bufs.iter());
+        refs.extend(m_bufs.iter());
+        refs.extend(v_bufs.iter());
+        refs.push(&step_buf);
+        refs.extend(grad_bufs.iter());
+        let (outputs, _) = self.rt.exec_buffers(&self.apply_artifact, &refs)?;
+        let apply_secs = t0.elapsed().as_secs_f64();
+
+        let np = self.params.len();
+        self.params = outputs[..np].to_vec();
+        self.m = outputs[np..2 * np].to_vec();
+        self.v = outputs[2 * np..3 * np].to_vec();
+        self.step_tensor = outputs[3 * np].clone();
+        // restore canonical names (outputs carry jax path names)
+        for (i, name) in self.param_names.iter().enumerate() {
+            self.params[i].name = name.clone();
+            self.m[i].name = name.clone();
+            self.v[i].name = name.clone();
+        }
+
+        let stats = StepStats {
+            step: step_no,
+            loss: losses.iter().sum::<f64>() / losses.len() as f64,
+            grad_secs,
+            ar_secs: ar_timing.total.as_secs_f64(),
+            apply_secs,
+        };
+        self.history.push(stats.clone());
+        Ok(stats)
+    }
+
+    /// Run `steps` steps, logging every `log_every`.
+    pub fn run(&mut self, steps: usize, log_every: usize) -> Result<&[StepStats]> {
+        for _ in 0..steps {
+            let s = self.step()?;
+            if log_every > 0 && (s.step % log_every == 0 || s.step + 1 == steps) {
+                eprintln!(
+                    "step {:>4}  loss {:.4}  grad {:>8.1}ms  ar {:>7.2}ms  apply {:>7.1}ms  comm {:>4.1}%",
+                    s.step,
+                    s.loss,
+                    s.grad_secs * 1e3,
+                    s.ar_secs * 1e3,
+                    s.apply_secs * 1e3,
+                    100.0 * s.comm_fraction()
+                );
+            }
+        }
+        Ok(&self.history)
+    }
+
+    /// Write the loss curve + timings as CSV.
+    pub fn write_csv(&self, path: &str) -> Result<()> {
+        let mut out = String::from("step,loss,grad_secs,ar_secs,apply_secs\n");
+        for s in &self.history {
+            out.push_str(&format!(
+                "{},{},{},{},{}\n",
+                s.step, s.loss, s.grad_secs, s.ar_secs, s.apply_secs
+            ));
+        }
+        std::fs::write(path, out)?;
+        Ok(())
+    }
+}
+
+/// Initialize one parameter tensor (mirrors `model.init_params`).
+fn init_param(name: &str, dims: &[usize], rng: &mut Rng) -> HostTensor {
+    let n: usize = dims.iter().product();
+    let data: Vec<f32> = if name.contains("gamma") {
+        vec![1.0; n]
+    } else if name.contains("beta") || name.starts_with("b_") {
+        vec![0.0; n]
+    } else if name == "embedding" {
+        (0..n).map(|_| 0.02 * rng.normal() as f32).collect()
+    } else {
+        // stacked weights [layers, fan_in, fan_out]: use the trailing dims
+        let fan_in = dims[dims.len() - 2];
+        let fan_out = dims[dims.len() - 1];
+        let std = (2.0 / (fan_in + fan_out) as f64).sqrt();
+        (0..n).map(|_| (std * rng.normal()) as f32).collect()
+    };
+    HostTensor::f32(name, dims.to_vec(), data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_param_rules() {
+        let mut rng = Rng::new(1);
+        let g = init_param("ln1_gamma", &[2, 8], &mut rng);
+        assert!(g.f32_data().unwrap().iter().all(|x| *x == 1.0));
+        let b = init_param("b_qkv", &[2, 8], &mut rng);
+        assert!(b.f32_data().unwrap().iter().all(|x| *x == 0.0));
+        let w = init_param("w_fc1", &[2, 64, 256], &mut rng);
+        let data = w.f32_data().unwrap();
+        let std = {
+            let mean: f32 = data.iter().sum::<f32>() / data.len() as f32;
+            (data.iter().map(|x| (x - mean).powi(2)).sum::<f32>()
+                / data.len() as f32)
+                .sqrt()
+        };
+        let expect = (2.0f32 / (64.0 + 256.0)).sqrt();
+        assert!((std / expect - 1.0).abs() < 0.1, "std {std} vs {expect}");
+    }
+
+    #[test]
+    fn step_stats_comm_fraction() {
+        let s = StepStats {
+            step: 0,
+            loss: 1.0,
+            grad_secs: 0.08,
+            ar_secs: 0.01,
+            apply_secs: 0.01,
+        };
+        assert!((s.comm_fraction() - 0.1).abs() < 1e-12);
+    }
+}

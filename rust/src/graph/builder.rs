@@ -1,0 +1,407 @@
+//! Builds the per-device operator graph of a distributed Transformer
+//! training iteration (forward + backward + optimizer), following the
+//! paper's Fig 4/5 decomposition and Megatron-style TP slicing.
+
+use crate::model::ModelConfig;
+#[cfg(test)]
+use crate::model::LayerCounts;
+
+use super::{CommClass, OpGraph, OpId, OpKind, Phase};
+
+/// What to include in the built graph.
+#[derive(Debug, Clone, Copy)]
+pub struct GraphOptions {
+    /// Emit the serialized TP activation/error all-reduces (only
+    /// meaningful when `cfg.tp > 1`).
+    pub tp_allreduce: bool,
+    /// Emit the overlappable DP weight-gradient all-reduces (only
+    /// meaningful when `cfg.dp > 1`).
+    pub dp_allreduce: bool,
+    /// Include LayerNorm/element-wise ops (off = GEMM-only view, the
+    /// paper's algorithmic lens of §3.3).
+    pub non_gemm: bool,
+}
+
+impl Default for GraphOptions {
+    fn default() -> Self {
+        GraphOptions { tp_allreduce: true, dp_allreduce: true, non_gemm: true }
+    }
+}
+
+/// Build one device's operator graph for a full training iteration of
+/// `cfg.layers` Transformer layers.
+pub fn build_layer_graph(cfg: &ModelConfig, opts: GraphOptions) -> OpGraph {
+    let mut g = OpGraph::default();
+    let (h, sl, b, tp) = (cfg.hidden, cfg.seq_len, cfg.batch, cfg.tp);
+    let f = cfg.ffn();
+    let bs = b * sl;
+    let hd = h / cfg.heads;
+    let heads_dev = cfg.heads / tp;
+    let p = cfg.precision.bytes();
+    let act_bytes = p * bs * h; // Eq. 5: the full activation
+    let tp_on = opts.tp_allreduce && tp > 1;
+    let dp_on = opts.dp_allreduce && cfg.dp > 1;
+
+    // layer weight parameters per device (for DP gradient ARs, Eq. 8)
+    let layer_param_bytes = p * ((3 * h * h) + (h * h) + (h * f) + (f * h)) / tp;
+
+    // ---- forward ----------------------------------------------------------
+    // `prev` is the op producing the layer input.
+    let mut prev: Option<OpId> = None;
+    let mut fwd_tail_per_layer: Vec<OpId> = Vec::new();
+    let dep = |prev: &Option<OpId>| prev.iter().copied().collect::<Vec<_>>();
+
+    for _layer in 0..cfg.layers {
+        // attention sub-layer
+        let ln1 = if opts.non_gemm {
+            Some(g.add(OpKind::LayerNorm { rows: bs, h }, Phase::Forward, dep(&prev)))
+        } else {
+            None
+        };
+        let attn_in = ln1.or(prev);
+        let qkv = g.add(
+            OpKind::Gemm { m: bs, n: 3 * h / tp, k: h, count: 1 },
+            Phase::Forward,
+            dep(&attn_in.map(Some).unwrap_or(None)),
+        );
+        let scores = g.add(
+            OpKind::Gemm { m: sl, n: sl, k: hd, count: b * heads_dev },
+            Phase::Forward,
+            vec![qkv],
+        );
+        let ctx = g.add(
+            OpKind::Gemm { m: sl, n: hd, k: sl, count: b * heads_dev },
+            Phase::Forward,
+            vec![scores],
+        );
+        let out = g.add(
+            OpKind::Gemm { m: bs, n: h, k: h / tp, count: 1 },
+            Phase::Forward,
+            vec![ctx],
+        );
+        // row-parallel out-proj produces a partial sum → serialized AR
+        let mut tail = out;
+        if tp_on {
+            tail = g.add(
+                OpKind::AllReduce { bytes: act_bytes, class: CommClass::Serialized },
+                Phase::Forward,
+                vec![out],
+            );
+        }
+        if opts.non_gemm {
+            // residual add
+            tail = g.add(
+                OpKind::Elementwise { bytes: 3 * act_bytes },
+                Phase::Forward,
+                vec![tail],
+            );
+        }
+
+        // FC sub-layer
+        let ln2 = if opts.non_gemm {
+            Some(g.add(OpKind::LayerNorm { rows: bs, h }, Phase::Forward, vec![tail]))
+        } else {
+            None
+        };
+        let fc1 = g.add(
+            OpKind::Gemm { m: bs, n: f / tp, k: h, count: 1 },
+            Phase::Forward,
+            vec![ln2.unwrap_or(tail)],
+        );
+        let fc2 = g.add(
+            OpKind::Gemm { m: bs, n: h, k: f / tp, count: 1 },
+            Phase::Forward,
+            vec![fc1],
+        );
+        let mut tail2 = fc2;
+        if tp_on {
+            tail2 = g.add(
+                OpKind::AllReduce { bytes: act_bytes, class: CommClass::Serialized },
+                Phase::Forward,
+                vec![fc2],
+            );
+        }
+        if opts.non_gemm {
+            tail2 = g.add(
+                OpKind::Elementwise { bytes: 3 * act_bytes },
+                Phase::Forward,
+                vec![tail2],
+            );
+        }
+        fwd_tail_per_layer.push(tail2);
+        prev = Some(tail2);
+    }
+
+    // ---- backward (reverse layer order) -------------------------------------
+    // For each fwd GEMM (M,N,K): input-grad GEMM (M,K,N) + weight-grad GEMM
+    // (K,N,M) — same flop count each (Eq. 7).
+    let mut bprev = prev; // gradient flowing in from the loss
+    let mut dp_ar_ids: Vec<OpId> = Vec::new();
+
+    for _layer in (0..cfg.layers).rev() {
+        // FC sub-layer backward
+        let fc2_ig = g.add(
+            OpKind::Gemm { m: bs, n: f / tp, k: h, count: 1 },
+            Phase::Backward,
+            dep(&bprev),
+        );
+        let fc2_wg = g.add(
+            OpKind::Gemm { m: f / tp, n: h, k: bs, count: 1 },
+            Phase::Backward,
+            dep(&bprev),
+        );
+        let fc1_ig = g.add(
+            OpKind::Gemm { m: bs, n: h, k: f / tp, count: 1 },
+            Phase::Backward,
+            vec![fc2_ig],
+        );
+        let fc1_wg = g.add(
+            OpKind::Gemm { m: h, n: f / tp, k: bs, count: 1 },
+            Phase::Backward,
+            vec![fc2_ig],
+        );
+        // column-parallel fc1's input-grad is a partial sum → serialized AR
+        let mut btail = fc1_ig;
+        if tp_on {
+            btail = g.add(
+                OpKind::AllReduce { bytes: act_bytes, class: CommClass::Serialized },
+                Phase::Backward,
+                vec![fc1_ig],
+            );
+        }
+        if opts.non_gemm {
+            btail = g.add(
+                OpKind::LayerNorm { rows: bs, h },
+                Phase::Backward,
+                vec![btail],
+            );
+        }
+
+        // attention sub-layer backward
+        let out_ig = g.add(
+            OpKind::Gemm { m: bs, n: h / tp, k: h, count: 1 },
+            Phase::Backward,
+            vec![btail],
+        );
+        let out_wg = g.add(
+            OpKind::Gemm { m: h / tp, n: h, k: bs, count: 1 },
+            Phase::Backward,
+            vec![btail],
+        );
+        let ctx_bwd = g.add(
+            OpKind::Gemm { m: sl, n: sl, k: hd, count: 2 * b * heads_dev },
+            Phase::Backward,
+            vec![out_ig],
+        );
+        let scores_bwd = g.add(
+            OpKind::Gemm { m: sl, n: hd, k: sl, count: 2 * b * heads_dev },
+            Phase::Backward,
+            vec![ctx_bwd],
+        );
+        let qkv_ig = g.add(
+            OpKind::Gemm { m: bs, n: h, k: 3 * h / tp, count: 1 },
+            Phase::Backward,
+            vec![scores_bwd],
+        );
+        let qkv_wg = g.add(
+            OpKind::Gemm { m: 3 * h / tp, n: h, k: bs, count: 1 },
+            Phase::Backward,
+            vec![scores_bwd],
+        );
+        let mut btail2 = qkv_ig;
+        if tp_on {
+            btail2 = g.add(
+                OpKind::AllReduce { bytes: act_bytes, class: CommClass::Serialized },
+                Phase::Backward,
+                vec![qkv_ig],
+            );
+        }
+        if opts.non_gemm {
+            btail2 = g.add(
+                OpKind::LayerNorm { rows: bs, h },
+                Phase::Backward,
+                vec![btail2],
+            );
+        }
+
+        // DP weight-gradient all-reduce: issued once the layer's last WG
+        // completes; overlappable with the next (earlier) layer's backprop.
+        if dp_on {
+            let ar = g.add(
+                OpKind::AllReduce {
+                    bytes: layer_param_bytes,
+                    class: CommClass::Overlappable,
+                },
+                Phase::Backward,
+                vec![fc2_wg, fc1_wg, out_wg, qkv_wg],
+            );
+            dp_ar_ids.push(ar);
+        }
+
+        bprev = Some(btail2);
+    }
+
+    // ---- optimizer ----------------------------------------------------------
+    if opts.non_gemm {
+        let mut deps = dep(&bprev);
+        deps.extend(dp_ar_ids.iter().copied());
+        let param_bytes = cfg.layers * layer_param_bytes;
+        g.add(
+            // Adam reads grads + 2 moments + params, writes params + moments
+            OpKind::Elementwise { bytes: 6 * param_bytes },
+            Phase::Optimizer,
+            deps,
+        );
+    }
+
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Precision;
+
+    fn cfg(tp: u64, dp: u64) -> ModelConfig {
+        ModelConfig {
+            hidden: 1024,
+            seq_len: 512,
+            batch: 4,
+            layers: 4,
+            heads: 16,
+            ffn_mult: 4,
+            tp,
+            dp,
+            precision: Precision::F16,
+        }
+    }
+
+    #[test]
+    fn graph_is_valid_dag() {
+        for (tp, dp) in [(1, 1), (4, 1), (1, 4), (8, 8)] {
+            let g = build_layer_graph(&cfg(tp, dp), GraphOptions::default());
+            g.validate().unwrap();
+            assert!(!g.is_empty());
+        }
+    }
+
+    #[test]
+    fn gemm_flops_match_eq_totals() {
+        // The graph's summed GEMM flops must equal the closed-form Eq. 1–4
+        // totals (×3 for fwd+bwd, × layers).
+        for tp in [1u64, 2, 4, 8] {
+            let c = cfg(tp, 1);
+            let g = build_layer_graph(&c, GraphOptions::default());
+            let lc = LayerCounts::of(&c);
+            assert_eq!(
+                g.total_gemm_flops(),
+                c.layers * lc.iter_gemm_flops(),
+                "tp {tp}"
+            );
+        }
+    }
+
+    #[test]
+    fn serialized_ar_bytes_match_eq5() {
+        let c = cfg(8, 1);
+        let g = build_layer_graph(&c, GraphOptions::default());
+        let lc = LayerCounts::of(&c);
+        assert_eq!(
+            g.total_comm_bytes(CommClass::Serialized),
+            c.layers * lc.iter_tp_ar_bytes()
+        );
+        // exactly 4 serialized ARs per layer (§3.3)
+        let n_ar = g
+            .ops
+            .iter()
+            .filter(|o| {
+                matches!(
+                    o.kind,
+                    OpKind::AllReduce { class: CommClass::Serialized, .. }
+                )
+            })
+            .count() as u64;
+        assert_eq!(n_ar, 4 * c.layers);
+    }
+
+    #[test]
+    fn dp_ar_bytes_match_eq8() {
+        let c = cfg(2, 4);
+        let g = build_layer_graph(&c, GraphOptions::default());
+        let lc = LayerCounts::of(&c);
+        assert_eq!(
+            g.total_comm_bytes(CommClass::Overlappable),
+            c.layers * lc.dp_ar_bytes
+        );
+    }
+
+    #[test]
+    fn no_comm_ops_when_degrees_are_one() {
+        let g = build_layer_graph(&cfg(1, 1), GraphOptions::default());
+        assert_eq!(g.total_comm_bytes(CommClass::Serialized), 0);
+        assert_eq!(g.total_comm_bytes(CommClass::Overlappable), 0);
+    }
+
+    #[test]
+    fn dp_ars_depend_only_on_weight_grads() {
+        // DP ARs must not gate any backward compute op — that is what
+        // makes them overlappable. Check: no compute op depends on an AR.
+        let c = cfg(1, 4);
+        let g = build_layer_graph(&c, GraphOptions::default());
+        let ar_ids: std::collections::HashSet<_> = g
+            .ops
+            .iter()
+            .filter(|o| {
+                matches!(
+                    o.kind,
+                    OpKind::AllReduce { class: CommClass::Overlappable, .. }
+                )
+            })
+            .map(|o| o.id)
+            .collect();
+        for op in &g.ops {
+            if matches!(op.phase, Phase::Optimizer) {
+                continue; // the optimizer legitimately waits on ARs
+            }
+            for d in &op.deps {
+                assert!(
+                    !ar_ids.contains(d),
+                    "{:?} blocks on a DP all-reduce",
+                    op.kind
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn optimizer_waits_for_all_dp_ars() {
+        let c = cfg(1, 4);
+        let g = build_layer_graph(&c, GraphOptions::default());
+        let opt = g
+            .ops
+            .iter()
+            .find(|o| matches!(o.phase, Phase::Optimizer))
+            .expect("optimizer op");
+        let n_ar_deps = opt
+            .deps
+            .iter()
+            .filter(|d| {
+                matches!(
+                    g.ops[d.0].kind,
+                    OpKind::AllReduce { class: CommClass::Overlappable, .. }
+                )
+            })
+            .count() as u64;
+        assert_eq!(n_ar_deps, c.layers);
+    }
+
+    #[test]
+    fn gemm_only_view_has_no_non_gemm_ops() {
+        let opts = GraphOptions { non_gemm: false, ..Default::default() };
+        let g = build_layer_graph(&cfg(4, 4), opts);
+        assert!(g.ops.iter().all(|o| !matches!(
+            o.kind,
+            OpKind::LayerNorm { .. } | OpKind::Elementwise { .. }
+        )));
+    }
+}

@@ -1,0 +1,80 @@
+//! Operator graph of one distributed Transformer training iteration.
+//!
+//! The graph is the interface between the model's complexity accounting
+//! ([`crate::model::flops`]) and the discrete-event simulator
+//! ([`crate::sim`]): nodes are compute or communication operators with
+//! explicit dependencies, and every communication op carries a
+//! [`CommClass`] marking whether it is on the critical path (TP activation
+//! all-reduces, §2.3.3) or overlappable (DP weight-gradient all-reduces,
+//! §2.3.2).
+
+pub mod builder;
+pub mod op;
+
+pub use builder::{build_layer_graph, GraphOptions};
+pub use op::{CommClass, Op, OpId, OpKind, Phase};
+
+/// A dependency-ordered operator graph for one device's view of training.
+#[derive(Debug, Clone, Default)]
+pub struct OpGraph {
+    pub ops: Vec<Op>,
+}
+
+impl OpGraph {
+    pub fn add(&mut self, kind: OpKind, phase: Phase, deps: Vec<OpId>) -> OpId {
+        let id = OpId(self.ops.len());
+        for d in &deps {
+            assert!(d.0 < id.0, "dependency on future op");
+        }
+        self.ops.push(Op { id, kind, phase, deps });
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Total GEMM flops in the graph.
+    pub fn total_gemm_flops(&self) -> u64 {
+        self.ops
+            .iter()
+            .map(|o| match o.kind {
+                OpKind::Gemm { m, n, k, count } => 2 * m * n * k * count,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Total communication bytes by class.
+    pub fn total_comm_bytes(&self, class: CommClass) -> u64 {
+        self.ops
+            .iter()
+            .filter_map(|o| match o.kind {
+                OpKind::AllReduce { bytes, class: c } if c == class => Some(bytes),
+                _ => None,
+            })
+            .sum()
+    }
+
+    /// Verify the graph is a DAG in topological order with valid deps.
+    pub fn validate(&self) -> crate::Result<()> {
+        for (i, op) in self.ops.iter().enumerate() {
+            if op.id.0 != i {
+                return Err(crate::Error::Sim(format!("op {i} has id {}", op.id.0)));
+            }
+            for d in &op.deps {
+                if d.0 >= i {
+                    return Err(crate::Error::Sim(format!(
+                        "op {i} depends on later/self op {}",
+                        d.0
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+}

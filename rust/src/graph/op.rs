@@ -1,0 +1,104 @@
+//! Operator node types.
+
+/// Index of an op within its graph (graphs are topologically ordered).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct OpId(pub usize);
+
+/// Whether a communication op blocks the critical path (§2.3.3) or can be
+/// overlapped with independent compute (§2.3.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CommClass {
+    /// TP activation/error all-reduce: successors block on it (Fig 3b).
+    Serialized,
+    /// DP weight-gradient all-reduce: only the optimizer step blocks on it
+    /// (Fig 3a) — hidden when compute slack suffices.
+    Overlappable,
+}
+
+/// Which training phase the op belongs to (for breakdowns and Fig 14).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    Forward,
+    Backward,
+    Optimizer,
+}
+
+/// The operator payload: everything the cost providers need.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OpKind {
+    /// `count` GEMMs of (m, n, k) each — e.g. per-head attention GEMMs.
+    Gemm { m: u64, n: u64, k: u64, count: u64 },
+    /// LayerNorm over `rows` rows of width `h`.
+    LayerNorm { rows: u64, h: u64 },
+    /// Fused element-wise traffic of `bytes` (residual adds, GELU when not
+    /// fused, dropout, optimizer math).
+    Elementwise { bytes: u64 },
+    /// All-reduce of `bytes` with the given scheduling class.
+    AllReduce { bytes: u64, class: CommClass },
+}
+
+impl OpKind {
+    pub fn is_comm(&self) -> bool {
+        matches!(self, OpKind::AllReduce { .. })
+    }
+
+    pub fn gemm_flops(&self) -> u64 {
+        match *self {
+            OpKind::Gemm { m, n, k, count } => 2 * m * n * k * count,
+            _ => 0,
+        }
+    }
+
+    /// Short label for timelines and reports.
+    pub fn label(&self) -> String {
+        match *self {
+            OpKind::Gemm { m, n, k, count } => {
+                if count == 1 {
+                    format!("gemm {m}x{n}x{k}")
+                } else {
+                    format!("gemm {m}x{n}x{k} x{count}")
+                }
+            }
+            OpKind::LayerNorm { rows, h } => format!("layernorm {rows}x{h}"),
+            OpKind::Elementwise { bytes } => format!("eltwise {bytes}B"),
+            OpKind::AllReduce { bytes, class } => match class {
+                CommClass::Serialized => format!("ar-tp {bytes}B"),
+                CommClass::Overlappable => format!("ar-dp {bytes}B"),
+            },
+        }
+    }
+}
+
+/// One node of the operator graph.
+#[derive(Debug, Clone)]
+pub struct Op {
+    pub id: OpId,
+    pub kind: OpKind,
+    pub phase: Phase,
+    pub deps: Vec<OpId>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_flops_counts_pairs() {
+        let k = OpKind::Gemm { m: 4, n: 5, k: 6, count: 3 };
+        assert_eq!(k.gemm_flops(), 2 * 4 * 5 * 6 * 3);
+        assert_eq!(OpKind::LayerNorm { rows: 8, h: 8 }.gemm_flops(), 0);
+    }
+
+    #[test]
+    fn comm_classification() {
+        assert!(OpKind::AllReduce { bytes: 1, class: CommClass::Serialized }.is_comm());
+        assert!(!OpKind::Gemm { m: 1, n: 1, k: 1, count: 1 }.is_comm());
+    }
+
+    #[test]
+    fn labels_are_distinct() {
+        let a = OpKind::AllReduce { bytes: 64, class: CommClass::Serialized }.label();
+        let b = OpKind::AllReduce { bytes: 64, class: CommClass::Overlappable }.label();
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,146 @@
+//! Catalog of real accelerators (public datasheet numbers) — the basis
+//! for the paper's hardware-evolution ratios (§4.3.6) and our substitution
+//! for its 4×MI210 testbed (DESIGN.md §4).
+
+use super::DeviceSpec;
+
+const GB: f64 = 1e9;
+const TFLOP: f64 = 1e12;
+
+/// NVIDIA V100 (2018): 125 TF fp16 tensor, 900 GB/s HBM2, NVLink2.
+pub fn v100() -> DeviceSpec {
+    DeviceSpec {
+        name: "V100".into(),
+        year: 2018,
+        peak_flops_f32: 15.7 * TFLOP,
+        peak_flops_f16: 125.0 * TFLOP,
+        mem_bw: 900.0 * GB,
+        mem_capacity: 32 * GB as u64,
+        link_bw: 300.0 * GB,
+        ring_ar_bw: 130.0 * GB,
+        link_latency: 3e-6,
+    }
+}
+
+/// NVIDIA A100 (2020): 312 TF fp16 tensor (dense), 1.56 TB/s, NVLink3.
+pub fn a100() -> DeviceSpec {
+    DeviceSpec {
+        name: "A100".into(),
+        year: 2020,
+        peak_flops_f32: 19.5 * TFLOP,
+        peak_flops_f16: 312.0 * TFLOP,
+        mem_bw: 1555.0 * GB,
+        mem_capacity: 80 * GB as u64,
+        link_bw: 600.0 * GB,
+        ring_ar_bw: 235.0 * GB,
+        link_latency: 3e-6,
+    }
+}
+
+/// AMD MI50 (2018): 26.5 TF fp16, 1 TB/s HBM2, xGMI.
+pub fn mi50() -> DeviceSpec {
+    DeviceSpec {
+        name: "MI50".into(),
+        year: 2018,
+        peak_flops_f32: 13.3 * TFLOP,
+        peak_flops_f16: 26.5 * TFLOP,
+        mem_bw: 1024.0 * GB,
+        mem_capacity: 32 * GB as u64,
+        link_bw: 92.0 * GB,
+        ring_ar_bw: 85.0 * GB,
+        link_latency: 3e-6,
+    }
+}
+
+/// AMD MI100 (2020): 184.6 TF fp16 matrix, 1.23 TB/s.
+pub fn mi100() -> DeviceSpec {
+    DeviceSpec {
+        name: "MI100".into(),
+        year: 2020,
+        peak_flops_f32: 23.1 * TFLOP,
+        peak_flops_f16: 184.6 * TFLOP,
+        mem_bw: 1229.0 * GB,
+        mem_capacity: 32 * GB as u64,
+        link_bw: 92.0 * GB,
+        ring_ar_bw: 140.0 * GB,
+        link_latency: 3e-6,
+    }
+}
+
+/// AMD MI210 (2022): the paper's testbed device. 181 TF fp16 matrix,
+/// 1.6 TB/s HBM2e, 64 GB, Infinity-Fabric links at 100 GB/s forming
+/// rings with 150 GB/s sustained all-reduce bandwidth (§4.3.1).
+pub fn mi210() -> DeviceSpec {
+    DeviceSpec {
+        name: "MI210".into(),
+        year: 2022,
+        peak_flops_f32: 45.3 * TFLOP,
+        peak_flops_f16: 181.0 * TFLOP,
+        mem_bw: 1638.0 * GB,
+        mem_capacity: 64 * GB as u64,
+        link_bw: 100.0 * GB,
+        ring_ar_bw: 150.0 * GB,
+        link_latency: 3e-6,
+    }
+}
+
+/// All catalog devices, oldest first.
+pub fn catalog() -> Vec<DeviceSpec> {
+    vec![v100(), mi50(), a100(), mi100(), mi210()]
+}
+
+pub fn find_device(name: &str) -> Option<DeviceSpec> {
+    catalog()
+        .into_iter()
+        .find(|d| d.name.eq_ignore_ascii_case(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_nvidia_scaling_ratios() {
+        // §4.3.6: "compute FLOPS scaled by ~5× [V100→A100 w/ sparsity
+        // ≈ 2.5× dense] ... while network bandwidth scaled only by ~2×".
+        let f = a100().peak_flops_f16 / v100().peak_flops_f16;
+        let b = a100().link_bw / v100().link_bw;
+        assert!((2.4..2.6).contains(&f), "flop ratio {f}");
+        assert!((1.9..2.1).contains(&b), "bw ratio {b}");
+        // dense flop-vs-bw relative scaling ≈ 1.25; with the paper's
+        // sparsity-inclusive 5× it is 2.5 — both in the 2-4× band once
+        // precision effects are included (§6.2).
+    }
+
+    #[test]
+    fn paper_amd_scaling_ratios() {
+        // §4.3.6: AMD compute ~7× (MI50→MI100), network ~1.7× — ratio ~4×.
+        let f = mi100().peak_flops_f16 / mi50().peak_flops_f16;
+        let b = mi100().ring_ar_bw / mi50().ring_ar_bw;
+        assert!((6.5..7.5).contains(&f), "flop ratio {f}");
+        let rel = f / b;
+        assert!((3.5..4.5).contains(&rel), "flop-vs-bw {rel}");
+    }
+
+    #[test]
+    fn mi210_matches_testbed_description() {
+        let d = mi210();
+        assert_eq!(d.mem_capacity, 64 * 1e9 as u64); // "each with 64GB HBM"
+        assert!((d.link_bw - 100e9).abs() < 1.0); // "100GB/s links"
+        assert!((d.ring_ar_bw - 150e9).abs() < 1.0); // "150GB/s ring AR"
+    }
+
+    #[test]
+    fn flop_per_byte_grows_across_generations() {
+        // the core premise: compute outpaces network over time
+        assert!(mi210().flop_per_byte() > mi50().flop_per_byte());
+        assert!(a100().flop_per_byte() > v100().flop_per_byte());
+    }
+
+    #[test]
+    fn find_device_case_insensitive() {
+        assert!(find_device("mi210").is_some());
+        assert!(find_device("A100").is_some());
+        assert!(find_device("TPUv9").is_none());
+    }
+}

@@ -1,0 +1,110 @@
+//! Size-dependent efficiency curves.
+//!
+//! The paper's empirical analysis observed that *"smaller communication
+//! sizes do not fully use the network bandwidth capacity ... resulting in
+//! a sub-linear increase in communication costs until a point where the
+//! network bandwidth saturates"* (§4.3.5), while large GEMMs reach >85% of
+//! peak FLOPs (§4.2.3, citing GShard). Both effects are modeled with
+//! saturating hyperbolic curves:
+//!
+//! ```text
+//! eff(size) = eff_max · size / (size + size_half)
+//! ```
+//!
+//! which matches the classic latency-bandwidth (α–β) behaviour: half of
+//! peak at `size_half`, asymptoting to `eff_max`.
+
+/// Tunable efficiency model for one device generation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EfficiencyCurves {
+    /// Asymptotic GEMM efficiency (fraction of peak FLOPs).
+    pub gemm_eff_max: f64,
+    /// GEMM FLOP count at which efficiency reaches half of max.
+    pub gemm_flops_half: f64,
+    /// Asymptotic network bus utilization (fraction of peak bandwidth).
+    pub net_eff_max: f64,
+    /// Message size (bytes) at which bus utilization reaches half of max.
+    pub net_bytes_half: f64,
+    /// Asymptotic memory-bandwidth utilization for bandwidth-bound ops.
+    pub mem_eff_max: f64,
+    /// Byte count at which memory utilization reaches half of max.
+    pub mem_bytes_half: f64,
+}
+
+impl Default for EfficiencyCurves {
+    fn default() -> Self {
+        EfficiencyCurves {
+            // GShard-style >85% at large sizes; half-efficiency around
+            // 0.2 GFLOP (a ~460³ fp16 GEMM) — matches rocBLAS behaviour
+            // where small GEMMs are launch/tile-quantization limited.
+            gemm_eff_max: 0.90,
+            gemm_flops_half: 2e8,
+            // NCCL/RCCL ring AR reaches ~90% of link speed for ≥ 64 MB
+            // payloads, with half-speed around 8 MB.
+            net_eff_max: 0.92,
+            net_bytes_half: 8e6,
+            // Streaming element-wise kernels saturate HBM early.
+            mem_eff_max: 0.85,
+            mem_bytes_half: 2e6,
+        }
+    }
+}
+
+impl EfficiencyCurves {
+    fn sat(size: f64, half: f64, emax: f64) -> f64 {
+        emax * size / (size + half)
+    }
+
+    /// Fraction of peak FLOPs a GEMM of `flops` total operations achieves.
+    pub fn gemm(&self, flops: f64) -> f64 {
+        Self::sat(flops, self.gemm_flops_half, self.gemm_eff_max)
+    }
+
+    /// Fraction of peak network bandwidth a `bytes`-sized transfer achieves.
+    pub fn net(&self, bytes: f64) -> f64 {
+        Self::sat(bytes, self.net_bytes_half, self.net_eff_max)
+    }
+
+    /// Fraction of peak memory bandwidth a streaming op of `bytes` achieves.
+    pub fn mem(&self, bytes: f64) -> f64 {
+        Self::sat(bytes, self.mem_bytes_half, self.mem_eff_max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotone_and_bounded() {
+        let e = EfficiencyCurves::default();
+        let mut prev = 0.0;
+        for exp in 0..15 {
+            let v = e.gemm(10f64.powi(exp));
+            assert!(v >= prev && v <= e.gemm_eff_max);
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn half_efficiency_at_half_size() {
+        let e = EfficiencyCurves::default();
+        let v = e.net(e.net_bytes_half);
+        assert!((v - e.net_eff_max / 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn large_gemm_exceeds_85_percent() {
+        // §4.2.3: key Transformer GEMMs are compute-bound at > 85% peak.
+        let e = EfficiencyCurves::default();
+        assert!(e.gemm(5e11) > 0.85); // a PALM-class fused GEMM
+    }
+
+    #[test]
+    fn small_message_underutilizes_network() {
+        // §4.3.5's observed artifact: small ARs leave bandwidth idle.
+        let e = EfficiencyCurves::default();
+        assert!(e.net(64e3) < 0.02); // 64 KB message: single-digit %
+        assert!(e.net(256e6) > 0.85); // 256 MB message: near peak
+    }
+}

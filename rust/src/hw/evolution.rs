@@ -1,0 +1,101 @@
+//! Hardware-evolution model (§4.3.6): scale compute FLOPs relative to
+//! network bandwidth by the historical *flop-vs-bw* ratio and project the
+//! resulting device generation.
+
+use super::DeviceSpec;
+
+/// A relative hardware-evolution step.
+///
+/// `flop_scale` multiplies peak FLOPs; `bw_scale` multiplies link/AR/memory
+/// bandwidth. The paper's headline scenarios hold bandwidth constant and
+/// scale compute by the *relative* ratio (2× and 4×), which is equivalent
+/// to any absolute pair with the same quotient — communication *fractions*
+/// only depend on the ratio (asserted in `analysis::evolution::tests`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Evolution {
+    pub flop_scale: f64,
+    pub bw_scale: f64,
+}
+
+impl Evolution {
+    /// No change (today's hardware).
+    pub fn none() -> Evolution {
+        Evolution { flop_scale: 1.0, bw_scale: 1.0 }
+    }
+
+    /// The paper's "2×" scenario: compute scales 2× faster than network.
+    pub fn flop_vs_bw_2x() -> Evolution {
+        Evolution { flop_scale: 2.0, bw_scale: 1.0 }
+    }
+
+    /// The paper's "4×" scenario (the AMD MI50→MI100 historical ratio).
+    pub fn flop_vs_bw_4x() -> Evolution {
+        Evolution { flop_scale: 4.0, bw_scale: 1.0 }
+    }
+
+    /// Relative flop-vs-bw ratio of this step.
+    pub fn ratio(&self) -> f64 {
+        self.flop_scale / self.bw_scale
+    }
+
+    /// Apply to a device spec, producing the projected next generation.
+    pub fn apply(&self, d: &DeviceSpec) -> DeviceSpec {
+        DeviceSpec {
+            name: format!("{}+{:.0}x/{:.0}x", d.name, self.flop_scale, self.bw_scale),
+            year: d.year + 2,
+            peak_flops_f32: d.peak_flops_f32 * self.flop_scale,
+            peak_flops_f16: d.peak_flops_f16 * self.flop_scale,
+            mem_bw: d.mem_bw * self.flop_scale, // HBM tracks compute (§4.2.3)
+            mem_capacity: d.mem_capacity,
+            link_bw: d.link_bw * self.bw_scale,
+            ring_ar_bw: d.ring_ar_bw * self.bw_scale,
+            link_latency: d.link_latency,
+        }
+    }
+
+    /// Derive the historical flop-vs-bw ratio between two catalog devices.
+    pub fn between(older: &DeviceSpec, newer: &DeviceSpec) -> Evolution {
+        Evolution {
+            flop_scale: newer.peak_flops_f16 / older.peak_flops_f16,
+            bw_scale: newer.ring_ar_bw / older.ring_ar_bw,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::catalog;
+
+    #[test]
+    fn presets_have_expected_ratios() {
+        assert_eq!(Evolution::none().ratio(), 1.0);
+        assert_eq!(Evolution::flop_vs_bw_2x().ratio(), 2.0);
+        assert_eq!(Evolution::flop_vs_bw_4x().ratio(), 4.0);
+    }
+
+    #[test]
+    fn apply_scales_compute_not_network() {
+        let d = catalog::mi210();
+        let d2 = Evolution::flop_vs_bw_4x().apply(&d);
+        assert_eq!(d2.peak_flops_f16, 4.0 * d.peak_flops_f16);
+        assert_eq!(d2.ring_ar_bw, d.ring_ar_bw);
+        assert_eq!(d2.mem_capacity, d.mem_capacity);
+    }
+
+    #[test]
+    fn historical_amd_ratio_near_4x() {
+        // §4.3.6: AMD 2018→2020 flop-vs-bw ≈ 7/1.7 ≈ 4×.
+        let e = Evolution::between(&catalog::mi50(), &catalog::mi100());
+        assert!((3.5..4.7).contains(&e.ratio()), "ratio {}", e.ratio());
+    }
+
+    #[test]
+    fn composition_multiplies_ratios() {
+        let d = catalog::mi210();
+        let once = Evolution::flop_vs_bw_2x().apply(&d);
+        let twice = Evolution::flop_vs_bw_2x().apply(&once);
+        let direct = Evolution::flop_vs_bw_4x().apply(&d);
+        assert!((twice.peak_flops_f16 - direct.peak_flops_f16).abs() < 1.0);
+    }
+}

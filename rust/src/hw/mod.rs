@@ -1,0 +1,71 @@
+//! Hardware model: device specifications, a real-GPU catalog, the
+//! size-dependent efficiency curves the empirical analysis observed
+//! (§4.3.5 "smaller communication sizes do not fully use the network
+//! bandwidth"), and the flop-vs-bw hardware-evolution model (§4.3.6).
+
+pub mod catalog;
+pub mod efficiency;
+pub mod evolution;
+
+pub use catalog::{catalog, find_device};
+pub use efficiency::EfficiencyCurves;
+pub use evolution::Evolution;
+
+use crate::model::Precision;
+
+/// Specification of one accelerator + its interconnect.
+///
+/// Bandwidths are bytes/second, compute is FLOP/s. `ring_ar_bw` is the
+/// aggregate ring-all-reduce bandwidth the topology sustains (the paper's
+/// MI210 node: 100 GB/s links forming rings with 150 GB/s AR bandwidth).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceSpec {
+    pub name: String,
+    pub year: u32,
+    /// Peak matrix FLOP/s by precision.
+    pub peak_flops_f32: f64,
+    pub peak_flops_f16: f64,
+    /// HBM bandwidth, bytes/s.
+    pub mem_bw: f64,
+    /// HBM capacity, bytes.
+    pub mem_capacity: u64,
+    /// Per-link bandwidth, bytes/s (bidirectional aggregate per link).
+    pub link_bw: f64,
+    /// Sustained ring all-reduce bandwidth, bytes/s.
+    pub ring_ar_bw: f64,
+    /// Per-hop link latency, seconds.
+    pub link_latency: f64,
+}
+
+impl DeviceSpec {
+    pub fn peak_flops(&self, p: Precision) -> f64 {
+        match p {
+            Precision::F32 => self.peak_flops_f32,
+            Precision::F16 | Precision::BF16 => self.peak_flops_f16,
+            // §6.2: peak compute scales ≥ linearly as bits drop; we model
+            // fp8 at 2× fp16 (the conservative linear scaling).
+            Precision::F8 => 2.0 * self.peak_flops_f16,
+        }
+    }
+
+    /// The paper's flop-vs-bw figure of merit: peak fp16 FLOPs per
+    /// byte/s of ring-AR bandwidth.
+    pub fn flop_per_byte(&self) -> f64 {
+        self.peak_flops_f16 / self.ring_ar_bw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn precision_selects_peak() {
+        let d = catalog::mi210();
+        assert!(d.peak_flops(Precision::F16) > d.peak_flops(Precision::F32));
+        assert_eq!(
+            d.peak_flops(Precision::F8),
+            2.0 * d.peak_flops(Precision::F16)
+        );
+    }
+}

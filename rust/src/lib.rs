@@ -1,0 +1,76 @@
+//! # commscale
+//!
+//! Reproduction of *"Computation vs. Communication Scaling for Future
+//! Transformers on Future Hardware"* (Pati et al., 2023): a multi-axial
+//! (algorithmic, empirical, hardware-evolution) analysis of how compute and
+//! communication scale relative to one another in distributed Transformer
+//! training.
+//!
+//! The crate is the Layer-3 coordinator of a three-layer Rust + JAX + Pallas
+//! stack (see `DESIGN.md`):
+//!
+//! * [`model`] — Transformer hyperparameters, the published-model zoo
+//!   (Table 2), parameter/memory accounting, and the paper's Eq. 1–9
+//!   op/byte complexities.
+//! * [`hw`] — device specifications, a real-GPU catalog, size-dependent
+//!   efficiency curves, and the flop-vs-bw hardware-evolution model.
+//! * [`collectives`] — analytic collective cost models (ring/tree
+//!   all-reduce, reduce-scatter, all-gather, all-to-all) and a *real*
+//!   shared-memory ring all-reduce used by the data-parallel trainer.
+//! * [`graph`] — the per-layer operator graph (GEMMs, LayerNorm, ARs) with
+//!   serialized-vs-overlappable communication classes.
+//! * [`sim`] — a discrete-event simulator with per-device compute and
+//!   communication streams and overlap accounting.
+//! * [`opmodel`] — the paper's operator-level runtime models: fit on a
+//!   profiled baseline, project hundreds of configurations (§4.2.2).
+//! * [`profiler`] — ROI extraction: measures ground-truth operator times by
+//!   executing the AOT artifacts through PJRT.
+//! * [`runtime`] — the PJRT CPU client wrapper that loads and executes
+//!   `artifacts/*.hlo.txt`.
+//! * [`analysis`] — per-figure/table data generators (Figs 6–15, Table 2/3).
+//! * [`coordinator`] — the data-parallel training driver (end-to-end
+//!   validation: real gradients, real ring all-reduce, real loss curve).
+//! * [`report`] — table/CSV/ASCII-chart rendering.
+//! * [`util`] — hand-rolled substrates (JSON, PRNG, statistics, CLI) —
+//!   the build is fully offline, so these have no external dependencies.
+
+pub mod analysis;
+pub mod collectives;
+pub mod config;
+pub mod coordinator;
+pub mod graph;
+pub mod hw;
+pub mod model;
+pub mod opmodel;
+pub mod profiler;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("json error: {0}")]
+    Json(String),
+    #[error("manifest error: {0}")]
+    Manifest(String),
+    #[error("xla error: {0}")]
+    Xla(String),
+    #[error("config error: {0}")]
+    Config(String),
+    #[error("simulation error: {0}")]
+    Sim(String),
+    #[error("opmodel error: {0}")]
+    OpModel(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,558 @@
+//! `commscale` CLI — regenerates every table and figure of the paper and
+//! drives the profiler and the end-to-end DP trainer.
+//!
+//! ```text
+//! commscale table2|table3|fig6|fig7|fig9b|fig10|fig11|fig12|fig13|fig14
+//! commscale fig15 [--measure] [--profile PATH]
+//! commscale speedup
+//! commscale profile [--reps N] [--out PATH]          # ROI ground truth
+//! commscale train [--model small] [--dp 4] [--steps 100] [--csv PATH]
+//! commscale all                                      # every projection figure
+//! ```
+//!
+//! Common options: `--device mi210|a100|v100|mi50|mi100`, `--csv PATH`.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use commscale::analysis::{
+    accuracy, algorithmic, case_study, evolution, memory_trends, overlapped,
+    serialized,
+};
+use commscale::config::SweepGrid;
+use commscale::coordinator::Trainer;
+use commscale::hw::{catalog, DeviceSpec};
+use commscale::model::{zoo, Precision};
+use commscale::opmodel::SpeedupAccounting;
+use commscale::profiler::{self, ProfileDb};
+use commscale::report::{ascii_bar_chart, ascii_line_chart, fmt_secs, Series, Table};
+use commscale::runtime::Runtime;
+use commscale::sim::AnalyticCost;
+use commscale::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("help");
+    let device = find_device(&args)?;
+
+    match cmd {
+        "table2" => table2(&args),
+        "table3" => table3(&args),
+        "fig6" => fig6(&args),
+        "fig7" => fig7(&args),
+        "fig9b" => fig9b(&args),
+        "fig10" => fig10(&args, &device),
+        "fig11" => fig11(&args, &device),
+        "fig12" => fig12(&args, &device),
+        "fig13" => fig13(&args, &device),
+        "fig14" => fig14(&args, &device),
+        "fig15" => fig15(&args),
+        "speedup" => speedup(&args, &device),
+        "profile" => profile(&args),
+        "train" => train(&args),
+        // hidden: repeatedly execute one artifact with zero inputs
+        // (leak hunting / profiling): commscale exec-loop <name> [--reps N]
+        "exec-loop" => {
+            let rt = open_runtime(&args)?;
+            let name = args.positional.get(1).context("artifact name")?;
+            let reps = args.get_usize("reps", 50);
+            let t = rt.time_artifact(name, reps)?;
+            println!("{name}: median {} over {reps} reps", fmt_secs(t));
+            Ok(())
+        }
+        "all" => {
+            for c in [
+                "table2", "table3", "fig6", "fig7", "fig9b", "fig10", "fig11",
+                "fig12", "fig13", "fig14",
+            ] {
+                println!("\n================ {c} ================");
+                run_sub(c, &args, &device)?;
+            }
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}; see `commscale help`"),
+    }
+}
+
+const HELP: &str = "\
+commscale — Comp-vs.-Comm scaling analysis (Pati et al., 2023 reproduction)
+
+paper artifacts:
+  table2            model-zoo hyperparameters
+  table3            studied parameter grid
+  fig6              model memory demand vs device capacity trends
+  fig7              algorithmic slack & edge, normalized to BERT
+  fig9b             required TP scaling per model
+  fig10             serialized (TP) comm fraction vs TP/H/SL
+  fig11             overlapped (DP) comm as % of compute vs SL*B/H
+  fig12             fig10 under 2x/4x flop-vs-bw hardware evolution
+  fig13             fig11 under 2x/4x flop-vs-bw hardware evolution
+  fig14             end-to-end case study (H=64K, SL=4K, TP=128)
+  fig15 [--measure] operator-model accuracy vs PJRT-measured ground truth
+  speedup           profiling-cost reduction accounting (the 2100x claim)
+  all               every projection figure/table in sequence
+
+measurement / training:
+  profile [--reps N] [--out profiles/profile.json] [--ar-ranks 4]
+  train [--model tiny|small|base100m] [--dp 4] [--steps 100] [--csv f.csv]
+
+common options:
+  --device mi210|a100|v100|mi50|mi100   (default mi210, the paper's testbed)
+  --csv PATH                            write the table as CSV
+  --artifacts DIR                       AOT artifacts dir (default artifacts/)
+";
+
+fn run_sub(cmd: &str, args: &Args, device: &DeviceSpec) -> Result<()> {
+    match cmd {
+        "table2" => table2(args),
+        "table3" => table3(args),
+        "fig6" => fig6(args),
+        "fig7" => fig7(args),
+        "fig9b" => fig9b(args),
+        "fig10" => fig10(args, device),
+        "fig11" => fig11(args, device),
+        "fig12" => fig12(args, device),
+        "fig13" => fig13(args, device),
+        "fig14" => fig14(args, device),
+        _ => unreachable!(),
+    }
+}
+
+fn find_device(args: &Args) -> Result<DeviceSpec> {
+    let name = args.get_or("device", "mi210");
+    catalog::find_device(name)
+        .with_context(|| format!("unknown device {name:?} (see catalog)"))
+}
+
+fn open_runtime(args: &Args) -> Result<Runtime> {
+    let dir = args.get_or("artifacts", "artifacts");
+    Runtime::open(Path::new(dir))
+        .with_context(|| format!("cannot open artifacts dir {dir:?}; run `make artifacts`"))
+}
+
+fn csv(args: &Args) -> Option<&str> {
+    args.get("csv")
+}
+
+// ---------------------------------------------------------------------------
+// tables
+// ---------------------------------------------------------------------------
+
+fn table2(args: &Args) -> Result<()> {
+    let mut t = Table::new(
+        "Table 2 — NLP model hyperparameters",
+        &["model", "year", "layers", "H", "heads", "size(B)", "type", "SL", "FC dim"],
+    );
+    for e in zoo::zoo() {
+        if e.futuristic {
+            continue;
+        }
+        t.row(vec![
+            e.name.to_string(),
+            e.year.to_string(),
+            e.layers.to_string(),
+            e.hidden.to_string(),
+            e.heads.to_string(),
+            format!("{}", e.size_b),
+            e.kind.to_string(),
+            e.seq_len.to_string(),
+            e.fc_dim.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    t.maybe_write_csv(csv(args))?;
+    Ok(())
+}
+
+fn table3(args: &Args) -> Result<()> {
+    let g = SweepGrid::default();
+    let mut t = Table::new(
+        "Table 3 — parameters and setup of models studied",
+        &["parameter", "values"],
+    );
+    let fmt = |v: &[u64]| {
+        v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(", ")
+    };
+    t.row(vec!["H".into(), fmt(&g.hidden)]);
+    t.row(vec!["B".into(), fmt(&g.batch)]);
+    t.row(vec!["SL".into(), fmt(&g.seq_len)]);
+    t.row(vec!["TP degree".into(), fmt(&g.tp)]);
+    t.row(vec!["DP degree".into(), "any".into()]);
+    t.row(vec![
+        "serialized projections".into(),
+        g.serialized_projection_count().to_string(),
+    ]);
+    print!("{}", t.render());
+    t.maybe_write_csv(csv(args))?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// figures
+// ---------------------------------------------------------------------------
+
+fn fig6(args: &Args) -> Result<()> {
+    let rows = memory_trends::fig6();
+    let mut t = Table::new(
+        "Fig 6 — model memory demand (H*SL, normalized) vs device capacity",
+        &["model", "year", "demand(xBERT)", "capacity(x2018)", "gap"],
+    );
+    for r in &rows {
+        t.row(vec![
+            r.name.clone(),
+            r.year.to_string(),
+            format!("{:.1}", r.demand_norm),
+            format!("{:.1}", r.capacity_norm),
+            format!("{:.1}", r.gap),
+        ]);
+    }
+    print!("{}", t.render());
+    let s = vec![
+        Series::new(
+            "demand (H*SL, xBERT)",
+            rows.iter().map(|r| (r.year as f64, r.demand_norm.log2())).collect(),
+        ),
+        Series::new(
+            "capacity (x2018)",
+            rows.iter().map(|r| (r.year as f64, r.capacity_norm.log2())).collect(),
+        ),
+    ];
+    println!("{}", ascii_line_chart("log2 scaling vs year", &s, 64, 14, false));
+    t.maybe_write_csv(csv(args))?;
+    Ok(())
+}
+
+fn fig7(args: &Args) -> Result<()> {
+    let rows = algorithmic::fig7();
+    let mut t = Table::new(
+        "Fig 7 — algorithmic slack (SL*B) and edge ((H+SL)/TP), normalized to BERT",
+        &["model", "year", "B", "TP", "slack_norm", "edge_norm"],
+    );
+    for r in &rows {
+        t.row(vec![
+            r.name.clone(),
+            r.year.to_string(),
+            r.batch.to_string(),
+            r.tp.to_string(),
+            format!("{:.3}", r.slack_norm),
+            format!("{:.3}", r.edge_norm),
+        ]);
+    }
+    print!("{}", t.render());
+    let s = vec![
+        Series::new(
+            "slack (SL*B)",
+            rows.iter().enumerate().map(|(i, r)| (i as f64, r.slack_norm)).collect(),
+        ),
+        Series::new(
+            "edge ((H+SL)/TP)",
+            rows.iter().enumerate().map(|(i, r)| (i as f64, r.edge_norm)).collect(),
+        ),
+    ];
+    println!(
+        "{}",
+        ascii_line_chart("normalized to BERT (x = model index)", &s, 64, 12, false)
+    );
+    t.maybe_write_csv(csv(args))?;
+    Ok(())
+}
+
+fn fig9b(args: &Args) -> Result<()> {
+    let rows = algorithmic::fig9b();
+    let mut t = Table::new(
+        "Fig 9b — TP scaling (p/s) since Mega.-LM_BERT (base TP = 8)",
+        &["model", "size(B)", "p", "s", "p/s", "required TP"],
+    );
+    for r in &rows {
+        t.row(vec![
+            r.name.clone(),
+            format!("{}", r.size_b),
+            format!("{:.1}", r.p),
+            format!("{:.2}", r.s),
+            format!("{:.1}", r.scale),
+            format!("{:.0}", 8.0 * r.scale),
+        ]);
+    }
+    print!("{}", t.render());
+    t.maybe_write_csv(csv(args))?;
+    Ok(())
+}
+
+fn fig10(args: &Args, device: &DeviceSpec) -> Result<()> {
+    let pts = serialized::fig10(device);
+    let mut t = Table::new(
+        &format!("Fig 10 — fraction of serialized comm time ({})", device.name),
+        &["series", "TP", "comm %"],
+    );
+    let mut series: Vec<Series> = Vec::new();
+    for (label, _, _) in commscale::config::fig10_series() {
+        let points: Vec<(f64, f64)> = pts
+            .iter()
+            .filter(|p| p.series == label)
+            .map(|p| (p.tp as f64, 100.0 * p.comm_fraction))
+            .collect();
+        series.push(Series::new(label, points));
+    }
+    for p in &pts {
+        t.row(vec![
+            p.series.clone(),
+            p.tp.to_string(),
+            format!("{:.1}", 100.0 * p.comm_fraction),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "{}",
+        ascii_line_chart("serialized comm % vs TP (log2)", &series, 64, 16, true)
+    );
+    println!("highlighted (model @ its required TP):");
+    for (name, h, sl, tp) in serialized::highlighted_points() {
+        let f = serialized::simulate_point(device, h, sl, tp).comm_fraction();
+        println!("  {name:<12} H={h:<6} SL={sl:<5} TP={tp:<4} -> {:.1}%", 100.0 * f);
+    }
+    t.maybe_write_csv(csv(args))?;
+    Ok(())
+}
+
+fn fig11(args: &Args, device: &DeviceSpec) -> Result<()> {
+    let pts = overlapped::fig11(device);
+    let mut t = Table::new(
+        &format!("Fig 11 — overlapped comm as % of compute time ({})", device.name),
+        &["H", "SL*B", "comm % of compute", "exposed?"],
+    );
+    let mut series: Vec<Series> = Vec::new();
+    for &h in &commscale::config::fig11_hidden_series() {
+        let points: Vec<(f64, f64)> = pts
+            .iter()
+            .filter(|p| p.hidden == h)
+            .map(|p| (p.slb as f64, p.pct_of_compute))
+            .collect();
+        series.push(Series::new(&format!("H={}K", h / 1024), points));
+    }
+    for p in &pts {
+        t.row(vec![
+            p.hidden.to_string(),
+            p.slb.to_string(),
+            format!("{:.1}", p.pct_of_compute),
+            if p.exposed { "yes" } else { "no" }.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "{}",
+        ascii_line_chart("overlapped comm % vs SL*B (log2)", &series, 64, 16, true)
+    );
+    t.maybe_write_csv(csv(args))?;
+    Ok(())
+}
+
+fn fig12(args: &Args, device: &DeviceSpec) -> Result<()> {
+    let mut t = Table::new(
+        &format!(
+            "Fig 12 — serialized comm fraction under hardware evolution ({})",
+            device.name
+        ),
+        &["flop-vs-bw", "series", "TP", "comm %"],
+    );
+    for (ratio, pts) in evolution::fig12(device, &evolution::paper_scenarios()) {
+        for p in pts {
+            t.row(vec![
+                format!("{ratio:.0}x"),
+                p.series.clone(),
+                p.tp.to_string(),
+                format!("{:.1}", 100.0 * p.comm_fraction),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+    println!("comm-fraction band over highlighted configs:");
+    for ev in evolution::paper_scenarios() {
+        let (lo, hi) = evolution::comm_fraction_band(device, ev);
+        println!(
+            "  {:>3.0}x flop-vs-bw: {:>4.1}% – {:>4.1}%",
+            ev.ratio(),
+            100.0 * lo,
+            100.0 * hi
+        );
+    }
+    t.maybe_write_csv(csv(args))?;
+    Ok(())
+}
+
+fn fig13(args: &Args, device: &DeviceSpec) -> Result<()> {
+    let mut t = Table::new(
+        &format!(
+            "Fig 13 — overlapped comm %% of compute under hardware evolution ({})",
+            device.name
+        ),
+        &["flop-vs-bw", "H", "SL*B", "comm % of compute"],
+    );
+    for (ratio, pts) in evolution::fig13(device, &evolution::paper_scenarios()) {
+        for p in pts {
+            t.row(vec![
+                format!("{ratio:.0}x"),
+                p.hidden.to_string(),
+                p.slb.to_string(),
+                format!("{:.1}", p.pct_of_compute),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+    for ev in evolution::paper_scenarios() {
+        let n = evolution::fig13_exposed_count(device, ev);
+        println!(
+            "  {:>3.0}x: {n}/30 grid points have comm >= 100% of compute (exposed)",
+            ev.ratio()
+        );
+    }
+    t.maybe_write_csv(csv(args))?;
+    Ok(())
+}
+
+fn fig14(args: &Args, device: &DeviceSpec) -> Result<()> {
+    let scenarios = case_study::fig14(device);
+    let mut t = Table::new(
+        "Fig 14 — end-to-end case study (H=64K, B=1, SL=4K, TP=128, DP=4)",
+        &["scenario", "compute %", "TP comm %", "DP exposed %", "DP hidden %", "critical comm %"],
+    );
+    for s in &scenarios {
+        t.row(vec![
+            s.name.clone(),
+            format!("{:.1}", 100.0 * s.compute_frac),
+            format!("{:.1}", 100.0 * s.serialized_frac),
+            format!("{:.1}", 100.0 * s.dp_exposed_frac),
+            format!("{:.1}", 100.0 * s.dp_hidden_frac),
+            format!("{:.1}", 100.0 * s.critical_comm_frac()),
+        ]);
+    }
+    print!("{}", t.render());
+    for s in &scenarios {
+        let bars = vec![
+            ("compute".to_string(), s.compute_frac),
+            ("TP comm (serialized)".to_string(), s.serialized_frac),
+            ("DP comm exposed".to_string(), s.dp_exposed_frac),
+            ("DP comm hidden".to_string(), s.dp_hidden_frac),
+        ];
+        println!("{}", ascii_bar_chart(&s.name, &bars, 48));
+    }
+    t.maybe_write_csv(csv(args))?;
+    Ok(())
+}
+
+fn fig15(args: &Args) -> Result<()> {
+    let profile_path = args.get_or("profile", "profiles/profile.json");
+    let db = if args.has("measure") || !Path::new(profile_path).exists() {
+        println!("measuring ROI ground truth via PJRT (once; cached to {profile_path})");
+        let rt = open_runtime(args)?;
+        let mut db = profiler::profile_rois(&rt, args.get_usize("reps", 5))?;
+        profiler::profile_allreduce(
+            &mut db,
+            args.get_usize("ar-ranks", 4),
+            &[1 << 14, 1 << 16, 1 << 18, 1 << 20, 1 << 22, 1 << 24],
+            5,
+        );
+        db.save(Path::new(profile_path))?;
+        db
+    } else {
+        ProfileDb::load(Path::new(profile_path))?
+    };
+
+    let data = accuracy::fig15(&db)?;
+    for rep in [&data.gemm_sl, &data.gemm_h, &data.layernorm]
+        .into_iter()
+        .chain(data.allreduce.iter())
+    {
+        let mut t = Table::new(
+            &format!("Fig 15 — {}", rep.name),
+            &["point", "measured", "projected", "err %"],
+        );
+        for (label, meas, pred) in &rep.points {
+            t.row(vec![
+                label.clone(),
+                fmt_secs(*meas),
+                fmt_secs(*pred),
+                format!("{:.1}", 100.0 * ((pred - meas) / meas).abs()),
+            ]);
+        }
+        print!("{}", t.render());
+        println!(
+            "  geomean error {:.1}%   mean error {:.1}%   max error {:.1}% \
+             (max = smallest size, the paper's §4.3.8 caveat)\n",
+            rep.geomean_error_pct(),
+            rep.mean_error_pct(),
+            rep.max_error_pct()
+        );
+    }
+    Ok(())
+}
+
+fn speedup(args: &Args, device: &DeviceSpec) -> Result<()> {
+    let cost = AnalyticCost::new(device.clone(), Precision::F16, 8, 1);
+    let baseline = args.get_f64("baseline-iter", 0.45);
+    let acc = SpeedupAccounting::estimate(&SweepGrid::default(), &cost, baseline);
+    println!("profiling-cost accounting (§4.3.8):");
+    println!("  configurations projected : {}", acc.configs);
+    println!("  exhaustive execution     : {}", fmt_secs(acc.exhaustive_secs));
+    println!("  strategy (1 baseline)    : {}", fmt_secs(acc.strategy_secs));
+    println!("  speedup                  : {:.0}x (paper: 2100x)", acc.speedup());
+    Ok(())
+}
+
+fn profile(args: &Args) -> Result<()> {
+    let rt = open_runtime(args)?;
+    println!("platform: {}", rt.platform());
+    let reps = args.get_usize("reps", 5);
+    let mut db = profiler::profile_rois(&rt, reps)?;
+    profiler::profile_allreduce(
+        &mut db,
+        args.get_usize("ar-ranks", 4),
+        &[1 << 14, 1 << 16, 1 << 18, 1 << 20, 1 << 22, 1 << 24],
+        reps,
+    );
+    let out = args.get_or("out", "profiles/profile.json");
+    db.save(Path::new(out))?;
+    println!("wrote {} entries + {} AR points to {out}", db.entries.len(), db.allreduce.len());
+    Ok(())
+}
+
+fn train(args: &Args) -> Result<()> {
+    let rt = open_runtime(args)?;
+    let model = args.get_or("model", "small");
+    let dp = args.get_usize("dp", 4);
+    let steps = args.get_usize("steps", 100);
+    println!(
+        "training {model} (params: {}) with DP={dp} for {steps} steps on {}",
+        rt.manifest.config(model)?.param_count,
+        rt.platform()
+    );
+    let mut tr = Trainer::new(&rt, model, dp, args.get_usize("seed", 42) as u64)?;
+    tr.run(steps, args.get_usize("log-every", 10))?;
+    let h = &tr.history;
+    let first = h.first().map(|s| s.loss).unwrap_or(0.0);
+    let last = h.last().map(|s| s.loss).unwrap_or(0.0);
+    let grad: f64 = h.iter().map(|s| s.grad_secs).sum();
+    let ar: f64 = h.iter().map(|s| s.ar_secs).sum();
+    let apply: f64 = h.iter().map(|s| s.apply_secs).sum();
+    println!("\nloss: {first:.4} -> {last:.4}");
+    println!(
+        "time: grad {} | allreduce {} | apply {} | comm fraction {:.1}%",
+        fmt_secs(grad),
+        fmt_secs(ar),
+        fmt_secs(apply),
+        100.0 * ar / (grad + ar + apply)
+    );
+    if let Some(path) = csv(args) {
+        tr.write_csv(path)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}

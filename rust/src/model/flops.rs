@@ -1,0 +1,227 @@
+//! The paper's algorithmic complexity accounting: Eqs. 1–9 (§3.3–§3.4).
+//!
+//! Everything here is exact operation/byte counting — no hardware model.
+//! The counts drive both the algorithmic analysis (Fig 7) and the operator
+//! graph the simulator executes (whose GEMM dimensions must reproduce
+//! exactly these totals — asserted in `graph::tests`).
+
+use super::ModelConfig;
+
+/// Number format of weights/activations on the wire and in the MXU.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    F32,
+    F16,
+    BF16,
+    F8,
+}
+
+impl Precision {
+    pub fn bytes(self) -> u64 {
+        match self {
+            Precision::F32 => 4,
+            Precision::F16 | Precision::BF16 => 2,
+            Precision::F8 => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F32 => "fp32",
+            Precision::F16 => "fp16",
+            Precision::BF16 => "bf16",
+            Precision::F8 => "fp8",
+        }
+    }
+}
+
+/// Per-layer operation and byte counts for one training iteration,
+/// all per-device (i.e. already divided by TP where the paper does).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerCounts {
+    /// Eq. 1: FC GEMM ops (fwd), 2·(4·H·H/TP·SL·B) per FC GEMM pair.
+    pub fc_gemm_flops: u64,
+    /// Eq. 2: attention GEMM ops (fwd), 2·(H/TP·SL·SL·B) (QKᵀ + PV).
+    pub attn_gemm_flops: u64,
+    /// Eq. 3: linear (QKV + out-proj) GEMM ops (fwd), 3·2·(H/TP·H·SL·B) + out.
+    pub linear_gemm_flops: u64,
+    /// Eq. 5: serialized (TP) all-reduce bytes per AR op = precision·H·SL·B.
+    pub tp_ar_bytes: u64,
+    /// Number of serialized AR ops per layer per iteration (§3.3: four).
+    pub tp_ar_count: u64,
+    /// Eq. 8: overlapped (DP) all-reduce bytes per layer =
+    /// precision · (layer params / TP).
+    pub dp_ar_bytes: u64,
+    /// Non-GEMM (LayerNorm/elementwise) bytes moved per layer fwd.
+    pub layernorm_bytes: u64,
+}
+
+impl LayerCounts {
+    /// Compute the paper's per-layer counts for a config.
+    pub fn of(c: &ModelConfig) -> LayerCounts {
+        let (h, sl, b, tp) = (c.hidden, c.seq_len, c.batch, c.tp);
+        let f = c.ffn();
+        let p = c.precision.bytes();
+
+        // Eq. 1 — both FC GEMMs (H→4H and 4H→H), column/row sliced by TP:
+        // 2·(M·N·K) each with (M,N,K) = (SL·B, f/TP, H) and (SL·B, H, f/TP).
+        let fc = 2 * (sl * b) * (f / tp) * h + 2 * (sl * b) * h * (f / tp);
+
+        // Eq. 2 — attention score (QKᵀ) and context (PV) GEMMs over heads/TP:
+        // per head 2·SL·SL·hd each; heads/TP per device ⇒ 2·2·H/TP·SL²·B.
+        let attn = 2 * 2 * (h / tp) * sl * sl * b;
+
+        // Eq. 3 — QKV projection (3 GEMMs worth) + output projection:
+        // 3·2·(SL·B)·(H/TP)·H + 2·(SL·B)·H·(H/TP).
+        let linear = 3 * 2 * (sl * b) * (h / tp) * h + 2 * (sl * b) * h * (h / tp);
+
+        // Eq. 5 — each serialized AR moves the full activation.
+        let tp_ar = p * h * sl * b;
+
+        // Eq. 8 — DP AR of this layer's weight gradients (sliced by TP).
+        // Layer params ≈ 4H² (attn) + 8H² (FC) = 12H² for ffn_mult = 4.
+        let layer_params = (3 * h * h) + (h * h) + (h * f) + (f * h);
+        let dp_ar = p * layer_params / tp;
+
+        // LayerNorm traffic: 2 norms/layer, read+write of [SL·B, H].
+        let ln = 2 * 2 * p * sl * b * h;
+
+        LayerCounts {
+            fc_gemm_flops: fc,
+            attn_gemm_flops: attn,
+            linear_gemm_flops: linear,
+            tp_ar_bytes: tp_ar,
+            tp_ar_count: 4,
+            dp_ar_bytes: dp_ar,
+            layernorm_bytes: ln,
+        }
+    }
+
+    /// Eq. 4 — total forward GEMM flops per layer per device.
+    pub fn fwd_gemm_flops(&self) -> u64 {
+        self.fc_gemm_flops + self.attn_gemm_flops + self.linear_gemm_flops
+    }
+
+    /// Backward GEMM flops: each fwd GEMM spawns a weight-gradient and an
+    /// input-gradient GEMM of the same size (Eq. 7's factor 4 = 2 GEMMs ×
+    /// the fwd pair) ⇒ 2× fwd.
+    pub fn bwd_gemm_flops(&self) -> u64 {
+        2 * self.fwd_gemm_flops()
+    }
+
+    /// Full-iteration GEMM flops (fwd + bwd).
+    pub fn iter_gemm_flops(&self) -> u64 {
+        self.fwd_gemm_flops() + self.bwd_gemm_flops()
+    }
+
+    /// Total serialized AR bytes per layer per iteration.
+    pub fn iter_tp_ar_bytes(&self) -> u64 {
+        self.tp_ar_count * self.tp_ar_bytes
+    }
+}
+
+/// Eq. 6 — compute's Amdahl's-Law edge, O((H + SL)/TP). Dimensionless.
+pub fn amdahl_edge(c: &ModelConfig) -> f64 {
+    (c.hidden + c.seq_len) as f64 / c.tp as f64
+}
+
+/// Eq. 9 — compute's slack advantage over overlapped DP comm, O(SL·B).
+pub fn slack_advantage(c: &ModelConfig) -> f64 {
+    (c.seq_len * c.batch) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            hidden: 1024,
+            seq_len: 512,
+            batch: 4,
+            layers: 24,
+            heads: 16,
+            ffn_mult: 4,
+            tp: 1,
+            dp: 1,
+            precision: Precision::F16,
+        }
+    }
+
+    #[test]
+    fn eq1_fc_gemm_matches_closed_form() {
+        let c = cfg();
+        let lc = LayerCounts::of(&c);
+        // Eq. 1: 2·(4·H·H·SL·B) per GEMM, two GEMMs ⇒ 2× that.
+        let expect = 2 * 2 * 4 * c.hidden * c.hidden * c.seq_len * c.batch;
+        assert_eq!(lc.fc_gemm_flops, expect);
+    }
+
+    #[test]
+    fn eq2_attention_quadratic_in_sl() {
+        let a = LayerCounts::of(&cfg().with_seq_len(512)).attn_gemm_flops;
+        let b = LayerCounts::of(&cfg().with_seq_len(1024)).attn_gemm_flops;
+        assert_eq!(b, 4 * a);
+    }
+
+    #[test]
+    fn eq3_linear_gemm_matches_closed_form() {
+        let c = cfg();
+        let lc = LayerCounts::of(&c);
+        let expect = 3 * 2 * c.hidden * c.hidden * c.seq_len * c.batch
+            + 2 * c.hidden * c.hidden * c.seq_len * c.batch;
+        assert_eq!(lc.linear_gemm_flops, expect);
+    }
+
+    #[test]
+    fn tp_slices_gemms_but_not_ar_bytes() {
+        let c1 = cfg().with_tp(1);
+        let c4 = cfg().with_tp(4);
+        let l1 = LayerCounts::of(&c1);
+        let l4 = LayerCounts::of(&c4);
+        assert_eq!(l1.fwd_gemm_flops(), 4 * l4.fwd_gemm_flops());
+        // Eq. 5: serialized AR bytes independent of TP.
+        assert_eq!(l1.tp_ar_bytes, l4.tp_ar_bytes);
+        // Eq. 8: DP AR bytes *are* sliced by TP.
+        assert_eq!(l1.dp_ar_bytes, 4 * l4.dp_ar_bytes);
+    }
+
+    #[test]
+    fn eq5_ar_bytes_formula() {
+        let c = cfg();
+        assert_eq!(
+            LayerCounts::of(&c).tp_ar_bytes,
+            c.precision.bytes() * c.hidden * c.seq_len * c.batch
+        );
+    }
+
+    #[test]
+    fn bwd_is_twice_fwd() {
+        let lc = LayerCounts::of(&cfg());
+        assert_eq!(lc.bwd_gemm_flops(), 2 * lc.fwd_gemm_flops());
+        assert_eq!(lc.iter_gemm_flops(), 3 * lc.fwd_gemm_flops());
+    }
+
+    #[test]
+    fn eq6_edge_and_eq9_slack() {
+        let c = cfg().with_tp(8);
+        assert_eq!(amdahl_edge(&c), (1024 + 512) as f64 / 8.0);
+        assert_eq!(slack_advantage(&c), (512 * 4) as f64);
+    }
+
+    #[test]
+    fn precision_bytes() {
+        assert_eq!(Precision::F32.bytes(), 4);
+        assert_eq!(Precision::F16.bytes(), 2);
+        assert_eq!(Precision::BF16.bytes(), 2);
+        assert_eq!(Precision::F8.bytes(), 1);
+    }
+
+    #[test]
+    fn fp16_halves_comm_bytes_vs_fp32() {
+        let a = LayerCounts::of(&cfg().with_precision(Precision::F32));
+        let b = LayerCounts::of(&cfg().with_precision(Precision::F16));
+        assert_eq!(a.tp_ar_bytes, 2 * b.tp_ar_bytes);
+        assert_eq!(a.dp_ar_bytes, 2 * b.dp_ar_bytes);
+    }
+}

@@ -1,0 +1,125 @@
+//! Memory-footprint accounting (drives Fig 6 and the TP-requirement model
+//! of §4.3.2 / Fig 9b).
+
+use super::ModelConfig;
+
+/// Bytes of device memory needed to *train* a model (per the common
+/// mixed-precision recipe the paper's references use):
+///   weights (p) + gradients (p) + Adam moments (2 × f32)
+/// plus activations for one microbatch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TrainingFootprint {
+    pub weight_bytes: u64,
+    pub grad_bytes: u64,
+    pub optimizer_bytes: u64,
+    pub activation_bytes: u64,
+}
+
+impl TrainingFootprint {
+    pub fn of(c: &ModelConfig) -> TrainingFootprint {
+        let params = c.param_count();
+        let p = c.precision.bytes();
+        // Activations: the dominant per-layer terms — the attention and FC
+        // intermediate activations that must be stashed for backprop:
+        // roughly (qkv 3H + attn H + fc 4H + residuals 2H) ≈ 10H per token.
+        let act_per_token = 10 * c.hidden * p as u64;
+        TrainingFootprint {
+            weight_bytes: params * p,
+            grad_bytes: params * p,
+            optimizer_bytes: params * 2 * 4, // two f32 Adam moments
+            activation_bytes: c.layers * c.seq_len * c.batch * act_per_token,
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.weight_bytes + self.grad_bytes + self.optimizer_bytes + self.activation_bytes
+    }
+}
+
+/// Required TP degree per the paper's §4.3.2 rule:
+/// `TP = base_TP · (p / s)` where `p` is the model-size ratio to the
+/// Megatron-BERT anchor (3.9B, TP=8) and `s` the device-memory capacity
+/// scaling between the anchor's era and the target device.
+pub fn required_tp(model_size_b: f64, capacity_scale: f64) -> f64 {
+    const ANCHOR_SIZE_B: f64 = 3.9;
+    const BASE_TP: f64 = 8.0;
+    BASE_TP * (model_size_b / ANCHOR_SIZE_B) / capacity_scale
+}
+
+/// Round a fractional TP requirement up to the next power of two (the
+/// slicing granularity every TP implementation uses).
+pub fn round_tp_pow2(tp: f64) -> u64 {
+    let mut v = 1u64;
+    while (v as f64) < tp {
+        v *= 2;
+    }
+    v
+}
+
+/// Memory-capacity trend for accelerators (Fig 6's second series):
+/// roughly linear, ~16 GB (2018, V100) to ~80 GB (2022, A100/H100 era).
+pub fn device_capacity_gb(year: u32) -> f64 {
+    // linear fit through (2018, 16), (2020, 40), (2022, 80)
+    let t = (year as f64 - 2018.0).max(0.0);
+    16.0 + 16.0 * t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn footprint_dominated_by_optimizer_at_small_batch() {
+        let c = ModelConfig::default().with_batch(1);
+        let f = TrainingFootprint::of(&c);
+        assert!(f.optimizer_bytes > f.weight_bytes); // 8 bytes vs 2 per param
+        assert!(f.total() > f.weight_bytes * 4);
+    }
+
+    #[test]
+    fn activation_bytes_scale_with_sl_b() {
+        let a = TrainingFootprint::of(&ModelConfig::default().with_batch(1));
+        let b = TrainingFootprint::of(&ModelConfig::default().with_batch(4));
+        assert_eq!(b.activation_bytes, 4 * a.activation_bytes);
+    }
+
+    #[test]
+    fn required_tp_matches_paper_range() {
+        // §4.3.2: "TP needs to be scaled by 40-60×, leading to a required
+        // TP degree of (×8) ~250-550" for MT-NLG/PaLM-class models,
+        // assuming some capacity scaling s.
+        let mt = zoo::find("MT-NLG").unwrap();
+        let s = 2.5; // 64GB-class devices vs the anchor's 32GB-class: ~2-3×
+        let tp = required_tp(mt.size_b, s);
+        assert!((250.0..600.0).contains(&tp), "tp {tp}");
+    }
+
+    #[test]
+    fn anchor_requires_tp8_at_unit_scale() {
+        assert!((required_tp(3.9, 1.0) - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn round_pow2() {
+        assert_eq!(round_tp_pow2(1.0), 1);
+        assert_eq!(round_tp_pow2(8.0), 8);
+        assert_eq!(round_tp_pow2(9.0), 16);
+        assert_eq!(round_tp_pow2(250.0), 256);
+    }
+
+    #[test]
+    fn capacity_trend_linear() {
+        assert!((device_capacity_gb(2018) - 16.0).abs() < 1e-9);
+        assert!((device_capacity_gb(2022) - 80.0).abs() < 1e-9);
+        // the paper's point: linear capacity vs quadratic model demand
+        let demand_ratio = {
+            let z = zoo::zoo();
+            let bert = z.iter().find(|e| e.name == "BERT").unwrap();
+            let palm = z.iter().find(|e| e.name == "PaLM").unwrap();
+            (palm.hidden * palm.seq_len) as f64 / (bert.hidden * bert.seq_len) as f64
+        };
+        let capacity_ratio = device_capacity_gb(2022) / device_capacity_gb(2018);
+        assert!(demand_ratio > 10.0 * capacity_ratio);
+    }
+}

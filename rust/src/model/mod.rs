@@ -1,0 +1,151 @@
+//! Transformer model descriptions: hyperparameters (Table 1), the
+//! published-model zoo (Table 2), memory accounting (Fig 6), and the
+//! paper's closed-form op/byte complexities (Eqs 1–9).
+
+pub mod flops;
+pub mod memory;
+pub mod zoo;
+
+pub use flops::{LayerCounts, Precision};
+pub use zoo::{zoo, ZooEntry};
+
+/// Hyperparameters of a (possibly sliced) Transformer training setup.
+///
+/// Follows the paper's Table 1 naming: `hidden` = H, `seq_len` = SL,
+/// `batch` = B, `tp` = tensor-parallel degree. `ffn_mult` is the FC
+/// expansion (4 for every model in Table 2 up to rounding — the paper's
+/// Eq. 1 hard-codes the factor 4).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelConfig {
+    pub hidden: u64,
+    pub seq_len: u64,
+    pub batch: u64,
+    pub layers: u64,
+    pub heads: u64,
+    pub ffn_mult: u64,
+    pub tp: u64,
+    pub dp: u64,
+    pub precision: Precision,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        // BERT-large-ish baseline, the paper's anchor model (§2.1).
+        ModelConfig {
+            hidden: 1024,
+            seq_len: 512,
+            batch: 4,
+            layers: 24,
+            heads: 16,
+            ffn_mult: 4,
+            tp: 1,
+            dp: 1,
+            precision: Precision::F16,
+        }
+    }
+}
+
+impl ModelConfig {
+    pub fn with_hidden(mut self, h: u64) -> Self {
+        self.hidden = h;
+        self
+    }
+    pub fn with_seq_len(mut self, sl: u64) -> Self {
+        self.seq_len = sl;
+        self
+    }
+    pub fn with_batch(mut self, b: u64) -> Self {
+        self.batch = b;
+        self
+    }
+    pub fn with_layers(mut self, l: u64) -> Self {
+        self.layers = l;
+        self
+    }
+    pub fn with_tp(mut self, tp: u64) -> Self {
+        self.tp = tp;
+        self
+    }
+    pub fn with_dp(mut self, dp: u64) -> Self {
+        self.dp = dp;
+        self
+    }
+    pub fn with_precision(mut self, p: Precision) -> Self {
+        self.precision = p;
+        self
+    }
+
+    pub fn ffn(&self) -> u64 {
+        self.ffn_mult * self.hidden
+    }
+
+    /// Validity: TP must divide the head count and the FC dimension.
+    pub fn validate(&self) -> crate::Result<()> {
+        if self.hidden == 0 || self.seq_len == 0 || self.batch == 0 || self.layers == 0 {
+            return Err(crate::Error::Config("zero-sized dimension".into()));
+        }
+        if self.heads == 0 || self.hidden % self.heads != 0 {
+            return Err(crate::Error::Config(format!(
+                "heads {} must divide hidden {}",
+                self.heads, self.hidden
+            )));
+        }
+        if self.tp == 0 || self.heads % self.tp != 0 {
+            return Err(crate::Error::Config(format!(
+                "tp {} must divide heads {}",
+                self.tp, self.heads
+            )));
+        }
+        Ok(())
+    }
+
+    /// Total parameter count of the dense Transformer stack
+    /// (per-layer: QKV 3H²+3H, out H²+H, FC 2·f·H + f + H, 2 LayerNorms).
+    pub fn param_count(&self) -> u64 {
+        let h = self.hidden;
+        let f = self.ffn();
+        let per_layer =
+            (3 * h * h + 3 * h) + (h * h + h) + (h * f + f) + (f * h + h) + 4 * h;
+        self.layers * per_layer
+    }
+
+    /// The paper's H·SL memory-demand proxy (Fig 6).
+    pub fn memory_proxy(&self) -> u64 {
+        self.hidden * self.seq_len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_bert_large_scale() {
+        let c = ModelConfig::default();
+        c.validate().unwrap();
+        // BERT-large: ~0.30B params in Table 2 (0.34B counting embeddings,
+        // which Eq. 1–3 exclude since they are not per-layer GEMMs).
+        let b = c.param_count() as f64 / 1e9;
+        assert!((0.25..0.35).contains(&b), "params {b} B");
+    }
+
+    #[test]
+    fn param_count_quadratic_in_h() {
+        let a = ModelConfig::default().with_hidden(1024).param_count();
+        let b = ModelConfig::default().with_hidden(2048).param_count();
+        let ratio = b as f64 / a as f64;
+        assert!((3.9..4.1).contains(&ratio), "ratio {ratio}"); // ≈ 4×
+    }
+
+    #[test]
+    fn validate_rejects_bad_tp() {
+        assert!(ModelConfig::default().with_tp(3).validate().is_err());
+        assert!(ModelConfig::default().with_tp(8).validate().is_ok());
+    }
+
+    #[test]
+    fn memory_proxy_matches_paper() {
+        let c = ModelConfig::default().with_hidden(20_480).with_seq_len(2048);
+        assert_eq!(c.memory_proxy(), 20_480 * 2048);
+    }
+}

@@ -1,0 +1,203 @@
+//! The published-model zoo — the paper's Table 2, plus the futuristic
+//! models its projections use (T-NLG-like, PALM-1x, PALM-3x; §4.3.4).
+
+use super::{flops::Precision, ModelConfig};
+
+/// One row of Table 2 (plus derived/futuristic entries).
+#[derive(Debug, Clone)]
+pub struct ZooEntry {
+    pub name: &'static str,
+    pub year: u32,
+    pub layers: u64,
+    pub hidden: u64,
+    pub heads: u64,
+    /// Published parameter count, in billions (Table 2's "Size(B)" row).
+    pub size_b: f64,
+    pub kind: &'static str, // "encoder" | "decoder" | "enc-dec"
+    pub seq_len: u64,
+    pub fc_dim: u64,
+    /// Is this a published model (Table 2) or a futuristic projection?
+    pub futuristic: bool,
+}
+
+impl ZooEntry {
+    /// Convert to a `ModelConfig` at a given batch/TP.
+    pub fn config(&self, batch: u64, tp: u64) -> ModelConfig {
+        ModelConfig {
+            hidden: self.hidden,
+            seq_len: self.seq_len,
+            batch,
+            layers: self.layers,
+            heads: self.heads,
+            // Table 2's FC dim is ~4H for every model (up to rounding).
+            ffn_mult: (self.fc_dim + self.hidden - 1) / self.hidden,
+            tp,
+            dp: 1,
+            precision: Precision::F16,
+        }
+    }
+
+    /// Model size in bytes at a precision (weights only).
+    pub fn size_bytes(&self, precision: Precision) -> u64 {
+        (self.size_b * 1e9) as u64 * precision.bytes()
+    }
+}
+
+/// Table 2 verbatim, followed by the futuristic projections used in
+/// Figs 10–14 (PALM-1x ≈ H=16K and PALM-3x ≈ H=64K scale points).
+pub fn zoo() -> Vec<ZooEntry> {
+    let e = |name, year, layers, hidden, heads, size_b, kind, seq_len, fc_dim| ZooEntry {
+        name,
+        year,
+        layers,
+        hidden,
+        heads,
+        size_b,
+        kind,
+        seq_len,
+        fc_dim,
+        futuristic: false,
+    };
+    let mut v = vec![
+        e("BERT", 2018, 24, 1024, 16, 0.34, "encoder", 512, 4096),
+        e("T5", 2019, 24, 1024, 128, 11.0, "enc-dec", 512, 4096),
+        e("GPT-2", 2019, 48, 1600, 25, 1.54, "decoder", 1024, 6400),
+        e("Megatron-LM", 2019, 74, 3072, 24, 8.3, "decoder", 1024, 12288),
+        e("T-NLG", 2020, 78, 4256, 28, 17.0, "decoder", 1024, 17024),
+        e("GPT-3", 2020, 96, 12288, 96, 175.0, "decoder", 2048, 49152),
+        e("MT-NLG", 2021, 105, 20480, 128, 530.0, "decoder", 2048, 81920),
+        e("PaLM", 2022, 118, 18432, 48, 540.0, "decoder", 2048, 73728),
+    ];
+    // Futuristic scale points from §4.3.4 / Fig 10: a PALM-1x-class model
+    // (H = 16K) and a PALM-3x-class model (H = 64K), plus the T-NLG-like
+    // medium point (H = 4K) the figure anchors on.
+    v.push(ZooEntry {
+        name: "T-NLG-like",
+        year: 2023,
+        layers: 80,
+        hidden: 4096,
+        heads: 32,
+        size_b: 16.0,
+        kind: "decoder",
+        seq_len: 2048,
+        fc_dim: 16384,
+        futuristic: true,
+    });
+    v.push(ZooEntry {
+        name: "PALM-1x",
+        year: 2024,
+        layers: 120,
+        hidden: 16384,
+        heads: 128,
+        size_b: 386.0,
+        kind: "decoder",
+        seq_len: 2048,
+        fc_dim: 65536,
+        futuristic: true,
+    });
+    v.push(ZooEntry {
+        name: "PALM-3x",
+        year: 2026,
+        layers: 160,
+        hidden: 65536,
+        heads: 512,
+        size_b: 8200.0,
+        kind: "decoder",
+        seq_len: 4096,
+        fc_dim: 262144,
+        futuristic: true,
+    });
+    v
+}
+
+/// Find a zoo entry by (case-insensitive) name.
+pub fn find(name: &str) -> Option<ZooEntry> {
+    zoo().into_iter()
+        .find(|e| e.name.eq_ignore_ascii_case(name))
+}
+
+/// The paper's "Mega.-LM_BERT" anchor for TP-requirement scaling (§4.3.2):
+/// 3.9B-parameter Megatron-BERT, the first public TP=8 Transformer.
+pub fn megatron_bert_anchor() -> ZooEntry {
+    ZooEntry {
+        name: "Mega.-LM_BERT",
+        year: 2019,
+        layers: 48,
+        hidden: 2560,
+        heads: 40,
+        size_b: 3.9,
+        kind: "encoder",
+        seq_len: 512,
+        fc_dim: 10240,
+        futuristic: false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_has_eight_published_models() {
+        let published: Vec<_> = zoo().into_iter().filter(|e| !e.futuristic).collect();
+        assert_eq!(published.len(), 8);
+        assert_eq!(published[0].name, "BERT");
+        assert_eq!(published[7].name, "PaLM");
+    }
+
+    #[test]
+    fn table2_values_spotcheck() {
+        let gpt3 = find("GPT-3").unwrap();
+        assert_eq!(gpt3.hidden, 12288);
+        assert_eq!(gpt3.layers, 96);
+        assert_eq!(gpt3.seq_len, 2048);
+        assert!((gpt3.size_b - 175.0).abs() < 1e-9);
+        let mt = find("MT-NLG").unwrap();
+        assert_eq!(mt.hidden, 20480);
+        assert_eq!(mt.fc_dim, 81920);
+    }
+
+    #[test]
+    fn model_growth_is_three_orders_of_magnitude() {
+        // §1: models scaled ~1000× (BERT 0.34B → PaLM 540B).
+        let z = zoo();
+        let bert = z.iter().find(|e| e.name == "BERT").unwrap();
+        let palm = z.iter().find(|e| e.name == "PaLM").unwrap();
+        let ratio = palm.size_b / bert.size_b;
+        assert!(ratio > 1000.0, "growth ratio {ratio}");
+    }
+
+    #[test]
+    fn config_conversion_roundtrips_dimensions() {
+        let c = find("T-NLG").unwrap().config(1, 8);
+        assert_eq!(c.hidden, 4256);
+        assert_eq!(c.tp, 8);
+        assert_eq!(c.ffn(), c.ffn_mult * 4256);
+    }
+
+    #[test]
+    fn fc_dim_is_about_4h_for_all() {
+        for e in zoo() {
+            let mult = e.fc_dim as f64 / e.hidden as f64;
+            assert!((3.9..4.3).contains(&mult), "{}: {mult}", e.name);
+        }
+    }
+
+    #[test]
+    fn anchor_is_tp8_scale() {
+        let a = megatron_bert_anchor();
+        assert!((a.size_b - 3.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn futuristic_entries_cover_fig10_h_points() {
+        let hs: Vec<u64> = zoo()
+            .into_iter()
+            .filter(|e| e.futuristic)
+            .map(|e| e.hidden)
+            .collect();
+        assert!(hs.contains(&4096));
+        assert!(hs.contains(&16384));
+        assert!(hs.contains(&65536));
+    }
+}

@@ -1,0 +1,233 @@
+//! Profiler + ROI extraction (§4.2.2, step 2a).
+//!
+//! Measures ground-truth operator runtimes by executing the AOT HLO
+//! artifacts through PJRT (our substitute for rocProf on the paper's
+//! testbed) and the real shared-memory ring all-reduce. Results persist
+//! to a JSON profile so figure regeneration does not re-profile.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::collectives::ShmRing;
+use crate::runtime::Runtime;
+use crate::util::Json;
+use crate::{Error, Result};
+
+/// One profiled region of interest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProfileEntry {
+    pub name: String,
+    pub kind: String,
+    /// Operator metadata (m/n/k for GEMMs, rows/h for LayerNorm).
+    pub meta: BTreeMap<String, u64>,
+    /// Median wall-clock seconds.
+    pub secs: f64,
+}
+
+/// A persisted set of measurements.
+#[derive(Debug, Clone, Default)]
+pub struct ProfileDb {
+    pub entries: BTreeMap<String, ProfileEntry>,
+    /// Measured ring all-reduce curve: (bytes, seconds, ranks).
+    pub allreduce: Vec<(u64, f64, u64)>,
+}
+
+impl ProfileDb {
+    pub fn of_kind(&self, kind: &str) -> Vec<&ProfileEntry> {
+        self.entries.values().filter(|e| e.kind == kind).collect()
+    }
+
+    pub fn insert(&mut self, e: ProfileEntry) {
+        self.entries.insert(e.name.clone(), e);
+    }
+
+    /// Look up a GEMM profile by (m, n, k).
+    pub fn gemm(&self, m: u64, n: u64, k: u64) -> Option<&ProfileEntry> {
+        self.of_kind("roi_gemm").into_iter().find(|e| {
+            e.meta.get("m") == Some(&m)
+                && e.meta.get("n") == Some(&n)
+                && e.meta.get("k") == Some(&k)
+        })
+    }
+
+    /// Look up a LayerNorm profile by (rows, h).
+    pub fn layernorm(&self, rows: u64, h: u64) -> Option<&ProfileEntry> {
+        self.of_kind("roi_layernorm").into_iter().find(|e| {
+            e.meta.get("rows") == Some(&rows) && e.meta.get("h") == Some(&h)
+        })
+    }
+
+    // -- persistence ---------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let entries = Json::Obj(
+            self.entries
+                .iter()
+                .map(|(k, e)| {
+                    (
+                        k.clone(),
+                        Json::obj(vec![
+                            ("kind", Json::str(&e.kind)),
+                            (
+                                "meta",
+                                Json::Obj(
+                                    e.meta
+                                        .iter()
+                                        .map(|(mk, mv)| {
+                                            (mk.clone(), Json::num(*mv as f64))
+                                        })
+                                        .collect(),
+                                ),
+                            ),
+                            ("secs", Json::num(e.secs)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        let ar = Json::arr(self.allreduce.iter().map(|(b, s, n)| {
+            Json::obj(vec![
+                ("bytes", Json::num(*b as f64)),
+                ("secs", Json::num(*s)),
+                ("ranks", Json::num(*n as f64)),
+            ])
+        }));
+        Json::obj(vec![("entries", entries), ("allreduce", ar)])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ProfileDb> {
+        let mut db = ProfileDb::default();
+        for (name, e) in j
+            .req("entries")?
+            .as_obj()
+            .ok_or_else(|| Error::Json("entries not an object".into()))?
+        {
+            let mut meta = BTreeMap::new();
+            if let Some(m) = e.req("meta")?.as_obj() {
+                for (k, v) in m {
+                    if let Some(n) = v.as_u64() {
+                        meta.insert(k.clone(), n);
+                    }
+                }
+            }
+            db.insert(ProfileEntry {
+                name: name.clone(),
+                kind: e.str_field("kind")?.to_string(),
+                meta,
+                secs: e
+                    .req("secs")?
+                    .as_f64()
+                    .ok_or_else(|| Error::Json("secs not a number".into()))?,
+            });
+        }
+        for item in j.req("allreduce")?.as_arr().unwrap_or(&[]) {
+            db.allreduce.push((
+                item.u64_field("bytes")?,
+                item.req("secs")?.as_f64().unwrap_or(0.0),
+                item.u64_field("ranks")?,
+            ));
+        }
+        Ok(db)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_json().to_string_pretty(1))?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<ProfileDb> {
+        ProfileDb::from_json(&Json::parse_file(path)?)
+    }
+}
+
+/// Profile every `roi_*` artifact in the runtime's manifest.
+pub fn profile_rois(rt: &Runtime, reps: usize) -> Result<ProfileDb> {
+    let mut db = ProfileDb::default();
+    let names: Vec<(String, String, Json)> = rt
+        .manifest
+        .artifacts
+        .values()
+        .filter(|a| a.kind.starts_with("roi_"))
+        .map(|a| (a.name.clone(), a.kind.clone(), a.meta.clone()))
+        .collect();
+    for (name, kind, meta_json) in names {
+        let secs = rt.time_artifact(&name, reps)?;
+        let mut meta = BTreeMap::new();
+        if let Some(obj) = meta_json.as_obj() {
+            for (k, v) in obj {
+                if let Some(n) = v.as_u64() {
+                    meta.insert(k.clone(), n);
+                }
+            }
+        }
+        eprintln!("  profiled {name}: {:.3} ms", secs * 1e3);
+        db.insert(ProfileEntry { name, kind, meta, secs });
+    }
+    Ok(db)
+}
+
+/// Measure the real ring all-reduce across a size sweep and append to the
+/// profile (Fig 15c ground truth).
+pub fn profile_allreduce(db: &mut ProfileDb, ranks: usize, sizes: &[usize], reps: usize) {
+    let ring = ShmRing::new(ranks);
+    for (bytes, secs) in ring.measure_curve(sizes, reps) {
+        db.allreduce.push((bytes as u64, secs, ranks as u64));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_db() -> ProfileDb {
+        let mut db = ProfileDb::default();
+        db.insert(ProfileEntry {
+            name: "roi_gemm_m128_n512_k512".into(),
+            kind: "roi_gemm".into(),
+            meta: [("m", 128u64), ("n", 512), ("k", 512)]
+                .into_iter()
+                .map(|(k, v)| (k.to_string(), v))
+                .collect(),
+            secs: 1.25e-3,
+        });
+        db.allreduce.push((1 << 20, 3.2e-4, 4));
+        db
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let db = sample_db();
+        let j = db.to_json();
+        let back = ProfileDb::from_json(&j).unwrap();
+        assert_eq!(back.entries, db.entries);
+        assert_eq!(back.allreduce, db.allreduce);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let db = sample_db();
+        let path = std::env::temp_dir().join("commscale_profile_test.json");
+        db.save(&path).unwrap();
+        let back = ProfileDb::load(&path).unwrap();
+        assert_eq!(back.entries.len(), 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn gemm_lookup_by_dims() {
+        let db = sample_db();
+        assert!(db.gemm(128, 512, 512).is_some());
+        assert!(db.gemm(1, 2, 3).is_none());
+    }
+
+    #[test]
+    fn measure_allreduce_appends() {
+        let mut db = ProfileDb::default();
+        profile_allreduce(&mut db, 2, &[1024, 4096], 2);
+        assert_eq!(db.allreduce.len(), 2);
+        assert!(db.allreduce.iter().all(|(_, s, n)| *s > 0.0 && *n == 2));
+    }
+}

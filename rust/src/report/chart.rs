@@ -1,0 +1,137 @@
+//! ASCII charts — line charts for the paper's figures, bar charts for
+//! breakdowns (Fig 14). Terminal-friendly reproduction of each plot.
+
+/// One line-chart series: (x, y) points plus a label.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub label: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(label: &str, points: Vec<(f64, f64)>) -> Series {
+        Series { label: label.to_string(), points }
+    }
+}
+
+const MARKS: [char; 8] = ['*', 'o', '+', 'x', '#', '@', '%', '&'];
+
+/// Render multiple series on a character grid. `log_x` spaces the x axis
+/// logarithmically (the paper's TP/size axes are log2).
+pub fn ascii_line_chart(
+    title: &str,
+    series: &[Series],
+    width: usize,
+    height: usize,
+    log_x: bool,
+) -> String {
+    assert!(!series.is_empty());
+    let xs: Vec<f64> = series
+        .iter()
+        .flat_map(|s| s.points.iter().map(|p| p.0))
+        .collect();
+    let ys: Vec<f64> = series
+        .iter()
+        .flat_map(|s| s.points.iter().map(|p| p.1))
+        .collect();
+    let tx = |x: f64| if log_x { x.max(1e-12).log2() } else { x };
+    let xmin = xs.iter().copied().map(tx).fold(f64::INFINITY, f64::min);
+    let xmax = xs.iter().copied().map(tx).fold(f64::NEG_INFINITY, f64::max);
+    let ymin = 0.0f64.min(ys.iter().copied().fold(f64::INFINITY, f64::min));
+    let ymax = ys.iter().copied().fold(f64::NEG_INFINITY, f64::max).max(1e-12);
+
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, s) in series.iter().enumerate() {
+        let mark = MARKS[si % MARKS.len()];
+        for &(x, y) in &s.points {
+            let fx = if xmax > xmin { (tx(x) - xmin) / (xmax - xmin) } else { 0.5 };
+            let fy = (y - ymin) / (ymax - ymin);
+            let col = (fx * (width - 1) as f64).round() as usize;
+            let row = height - 1 - (fy * (height - 1) as f64).round() as usize;
+            grid[row.min(height - 1)][col.min(width - 1)] = mark;
+        }
+    }
+
+    let mut out = format!("{title}\n");
+    for (r, row) in grid.iter().enumerate() {
+        let yval = ymax - (ymax - ymin) * r as f64 / (height - 1) as f64;
+        out.push_str(&format!("{yval:>9.1} |"));
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("{:>9} +{}\n", "", "-".repeat(width)));
+    out.push_str(&format!(
+        "{:>10} {:<12}{:>width$.1}\n",
+        "",
+        if log_x { format!("log2 from {xmin:.1}") } else { format!("{xmin:.1}") },
+        xmax,
+        width = width.saturating_sub(12)
+    ));
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!(
+            "    {} {}\n",
+            MARKS[si % MARKS.len()],
+            s.label
+        ));
+    }
+    out
+}
+
+/// Horizontal bar chart (labels + values). Used for Fig 14's breakdown.
+pub fn ascii_bar_chart(title: &str, bars: &[(String, f64)], width: usize) -> String {
+    let max = bars.iter().map(|b| b.1).fold(1e-12, f64::max);
+    let label_w = bars.iter().map(|b| b.0.chars().count()).max().unwrap_or(0);
+    let mut out = format!("{title}\n");
+    for (label, v) in bars {
+        let n = ((v / max) * width as f64).round() as usize;
+        out.push_str(&format!(
+            "  {label:<label_w$} |{} {v:.3}\n",
+            "█".repeat(n),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_chart_renders_all_series_labels() {
+        let s = vec![
+            Series::new("a", vec![(1.0, 0.0), (2.0, 1.0)]),
+            Series::new("b", vec![(1.0, 1.0), (2.0, 0.0)]),
+        ];
+        let out = ascii_line_chart("t", &s, 40, 10, false);
+        assert!(out.contains("t\n"));
+        assert!(out.contains("* a"));
+        assert!(out.contains("o b"));
+        assert!(out.lines().count() > 10);
+    }
+
+    #[test]
+    fn line_chart_log_axis() {
+        let s = vec![Series::new("x", vec![(4.0, 1.0), (256.0, 2.0)])];
+        let out = ascii_line_chart("log", &s, 30, 6, true);
+        assert!(out.contains("log2"));
+    }
+
+    #[test]
+    fn bar_chart_scales_to_max() {
+        let out = ascii_bar_chart(
+            "bars",
+            &[("full".into(), 2.0), ("half".into(), 1.0)],
+            10,
+        );
+        let lines: Vec<&str> = out.lines().collect();
+        let count = |l: &str| l.chars().filter(|c| *c == '█').count();
+        assert_eq!(count(lines[1]), 10);
+        assert_eq!(count(lines[2]), 5);
+    }
+
+    #[test]
+    fn single_point_series_does_not_panic() {
+        let s = vec![Series::new("p", vec![(1.0, 1.0)])];
+        let _ = ascii_line_chart("one", &s, 20, 5, false);
+    }
+}

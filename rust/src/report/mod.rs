@@ -1,0 +1,80 @@
+//! Report rendering: aligned text tables, CSV emission, and ASCII charts
+//! — every paper figure/table regenerator prints through this module.
+
+pub mod chart;
+pub mod table;
+
+pub use chart::{ascii_bar_chart, ascii_line_chart, Series};
+pub use table::Table;
+
+/// Format seconds human-readably.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.2}µs", s * 1e6)
+    } else {
+        format!("{:.0}ns", s * 1e9)
+    }
+}
+
+/// Format a byte count human-readably.
+pub fn fmt_bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1000.0 && u < UNITS.len() - 1 {
+        v /= 1000.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b}B")
+    } else {
+        format!("{v:.1}{}", UNITS[u])
+    }
+}
+
+/// Format a large count with SI suffix (K/M/B/T).
+pub fn fmt_count(n: f64) -> String {
+    let abs = n.abs();
+    if abs >= 1e12 {
+        format!("{:.1}T", n / 1e12)
+    } else if abs >= 1e9 {
+        format!("{:.1}B", n / 1e9)
+    } else if abs >= 1e6 {
+        format!("{:.1}M", n / 1e6)
+    } else if abs >= 1e3 {
+        format!("{:.1}K", n / 1e3)
+    } else {
+        format!("{n:.0}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_secs_units() {
+        assert_eq!(fmt_secs(1.5), "1.500s");
+        assert_eq!(fmt_secs(2.5e-3), "2.500ms");
+        assert_eq!(fmt_secs(3e-6), "3.00µs");
+        assert_eq!(fmt_secs(5e-9), "5ns");
+    }
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(512), "512B");
+        assert_eq!(fmt_bytes(2_000), "2.0KB");
+        assert_eq!(fmt_bytes(1_500_000_000), "1.5GB");
+    }
+
+    #[test]
+    fn fmt_count_units() {
+        assert_eq!(fmt_count(1234.0), "1.2K");
+        assert_eq!(fmt_count(5.4e9), "5.4B");
+        assert_eq!(fmt_count(42.0), "42");
+    }
+}

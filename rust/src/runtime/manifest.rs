@@ -1,0 +1,262 @@
+//! Parsed `artifacts/manifest.json` — the contract between `aot.py` and
+//! the Rust runtime. Input/output specs are positional: the order here is
+//! jax's pytree flattening order, which is the order of the HLO entry
+//! computation's parameters.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::Json;
+use crate::{Error, Result};
+
+use super::tensor::Dtype;
+
+/// Shape + dtype + name of one artifact input or output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let dims = j
+            .req("shape")?
+            .as_arr()
+            .ok_or_else(|| Error::Manifest("shape is not an array".into()))?
+            .iter()
+            .map(|d| {
+                d.as_u64()
+                    .map(|v| v as usize)
+                    .ok_or_else(|| Error::Manifest("bad shape dim".into()))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec {
+            name: j.str_field("name")?.to_string(),
+            dims,
+            dtype: Dtype::parse(j.str_field("dtype")?)?,
+        })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// One artifact (an HLO executable) in the manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub meta: Json,
+}
+
+impl ArtifactEntry {
+    /// Metadata integer (e.g. `m`, `n`, `k` for ROI GEMMs).
+    pub fn meta_u64(&self, key: &str) -> Option<u64> {
+        self.meta.get(key).and_then(Json::as_u64)
+    }
+}
+
+/// A named model configuration (mirrors `aot.CONFIGS`).
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub name: String,
+    pub hidden: u64,
+    pub layers: u64,
+    pub heads: u64,
+    pub seq_len: u64,
+    pub batch: u64,
+    pub vocab: u64,
+    pub param_count: u64,
+    /// (name, shape) of every trainable parameter, in declaration order.
+    pub param_specs: Vec<(String, Vec<usize>)>,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactEntry>,
+    pub configs: BTreeMap<String, ModelEntry>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let j = Json::parse_file(path).map_err(|e| {
+            Error::Manifest(format!("cannot load {}: {e}", path.display()))
+        })?;
+        Manifest::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Manifest> {
+        let version = j.u64_field("version")?;
+        if version != 1 {
+            return Err(Error::Manifest(format!("unknown version {version}")));
+        }
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in j
+            .req("artifacts")?
+            .as_obj()
+            .ok_or_else(|| Error::Manifest("artifacts not an object".into()))?
+        {
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                a.req(key)?
+                    .as_arr()
+                    .ok_or_else(|| Error::Manifest(format!("{key} not an array")))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactEntry {
+                    name: name.clone(),
+                    file: a.str_field("file")?.to_string(),
+                    kind: a.str_field("kind")?.to_string(),
+                    inputs: parse_specs("inputs")?,
+                    outputs: parse_specs("outputs")?,
+                    meta: a.req("meta")?.clone(),
+                },
+            );
+        }
+        let mut configs = BTreeMap::new();
+        for (name, c) in j
+            .req("configs")?
+            .as_obj()
+            .ok_or_else(|| Error::Manifest("configs not an object".into()))?
+        {
+            let mut param_specs = Vec::new();
+            for spec in c.req("param_specs")?.as_arr().unwrap_or(&[]) {
+                let dims = spec
+                    .req("shape")?
+                    .as_arr()
+                    .ok_or_else(|| Error::Manifest("bad param shape".into()))?
+                    .iter()
+                    .map(|d| d.as_u64().unwrap_or(0) as usize)
+                    .collect();
+                param_specs.push((spec.str_field("name")?.to_string(), dims));
+            }
+            configs.insert(
+                name.clone(),
+                ModelEntry {
+                    name: name.clone(),
+                    hidden: c.u64_field("hidden")?,
+                    layers: c.u64_field("layers")?,
+                    heads: c.u64_field("heads")?,
+                    seq_len: c.u64_field("seq_len")?,
+                    batch: c.u64_field("batch")?,
+                    vocab: c.u64_field("vocab")?,
+                    param_count: c.u64_field("param_count")?,
+                    param_specs,
+                },
+            );
+        }
+        Ok(Manifest { artifacts, configs })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| Error::Manifest(format!("no artifact {name:?}")))
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ModelEntry> {
+        self.configs
+            .get(name)
+            .ok_or_else(|| Error::Manifest(format!("no model config {name:?}")))
+    }
+
+    /// Artifacts of a given kind, sorted by name.
+    pub fn by_kind(&self, kind: &str) -> Vec<&ArtifactEntry> {
+        self.artifacts.values().filter(|a| a.kind == kind).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Json {
+        Json::parse(
+            r#"{
+              "version": 1,
+              "artifacts": {
+                "roi_gemm_m128_n512_k512": {
+                  "file": "roi_gemm_m128_n512_k512.hlo.txt",
+                  "kind": "roi_gemm",
+                  "meta": {"m": 128, "n": 512, "k": 512, "flops": 67108864},
+                  "inputs": [
+                    {"name": "x", "shape": [128, 512], "dtype": "f32"},
+                    {"name": "w", "shape": [512, 512], "dtype": "f32"}
+                  ],
+                  "outputs": [
+                    {"name": "out", "shape": [128, 512], "dtype": "f32"}
+                  ],
+                  "hlo_bytes": 100
+                }
+              },
+              "configs": {
+                "tiny": {"hidden": 128, "layers": 2, "heads": 4,
+                          "seq_len": 32, "batch": 2, "vocab": 512,
+                          "param_count": 461696,
+                          "param_specs": []}
+              }
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::from_json(&sample()).unwrap();
+        let a = m.artifact("roi_gemm_m128_n512_k512").unwrap();
+        assert_eq!(a.kind, "roi_gemm");
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].dims, vec![128, 512]);
+        assert_eq!(a.inputs[0].elements(), 128 * 512);
+        assert_eq!(a.meta_u64("m"), Some(128));
+        let c = m.config("tiny").unwrap();
+        assert_eq!(c.hidden, 128);
+        assert_eq!(c.param_count, 461696);
+    }
+
+    #[test]
+    fn rejects_unknown_version() {
+        let mut j = sample();
+        if let Json::Obj(o) = &mut j {
+            o.insert("version".into(), Json::Num(9.0));
+        }
+        assert!(Manifest::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let m = Manifest::from_json(&sample()).unwrap();
+        assert!(m.artifact("nope").is_err());
+        assert!(m.config("nope").is_err());
+    }
+
+    #[test]
+    fn by_kind_filters() {
+        let m = Manifest::from_json(&sample()).unwrap();
+        assert_eq!(m.by_kind("roi_gemm").len(), 1);
+        assert_eq!(m.by_kind("grad_step").len(), 0);
+    }
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+        if path.exists() {
+            let m = Manifest::load(&path).unwrap();
+            assert!(m.artifacts.len() >= 20);
+            assert!(m.configs.contains_key("tiny"));
+            let g = m.artifact("grad_step_tiny").unwrap();
+            // params + tokens in; loss + grads out
+            assert_eq!(g.inputs.len(), g.outputs.len());
+        }
+    }
+}

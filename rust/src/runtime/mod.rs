@@ -1,0 +1,234 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `manifest.json`) produced by `python/compile/aot.py` and executes them
+//! on the XLA CPU client. This is the only module that touches the `xla`
+//! crate; Python never runs at request time.
+//!
+//! Interchange is HLO *text*: the image's xla_extension 0.5.1 rejects
+//! jax≥0.5's 64-bit-id serialized protos, while the text parser reassigns
+//! ids (see /opt/xla-example/README.md).
+
+pub mod manifest;
+pub mod tensor;
+
+pub use manifest::{ArtifactEntry, Manifest, TensorSpec};
+pub use tensor::{Dtype, HostTensor};
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+use crate::{Error, Result};
+
+/// A loaded artifact store + PJRT CPU client with an executable cache.
+///
+/// Not `Send`: the underlying `PjRtClient` is `Rc`-based. Multi-worker
+/// training executes PJRT calls from one thread and parallelizes the
+/// communication layer instead (see `coordinator`).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Open an artifacts directory (must contain `manifest.json`).
+    pub fn open(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Default artifacts location: `$COMMSCALE_ARTIFACTS` or `artifacts/`
+    /// next to the workspace root.
+    pub fn open_default() -> Result<Runtime> {
+        let dir = std::env::var("COMMSCALE_ARTIFACTS")
+            .unwrap_or_else(|_| "artifacts".to_string());
+        Runtime::open(Path::new(&dir))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact (cached after the first call).
+    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let entry = self.manifest.artifact(name)?;
+        let path = self.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        self.cache
+            .borrow_mut()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact with host tensors, returning the flattened
+    /// output tuple as host tensors (order = manifest `outputs`).
+    pub fn exec(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let (out, _) = self.exec_timed(name, inputs)?;
+        Ok(out)
+    }
+
+    /// Transfer a host tensor to a device buffer (validated against the
+    /// named artifact's input spec at `index`). Callers that reuse inputs
+    /// across calls (e.g. the DP trainer sharing one parameter copy among
+    /// workers) upload once and pass the buffers to [`Runtime::exec_buffers`].
+    pub fn upload(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+        t.to_buffer(&self.client)
+    }
+
+    /// Execute and also return wall-clock seconds of the execute call
+    /// (excludes compile; includes host↔device transfer, which on the CPU
+    /// backend is a copy).
+    pub fn exec_timed(
+        &self,
+        name: &str,
+        inputs: &[HostTensor],
+    ) -> Result<(Vec<HostTensor>, f64)> {
+        let entry = self.manifest.artifact(name)?;
+        if inputs.len() != entry.inputs.len() {
+            return Err(Error::Manifest(format!(
+                "{name}: expected {} inputs, got {}",
+                entry.inputs.len(),
+                inputs.len()
+            )));
+        }
+        for (t, spec) in inputs.iter().zip(&entry.inputs) {
+            t.check_spec(spec).map_err(|e| {
+                Error::Manifest(format!("{name}: input {:?}: {e}", spec.name))
+            })?;
+        }
+        // Owned device buffers + execute_b: the `execute` C wrapper leaks
+        // its input buffers (see HostTensor::to_buffer).
+        let buffers: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|t| t.to_buffer(&self.client))
+            .collect::<Result<_>>()?;
+        let refs: Vec<&xla::PjRtBuffer> = buffers.iter().collect();
+        self.exec_buffers(name, &refs)
+    }
+
+    /// Execute with pre-uploaded device buffers (the hot path — no
+    /// host→device transfer happens here beyond reading the outputs back).
+    pub fn exec_buffers(
+        &self,
+        name: &str,
+        buffers: &[&xla::PjRtBuffer],
+    ) -> Result<(Vec<HostTensor>, f64)> {
+        let entry = self.manifest.artifact(name)?.clone();
+        if buffers.len() != entry.inputs.len() {
+            return Err(Error::Manifest(format!(
+                "{name}: expected {} inputs, got {}",
+                entry.inputs.len(),
+                buffers.len()
+            )));
+        }
+        let exe = self.executable(name)?;
+
+        let t0 = Instant::now();
+        let result = exe.execute_b(buffers)?;
+        let out_literal = result[0][0].to_literal_sync()?;
+        let secs = t0.elapsed().as_secs_f64();
+
+        // aot.py lowers with return_tuple=True: unpack the tuple.
+        let parts = out_literal.to_tuple()?;
+        if parts.len() != entry.outputs.len() {
+            return Err(Error::Manifest(format!(
+                "{name}: expected {} outputs, got {}",
+                entry.outputs.len(),
+                parts.len()
+            )));
+        }
+        let out = parts
+            .into_iter()
+            .zip(&entry.outputs)
+            .map(|(lit, spec)| HostTensor::from_literal(&lit, spec))
+            .collect::<Result<Vec<_>>>()?;
+        Ok((out, secs))
+    }
+
+    /// Median-of-`reps` execution time for an artifact fed with zeros —
+    /// the profiler's timing primitive (zeros are fine: runtimes of dense
+    /// GEMM/LN kernels are data-independent).
+    pub fn time_artifact(&self, name: &str, reps: usize) -> Result<f64> {
+        let entry = self.manifest.artifact(name)?.clone();
+        let inputs: Vec<HostTensor> = entry
+            .inputs
+            .iter()
+            .map(HostTensor::zeros_of)
+            .collect::<Result<_>>()?;
+        // warmup (compiles on first call)
+        self.exec(name, &inputs)?;
+        let mut times = Vec::with_capacity(reps);
+        for _ in 0..reps {
+            let (_, t) = self.exec_timed(name, &inputs)?;
+            times.push(t);
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Ok(times[times.len() / 2])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn open_fails_without_manifest() {
+        assert!(Runtime::open(Path::new("/nonexistent")).is_err());
+    }
+
+    #[test]
+    fn exec_rejects_wrong_input_count() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = Runtime::open(&dir).unwrap();
+        let err = rt.exec("quickstart_gemm", &[]).unwrap_err();
+        assert!(err.to_string().contains("expected 3 inputs"), "{err}");
+    }
+
+    #[test]
+    fn quickstart_gemm_runs_and_matches_oracle() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = Runtime::open(&dir).unwrap();
+        // x = I, w = I, b = 0 → gelu(I): diag gelu(1) ≈ 0.8413, off-diag 0.
+        let n = 256usize;
+        let mut eye = vec![0f32; n * n];
+        for i in 0..n {
+            eye[i * n + i] = 1.0;
+        }
+        let x = HostTensor::f32("x", vec![n, n], eye.clone());
+        let w = HostTensor::f32("w", vec![n, n], eye);
+        let b = HostTensor::f32("b", vec![n], vec![0f32; n]);
+        let out = rt.exec("quickstart_gemm", &[x, w, b]).unwrap();
+        assert_eq!(out.len(), 1);
+        let data = out[0].f32_data().unwrap();
+        assert_eq!(data.len(), n * n);
+        assert!((data[0] - 0.84134).abs() < 1e-3, "gelu(1) = {}", data[0]);
+        assert!(data[1].abs() < 1e-5, "gelu(0) = {}", data[1]);
+    }
+
+    #[test]
+    fn time_artifact_returns_positive_median() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = Runtime::open(&dir).unwrap();
+        let t = rt.time_artifact("roi_layernorm_r1024_h256", 3).unwrap();
+        assert!(t > 0.0 && t < 5.0, "layernorm median {t}s");
+    }
+}

@@ -1,0 +1,231 @@
+//! Host-side tensors and conversion to/from XLA literals.
+
+use crate::{Error, Result};
+
+use super::manifest::TensorSpec;
+
+/// Element types the AOT artifacts use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => Err(Error::Manifest(format!("unsupported dtype {other:?}"))),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::I32 => "i32",
+        }
+    }
+}
+
+/// Typed data buffer.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A host tensor: name + dims + typed data (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl HostTensor {
+    pub fn f32(name: &str, dims: Vec<usize>, data: Vec<f32>) -> HostTensor {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        HostTensor { name: name.to_string(), dims, data: TensorData::F32(data) }
+    }
+
+    pub fn i32(name: &str, dims: Vec<usize>, data: Vec<i32>) -> HostTensor {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        HostTensor { name: name.to_string(), dims, data: TensorData::I32(data) }
+    }
+
+    /// Zero-filled tensor matching a manifest spec.
+    pub fn zeros_of(spec: &TensorSpec) -> Result<HostTensor> {
+        let n: usize = spec.dims.iter().product();
+        Ok(match spec.dtype {
+            Dtype::F32 => HostTensor::f32(&spec.name, spec.dims.clone(), vec![0.0; n]),
+            Dtype::I32 => HostTensor::i32(&spec.name, spec.dims.clone(), vec![0; n]),
+        })
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self.data {
+            TensorData::F32(_) => Dtype::F32,
+            TensorData::I32(_) => Dtype::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.data {
+            TensorData::F32(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn f32_data(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => Err(Error::Manifest(format!("{} is not f32", self.name))),
+        }
+    }
+
+    pub fn f32_data_mut(&mut self) -> Result<&mut Vec<f32>> {
+        match &mut self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => Err(Error::Manifest(format!("{} is not f32", self.name))),
+        }
+    }
+
+    pub fn i32_data(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            _ => Err(Error::Manifest(format!("{} is not i32", self.name))),
+        }
+    }
+
+    /// First element as f64 (for scalar outputs like the loss).
+    pub fn scalar(&self) -> Result<f64> {
+        match &self.data {
+            TensorData::F32(v) => v
+                .first()
+                .map(|x| *x as f64)
+                .ok_or_else(|| Error::Manifest("empty tensor".into())),
+            TensorData::I32(v) => v
+                .first()
+                .map(|x| *x as f64)
+                .ok_or_else(|| Error::Manifest("empty tensor".into())),
+        }
+    }
+
+    /// Verify shape/dtype against a manifest spec.
+    pub fn check_spec(&self, spec: &TensorSpec) -> Result<()> {
+        if self.dims != spec.dims {
+            return Err(Error::Manifest(format!(
+                "shape mismatch: got {:?}, manifest says {:?}",
+                self.dims, spec.dims
+            )));
+        }
+        if self.dtype() != spec.dtype {
+            return Err(Error::Manifest(format!(
+                "dtype mismatch: got {}, manifest says {}",
+                self.dtype().name(),
+                spec.dtype.name()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Transfer to a device buffer. This is the hot-path transfer: the
+    /// vendored `execute` C wrapper leaks its input device buffers
+    /// (`buffer.release()` with no owner), so the runtime always goes
+    /// through owned buffers + `execute_b` instead.
+    pub fn to_buffer(&self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
+        Ok(match &self.data {
+            TensorData::F32(v) => client.buffer_from_host_buffer(v, &self.dims, None)?,
+            TensorData::I32(v) => client.buffer_from_host_buffer(v, &self.dims, None)?,
+        })
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.dims.iter().map(|d| *d as i64).collect();
+        let lit = match &self.data {
+            TensorData::F32(v) => xla::Literal::vec1(v),
+            TensorData::I32(v) => xla::Literal::vec1(v),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    pub fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<HostTensor> {
+        let data = match spec.dtype {
+            Dtype::F32 => TensorData::F32(lit.to_vec::<f32>()?),
+            Dtype::I32 => TensorData::I32(lit.to_vec::<i32>()?),
+        };
+        let t = HostTensor {
+            name: spec.name.clone(),
+            dims: spec.dims.clone(),
+            data,
+        };
+        let expect: usize = spec.dims.iter().product();
+        if t.len() != expect {
+            return Err(Error::Manifest(format!(
+                "{}: literal has {} elements, spec {:?} needs {}",
+                spec.name,
+                t.len(),
+                spec.dims,
+                expect
+            )));
+        }
+        Ok(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(dims: &[usize], dtype: Dtype) -> TensorSpec {
+        TensorSpec { name: "t".into(), dims: dims.to_vec(), dtype }
+    }
+
+    #[test]
+    fn zeros_of_spec() {
+        let t = HostTensor::zeros_of(&spec(&[2, 3], Dtype::F32)).unwrap();
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.f32_data().unwrap(), &[0.0; 6]);
+    }
+
+    #[test]
+    fn check_spec_catches_mismatches() {
+        let t = HostTensor::f32("t", vec![2, 2], vec![0.0; 4]);
+        assert!(t.check_spec(&spec(&[2, 2], Dtype::F32)).is_ok());
+        assert!(t.check_spec(&spec(&[4], Dtype::F32)).is_err());
+        assert!(t.check_spec(&spec(&[2, 2], Dtype::I32)).is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = HostTensor::f32("x", vec![2, 3], (0..6).map(|i| i as f32).collect());
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit, &spec(&[2, 3], Dtype::F32)).unwrap();
+        assert_eq!(back.f32_data().unwrap(), t.f32_data().unwrap());
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let t = HostTensor::i32("ids", vec![4], vec![1, -2, 3, 7]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit, &spec(&[4], Dtype::I32)).unwrap();
+        assert_eq!(back.i32_data().unwrap(), t.i32_data().unwrap());
+    }
+
+    #[test]
+    fn scalar_reads_first_element() {
+        let t = HostTensor::f32("loss", vec![1], vec![6.25]);
+        assert_eq!(t.scalar().unwrap(), 6.25);
+    }
+
+    #[test]
+    #[should_panic]
+    fn constructor_checks_size() {
+        HostTensor::f32("bad", vec![2, 2], vec![0.0; 3]);
+    }
+}

@@ -1,0 +1,202 @@
+//! Operator cost providers.
+//!
+//! [`AnalyticCost`] is the roofline + efficiency-curve model used for the
+//! projection figures (10–14); `opmodel::MeasuredCost` (same trait) wraps
+//! operator-level fits of PJRT-measured runtimes for Fig 15 and the
+//! end-to-end cross-check.
+
+use crate::collectives::{CollectiveCost, CollectiveKind};
+use crate::graph::{CommClass, OpKind};
+use crate::hw::{DeviceSpec, EfficiencyCurves};
+use crate::model::Precision;
+
+/// Provides execution times for graph operators.
+pub trait CostProvider {
+    /// Seconds to execute a compute op (panics on comm ops).
+    fn compute_time(&self, kind: &OpKind) -> f64;
+    /// Seconds to execute an all-reduce of `bytes` in the given class.
+    fn comm_time(&self, bytes: u64, class: CommClass) -> f64;
+}
+
+/// Modeling of DP-comm/compute co-execution effects (§4.3.7).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OverlapModel {
+    /// Multiplier on overlappable-comm time: slower inter-node links for
+    /// DP traffic (the paper quotes ~8× [53] vs intra-node).
+    pub internode_factor: f64,
+    /// Additional slowdown from compute/comm interference on shared
+    /// accelerator resources when overlapped.
+    pub interference_factor: f64,
+}
+
+impl Default for OverlapModel {
+    fn default() -> Self {
+        // the paper's baseline optimistically uses intra-node links (§4.3.2)
+        OverlapModel { internode_factor: 1.0, interference_factor: 1.0 }
+    }
+}
+
+impl OverlapModel {
+    /// The paper's Fig 14 third scenario: inter-node + interference.
+    pub fn pessimistic() -> OverlapModel {
+        OverlapModel { internode_factor: 8.0, interference_factor: 1.25 }
+    }
+
+    pub fn total(&self) -> f64 {
+        self.internode_factor * self.interference_factor
+    }
+}
+
+/// Roofline cost model with size-dependent efficiency curves.
+#[derive(Debug, Clone)]
+pub struct AnalyticCost {
+    pub device: DeviceSpec,
+    pub eff: EfficiencyCurves,
+    pub precision: Precision,
+    /// Devices participating in serialized (TP) all-reduces.
+    pub tp_group: u64,
+    /// Devices participating in overlappable (DP) all-reduces.
+    pub dp_group: u64,
+    pub overlap: OverlapModel,
+}
+
+impl AnalyticCost {
+    pub fn new(device: DeviceSpec, precision: Precision, tp: u64, dp: u64) -> Self {
+        AnalyticCost {
+            device,
+            eff: EfficiencyCurves::default(),
+            precision,
+            tp_group: tp,
+            dp_group: dp,
+            overlap: OverlapModel::default(),
+        }
+    }
+
+    pub fn with_overlap(mut self, o: OverlapModel) -> Self {
+        self.overlap = o;
+        self
+    }
+
+    pub fn with_eff(mut self, eff: EfficiencyCurves) -> Self {
+        self.eff = eff;
+        self
+    }
+
+    fn collective(&self) -> CollectiveCost {
+        CollectiveCost::new(self.device.clone()).with_eff(self.eff.clone())
+    }
+
+    /// GEMM time: compute-bound roofline with max() against the memory
+    /// roofline (matters only for degenerate skinny GEMMs).
+    fn gemm_time(&self, m: u64, n: u64, k: u64, count: u64) -> f64 {
+        let flops = (2 * m * n * k) as f64;
+        let peak = self.device.peak_flops(self.precision);
+        let t_compute = flops / (peak * self.eff.gemm(flops));
+        let bytes =
+            (self.precision.bytes() * (m * k + k * n + m * n)) as f64;
+        let t_mem = bytes / (self.device.mem_bw * self.eff.mem(bytes));
+        count as f64 * t_compute.max(t_mem)
+    }
+
+    fn stream_time(&self, bytes: u64) -> f64 {
+        let b = bytes as f64;
+        b / (self.device.mem_bw * self.eff.mem(b))
+    }
+}
+
+impl CostProvider for AnalyticCost {
+    fn compute_time(&self, kind: &OpKind) -> f64 {
+        match *kind {
+            OpKind::Gemm { m, n, k, count } => self.gemm_time(m, n, k, count),
+            OpKind::LayerNorm { rows, h } => {
+                // read + write of the activation (f32 statistics internal)
+                self.stream_time(2 * self.precision.bytes() * rows * h)
+            }
+            OpKind::Elementwise { bytes } => self.stream_time(bytes),
+            OpKind::AllReduce { .. } => {
+                panic!("comm op routed to compute_time")
+            }
+        }
+    }
+
+    fn comm_time(&self, bytes: u64, class: CommClass) -> f64 {
+        let c = self.collective();
+        match class {
+            CommClass::Serialized => {
+                c.time(CollectiveKind::AllReduce, bytes, self.tp_group)
+            }
+            CommClass::Overlappable => {
+                c.time(CollectiveKind::AllReduce, bytes, self.dp_group)
+                    * self.overlap.total()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::catalog;
+
+    fn cost() -> AnalyticCost {
+        AnalyticCost::new(catalog::mi210(), Precision::F16, 8, 4)
+    }
+
+    #[test]
+    fn big_gemm_near_peak() {
+        let c = cost();
+        let (m, n, k) = (8192u64, 8192, 8192);
+        let t = c.compute_time(&OpKind::Gemm { m, n, k, count: 1 });
+        let ideal = (2 * m * n * k) as f64 / c.device.peak_flops_f16;
+        let eff = ideal / t;
+        assert!(eff > 0.85, "eff {eff}"); // §4.2.3: >85% of peak
+    }
+
+    #[test]
+    fn small_gemm_loses_efficiency() {
+        let c = cost();
+        let t = c.compute_time(&OpKind::Gemm { m: 64, n: 64, k: 64, count: 1 });
+        let ideal = (2u64 * 64 * 64 * 64) as f64 / c.device.peak_flops_f16;
+        assert!(t > 20.0 * ideal, "small GEMMs are launch/quantization bound");
+    }
+
+    #[test]
+    fn gemm_count_scales_linearly() {
+        let c = cost();
+        let one = c.compute_time(&OpKind::Gemm { m: 512, n: 512, k: 64, count: 1 });
+        let four = c.compute_time(&OpKind::Gemm { m: 512, n: 512, k: 64, count: 4 });
+        assert!((four / one - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn layernorm_is_bandwidth_bound() {
+        let c = cost();
+        let t = c.compute_time(&OpKind::LayerNorm { rows: 1 << 16, h: 4096 });
+        let bytes = (2u64 * 2 * (1 << 16) * 4096) as f64;
+        let ideal = bytes / c.device.mem_bw;
+        assert!(t >= ideal && t < 2.0 * ideal);
+    }
+
+    #[test]
+    fn overlap_model_scales_dp_only() {
+        let base = cost();
+        let slow = cost().with_overlap(OverlapModel::pessimistic());
+        let bytes = 64 << 20;
+        assert_eq!(
+            base.comm_time(bytes, CommClass::Serialized),
+            slow.comm_time(bytes, CommClass::Serialized)
+        );
+        let r = slow.comm_time(bytes, CommClass::Overlappable)
+            / base.comm_time(bytes, CommClass::Overlappable);
+        assert!((r - 10.0).abs() < 1e-6, "8 × 1.25 = {r}");
+    }
+
+    #[test]
+    #[should_panic(expected = "comm op routed")]
+    fn comm_op_in_compute_path_panics() {
+        cost().compute_time(&OpKind::AllReduce {
+            bytes: 1,
+            class: CommClass::Serialized,
+        });
+    }
+}

@@ -1,0 +1,13 @@
+//! Discrete-event simulator for one device's training iteration.
+//!
+//! Three execution streams per device — compute, serialized-comm (TP),
+//! overlappable-comm (DP) — mirroring how RCCL communicators and compute
+//! queues coexist on the paper's testbed. Serialized ARs gate their
+//! successors (Fig 3b); DP ARs run concurrently with backprop compute and
+//! only the optimizer waits on them (Fig 3a).
+
+pub mod cost;
+pub mod engine;
+
+pub use cost::{AnalyticCost, CostProvider, OverlapModel};
+pub use engine::{simulate, SimReport};

@@ -1,0 +1,124 @@
+//! Tiny CLI argument parser (no `clap` in the offline vendor set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} must be an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} must be a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated list of integers, e.g. `--tp 4,8,16`.
+    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .unwrap_or_else(|_| panic!("--{key}: bad integer {s:?}"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse(&["fig10", "--tp", "4,8", "--csv=out.csv", "--verbose"]);
+        assert_eq!(a.positional, vec!["fig10"]);
+        assert_eq!(a.get("tp"), Some("4,8"));
+        assert_eq!(a.get("csv"), Some("out.csv"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.get("verbose"), Some("true"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse(&["--n", "12", "--scale", "2.5"]);
+        assert_eq!(a.get_usize("n", 0), 12);
+        assert_eq!(a.get_f64("scale", 1.0), 2.5);
+        assert_eq!(a.get_usize("missing", 7), 7);
+        assert_eq!(a.get_usize_list("tp", &[4, 8]), vec![4, 8]);
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse(&["--tp", "4, 8,16"]);
+        assert_eq!(a.get_usize_list("tp", &[]), vec![4, 8, 16]);
+    }
+
+    #[test]
+    fn flag_before_positional() {
+        // `--flag positional` treats the next token as the flag's value;
+        // callers that need a bare flag put it last or use `--flag=true`.
+        let a = parse(&["--dry-run=true", "fig7"]);
+        assert!(a.has("dry-run"));
+        assert_eq!(a.positional, vec!["fig7"]);
+    }
+}

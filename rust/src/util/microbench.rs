@@ -1,0 +1,156 @@
+//! Micro-benchmark harness (criterion is not in the offline vendor set).
+//!
+//! Provides warmup, calibrated iteration counts, outlier-robust summary
+//! statistics, and an aligned report — enough to drive every `benches/`
+//! target with `cargo bench`. Each `[[bench]]` sets `harness = false` and
+//! calls [`Bench::run`].
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+/// One benchmark's configuration and results.
+pub struct Bench {
+    name: String,
+    warmup: Duration,
+    measure: Duration,
+    min_iters: u32,
+    max_iters: u32,
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    /// Per-iteration timings in seconds.
+    pub summary: Summary,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Bench {
+        // CLI/env tuning so `cargo bench -- --quick` stays fast in CI.
+        let quick = std::env::args().any(|a| a == "--quick")
+            || std::env::var("COMMSCALE_BENCH_QUICK").is_ok();
+        Bench {
+            name: name.to_string(),
+            warmup: if quick { Duration::from_millis(50) } else { Duration::from_millis(300) },
+            measure: if quick { Duration::from_millis(200) } else { Duration::from_secs(1) },
+            min_iters: 5,
+            max_iters: 1_000_000,
+        }
+    }
+
+    pub fn warmup(mut self, d: Duration) -> Self {
+        self.warmup = d;
+        self
+    }
+
+    pub fn measure(mut self, d: Duration) -> Self {
+        self.measure = d;
+        self
+    }
+
+    pub fn max_iters(mut self, n: u32) -> Self {
+        self.max_iters = n;
+        self
+    }
+
+    /// Run `f` repeatedly, time each call, and print a summary line.
+    pub fn run<T, F: FnMut() -> T>(self, mut f: F) -> BenchResult {
+        // Warmup phase — also estimates per-iteration cost.
+        let wstart = Instant::now();
+        let mut west = Duration::ZERO;
+        let mut wn = 0u32;
+        while wstart.elapsed() < self.warmup && wn < self.max_iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            west += t0.elapsed();
+            wn += 1;
+        }
+        let per_iter = if wn > 0 { west / wn } else { Duration::from_millis(1) };
+
+        // Choose an iteration count that fits the measurement budget.
+        let target = (self.measure.as_secs_f64() / per_iter.as_secs_f64().max(1e-9))
+            .ceil() as u32;
+        let iters = target.clamp(self.min_iters, self.max_iters);
+
+        let mut samples = Vec::with_capacity(iters as usize);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let summary = Summary::of(&samples);
+        let res = BenchResult {
+            name: self.name,
+            iters: iters as u64,
+            summary,
+        };
+        println!("{}", res.report_line());
+        res
+    }
+}
+
+impl BenchResult {
+    pub fn report_line(&self) -> String {
+        format!(
+            "bench {:<44} {:>12}/iter  (median {}, p90 {}, n={})",
+            self.name,
+            fmt_time(self.summary.mean),
+            fmt_time(self.summary.median),
+            fmt_time(self.summary.p90),
+            self.iters
+        )
+    }
+}
+
+/// Human-readable duration.
+pub fn fmt_time(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} µs", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+/// Header printed at the top of every bench binary.
+pub fn bench_header(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports() {
+        let r = Bench::new("noop")
+            .warmup(Duration::from_millis(5))
+            .measure(Duration::from_millis(20))
+            .run(|| 1 + 1);
+        assert!(r.iters >= 5);
+        assert!(r.summary.mean >= 0.0);
+    }
+
+    #[test]
+    fn respects_max_iters() {
+        let r = Bench::new("capped")
+            .warmup(Duration::from_millis(1))
+            .measure(Duration::from_millis(50))
+            .max_iters(10)
+            .run(|| ());
+        assert!(r.iters <= 10);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert_eq!(fmt_time(2.0), "2.000 s");
+        assert_eq!(fmt_time(2e-3), "2.000 ms");
+        assert_eq!(fmt_time(2e-6), "2.000 µs");
+        assert_eq!(fmt_time(2e-9), "2.0 ns");
+    }
+}

@@ -1,0 +1,12 @@
+//! Hand-rolled substrates: the build is fully offline (only the `xla`
+//! crate's dependency closure is vendored), so JSON, PRNG, statistics,
+//! CLI parsing and the micro-benchmark harness are implemented here.
+
+pub mod cli;
+pub mod json;
+pub mod microbench;
+pub mod rng;
+pub mod stats;
+
+pub use json::Json;
+pub use rng::Rng;

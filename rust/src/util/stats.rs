@@ -1,0 +1,189 @@
+//! Statistics helpers: summary stats, percentiles, and the least-squares
+//! fits the operator-level models (§4.2.2) are built on.
+
+/// Summary statistics over a sample of timings/values.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub median: f64,
+    pub p10: f64,
+    pub p90: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        assert!(!xs.is_empty(), "Summary::of on empty sample");
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        let mut s = xs.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: s[0],
+            max: s[n - 1],
+            median: percentile_sorted(&s, 50.0),
+            p10: percentile_sorted(&s, 10.0),
+            p90: percentile_sorted(&s, 90.0),
+        }
+    }
+}
+
+/// Linear-interpolated percentile of a pre-sorted sample.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Geometric mean (used for the paper's "geomean error" reporting, §4.3.8).
+pub fn geomean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    let s: f64 = xs.iter().map(|x| x.max(1e-300).ln()).sum();
+    (s / xs.len() as f64).exp()
+}
+
+/// Ordinary least squares y ≈ a·x + b. Returns (a, b, r²).
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2, "need >= 2 points for a line");
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let sxx: f64 = xs.iter().map(|x| (x - mx).powi(2)).sum();
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    assert!(sxx > 0.0, "degenerate x values");
+    let a = sxy / sxx;
+    let b = my - a * mx;
+    let ss_tot: f64 = ys.iter().map(|y| (y - my).powi(2)).sum();
+    let ss_res: f64 = xs
+        .iter()
+        .zip(ys)
+        .map(|(x, y)| (y - (a * x + b)).powi(2))
+        .sum();
+    let r2 = if ss_tot > 0.0 { 1.0 - ss_res / ss_tot } else { 1.0 };
+    (a, b, r2)
+}
+
+/// Least squares through the origin: y ≈ a·x. Returns (a, r²).
+/// The paper's operator models are proportional (runtime ∝ op count), so
+/// this is the default fit; `linear_fit` adds an intercept when a fixed
+/// launch overhead is being modeled.
+pub fn proportional_fit(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    assert!(!xs.is_empty());
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| x * y).sum();
+    let sxx: f64 = xs.iter().map(|x| x * x).sum();
+    assert!(sxx > 0.0, "degenerate x values");
+    let a = sxy / sxx;
+    let my = ys.iter().sum::<f64>() / ys.len() as f64;
+    let ss_tot: f64 = ys.iter().map(|y| (y - my).powi(2)).sum();
+    let ss_res: f64 = xs.iter().zip(ys).map(|(x, y)| (y - a * x).powi(2)).sum();
+    let r2 = if ss_tot > 0.0 { 1.0 - ss_res / ss_tot } else { 1.0 };
+    (a, r2)
+}
+
+/// Mean absolute percentage error between projections and ground truth.
+pub fn mape(predicted: &[f64], actual: &[f64]) -> f64 {
+    assert_eq!(predicted.len(), actual.len());
+    assert!(!predicted.is_empty());
+    let s: f64 = predicted
+        .iter()
+        .zip(actual)
+        .map(|(p, a)| ((p - a) / a).abs())
+        .sum();
+    100.0 * s / predicted.len() as f64
+}
+
+/// Geomean of per-point absolute percentage errors (the paper's metric).
+pub fn geomean_ape(predicted: &[f64], actual: &[f64]) -> f64 {
+    assert_eq!(predicted.len(), actual.len());
+    let errs: Vec<f64> = predicted
+        .iter()
+        .zip(actual)
+        .map(|(p, a)| (100.0 * ((p - a) / a).abs()).max(1e-9))
+        .collect();
+    geomean(&errs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.std - (2.0f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let s = [0.0, 10.0];
+        assert_eq!(percentile_sorted(&s, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&s, 50.0), 5.0);
+        assert_eq!(percentile_sorted(&s, 100.0), 10.0);
+    }
+
+    #[test]
+    fn geomean_of_equal_values() {
+        assert!((geomean(&[4.0, 4.0, 4.0]) - 4.0).abs() < 1e-12);
+        assert!((geomean(&[1.0, 100.0]) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn linear_fit_recovers_exact_line() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys: Vec<f64> = xs.iter().map(|x| 2.5 * x + 1.0).collect();
+        let (a, b, r2) = linear_fit(&xs, &ys);
+        assert!((a - 2.5).abs() < 1e-12);
+        assert!((b - 1.0).abs() < 1e-12);
+        assert!((r2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn proportional_fit_recovers_slope() {
+        let xs = [1.0, 2.0, 4.0, 8.0];
+        let ys: Vec<f64> = xs.iter().map(|x| 0.75 * x).collect();
+        let (a, r2) = proportional_fit(&xs, &ys);
+        assert!((a - 0.75).abs() < 1e-12);
+        assert!(r2 > 0.999);
+    }
+
+    #[test]
+    fn proportional_fit_is_least_squares_under_noise() {
+        // with symmetric noise the slope stays near truth
+        let xs: Vec<f64> = (1..=20).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs
+            .iter()
+            .enumerate()
+            .map(|(i, x)| 3.0 * x + if i % 2 == 0 { 0.5 } else { -0.5 })
+            .collect();
+        let (a, _) = proportional_fit(&xs, &ys);
+        assert!((a - 3.0).abs() < 0.01, "a = {a}");
+    }
+
+    #[test]
+    fn mape_and_geomean_ape() {
+        let pred = [110.0, 90.0];
+        let act = [100.0, 100.0];
+        assert!((mape(&pred, &act) - 10.0).abs() < 1e-9);
+        assert!((geomean_ape(&pred, &act) - 10.0).abs() < 1e-9);
+    }
+}

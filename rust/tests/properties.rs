@@ -1,0 +1,240 @@
+//! Property-based tests (hand-rolled harness over `util::Rng`; proptest is
+//! not in the offline vendor set). Each property runs against many random
+//! cases with a deterministic seed; failures print the offending case.
+
+use commscale::collectives::{CollectiveCost, CollectiveKind, ShmRing};
+use commscale::graph::{build_layer_graph, GraphOptions};
+use commscale::hw::{catalog, Evolution};
+use commscale::model::{LayerCounts, ModelConfig, Precision};
+use commscale::sim::{simulate, AnalyticCost};
+use commscale::util::{stats, Json, Rng};
+
+const CASES: usize = 200;
+
+/// Random valid model config.
+fn arb_config(rng: &mut Rng) -> ModelConfig {
+    let hidden = 1u64 << rng.range(7, 17); // 128 .. 64K
+    let heads = (hidden / 64).max(1);
+    let tp_max = heads.min(256).trailing_zeros() as u64 + 1;
+    let tp = 1u64 << rng.range(0, tp_max);
+    ModelConfig {
+        hidden,
+        seq_len: 1 << rng.range(5, 14),
+        batch: 1 << rng.range(0, 4),
+        layers: rng.range(1, 8),
+        heads,
+        ffn_mult: 4,
+        tp,
+        dp: 1 << rng.range(0, 4),
+        precision: *rng.choose(&[Precision::F32, Precision::F16, Precision::F8]),
+    }
+}
+
+#[test]
+fn prop_graph_flops_always_match_closed_form() {
+    let mut rng = Rng::new(0xF107u64);
+    for i in 0..CASES {
+        let cfg = arb_config(&mut rng);
+        cfg.validate().unwrap();
+        let g = build_layer_graph(&cfg, GraphOptions::default());
+        g.validate().unwrap();
+        let lc = LayerCounts::of(&cfg);
+        assert_eq!(
+            g.total_gemm_flops(),
+            cfg.layers * lc.iter_gemm_flops(),
+            "case {i}: {cfg:?}"
+        );
+    }
+}
+
+#[test]
+fn prop_sim_invariants_hold_for_random_configs() {
+    let mut rng = Rng::new(0x51AB);
+    let d = catalog::mi210();
+    for i in 0..CASES {
+        let cfg = arb_config(&mut rng);
+        let cost = AnalyticCost::new(d.clone(), cfg.precision, cfg.tp, cfg.dp);
+        let g = build_layer_graph(&cfg, GraphOptions::default());
+        let r = simulate(&g, &cost);
+        // invariants of any schedule:
+        assert!(r.makespan >= r.compute_time - 1e-12, "case {i}: {cfg:?}");
+        assert!(
+            r.makespan >= r.serialized_comm - 1e-12,
+            "comm stream fits in makespan; case {i}"
+        );
+        assert!(r.exposed_comm >= -1e-12);
+        assert!(
+            r.exposed_comm <= r.serialized_comm + r.overlapped_comm + 1e-9,
+            "case {i}: exposure bounded by total comm"
+        );
+        assert!(
+            (r.fwd_compute + r.bwd_compute + r.opt_compute - r.compute_time).abs()
+                < 1e-9,
+            "case {i}: phase breakdown sums to total"
+        );
+        // intervals are well-formed and non-overlapping per stream
+        for (s, e) in &r.intervals {
+            assert!(e >= s, "case {i}");
+        }
+    }
+}
+
+#[test]
+fn prop_comm_fraction_monotone_in_flop_scale() {
+    // More compute throughput (same network) can never *reduce* the comm
+    // fraction.
+    let mut rng = Rng::new(0xE0F);
+    let d = catalog::mi210();
+    for i in 0..50 {
+        let mut cfg = arb_config(&mut rng);
+        cfg.tp = cfg.tp.max(2); // ensure there is serialized comm
+        if cfg.heads % cfg.tp != 0 {
+            continue;
+        }
+        let g = build_layer_graph(&cfg, GraphOptions::default());
+        let mut prev = -1.0;
+        for scale in [1.0, 2.0, 4.0, 8.0] {
+            let dev = Evolution { flop_scale: scale, bw_scale: 1.0 }.apply(&d);
+            let cost = AnalyticCost::new(dev, cfg.precision, cfg.tp, cfg.dp);
+            let f = simulate(&g, &cost).comm_fraction();
+            assert!(f >= prev - 1e-9, "case {i} scale {scale}: {f} < {prev}");
+            prev = f;
+        }
+    }
+}
+
+#[test]
+fn prop_ring_allreduce_matches_reference_for_random_shapes() {
+    let mut rng = Rng::new(0xA11);
+    for i in 0..60 {
+        let n = rng.range(1, 9) as usize;
+        let len = rng.range(1, 5000) as usize;
+        let mut a: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..len).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let mut b = a.clone();
+        ShmRing::new(n).all_reduce(&mut a);
+        ShmRing::all_reduce_seq(&mut b);
+        for r in 0..n {
+            for j in 0..len {
+                let tol = 1e-4 * b[r][j].abs().max(1.0);
+                assert!(
+                    (a[r][j] - b[r][j]).abs() <= tol,
+                    "case {i} n={n} len={len} rank {r} idx {j}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_collective_time_superadditive_in_bytes() {
+    // t(a + b) <= t(a) + t(b) need NOT hold with latency, but monotonicity
+    // must: bigger payloads never get faster.
+    let mut rng = Rng::new(0xC0);
+    let c = CollectiveCost::new(catalog::mi210());
+    for _ in 0..CASES {
+        let n = 1u64 << rng.range(1, 9);
+        let a = rng.range(1, 1 << 30);
+        let b = a + rng.range(1, 1 << 30);
+        for kind in [
+            CollectiveKind::AllReduce,
+            CollectiveKind::ReduceScatter,
+            CollectiveKind::AllGather,
+            CollectiveKind::AllToAll,
+            CollectiveKind::Broadcast,
+        ] {
+            assert!(c.time(kind, b, n) >= c.time(kind, a, n), "{kind:?} n={n}");
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrips_random_values() {
+    let mut rng = Rng::new(0x15);
+    for _ in 0..CASES {
+        let v = arb_json(&mut rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back, v, "source: {text}");
+        let pretty = v.to_string_pretty(2);
+        assert_eq!(Json::parse(&pretty).unwrap(), v);
+    }
+}
+
+fn arb_json(rng: &mut Rng, depth: u32) -> Json {
+    let pick = if depth == 0 { rng.range(0, 4) } else { rng.range(0, 6) };
+    match pick {
+        0 => Json::Null,
+        1 => Json::Bool(rng.f64() < 0.5),
+        2 => {
+            // integers and simple fractions survive f64 text roundtrip
+            let n = rng.range(0, 1 << 40) as f64;
+            Json::Num(if rng.f64() < 0.5 { n } else { n / 4.0 })
+        }
+        3 => {
+            let len = rng.range(0, 12);
+            let s: String = (0..len)
+                .map(|_| {
+                    *rng.choose(&['a', 'b', '"', '\\', '\n', '\t', 'é', '≈', ' '])
+                })
+                .collect();
+            Json::Str(s)
+        }
+        4 => Json::Arr(
+            (0..rng.range(0, 4)).map(|_| arb_json(rng, depth - 1)).collect(),
+        ),
+        _ => Json::Obj(
+            (0..rng.range(0, 4))
+                .map(|i| (format!("k{i}"), arb_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_linear_fit_recovers_noiseless_lines() {
+    let mut rng = Rng::new(0xF17u64);
+    for _ in 0..CASES {
+        let a = rng.normal() * 10.0;
+        let b = rng.normal() * 5.0;
+        let xs: Vec<f64> = (0..8).map(|i| i as f64 + rng.f64()).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| a * x + b).collect();
+        let (fa, fb, r2) = stats::linear_fit(&xs, &ys);
+        assert!((fa - a).abs() < 1e-6 * (1.0 + a.abs()));
+        assert!((fb - b).abs() < 1e-6 * (1.0 + b.abs()));
+        assert!(r2 > 0.999 || a.abs() < 1e-9);
+    }
+}
+
+#[test]
+fn prop_percentiles_bounded_by_extremes() {
+    let mut rng = Rng::new(0xBEE);
+    for _ in 0..CASES {
+        let n = rng.range(1, 100) as usize;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let s = stats::Summary::of(&xs);
+        assert!(s.min <= s.p10 && s.p10 <= s.median);
+        assert!(s.median <= s.p90 && s.p90 <= s.max);
+        assert!(s.mean >= s.min - 1e-12 && s.mean <= s.max + 1e-12);
+    }
+}
+
+#[test]
+fn prop_evolution_composition_is_multiplicative() {
+    let mut rng = Rng::new(0xE70);
+    let d = catalog::mi210();
+    for _ in 0..CASES {
+        let e1 = Evolution { flop_scale: 1.0 + rng.f64() * 4.0, bw_scale: 1.0 + rng.f64() };
+        let e2 = Evolution { flop_scale: 1.0 + rng.f64() * 4.0, bw_scale: 1.0 + rng.f64() };
+        let seq = e2.apply(&e1.apply(&d));
+        let direct = Evolution {
+            flop_scale: e1.flop_scale * e2.flop_scale,
+            bw_scale: e1.bw_scale * e2.bw_scale,
+        }
+        .apply(&d);
+        let rel = |a: f64, b: f64| (a - b).abs() / b.abs();
+        assert!(rel(seq.peak_flops_f16, direct.peak_flops_f16) < 1e-12);
+        assert!(rel(seq.ring_ar_bw, direct.ring_ar_bw) < 1e-12);
+    }
+}
