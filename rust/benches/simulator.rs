@@ -1,11 +1,14 @@
 //! Bench: the discrete-event simulator core — ops/second through the
 //! engine. DESIGN.md §8 target: ≥ 1M simulated ops/s.
 
+use std::path::Path;
+
 use commscale::graph::{build_layer_graph, GraphOptions};
 use commscale::hw::catalog;
 use commscale::model::{ModelConfig, Precision};
 use commscale::sim::{simulate, AnalyticCost};
 use commscale::util::microbench::{bench_header, Bench};
+use commscale::util::Json;
 
 fn main() {
     bench_header("discrete-event simulator throughput");
@@ -29,6 +32,14 @@ fn main() {
     let r = Bench::new("simulate_96_layer_graph").run(|| simulate(&g, &cost));
     let ops_per_sec = n_ops as f64 / r.summary.median;
     println!("    -> {:.2} M simulated ops/s (target >= 1 M)", ops_per_sec / 1e6);
+    r.write_json_with(
+        Path::new("BENCH_simulator.json"),
+        vec![
+            ("graph_ops", Json::num(n_ops as f64)),
+            ("ops_per_sec", Json::num(ops_per_sec)),
+        ],
+    )
+    .expect("write BENCH_simulator.json");
     assert!(
         ops_per_sec > 1e6,
         "simulator below 1M ops/s: {ops_per_sec:.0}"

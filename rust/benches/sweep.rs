@@ -1,0 +1,127 @@
+//! Bench: the parallel scenario sweep engine vs the serial per-point
+//! baseline (fresh graph build + fresh `simulate` per point — the path the
+//! per-figure loops used before `sweep/` existed). DESIGN.md §8 targets:
+//! ≥ 10k points per grid, ≥ 5× engine speedup over the baseline, and the
+//! machine-readable trajectory record `BENCH_sweep.json`.
+//!
+//! Env knobs (used by CI):
+//! * `COMMSCALE_SWEEP_SMALL=1`  — shrink the grid (~1.2k points) for smoke
+//!   runs.
+//! * `COMMSCALE_SWEEP_RELAX=1`  — report the speedup but skip the ≥ 5×
+//!   assertion (shared CI runners flake on wall-clock ratios).
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use commscale::hw::{catalog, Evolution};
+use commscale::sweep::{self, GridBuilder, ScenarioGrid};
+use commscale::util::microbench::{bench_header, fmt_time, Bench};
+use commscale::util::Json;
+
+fn build_grid(small: bool) -> ScenarioGrid {
+    let d = catalog::mi210();
+    let evolutions = [
+        Evolution::none(),
+        Evolution::flop_vs_bw_2x(),
+        Evolution::flop_vs_bw_4x(),
+    ];
+    let b = if small {
+        // ~1.3k-point smoke grid
+        GridBuilder::new(&d)
+            .hidden(&[4096, 16384, 65536])
+            .seq_len(&[2048, 8192])
+            .batch(&[1])
+            .layers(&[1, 2])
+            .tp(&[4, 16, 64, 256])
+            .dp(&[1, 4])
+            .evolutions(&evolutions[..2])
+    } else {
+        // the full Table-3-shaped product: 7·4·3·2·7·3·3 = 10584 points
+        GridBuilder::new(&d)
+            .hidden(&[1024, 2048, 4096, 8192, 16384, 32768, 65536])
+            .seq_len(&[1024, 2048, 4096, 8192])
+            .batch(&[1, 2, 4])
+            .layers(&[1, 2])
+            .tp(&[4, 8, 16, 32, 64, 128, 256])
+            .dp(&[1, 4, 16])
+            .evolutions(&evolutions)
+    };
+    b.build()
+}
+
+fn main() {
+    bench_header("scenario sweep engine");
+    let small = std::env::var("COMMSCALE_SWEEP_SMALL").is_ok();
+    let relax = std::env::var("COMMSCALE_SWEEP_RELAX").is_ok();
+
+    let grid = build_grid(small);
+    let n = grid.len();
+    let threads = sweep::default_threads();
+    println!(
+        "grid: {n} points ({} hardware points), {threads} worker threads",
+        grid.hardware.len()
+    );
+    assert!(small || n >= 10_000, "full grid must be >= 10k points, got {n}");
+
+    // -- serial per-point baseline (timed once: it is the slow side) -------
+    let t0 = Instant::now();
+    let baseline = sweep::run_serial_reference(&grid);
+    let serial_secs = t0.elapsed().as_secs_f64();
+    println!(
+        "serial baseline: {} total, {} /point, {:.0} points/s",
+        fmt_time(serial_secs),
+        fmt_time(serial_secs / n as f64),
+        n as f64 / serial_secs
+    );
+
+    // -- single-worker engine (cache effect without parallelism) -----------
+    let r1 = Bench::new("sweep_engine_1_worker")
+        .measure(Duration::from_millis(600))
+        .run(|| sweep::run_with(&grid, 1));
+
+    // -- full parallel engine ----------------------------------------------
+    let r = Bench::new(&format!("sweep_engine_{threads}_workers"))
+        .run(|| sweep::run(&grid));
+
+    // sanity: the engine result matches the baseline bit-for-bit
+    let engine = sweep::run(&grid);
+    for (i, (a, b)) in baseline.iter().zip(&engine).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "point {i} diverged from serial");
+    }
+
+    let engine_secs = r.summary.median;
+    let points_per_sec = n as f64 / engine_secs;
+    let p50_point_latency = engine_secs / n as f64;
+    let speedup = serial_secs / engine_secs;
+    let cache_speedup = serial_secs / r1.summary.median;
+    println!(
+        "engine: {:.0} points/s ({} p50/point), {speedup:.1}x vs serial \
+         baseline ({cache_speedup:.1}x from caches alone)",
+        points_per_sec,
+        fmt_time(p50_point_latency)
+    );
+
+    r.write_json_with(
+        Path::new("BENCH_sweep.json"),
+        vec![
+            ("points", Json::num(n as f64)),
+            ("threads", Json::num(threads as f64)),
+            ("points_per_sec", Json::num(points_per_sec)),
+            ("p50_point_latency_s", Json::num(p50_point_latency)),
+            ("serial_baseline_s", Json::num(serial_secs)),
+            ("speedup_vs_serial", Json::num(speedup)),
+            ("speedup_single_worker", Json::num(cache_speedup)),
+            ("small_grid", Json::Bool(small)),
+        ],
+    )
+    .expect("write BENCH_sweep.json");
+
+    if relax {
+        println!("COMMSCALE_SWEEP_RELAX set: skipping the >=5x assertion");
+    } else {
+        assert!(
+            speedup >= 5.0,
+            "sweep engine must be >= 5x the serial baseline, got {speedup:.2}x"
+        );
+    }
+}

@@ -15,8 +15,12 @@
 //! Calibration points appear in the tables marked `(cal)` and are excluded
 //! from the error statistics (they are exact by construction).
 
-use crate::opmodel::{AccuracyReport, AllReduceModel, OperatorModel as _};
+use crate::graph::GraphOptions;
+use crate::hw::DeviceSpec;
+use crate::opmodel::{AccuracyReport, AllReduceModel, MeasuredCost, OperatorModel as _};
 use crate::profiler::ProfileDb;
+use crate::sim::AnalyticCost;
+use crate::sweep::PointEvaluator;
 use crate::{Error, Result};
 
 /// The three Fig 15 panels.
@@ -186,6 +190,32 @@ pub fn fig15_allreduce(db: &ProfileDb) -> Result<AccuracyReport> {
     Ok(report(format!("allreduce {}", model.describe()), rows, &cal))
 }
 
+/// End-to-end accuracy cross-check (§4.2.2's last step): project full
+/// training iterations with the *fitted* operator models and compare them
+/// against the analytic substrate that stands in for measured ground
+/// truth, across the paper's highlighted future-model configs. Both sides
+/// run through the sweep engine's [`PointEvaluator`], sharing one graph
+/// template and simulation arena across all points.
+pub fn e2e_crosscheck(device: &DeviceSpec, measured: &MeasuredCost) -> AccuracyReport {
+    let mut ev = PointEvaluator::new();
+    let opts = GraphOptions::default();
+    let points = super::serialized::highlighted_points()
+        .into_iter()
+        .map(|(name, h, sl, tp)| {
+            let cfg = super::serialized::point_config(h, sl, tp);
+            let truth_cost =
+                AnalyticCost::new(device.clone(), cfg.precision, tp, 1);
+            let truth = ev.eval(&cfg, opts, &truth_cost).makespan;
+            let pred = ev.eval(&cfg, opts, measured).makespan;
+            (format!("{name} (H={h},SL={sl},TP={tp})"), truth, pred)
+        })
+        .collect();
+    AccuracyReport {
+        name: "end-to-end iteration (opmodel vs analytic)".into(),
+        points,
+    }
+}
+
 /// Assemble all Fig 15 panels from a profile (GEMM sweep anchors follow
 /// `aot.py`'s `GEMM_M_FIXED_NK` / `GEMM_H_FIXED_M` = 512).
 pub fn fig15(db: &ProfileDb) -> Result<Fig15Data> {
@@ -302,6 +332,30 @@ mod tests {
     fn allreduce_fit_validates_on_holdout() {
         let rep = fig15_allreduce(&synth_db()).unwrap();
         assert!(rep.geomean_error_pct() < 5.0);
+    }
+
+    #[test]
+    fn e2e_crosscheck_covers_highlighted_configs() {
+        use crate::hw::catalog;
+        use crate::opmodel::{AllReduceModel, GemmModel, LayerNormModel};
+        // a generic CPU-fit-shaped provider: values need not match the GPU
+        // analytic model, but the report must be structurally sound.
+        let mc = MeasuredCost {
+            gemm: GemmModel { per_flop: 1.0 / 100e12, overhead: 5e-6, r2: 1.0 },
+            layernorm: LayerNormModel { per_elem: 1e-11, overhead: 2e-6, r2: 1.0 },
+            allreduce: AllReduceModel { alpha: 30e-6, beta: 100e9, r2: 1.0 },
+            eltwise_per_byte: 1e-12,
+        };
+        let rep = e2e_crosscheck(&catalog::mi210(), &mc);
+        assert_eq!(
+            rep.points.len(),
+            crate::analysis::serialized::highlighted_points().len()
+        );
+        for (label, truth, pred) in &rep.points {
+            assert!(*truth > 0.0 && *pred > 0.0, "{label}");
+            assert!(truth.is_finite() && pred.is_finite(), "{label}");
+        }
+        assert!(rep.geomean_error_pct().is_finite());
     }
 
     #[test]

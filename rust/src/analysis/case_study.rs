@@ -3,9 +3,10 @@
 //! H=64K, B=1, SL=4K, TP=128, flop-vs-bw = 4× (§4.3.7).
 
 use crate::config;
-use crate::graph::{build_layer_graph, GraphOptions};
+use crate::graph::GraphOptions;
 use crate::hw::{DeviceSpec, Evolution};
-use crate::sim::{simulate, AnalyticCost, OverlapModel, SimReport};
+use crate::sim::{OverlapModel, SimReport};
+use crate::sweep::{self, HwPoint, Scenario, ScenarioGrid};
 
 /// One Fig 14 scenario's breakdown (fractions of iteration time).
 #[derive(Debug, Clone)]
@@ -47,26 +48,27 @@ fn breakdown(name: &str, r: SimReport) -> Fig14Scenario {
 /// 1. today's hardware (1×), intra-node DP links;
 /// 2. flop-vs-bw 4× (the paper's headline case);
 /// 3. 4× plus inter-node DP links and interference (§4.3.7's ~8× [53]).
+///
+/// One model config across a three-point hardware axis — a single engine
+/// sweep.
 pub fn fig14(device: &DeviceSpec) -> Vec<Fig14Scenario> {
     let cfg = config::fig14_config();
-    let g = build_layer_graph(&cfg, GraphOptions::default());
-    let mut out = Vec::new();
-
-    let today = AnalyticCost::new(device.clone(), cfg.precision, cfg.tp, cfg.dp);
-    out.push(breakdown("today (1x)", simulate(&g, &today)));
-
-    let d4 = Evolution::flop_vs_bw_4x().apply(device);
-    let evolved = AnalyticCost::new(d4.clone(), cfg.precision, cfg.tp, cfg.dp);
-    out.push(breakdown("flop-vs-bw 4x", simulate(&g, &evolved)));
-
-    let pessimistic = AnalyticCost::new(d4, cfg.precision, cfg.tp, cfg.dp)
-        .with_overlap(OverlapModel::pessimistic());
-    out.push(breakdown(
-        "4x + inter-node/interference",
-        simulate(&g, &pessimistic),
-    ));
-
-    out
+    let ev4 = Evolution::flop_vs_bw_4x();
+    let hardware = vec![
+        HwPoint::today(device),
+        HwPoint::evolved(device, ev4),
+        HwPoint::evolved(device, ev4).with_overlap(OverlapModel::pessimistic()),
+    ];
+    let names = ["today (1x)", "flop-vs-bw 4x", "4x + inter-node/interference"];
+    let points = (0..hardware.len() as u32)
+        .map(|hw| Scenario { cfg, opts: GraphOptions::default(), hw })
+        .collect();
+    let grid = ScenarioGrid::from_parts(hardware, points);
+    sweep::run(&grid)
+        .iter()
+        .zip(names)
+        .map(|(m, name)| breakdown(name, m.to_report()))
+        .collect()
 }
 
 #[cfg(test)]

@@ -2,8 +2,9 @@
 //! evolution: compute FLOPs scaling 2× and 4× faster than network
 //! bandwidth (§4.3.6).
 
-use crate::config;
+use crate::graph::GraphOptions;
 use crate::hw::{DeviceSpec, Evolution};
+use crate::sweep::{self, HwPoint, Scenario, ScenarioGrid};
 
 use super::overlapped::{self, Fig11Point};
 use super::serialized::{self, Fig10Point};
@@ -41,12 +42,21 @@ pub fn paper_scenarios() -> Vec<Evolution> {
 
 /// Min/max comm fraction across the highlighted Fig 10 configs for one
 /// scenario — the paper's "20-50% → 30-65% → 40-75%" progression.
+/// Routed through the sweep engine over the evolved hardware point.
 pub fn comm_fraction_band(device: &DeviceSpec, ev: Evolution) -> (f64, f64) {
-    let d = ev.apply(device);
+    let points = serialized::highlighted_points()
+        .iter()
+        .map(|&(_, h, sl, tp)| Scenario {
+            cfg: serialized::point_config(h, sl, tp),
+            opts: GraphOptions::default(),
+            hw: 0,
+        })
+        .collect();
+    let grid = ScenarioGrid::from_parts(vec![HwPoint::evolved(device, ev)], points);
     let mut lo = f64::MAX;
     let mut hi: f64 = 0.0;
-    for (_, h, sl, tp) in serialized::highlighted_points() {
-        let f = serialized::simulate_point(&d, h, sl, tp).comm_fraction();
+    for m in sweep::run(&grid) {
+        let f = m.comm_fraction();
         lo = lo.min(f);
         hi = hi.max(f);
     }
@@ -54,18 +64,18 @@ pub fn comm_fraction_band(device: &DeviceSpec, ev: Evolution) -> (f64, f64) {
 }
 
 /// Count of Fig 13 grid points where overlapped comm exceeds compute
-/// (≥ 100% — communication becomes exposed, §4.3.6).
+/// (≥ 100% — communication becomes exposed, §4.3.6). One engine sweep over
+/// the evolved Fig 11 grid.
 pub fn fig13_exposed_count(device: &DeviceSpec, ev: Evolution) -> usize {
     let d = ev.apply(device);
-    let mut n = 0;
-    for &h in &config::fig11_hidden_series() {
-        for &slb in &config::fig11_slb_sweep() {
-            if overlapped::simulate_point(&d, h, slb).pct_of_compute >= 100.0 {
-                n += 1;
-            }
-        }
-    }
-    n
+    let grid = overlapped::fig11_grid(&d);
+    sweep::run(&grid)
+        .iter()
+        .zip(&grid.points)
+        .filter(|(m, sc)| {
+            overlapped::point_from_metrics(&sc.cfg, m).pct_of_compute >= 100.0
+        })
+        .count()
 }
 
 #[cfg(test)]

@@ -2,10 +2,11 @@
 //! time, swept over SL·B for several hidden sizes at TP = 16 (§4.3.5).
 
 use crate::config;
-use crate::graph::{build_layer_graph, GraphOptions};
+use crate::graph::GraphOptions;
 use crate::hw::DeviceSpec;
 use crate::model::{ModelConfig, Precision};
-use crate::sim::{simulate, AnalyticCost, CostProvider};
+use crate::sim::{AnalyticCost, CostProvider};
+use crate::sweep::{self, HwPoint, PointEvaluator, PointMetrics, Scenario, ScenarioGrid};
 
 /// One Fig 11 point.
 #[derive(Debug, Clone)]
@@ -37,18 +38,22 @@ pub fn point_config(hidden: u64, slb: u64) -> ModelConfig {
     }
 }
 
-pub fn point_with(cfg: &ModelConfig, cost: &dyn CostProvider) -> Fig11Point {
-    let g = build_layer_graph(cfg, GraphOptions::default());
-    let r = simulate(&g, cost);
-    // Fig 11 compares DP comm against the *backward* compute it overlaps
-    // with (Fig 5a: WG + error GEMMs).
-    let pct = 100.0 * r.overlapped_comm / r.bwd_compute.max(1e-12);
+/// Derive a Fig 11 point from sweep metrics. Fig 11 compares DP comm
+/// against the *backward* compute it overlaps with (Fig 5a: WG + error
+/// GEMMs).
+pub fn point_from_metrics(cfg: &ModelConfig, m: &PointMetrics) -> Fig11Point {
+    let pct = 100.0 * m.overlapped_comm / m.bwd_compute.max(1e-12);
     Fig11Point {
         hidden: cfg.hidden,
         slb: cfg.seq_len * cfg.batch,
         pct_of_compute: pct,
-        exposed: r.exposed_comm > 1e-9 && r.overlapped_comm > 0.0,
+        exposed: m.exposed_comm > 1e-9 && m.overlapped_comm > 0.0,
     }
+}
+
+pub fn point_with(cfg: &ModelConfig, cost: &dyn CostProvider) -> Fig11Point {
+    let m = PointEvaluator::new().eval(cfg, GraphOptions::default(), cost);
+    point_from_metrics(cfg, &m)
 }
 
 pub fn simulate_point(device: &DeviceSpec, hidden: u64, slb: u64) -> Fig11Point {
@@ -57,15 +62,30 @@ pub fn simulate_point(device: &DeviceSpec, hidden: u64, slb: u64) -> Fig11Point 
     point_with(&cfg, &cost)
 }
 
-/// Full Fig 11 dataset.
-pub fn fig11(device: &DeviceSpec) -> Vec<Fig11Point> {
-    let mut out = Vec::new();
+/// The Fig 11 scenario grid on a device: H-major, SL·B-minor (shared with
+/// Fig 13's evolved variants and the determinism tests).
+pub fn fig11_grid(device: &DeviceSpec) -> ScenarioGrid {
+    let mut points = Vec::new();
     for &h in &config::fig11_hidden_series() {
         for &slb in &config::fig11_slb_sweep() {
-            out.push(simulate_point(device, h, slb));
+            points.push(Scenario {
+                cfg: point_config(h, slb),
+                opts: GraphOptions::default(),
+                hw: 0,
+            });
         }
     }
-    out
+    ScenarioGrid::from_parts(vec![HwPoint::today(device)], points)
+}
+
+/// Full Fig 11 dataset (parallel sweep).
+pub fn fig11(device: &DeviceSpec) -> Vec<Fig11Point> {
+    let grid = fig11_grid(device);
+    sweep::run(&grid)
+        .iter()
+        .zip(&grid.points)
+        .map(|(m, sc)| point_from_metrics(&sc.cfg, m))
+        .collect()
 }
 
 #[cfg(test)]

@@ -2,10 +2,11 @@
 //! communication, swept over (H, SL) series × TP degree (§4.3.4).
 
 use crate::config;
-use crate::graph::{build_layer_graph, GraphOptions};
+use crate::graph::GraphOptions;
 use crate::hw::DeviceSpec;
 use crate::model::{ModelConfig, Precision};
-use crate::sim::{simulate, AnalyticCost, CostProvider, SimReport};
+use crate::sim::{AnalyticCost, CostProvider, SimReport};
+use crate::sweep::{self, HwPoint, PointEvaluator, Scenario, ScenarioGrid};
 
 /// One Fig 10 point: a (series, TP) cell.
 #[derive(Debug, Clone)]
@@ -49,25 +50,43 @@ pub fn simulate_point(
 }
 
 /// Simulate one point with an arbitrary cost provider (used by the
-/// opmodel-driven variant and the evolution figures).
+/// opmodel-driven variant and the evolution figures). Routed through the
+/// sweep engine's single-point front end.
 pub fn simulate_point_with(cfg: &ModelConfig, cost: &dyn CostProvider) -> SimReport {
-    let g = build_layer_graph(cfg, GraphOptions::default());
-    simulate(&g, cost)
+    PointEvaluator::new().eval_report(cfg, GraphOptions::default(), cost)
 }
 
-/// Generate the full Fig 10 dataset on a device.
+/// The Fig 10 scenario grid on a device: every (series, TP) cell, in
+/// series-major, TP-minor order (shared with the determinism tests).
+pub fn fig10_grid(device: &DeviceSpec) -> ScenarioGrid {
+    let mut points = Vec::new();
+    for (_, h, sl) in config::fig10_series() {
+        for &tp in &config::fig10_tp_sweep() {
+            points.push(Scenario {
+                cfg: point_config(h, sl, tp),
+                opts: GraphOptions::default(),
+                hw: 0,
+            });
+        }
+    }
+    ScenarioGrid::from_parts(vec![HwPoint::today(device)], points)
+}
+
+/// Generate the full Fig 10 dataset on a device (parallel sweep).
 pub fn fig10(device: &DeviceSpec) -> Vec<Fig10Point> {
-    let mut out = Vec::new();
+    let metrics = sweep::run(&fig10_grid(device));
+    let mut out = Vec::with_capacity(metrics.len());
+    let mut it = metrics.into_iter();
     for (label, h, sl) in config::fig10_series() {
         for &tp in &config::fig10_tp_sweep() {
-            let report = simulate_point(device, h, sl, tp);
+            let m = it.next().expect("grid aligned with series × TP sweep");
             out.push(Fig10Point {
                 series: label.to_string(),
                 hidden: h,
                 seq_len: sl,
                 tp,
-                comm_fraction: report.comm_fraction(),
-                report,
+                comm_fraction: m.comm_fraction(),
+                report: m.to_report(),
             });
         }
     }

@@ -1,6 +1,18 @@
 //! Builds the per-device operator graph of a distributed Transformer
 //! training iteration (forward + backward + optimizer), following the
 //! paper's Fig 4/5 decomposition and Megatron-style TP slicing.
+//!
+//! Two entry points share one emission routine:
+//!
+//! * [`build_layer_graph`] constructs a fresh graph (ops + dependencies);
+//! * [`rewrite_layer_graph`] re-instantiates the op *payloads* of an
+//!   existing graph in place, leaving the dependency structure untouched.
+//!
+//! The dependency structure only depends on the graph *shape*
+//! ([`GraphShapeKey`]: layer count + which op classes are emitted), while
+//! payloads (GEMM dims, AR bytes) depend on the full `ModelConfig`. The
+//! sweep engine exploits this: one template graph per shape, rewritten per
+//! scenario point with no per-point dependency-vector allocations.
 
 use crate::model::ModelConfig;
 #[cfg(test)]
@@ -28,10 +40,103 @@ impl Default for GraphOptions {
     }
 }
 
+/// The topology class of a built graph: everything that determines the
+/// dependency structure, but none of the op payloads. Two configs with the
+/// same shape key produce graphs that differ only in op `kind` payloads —
+/// the invariant behind the sweep engine's graph-template cache.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GraphShapeKey {
+    pub layers: u64,
+    /// Serialized TP all-reduces are emitted (`opts.tp_allreduce && tp > 1`).
+    pub tp_ars: bool,
+    /// Overlappable DP all-reduces are emitted (`opts.dp_allreduce && dp > 1`).
+    pub dp_ars: bool,
+    /// LayerNorm / element-wise / optimizer ops are emitted.
+    pub non_gemm: bool,
+}
+
+impl GraphShapeKey {
+    pub fn of(cfg: &ModelConfig, opts: GraphOptions) -> GraphShapeKey {
+        GraphShapeKey {
+            layers: cfg.layers,
+            tp_ars: opts.tp_allreduce && cfg.tp > 1,
+            dp_ars: opts.dp_allreduce && cfg.dp > 1,
+            non_gemm: opts.non_gemm,
+        }
+    }
+}
+
+/// How [`emit_layer_graph`] materializes ops: append fresh nodes, or walk
+/// an existing shape-matched graph rewriting only the payloads.
+enum Emitter<'g> {
+    Build(&'g mut OpGraph),
+    Rewrite { g: &'g mut OpGraph, idx: usize },
+}
+
+impl Emitter<'_> {
+    fn is_build(&self) -> bool {
+        matches!(self, Emitter::Build(_))
+    }
+
+    fn add(&mut self, kind: OpKind, phase: Phase, deps: &[OpId]) -> OpId {
+        match self {
+            Emitter::Build(g) => g.add(kind, phase, deps.to_vec()),
+            Emitter::Rewrite { g, idx } => {
+                let op = &mut g.ops[*idx];
+                debug_assert_eq!(
+                    op.phase, phase,
+                    "template rewrite walked out of shape at op {idx:?}"
+                );
+                op.kind = kind;
+                *idx += 1;
+                op.id
+            }
+        }
+    }
+}
+
 /// Build one device's operator graph for a full training iteration of
 /// `cfg.layers` Transformer layers.
 pub fn build_layer_graph(cfg: &ModelConfig, opts: GraphOptions) -> OpGraph {
     let mut g = OpGraph::default();
+    emit_layer_graph(cfg, opts, &mut Emitter::Build(&mut g));
+    g.shape = Some(GraphShapeKey::of(cfg, opts));
+    g
+}
+
+/// Re-instantiate `g`'s op payloads for `cfg` in place, without touching
+/// the dependency structure. `g` must have come from [`build_layer_graph`]
+/// with the same [`GraphShapeKey`] — asserted via the graph's shape tag,
+/// so op-count coincidences between different shapes cannot slip through.
+/// Performs no heap allocation.
+pub fn rewrite_layer_graph(cfg: &ModelConfig, opts: GraphOptions, g: &mut OpGraph) {
+    let shape = GraphShapeKey::of(cfg, opts);
+    assert_eq!(
+        g.shape,
+        Some(shape),
+        "rewrite_layer_graph: template shape {:?} cannot take configs of \
+         shape {shape:?}",
+        g.shape
+    );
+    let n = g.ops.len();
+    let mut em = Emitter::Rewrite { g, idx: 0 };
+    emit_layer_graph(cfg, opts, &mut em);
+    let Emitter::Rewrite { idx, .. } = em else { unreachable!() };
+    debug_assert_eq!(idx, n, "shape-matched rewrite must touch every op");
+}
+
+/// Dependency slice of an optional producer (no allocation).
+fn dep(prev: &Option<OpId>) -> &[OpId] {
+    match prev {
+        Some(p) => std::slice::from_ref(p),
+        None => &[],
+    }
+}
+
+/// One shared emission routine for build and rewrite (see module docs).
+/// Everything dependency-shaped here must be a function of
+/// [`GraphShapeKey`] alone — payloads may use the full config.
+fn emit_layer_graph(cfg: &ModelConfig, opts: GraphOptions, em: &mut Emitter<'_>) {
     let (h, sl, b, tp) = (cfg.hidden, cfg.seq_len, cfg.batch, cfg.tp);
     let f = cfg.ffn();
     let bs = b * sl;
@@ -48,87 +153,84 @@ pub fn build_layer_graph(cfg: &ModelConfig, opts: GraphOptions) -> OpGraph {
     // ---- forward ----------------------------------------------------------
     // `prev` is the op producing the layer input.
     let mut prev: Option<OpId> = None;
-    let mut fwd_tail_per_layer: Vec<OpId> = Vec::new();
-    let dep = |prev: &Option<OpId>| prev.iter().copied().collect::<Vec<_>>();
 
     for _layer in 0..cfg.layers {
         // attention sub-layer
         let ln1 = if opts.non_gemm {
-            Some(g.add(OpKind::LayerNorm { rows: bs, h }, Phase::Forward, dep(&prev)))
+            Some(em.add(OpKind::LayerNorm { rows: bs, h }, Phase::Forward, dep(&prev)))
         } else {
             None
         };
         let attn_in = ln1.or(prev);
-        let qkv = g.add(
+        let qkv = em.add(
             OpKind::Gemm { m: bs, n: 3 * h / tp, k: h, count: 1 },
             Phase::Forward,
-            dep(&attn_in.map(Some).unwrap_or(None)),
+            dep(&attn_in),
         );
-        let scores = g.add(
+        let scores = em.add(
             OpKind::Gemm { m: sl, n: sl, k: hd, count: b * heads_dev },
             Phase::Forward,
-            vec![qkv],
+            &[qkv],
         );
-        let ctx = g.add(
+        let ctx = em.add(
             OpKind::Gemm { m: sl, n: hd, k: sl, count: b * heads_dev },
             Phase::Forward,
-            vec![scores],
+            &[scores],
         );
-        let out = g.add(
+        let out = em.add(
             OpKind::Gemm { m: bs, n: h, k: h / tp, count: 1 },
             Phase::Forward,
-            vec![ctx],
+            &[ctx],
         );
         // row-parallel out-proj produces a partial sum → serialized AR
         let mut tail = out;
         if tp_on {
-            tail = g.add(
+            tail = em.add(
                 OpKind::AllReduce { bytes: act_bytes, class: CommClass::Serialized },
                 Phase::Forward,
-                vec![out],
+                &[out],
             );
         }
         if opts.non_gemm {
             // residual add
-            tail = g.add(
+            tail = em.add(
                 OpKind::Elementwise { bytes: 3 * act_bytes },
                 Phase::Forward,
-                vec![tail],
+                &[tail],
             );
         }
 
         // FC sub-layer
         let ln2 = if opts.non_gemm {
-            Some(g.add(OpKind::LayerNorm { rows: bs, h }, Phase::Forward, vec![tail]))
+            Some(em.add(OpKind::LayerNorm { rows: bs, h }, Phase::Forward, &[tail]))
         } else {
             None
         };
-        let fc1 = g.add(
+        let fc1 = em.add(
             OpKind::Gemm { m: bs, n: f / tp, k: h, count: 1 },
             Phase::Forward,
-            vec![ln2.unwrap_or(tail)],
+            &[ln2.unwrap_or(tail)],
         );
-        let fc2 = g.add(
+        let fc2 = em.add(
             OpKind::Gemm { m: bs, n: h, k: f / tp, count: 1 },
             Phase::Forward,
-            vec![fc1],
+            &[fc1],
         );
         let mut tail2 = fc2;
         if tp_on {
-            tail2 = g.add(
+            tail2 = em.add(
                 OpKind::AllReduce { bytes: act_bytes, class: CommClass::Serialized },
                 Phase::Forward,
-                vec![fc2],
+                &[fc2],
             );
         }
         if opts.non_gemm {
-            tail2 = g.add(
+            tail2 = em.add(
                 OpKind::Elementwise { bytes: 3 * act_bytes },
                 Phase::Forward,
-                vec![tail2],
+                &[tail2],
             );
         }
-        fwd_tail_per_layer.push(tail2);
         prev = Some(tail2);
     }
 
@@ -136,106 +238,110 @@ pub fn build_layer_graph(cfg: &ModelConfig, opts: GraphOptions) -> OpGraph {
     // For each fwd GEMM (M,N,K): input-grad GEMM (M,K,N) + weight-grad GEMM
     // (K,N,M) — same flop count each (Eq. 7).
     let mut bprev = prev; // gradient flowing in from the loss
+    // Collected only when building: rewrites never touch deps, and an empty
+    // Vec never allocates.
     let mut dp_ar_ids: Vec<OpId> = Vec::new();
 
     for _layer in (0..cfg.layers).rev() {
         // FC sub-layer backward
-        let fc2_ig = g.add(
+        let fc2_ig = em.add(
             OpKind::Gemm { m: bs, n: f / tp, k: h, count: 1 },
             Phase::Backward,
             dep(&bprev),
         );
-        let fc2_wg = g.add(
+        let fc2_wg = em.add(
             OpKind::Gemm { m: f / tp, n: h, k: bs, count: 1 },
             Phase::Backward,
             dep(&bprev),
         );
-        let fc1_ig = g.add(
+        let fc1_ig = em.add(
             OpKind::Gemm { m: bs, n: h, k: f / tp, count: 1 },
             Phase::Backward,
-            vec![fc2_ig],
+            &[fc2_ig],
         );
-        let fc1_wg = g.add(
+        let fc1_wg = em.add(
             OpKind::Gemm { m: h, n: f / tp, k: bs, count: 1 },
             Phase::Backward,
-            vec![fc2_ig],
+            &[fc2_ig],
         );
         // column-parallel fc1's input-grad is a partial sum → serialized AR
         let mut btail = fc1_ig;
         if tp_on {
-            btail = g.add(
+            btail = em.add(
                 OpKind::AllReduce { bytes: act_bytes, class: CommClass::Serialized },
                 Phase::Backward,
-                vec![fc1_ig],
+                &[fc1_ig],
             );
         }
         if opts.non_gemm {
-            btail = g.add(
+            btail = em.add(
                 OpKind::LayerNorm { rows: bs, h },
                 Phase::Backward,
-                vec![btail],
+                &[btail],
             );
         }
 
         // attention sub-layer backward
-        let out_ig = g.add(
+        let out_ig = em.add(
             OpKind::Gemm { m: bs, n: h / tp, k: h, count: 1 },
             Phase::Backward,
-            vec![btail],
+            &[btail],
         );
-        let out_wg = g.add(
+        let out_wg = em.add(
             OpKind::Gemm { m: h / tp, n: h, k: bs, count: 1 },
             Phase::Backward,
-            vec![btail],
+            &[btail],
         );
-        let ctx_bwd = g.add(
+        let ctx_bwd = em.add(
             OpKind::Gemm { m: sl, n: sl, k: hd, count: 2 * b * heads_dev },
             Phase::Backward,
-            vec![out_ig],
+            &[out_ig],
         );
-        let scores_bwd = g.add(
+        let scores_bwd = em.add(
             OpKind::Gemm { m: sl, n: hd, k: sl, count: 2 * b * heads_dev },
             Phase::Backward,
-            vec![ctx_bwd],
+            &[ctx_bwd],
         );
-        let qkv_ig = g.add(
+        let qkv_ig = em.add(
             OpKind::Gemm { m: bs, n: h, k: 3 * h / tp, count: 1 },
             Phase::Backward,
-            vec![scores_bwd],
+            &[scores_bwd],
         );
-        let qkv_wg = g.add(
+        let qkv_wg = em.add(
             OpKind::Gemm { m: 3 * h / tp, n: h, k: bs, count: 1 },
             Phase::Backward,
-            vec![scores_bwd],
+            &[scores_bwd],
         );
         let mut btail2 = qkv_ig;
         if tp_on {
-            btail2 = g.add(
+            btail2 = em.add(
                 OpKind::AllReduce { bytes: act_bytes, class: CommClass::Serialized },
                 Phase::Backward,
-                vec![qkv_ig],
+                &[qkv_ig],
             );
         }
         if opts.non_gemm {
-            btail2 = g.add(
+            btail2 = em.add(
                 OpKind::LayerNorm { rows: bs, h },
                 Phase::Backward,
-                vec![btail2],
+                &[btail2],
             );
         }
 
         // DP weight-gradient all-reduce: issued once the layer's last WG
         // completes; overlappable with the next (earlier) layer's backprop.
         if dp_on {
-            let ar = g.add(
+            let ar = em.add(
                 OpKind::AllReduce {
                     bytes: layer_param_bytes,
                     class: CommClass::Overlappable,
                 },
                 Phase::Backward,
-                vec![fc2_wg, fc1_wg, out_wg, qkv_wg],
+                &[fc2_wg, fc1_wg, out_wg, qkv_wg],
             );
-            dp_ar_ids.push(ar);
+            if em.is_build() {
+                dp_ar_ids.push(ar);
+            }
         }
 
         bprev = Some(btail2);
@@ -243,18 +349,19 @@ pub fn build_layer_graph(cfg: &ModelConfig, opts: GraphOptions) -> OpGraph {
 
     // ---- optimizer ----------------------------------------------------------
     if opts.non_gemm {
-        let mut deps = dep(&bprev);
-        deps.extend(dp_ar_ids.iter().copied());
+        let deps: Vec<OpId> = if em.is_build() {
+            bprev.iter().copied().chain(dp_ar_ids.iter().copied()).collect()
+        } else {
+            Vec::new() // rewrites never read deps
+        };
         let param_bytes = cfg.layers * layer_param_bytes;
-        g.add(
+        em.add(
             // Adam reads grads + 2 moments + params, writes params + moments
             OpKind::Elementwise { bytes: 6 * param_bytes },
             Phase::Optimizer,
-            deps,
+            &deps,
         );
     }
-
-    g
 }
 
 #[cfg(test)]
@@ -403,5 +510,72 @@ mod tests {
             o.kind,
             OpKind::LayerNorm { .. } | OpKind::Elementwise { .. }
         )));
+    }
+
+    #[test]
+    fn shape_key_ignores_payload_axes() {
+        let opts = GraphOptions::default();
+        let a = GraphShapeKey::of(&cfg(4, 4), opts);
+        // H/SL/B/heads don't change the topology...
+        let mut big = cfg(4, 4);
+        big.hidden = 8192;
+        big.seq_len = 4096;
+        big.heads = 64;
+        assert_eq!(a, GraphShapeKey::of(&big, opts));
+        // ...but collapsing a parallelism degree to 1 does.
+        assert_ne!(a, GraphShapeKey::of(&cfg(1, 4), opts));
+        assert_ne!(a, GraphShapeKey::of(&cfg(4, 1), opts));
+    }
+
+    #[test]
+    fn rewrite_matches_fresh_build_exactly() {
+        let opts = GraphOptions::default();
+        // template built from one config, rewritten to a payload-different
+        // config of the same shape — must equal a fresh build of the target.
+        let from = cfg(8, 8);
+        let mut to = cfg(8, 8);
+        to.hidden = 2048;
+        to.seq_len = 1024;
+        to.batch = 2;
+        to.heads = 32;
+
+        let mut template = build_layer_graph(&from, opts);
+        rewrite_layer_graph(&to, opts, &mut template);
+        let fresh = build_layer_graph(&to, opts);
+
+        assert_eq!(template.ops.len(), fresh.ops.len());
+        for (a, b) in template.ops.iter().zip(&fresh.ops) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.phase, b.phase);
+            assert_eq!(a.deps, b.deps);
+        }
+    }
+
+    #[test]
+    fn rewrite_roundtrip_restores_original() {
+        let opts = GraphOptions::default();
+        let a_cfg = cfg(4, 4);
+        let mut b_cfg = a_cfg;
+        b_cfg.hidden = 4096;
+        b_cfg.heads = 64;
+
+        let original = build_layer_graph(&a_cfg, opts);
+        let mut g = original.clone();
+        rewrite_layer_graph(&b_cfg, opts, &mut g);
+        rewrite_layer_graph(&a_cfg, opts, &mut g);
+        for (x, y) in g.ops.iter().zip(&original.ops) {
+            assert_eq!(x.kind, y.kind);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "shape")]
+    fn rewrite_rejects_shape_mismatch() {
+        let opts = GraphOptions::default();
+        let mut g = build_layer_graph(&cfg(4, 4), opts);
+        // different layer count -> different op count -> must panic
+        let other = ModelConfig { layers: 2, ..cfg(4, 4) };
+        rewrite_layer_graph(&other, opts, &mut g);
     }
 }

@@ -11,13 +11,21 @@
 pub mod builder;
 pub mod op;
 
-pub use builder::{build_layer_graph, GraphOptions};
+pub use builder::{
+    build_layer_graph, rewrite_layer_graph, GraphOptions, GraphShapeKey,
+};
 pub use op::{CommClass, Op, OpId, OpKind, Phase};
 
 /// A dependency-ordered operator graph for one device's view of training.
 #[derive(Debug, Clone, Default)]
 pub struct OpGraph {
     pub ops: Vec<Op>,
+    /// The topology class this graph was built from, when it came out of
+    /// [`build_layer_graph`] (`None` for hand-assembled graphs).
+    /// [`rewrite_layer_graph`] refuses to re-instantiate a graph whose
+    /// shape key doesn't match the target config — op-count coincidences
+    /// between different shapes must not silently corrupt payloads.
+    pub shape: Option<GraphShapeKey>,
 }
 
 impl OpGraph {

@@ -24,7 +24,10 @@ pub enum Phase {
 }
 
 /// The operator payload: everything the cost providers need.
-#[derive(Debug, Clone, Copy, PartialEq)]
+///
+/// All fields are integral, so `Eq`/`Hash` are exact — the sweep engine
+/// uses `OpKind` directly as its memoized-cost-table key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum OpKind {
     /// `count` GEMMs of (m, n, k) each — e.g. per-head attention GEMMs.
     Gemm { m: u64, n: u64, k: u64, count: u64 },

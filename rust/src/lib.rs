@@ -21,6 +21,11 @@
 //!   serialized-vs-overlappable communication classes.
 //! * [`sim`] — a discrete-event simulator with per-device compute and
 //!   communication streams and overlap accounting.
+//! * [`sweep`] — the parallel, allocation-free scenario sweep engine: a
+//!   [`sweep::ScenarioGrid`] over model × parallelism × hardware axes is
+//!   evaluated across threads with per-worker graph-template caches,
+//!   memoized operator costs, and reusable simulation arenas — the
+//!   substrate for hundred-to-ten-thousand-point projection grids.
 //! * [`opmodel`] — the paper's operator-level runtime models: fit on a
 //!   profiled baseline, project hundreds of configurations (§4.2.2).
 //! * [`profiler`] — ROI extraction: measures ground-truth operator times by
@@ -46,25 +51,49 @@ pub mod profiler;
 pub mod report;
 pub mod runtime;
 pub mod sim;
+pub mod sweep;
 pub mod util;
 
-/// Crate-wide error type.
-#[derive(Debug, thiserror::Error)]
+/// Crate-wide error type (hand-rolled Display/Error impls: the build is
+/// fully offline, so no `thiserror`).
+#[derive(Debug)]
 pub enum Error {
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("json error: {0}")]
+    Io(std::io::Error),
     Json(String),
-    #[error("manifest error: {0}")]
     Manifest(String),
-    #[error("xla error: {0}")]
     Xla(String),
-    #[error("config error: {0}")]
     Config(String),
-    #[error("simulation error: {0}")]
     Sim(String),
-    #[error("opmodel error: {0}")]
     OpModel(String),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Json(m) => write!(f, "json error: {m}"),
+            Error::Manifest(m) => write!(f, "manifest error: {m}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Sim(m) => write!(f, "simulation error: {m}"),
+            Error::OpModel(m) => write!(f, "opmodel error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {

@@ -3,8 +3,9 @@
 //! every configuration, plus the 1.5× ROI-extraction saving.
 
 use crate::config::SweepGrid;
-use crate::graph::{build_layer_graph, GraphOptions};
-use crate::sim::{simulate, CostProvider};
+use crate::graph::GraphOptions;
+use crate::sim::CostProvider;
+use crate::sweep::PointEvaluator;
 
 /// Cost comparison between exhaustive profiling and the projection
 /// strategy.
@@ -43,13 +44,16 @@ impl SpeedupAccounting {
             .filter(|c| c.batch == grid.batch[0])
             .collect();
 
+        // One evaluator across all 196 configs: every point shares the
+        // 96-layer graph shape, so the engine rebuilds payloads in place
+        // instead of re-allocating ~1500 dependency vectors per config.
+        let mut ev = PointEvaluator::new();
         let mut exhaustive = 0.0;
         for c in &configs {
             // scale a representative deep model: Table 2 models are ~100
             // layers at these widths.
             let c_full = c.with_layers(96);
-            let g = build_layer_graph(&c_full, GraphOptions::default());
-            let iter = simulate(&g, cost).makespan;
+            let iter = ev.eval(&c_full, GraphOptions::default(), cost).makespan;
             exhaustive += SETUP_SECS + PROFILE_ITERS * TRACE_OVERHEAD * iter;
         }
         let strategy =

@@ -80,12 +80,50 @@ impl SimReport {
     }
 }
 
+/// Reusable simulation scratch space.
+///
+/// `simulate` allocates a fresh end-times vector per call; sweep workers
+/// evaluating tens of thousands of points instead keep one arena each and
+/// call [`simulate_with`], which reuses the buffer's capacity — zero heap
+/// allocation per point once the arena has grown to the largest graph seen.
+#[derive(Debug, Default)]
+pub struct SimArena {
+    end: Vec<f64>,
+}
+
+impl SimArena {
+    pub fn new() -> SimArena {
+        SimArena::default()
+    }
+}
+
 /// Run the graph against a cost provider.
 pub fn simulate(graph: &OpGraph, cost: &dyn CostProvider) -> SimReport {
+    simulate_with(graph, cost, &mut SimArena::new(), true)
+}
+
+/// [`simulate`] with caller-provided scratch space.
+///
+/// With `record_intervals = false` the report's `intervals` stay empty
+/// (`Vec::new` does not allocate) and the only buffer touched is the
+/// arena's, so the call performs no heap allocation. All other report
+/// fields are bit-identical to a plain `simulate` run.
+pub fn simulate_with(
+    graph: &OpGraph,
+    cost: &dyn CostProvider,
+    arena: &mut SimArena,
+    record_intervals: bool,
+) -> SimReport {
     let n = graph.ops.len();
-    let mut end = vec![0.0f64; n];
+    arena.end.clear();
+    arena.end.resize(n, 0.0);
+    let end = &mut arena.end;
     let mut report = SimReport {
-        intervals: Vec::with_capacity(n),
+        intervals: if record_intervals {
+            Vec::with_capacity(n)
+        } else {
+            Vec::new()
+        },
         ..Default::default()
     };
     let mut free = [0.0f64; 3]; // per-stream next-free time
@@ -122,7 +160,9 @@ pub fn simulate(graph: &OpGraph, cost: &dyn CostProvider) -> SimReport {
         let finish = start + dur;
         free[s] = finish;
         end[op.id.0] = finish;
-        report.intervals.push((start, finish));
+        if record_intervals {
+            report.intervals.push((start, finish));
+        }
     }
 
     report.makespan = end.iter().copied().fold(0.0, f64::max);
@@ -298,6 +338,45 @@ mod tests {
         // fraction in a sane range for this mid-size TP-16 config
         let f = r.comm_fraction();
         assert!((0.02..0.9).contains(&f), "comm fraction {f}");
+    }
+
+    #[test]
+    fn arena_reuse_is_bit_identical_to_fresh_simulate() {
+        let cfg = ModelConfig {
+            hidden: 4096,
+            seq_len: 2048,
+            batch: 1,
+            layers: 4,
+            heads: 32,
+            ffn_mult: 4,
+            tp: 8,
+            dp: 4,
+            precision: Precision::F16,
+        };
+        let cost = AnalyticCost::new(catalog::mi210(), cfg.precision, cfg.tp, cfg.dp);
+        let mut arena = SimArena::new();
+        // dirty the arena on a different-sized graph first
+        let small = build_layer_graph(&cfg.with_layers(1), GraphOptions::default());
+        simulate_with(&small, &cost, &mut arena, false);
+
+        let g = build_layer_graph(&cfg, GraphOptions::default());
+        let fresh = simulate(&g, &cost);
+        let reused = simulate_with(&g, &cost, &mut arena, false);
+        for (a, b) in [
+            (fresh.makespan, reused.makespan),
+            (fresh.compute_time, reused.compute_time),
+            (fresh.serialized_comm, reused.serialized_comm),
+            (fresh.overlapped_comm, reused.overlapped_comm),
+            (fresh.exposed_comm, reused.exposed_comm),
+            (fresh.hidden_comm, reused.hidden_comm),
+            (fresh.fwd_compute, reused.fwd_compute),
+            (fresh.bwd_compute, reused.bwd_compute),
+            (fresh.opt_compute, reused.opt_compute),
+        ] {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!(reused.intervals.is_empty());
+        assert_eq!(fresh.intervals.len(), g.len());
     }
 
     #[test]

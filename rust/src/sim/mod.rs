@@ -10,4 +10,4 @@ pub mod cost;
 pub mod engine;
 
 pub use cost::{AnalyticCost, CostProvider, OverlapModel};
-pub use engine::{simulate, SimReport};
+pub use engine::{simulate, simulate_with, SimArena, SimReport};

@@ -1,0 +1,433 @@
+//! The sweep executor: evaluates every point of a [`ScenarioGrid`] with
+//! per-worker reusable state, in parallel, bit-identically to the naive
+//! serial path.
+//!
+//! Per-worker state ([`WorkerCtx`]):
+//!
+//! * a [`SimArena`] so `simulate` reuses its end-times buffer — zero heap
+//!   allocation per point once warmed;
+//! * a graph-template cache keyed by [`GraphShapeKey`]: scenarios with the
+//!   same topology reuse one `OpGraph`, rewritten in place per point
+//!   ([`rewrite_layer_graph`]) so only op payloads change;
+//! * an [`AnalyticCost`] cache keyed by (hardware, tp, dp, precision), so
+//!   the string-bearing `DeviceSpec` is cloned once per combination;
+//! * memoized operator-cost tables keyed by `(cost id, OpKind)` and
+//!   `(cost id, bytes, class)` — sweep points share most op shapes, so a
+//!   96-layer graph costs ~10 distinct GEMMs instead of ~1500.
+//!
+//! Determinism: every point is a pure function of its scenario, workers
+//! share no mutable float state, and memoization returns the exact bits
+//! the first computation produced — so the parallel result equals
+//! [`run_serial_reference`] bit-for-bit (asserted by
+//! `tests/sweep_determinism.rs`).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::graph::{
+    build_layer_graph, rewrite_layer_graph, CommClass, GraphOptions,
+    GraphShapeKey, OpGraph, OpKind,
+};
+use crate::model::{ModelConfig, Precision};
+use crate::sim::{
+    simulate, simulate_with, AnalyticCost, CostProvider, SimArena, SimReport,
+};
+
+use super::grid::{Scenario, ScenarioGrid};
+
+/// Scalar outcome of one scenario point: a [`SimReport`] minus the per-op
+/// intervals, `Copy` so sweep results live in one flat allocation.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PointMetrics {
+    pub makespan: f64,
+    pub compute_time: f64,
+    pub serialized_comm: f64,
+    pub overlapped_comm: f64,
+    pub exposed_comm: f64,
+    pub hidden_comm: f64,
+    pub fwd_compute: f64,
+    pub bwd_compute: f64,
+    pub opt_compute: f64,
+}
+
+impl PointMetrics {
+    pub fn from_report(r: &SimReport) -> PointMetrics {
+        PointMetrics {
+            makespan: r.makespan,
+            compute_time: r.compute_time,
+            serialized_comm: r.serialized_comm,
+            overlapped_comm: r.overlapped_comm,
+            exposed_comm: r.exposed_comm,
+            hidden_comm: r.hidden_comm,
+            fwd_compute: r.fwd_compute,
+            bwd_compute: r.bwd_compute,
+            opt_compute: r.opt_compute,
+        }
+    }
+
+    /// Rebuild a (interval-free) [`SimReport`] — for APIs that carry one.
+    pub fn to_report(&self) -> SimReport {
+        SimReport {
+            makespan: self.makespan,
+            compute_time: self.compute_time,
+            serialized_comm: self.serialized_comm,
+            overlapped_comm: self.overlapped_comm,
+            exposed_comm: self.exposed_comm,
+            hidden_comm: self.hidden_comm,
+            fwd_compute: self.fwd_compute,
+            bwd_compute: self.bwd_compute,
+            opt_compute: self.opt_compute,
+            intervals: Vec::new(),
+        }
+    }
+
+    /// Fraction of the iteration spent on exposed communication.
+    pub fn comm_fraction(&self) -> f64 {
+        if self.makespan == 0.0 {
+            0.0
+        } else {
+            self.exposed_comm / self.makespan
+        }
+    }
+
+    /// Raw bit patterns of every field, for exact-equality assertions.
+    pub fn to_bits(&self) -> [u64; 9] {
+        [
+            self.makespan.to_bits(),
+            self.compute_time.to_bits(),
+            self.serialized_comm.to_bits(),
+            self.overlapped_comm.to_bits(),
+            self.exposed_comm.to_bits(),
+            self.hidden_comm.to_bits(),
+            self.fwd_compute.to_bits(),
+            self.bwd_compute.to_bits(),
+            self.opt_compute.to_bits(),
+        ]
+    }
+}
+
+/// Memoizing wrapper around a point's [`AnalyticCost`]. Tables live in the
+/// worker (`RefCell`: workers are single-threaded) and are keyed by a
+/// dense per-worker cost id, so entries persist across points that share
+/// hardware/precision/parallelism.
+struct MemoCost<'a> {
+    inner: &'a AnalyticCost,
+    id: u32,
+    compute: &'a RefCell<HashMap<(u32, OpKind), f64>>,
+    comm: &'a RefCell<HashMap<(u32, u64, CommClass), f64>>,
+}
+
+impl CostProvider for MemoCost<'_> {
+    fn compute_time(&self, kind: &OpKind) -> f64 {
+        let key = (self.id, *kind);
+        if let Some(&t) = self.compute.borrow().get(&key) {
+            return t;
+        }
+        let t = self.inner.compute_time(kind);
+        self.compute.borrow_mut().insert(key, t);
+        t
+    }
+
+    fn comm_time(&self, bytes: u64, class: CommClass) -> f64 {
+        let key = (self.id, bytes, class);
+        if let Some(&t) = self.comm.borrow().get(&key) {
+            return t;
+        }
+        let t = self.inner.comm_time(bytes, class);
+        self.comm.borrow_mut().insert(key, t);
+        t
+    }
+}
+
+type CostKey = (u32, u64, u64, Precision);
+
+/// Per-worker reusable state (see module docs).
+struct WorkerCtx {
+    arena: SimArena,
+    templates: HashMap<GraphShapeKey, OpGraph>,
+    costs: HashMap<CostKey, (u32, AnalyticCost)>,
+    next_cost_id: u32,
+    compute_memo: RefCell<HashMap<(u32, OpKind), f64>>,
+    comm_memo: RefCell<HashMap<(u32, u64, CommClass), f64>>,
+}
+
+impl WorkerCtx {
+    fn new() -> WorkerCtx {
+        WorkerCtx {
+            arena: SimArena::new(),
+            templates: HashMap::new(),
+            costs: HashMap::new(),
+            next_cost_id: 0,
+            compute_memo: RefCell::new(HashMap::new()),
+            comm_memo: RefCell::new(HashMap::new()),
+        }
+    }
+
+    fn eval(&mut self, grid: &ScenarioGrid, sc: &Scenario) -> PointMetrics {
+        let WorkerCtx {
+            arena,
+            templates,
+            costs,
+            next_cost_id,
+            compute_memo,
+            comm_memo,
+        } = self;
+
+        let key: CostKey = (sc.hw, sc.cfg.tp, sc.cfg.dp, sc.cfg.precision);
+        let entry = costs.entry(key).or_insert_with(|| {
+            let hw = &grid.hardware[sc.hw as usize];
+            let id = *next_cost_id;
+            *next_cost_id += 1;
+            let cost = AnalyticCost::new(
+                hw.device.clone(),
+                sc.cfg.precision,
+                sc.cfg.tp,
+                sc.cfg.dp,
+            )
+            .with_overlap(hw.overlap);
+            (id, cost)
+        });
+        let (cost_id, cost) = (entry.0, &entry.1);
+
+        let shape = GraphShapeKey::of(&sc.cfg, sc.opts);
+        let g = templates
+            .entry(shape)
+            .or_insert_with(|| build_layer_graph(&sc.cfg, sc.opts));
+        rewrite_layer_graph(&sc.cfg, sc.opts, g);
+
+        let memo = MemoCost {
+            inner: cost,
+            id: cost_id,
+            compute: &*compute_memo,
+            comm: &*comm_memo,
+        };
+        let r = simulate_with(g, &memo, arena, false);
+        PointMetrics::from_report(&r)
+    }
+}
+
+/// Worker threads to use when the caller asks for "auto".
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Evaluate every grid point in parallel across all available cores.
+/// Results align with `grid.points`.
+pub fn run(grid: &ScenarioGrid) -> Vec<PointMetrics> {
+    run_with(grid, 0)
+}
+
+/// [`run`] with an explicit worker count (`0` = auto). `threads == 1`
+/// evaluates inline with a single worker context — same caches, same
+/// results, no thread spawns.
+pub fn run_with(grid: &ScenarioGrid, threads: usize) -> Vec<PointMetrics> {
+    let n = grid.points.len();
+    let mut out = vec![PointMetrics::default(); n];
+    if n == 0 {
+        return out;
+    }
+    let requested = if threads == 0 { default_threads() } else { threads };
+    let threads = requested.max(1).min(n);
+
+    if threads == 1 {
+        let mut ctx = WorkerCtx::new();
+        for (slot, sc) in out.iter_mut().zip(&grid.points) {
+            *slot = ctx.eval(grid, sc);
+        }
+        return out;
+    }
+
+    // Work-stealing over contiguous chunks: workers pull (chunk index,
+    // disjoint &mut slice of `out`) pairs from a shared queue, so writes
+    // need no synchronization and results land at their point's index no
+    // matter which worker ran it.
+    let chunk = (n / (threads * 8)).clamp(1, 256);
+    {
+        let queue: Mutex<Vec<(usize, &mut [PointMetrics])>> =
+            Mutex::new(out.chunks_mut(chunk).enumerate().collect());
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                s.spawn(|| {
+                    let mut ctx = WorkerCtx::new();
+                    loop {
+                        let item = queue.lock().unwrap().pop();
+                        let Some((ci, slice)) = item else { break };
+                        let base = ci * chunk;
+                        for (j, slot) in slice.iter_mut().enumerate() {
+                            *slot = ctx.eval(grid, &grid.points[base + j]);
+                        }
+                    }
+                });
+            }
+        });
+    }
+    out
+}
+
+/// The bit-identity oracle and bench baseline: one fresh graph build and
+/// one fresh `simulate` per point, single-threaded, no caches, no arena —
+/// exactly what the per-figure loops did before the sweep engine existed.
+pub fn run_serial_reference(grid: &ScenarioGrid) -> Vec<PointMetrics> {
+    grid.points
+        .iter()
+        .map(|sc| {
+            let hw = &grid.hardware[sc.hw as usize];
+            let cost = AnalyticCost::new(
+                hw.device.clone(),
+                sc.cfg.precision,
+                sc.cfg.tp,
+                sc.cfg.dp,
+            )
+            .with_overlap(hw.overlap);
+            let g = build_layer_graph(&sc.cfg, sc.opts);
+            PointMetrics::from_report(&simulate(&g, &cost))
+        })
+        .collect()
+}
+
+/// Single-point engine front end for callers that hold their own cost
+/// provider (opmodel fits, precision studies) or need full reports with
+/// per-op intervals. Reuses the arena and graph templates across calls,
+/// so per-config loops through one evaluator stay cheap.
+pub struct PointEvaluator {
+    arena: SimArena,
+    templates: HashMap<GraphShapeKey, OpGraph>,
+}
+
+impl Default for PointEvaluator {
+    fn default() -> Self {
+        PointEvaluator::new()
+    }
+}
+
+impl PointEvaluator {
+    pub fn new() -> PointEvaluator {
+        PointEvaluator { arena: SimArena::new(), templates: HashMap::new() }
+    }
+
+    /// Evaluate one point, returning the full report (with intervals) —
+    /// bit-identical to `simulate(&build_layer_graph(cfg, opts), cost)`.
+    pub fn eval_report(
+        &mut self,
+        cfg: &ModelConfig,
+        opts: GraphOptions,
+        cost: &dyn CostProvider,
+    ) -> SimReport {
+        let shape = GraphShapeKey::of(cfg, opts);
+        let g = self
+            .templates
+            .entry(shape)
+            .or_insert_with(|| build_layer_graph(cfg, opts));
+        rewrite_layer_graph(cfg, opts, g);
+        simulate_with(g, cost, &mut self.arena, true)
+    }
+
+    /// Evaluate one point, metrics only (no interval allocation).
+    pub fn eval(
+        &mut self,
+        cfg: &ModelConfig,
+        opts: GraphOptions,
+        cost: &dyn CostProvider,
+    ) -> PointMetrics {
+        let shape = GraphShapeKey::of(cfg, opts);
+        let g = self
+            .templates
+            .entry(shape)
+            .or_insert_with(|| build_layer_graph(cfg, opts));
+        rewrite_layer_graph(cfg, opts, g);
+        let r = simulate_with(g, cost, &mut self.arena, false);
+        PointMetrics::from_report(&r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::{catalog, Evolution};
+    use crate::sweep::GridBuilder;
+
+    fn small_grid() -> ScenarioGrid {
+        GridBuilder::new(&catalog::mi210())
+            .hidden(&[1024, 4096, 16384])
+            .seq_len(&[512, 2048])
+            .tp(&[1, 8, 32])
+            .dp(&[1, 4])
+            .layers(&[1, 2])
+            .evolutions(&[Evolution::none(), Evolution::flop_vs_bw_4x()])
+            .build()
+    }
+
+    #[test]
+    fn parallel_matches_serial_reference_bitwise() {
+        let grid = small_grid();
+        let reference = run_serial_reference(&grid);
+        let parallel = run_with(&grid, 4);
+        assert_eq!(reference.len(), parallel.len());
+        for (i, (a, b)) in reference.iter().zip(&parallel).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "point {i} diverged: {a:?} vs {b:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn single_worker_matches_parallel() {
+        let grid = small_grid();
+        let one = run_with(&grid, 1);
+        let many = run_with(&grid, 3);
+        for (a, b) in one.iter().zip(&many) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn empty_grid_is_fine() {
+        let grid = ScenarioGrid { hardware: vec![], points: vec![] };
+        assert!(run(&grid).is_empty());
+    }
+
+    #[test]
+    fn point_evaluator_matches_naive_path() {
+        use crate::graph::{build_layer_graph, GraphOptions};
+        let d = catalog::mi210();
+        let mut ev = PointEvaluator::new();
+        for (h, tp) in [(4096u64, 8u64), (16384, 64), (4096, 16)] {
+            let cfg = ModelConfig {
+                hidden: h,
+                seq_len: 2048,
+                batch: 1,
+                layers: 1,
+                heads: h / 128,
+                ffn_mult: 4,
+                tp,
+                dp: 1,
+                precision: Precision::F16,
+            };
+            let cost = AnalyticCost::new(d.clone(), cfg.precision, tp, 1);
+            let naive = simulate(
+                &build_layer_graph(&cfg, GraphOptions::default()),
+                &cost,
+            );
+            let fast = ev.eval_report(&cfg, GraphOptions::default(), &cost);
+            assert_eq!(naive.makespan.to_bits(), fast.makespan.to_bits());
+            assert_eq!(naive.intervals, fast.intervals);
+        }
+    }
+
+    #[test]
+    fn memoized_costs_do_not_change_values() {
+        // same grid, but templates/memos warm vs cold: evaluate twice with
+        // one worker; second pass (fully warm caches) must match the first.
+        let grid = small_grid();
+        let cold = run_with(&grid, 1);
+        let warm = run_with(&grid, 1);
+        for (a, b) in cold.iter().zip(&warm) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

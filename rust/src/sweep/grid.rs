@@ -1,0 +1,358 @@
+//! Scenario grids: the cartesian product of model, parallelism, and
+//! hardware axes, flattened into a deterministically-ordered point list.
+
+use crate::config;
+use crate::graph::GraphOptions;
+use crate::hw::{DeviceSpec, Evolution};
+use crate::model::{ModelConfig, Precision};
+use crate::sim::OverlapModel;
+
+/// One hardware point of a grid: a device *after* evolution is applied,
+/// plus the DP-overlap co-execution model. Scenarios reference hardware
+/// points by index so the (string-bearing) `DeviceSpec` is stored once per
+/// hardware combination, not per scenario.
+#[derive(Debug, Clone)]
+pub struct HwPoint {
+    /// The evolved device spec (`evolution` already applied).
+    pub device: DeviceSpec,
+    /// The evolution step that produced `device` (kept for labeling).
+    pub evolution: Evolution,
+    pub overlap: OverlapModel,
+}
+
+impl HwPoint {
+    /// Today's hardware: no evolution, intra-node DP links.
+    pub fn today(device: &DeviceSpec) -> HwPoint {
+        HwPoint {
+            device: device.clone(),
+            evolution: Evolution::none(),
+            overlap: OverlapModel::default(),
+        }
+    }
+
+    /// Device under an evolution step, default overlap model.
+    pub fn evolved(device: &DeviceSpec, ev: Evolution) -> HwPoint {
+        HwPoint {
+            device: ev.apply(device),
+            evolution: ev,
+            overlap: OverlapModel::default(),
+        }
+    }
+
+    pub fn with_overlap(mut self, o: OverlapModel) -> HwPoint {
+        self.overlap = o;
+        self
+    }
+}
+
+/// One scenario point: a full model/parallelism config plus an index into
+/// the grid's hardware axis. `Copy`, so the executor can hand points to
+/// workers without touching the heap.
+#[derive(Debug, Clone, Copy)]
+pub struct Scenario {
+    pub cfg: ModelConfig,
+    pub opts: GraphOptions,
+    /// Index into [`ScenarioGrid::hardware`].
+    pub hw: u32,
+}
+
+/// A flattened scenario grid ready for the sweep executor.
+///
+/// Point order is part of the contract: results come back aligned with
+/// `points`, and the cartesian [`GridBuilder`] documents its axis nesting,
+/// so a grid built twice from the same axes is identical element-for-
+/// element (the determinism tests rely on this).
+#[derive(Debug, Clone)]
+pub struct ScenarioGrid {
+    pub hardware: Vec<HwPoint>,
+    pub points: Vec<Scenario>,
+}
+
+impl ScenarioGrid {
+    /// Assemble a grid from explicit parts (for irregular, non-cartesian
+    /// sweeps like Fig 10's named (H, SL) series). Hardware indices are
+    /// validated.
+    pub fn from_parts(hardware: Vec<HwPoint>, points: Vec<Scenario>) -> ScenarioGrid {
+        for p in &points {
+            assert!(
+                (p.hw as usize) < hardware.len(),
+                "scenario references hardware point {} of {}",
+                p.hw,
+                hardware.len()
+            );
+        }
+        ScenarioGrid { hardware, points }
+    }
+
+    /// Grid over one hardware point (the common per-figure case).
+    pub fn on_hw(hw: HwPoint, configs: impl IntoIterator<Item = ModelConfig>) -> ScenarioGrid {
+        let points = configs
+            .into_iter()
+            .map(|cfg| Scenario { cfg, opts: GraphOptions::default(), hw: 0 })
+            .collect();
+        ScenarioGrid { hardware: vec![hw], points }
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+}
+
+/// Cartesian grid builder over the paper's axes.
+///
+/// Axis nesting (outermost → innermost): hardware (devices × evolutions ×
+/// overlap models, in that order) → hidden → seq_len → batch → layers →
+/// tp → dp. Hardware is outermost so each worker's graph-template and
+/// cost caches see long runs of points sharing a device.
+#[derive(Debug, Clone)]
+pub struct GridBuilder {
+    devices: Vec<DeviceSpec>,
+    evolutions: Vec<Evolution>,
+    overlaps: Vec<OverlapModel>,
+    hidden: Vec<u64>,
+    seq_len: Vec<u64>,
+    batch: Vec<u64>,
+    layers: Vec<u64>,
+    tp: Vec<u64>,
+    dp: Vec<u64>,
+    precision: Precision,
+    opts: GraphOptions,
+}
+
+impl GridBuilder {
+    /// Start from one device with every other axis at its singleton
+    /// default (no evolution, intra-node overlap, B=1, 1 layer, TP=DP=1,
+    /// fp16, full graph).
+    pub fn new(device: &DeviceSpec) -> GridBuilder {
+        GridBuilder {
+            devices: vec![device.clone()],
+            evolutions: vec![Evolution::none()],
+            overlaps: vec![OverlapModel::default()],
+            hidden: vec![4096],
+            seq_len: vec![2048],
+            batch: vec![1],
+            layers: vec![1],
+            tp: vec![1],
+            dp: vec![1],
+            precision: Precision::F16,
+            opts: GraphOptions::default(),
+        }
+    }
+
+    pub fn devices(mut self, v: &[DeviceSpec]) -> Self {
+        self.devices = v.to_vec();
+        self
+    }
+    pub fn evolutions(mut self, v: &[Evolution]) -> Self {
+        self.evolutions = v.to_vec();
+        self
+    }
+    pub fn overlaps(mut self, v: &[OverlapModel]) -> Self {
+        self.overlaps = v.to_vec();
+        self
+    }
+    pub fn hidden(mut self, v: &[u64]) -> Self {
+        self.hidden = v.to_vec();
+        self
+    }
+    pub fn seq_len(mut self, v: &[u64]) -> Self {
+        self.seq_len = v.to_vec();
+        self
+    }
+    pub fn batch(mut self, v: &[u64]) -> Self {
+        self.batch = v.to_vec();
+        self
+    }
+    pub fn layers(mut self, v: &[u64]) -> Self {
+        self.layers = v.to_vec();
+        self
+    }
+    pub fn tp(mut self, v: &[u64]) -> Self {
+        self.tp = v.to_vec();
+        self
+    }
+    pub fn dp(mut self, v: &[u64]) -> Self {
+        self.dp = v.to_vec();
+        self
+    }
+    pub fn precision(mut self, p: Precision) -> Self {
+        self.precision = p;
+        self
+    }
+    pub fn graph_options(mut self, opts: GraphOptions) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    /// Number of points `build` will produce.
+    pub fn point_count(&self) -> usize {
+        self.devices.len()
+            * self.evolutions.len()
+            * self.overlaps.len()
+            * self.hidden.len()
+            * self.seq_len.len()
+            * self.batch.len()
+            * self.layers.len()
+            * self.tp.len()
+            * self.dp.len()
+    }
+
+    /// Flatten into a [`ScenarioGrid`]. Head counts follow the Table 3
+    /// convention (`config::heads_for`, rounded up to a multiple of TP so
+    /// Megatron head-slicing stays exact). Every config is validated —
+    /// an axis combination the model can't realize (e.g. a hidden size the
+    /// rounded head count doesn't divide) panics here rather than
+    /// producing silently-truncated attention shapes downstream.
+    pub fn build(self) -> ScenarioGrid {
+        let mut hardware = Vec::with_capacity(
+            self.devices.len() * self.evolutions.len() * self.overlaps.len(),
+        );
+        for d in &self.devices {
+            for ev in &self.evolutions {
+                for ov in &self.overlaps {
+                    hardware.push(HwPoint::evolved(d, *ev).with_overlap(*ov));
+                }
+            }
+        }
+        let mut points = Vec::with_capacity(
+            hardware.len()
+                * self.hidden.len()
+                * self.seq_len.len()
+                * self.batch.len()
+                * self.layers.len()
+                * self.tp.len()
+                * self.dp.len(),
+        );
+        for hw in 0..hardware.len() as u32 {
+            for &h in &self.hidden {
+                for &sl in &self.seq_len {
+                    for &b in &self.batch {
+                        for &layers in &self.layers {
+                            for &tp in &self.tp {
+                                for &dp in &self.dp {
+                                    let base = config::heads_for(h).max(tp);
+                                    let heads = (base + tp - 1) / tp * tp;
+                                    let cfg = ModelConfig {
+                                        hidden: h,
+                                        seq_len: sl,
+                                        batch: b,
+                                        layers,
+                                        heads,
+                                        ffn_mult: 4,
+                                        tp,
+                                        dp,
+                                        precision: self.precision,
+                                    };
+                                    if let Err(e) = cfg.validate() {
+                                        panic!(
+                                            "GridBuilder: H={h} TP={tp} is \
+                                             not realizable: {e}"
+                                        );
+                                    }
+                                    points.push(Scenario {
+                                        cfg,
+                                        opts: self.opts,
+                                        hw,
+                                    });
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        ScenarioGrid { hardware, points }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::catalog;
+
+    #[test]
+    fn cartesian_count_and_determinism() {
+        let build = || {
+            GridBuilder::new(&catalog::mi210())
+                .hidden(&[1024, 4096])
+                .seq_len(&[512, 1024, 2048])
+                .tp(&[4, 8])
+                .evolutions(&[Evolution::none(), Evolution::flop_vs_bw_4x()])
+                .build()
+        };
+        let a = build();
+        assert_eq!(a.len(), 2 * 3 * 2 * 2);
+        assert_eq!(a.hardware.len(), 2);
+        let b = build();
+        for (x, y) in a.points.iter().zip(&b.points) {
+            assert_eq!(x.cfg, y.cfg);
+            assert_eq!(x.hw, y.hw);
+        }
+    }
+
+    #[test]
+    fn ordering_is_hw_major_dp_minor() {
+        let g = GridBuilder::new(&catalog::mi210())
+            .hidden(&[1024, 2048])
+            .dp(&[1, 4])
+            .evolutions(&[Evolution::none(), Evolution::flop_vs_bw_2x()])
+            .build();
+        // innermost axis (dp) varies fastest...
+        assert_eq!(g.points[0].cfg.dp, 1);
+        assert_eq!(g.points[1].cfg.dp, 4);
+        // ...then hidden, and hardware varies slowest.
+        assert_eq!(g.points[0].cfg.hidden, 1024);
+        assert_eq!(g.points[2].cfg.hidden, 2048);
+        assert_eq!(g.points[0].hw, 0);
+        assert_eq!(g.points[4].hw, 1);
+        assert_eq!(g.len(), 8);
+    }
+
+    #[test]
+    fn built_configs_are_valid() {
+        let g = GridBuilder::new(&catalog::mi210())
+            .hidden(&[1024, 65536])
+            .tp(&[4, 128, 256])
+            .build();
+        for p in &g.points {
+            p.cfg.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn heads_rounded_up_to_tp_multiple() {
+        // heads_for(1536) = 12, which TP=8 doesn't divide; build must
+        // round to 16 (and the config must validate), not truncate.
+        let g = GridBuilder::new(&catalog::mi210())
+            .hidden(&[1536])
+            .tp(&[8])
+            .build();
+        assert_eq!(g.points[0].cfg.heads, 16);
+        g.points[0].cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn point_count_matches_build() {
+        let b = GridBuilder::new(&catalog::mi210())
+            .hidden(&[1, 2, 3])
+            .batch(&[1, 4]);
+        assert_eq!(b.point_count(), 6);
+        assert_eq!(b.clone().build().len(), 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "hardware point")]
+    fn from_parts_validates_indices() {
+        let hw = HwPoint::today(&catalog::mi210());
+        let sc = Scenario {
+            cfg: ModelConfig::default(),
+            opts: GraphOptions::default(),
+            hw: 1,
+        };
+        ScenarioGrid::from_parts(vec![hw], vec![sc]);
+    }
+}

@@ -1,0 +1,54 @@
+//! Parallel, allocation-free scenario sweep engine.
+//!
+//! The paper's core economic claim (§4.3.8) is that operator-level models
+//! make studying *hundreds* of future model/hardware scenarios ~2100×
+//! cheaper than measuring them. This module is the systems counterpart:
+//! it makes the projection loop itself cheap enough that the grids can
+//! grow from the paper's ~35 points per figure to tens of thousands.
+//!
+//! # Shape of the engine
+//!
+//! A [`ScenarioGrid`] flattens the cartesian product of model axes
+//! (hidden, seq_len, batch, layers), parallelism axes (tp, dp), and
+//! hardware axes (`DeviceSpec` × `Evolution` × `OverlapModel`) into a
+//! deterministically-ordered point list ([`GridBuilder`] documents the
+//! nesting; irregular grids use [`ScenarioGrid::from_parts`]). The
+//! executor ([`run`] / [`run_with`]) pulls contiguous chunks of points
+//! off a shared queue with scoped `std::thread` workers and writes each
+//! result into its point's slot, so output order never depends on
+//! scheduling.
+//!
+//! # Why it is fast (template cache + arena design)
+//!
+//! Three observations about projection sweeps drive the design:
+//!
+//! 1. **Topology repeats.** Every (H, SL, B, TP, …) point with the same
+//!    layer count and op-class options has the *same* dependency graph —
+//!    only op payloads differ. Each worker therefore keeps one template
+//!    `OpGraph` per [`GraphShapeKey`](crate::graph::GraphShapeKey) and
+//!    re-instantiates payloads in place via
+//!    [`rewrite_layer_graph`](crate::graph::rewrite_layer_graph): no
+//!    dependency vectors are allocated after the first point of a shape.
+//! 2. **Simulation scratch is reusable.** `simulate` needs one end-times
+//!    buffer; each worker owns a [`SimArena`](crate::sim::SimArena) so
+//!    the discrete-event pass performs zero heap allocation per point
+//!    (intervals are skipped in batch mode — `Vec::new` never allocates).
+//! 3. **Op shapes repeat.** Within a point every layer is identical, and
+//!    across points most op kinds recur; per-worker memo tables keyed by
+//!    `(cost id, OpKind)` / `(cost id, bytes, class)` reduce roofline and
+//!    collective-model evaluations to hash lookups.
+//!
+//! None of this changes a single bit of output: memo hits return the bits
+//! the first evaluation produced, rewritten templates equal fresh builds
+//! exactly, and workers share no mutable float state —
+//! [`run_serial_reference`] (the pre-engine naive loop) is the oracle the
+//! determinism tests compare against.
+
+pub mod engine;
+pub mod grid;
+
+pub use engine::{
+    default_threads, run, run_serial_reference, run_with, PointEvaluator,
+    PointMetrics,
+};
+pub use grid::{GridBuilder, HwPoint, Scenario, ScenarioGrid};

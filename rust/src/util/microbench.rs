@@ -5,8 +5,10 @@
 //! target with `cargo bench`. Each `[[bench]]` sets `harness = false` and
 //! calls [`Bench::run`].
 
+use std::path::Path;
 use std::time::{Duration, Instant};
 
+use super::json::Json;
 use super::stats::Summary;
 
 /// One benchmark's configuration and results.
@@ -102,6 +104,45 @@ impl BenchResult {
             self.iters
         )
     }
+
+    /// The result as a JSON object (all timings in seconds).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("iters", Json::num(self.iters as f64)),
+            ("mean_s", Json::num(self.summary.mean)),
+            ("median_s", Json::num(self.summary.median)),
+            ("p90_s", Json::num(self.summary.p90)),
+            ("min_s", Json::num(self.summary.min)),
+            ("max_s", Json::num(self.summary.max)),
+            ("std_s", Json::num(self.summary.std)),
+        ])
+    }
+
+    /// Write the result as machine-readable `BENCH_*.json`.
+    pub fn write_json(&self, path: &Path) -> crate::Result<()> {
+        self.write_json_with(path, vec![])
+    }
+
+    /// [`BenchResult::write_json`] with extra derived fields merged in
+    /// (e.g. points/sec, speedup vs a baseline).
+    pub fn write_json_with(
+        &self,
+        path: &Path,
+        extra: Vec<(&str, Json)>,
+    ) -> crate::Result<()> {
+        let mut obj = match self.to_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!("to_json returns an object"),
+        };
+        for (k, v) in extra {
+            obj.insert(k.to_string(), v);
+        }
+        let text = Json::Obj(obj).to_string_pretty(2);
+        std::fs::write(path, text + "\n")?;
+        println!("    wrote {}", path.display());
+        Ok(())
+    }
 }
 
 /// Human-readable duration.
@@ -144,6 +185,24 @@ mod tests {
             .max_iters(10)
             .run(|| ());
         assert!(r.iters <= 10);
+    }
+
+    #[test]
+    fn write_json_emits_parseable_output() {
+        let r = Bench::new("json_roundtrip")
+            .warmup(Duration::from_millis(1))
+            .measure(Duration::from_millis(5))
+            .max_iters(8)
+            .run(|| ());
+        let dir = std::env::temp_dir();
+        let path = dir.join("BENCH_microbench_selftest.json");
+        r.write_json_with(&path, vec![("points_per_sec", Json::num(123.0))])
+            .unwrap();
+        let parsed = Json::parse_file(&path).unwrap();
+        assert_eq!(parsed.str_field("name").unwrap(), "json_roundtrip");
+        assert_eq!(parsed.req("points_per_sec").unwrap().as_f64(), Some(123.0));
+        assert!(parsed.req("median_s").unwrap().as_f64().unwrap() >= 0.0);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -1,0 +1,181 @@
+//! Sweep-engine determinism and refactor-regression tests.
+//!
+//! Two guarantees are locked down here:
+//!
+//! 1. **Bit-identical parallelism** — the parallel executor (template
+//!    cache + memoized costs + arenas, any thread count) returns exactly
+//!    the bits the naive serial path (fresh graph + fresh `simulate` per
+//!    point) produces, over the full Fig 10 and Fig 13 grids.
+//! 2. **Refactor regression** — the engine-routed analysis entry points
+//!    (`fig10`, `fig11`, `comm_fraction_band`, `fig13_exposed_count`)
+//!    return the same values as the pre-refactor per-point loops, which
+//!    are re-created inline here against the raw graph + simulator APIs.
+
+use commscale::analysis::{evolution, overlapped, serialized};
+use commscale::config;
+use commscale::graph::{build_layer_graph, GraphOptions};
+use commscale::hw::{catalog, Evolution};
+use commscale::sim::{simulate, AnalyticCost};
+use commscale::sweep::{self, run_serial_reference, run_with};
+
+/// The three evolution scenarios every grid is checked under.
+fn scenarios() -> Vec<Evolution> {
+    vec![
+        Evolution::none(),
+        Evolution::flop_vs_bw_2x(),
+        Evolution::flop_vs_bw_4x(),
+    ]
+}
+
+#[test]
+fn parallel_sweep_is_bit_identical_on_fig10_grid() {
+    let d = catalog::mi210();
+    for ev in scenarios() {
+        let grid = serialized::fig10_grid(&ev.apply(&d));
+        let reference = run_serial_reference(&grid);
+        for threads in [1usize, 2, 4, 8] {
+            let got = run_with(&grid, threads);
+            assert_eq!(reference.len(), got.len());
+            for (i, (a, b)) in reference.iter().zip(&got).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "fig10 grid @{}x, {threads} threads, point {i}",
+                    ev.ratio()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_sweep_is_bit_identical_on_fig13_grid() {
+    let d = catalog::mi210();
+    for ev in scenarios() {
+        let grid = overlapped::fig11_grid(&ev.apply(&d));
+        let reference = run_serial_reference(&grid);
+        for threads in [2usize, 5] {
+            let got = run_with(&grid, threads);
+            for (i, (a, b)) in reference.iter().zip(&got).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "fig13 grid @{}x, {threads} threads, point {i}",
+                    ev.ratio()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fig10_values_unchanged_from_pre_refactor_loop() {
+    // the pre-refactor Fig 10 loop, verbatim: per-point config + analytic
+    // cost + fresh graph + fresh simulate.
+    let d = catalog::mi210();
+    let pts = serialized::fig10(&d);
+    let mut i = 0;
+    for (_, h, sl) in config::fig10_series() {
+        for &tp in &config::fig10_tp_sweep() {
+            let cfg = serialized::point_config(h, sl, tp);
+            let cost = AnalyticCost::new(d.clone(), cfg.precision, tp, 1);
+            let g = build_layer_graph(&cfg, GraphOptions::default());
+            let want = simulate(&g, &cost).comm_fraction();
+            assert_eq!(
+                pts[i].comm_fraction.to_bits(),
+                want.to_bits(),
+                "H={h} SL={sl} TP={tp}"
+            );
+            i += 1;
+        }
+    }
+    assert_eq!(i, pts.len());
+}
+
+#[test]
+fn fig11_values_unchanged_from_pre_refactor_loop() {
+    let d = catalog::mi210();
+    let pts = overlapped::fig11(&d);
+    let mut i = 0;
+    for &h in &config::fig11_hidden_series() {
+        for &slb in &config::fig11_slb_sweep() {
+            let cfg = overlapped::point_config(h, slb);
+            let cost =
+                AnalyticCost::new(d.clone(), cfg.precision, cfg.tp, cfg.dp);
+            let g = build_layer_graph(&cfg, GraphOptions::default());
+            let r = simulate(&g, &cost);
+            let want = 100.0 * r.overlapped_comm / r.bwd_compute.max(1e-12);
+            assert_eq!(
+                pts[i].pct_of_compute.to_bits(),
+                want.to_bits(),
+                "H={h} SLB={slb}"
+            );
+            i += 1;
+        }
+    }
+    assert_eq!(i, pts.len());
+}
+
+#[test]
+fn comm_fraction_band_unchanged_from_pre_refactor_loop() {
+    let d = catalog::mi210();
+    for ev in scenarios() {
+        let (lo, hi) = evolution::comm_fraction_band(&d, ev);
+        // pre-refactor: evolve the device, loop the highlighted configs
+        let dev = ev.apply(&d);
+        let mut want_lo = f64::MAX;
+        let mut want_hi: f64 = 0.0;
+        for (_, h, sl, tp) in serialized::highlighted_points() {
+            let cfg = serialized::point_config(h, sl, tp);
+            let cost = AnalyticCost::new(dev.clone(), cfg.precision, tp, 1);
+            let g = build_layer_graph(&cfg, GraphOptions::default());
+            let f = simulate(&g, &cost).comm_fraction();
+            want_lo = want_lo.min(f);
+            want_hi = want_hi.max(f);
+        }
+        assert_eq!(lo.to_bits(), want_lo.to_bits(), "lo @{}x", ev.ratio());
+        assert_eq!(hi.to_bits(), want_hi.to_bits(), "hi @{}x", ev.ratio());
+    }
+}
+
+#[test]
+fn fig13_exposed_count_unchanged_from_pre_refactor_loop() {
+    let d = catalog::mi210();
+    for ev in scenarios() {
+        let got = evolution::fig13_exposed_count(&d, ev);
+        let dev = ev.apply(&d);
+        let mut want = 0usize;
+        for &h in &config::fig11_hidden_series() {
+            for &slb in &config::fig11_slb_sweep() {
+                let cfg = overlapped::point_config(h, slb);
+                let cost =
+                    AnalyticCost::new(dev.clone(), cfg.precision, cfg.tp, cfg.dp);
+                let g = build_layer_graph(&cfg, GraphOptions::default());
+                let r = simulate(&g, &cost);
+                if 100.0 * r.overlapped_comm / r.bwd_compute.max(1e-12) >= 100.0 {
+                    want += 1;
+                }
+            }
+        }
+        assert_eq!(got, want, "@{}x", ev.ratio());
+    }
+}
+
+#[test]
+fn thread_count_never_changes_results() {
+    // a mixed grid spanning every axis class at once
+    let grid = sweep::GridBuilder::new(&catalog::mi210())
+        .hidden(&[4096, 16384])
+        .seq_len(&[1024, 4096])
+        .batch(&[1, 4])
+        .layers(&[1, 3])
+        .tp(&[1, 16])
+        .dp(&[1, 8])
+        .evolutions(&[Evolution::none(), Evolution::flop_vs_bw_4x()])
+        .build();
+    let reference = run_serial_reference(&grid);
+    let auto = sweep::run(&grid);
+    for (a, b) in reference.iter().zip(&auto) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}

@@ -1,0 +1,121 @@
+//! Offline stub of the `anyhow` error crate: just enough surface for this
+//! workspace's binaries — [`Error`], [`Result`], the [`Context`] extension
+//! trait for `Result`/`Option`, and the [`bail!`] macro. Errors are a
+//! rendered message chain (no backtraces, no downcasting).
+//!
+//! Like the real crate, [`Error`] deliberately does **not** implement
+//! `std::error::Error`, so the blanket `From<E: Error>` conversion used by
+//! `?` cannot conflict with the reflexive `From<Error> for Error`.
+
+use std::fmt;
+
+/// A rendered error message chain.
+pub struct Error(String);
+
+impl Error {
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error(m.to_string())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+// `fn main() -> Result<()>` prints the error with `{:?}` — keep it human.
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // include the source chain the way anyhow's Debug does
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(&format!("\n\ncaused by: {s}"));
+            src = s.source();
+        }
+        Error(msg)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context(...)` / `.with_context(...)` on `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T>
+    for std::result::Result<T, E>
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error(format!("{context}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error(f().to_string()))
+    }
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::Error::msg(format!($($arg)*)))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn context_on_option_and_result() {
+        let none: Option<u32> = None;
+        assert_eq!(none.context("missing").unwrap_err().to_string(), "missing");
+
+        let io: std::result::Result<(), std::io::Error> = Err(
+            std::io::Error::new(std::io::ErrorKind::Other, "boom"),
+        );
+        let e = io.with_context(|| format!("ctx {}", 1)).unwrap_err();
+        assert_eq!(e.to_string(), "ctx 1: boom");
+    }
+
+    #[test]
+    fn bail_formats() {
+        fn f(x: u32) -> Result<()> {
+            if x == 0 {
+                bail!("zero {x:?}");
+            }
+            Ok(())
+        }
+        assert_eq!(f(0).unwrap_err().to_string(), "zero 0");
+        assert!(f(1).is_ok());
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/here")?;
+            Ok(s)
+        }
+        assert!(f().is_err());
+    }
+}

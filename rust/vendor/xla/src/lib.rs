@@ -1,0 +1,235 @@
+//! Offline stub of the `xla-rs` PJRT bindings.
+//!
+//! The real crate links the native `xla_extension` PJRT toolchain, which is
+//! not part of this offline build image. This stub keeps the exact API
+//! surface `commscale::runtime` consumes so the crate builds and tests run
+//! everywhere:
+//!
+//! * [`Literal`] is a *real* host-side implementation (typed storage +
+//!   shape), so tensor<->literal round-trips work and their unit tests pass.
+//! * [`PjRtClient::cpu`] returns an error: there is no device runtime here.
+//!   Everything gated behind a client (compile/execute/upload) is therefore
+//!   unreachable; `Runtime::open` fails fast with a clear message and the
+//!   artifact-driven e2e tests skip, exactly as they do when `artifacts/`
+//!   has not been built.
+//!
+//! Swapping the real bindings back in is a one-line change in the root
+//! `Cargo.toml` (`xla = { path = ... }` -> the native crate); no source
+//! edits are needed.
+
+use std::path::Path;
+
+/// Error type mirroring `xla-rs`'s.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT backend unavailable (offline xla stub; build with the \
+         native xla_extension toolchain to execute artifacts)"
+    ))
+}
+
+/// Element types literals can hold.
+pub trait NativeType: Copy {
+    #[doc(hidden)]
+    fn wrap(v: Vec<Self>) -> LiteralData;
+    #[doc(hidden)]
+    fn unwrap(d: &LiteralData) -> Option<Vec<Self>>;
+}
+
+#[doc(hidden)]
+#[derive(Debug, Clone, PartialEq)]
+pub enum LiteralData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+impl NativeType for f32 {
+    fn wrap(v: Vec<f32>) -> LiteralData {
+        LiteralData::F32(v)
+    }
+    fn unwrap(d: &LiteralData) -> Option<Vec<f32>> {
+        match d {
+            LiteralData::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(v: Vec<i32>) -> LiteralData {
+        LiteralData::I32(v)
+    }
+    fn unwrap(d: &LiteralData) -> Option<Vec<i32>> {
+        match d {
+            LiteralData::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// A host-side typed array with a shape — fully functional in the stub.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: LiteralData,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal {
+            dims: vec![v.len() as i64],
+            data: T::wrap(v.to_vec()),
+        }
+    }
+
+    fn element_count(&self) -> usize {
+        match &self.data {
+            LiteralData::F32(v) => v.len(),
+            LiteralData::I32(v) => v.len(),
+            LiteralData::Tuple(_) => 0,
+        }
+    }
+
+    /// Reinterpret the shape (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.element_count() {
+            return Err(Error(format!(
+                "reshape: {} elements cannot take shape {:?}",
+                self.element_count(),
+                dims
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Copy the elements out as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data)
+            .ok_or_else(|| Error("literal element type mismatch".to_string()))
+    }
+
+    /// Decompose a tuple literal into its parts.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.data {
+            LiteralData::Tuple(parts) => Ok(parts.clone()),
+            _ => Err(Error("literal is not a tuple".to_string())),
+        }
+    }
+}
+
+/// Parsed HLO module text (opaque in the stub).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    #[allow(dead_code)]
+    text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| Error(format!("read {:?}: {e}", path.as_ref())))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// An XLA computation handle (opaque in the stub).
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    #[allow(dead_code)]
+    proto: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { proto: proto.clone() }
+    }
+}
+
+/// Device buffer handle. Never constructible through the stub client, so
+/// all methods are unreachable at runtime; they exist to typecheck callers.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("to_literal_sync"))
+    }
+}
+
+/// Compiled executable handle (never constructible through the stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("execute_b"))
+    }
+}
+
+/// PJRT client. `cpu()` fails in the stub: no native runtime is linked.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("compile"))
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable("buffer_from_host_buffer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = lit.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(r.to_vec::<i32>().is_err());
+        assert!(lit.reshape(&[3, 3]).is_err());
+    }
+
+    #[test]
+    fn client_is_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("unavailable"));
+    }
+}
