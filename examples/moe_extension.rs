@@ -23,14 +23,13 @@ fn main() {
         layers: 1,
         heads: 128,
         ffn_mult: 4,
-        tp: 16,
-        dp: 1,
+        par: commscale::parallelism::ParallelismSpec::tp_dp(16, 1),
         precision: Precision::F16,
     };
 
     // dense baseline
     let g = build_layer_graph(&cfg, GraphOptions::default());
-    let cost = AnalyticCost::new(device.clone(), cfg.precision, cfg.tp, cfg.dp);
+    let cost = AnalyticCost::new(device.clone(), cfg.precision, cfg.tp(), cfg.dp());
     let dense = simulate(&g, &cost);
 
     // MoE variant: top-1 routing over E experts sharded expert-parallel.

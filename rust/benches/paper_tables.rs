@@ -1,26 +1,51 @@
 //! Bench: regenerate Table 2 / Table 3 / Fig 6 / Fig 9b data and time the
-//! generators (they must stay interactive-speed for the CLI).
+//! generators (they must stay interactive-speed for the CLI). Writes the
+//! machine-readable trajectory record `BENCH_paper_tables.json`.
+
+use std::path::Path;
 
 use commscale::analysis::{algorithmic, memory_trends};
 use commscale::config::SweepGrid;
 use commscale::model::zoo;
 use commscale::util::microbench::{bench_header, Bench};
+use commscale::util::Json;
 
 fn main() {
     bench_header("paper tables (Table 2/3, Fig 6, Fig 9b)");
 
-    let r = Bench::new("table2_zoo").run(|| zoo::zoo());
-    assert!(r.summary.mean < 1e-3);
+    let r_zoo = Bench::new("table2_zoo").run(|| zoo::zoo());
+    assert!(r_zoo.summary.mean < 1e-3);
 
-    let r = Bench::new("table3_grid_combinations")
+    let r_grid = Bench::new("table3_grid_combinations")
         .run(|| SweepGrid::default().combinations().len());
-    assert!(r.summary.mean < 10e-3);
+    assert!(r_grid.summary.mean < 10e-3);
 
-    Bench::new("fig6_memory_trends").run(memory_trends::fig6);
-    Bench::new("fig9b_tp_requirement").run(algorithmic::fig9b);
+    let r_fig6 = Bench::new("fig6_memory_trends").run(memory_trends::fig6);
+    let r_fig9b = Bench::new("fig9b_tp_requirement").run(algorithmic::fig9b);
 
     // sanity: regenerated data matches the paper's shape
     let rows = memory_trends::fig6();
     assert!(rows.iter().any(|r| r.name == "PaLM" && r.gap > 10.0));
+
+    // machine-readable trajectory record (points/sec across PRs): the
+    // headline result is the Table 3 grid generator; the other three
+    // generators ride along as extra medians.
+    let combos = SweepGrid::default().combinations().len();
+    r_grid
+        .write_json_with(
+            Path::new("BENCH_paper_tables.json"),
+            vec![
+                ("table3_combinations", Json::num(combos as f64)),
+                (
+                    "combinations_per_sec",
+                    Json::num(combos as f64 / r_grid.summary.median),
+                ),
+                ("table2_zoo_median_s", Json::num(r_zoo.summary.median)),
+                ("fig6_median_s", Json::num(r_fig6.summary.median)),
+                ("fig9b_median_s", Json::num(r_fig9b.summary.median)),
+            ],
+        )
+        .expect("write BENCH_paper_tables.json");
+
     println!("\nfig6/fig9b data regenerated and validated");
 }

@@ -20,12 +20,11 @@ fn main() {
         layers: 96, // GPT-3-depth graph
         heads: 128,
         ffn_mult: 4,
-        tp: 64,
-        dp: 16,
+        par: commscale::parallelism::ParallelismSpec::tp_dp(64, 16),
         precision: Precision::F16,
     };
     let g = build_layer_graph(&cfg, GraphOptions::default());
-    let cost = AnalyticCost::new(catalog::mi210(), cfg.precision, cfg.tp, cfg.dp);
+    let cost = AnalyticCost::new(catalog::mi210(), cfg.precision, cfg.tp(), cfg.dp());
     let n_ops = g.len();
     println!("graph: {n_ops} ops (96 layers, TP=64, DP=16)");
 

@@ -10,3 +10,4 @@ pub mod evolution;
 pub mod memory_trends;
 pub mod overlapped;
 pub mod serialized;
+pub mod strategies;

@@ -32,8 +32,7 @@ pub fn point_config(hidden: u64, slb: u64) -> ModelConfig {
         layers: 1,
         heads: config::heads_for(hidden),
         ffn_mult: 4,
-        tp: 16,
-        dp: 4,
+        par: crate::parallelism::ParallelismSpec::tp_dp(16, 4),
         precision: Precision::F16,
     }
 }
@@ -58,7 +57,7 @@ pub fn point_with(cfg: &ModelConfig, cost: &dyn CostProvider) -> Fig11Point {
 
 pub fn simulate_point(device: &DeviceSpec, hidden: u64, slb: u64) -> Fig11Point {
     let cfg = point_config(hidden, slb);
-    let cost = AnalyticCost::new(device.clone(), cfg.precision, cfg.tp, cfg.dp);
+    let cost = AnalyticCost::new(device.clone(), cfg.precision, cfg.tp(), cfg.dp());
     point_with(&cfg, &cost)
 }
 

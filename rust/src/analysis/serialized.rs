@@ -31,8 +31,7 @@ pub fn point_config(hidden: u64, seq_len: u64, tp: u64) -> ModelConfig {
         layers: 1,
         heads: config::heads_for(hidden),
         ffn_mult: 4,
-        tp,
-        dp: 1,
+        par: crate::parallelism::ParallelismSpec::tp_dp(tp, 1),
         precision: Precision::F16,
     }
 }

@@ -1,0 +1,354 @@
+//! Strategy comparison — the new projection the parallelism layer
+//! unlocks: fix a device budget (`world = tp·pp·dp`) and sweep every
+//! power-of-two 3D factorization (± sequence parallelism) of it across
+//! model scales, hardware evolutions, and a tiered network topology.
+//!
+//! The paper studies TP in isolation; follow-ups (arXiv:2408.10197,
+//! arXiv:2411.13055) show the Comp-vs.-Comm balance flips with the
+//! strategy. This module quantifies that flip on one substrate: pure TP
+//! pays serialized collectives (inter-node once `tp` outgrows the node),
+//! pure PP trades them for cheap P2P sends plus the fill/drain bubble,
+//! pure DP pays only overlappable gradient ARs, and sequence parallelism
+//! keeps TP's wire volume while shedding its unsharded non-GEMM compute.
+//!
+//! Factorizations process different sample counts per iteration (DP
+//! replicates the batch, PP pushes `microbatches` through), so
+//! throughput comparisons use [`StrategyPoint::time_per_sample`], never
+//! raw makespans; comm/bubble fractions are per-iteration shares and
+//! compare directly.
+
+use crate::hw::{DeviceSpec, Evolution};
+use crate::parallelism::{ParallelismSpec, TopologyKind};
+use crate::sweep::{self, GridBuilder, PointMetrics, ScenarioGrid};
+
+/// Microbatches in flight for every pipelined factorization (a common
+/// 1F1B depth; the bubble fraction is `(pp−1)/(MICROBATCHES+pp−1)`).
+pub const MICROBATCHES: u64 = 8;
+
+/// Devices per node of the comparison's tiered fabric.
+pub const NODE_SIZE: u64 = 8;
+
+/// The model scales swept (Fig 10's H anchors).
+pub fn hidden_series() -> Vec<u64> {
+    vec![4096, 8192, 16384, 32768, 65536]
+}
+
+pub fn seq_len_series() -> Vec<u64> {
+    vec![2048, 8192]
+}
+
+/// One evaluated (strategy, model, hardware) cell.
+///
+/// Different factorizations process different sample counts per
+/// iteration (`batch · microbatches · dp`) — raw makespans are **not**
+/// comparable across strategies; [`StrategyPoint::time_per_sample`] is.
+/// Comm/bubble *fractions* are per-iteration shares of each strategy's
+/// own steady state and compare directly.
+#[derive(Debug, Clone)]
+pub struct StrategyPoint {
+    pub spec: ParallelismSpec,
+    pub archetype: &'static str,
+    pub hidden: u64,
+    pub seq_len: u64,
+    /// Per-microbatch batch size of the evaluated config.
+    pub batch: u64,
+    /// flop-vs-bw ratio of the hardware point.
+    pub evolution_ratio: f64,
+    pub metrics: PointMetrics,
+}
+
+impl StrategyPoint {
+    /// Samples the whole `world` processes in one iteration: the
+    /// per-microbatch batch × microbatches × dp replicas.
+    pub fn samples_per_iteration(&self) -> u64 {
+        self.batch * self.spec.microbatches * self.spec.dp
+    }
+
+    /// Iteration time normalized by samples processed — the
+    /// throughput-comparable quantity across factorizations.
+    pub fn time_per_sample(&self) -> f64 {
+        self.metrics.makespan / self.samples_per_iteration() as f64
+    }
+}
+
+/// Band summary of one strategy archetype over the whole grid.
+#[derive(Debug, Clone)]
+pub struct StrategySummary {
+    pub archetype: &'static str,
+    pub points: usize,
+    pub comm_frac_min: f64,
+    pub comm_frac_max: f64,
+    pub comm_frac_mean: f64,
+    pub bubble_frac_mean: f64,
+    /// Mean per-sample iteration time (workload-normalized — see
+    /// [`StrategyPoint::time_per_sample`]).
+    pub time_per_sample_mean: f64,
+}
+
+/// Every power-of-two (tp, pp, dp) factorization of `world`, each TP-bearing
+/// one doubled with its sequence-parallel variant. Deterministic order:
+/// tp-major, pp-next, sp-minor.
+pub fn factorizations(world: u64) -> Vec<ParallelismSpec> {
+    assert!(
+        world.is_power_of_two(),
+        "strategy comparison factors power-of-two worlds, got {world}"
+    );
+    let log = world.trailing_zeros();
+    let mut out = Vec::new();
+    for a in 0..=log {
+        for b in 0..=(log - a) {
+            let c = log - a - b;
+            let (tp, pp, dp) = (1u64 << a, 1u64 << b, 1u64 << c);
+            let base = ParallelismSpec {
+                tp,
+                pp,
+                microbatches: if pp > 1 { MICROBATCHES } else { 1 },
+                dp,
+                seq_par: false,
+            };
+            out.push(base);
+            if tp > 1 {
+                out.push(base.with_seq_par(true));
+            }
+        }
+    }
+    out
+}
+
+/// Classify a strategy for the report's aggregation.
+pub fn archetype(spec: &ParallelismSpec) -> &'static str {
+    let pure_tp = spec.pp == 1 && spec.dp == 1 && spec.tp > 1;
+    match (pure_tp, spec.seq_par) {
+        (true, true) => "tp+sp",
+        (true, false) => "tp",
+        _ if spec.tp == 1 && spec.dp == 1 && spec.pp > 1 => "pp",
+        _ if spec.tp == 1 && spec.pp == 1 && spec.dp > 1 => "dp",
+        _ if spec.seq_par => "3d+sp",
+        _ => "3d",
+    }
+}
+
+/// The comparison grid: 3 hardware evolutions × the model series × every
+/// factorization of `world`, on a tiered `NODE_SIZE`-per-node fabric.
+/// Well over 1k points for `world = 64`. The stack is `world` layers deep,
+/// so every power-of-two `pp ≤ world` divides it and stages stay uniform.
+///
+/// Assembled through [`GridBuilder`] — its `world_size` filter and
+/// deterministic divisibility skipping enumerate exactly the
+/// [`factorizations`] set, with one shared copy of the heads-rounding and
+/// misfit rules.
+pub fn strategy_grid(device: &DeviceSpec, world: u64) -> ScenarioGrid {
+    assert!(
+        world.is_power_of_two(),
+        "strategy comparison factors power-of-two worlds, got {world}"
+    );
+    let degrees: Vec<u64> =
+        (0..=world.trailing_zeros()).map(|e| 1u64 << e).collect();
+    GridBuilder::new(device)
+        .evolutions(&[
+            Evolution::none(),
+            Evolution::flop_vs_bw_2x(),
+            Evolution::flop_vs_bw_4x(),
+        ])
+        .topologies(&[TopologyKind::tiered_8x(NODE_SIZE)])
+        .hidden(&hidden_series())
+        .seq_len(&seq_len_series())
+        .layers(&[world])
+        .tp(&degrees)
+        .pp(&degrees)
+        .dp(&degrees)
+        .microbatches(&[MICROBATCHES])
+        .seq_par(&[false, true])
+        .world_size(world)
+        .build()
+}
+
+/// Run the comparison: every cell evaluated through the parallel sweep
+/// engine, plus per-archetype band summaries.
+pub fn compare(
+    device: &DeviceSpec,
+    world: u64,
+) -> (Vec<StrategyPoint>, Vec<StrategySummary>) {
+    let grid = strategy_grid(device, world);
+    let metrics = sweep::run(&grid);
+    let points: Vec<StrategyPoint> = metrics
+        .iter()
+        .zip(&grid.points)
+        .map(|(m, sc)| StrategyPoint {
+            spec: sc.cfg.par,
+            archetype: archetype(&sc.cfg.par),
+            hidden: sc.cfg.hidden,
+            seq_len: sc.cfg.seq_len,
+            batch: sc.cfg.batch,
+            evolution_ratio: grid.hardware[sc.hw as usize].evolution.ratio(),
+            metrics: *m,
+        })
+        .collect();
+
+    let mut summaries = Vec::new();
+    for arch in ["tp", "tp+sp", "pp", "dp", "3d", "3d+sp"] {
+        let of: Vec<&StrategyPoint> =
+            points.iter().filter(|p| p.archetype == arch).collect();
+        if of.is_empty() {
+            continue;
+        }
+        let fracs: Vec<f64> = of.iter().map(|p| p.metrics.comm_fraction()).collect();
+        let bubbles: Vec<f64> =
+            of.iter().map(|p| p.metrics.bubble_fraction()).collect();
+        let per_sample: Vec<f64> = of.iter().map(|p| p.time_per_sample()).collect();
+        summaries.push(StrategySummary {
+            archetype: arch,
+            points: of.len(),
+            comm_frac_min: fracs.iter().copied().fold(f64::MAX, f64::min),
+            comm_frac_max: fracs.iter().copied().fold(0.0, f64::max),
+            comm_frac_mean: fracs.iter().sum::<f64>() / fracs.len() as f64,
+            bubble_frac_mean: bubbles.iter().sum::<f64>() / bubbles.len() as f64,
+            time_per_sample_mean: per_sample.iter().sum::<f64>()
+                / per_sample.len() as f64,
+        });
+    }
+    (points, summaries)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::catalog;
+
+    #[test]
+    fn factorization_count_for_64() {
+        // (a,b,c) ≥ 0 with a+b+c = 6: C(8,2) = 28 triples, plus the
+        // sequence-parallel variant for the 21 with tp > 1.
+        let f = factorizations(64);
+        assert_eq!(f.len(), 28 + 21);
+        for s in &f {
+            assert_eq!(s.world_size(), 64, "{s:?}");
+            s.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn archetypes_classify_pure_and_mixed() {
+        assert_eq!(archetype(&ParallelismSpec::tp_dp(64, 1)), "tp");
+        assert_eq!(
+            archetype(&ParallelismSpec::tp_dp(64, 1).with_seq_par(true)),
+            "tp+sp"
+        );
+        assert_eq!(archetype(&ParallelismSpec::none().with_pp(64, 8)), "pp");
+        assert_eq!(archetype(&ParallelismSpec::tp_dp(1, 64)), "dp");
+        assert_eq!(archetype(&ParallelismSpec::tp_dp(8, 2).with_pp(4, 8)), "3d");
+    }
+
+    #[test]
+    fn grid_exceeds_1k_points() {
+        // the acceptance bar: a ≥ 1k-point strategy sweep
+        let grid = strategy_grid(&catalog::mi210(), 64);
+        assert!(grid.len() >= 1000, "strategy grid has {} points", grid.len());
+        assert_eq!(grid.hardware.len(), 3);
+    }
+
+    #[test]
+    fn strategies_produce_distinct_comm_fractions() {
+        // the headline claim: at one (model, hardware) cell the four pure
+        // strategies land at genuinely different comm fractions.
+        let (points, _) = compare(&catalog::mi210(), 64);
+        let cell = |arch: &str| -> f64 {
+            points
+                .iter()
+                .find(|p| {
+                    p.archetype == arch
+                        && p.hidden == 16384
+                        && p.seq_len == 2048
+                        && p.evolution_ratio == 4.0
+                })
+                .unwrap_or_else(|| panic!("no {arch} cell"))
+                .metrics
+                .comm_fraction()
+        };
+        let fr = [cell("tp"), cell("tp+sp"), cell("pp"), cell("dp")];
+        for i in 0..fr.len() {
+            for j in (i + 1)..fr.len() {
+                assert!(
+                    (fr[i] - fr[j]).abs() > 1e-6,
+                    "strategies {i} and {j} coincide: {fr:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn structural_signatures_per_archetype() {
+        let (points, _) = compare(&catalog::mi210(), 64);
+        for p in &points {
+            let m = &p.metrics;
+            match p.archetype {
+                "dp" => {
+                    assert_eq!(m.serialized_comm, 0.0, "{:?}", p.spec);
+                    assert_eq!(m.p2p_comm, 0.0);
+                    assert_eq!(m.bubble_time, 0.0);
+                    assert!(m.overlapped_comm > 0.0);
+                }
+                "pp" => {
+                    assert_eq!(m.serialized_comm, 0.0, "{:?}", p.spec);
+                    assert!(m.p2p_comm > 0.0);
+                    assert!(m.bubble_time > 0.0);
+                    // exact over the pipelined span; the once-per-iteration
+                    // optimizer tail dilutes the whole-iteration fraction
+                    let span = m.makespan - m.opt_compute;
+                    assert!(
+                        (m.bubble_time / span - p.spec.bubble_fraction()).abs()
+                            < 1e-12
+                    );
+                }
+                "tp" | "tp+sp" => {
+                    assert!(m.serialized_comm > 0.0, "{:?}", p.spec);
+                    assert_eq!(m.p2p_comm, 0.0);
+                    assert_eq!(m.bubble_time, 0.0);
+                }
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn per_sample_time_normalizes_workload() {
+        // dp=64 processes 64 samples/iteration at batch 1 — its raw
+        // makespan is not comparable to tp64's, but time_per_sample is.
+        let (points, summaries) = compare(&catalog::mi210(), 64);
+        let dp = points
+            .iter()
+            .find(|p| p.archetype == "dp" && p.hidden == 16384 && p.seq_len == 2048)
+            .unwrap();
+        assert_eq!(dp.samples_per_iteration(), 64);
+        assert!(
+            (dp.time_per_sample() - dp.metrics.makespan / 64.0).abs() < 1e-15
+        );
+        let tp = points
+            .iter()
+            .find(|p| p.archetype == "tp" && p.hidden == 16384 && p.seq_len == 2048)
+            .unwrap();
+        assert_eq!(tp.samples_per_iteration(), 1);
+        for s in &summaries {
+            assert!(s.time_per_sample_mean > 0.0);
+        }
+    }
+
+    #[test]
+    fn summaries_cover_every_archetype() {
+        let (_, summaries) = compare(&catalog::mi210(), 64);
+        let archs: Vec<&str> = summaries.iter().map(|s| s.archetype).collect();
+        for want in ["tp", "tp+sp", "pp", "dp", "3d", "3d+sp"] {
+            assert!(archs.contains(&want), "missing {want}");
+        }
+        for s in &summaries {
+            assert!(s.comm_frac_min <= s.comm_frac_mean + 1e-12);
+            assert!(s.comm_frac_mean <= s.comm_frac_max + 1e-12);
+            assert!((0.0..=1.0).contains(&s.comm_frac_max));
+        }
+        // the pipeline archetype is the only pure one paying a bubble
+        let pp = summaries.iter().find(|s| s.archetype == "pp").unwrap();
+        assert!(pp.bubble_frac_mean > 0.1);
+        let tp = summaries.iter().find(|s| s.archetype == "tp").unwrap();
+        assert_eq!(tp.bubble_frac_mean, 0.0);
+    }
+}

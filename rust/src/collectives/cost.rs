@@ -9,6 +9,7 @@
 //! size); small all-reduces are latency/underutilization-bound (§4.3.5).
 
 use crate::hw::{DeviceSpec, EfficiencyCurves};
+use crate::parallelism::TierSpec;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum CollectiveKind {
@@ -20,10 +21,19 @@ pub enum CollectiveKind {
 }
 
 /// Cost model bound to a device generation + efficiency curves.
+///
+/// The wire the collective runs over (`bw`, `latency`) defaults to the
+/// device's native ring-AR fabric and can be re-bound to a topology tier
+/// with [`CollectiveCost::with_tier`] — intra-node collectives keep the
+/// device wire, inter-node ones see the NIC tier.
 #[derive(Debug, Clone)]
 pub struct CollectiveCost {
     pub device: DeviceSpec,
     pub eff: EfficiencyCurves,
+    /// Sustained collective bandwidth of the wire, bytes/s.
+    pub bw: f64,
+    /// Per-hop latency of the wire, seconds.
+    pub latency: f64,
     /// Switch-based in-network reduction (the paper's Technique 2, §5):
     /// halves the data crossing each link for all-reduce.
     pub in_network_reduction: bool,
@@ -31,9 +41,13 @@ pub struct CollectiveCost {
 
 impl CollectiveCost {
     pub fn new(device: DeviceSpec) -> CollectiveCost {
+        let bw = device.ring_ar_bw;
+        let latency = device.link_latency;
         CollectiveCost {
             device,
             eff: EfficiencyCurves::default(),
+            bw,
+            latency,
             in_network_reduction: false,
         }
     }
@@ -43,13 +57,30 @@ impl CollectiveCost {
         self
     }
 
+    /// Re-bind the wire to a topology tier.
+    pub fn with_tier(mut self, tier: TierSpec) -> Self {
+        self.bw = tier.bw;
+        self.latency = tier.latency;
+        self
+    }
+
     pub fn with_in_network_reduction(mut self, on: bool) -> Self {
         self.in_network_reduction = on;
         self
     }
 
     fn effective_bw(&self, message_bytes: f64) -> f64 {
-        self.device.ring_ar_bw * self.eff.net(message_bytes)
+        self.bw * self.eff.net(message_bytes)
+    }
+
+    /// Time (seconds) for a point-to-point transfer of `bytes` between
+    /// adjacent ranks (pipeline stage-boundary sends).
+    pub fn p2p_time(&self, bytes: u64) -> f64 {
+        if bytes == 0 {
+            return 0.0;
+        }
+        let b = bytes as f64;
+        self.latency + b / self.effective_bw(b)
     }
 
     /// Time (seconds) for a collective of `bytes` over `n` devices.
@@ -60,7 +91,7 @@ impl CollectiveCost {
         }
         let b = bytes as f64;
         let nf = n as f64;
-        let lat = self.device.link_latency;
+        let lat = self.latency;
         match kind {
             CollectiveKind::AllReduce => {
                 // 2(N-1) pipelined steps of bytes/N each; utilization is a
@@ -178,6 +209,41 @@ mod tests {
             pin.wire_bytes(CollectiveKind::AllReduce, bytes, 16),
             plain.wire_bytes(CollectiveKind::AllReduce, bytes, 16) / 2.0
         );
+    }
+
+    #[test]
+    fn tier_rebinding_scales_time() {
+        use crate::parallelism::TierSpec;
+        let intra = cost();
+        let inter = cost().with_tier(TierSpec {
+            bw: intra.bw / 8.0,
+            latency: intra.latency * 10.0,
+        });
+        let bytes = 256 << 20;
+        let ti = intra.time(CollectiveKind::AllReduce, bytes, 8);
+        let tx = inter.time(CollectiveKind::AllReduce, bytes, 8);
+        assert!(tx > 7.0 * ti, "inter {tx} vs intra {ti}");
+        // re-binding to the device's own wire is a no-op
+        let same = cost().with_tier(TierSpec {
+            bw: intra.bw,
+            latency: intra.latency,
+        });
+        assert_eq!(
+            same.time(CollectiveKind::AllReduce, bytes, 8).to_bits(),
+            ti.to_bits()
+        );
+    }
+
+    #[test]
+    fn p2p_is_latency_plus_streaming() {
+        let c = cost();
+        assert_eq!(c.p2p_time(0), 0.0);
+        let b = 64u64 << 20;
+        let t = c.p2p_time(b);
+        assert!(t > c.latency);
+        assert!(t < c.time(CollectiveKind::AllReduce, b, 8), "p2p beats an AR");
+        // monotone in bytes
+        assert!(c.p2p_time(2 * b) > t);
     }
 
     #[test]

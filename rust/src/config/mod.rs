@@ -2,6 +2,7 @@
 //! per-figure sweep definitions.
 
 use crate::model::{ModelConfig, Precision};
+use crate::parallelism::ParallelismSpec;
 
 /// Table 3 — "Parameters and setup of models studied".
 #[derive(Debug, Clone)]
@@ -41,8 +42,7 @@ impl SweepGrid {
                             // count for small-H/large-TP corner cells.
                             heads: heads_for(h).max(tp),
                             ffn_mult: 4,
-                            tp,
-                            dp: 1,
+                            par: ParallelismSpec::tp_dp(tp, 1),
                             precision: Precision::F16,
                         });
                     }
@@ -101,8 +101,7 @@ pub fn fig14_config() -> ModelConfig {
         layers: 1,
         heads: heads_for(65536),
         ffn_mult: 4,
-        tp: 128,
-        dp: 4,
+        par: ParallelismSpec::tp_dp(128, 4),
         precision: Precision::F16,
     }
 }
@@ -145,7 +144,7 @@ mod tests {
         assert_eq!(c.hidden, 65536);
         assert_eq!(c.seq_len, 4096);
         assert_eq!(c.batch, 1);
-        assert_eq!(c.tp, 128);
+        assert_eq!(c.tp(), 128);
         c.validate().unwrap();
     }
 

@@ -1,6 +1,17 @@
 //! Builds the per-device operator graph of a distributed Transformer
 //! training iteration (forward + backward + optimizer), following the
-//! paper's Fig 4/5 decomposition and Megatron-style TP slicing.
+//! paper's Fig 4/5 decomposition and Megatron-style TP slicing, extended
+//! with 3D parallelism:
+//!
+//! * **PP** — the device holds one pipeline stage (`layers / pp` layers)
+//!   and runs `microbatches` passes per iteration, emitting a
+//!   [`OpKind::SendRecv`] activation send per microbatch per direction.
+//!   The fill/drain bubble is closed-form and applied post-simulation
+//!   ([`crate::sim::apply_pipeline`]), so the graph models the busy
+//!   steady state only.
+//! * **sequence parallelism** — the serialized TP all-reduces become
+//!   reduce-scatter/all-gather pairs and the LayerNorm/element-wise
+//!   regions run on `1/tp` of the tokens (Megatron-SP).
 //!
 //! Two entry points share one emission routine:
 //!
@@ -9,10 +20,11 @@
 //!   existing graph in place, leaving the dependency structure untouched.
 //!
 //! The dependency structure only depends on the graph *shape*
-//! ([`GraphShapeKey`]: layer count + which op classes are emitted), while
-//! payloads (GEMM dims, AR bytes) depend on the full `ModelConfig`. The
-//! sweep engine exploits this: one template graph per shape, rewritten per
-//! scenario point with no per-point dependency-vector allocations.
+//! ([`GraphShapeKey`]: per-stage layer count, microbatches, and which op
+//! classes are emitted), while payloads (GEMM dims, collective bytes)
+//! depend on the full `ModelConfig`. The sweep engine exploits this: one
+//! template graph per shape, rewritten per scenario point with no
+//! per-point dependency-vector allocations.
 
 use crate::model::ModelConfig;
 #[cfg(test)]
@@ -23,12 +35,15 @@ use super::{CommClass, OpGraph, OpId, OpKind, Phase};
 /// What to include in the built graph.
 #[derive(Debug, Clone, Copy)]
 pub struct GraphOptions {
-    /// Emit the serialized TP activation/error all-reduces (only
-    /// meaningful when `cfg.tp > 1`).
+    /// Emit the serialized TP activation/error collectives (only
+    /// meaningful when `cfg.tp() > 1`).
     pub tp_allreduce: bool,
     /// Emit the overlappable DP weight-gradient all-reduces (only
-    /// meaningful when `cfg.dp > 1`).
+    /// meaningful when `cfg.dp() > 1`).
     pub dp_allreduce: bool,
+    /// Emit the pipeline stage-boundary sends (only meaningful when
+    /// `cfg.pp() > 1`).
+    pub pp_comm: bool,
     /// Include LayerNorm/element-wise ops (off = GEMM-only view, the
     /// paper's algorithmic lens of §3.3).
     pub non_gemm: bool,
@@ -36,7 +51,12 @@ pub struct GraphOptions {
 
 impl Default for GraphOptions {
     fn default() -> Self {
-        GraphOptions { tp_allreduce: true, dp_allreduce: true, non_gemm: true }
+        GraphOptions {
+            tp_allreduce: true,
+            dp_allreduce: true,
+            pp_comm: true,
+            non_gemm: true,
+        }
     }
 }
 
@@ -46,9 +66,16 @@ impl Default for GraphOptions {
 /// the invariant behind the sweep engine's graph-template cache.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct GraphShapeKey {
-    pub layers: u64,
-    /// Serialized TP all-reduces are emitted (`opts.tp_allreduce && tp > 1`).
+    /// Layers per pipeline stage (`layers / pp`).
+    pub stage_layers: u64,
+    /// Microbatch passes emitted (1 unless `pp > 1`).
+    pub microbatches: u64,
+    /// Serialized TP collectives are emitted (`opts.tp_allreduce && tp > 1`).
     pub tp_ars: bool,
+    /// TP collectives are RS/AG pairs instead of all-reduces.
+    pub seq_par: bool,
+    /// Pipeline stage-boundary sends are emitted (`opts.pp_comm && pp > 1`).
+    pub pp_comm: bool,
     /// Overlappable DP all-reduces are emitted (`opts.dp_allreduce && dp > 1`).
     pub dp_ars: bool,
     /// LayerNorm / element-wise / optimizer ops are emitted.
@@ -57,10 +84,14 @@ pub struct GraphShapeKey {
 
 impl GraphShapeKey {
     pub fn of(cfg: &ModelConfig, opts: GraphOptions) -> GraphShapeKey {
+        let tp_ars = opts.tp_allreduce && cfg.tp() > 1;
         GraphShapeKey {
-            layers: cfg.layers,
-            tp_ars: opts.tp_allreduce && cfg.tp > 1,
-            dp_ars: opts.dp_allreduce && cfg.dp > 1,
+            stage_layers: cfg.stage_layers(),
+            microbatches: cfg.microbatches(),
+            tp_ars,
+            seq_par: tp_ars && cfg.seq_par(),
+            pp_comm: opts.pp_comm && cfg.pp() > 1,
+            dp_ars: opts.dp_allreduce && cfg.dp() > 1,
             non_gemm: opts.non_gemm,
         }
     }
@@ -95,8 +126,9 @@ impl Emitter<'_> {
     }
 }
 
-/// Build one device's operator graph for a full training iteration of
-/// `cfg.layers` Transformer layers.
+/// Build one device's operator graph for a full training iteration of its
+/// pipeline stage (`cfg.stage_layers()` Transformer layers ×
+/// `cfg.microbatches()` passes).
 pub fn build_layer_graph(cfg: &ModelConfig, opts: GraphOptions) -> OpGraph {
     let mut g = OpGraph::default();
     emit_layer_graph(cfg, opts, &mut Emitter::Build(&mut g));
@@ -133,11 +165,30 @@ fn dep(prev: &Option<OpId>) -> &[OpId] {
     }
 }
 
+/// The serialized TP collective that resolves a sliced GEMM's partial sum:
+/// an all-reduce, or a reduce-scatter under sequence parallelism. One
+/// definition so forward and backward emission cannot drift apart.
+fn tp_reduce(
+    em: &mut Emitter<'_>,
+    sp_on: bool,
+    bytes: u64,
+    phase: Phase,
+    producer: OpId,
+) -> OpId {
+    let kind = if sp_on {
+        OpKind::ReduceScatter { bytes, class: CommClass::Serialized }
+    } else {
+        OpKind::AllReduce { bytes, class: CommClass::Serialized }
+    };
+    em.add(kind, phase, &[producer])
+}
+
 /// One shared emission routine for build and rewrite (see module docs).
 /// Everything dependency-shaped here must be a function of
 /// [`GraphShapeKey`] alone — payloads may use the full config.
 fn emit_layer_graph(cfg: &ModelConfig, opts: GraphOptions, em: &mut Emitter<'_>) {
-    let (h, sl, b, tp) = (cfg.hidden, cfg.seq_len, cfg.batch, cfg.tp);
+    let (h, sl, b) = (cfg.hidden, cfg.seq_len, cfg.batch);
+    let tp = cfg.tp();
     let f = cfg.ffn();
     let bs = b * sl;
     let hd = h / cfg.heads;
@@ -145,216 +196,291 @@ fn emit_layer_graph(cfg: &ModelConfig, opts: GraphOptions, em: &mut Emitter<'_>)
     let p = cfg.precision.bytes();
     let act_bytes = p * bs * h; // Eq. 5: the full activation
     let tp_on = opts.tp_allreduce && tp > 1;
-    let dp_on = opts.dp_allreduce && cfg.dp > 1;
+    let sp_on = tp_on && cfg.seq_par();
+    let dp_on = opts.dp_allreduce && cfg.dp() > 1;
+    let pp_on = opts.pp_comm && cfg.pp() > 1;
+    let stage_layers = cfg.stage_layers();
+    let microbatches = cfg.microbatches();
+    // Sequence parallelism shards the LayerNorm/element-wise token rows.
+    let sp_div = if sp_on { tp } else { 1 };
+    let sp_rows = bs / sp_div;
 
     // layer weight parameters per device (for DP gradient ARs, Eq. 8)
     let layer_param_bytes = p * ((3 * h * h) + (h * h) + (h * f) + (f * h)) / tp;
 
-    // ---- forward ----------------------------------------------------------
+    // Collected only when building: rewrites never touch deps, and an
+    // empty Vec never allocates.
+    let mut dp_ar_ids: Vec<OpId> = Vec::new();
+    let mut p2p_ids: Vec<OpId> = Vec::new();
+
+    // ---- forward (all microbatch passes through this stage) ---------------
     // `prev` is the op producing the layer input.
     let mut prev: Option<OpId> = None;
 
-    for _layer in 0..cfg.layers {
-        // attention sub-layer
-        let ln1 = if opts.non_gemm {
-            Some(em.add(OpKind::LayerNorm { rows: bs, h }, Phase::Forward, dep(&prev)))
-        } else {
-            None
-        };
-        let attn_in = ln1.or(prev);
-        let qkv = em.add(
-            OpKind::Gemm { m: bs, n: 3 * h / tp, k: h, count: 1 },
-            Phase::Forward,
-            dep(&attn_in),
-        );
-        let scores = em.add(
-            OpKind::Gemm { m: sl, n: sl, k: hd, count: b * heads_dev },
-            Phase::Forward,
-            &[qkv],
-        );
-        let ctx = em.add(
-            OpKind::Gemm { m: sl, n: hd, k: sl, count: b * heads_dev },
-            Phase::Forward,
-            &[scores],
-        );
-        let out = em.add(
-            OpKind::Gemm { m: bs, n: h, k: h / tp, count: 1 },
-            Phase::Forward,
-            &[ctx],
-        );
-        // row-parallel out-proj produces a partial sum → serialized AR
-        let mut tail = out;
-        if tp_on {
-            tail = em.add(
-                OpKind::AllReduce { bytes: act_bytes, class: CommClass::Serialized },
+    for _micro in 0..microbatches {
+        for _layer in 0..stage_layers {
+            // attention sub-layer
+            let ln1 = if opts.non_gemm {
+                Some(em.add(
+                    OpKind::LayerNorm { rows: sp_rows, h },
+                    Phase::Forward,
+                    dep(&prev),
+                ))
+            } else {
+                None
+            };
+            let mut attn_in = ln1.or(prev);
+            if sp_on {
+                // re-materialize the full activation for the sliced GEMMs
+                attn_in = Some(em.add(
+                    OpKind::AllGather { bytes: act_bytes, class: CommClass::Serialized },
+                    Phase::Forward,
+                    dep(&attn_in),
+                ));
+            }
+            let qkv = em.add(
+                OpKind::Gemm { m: bs, n: 3 * h / tp, k: h, count: 1 },
                 Phase::Forward,
-                &[out],
+                dep(&attn_in),
             );
-        }
-        if opts.non_gemm {
-            // residual add
-            tail = em.add(
-                OpKind::Elementwise { bytes: 3 * act_bytes },
+            let scores = em.add(
+                OpKind::Gemm { m: sl, n: sl, k: hd, count: b * heads_dev },
                 Phase::Forward,
-                &[tail],
+                &[qkv],
             );
+            let ctx = em.add(
+                OpKind::Gemm { m: sl, n: hd, k: sl, count: b * heads_dev },
+                Phase::Forward,
+                &[scores],
+            );
+            let out = em.add(
+                OpKind::Gemm { m: bs, n: h, k: h / tp, count: 1 },
+                Phase::Forward,
+                &[ctx],
+            );
+            // row-parallel out-proj produces a partial sum
+            let mut tail = out;
+            if tp_on {
+                tail = tp_reduce(em, sp_on, act_bytes, Phase::Forward, out);
+            }
+            if opts.non_gemm {
+                // residual add (token-sharded under sequence parallelism)
+                tail = em.add(
+                    OpKind::Elementwise { bytes: 3 * act_bytes / sp_div },
+                    Phase::Forward,
+                    &[tail],
+                );
+            }
+
+            // FC sub-layer
+            let ln2 = if opts.non_gemm {
+                Some(em.add(
+                    OpKind::LayerNorm { rows: sp_rows, h },
+                    Phase::Forward,
+                    &[tail],
+                ))
+            } else {
+                None
+            };
+            let mut fc_in = ln2.unwrap_or(tail);
+            if sp_on {
+                fc_in = em.add(
+                    OpKind::AllGather { bytes: act_bytes, class: CommClass::Serialized },
+                    Phase::Forward,
+                    &[fc_in],
+                );
+            }
+            let fc1 = em.add(
+                OpKind::Gemm { m: bs, n: f / tp, k: h, count: 1 },
+                Phase::Forward,
+                &[fc_in],
+            );
+            let fc2 = em.add(
+                OpKind::Gemm { m: bs, n: h, k: f / tp, count: 1 },
+                Phase::Forward,
+                &[fc1],
+            );
+            let mut tail2 = fc2;
+            if tp_on {
+                tail2 = tp_reduce(em, sp_on, act_bytes, Phase::Forward, fc2);
+            }
+            if opts.non_gemm {
+                tail2 = em.add(
+                    OpKind::Elementwise { bytes: 3 * act_bytes / sp_div },
+                    Phase::Forward,
+                    &[tail2],
+                );
+            }
+            prev = Some(tail2);
         }
 
-        // FC sub-layer
-        let ln2 = if opts.non_gemm {
-            Some(em.add(OpKind::LayerNorm { rows: bs, h }, Phase::Forward, &[tail]))
-        } else {
-            None
-        };
-        let fc1 = em.add(
-            OpKind::Gemm { m: bs, n: f / tp, k: h, count: 1 },
-            Phase::Forward,
-            &[ln2.unwrap_or(tail)],
-        );
-        let fc2 = em.add(
-            OpKind::Gemm { m: bs, n: h, k: f / tp, count: 1 },
-            Phase::Forward,
-            &[fc1],
-        );
-        let mut tail2 = fc2;
-        if tp_on {
-            tail2 = em.add(
-                OpKind::AllReduce { bytes: act_bytes, class: CommClass::Serialized },
+        // stage-boundary activation send to the next stage (the tensor
+        // live at the boundary is token-sharded under sequence
+        // parallelism); the next microbatch's compute does not wait on it
+        // (pipelined DMA)
+        if pp_on {
+            let send = em.add(
+                OpKind::SendRecv { bytes: act_bytes / sp_div },
                 Phase::Forward,
-                &[fc2],
+                dep(&prev),
             );
+            if em.is_build() {
+                p2p_ids.push(send);
+            }
         }
-        if opts.non_gemm {
-            tail2 = em.add(
-                OpKind::Elementwise { bytes: 3 * act_bytes },
-                Phase::Forward,
-                &[tail2],
-            );
-        }
-        prev = Some(tail2);
     }
 
-    // ---- backward (reverse layer order) -------------------------------------
+    // ---- backward (reverse layer order, per microbatch) -------------------
     // For each fwd GEMM (M,N,K): input-grad GEMM (M,K,N) + weight-grad GEMM
     // (K,N,M) — same flop count each (Eq. 7).
     let mut bprev = prev; // gradient flowing in from the loss
-    // Collected only when building: rewrites never touch deps, and an empty
-    // Vec never allocates.
-    let mut dp_ar_ids: Vec<OpId> = Vec::new();
 
-    for _layer in (0..cfg.layers).rev() {
-        // FC sub-layer backward
-        let fc2_ig = em.add(
-            OpKind::Gemm { m: bs, n: f / tp, k: h, count: 1 },
-            Phase::Backward,
-            dep(&bprev),
-        );
-        let fc2_wg = em.add(
-            OpKind::Gemm { m: f / tp, n: h, k: bs, count: 1 },
-            Phase::Backward,
-            dep(&bprev),
-        );
-        let fc1_ig = em.add(
-            OpKind::Gemm { m: bs, n: h, k: f / tp, count: 1 },
-            Phase::Backward,
-            &[fc2_ig],
-        );
-        let fc1_wg = em.add(
-            OpKind::Gemm { m: h, n: f / tp, k: bs, count: 1 },
-            Phase::Backward,
-            &[fc2_ig],
-        );
-        // column-parallel fc1's input-grad is a partial sum → serialized AR
-        let mut btail = fc1_ig;
-        if tp_on {
-            btail = em.add(
-                OpKind::AllReduce { bytes: act_bytes, class: CommClass::Serialized },
+    for micro in 0..microbatches {
+        let last_micro = micro + 1 == microbatches;
+        for _layer in (0..stage_layers).rev() {
+            // FC sub-layer backward (under sequence parallelism the
+            // incoming gradient is token-sharded → all-gather first)
+            let mut g_in = bprev;
+            if sp_on {
+                g_in = Some(em.add(
+                    OpKind::AllGather { bytes: act_bytes, class: CommClass::Serialized },
+                    Phase::Backward,
+                    dep(&g_in),
+                ));
+            }
+            let fc2_ig = em.add(
+                OpKind::Gemm { m: bs, n: f / tp, k: h, count: 1 },
                 Phase::Backward,
-                &[fc1_ig],
+                dep(&g_in),
             );
-        }
-        if opts.non_gemm {
-            btail = em.add(
-                OpKind::LayerNorm { rows: bs, h },
+            let fc2_wg = em.add(
+                OpKind::Gemm { m: f / tp, n: h, k: bs, count: 1 },
                 Phase::Backward,
-                &[btail],
+                dep(&g_in),
             );
+            let fc1_ig = em.add(
+                OpKind::Gemm { m: bs, n: h, k: f / tp, count: 1 },
+                Phase::Backward,
+                &[fc2_ig],
+            );
+            let fc1_wg = em.add(
+                OpKind::Gemm { m: h, n: f / tp, k: bs, count: 1 },
+                Phase::Backward,
+                &[fc2_ig],
+            );
+            // column-parallel fc1's input-grad is a partial sum
+            let mut btail = fc1_ig;
+            if tp_on {
+                btail = tp_reduce(em, sp_on, act_bytes, Phase::Backward, fc1_ig);
+            }
+            if opts.non_gemm {
+                btail = em.add(
+                    OpKind::LayerNorm { rows: sp_rows, h },
+                    Phase::Backward,
+                    &[btail],
+                );
+            }
+
+            // attention sub-layer backward
+            let mut g_attn = btail;
+            if sp_on {
+                g_attn = em.add(
+                    OpKind::AllGather { bytes: act_bytes, class: CommClass::Serialized },
+                    Phase::Backward,
+                    &[btail],
+                );
+            }
+            let out_ig = em.add(
+                OpKind::Gemm { m: bs, n: h / tp, k: h, count: 1 },
+                Phase::Backward,
+                &[g_attn],
+            );
+            let out_wg = em.add(
+                OpKind::Gemm { m: h / tp, n: h, k: bs, count: 1 },
+                Phase::Backward,
+                &[g_attn],
+            );
+            let ctx_bwd = em.add(
+                OpKind::Gemm { m: sl, n: sl, k: hd, count: 2 * b * heads_dev },
+                Phase::Backward,
+                &[out_ig],
+            );
+            let scores_bwd = em.add(
+                OpKind::Gemm { m: sl, n: hd, k: sl, count: 2 * b * heads_dev },
+                Phase::Backward,
+                &[ctx_bwd],
+            );
+            let qkv_ig = em.add(
+                OpKind::Gemm { m: bs, n: h, k: 3 * h / tp, count: 1 },
+                Phase::Backward,
+                &[scores_bwd],
+            );
+            let qkv_wg = em.add(
+                OpKind::Gemm { m: 3 * h / tp, n: h, k: bs, count: 1 },
+                Phase::Backward,
+                &[scores_bwd],
+            );
+            let mut btail2 = qkv_ig;
+            if tp_on {
+                btail2 = tp_reduce(em, sp_on, act_bytes, Phase::Backward, qkv_ig);
+            }
+            if opts.non_gemm {
+                btail2 = em.add(
+                    OpKind::LayerNorm { rows: sp_rows, h },
+                    Phase::Backward,
+                    &[btail2],
+                );
+            }
+
+            // DP weight-gradient all-reduce: issued once the layer's last
+            // WG of the *last* microbatch completes (gradients accumulate
+            // locally until then); overlappable with the next (earlier)
+            // layer's backprop.
+            if dp_on && last_micro {
+                let ar = em.add(
+                    OpKind::AllReduce {
+                        bytes: layer_param_bytes,
+                        class: CommClass::Overlappable,
+                    },
+                    Phase::Backward,
+                    &[fc2_wg, fc1_wg, out_wg, qkv_wg],
+                );
+                if em.is_build() {
+                    dp_ar_ids.push(ar);
+                }
+            }
+
+            bprev = Some(btail2);
         }
 
-        // attention sub-layer backward
-        let out_ig = em.add(
-            OpKind::Gemm { m: bs, n: h / tp, k: h, count: 1 },
-            Phase::Backward,
-            &[btail],
-        );
-        let out_wg = em.add(
-            OpKind::Gemm { m: h / tp, n: h, k: bs, count: 1 },
-            Phase::Backward,
-            &[btail],
-        );
-        let ctx_bwd = em.add(
-            OpKind::Gemm { m: sl, n: sl, k: hd, count: 2 * b * heads_dev },
-            Phase::Backward,
-            &[out_ig],
-        );
-        let scores_bwd = em.add(
-            OpKind::Gemm { m: sl, n: hd, k: sl, count: 2 * b * heads_dev },
-            Phase::Backward,
-            &[ctx_bwd],
-        );
-        let qkv_ig = em.add(
-            OpKind::Gemm { m: bs, n: h, k: 3 * h / tp, count: 1 },
-            Phase::Backward,
-            &[scores_bwd],
-        );
-        let qkv_wg = em.add(
-            OpKind::Gemm { m: 3 * h / tp, n: h, k: bs, count: 1 },
-            Phase::Backward,
-            &[scores_bwd],
-        );
-        let mut btail2 = qkv_ig;
-        if tp_on {
-            btail2 = em.add(
-                OpKind::AllReduce { bytes: act_bytes, class: CommClass::Serialized },
+        // stage-boundary gradient send to the previous stage (sharded
+        // like the forward activation under sequence parallelism)
+        if pp_on {
+            let send = em.add(
+                OpKind::SendRecv { bytes: act_bytes / sp_div },
                 Phase::Backward,
-                &[qkv_ig],
-            );
-        }
-        if opts.non_gemm {
-            btail2 = em.add(
-                OpKind::LayerNorm { rows: bs, h },
-                Phase::Backward,
-                &[btail2],
-            );
-        }
-
-        // DP weight-gradient all-reduce: issued once the layer's last WG
-        // completes; overlappable with the next (earlier) layer's backprop.
-        if dp_on {
-            let ar = em.add(
-                OpKind::AllReduce {
-                    bytes: layer_param_bytes,
-                    class: CommClass::Overlappable,
-                },
-                Phase::Backward,
-                &[fc2_wg, fc1_wg, out_wg, qkv_wg],
+                dep(&bprev),
             );
             if em.is_build() {
-                dp_ar_ids.push(ar);
+                p2p_ids.push(send);
             }
         }
-
-        bprev = Some(btail2);
     }
 
-    // ---- optimizer ----------------------------------------------------------
+    // ---- optimizer --------------------------------------------------------
     if opts.non_gemm {
         let deps: Vec<OpId> = if em.is_build() {
-            bprev.iter().copied().chain(dp_ar_ids.iter().copied()).collect()
+            bprev
+                .iter()
+                .copied()
+                .chain(dp_ar_ids.iter().copied())
+                .chain(p2p_ids.iter().copied())
+                .collect()
         } else {
             Vec::new() // rewrites never read deps
         };
-        let param_bytes = cfg.layers * layer_param_bytes;
+        // this device holds one stage's parameters
+        let param_bytes = stage_layers * layer_param_bytes;
         em.add(
             // Adam reads grads + 2 moments + params, writes params + moments
             OpKind::Elementwise { bytes: 6 * param_bytes },
@@ -368,6 +494,7 @@ fn emit_layer_graph(cfg: &ModelConfig, opts: GraphOptions, em: &mut Emitter<'_>)
 mod tests {
     use super::*;
     use crate::model::Precision;
+    use crate::parallelism::ParallelismSpec;
 
     fn cfg(tp: u64, dp: u64) -> ModelConfig {
         ModelConfig {
@@ -377,8 +504,7 @@ mod tests {
             layers: 4,
             heads: 16,
             ffn_mult: 4,
-            tp,
-            dp,
+            par: ParallelismSpec::tp_dp(tp, dp),
             precision: Precision::F16,
         }
     }
@@ -389,6 +515,21 @@ mod tests {
             let g = build_layer_graph(&cfg(tp, dp), GraphOptions::default());
             g.validate().unwrap();
             assert!(!g.is_empty());
+        }
+    }
+
+    #[test]
+    fn graph_is_valid_dag_under_3d_parallelism() {
+        for (tp, pp, mb, dp, sp) in [
+            (1u64, 2u64, 4u64, 1u64, false),
+            (4, 2, 8, 4, false),
+            (4, 4, 2, 1, true),
+            (8, 1, 1, 2, true),
+        ] {
+            let c = cfg(tp, dp).with_pp(pp, mb).with_seq_par(sp);
+            c.validate().unwrap();
+            let g = build_layer_graph(&c, GraphOptions::default());
+            g.validate().unwrap();
         }
     }
 
@@ -406,6 +547,25 @@ mod tests {
                 "tp {tp}"
             );
         }
+    }
+
+    #[test]
+    fn pipeline_stage_holds_layers_over_pp_times_microbatches() {
+        // per-device GEMM work = (layers/pp) stage layers × microbatch
+        // passes (each microbatch carries the full `batch`).
+        let c = cfg(2, 1).with_pp(2, 4);
+        let g = build_layer_graph(&c, GraphOptions::default());
+        let lc = LayerCounts::of(&c);
+        assert_eq!(
+            g.total_gemm_flops(),
+            c.stage_layers() * c.microbatches() * lc.iter_gemm_flops()
+        );
+        // and two sends (fwd + bwd) per microbatch cross the stage boundary
+        let p = c.precision.bytes();
+        assert_eq!(
+            g.total_p2p_bytes(),
+            2 * c.microbatches() * p * c.batch * c.seq_len * c.hidden
+        );
     }
 
     #[test]
@@ -432,6 +592,59 @@ mod tests {
     }
 
     #[test]
+    fn seq_par_replaces_ars_with_rs_ag_pairs() {
+        let c = cfg(8, 1).with_seq_par(true);
+        let g = build_layer_graph(&c, GraphOptions::default());
+        // no all-reduces on the serialized path...
+        assert!(!g.ops.iter().any(|o| matches!(
+            o.kind,
+            OpKind::AllReduce { class: CommClass::Serialized, .. }
+        )));
+        // ...but 4 RS + 4 AG per layer, moving the same total bytes as the
+        // 4 ARs would (an AR is algorithmically RS + AG)
+        let rs = g
+            .ops
+            .iter()
+            .filter(|o| matches!(o.kind, OpKind::ReduceScatter { .. }))
+            .count() as u64;
+        let ag = g
+            .ops
+            .iter()
+            .filter(|o| matches!(o.kind, OpKind::AllGather { .. }))
+            .count() as u64;
+        assert_eq!(rs, 4 * c.layers);
+        assert_eq!(ag, 4 * c.layers);
+        let lc = LayerCounts::of(&c);
+        assert_eq!(
+            g.total_comm_bytes(CommClass::Serialized),
+            2 * c.layers * lc.iter_tp_ar_bytes()
+        );
+    }
+
+    #[test]
+    fn seq_par_shards_non_gemm_rows() {
+        let c = cfg(8, 1).with_seq_par(true);
+        let g = build_layer_graph(&c, GraphOptions::default());
+        let bs = c.batch * c.seq_len;
+        for op in &g.ops {
+            if let OpKind::LayerNorm { rows, .. } = op.kind {
+                assert_eq!(rows, bs / 8);
+            }
+        }
+    }
+
+    #[test]
+    fn seq_par_shards_stage_boundary_sends() {
+        // Megatron-SP pipelines send the sequence-sharded tensor between
+        // stages: p2p bytes shrink by tp when seq_par is on.
+        let dense = cfg(8, 1).with_pp(2, 4);
+        let sp = dense.with_seq_par(true);
+        let a = build_layer_graph(&dense, GraphOptions::default());
+        let b = build_layer_graph(&sp, GraphOptions::default());
+        assert_eq!(a.total_p2p_bytes(), 8 * b.total_p2p_bytes());
+    }
+
+    #[test]
     fn dp_ar_bytes_match_eq8() {
         let c = cfg(2, 4);
         let g = build_layer_graph(&c, GraphOptions::default());
@@ -443,10 +656,25 @@ mod tests {
     }
 
     #[test]
+    fn dp_ars_issued_once_regardless_of_microbatches() {
+        // gradients accumulate locally across microbatches; the DP AR is
+        // emitted only on the last one, so its bytes don't scale with mb.
+        let base = cfg(2, 4).with_pp(2, 1);
+        let micro = cfg(2, 4).with_pp(2, 8);
+        let a = build_layer_graph(&base, GraphOptions::default());
+        let b = build_layer_graph(&micro, GraphOptions::default());
+        assert_eq!(
+            a.total_comm_bytes(CommClass::Overlappable),
+            b.total_comm_bytes(CommClass::Overlappable)
+        );
+    }
+
+    #[test]
     fn no_comm_ops_when_degrees_are_one() {
         let g = build_layer_graph(&cfg(1, 1), GraphOptions::default());
         assert_eq!(g.total_comm_bytes(CommClass::Serialized), 0);
         assert_eq!(g.total_comm_bytes(CommClass::Overlappable), 0);
+        assert_eq!(g.total_p2p_bytes(), 0);
     }
 
     #[test]
@@ -476,6 +704,29 @@ mod tests {
                     "{:?} blocks on a DP all-reduce",
                     op.kind
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn pp_sends_never_gate_compute() {
+        // stage-boundary sends are pipelined DMA: no compute op may
+        // depend on one (only the optimizer waits for completion).
+        let c = cfg(2, 1).with_pp(2, 4);
+        let g = build_layer_graph(&c, GraphOptions::default());
+        let send_ids: std::collections::HashSet<_> = g
+            .ops
+            .iter()
+            .filter(|o| matches!(o.kind, OpKind::SendRecv { .. }))
+            .map(|o| o.id)
+            .collect();
+        assert!(!send_ids.is_empty());
+        for op in &g.ops {
+            if matches!(op.phase, Phase::Optimizer) {
+                continue;
+            }
+            for d in &op.deps {
+                assert!(!send_ids.contains(d), "{:?} blocks on a PP send", op.kind);
             }
         }
     }
@@ -525,6 +776,13 @@ mod tests {
         // ...but collapsing a parallelism degree to 1 does.
         assert_ne!(a, GraphShapeKey::of(&cfg(1, 4), opts));
         assert_ne!(a, GraphShapeKey::of(&cfg(4, 1), opts));
+        // ...and so do the new strategy axes.
+        assert_ne!(a, GraphShapeKey::of(&cfg(4, 4).with_seq_par(true), opts));
+        assert_ne!(a, GraphShapeKey::of(&cfg(4, 4).with_pp(2, 4), opts));
+        assert_ne!(
+            GraphShapeKey::of(&cfg(4, 4).with_pp(2, 4), opts),
+            GraphShapeKey::of(&cfg(4, 4).with_pp(2, 8), opts)
+        );
     }
 
     #[test]
@@ -548,6 +806,25 @@ mod tests {
             assert_eq!(a.id, b.id);
             assert_eq!(a.kind, b.kind);
             assert_eq!(a.phase, b.phase);
+            assert_eq!(a.deps, b.deps);
+        }
+    }
+
+    #[test]
+    fn rewrite_matches_fresh_build_under_3d_parallelism() {
+        let opts = GraphOptions::default();
+        let from = cfg(4, 2).with_pp(2, 4).with_seq_par(true);
+        let mut to = from;
+        to.hidden = 4096;
+        to.heads = 64;
+        to.seq_len = 1024;
+
+        let mut template = build_layer_graph(&from, opts);
+        rewrite_layer_graph(&to, opts, &mut template);
+        let fresh = build_layer_graph(&to, opts);
+        assert_eq!(template.ops.len(), fresh.ops.len());
+        for (a, b) in template.ops.iter().zip(&fresh.ops) {
+            assert_eq!(a.kind, b.kind);
             assert_eq!(a.deps, b.deps);
         }
     }

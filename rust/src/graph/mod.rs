@@ -57,12 +57,25 @@ impl OpGraph {
             .sum()
     }
 
-    /// Total communication bytes by class.
+    /// Total collective communication bytes by class (all-reduce,
+    /// reduce-scatter, all-gather; pipeline P2P is classless — see
+    /// [`OpGraph::total_p2p_bytes`]).
     pub fn total_comm_bytes(&self, class: CommClass) -> u64 {
         self.ops
             .iter()
+            .filter_map(|o| match o.kind.comm_payload() {
+                Some((bytes, Some(c))) if c == class => Some(bytes),
+                _ => None,
+            })
+            .sum()
+    }
+
+    /// Total pipeline point-to-point bytes.
+    pub fn total_p2p_bytes(&self) -> u64 {
+        self.ops
+            .iter()
             .filter_map(|o| match o.kind {
-                OpKind::AllReduce { bytes, class: c } if c == class => Some(bytes),
+                OpKind::SendRecv { bytes } => Some(bytes),
                 _ => None,
             })
             .sum()

@@ -8,7 +8,7 @@ pub struct OpId(pub usize);
 /// overlapped with independent compute (§2.3.2).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum CommClass {
-    /// TP activation/error all-reduce: successors block on it (Fig 3b).
+    /// TP activation/error collective: successors block on it (Fig 3b).
     Serialized,
     /// DP weight-gradient all-reduce: only the optimizer step blocks on it
     /// (Fig 3a) — hidden when compute slack suffices.
@@ -38,11 +38,39 @@ pub enum OpKind {
     Elementwise { bytes: u64 },
     /// All-reduce of `bytes` with the given scheduling class.
     AllReduce { bytes: u64, class: CommClass },
+    /// Reduce-scatter of `bytes` over the TP group — sequence
+    /// parallelism's replacement for the post-GEMM all-reduce.
+    ReduceScatter { bytes: u64, class: CommClass },
+    /// All-gather of `bytes` over the TP group — sequence parallelism's
+    /// re-materialization before the next sliced GEMM.
+    AllGather { bytes: u64, class: CommClass },
+    /// Point-to-point activation/gradient send of `bytes` to the adjacent
+    /// pipeline stage. Runs on its own stream; nothing but the iteration
+    /// end waits on it (the receiving stage is modeled by the bubble).
+    SendRecv { bytes: u64 },
 }
 
 impl OpKind {
     pub fn is_comm(&self) -> bool {
-        matches!(self, OpKind::AllReduce { .. })
+        matches!(
+            self,
+            OpKind::AllReduce { .. }
+                | OpKind::ReduceScatter { .. }
+                | OpKind::AllGather { .. }
+                | OpKind::SendRecv { .. }
+        )
+    }
+
+    /// Payload bytes and scheduling class of a communication op
+    /// (`SendRecv` reports no class — it lives on the P2P stream).
+    pub fn comm_payload(&self) -> Option<(u64, Option<CommClass>)> {
+        match *self {
+            OpKind::AllReduce { bytes, class }
+            | OpKind::ReduceScatter { bytes, class }
+            | OpKind::AllGather { bytes, class } => Some((bytes, Some(class))),
+            OpKind::SendRecv { bytes } => Some((bytes, None)),
+            _ => None,
+        }
     }
 
     pub fn gemm_flops(&self) -> u64 {
@@ -68,6 +96,9 @@ impl OpKind {
                 CommClass::Serialized => format!("ar-tp {bytes}B"),
                 CommClass::Overlappable => format!("ar-dp {bytes}B"),
             },
+            OpKind::ReduceScatter { bytes, .. } => format!("rs-tp {bytes}B"),
+            OpKind::AllGather { bytes, .. } => format!("ag-tp {bytes}B"),
+            OpKind::SendRecv { bytes } => format!("p2p-pp {bytes}B"),
         }
     }
 }
@@ -95,7 +126,22 @@ mod tests {
     #[test]
     fn comm_classification() {
         assert!(OpKind::AllReduce { bytes: 1, class: CommClass::Serialized }.is_comm());
+        assert!(OpKind::ReduceScatter { bytes: 1, class: CommClass::Serialized }
+            .is_comm());
+        assert!(OpKind::AllGather { bytes: 1, class: CommClass::Serialized }.is_comm());
+        assert!(OpKind::SendRecv { bytes: 1 }.is_comm());
         assert!(!OpKind::Gemm { m: 1, n: 1, k: 1, count: 1 }.is_comm());
+    }
+
+    #[test]
+    fn comm_payload_extracts_bytes_and_class() {
+        let (b, c) = OpKind::AllReduce { bytes: 64, class: CommClass::Overlappable }
+            .comm_payload()
+            .unwrap();
+        assert_eq!((b, c), (64, Some(CommClass::Overlappable)));
+        let (b, c) = OpKind::SendRecv { bytes: 7 }.comm_payload().unwrap();
+        assert_eq!((b, c), (7, None));
+        assert!(OpKind::Elementwise { bytes: 1 }.comm_payload().is_none());
     }
 
     #[test]
@@ -103,5 +149,10 @@ mod tests {
         let a = OpKind::AllReduce { bytes: 64, class: CommClass::Serialized }.label();
         let b = OpKind::AllReduce { bytes: 64, class: CommClass::Overlappable }.label();
         assert_ne!(a, b);
+        let rs = OpKind::ReduceScatter { bytes: 64, class: CommClass::Serialized };
+        let ag = OpKind::AllGather { bytes: 64, class: CommClass::Serialized };
+        assert_ne!(rs.label(), ag.label());
+        assert_ne!(rs.label(), a);
+        assert!(OpKind::SendRecv { bytes: 64 }.label().contains("p2p"));
     }
 }

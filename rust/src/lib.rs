@@ -14,6 +14,10 @@
 //!   op/byte complexities.
 //! * [`hw`] — device specifications, a real-GPU catalog, size-dependent
 //!   efficiency curves, and the flop-vs-bw hardware-evolution model.
+//! * [`parallelism`] — the 3D TP×PP×DP (+ sequence-parallel) strategy
+//!   space ([`parallelism::ParallelismSpec`]) and the tiered network
+//!   topology ([`parallelism::NetworkTopology`]) that maps each
+//!   communication group onto an intra-node or inter-node bandwidth tier.
 //! * [`collectives`] — analytic collective cost models (ring/tree
 //!   all-reduce, reduce-scatter, all-gather, all-to-all) and a *real*
 //!   shared-memory ring all-reduce used by the data-parallel trainer.
@@ -47,6 +51,7 @@ pub mod graph;
 pub mod hw;
 pub mod model;
 pub mod opmodel;
+pub mod parallelism;
 pub mod profiler;
 pub mod report;
 pub mod runtime;

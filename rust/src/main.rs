@@ -4,6 +4,8 @@
 //! ```text
 //! commscale table2|table3|fig6|fig7|fig9b|fig10|fig11|fig12|fig13|fig14
 //! commscale fig15 [--measure] [--profile PATH]
+//! commscale sweep [--tp 1,8] [--pp 1,4] [--seq-par 0,1] ... [--csv PATH]
+//! commscale strategies [--world 64]                  # TP vs PP vs DP vs SP
 //! commscale speedup
 //! commscale profile [--reps N] [--out PATH]          # ROI ground truth
 //! commscale train [--model small] [--dp 4] [--steps 100] [--csv PATH]
@@ -18,17 +20,19 @@ use anyhow::{bail, Context, Result};
 
 use commscale::analysis::{
     accuracy, algorithmic, case_study, evolution, memory_trends, overlapped,
-    serialized,
+    serialized, strategies,
 };
 use commscale::config::SweepGrid;
 use commscale::coordinator::Trainer;
-use commscale::hw::{catalog, DeviceSpec};
+use commscale::hw::{catalog, DeviceSpec, Evolution};
 use commscale::model::{zoo, Precision};
 use commscale::opmodel::SpeedupAccounting;
+use commscale::parallelism::TopologyKind;
 use commscale::profiler::{self, ProfileDb};
 use commscale::report::{ascii_bar_chart, ascii_line_chart, fmt_secs, Series, Table};
 use commscale::runtime::Runtime;
 use commscale::sim::AnalyticCost;
+use commscale::sweep::{self, GridBuilder};
 use commscale::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -52,6 +56,8 @@ fn main() -> Result<()> {
         "fig13" => fig13(&args, &device),
         "fig14" => fig14(&args, &device),
         "fig15" => fig15(&args),
+        "sweep" => sweep_cmd(&args, &device),
+        "strategies" => strategies_cmd(&args, &device),
         "speedup" => speedup(&args, &device),
         "profile" => profile(&args),
         "train" => train(&args),
@@ -100,6 +106,17 @@ paper artifacts:
   fig15 [--measure] operator-model accuracy vs PJRT-measured ground truth
   speedup           profiling-cost reduction accounting (the 2100x claim)
   all               every projection figure/table in sequence
+
+scenario studies (beyond the paper):
+  sweep             stream an arbitrary scenario grid as CSV (stdout or --csv)
+    --hidden LIST --seq-len LIST --batch LIST --layers LIST
+    --tp LIST --pp LIST --microbatches LIST --seq-par 0,1 --dp LIST
+    --evolutions RATIOS    flop-vs-bw ratios, e.g. 1,2,4 (default 1)
+    --node-size N          tiered topology with N devices/node (0 = flat wire)
+    --world N              keep only strategies with tp*pp*dp == N
+    --threads N            worker threads (default: all cores)
+  strategies        TP vs PP vs DP vs seq-par comparison at a fixed device
+    [--world 64]    budget over a tiered fabric (>= 1k-point sweep)
 
 measurement / training:
   profile [--reps N] [--out profiles/profile.json] [--ar-ranks 4]
@@ -492,6 +509,178 @@ fn fig15(args: &Args) -> Result<()> {
             rep.max_error_pct()
         );
     }
+    Ok(())
+}
+
+/// `commscale sweep` — build a [`GridBuilder`] grid from flags and stream
+/// every point's metrics as CSV (stdout by default; status lines go to
+/// stderr so the CSV stays clean for pipes).
+fn sweep_cmd(args: &Args, device: &DeviceSpec) -> Result<()> {
+    use std::io::Write;
+
+    let evolutions: Vec<Evolution> = args
+        .get_f64_list("evolutions", &[1.0])
+        .into_iter()
+        .map(|r| Evolution { flop_scale: r, bw_scale: 1.0 })
+        .collect();
+    let mut b = GridBuilder::new(device)
+        .evolutions(&evolutions)
+        .hidden(&args.get_u64_list("hidden", &[4096, 16384, 65536]))
+        .seq_len(&args.get_u64_list("seq-len", &[2048]))
+        .batch(&args.get_u64_list("batch", &[1]))
+        .layers(&args.get_u64_list("layers", &[1]))
+        .tp(&args.get_u64_list("tp", &[1, 8, 64]))
+        .pp(&args.get_u64_list("pp", &[1]))
+        .microbatches(&args.get_u64_list("microbatches", &[8]))
+        .seq_par(&args.get_bool_list("seq-par", &[false]))
+        .dp(&args.get_u64_list("dp", &[1]));
+    let node_size = args.get_usize("node-size", 0) as u64;
+    let topology = if node_size > 0 {
+        TopologyKind::tiered_8x(node_size)
+    } else {
+        TopologyKind::SingleTier
+    };
+    b = b.topologies(&[topology]);
+    if let Some(w) = args.get("world") {
+        let w: u64 = w.parse().context("--world must be an integer")?;
+        b = b.world_size(w);
+    }
+
+    let grid = b.build();
+    let threads = args.get_usize("threads", 0);
+    eprintln!(
+        "sweep: {} points total (across {} hardware points), {} threads",
+        grid.len(),
+        grid.hardware.len(),
+        if threads == 0 { sweep::default_threads() } else { threads }
+    );
+    let metrics = sweep::run_with(&grid, threads);
+
+    let stdout = std::io::stdout();
+    let mut out: Box<dyn Write> = match csv(args) {
+        Some(path) => Box::new(std::io::BufWriter::new(
+            std::fs::File::create(path)
+                .with_context(|| format!("cannot create {path:?}"))?,
+        )),
+        None => Box::new(std::io::BufWriter::new(stdout.lock())),
+    };
+    writeln!(
+        out,
+        "device,flop_vs_bw,topology,hidden,seq_len,batch,layers,tp,pp,\
+         microbatches,seq_par,dp,makespan_s,compute_s,serialized_s,\
+         overlapped_s,p2p_s,exposed_s,hidden_comm_s,bubble_s,comm_fraction,\
+         bubble_fraction"
+    )?;
+    for (m, sc) in metrics.iter().zip(&grid.points) {
+        let hw = &grid.hardware[sc.hw as usize];
+        let c = &sc.cfg;
+        writeln!(
+            out,
+            "{},{},{},{},{},{},{},{},{},{},{},{},{:.9e},{:.9e},{:.9e},{:.9e},\
+             {:.9e},{:.9e},{:.9e},{:.9e},{:.6},{:.6}",
+            device.name,
+            hw.evolution.ratio(),
+            hw.topology.label(),
+            c.hidden,
+            c.seq_len,
+            c.batch,
+            c.layers,
+            c.tp(),
+            c.pp(),
+            c.microbatches(),
+            c.seq_par() as u8,
+            c.dp(),
+            m.makespan,
+            m.compute_time,
+            m.serialized_comm,
+            m.overlapped_comm,
+            m.p2p_comm,
+            m.exposed_comm,
+            m.hidden_comm,
+            m.bubble_time,
+            m.comm_fraction(),
+            m.bubble_fraction(),
+        )?;
+    }
+    out.flush()?;
+    if let Some(path) = csv(args) {
+        eprintln!("wrote {} rows to {path}", grid.len());
+    }
+    Ok(())
+}
+
+/// `commscale strategies` — the strategy-comparison report: every
+/// power-of-two TP×PP×DP (± seq-par) factorization of a device budget,
+/// compared across model scales and hardware evolutions on a tiered
+/// fabric.
+fn strategies_cmd(args: &Args, device: &DeviceSpec) -> Result<()> {
+    let world = args.get_usize("world", 64) as u64;
+    if !world.is_power_of_two() {
+        bail!("--world must be a power of two, got {world}");
+    }
+    let (points, summaries) = strategies::compare(device, world);
+    println!(
+        "strategy comparison: {} devices ({} points; node size {}, \
+         inter-node at 1/8 bw)",
+        world,
+        points.len(),
+        strategies::NODE_SIZE
+    );
+
+    let mut t = Table::new(
+        &format!("strategy bands over the full grid ({})", device.name),
+        &[
+            "strategy",
+            "points",
+            "comm % min",
+            "comm % mean",
+            "comm % max",
+            "bubble % mean",
+            "t/sample mean",
+        ],
+    );
+    for s in &summaries {
+        t.row(vec![
+            s.archetype.to_string(),
+            s.points.to_string(),
+            format!("{:.1}", 100.0 * s.comm_frac_min),
+            format!("{:.1}", 100.0 * s.comm_frac_mean),
+            format!("{:.1}", 100.0 * s.comm_frac_max),
+            format!("{:.1}", 100.0 * s.bubble_frac_mean),
+            fmt_secs(s.time_per_sample_mean),
+        ]);
+    }
+    print!("{}", t.render());
+
+    // drill-down: one representative cell (H=16K, SL=2K, 4x flop-vs-bw)
+    // raw makespans are not comparable across factorizations (each
+    // processes batch·mb·dp samples per iteration) — report time/sample.
+    let mut d = Table::new(
+        "representative cell: H=16K, SL=2K, flop-vs-bw 4x",
+        &["strategy", "class", "comm %", "bubble %", "samples/iter", "t/sample"],
+    );
+    let mut cell: Vec<_> = points
+        .iter()
+        .filter(|p| p.hidden == 16384 && p.seq_len == 2048 && p.evolution_ratio == 4.0)
+        .collect();
+    cell.sort_by(|a, b| {
+        a.metrics
+            .comm_fraction()
+            .partial_cmp(&b.metrics.comm_fraction())
+            .unwrap()
+    });
+    for p in &cell {
+        d.row(vec![
+            p.spec.label(),
+            p.archetype.to_string(),
+            format!("{:.1}", 100.0 * p.metrics.comm_fraction()),
+            format!("{:.1}", 100.0 * p.metrics.bubble_fraction()),
+            p.samples_per_iteration().to_string(),
+            fmt_secs(p.time_per_sample()),
+        ]);
+    }
+    print!("{}", d.render());
+    d.maybe_write_csv(csv(args))?;
     Ok(())
 }
 

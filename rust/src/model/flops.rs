@@ -59,7 +59,7 @@ pub struct LayerCounts {
 impl LayerCounts {
     /// Compute the paper's per-layer counts for a config.
     pub fn of(c: &ModelConfig) -> LayerCounts {
-        let (h, sl, b, tp) = (c.hidden, c.seq_len, c.batch, c.tp);
+        let (h, sl, b, tp) = (c.hidden, c.seq_len, c.batch, c.tp());
         let f = c.ffn();
         let p = c.precision.bytes();
 
@@ -122,7 +122,7 @@ impl LayerCounts {
 
 /// Eq. 6 — compute's Amdahl's-Law edge, O((H + SL)/TP). Dimensionless.
 pub fn amdahl_edge(c: &ModelConfig) -> f64 {
-    (c.hidden + c.seq_len) as f64 / c.tp as f64
+    (c.hidden + c.seq_len) as f64 / c.tp() as f64
 }
 
 /// Eq. 9 — compute's slack advantage over overlapped DP comm, O(SL·B).
@@ -135,6 +135,7 @@ mod tests {
     use super::*;
 
     fn cfg() -> ModelConfig {
+        use crate::parallelism::ParallelismSpec;
         ModelConfig {
             hidden: 1024,
             seq_len: 512,
@@ -142,8 +143,7 @@ mod tests {
             layers: 24,
             heads: 16,
             ffn_mult: 4,
-            tp: 1,
-            dp: 1,
+            par: ParallelismSpec::none(),
             precision: Precision::F16,
         }
     }

@@ -9,12 +9,17 @@ pub mod zoo;
 pub use flops::{LayerCounts, Precision};
 pub use zoo::{zoo, ZooEntry};
 
+use crate::parallelism::ParallelismSpec;
+
 /// Hyperparameters of a (possibly sliced) Transformer training setup.
 ///
 /// Follows the paper's Table 1 naming: `hidden` = H, `seq_len` = SL,
-/// `batch` = B, `tp` = tensor-parallel degree. `ffn_mult` is the FC
-/// expansion (4 for every model in Table 2 up to rounding — the paper's
-/// Eq. 1 hard-codes the factor 4).
+/// `batch` = B. `ffn_mult` is the FC expansion (4 for every model in
+/// Table 2 up to rounding — the paper's Eq. 1 hard-codes the factor 4).
+/// The distribution strategy is a first-class [`ParallelismSpec`] (`par`):
+/// TP, PP (+ microbatches), DP, and sequence parallelism. Under PP,
+/// `batch` is the per-microbatch batch; the global batch is
+/// `batch · microbatches · dp`.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ModelConfig {
     pub hidden: u64,
@@ -23,8 +28,7 @@ pub struct ModelConfig {
     pub layers: u64,
     pub heads: u64,
     pub ffn_mult: u64,
-    pub tp: u64,
-    pub dp: u64,
+    pub par: ParallelismSpec,
     pub precision: Precision,
 }
 
@@ -38,8 +42,7 @@ impl Default for ModelConfig {
             layers: 24,
             heads: 16,
             ffn_mult: 4,
-            tp: 1,
-            dp: 1,
+            par: ParallelismSpec::none(),
             precision: Precision::F16,
         }
     }
@@ -63,11 +66,24 @@ impl ModelConfig {
         self
     }
     pub fn with_tp(mut self, tp: u64) -> Self {
-        self.tp = tp;
+        self.par.tp = tp;
         self
     }
     pub fn with_dp(mut self, dp: u64) -> Self {
-        self.dp = dp;
+        self.par.dp = dp;
+        self
+    }
+    pub fn with_pp(mut self, pp: u64, microbatches: u64) -> Self {
+        self.par.pp = pp;
+        self.par.microbatches = microbatches;
+        self
+    }
+    pub fn with_seq_par(mut self, on: bool) -> Self {
+        self.par.seq_par = on;
+        self
+    }
+    pub fn with_parallelism(mut self, par: ParallelismSpec) -> Self {
+        self.par = par;
         self
     }
     pub fn with_precision(mut self, p: Precision) -> Self {
@@ -75,11 +91,41 @@ impl ModelConfig {
         self
     }
 
+    /// Tensor-parallel degree.
+    pub fn tp(&self) -> u64 {
+        self.par.tp
+    }
+    /// Data-parallel degree.
+    pub fn dp(&self) -> u64 {
+        self.par.dp
+    }
+    /// Pipeline-parallel degree.
+    pub fn pp(&self) -> u64 {
+        self.par.pp
+    }
+    /// Microbatches in flight when `pp() > 1` (1 otherwise).
+    pub fn microbatches(&self) -> u64 {
+        if self.par.pp > 1 {
+            self.par.microbatches
+        } else {
+            1
+        }
+    }
+    /// Megatron-style sequence parallelism enabled.
+    pub fn seq_par(&self) -> bool {
+        self.par.seq_par
+    }
+    /// Layers held by one pipeline stage.
+    pub fn stage_layers(&self) -> u64 {
+        self.layers / self.par.pp.max(1)
+    }
+
     pub fn ffn(&self) -> u64 {
         self.ffn_mult * self.hidden
     }
 
-    /// Validity: TP must divide the head count and the FC dimension.
+    /// Validity of the model/strategy pairing. Every rule carries an
+    /// actionable message: what misfits, and which knob to turn.
     pub fn validate(&self) -> crate::Result<()> {
         if self.hidden == 0 || self.seq_len == 0 || self.batch == 0 || self.layers == 0 {
             return Err(crate::Error::Config("zero-sized dimension".into()));
@@ -90,10 +136,37 @@ impl ModelConfig {
                 self.heads, self.hidden
             )));
         }
-        if self.tp == 0 || self.heads % self.tp != 0 {
+        self.par.validate()?;
+        let p = &self.par;
+        if self.heads % p.tp != 0 {
             return Err(crate::Error::Config(format!(
-                "tp {} must divide heads {}",
-                self.tp, self.heads
+                "tp {} must divide heads {}: Megatron slices attention by \
+                 head (raise heads to a multiple of tp, or lower tp)",
+                p.tp, self.heads
+            )));
+        }
+        if self.hidden % p.tp != 0 || self.ffn() % p.tp != 0 {
+            return Err(crate::Error::Config(format!(
+                "tp {} must divide hidden {} and the FC dim {}: column/row \
+                 GEMM slicing needs exact shards",
+                p.tp,
+                self.hidden,
+                self.ffn()
+            )));
+        }
+        if self.layers % p.pp != 0 {
+            return Err(crate::Error::Config(format!(
+                "pp {} must divide layers {}: every pipeline stage needs an \
+                 equal layer count (adjust layers or pp)",
+                p.pp, self.layers
+            )));
+        }
+        if p.seq_par && (self.seq_len * self.batch) % p.tp != 0 {
+            return Err(crate::Error::Config(format!(
+                "seq_par shards SL*B = {} tokens across tp = {}: the token \
+                 count must divide exactly (adjust seq_len/batch or tp)",
+                self.seq_len * self.batch,
+                p.tp
             )));
         }
         Ok(())
@@ -141,6 +214,44 @@ mod tests {
     fn validate_rejects_bad_tp() {
         assert!(ModelConfig::default().with_tp(3).validate().is_err());
         assert!(ModelConfig::default().with_tp(8).validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_pp_layer_misfit() {
+        // 24 layers: pp=3 divides, pp=5 does not
+        assert!(ModelConfig::default().with_pp(3, 8).validate().is_ok());
+        let err = ModelConfig::default().with_pp(5, 8).validate().unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("pp 5") && msg.contains("layers 24"), "{msg}");
+    }
+
+    #[test]
+    fn validate_rejects_seq_par_token_misfit() {
+        // SL*B = 512*4 = 2048: tp=8 shards evenly...
+        assert!(ModelConfig::default()
+            .with_tp(8)
+            .with_seq_par(true)
+            .validate()
+            .is_ok());
+        // ...but a 3-token-odd split cannot exist; force one via heads=24,
+        // tp=3 does not divide SL*B=2048
+        let c = ModelConfig {
+            heads: 24,
+            hidden: 1152,
+            ..ModelConfig::default()
+        }
+        .with_tp(3)
+        .with_seq_par(true);
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn stage_layers_and_microbatches() {
+        let c = ModelConfig::default().with_pp(4, 6);
+        assert_eq!(c.stage_layers(), 6);
+        assert_eq!(c.microbatches(), 6);
+        // microbatches are a pipeline concept: pp=1 reports 1
+        assert_eq!(ModelConfig::default().microbatches(), 1);
     }
 
     #[test]

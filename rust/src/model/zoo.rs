@@ -31,8 +31,7 @@ impl ZooEntry {
             heads: self.heads,
             // Table 2's FC dim is ~4H for every model (up to rounding).
             ffn_mult: (self.fc_dim + self.hidden - 1) / self.hidden,
-            tp,
-            dp: 1,
+            par: crate::parallelism::ParallelismSpec::tp_dp(tp, 1),
             precision: Precision::F16,
         }
     }
@@ -171,7 +170,7 @@ mod tests {
     fn config_conversion_roundtrips_dimensions() {
         let c = find("T-NLG").unwrap().config(1, 8);
         assert_eq!(c.hidden, 4256);
-        assert_eq!(c.tp, 8);
+        assert_eq!(c.tp(), 8);
         assert_eq!(c.ffn(), c.ffn_mult * 4256);
     }
 

@@ -14,7 +14,7 @@ pub mod speedup;
 
 pub use speedup::SpeedupAccounting;
 
-use crate::graph::{CommClass, OpKind};
+use crate::graph::OpKind;
 use crate::sim::CostProvider;
 use crate::util::stats;
 
@@ -187,12 +187,22 @@ impl CostProvider for MeasuredCost {
             OpKind::Gemm { .. } => self.gemm.predict(kind),
             OpKind::LayerNorm { .. } => self.layernorm.predict(kind),
             OpKind::Elementwise { bytes } => *bytes as f64 * self.eltwise_per_byte,
-            OpKind::AllReduce { .. } => panic!("comm op routed to compute_time"),
+            _ => panic!("comm op routed to compute_time"),
         }
     }
 
-    fn comm_time(&self, bytes: u64, _class: CommClass) -> f64 {
-        self.allreduce.predict_bytes(bytes)
+    fn comm_time(&self, kind: &OpKind) -> f64 {
+        match *kind {
+            OpKind::AllReduce { bytes, .. } => self.allreduce.predict_bytes(bytes),
+            // an AR is RS + AG: the fitted α–β curve splits evenly between
+            // the two phases (same bytes on the wire each)
+            OpKind::ReduceScatter { bytes, .. } | OpKind::AllGather { bytes, .. } => {
+                0.5 * self.allreduce.predict_bytes(bytes)
+            }
+            // a P2P send streams the payload once over the same fabric
+            OpKind::SendRecv { bytes } => self.allreduce.predict_bytes(bytes) / 2.0,
+            _ => panic!("compute op routed to comm_time"),
+        }
     }
 }
 
@@ -249,6 +259,7 @@ impl AccuracyReport {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::CommClass;
 
     #[test]
     fn gemm_fit_recovers_synthetic_law() {
@@ -338,6 +349,13 @@ mod tests {
         };
         assert!(mc.compute_time(&OpKind::Gemm { m: 64, n: 64, k: 64, count: 1 }) > 0.0);
         assert!(mc.compute_time(&OpKind::LayerNorm { rows: 8, h: 8 }) > 0.0);
-        assert!(mc.comm_time(1 << 20, CommClass::Serialized) > 1e-5);
+        let ar = OpKind::AllReduce { bytes: 1 << 20, class: CommClass::Serialized };
+        assert!(mc.comm_time(&ar) > 1e-5);
+        // RS + AG splits the fitted AR curve evenly
+        let rs = OpKind::ReduceScatter { bytes: 1 << 20, class: CommClass::Serialized };
+        let ag = OpKind::AllGather { bytes: 1 << 20, class: CommClass::Serialized };
+        let sum = mc.comm_time(&rs) + mc.comm_time(&ag);
+        assert!((sum - mc.comm_time(&ar)).abs() < 1e-15);
+        assert!(mc.comm_time(&OpKind::SendRecv { bytes: 1 << 20 }) > 0.0);
     }
 }

@@ -1,0 +1,200 @@
+//! First-class parallelism: the 3D TP×PP×DP (+ sequence-parallel)
+//! strategy space and the tiered network topology collectives run over.
+//!
+//! The paper studies flat tensor-parallelism over a single link-bandwidth
+//! number; follow-ups (arXiv:2408.10197, arXiv:2411.13055) show the
+//! Comp-vs.-Comm balance flips with the *strategy* — which collectives a
+//! sharding emits — and with the bandwidth *tier* each collective lands on
+//! (intra-node fabric vs inter-node NIC). [`ParallelismSpec`] makes the
+//! strategy a first-class axis; [`NetworkTopology`] maps each
+//! communication group onto a tier.
+
+pub mod topology;
+
+pub use topology::{CommGroup, NetworkTopology, Tier, TierSpec, TopologyKind};
+
+/// A 3D parallelization strategy for one training configuration.
+///
+/// * `tp` — tensor-parallel degree (Megatron head/FC slicing, §2.3.3).
+/// * `pp` — pipeline-parallel degree: the layer stack is split into `pp`
+///   equal stages connected by activation/gradient sends.
+/// * `microbatches` — microbatches in flight per iteration when `pp > 1`
+///   (1F1B/GPipe-style schedule). The pipeline fill/drain bubble occupies
+///   the closed-form fraction `(pp − 1) / (microbatches + pp − 1)` of the
+///   iteration ([`ParallelismSpec::bubble_fraction`]).
+/// * `dp` — data-parallel degree (gradient all-reduce, §2.3.2).
+/// * `seq_par` — Megatron-style sequence parallelism: the TP activation
+///   all-reduces become reduce-scatter + all-gather pairs and the
+///   LayerNorm/element-wise regions run on `1/tp` of the tokens.
+///
+/// All-1 ([`ParallelismSpec::none`]) is a single device. The spec is
+/// `Copy`/`Eq`/`Hash`, so the sweep engine uses it directly in cache keys.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ParallelismSpec {
+    pub tp: u64,
+    pub pp: u64,
+    pub microbatches: u64,
+    pub dp: u64,
+    pub seq_par: bool,
+}
+
+impl Default for ParallelismSpec {
+    fn default() -> Self {
+        ParallelismSpec::none()
+    }
+}
+
+impl ParallelismSpec {
+    /// Single device: no parallelism anywhere.
+    pub fn none() -> ParallelismSpec {
+        ParallelismSpec { tp: 1, pp: 1, microbatches: 1, dp: 1, seq_par: false }
+    }
+
+    /// The pre-refactor (TP, DP) strategy — the paper's baseline.
+    pub fn tp_dp(tp: u64, dp: u64) -> ParallelismSpec {
+        ParallelismSpec { tp, pp: 1, microbatches: 1, dp, seq_par: false }
+    }
+
+    pub fn with_tp(mut self, tp: u64) -> Self {
+        self.tp = tp;
+        self
+    }
+    pub fn with_dp(mut self, dp: u64) -> Self {
+        self.dp = dp;
+        self
+    }
+    /// Pipeline over `pp` stages with `microbatches` in flight.
+    pub fn with_pp(mut self, pp: u64, microbatches: u64) -> Self {
+        self.pp = pp;
+        self.microbatches = microbatches;
+        self
+    }
+    pub fn with_seq_par(mut self, on: bool) -> Self {
+        self.seq_par = on;
+        self
+    }
+
+    /// Total devices the strategy occupies.
+    pub fn world_size(&self) -> u64 {
+        self.tp * self.pp * self.dp
+    }
+
+    /// Closed-form pipeline-bubble fraction of the iteration for a
+    /// uniform-stage 1F1B/GPipe schedule: `(pp−1)/(microbatches+pp−1)`.
+    /// Zero when `pp == 1`.
+    pub fn bubble_fraction(&self) -> f64 {
+        if self.pp <= 1 {
+            return 0.0;
+        }
+        (self.pp - 1) as f64 / (self.microbatches + self.pp - 1) as f64
+    }
+
+    /// Compact label for reports, e.g. `tp8·pp4·dp2·sp`.
+    pub fn label(&self) -> String {
+        let mut parts: Vec<String> = Vec::new();
+        if self.tp > 1 {
+            parts.push(format!("tp{}", self.tp));
+        }
+        if self.pp > 1 {
+            parts.push(format!("pp{}", self.pp));
+        }
+        if self.dp > 1 {
+            parts.push(format!("dp{}", self.dp));
+        }
+        if self.seq_par {
+            parts.push("sp".to_string());
+        }
+        if parts.is_empty() {
+            "serial".to_string()
+        } else {
+            parts.join("\u{b7}")
+        }
+    }
+
+    /// Internal consistency of the spec alone (model-coupled divisibility
+    /// lives in `ModelConfig::validate`).
+    pub fn validate(&self) -> crate::Result<()> {
+        if self.tp == 0 || self.pp == 0 || self.dp == 0 || self.microbatches == 0 {
+            return Err(crate::Error::Config(format!(
+                "parallelism degrees must be >= 1, got tp={} pp={} dp={} \
+                 microbatches={}",
+                self.tp, self.pp, self.dp, self.microbatches
+            )));
+        }
+        if self.pp == 1 && self.microbatches > 1 {
+            return Err(crate::Error::Config(format!(
+                "microbatches={} requires pp > 1: microbatching only \
+                 affects the pipeline schedule (set pp or drop microbatches)",
+                self.microbatches
+            )));
+        }
+        if self.seq_par && self.tp == 1 {
+            return Err(crate::Error::Config(
+                "seq_par requires tp > 1: sequence parallelism replaces the \
+                 TP all-reduces with reduce-scatter/all-gather pairs"
+                    .into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_single_device() {
+        let s = ParallelismSpec::none();
+        assert_eq!(s.world_size(), 1);
+        assert_eq!(s.bubble_fraction(), 0.0);
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn world_size_multiplies_degrees() {
+        let s = ParallelismSpec::tp_dp(8, 4).with_pp(2, 8);
+        assert_eq!(s.world_size(), 64);
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn bubble_fraction_closed_form() {
+        let s = ParallelismSpec::none().with_pp(4, 8);
+        assert!((s.bubble_fraction() - 3.0 / 11.0).abs() < 1e-15);
+        // more microbatches amortize the bubble away
+        let deep = ParallelismSpec::none().with_pp(4, 128);
+        assert!(deep.bubble_fraction() < s.bubble_fraction());
+        // degenerate single-microbatch pipeline: (pp-1)/pp of time is bubble
+        let one = ParallelismSpec::none().with_pp(4, 1);
+        assert!((one.bubble_fraction() - 0.75).abs() < 1e-15);
+    }
+
+    #[test]
+    fn validate_rejects_inconsistent_specs() {
+        assert!(ParallelismSpec { tp: 0, ..ParallelismSpec::none() }
+            .validate()
+            .is_err());
+        // microbatches without a pipeline
+        assert!(ParallelismSpec { microbatches: 4, ..ParallelismSpec::none() }
+            .validate()
+            .is_err());
+        // sequence parallelism without TP
+        assert!(ParallelismSpec { seq_par: true, ..ParallelismSpec::none() }
+            .validate()
+            .is_err());
+        ParallelismSpec::tp_dp(8, 1).with_seq_par(true).validate().unwrap();
+    }
+
+    #[test]
+    fn labels_are_compact_and_distinct() {
+        assert_eq!(ParallelismSpec::none().label(), "serial");
+        assert_eq!(ParallelismSpec::tp_dp(8, 1).label(), "tp8");
+        let a = ParallelismSpec::tp_dp(8, 2).with_pp(4, 8).label();
+        assert!(a.contains("tp8") && a.contains("pp4") && a.contains("dp2"));
+        assert_ne!(
+            ParallelismSpec::tp_dp(8, 1).with_seq_par(true).label(),
+            ParallelismSpec::tp_dp(8, 1).label()
+        );
+    }
+}

@@ -9,20 +9,23 @@ use crate::collectives::{CollectiveCost, CollectiveKind};
 use crate::graph::{CommClass, OpKind};
 use crate::hw::{DeviceSpec, EfficiencyCurves};
 use crate::model::Precision;
+use crate::parallelism::{CommGroup, NetworkTopology, ParallelismSpec};
 
 /// Provides execution times for graph operators.
 pub trait CostProvider {
     /// Seconds to execute a compute op (panics on comm ops).
     fn compute_time(&self, kind: &OpKind) -> f64;
-    /// Seconds to execute an all-reduce of `bytes` in the given class.
-    fn comm_time(&self, bytes: u64, class: CommClass) -> f64;
+    /// Seconds to execute a communication op (panics on compute ops).
+    fn comm_time(&self, kind: &OpKind) -> f64;
 }
 
 /// Modeling of DP-comm/compute co-execution effects (§4.3.7).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct OverlapModel {
     /// Multiplier on overlappable-comm time: slower inter-node links for
-    /// DP traffic (the paper quotes ~8× [53] vs intra-node).
+    /// DP traffic (the paper quotes ~8× [53] vs intra-node). With a tiered
+    /// [`NetworkTopology`] the tier already prices the slower wire — keep
+    /// this at 1.0 there, or the penalty is applied twice.
     pub internode_factor: f64,
     /// Additional slowdown from compute/comm interference on shared
     /// accelerator resources when overlapped.
@@ -48,26 +51,45 @@ impl OverlapModel {
 }
 
 /// Roofline cost model with size-dependent efficiency curves.
+///
+/// Communication groups are mapped onto topology tiers: TP collectives,
+/// DP all-reduces and PP sends each run over the tier
+/// [`NetworkTopology::tier_for`] assigns their group under the spec's rank
+/// placement. The default topology is the paper's single tier, which
+/// reproduces the flat-wire costs bit-for-bit.
 #[derive(Debug, Clone)]
 pub struct AnalyticCost {
     pub device: DeviceSpec,
     pub eff: EfficiencyCurves,
     pub precision: Precision,
-    /// Devices participating in serialized (TP) all-reduces.
-    pub tp_group: u64,
-    /// Devices participating in overlappable (DP) all-reduces.
-    pub dp_group: u64,
+    /// The full 3D strategy (group sizes for every collective).
+    pub spec: ParallelismSpec,
+    /// Tier mapping for the strategy's communication groups.
+    pub topo: NetworkTopology,
     pub overlap: OverlapModel,
 }
 
 impl AnalyticCost {
+    /// The pre-topology constructor: a flat (TP, DP) strategy on the
+    /// device's single-tier wire.
     pub fn new(device: DeviceSpec, precision: Precision, tp: u64, dp: u64) -> Self {
+        AnalyticCost::from_spec(device, precision, ParallelismSpec::tp_dp(tp, dp))
+    }
+
+    /// Full-strategy constructor; topology defaults to the device's
+    /// single-tier wire (override with [`AnalyticCost::with_topology`]).
+    pub fn from_spec(
+        device: DeviceSpec,
+        precision: Precision,
+        spec: ParallelismSpec,
+    ) -> Self {
+        let topo = NetworkTopology::single_tier(&device);
         AnalyticCost {
             device,
             eff: EfficiencyCurves::default(),
             precision,
-            tp_group: tp,
-            dp_group: dp,
+            spec,
+            topo,
             overlap: OverlapModel::default(),
         }
     }
@@ -77,13 +99,21 @@ impl AnalyticCost {
         self
     }
 
+    pub fn with_topology(mut self, topo: NetworkTopology) -> Self {
+        self.topo = topo;
+        self
+    }
+
     pub fn with_eff(mut self, eff: EfficiencyCurves) -> Self {
         self.eff = eff;
         self
     }
 
-    fn collective(&self) -> CollectiveCost {
-        CollectiveCost::new(self.device.clone()).with_eff(self.eff.clone())
+    /// Collective model bound to the tier a group's traffic runs on.
+    fn collective(&self, group: CommGroup) -> CollectiveCost {
+        CollectiveCost::new(self.device.clone())
+            .with_eff(self.eff.clone())
+            .with_tier(self.topo.spec_for(group, &self.spec))
     }
 
     /// GEMM time: compute-bound roofline with max() against the memory
@@ -113,22 +143,40 @@ impl CostProvider for AnalyticCost {
                 self.stream_time(2 * self.precision.bytes() * rows * h)
             }
             OpKind::Elementwise { bytes } => self.stream_time(bytes),
-            OpKind::AllReduce { .. } => {
-                panic!("comm op routed to compute_time")
-            }
+            _ => panic!("comm op routed to compute_time"),
         }
     }
 
-    fn comm_time(&self, bytes: u64, class: CommClass) -> f64 {
-        let c = self.collective();
-        match class {
-            CommClass::Serialized => {
-                c.time(CollectiveKind::AllReduce, bytes, self.tp_group)
-            }
-            CommClass::Overlappable => {
-                c.time(CollectiveKind::AllReduce, bytes, self.dp_group)
+    fn comm_time(&self, kind: &OpKind) -> f64 {
+        match *kind {
+            OpKind::AllReduce { bytes, class: CommClass::Serialized } => self
+                .collective(CommGroup::TensorParallel)
+                .time(CollectiveKind::AllReduce, bytes, self.spec.tp),
+            OpKind::ReduceScatter { bytes, class: CommClass::Serialized } => self
+                .collective(CommGroup::TensorParallel)
+                .time(CollectiveKind::ReduceScatter, bytes, self.spec.tp),
+            OpKind::AllGather { bytes, class: CommClass::Serialized } => self
+                .collective(CommGroup::TensorParallel)
+                .time(CollectiveKind::AllGather, bytes, self.spec.tp),
+            OpKind::AllReduce { bytes, class: CommClass::Overlappable } => {
+                self.collective(CommGroup::DataParallel)
+                    .time(CollectiveKind::AllReduce, bytes, self.spec.dp)
                     * self.overlap.total()
             }
+            OpKind::ReduceScatter { bytes, class: CommClass::Overlappable } => {
+                self.collective(CommGroup::DataParallel)
+                    .time(CollectiveKind::ReduceScatter, bytes, self.spec.dp)
+                    * self.overlap.total()
+            }
+            OpKind::AllGather { bytes, class: CommClass::Overlappable } => {
+                self.collective(CommGroup::DataParallel)
+                    .time(CollectiveKind::AllGather, bytes, self.spec.dp)
+                    * self.overlap.total()
+            }
+            OpKind::SendRecv { bytes } => {
+                self.collective(CommGroup::PipelineParallel).p2p_time(bytes)
+            }
+            _ => panic!("compute op routed to comm_time"),
         }
     }
 }
@@ -137,9 +185,18 @@ impl CostProvider for AnalyticCost {
 mod tests {
     use super::*;
     use crate::hw::catalog;
+    use crate::parallelism::TopologyKind;
 
     fn cost() -> AnalyticCost {
         AnalyticCost::new(catalog::mi210(), Precision::F16, 8, 4)
+    }
+
+    fn ser_ar(bytes: u64) -> OpKind {
+        OpKind::AllReduce { bytes, class: CommClass::Serialized }
+    }
+
+    fn dp_ar(bytes: u64) -> OpKind {
+        OpKind::AllReduce { bytes, class: CommClass::Overlappable }
     }
 
     #[test]
@@ -183,20 +240,71 @@ mod tests {
         let slow = cost().with_overlap(OverlapModel::pessimistic());
         let bytes = 64 << 20;
         assert_eq!(
-            base.comm_time(bytes, CommClass::Serialized),
-            slow.comm_time(bytes, CommClass::Serialized)
+            base.comm_time(&ser_ar(bytes)),
+            slow.comm_time(&ser_ar(bytes))
         );
-        let r = slow.comm_time(bytes, CommClass::Overlappable)
-            / base.comm_time(bytes, CommClass::Overlappable);
+        let r = slow.comm_time(&dp_ar(bytes)) / base.comm_time(&dp_ar(bytes));
         assert!((r - 10.0).abs() < 1e-6, "8 × 1.25 = {r}");
+    }
+
+    #[test]
+    fn seq_par_rs_plus_ag_equals_ar() {
+        // An all-reduce is algorithmically reduce-scatter + all-gather, so
+        // the sequence-parallel collective pair costs what the AR did.
+        let c = cost();
+        let bytes = 128 << 20;
+        let ar = c.comm_time(&ser_ar(bytes));
+        let rs = c.comm_time(&OpKind::ReduceScatter {
+            bytes,
+            class: CommClass::Serialized,
+        });
+        let ag = c.comm_time(&OpKind::AllGather {
+            bytes,
+            class: CommClass::Serialized,
+        });
+        assert!((ar - (rs + ag)).abs() / ar < 1e-12);
+    }
+
+    #[test]
+    fn tiered_topology_slows_cross_node_groups_only() {
+        // tp=8 fills the node; dp crosses nodes → only DP pays the NIC.
+        let d = catalog::mi210();
+        let flat = cost();
+        let tiered = cost().with_topology(TopologyKind::tiered_8x(8).realize(&d));
+        let bytes = 64 << 20;
+        assert_eq!(
+            flat.comm_time(&ser_ar(bytes)).to_bits(),
+            tiered.comm_time(&ser_ar(bytes)).to_bits(),
+            "intra-node TP unchanged"
+        );
+        assert!(
+            tiered.comm_time(&dp_ar(bytes)) > 5.0 * flat.comm_time(&dp_ar(bytes)),
+            "inter-node DP pays the slow tier"
+        );
+    }
+
+    #[test]
+    fn p2p_send_priced_on_pipeline_tier() {
+        let d = catalog::mi210();
+        let spec = ParallelismSpec::tp_dp(2, 1).with_pp(4, 8);
+        let flat = AnalyticCost::from_spec(d.clone(), Precision::F16, spec);
+        let tiered = AnalyticCost::from_spec(d.clone(), Precision::F16, spec)
+            .with_topology(TopologyKind::tiered_8x(2).realize(&d));
+        let send = OpKind::SendRecv { bytes: 32 << 20 };
+        assert!(flat.comm_time(&send) > 0.0);
+        // pp spans nodes (extent 8 > node 2) → slower on the tiered fabric
+        assert!(tiered.comm_time(&send) > 5.0 * flat.comm_time(&send));
     }
 
     #[test]
     #[should_panic(expected = "comm op routed")]
     fn comm_op_in_compute_path_panics() {
-        cost().compute_time(&OpKind::AllReduce {
-            bytes: 1,
-            class: CommClass::Serialized,
-        });
+        cost().compute_time(&ser_ar(1));
+    }
+
+    #[test]
+    #[should_panic(expected = "compute op routed")]
+    fn compute_op_in_comm_path_panics() {
+        cost().comm_time(&OpKind::Gemm { m: 1, n: 1, k: 1, count: 1 });
     }
 }

@@ -7,10 +7,16 @@
 //! end[i] = max(stream_free[stream(i)], max(end[deps(i)])) + dur(i)
 //! ```
 //!
-//! Three streams: compute, serialized-comm, overlappable-comm. This is
-//! exactly the semantics of Fig 3: serialized ARs block their successors
-//! because successors *depend* on them; DP ARs proceed in parallel because
+//! Four streams: compute, serialized-comm, overlappable-comm, and
+//! pipeline P2P. This is exactly the semantics of Fig 3: serialized
+//! collectives block their successors because successors *depend* on
+//! them; DP ARs and stage-boundary sends proceed in parallel because
 //! nothing but the optimizer depends on them.
+//!
+//! Pipeline fill/drain is not simulated op-by-op — the graph models one
+//! stage's busy steady state and [`apply_pipeline`] stretches the
+//! makespan by the closed-form 1F1B bubble factor
+//! `(microbatches + pp − 1) / microbatches` afterwards.
 
 use crate::graph::{CommClass, OpGraph, OpKind, Phase};
 
@@ -21,24 +27,23 @@ enum Stream {
     Compute,
     SerializedComm,
     OverlapComm,
+    P2p,
 }
 
 fn stream_of(kind: &OpKind) -> Stream {
-    match kind {
-        OpKind::AllReduce { class: CommClass::Serialized, .. } => {
-            Stream::SerializedComm
-        }
-        OpKind::AllReduce { class: CommClass::Overlappable, .. } => {
-            Stream::OverlapComm
-        }
-        _ => Stream::Compute,
+    match kind.comm_payload() {
+        Some((_, Some(CommClass::Serialized))) => Stream::SerializedComm,
+        Some((_, Some(CommClass::Overlappable))) => Stream::OverlapComm,
+        Some((_, None)) => Stream::P2p,
+        None => Stream::Compute,
     }
 }
 
 /// Simulation outcome with the paper's breakdown quantities.
 #[derive(Debug, Clone, Default)]
 pub struct SimReport {
-    /// End-to-end iteration time (seconds).
+    /// End-to-end iteration time (seconds), including the pipeline bubble
+    /// once [`apply_pipeline`] has run.
     pub makespan: f64,
     /// Busy time of the compute stream.
     pub compute_time: f64,
@@ -46,10 +51,20 @@ pub struct SimReport {
     pub serialized_comm: f64,
     /// Busy time of overlappable (DP) comm.
     pub overlapped_comm: f64,
-    /// Communication on the critical path: makespan − compute busy time.
+    /// Busy time of pipeline stage-boundary sends.
+    pub p2p_comm: f64,
+    /// Communication on the critical path: steady-state makespan − compute
+    /// busy time.
     pub exposed_comm: f64,
     /// Communication hidden under compute.
     pub hidden_comm: f64,
+    /// Pipeline fill/drain idle time ([`apply_pipeline`]; 0 for pp = 1).
+    pub bubble_time: f64,
+    /// Completion time of the per-microbatch steady work (every op except
+    /// the optimizer step and the overlappable gradient all-reduces, which
+    /// run once per iteration). Input to [`apply_pipeline`] — only this
+    /// span repeats per pipeline slot.
+    pub steady_span: f64,
     /// Busy compute time per phase (fwd, bwd, optimizer).
     pub fwd_compute: f64,
     pub bwd_compute: f64,
@@ -69,6 +84,16 @@ impl SimReport {
         }
     }
 
+    /// Fraction of the iteration lost to the pipeline bubble
+    /// (`(pp−1)/(microbatches+pp−1)` for a uniform-stage schedule).
+    pub fn bubble_fraction(&self) -> f64 {
+        if self.makespan == 0.0 {
+            0.0
+        } else {
+            self.bubble_time / self.makespan
+        }
+    }
+
     /// Overlapped (DP) communication as a percentage of compute time —
     /// Fig 11/13's y-axis.
     pub fn overlap_pct_of_compute(&self) -> f64 {
@@ -78,6 +103,28 @@ impl SimReport {
             100.0 * self.overlapped_comm / self.compute_time
         }
     }
+}
+
+/// Stretch a steady-state stage report to the full pipeline iteration:
+/// a uniform-stage 1F1B/GPipe schedule runs `microbatches + pp − 1` slots
+/// for `microbatches` of steady work, so the microbatch-loop span
+/// (`steady_span`) scales by `(mb + pp − 1) / mb` and the difference is
+/// fill/drain idle (`bubble_time`). The optimizer step and any exposed
+/// gradient-all-reduce drain past the last backward op run once per
+/// iteration, outside the pipelined region, and ride along unscaled —
+/// over the pipelined span alone `bubble_time / (steady·scale)` equals
+/// the closed form `(pp−1)/(mb+pp−1)` exactly. Busy times are per-device
+/// and unchanged. No-op when `pp <= 1` (the report is untouched —
+/// bit-identical to the flat path).
+pub fn apply_pipeline(report: &mut SimReport, pp: u64, microbatches: u64) {
+    if pp <= 1 {
+        return;
+    }
+    let mb = microbatches.max(1) as f64;
+    let steady = report.steady_span.min(report.makespan);
+    let tail = report.makespan - steady;
+    report.bubble_time = steady * (pp - 1) as f64 / mb;
+    report.makespan = steady * (mb + (pp - 1) as f64) / mb + tail;
 }
 
 /// Reusable simulation scratch space.
@@ -126,20 +173,21 @@ pub fn simulate_with(
         },
         ..Default::default()
     };
-    let mut free = [0.0f64; 3]; // per-stream next-free time
+    let mut free = [0.0f64; 4]; // per-stream next-free time
 
     for op in &graph.ops {
-        let dur = match op.kind {
-            OpKind::AllReduce { bytes, class } => {
-                let t = cost.comm_time(bytes, class);
+        let dur = match op.kind.comm_payload() {
+            Some((_, class)) => {
+                let t = cost.comm_time(&op.kind);
                 match class {
-                    CommClass::Serialized => report.serialized_comm += t,
-                    CommClass::Overlappable => report.overlapped_comm += t,
+                    Some(CommClass::Serialized) => report.serialized_comm += t,
+                    Some(CommClass::Overlappable) => report.overlapped_comm += t,
+                    None => report.p2p_comm += t,
                 }
                 t
             }
-            ref k => {
-                let t = cost.compute_time(k);
+            None => {
+                let t = cost.compute_time(&op.kind);
                 report.compute_time += t;
                 match op.phase {
                     Phase::Forward => report.fwd_compute += t,
@@ -160,6 +208,16 @@ pub fn simulate_with(
         let finish = start + dur;
         free[s] = finish;
         end[op.id.0] = finish;
+        // per-microbatch steady work: everything except the optimizer and
+        // the once-per-iteration overlappable gradient all-reduces
+        let once_per_iter = matches!(op.phase, Phase::Optimizer)
+            || matches!(
+                op.kind.comm_payload(),
+                Some((_, Some(CommClass::Overlappable)))
+            );
+        if !once_per_iter {
+            report.steady_span = report.steady_span.max(finish);
+        }
         if record_intervals {
             report.intervals.push((start, finish));
         }
@@ -167,7 +225,8 @@ pub fn simulate_with(
 
     report.makespan = end.iter().copied().fold(0.0, f64::max);
     report.exposed_comm = (report.makespan - report.compute_time).max(0.0);
-    let total_comm = report.serialized_comm + report.overlapped_comm;
+    let total_comm =
+        report.serialized_comm + report.overlapped_comm + report.p2p_comm;
     report.hidden_comm = (total_comm - report.exposed_comm).max(0.0);
     report
 }
@@ -178,6 +237,7 @@ mod tests {
     use crate::graph::{build_layer_graph, GraphOptions};
     use crate::hw::catalog;
     use crate::model::{ModelConfig, Precision};
+    use crate::parallelism::ParallelismSpec;
     use crate::sim::AnalyticCost;
 
     /// Fixed-duration cost provider for engine-semantics tests.
@@ -191,10 +251,12 @@ mod tests {
         fn compute_time(&self, _k: &OpKind) -> f64 {
             self.compute
         }
-        fn comm_time(&self, _bytes: u64, class: CommClass) -> f64 {
-            match class {
-                CommClass::Serialized => self.serial,
-                CommClass::Overlappable => self.overlap,
+        fn comm_time(&self, kind: &OpKind) -> f64 {
+            match kind.comm_payload() {
+                Some((_, Some(CommClass::Serialized))) => self.serial,
+                Some((_, Some(CommClass::Overlappable))) => self.overlap,
+                Some((_, None)) => self.overlap,
+                None => panic!("compute op routed to comm_time"),
             }
         }
     }
@@ -259,7 +321,7 @@ mod tests {
                     _ => 0.0,
                 }
             }
-            fn comm_time(&self, _b: u64, _c: CommClass) -> f64 {
+            fn comm_time(&self, _k: &OpKind) -> f64 {
                 1.5
             }
         }
@@ -313,6 +375,96 @@ mod tests {
     }
 
     #[test]
+    fn p2p_stream_is_independent_of_collective_streams() {
+        // a pipeline send and a serialized AR, both rootless: they run
+        // concurrently on distinct streams.
+        let mut g = OpGraph::default();
+        g.add(
+            OpKind::AllReduce { bytes: 1, class: CommClass::Serialized },
+            Phase::Forward,
+            vec![],
+        );
+        g.add(OpKind::SendRecv { bytes: 1 }, Phase::Forward, vec![]);
+        let r = simulate(&g, &FixedCost { compute: 0.0, serial: 2.0, overlap: 3.0 });
+        assert!((r.makespan - 3.0).abs() < 1e-12); // not 5
+        assert!((r.serialized_comm - 2.0).abs() < 1e-12);
+        assert!((r.p2p_comm - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn apply_pipeline_scales_makespan_by_bubble_factor() {
+        let mut r = SimReport {
+            makespan: 8.0,
+            steady_span: 8.0,
+            ..Default::default()
+        };
+        apply_pipeline(&mut r, 4, 8);
+        // (8 + 3)/8 × 8 = 11
+        assert!((r.makespan - 11.0).abs() < 1e-12);
+        assert!((r.bubble_time - 3.0).abs() < 1e-12);
+        assert!((r.bubble_fraction() - 3.0 / 11.0).abs() < 1e-12);
+        // pp = 1 is a strict no-op
+        let mut flat = SimReport { makespan: 8.0, ..Default::default() };
+        apply_pipeline(&mut flat, 1, 1);
+        assert_eq!(flat.makespan.to_bits(), 8.0f64.to_bits());
+        assert_eq!(flat.bubble_time, 0.0);
+    }
+
+    #[test]
+    fn apply_pipeline_keeps_once_per_iteration_tail_outside_the_bubble() {
+        // the optimizer + exposed gradient drain past the steady span run
+        // once per iteration: only the 6s microbatch loop is stretched.
+        let mut r = SimReport {
+            makespan: 8.0,
+            steady_span: 6.0,
+            opt_compute: 1.0, // 1s optimizer + 1s exposed AR drain = 2s tail
+            ..Default::default()
+        };
+        apply_pipeline(&mut r, 4, 8);
+        // loop 6 → 6·11/8 = 8.25, plus the 2s tail
+        assert!((r.makespan - 10.25).abs() < 1e-12);
+        assert!((r.bubble_time - 6.0 * 3.0 / 8.0).abs() < 1e-12);
+        // over the pipelined span the closed form is exact
+        let span = 6.0 * 11.0 / 8.0;
+        assert!((r.bubble_time / span - 3.0 / 11.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn steady_span_excludes_optimizer_and_dp_ars() {
+        // compute(1) → DP-AR(5) ; optimizer(1) waits on the AR: the steady
+        // span ends at the compute op, the AR drain + optimizer are tail.
+        let mut g = OpGraph::default();
+        let a = g.add(
+            OpKind::Gemm { m: 1, n: 1, k: 1, count: 1 },
+            Phase::Backward,
+            vec![],
+        );
+        let ar = g.add(
+            OpKind::AllReduce { bytes: 1, class: CommClass::Overlappable },
+            Phase::Backward,
+            vec![a],
+        );
+        g.add(OpKind::Elementwise { bytes: 0 }, Phase::Optimizer, vec![ar]);
+        struct C;
+        impl CostProvider for C {
+            fn compute_time(&self, _k: &OpKind) -> f64 {
+                1.0
+            }
+            fn comm_time(&self, _k: &OpKind) -> f64 {
+                5.0
+            }
+        }
+        let r = simulate(&g, &C);
+        assert!((r.steady_span - 1.0).abs() < 1e-12);
+        assert!((r.makespan - 7.0).abs() < 1e-12); // 1 + 5 + 1
+        // a pipeline stretch scales only the 1s of steady work
+        let mut piped = r.clone();
+        apply_pipeline(&mut piped, 4, 8);
+        assert!((piped.bubble_time - 1.0 * 3.0 / 8.0).abs() < 1e-12);
+        assert!((piped.makespan - (11.0 / 8.0 + 6.0)).abs() < 1e-12);
+    }
+
+    #[test]
     fn full_transformer_graph_smoke() {
         let cfg = ModelConfig {
             hidden: 4096,
@@ -321,12 +473,12 @@ mod tests {
             layers: 8,
             heads: 32,
             ffn_mult: 4,
-            tp: 16,
-            dp: 4,
+            par: ParallelismSpec::tp_dp(16, 4),
             precision: Precision::F16,
         };
         let g = build_layer_graph(&cfg, GraphOptions::default());
-        let cost = AnalyticCost::new(catalog::mi210(), cfg.precision, cfg.tp, cfg.dp);
+        let cost =
+            AnalyticCost::new(catalog::mi210(), cfg.precision, cfg.tp(), cfg.dp());
         let r = simulate(&g, &cost);
         assert!(r.makespan > 0.0);
         assert!(r.compute_time > 0.0);
@@ -341,6 +493,34 @@ mod tests {
     }
 
     #[test]
+    fn full_3d_graph_smoke() {
+        let cfg = ModelConfig {
+            hidden: 8192,
+            seq_len: 2048,
+            batch: 1,
+            layers: 8,
+            heads: 64,
+            ffn_mult: 4,
+            par: ParallelismSpec::tp_dp(8, 2).with_pp(4, 8).with_seq_par(true),
+            precision: Precision::F16,
+        };
+        cfg.validate().unwrap();
+        let g = build_layer_graph(&cfg, GraphOptions::default());
+        let cost = AnalyticCost::from_spec(catalog::mi210(), cfg.precision, cfg.par);
+        let mut r = simulate(&g, &cost);
+        let steady = r.steady_span;
+        apply_pipeline(&mut r, cfg.pp(), cfg.microbatches());
+        assert!(r.p2p_comm > 0.0, "pipeline sends must cost time");
+        assert!(r.bubble_time > 0.0);
+        // exact over the pipelined span (the once-per-iteration optimizer
+        // + DP gradient drain sit outside)
+        let span = steady * 11.0 / 8.0;
+        assert!((r.bubble_time / span - 3.0 / 11.0).abs() < 1e-12);
+        assert!(r.bubble_fraction() <= 3.0 / 11.0 + 1e-12);
+        assert!(r.makespan > r.compute_time);
+    }
+
+    #[test]
     fn arena_reuse_is_bit_identical_to_fresh_simulate() {
         let cfg = ModelConfig {
             hidden: 4096,
@@ -349,11 +529,11 @@ mod tests {
             layers: 4,
             heads: 32,
             ffn_mult: 4,
-            tp: 8,
-            dp: 4,
+            par: ParallelismSpec::tp_dp(8, 4),
             precision: Precision::F16,
         };
-        let cost = AnalyticCost::new(catalog::mi210(), cfg.precision, cfg.tp, cfg.dp);
+        let cost =
+            AnalyticCost::new(catalog::mi210(), cfg.precision, cfg.tp(), cfg.dp());
         let mut arena = SimArena::new();
         // dirty the arena on a different-sized graph first
         let small = build_layer_graph(&cfg.with_layers(1), GraphOptions::default());
@@ -367,11 +547,13 @@ mod tests {
             (fresh.compute_time, reused.compute_time),
             (fresh.serialized_comm, reused.serialized_comm),
             (fresh.overlapped_comm, reused.overlapped_comm),
+            (fresh.p2p_comm, reused.p2p_comm),
             (fresh.exposed_comm, reused.exposed_comm),
             (fresh.hidden_comm, reused.hidden_comm),
             (fresh.fwd_compute, reused.fwd_compute),
             (fresh.bwd_compute, reused.bwd_compute),
             (fresh.opt_compute, reused.opt_compute),
+            (fresh.steady_span, reused.steady_span),
         ] {
             assert_eq!(a.to_bits(), b.to_bits());
         }
@@ -389,8 +571,7 @@ mod tests {
             layers: 4,
             heads: 128,
             ffn_mult: 4,
-            tp: 8,
-            dp: 1,
+            par: ParallelismSpec::tp_dp(8, 1),
             precision: Precision::F16,
         };
         let frac = |tp: u64| {

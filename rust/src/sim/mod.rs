@@ -1,13 +1,15 @@
 //! Discrete-event simulator for one device's training iteration.
 //!
-//! Three execution streams per device — compute, serialized-comm (TP),
-//! overlappable-comm (DP) — mirroring how RCCL communicators and compute
-//! queues coexist on the paper's testbed. Serialized ARs gate their
-//! successors (Fig 3b); DP ARs run concurrently with backprop compute and
-//! only the optimizer waits on them (Fig 3a).
+//! Four execution streams per device — compute, serialized-comm (TP
+//! collectives), overlappable-comm (DP), and pipeline P2P — mirroring how
+//! RCCL communicators and compute queues coexist on the paper's testbed.
+//! Serialized collectives gate their successors (Fig 3b); DP ARs and
+//! stage-boundary sends run concurrently with backprop compute and only
+//! the optimizer waits on them (Fig 3a). Pipeline fill/drain is applied
+//! post-simulation via [`apply_pipeline`]'s closed-form bubble factor.
 
 pub mod cost;
 pub mod engine;
 
 pub use cost::{AnalyticCost, CostProvider, OverlapModel};
-pub use engine::{simulate, simulate_with, SimArena, SimReport};
+pub use engine::{apply_pipeline, simulate, simulate_with, SimArena, SimReport};

@@ -9,11 +9,11 @@
 //! * a graph-template cache keyed by [`GraphShapeKey`]: scenarios with the
 //!   same topology reuse one `OpGraph`, rewritten in place per point
 //!   ([`rewrite_layer_graph`]) so only op payloads change;
-//! * an [`AnalyticCost`] cache keyed by (hardware, tp, dp, precision), so
-//!   the string-bearing `DeviceSpec` is cloned once per combination;
-//! * memoized operator-cost tables keyed by `(cost id, OpKind)` and
-//!   `(cost id, bytes, class)` — sweep points share most op shapes, so a
-//!   96-layer graph costs ~10 distinct GEMMs instead of ~1500.
+//! * an [`AnalyticCost`] cache keyed by (hardware, strategy, precision),
+//!   so the string-bearing `DeviceSpec` is cloned once per combination;
+//! * a memoized operator-cost table keyed by `(cost id, OpKind)` — sweep
+//!   points share most op shapes, so a 96-layer graph costs ~10 distinct
+//!   GEMMs instead of ~1500.
 //!
 //! Determinism: every point is a pure function of its scenario, workers
 //! share no mutable float state, and memoization returns the exact bits
@@ -26,12 +26,14 @@ use std::collections::HashMap;
 use std::sync::Mutex;
 
 use crate::graph::{
-    build_layer_graph, rewrite_layer_graph, CommClass, GraphOptions,
-    GraphShapeKey, OpGraph, OpKind,
+    build_layer_graph, rewrite_layer_graph, GraphOptions, GraphShapeKey,
+    OpGraph, OpKind,
 };
 use crate::model::{ModelConfig, Precision};
+use crate::parallelism::ParallelismSpec;
 use crate::sim::{
-    simulate, simulate_with, AnalyticCost, CostProvider, SimArena, SimReport,
+    apply_pipeline, simulate, simulate_with, AnalyticCost, CostProvider,
+    SimArena, SimReport,
 };
 
 use super::grid::{Scenario, ScenarioGrid};
@@ -44,8 +46,10 @@ pub struct PointMetrics {
     pub compute_time: f64,
     pub serialized_comm: f64,
     pub overlapped_comm: f64,
+    pub p2p_comm: f64,
     pub exposed_comm: f64,
     pub hidden_comm: f64,
+    pub bubble_time: f64,
     pub fwd_compute: f64,
     pub bwd_compute: f64,
     pub opt_compute: f64,
@@ -58,8 +62,10 @@ impl PointMetrics {
             compute_time: r.compute_time,
             serialized_comm: r.serialized_comm,
             overlapped_comm: r.overlapped_comm,
+            p2p_comm: r.p2p_comm,
             exposed_comm: r.exposed_comm,
             hidden_comm: r.hidden_comm,
+            bubble_time: r.bubble_time,
             fwd_compute: r.fwd_compute,
             bwd_compute: r.bwd_compute,
             opt_compute: r.opt_compute,
@@ -67,14 +73,20 @@ impl PointMetrics {
     }
 
     /// Rebuild a (interval-free) [`SimReport`] — for APIs that carry one.
+    /// The pipeline stretch has already been applied, so the rebuilt
+    /// report's `steady_span` is deliberately zeroed: feeding it back into
+    /// `apply_pipeline` would double-count the bubble.
     pub fn to_report(&self) -> SimReport {
         SimReport {
             makespan: self.makespan,
             compute_time: self.compute_time,
             serialized_comm: self.serialized_comm,
             overlapped_comm: self.overlapped_comm,
+            p2p_comm: self.p2p_comm,
             exposed_comm: self.exposed_comm,
             hidden_comm: self.hidden_comm,
+            bubble_time: self.bubble_time,
+            steady_span: 0.0,
             fwd_compute: self.fwd_compute,
             bwd_compute: self.bwd_compute,
             opt_compute: self.opt_compute,
@@ -91,15 +103,26 @@ impl PointMetrics {
         }
     }
 
+    /// Fraction of the iteration lost to the pipeline fill/drain bubble.
+    pub fn bubble_fraction(&self) -> f64 {
+        if self.makespan == 0.0 {
+            0.0
+        } else {
+            self.bubble_time / self.makespan
+        }
+    }
+
     /// Raw bit patterns of every field, for exact-equality assertions.
-    pub fn to_bits(&self) -> [u64; 9] {
+    pub fn to_bits(&self) -> [u64; 11] {
         [
             self.makespan.to_bits(),
             self.compute_time.to_bits(),
             self.serialized_comm.to_bits(),
             self.overlapped_comm.to_bits(),
+            self.p2p_comm.to_bits(),
             self.exposed_comm.to_bits(),
             self.hidden_comm.to_bits(),
+            self.bubble_time.to_bits(),
             self.fwd_compute.to_bits(),
             self.bwd_compute.to_bits(),
             self.opt_compute.to_bits(),
@@ -107,40 +130,40 @@ impl PointMetrics {
     }
 }
 
-/// Memoizing wrapper around a point's [`AnalyticCost`]. Tables live in the
-/// worker (`RefCell`: workers are single-threaded) and are keyed by a
+/// Memoizing wrapper around a point's [`AnalyticCost`]. The table lives in
+/// the worker (`RefCell`: workers are single-threaded) and is keyed by a
 /// dense per-worker cost id, so entries persist across points that share
-/// hardware/precision/parallelism.
+/// hardware/precision/strategy. Compute and comm ops share one table —
+/// their `OpKind`s are disjoint.
 struct MemoCost<'a> {
     inner: &'a AnalyticCost,
     id: u32,
-    compute: &'a RefCell<HashMap<(u32, OpKind), f64>>,
-    comm: &'a RefCell<HashMap<(u32, u64, CommClass), f64>>,
+    memo: &'a RefCell<HashMap<(u32, OpKind), f64>>,
+}
+
+impl MemoCost<'_> {
+    fn lookup(&self, kind: &OpKind, f: impl FnOnce() -> f64) -> f64 {
+        let key = (self.id, *kind);
+        if let Some(&t) = self.memo.borrow().get(&key) {
+            return t;
+        }
+        let t = f();
+        self.memo.borrow_mut().insert(key, t);
+        t
+    }
 }
 
 impl CostProvider for MemoCost<'_> {
     fn compute_time(&self, kind: &OpKind) -> f64 {
-        let key = (self.id, *kind);
-        if let Some(&t) = self.compute.borrow().get(&key) {
-            return t;
-        }
-        let t = self.inner.compute_time(kind);
-        self.compute.borrow_mut().insert(key, t);
-        t
+        self.lookup(kind, || self.inner.compute_time(kind))
     }
 
-    fn comm_time(&self, bytes: u64, class: CommClass) -> f64 {
-        let key = (self.id, bytes, class);
-        if let Some(&t) = self.comm.borrow().get(&key) {
-            return t;
-        }
-        let t = self.inner.comm_time(bytes, class);
-        self.comm.borrow_mut().insert(key, t);
-        t
+    fn comm_time(&self, kind: &OpKind) -> f64 {
+        self.lookup(kind, || self.inner.comm_time(kind))
     }
 }
 
-type CostKey = (u32, u64, u64, Precision);
+type CostKey = (u32, ParallelismSpec, Precision);
 
 /// Per-worker reusable state (see module docs).
 struct WorkerCtx {
@@ -148,8 +171,7 @@ struct WorkerCtx {
     templates: HashMap<GraphShapeKey, OpGraph>,
     costs: HashMap<CostKey, (u32, AnalyticCost)>,
     next_cost_id: u32,
-    compute_memo: RefCell<HashMap<(u32, OpKind), f64>>,
-    comm_memo: RefCell<HashMap<(u32, u64, CommClass), f64>>,
+    memo: RefCell<HashMap<(u32, OpKind), f64>>,
 }
 
 impl WorkerCtx {
@@ -159,32 +181,24 @@ impl WorkerCtx {
             templates: HashMap::new(),
             costs: HashMap::new(),
             next_cost_id: 0,
-            compute_memo: RefCell::new(HashMap::new()),
-            comm_memo: RefCell::new(HashMap::new()),
+            memo: RefCell::new(HashMap::new()),
         }
     }
 
     fn eval(&mut self, grid: &ScenarioGrid, sc: &Scenario) -> PointMetrics {
-        let WorkerCtx {
-            arena,
-            templates,
-            costs,
-            next_cost_id,
-            compute_memo,
-            comm_memo,
-        } = self;
+        let WorkerCtx { arena, templates, costs, next_cost_id, memo } = self;
 
-        let key: CostKey = (sc.hw, sc.cfg.tp, sc.cfg.dp, sc.cfg.precision);
+        let key: CostKey = (sc.hw, sc.cfg.par, sc.cfg.precision);
         let entry = costs.entry(key).or_insert_with(|| {
             let hw = &grid.hardware[sc.hw as usize];
             let id = *next_cost_id;
             *next_cost_id += 1;
-            let cost = AnalyticCost::new(
+            let cost = AnalyticCost::from_spec(
                 hw.device.clone(),
                 sc.cfg.precision,
-                sc.cfg.tp,
-                sc.cfg.dp,
+                sc.cfg.par,
             )
+            .with_topology(hw.topology)
             .with_overlap(hw.overlap);
             (id, cost)
         });
@@ -196,13 +210,9 @@ impl WorkerCtx {
             .or_insert_with(|| build_layer_graph(&sc.cfg, sc.opts));
         rewrite_layer_graph(&sc.cfg, sc.opts, g);
 
-        let memo = MemoCost {
-            inner: cost,
-            id: cost_id,
-            compute: &*compute_memo,
-            comm: &*comm_memo,
-        };
-        let r = simulate_with(g, &memo, arena, false);
+        let memo = MemoCost { inner: cost, id: cost_id, memo: &*memo };
+        let mut r = simulate_with(g, &memo, arena, false);
+        apply_pipeline(&mut r, sc.cfg.pp(), sc.cfg.microbatches());
         PointMetrics::from_report(&r)
     }
 }
@@ -275,15 +285,17 @@ pub fn run_serial_reference(grid: &ScenarioGrid) -> Vec<PointMetrics> {
         .iter()
         .map(|sc| {
             let hw = &grid.hardware[sc.hw as usize];
-            let cost = AnalyticCost::new(
+            let cost = AnalyticCost::from_spec(
                 hw.device.clone(),
                 sc.cfg.precision,
-                sc.cfg.tp,
-                sc.cfg.dp,
+                sc.cfg.par,
             )
+            .with_topology(hw.topology)
             .with_overlap(hw.overlap);
             let g = build_layer_graph(&sc.cfg, sc.opts);
-            PointMetrics::from_report(&simulate(&g, &cost))
+            let mut r = simulate(&g, &cost);
+            apply_pipeline(&mut r, sc.cfg.pp(), sc.cfg.microbatches());
+            PointMetrics::from_report(&r)
         })
         .collect()
 }
@@ -309,7 +321,8 @@ impl PointEvaluator {
     }
 
     /// Evaluate one point, returning the full report (with intervals) —
-    /// bit-identical to `simulate(&build_layer_graph(cfg, opts), cost)`.
+    /// bit-identical to `simulate(&build_layer_graph(cfg, opts), cost)`
+    /// plus the pipeline-bubble stretch for `cfg.pp() > 1`.
     pub fn eval_report(
         &mut self,
         cfg: &ModelConfig,
@@ -322,7 +335,9 @@ impl PointEvaluator {
             .entry(shape)
             .or_insert_with(|| build_layer_graph(cfg, opts));
         rewrite_layer_graph(cfg, opts, g);
-        simulate_with(g, cost, &mut self.arena, true)
+        let mut r = simulate_with(g, cost, &mut self.arena, true);
+        apply_pipeline(&mut r, cfg.pp(), cfg.microbatches());
+        r
     }
 
     /// Evaluate one point, metrics only (no interval allocation).
@@ -338,7 +353,8 @@ impl PointEvaluator {
             .entry(shape)
             .or_insert_with(|| build_layer_graph(cfg, opts));
         rewrite_layer_graph(cfg, opts, g);
-        let r = simulate_with(g, cost, &mut self.arena, false);
+        let mut r = simulate_with(g, cost, &mut self.arena, false);
+        apply_pipeline(&mut r, cfg.pp(), cfg.microbatches());
         PointMetrics::from_report(&r)
     }
 }
@@ -347,6 +363,7 @@ impl PointEvaluator {
 mod tests {
     use super::*;
     use crate::hw::{catalog, Evolution};
+    use crate::parallelism::TopologyKind;
     use crate::sweep::GridBuilder;
 
     fn small_grid() -> ScenarioGrid {
@@ -357,6 +374,19 @@ mod tests {
             .dp(&[1, 4])
             .layers(&[1, 2])
             .evolutions(&[Evolution::none(), Evolution::flop_vs_bw_4x()])
+            .build()
+    }
+
+    fn strategy_grid() -> ScenarioGrid {
+        GridBuilder::new(&catalog::mi210())
+            .hidden(&[4096, 16384])
+            .layers(&[4])
+            .tp(&[1, 4])
+            .pp(&[1, 4])
+            .microbatches(&[2, 8])
+            .seq_par(&[false, true])
+            .dp(&[1, 2])
+            .topologies(&[TopologyKind::SingleTier, TopologyKind::tiered_8x(4)])
             .build()
     }
 
@@ -373,6 +403,55 @@ mod tests {
                 "point {i} diverged: {a:?} vs {b:?}"
             );
         }
+    }
+
+    #[test]
+    fn parallel_matches_serial_reference_on_3d_strategy_grid() {
+        let grid = strategy_grid();
+        assert!(grid.len() > 20, "grid should exercise every strategy axis");
+        let reference = run_serial_reference(&grid);
+        for threads in [1usize, 3, 8] {
+            let got = run_with(&grid, threads);
+            for (i, (a, b)) in reference.iter().zip(&got).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "3d point {i} @ {threads} threads: {:?}",
+                    grid.points[i].cfg.par
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pipeline_points_carry_bubble_time() {
+        let grid = strategy_grid();
+        let metrics = run_with(&grid, 1);
+        let mut saw_pp = false;
+        for (m, sc) in metrics.iter().zip(&grid.points) {
+            if sc.cfg.pp() > 1 {
+                saw_pp = true;
+                let want = sc.cfg.par.bubble_fraction();
+                // the once-per-iteration tail (optimizer, and the DP
+                // gradient drain when dp > 1) sits outside the bubble, so
+                // the whole-iteration fraction is at most the closed form
+                assert!(m.bubble_time > 0.0, "{:?}", sc.cfg.par);
+                assert!(m.bubble_fraction() <= want + 1e-12);
+                if sc.cfg.dp() == 1 {
+                    // dp = 1: the tail is exactly the optimizer step and
+                    // the closed form is exact over the pipelined span
+                    let got = m.bubble_time / (m.makespan - m.opt_compute);
+                    assert!(
+                        (got - want).abs() < 1e-12,
+                        "{:?}: {got} vs closed-form {want}",
+                        sc.cfg.par,
+                    );
+                }
+            } else {
+                assert_eq!(m.bubble_time, 0.0);
+            }
+        }
+        assert!(saw_pp);
     }
 
     #[test]
@@ -404,8 +483,7 @@ mod tests {
                 layers: 1,
                 heads: h / 128,
                 ffn_mult: 4,
-                tp,
-                dp: 1,
+                par: ParallelismSpec::tp_dp(tp, 1),
                 precision: Precision::F16,
             };
             let cost = AnalyticCost::new(d.clone(), cfg.precision, tp, 1);

@@ -5,42 +5,57 @@ use crate::config;
 use crate::graph::GraphOptions;
 use crate::hw::{DeviceSpec, Evolution};
 use crate::model::{ModelConfig, Precision};
+use crate::parallelism::{NetworkTopology, ParallelismSpec, TopologyKind};
 use crate::sim::OverlapModel;
 
 /// One hardware point of a grid: a device *after* evolution is applied,
-/// plus the DP-overlap co-execution model. Scenarios reference hardware
-/// points by index so the (string-bearing) `DeviceSpec` is stored once per
-/// hardware combination, not per scenario.
+/// the network topology its collectives run over, plus the DP-overlap
+/// co-execution model. Scenarios reference hardware points by index so
+/// the (string-bearing) `DeviceSpec` is stored once per hardware
+/// combination, not per scenario.
 #[derive(Debug, Clone)]
 pub struct HwPoint {
     /// The evolved device spec (`evolution` already applied).
     pub device: DeviceSpec,
     /// The evolution step that produced `device` (kept for labeling).
     pub evolution: Evolution,
+    /// Tier mapping for the strategy's communication groups (single-tier
+    /// by default — the paper's flat wire).
+    pub topology: NetworkTopology,
     pub overlap: OverlapModel,
 }
 
 impl HwPoint {
-    /// Today's hardware: no evolution, intra-node DP links.
+    /// Today's hardware: no evolution, flat wire, intra-node DP links.
     pub fn today(device: &DeviceSpec) -> HwPoint {
         HwPoint {
             device: device.clone(),
             evolution: Evolution::none(),
+            topology: NetworkTopology::single_tier(device),
             overlap: OverlapModel::default(),
         }
     }
 
-    /// Device under an evolution step, default overlap model.
+    /// Device under an evolution step, default overlap model, flat wire.
     pub fn evolved(device: &DeviceSpec, ev: Evolution) -> HwPoint {
+        let evolved = ev.apply(device);
+        let topology = NetworkTopology::single_tier(&evolved);
         HwPoint {
-            device: ev.apply(device),
+            device: evolved,
             evolution: ev,
+            topology,
             overlap: OverlapModel::default(),
         }
     }
 
     pub fn with_overlap(mut self, o: OverlapModel) -> HwPoint {
         self.overlap = o;
+        self
+    }
+
+    /// Bind a topology recipe to this point's (evolved) device.
+    pub fn with_topology_kind(mut self, kind: TopologyKind) -> HwPoint {
+        self.topology = kind.realize(&self.device);
         self
     }
 }
@@ -105,39 +120,59 @@ impl ScenarioGrid {
 /// Cartesian grid builder over the paper's axes.
 ///
 /// Axis nesting (outermost → innermost): hardware (devices × evolutions ×
-/// overlap models, in that order) → hidden → seq_len → batch → layers →
-/// tp → dp. Hardware is outermost so each worker's graph-template and
-/// cost caches see long runs of points sharing a device.
+/// overlap models × topologies, in that order) → hidden → seq_len → batch
+/// → layers → tp → pp → microbatches → seq_par → dp. Hardware is
+/// outermost so each worker's graph-template and cost caches see long
+/// runs of points sharing a device.
+///
+/// Combinations the strategy cannot realize (layers % pp != 0, seq-par
+/// token misfits, a `world_size` mismatch) are **skipped
+/// deterministically**: the surviving point list is a pure function of
+/// the axes, so two builds of the same grid are identical element-for-
+/// element. Model-level misfits (e.g. a hidden size the rounded head
+/// count can't divide) still panic — those are grid authoring bugs, not
+/// strategy divisibility holes.
 #[derive(Debug, Clone)]
 pub struct GridBuilder {
     devices: Vec<DeviceSpec>,
     evolutions: Vec<Evolution>,
     overlaps: Vec<OverlapModel>,
+    topologies: Vec<TopologyKind>,
     hidden: Vec<u64>,
     seq_len: Vec<u64>,
     batch: Vec<u64>,
     layers: Vec<u64>,
     tp: Vec<u64>,
+    pp: Vec<u64>,
+    microbatches: Vec<u64>,
+    seq_par: Vec<bool>,
     dp: Vec<u64>,
+    world: Option<u64>,
     precision: Precision,
     opts: GraphOptions,
 }
 
 impl GridBuilder {
     /// Start from one device with every other axis at its singleton
-    /// default (no evolution, intra-node overlap, B=1, 1 layer, TP=DP=1,
-    /// fp16, full graph).
+    /// default (no evolution, intra-node overlap, flat wire, B=1, 1 layer,
+    /// TP=PP=DP=1, one microbatch, no sequence parallelism, fp16, full
+    /// graph).
     pub fn new(device: &DeviceSpec) -> GridBuilder {
         GridBuilder {
             devices: vec![device.clone()],
             evolutions: vec![Evolution::none()],
             overlaps: vec![OverlapModel::default()],
+            topologies: vec![TopologyKind::SingleTier],
             hidden: vec![4096],
             seq_len: vec![2048],
             batch: vec![1],
             layers: vec![1],
             tp: vec![1],
+            pp: vec![1],
+            microbatches: vec![1],
+            seq_par: vec![false],
             dp: vec![1],
+            world: None,
             precision: Precision::F16,
             opts: GraphOptions::default(),
         }
@@ -153,6 +188,10 @@ impl GridBuilder {
     }
     pub fn overlaps(mut self, v: &[OverlapModel]) -> Self {
         self.overlaps = v.to_vec();
+        self
+    }
+    pub fn topologies(mut self, v: &[TopologyKind]) -> Self {
+        self.topologies = v.to_vec();
         self
     }
     pub fn hidden(mut self, v: &[u64]) -> Self {
@@ -175,8 +214,26 @@ impl GridBuilder {
         self.tp = v.to_vec();
         self
     }
+    pub fn pp(mut self, v: &[u64]) -> Self {
+        self.pp = v.to_vec();
+        self
+    }
+    pub fn microbatches(mut self, v: &[u64]) -> Self {
+        self.microbatches = v.to_vec();
+        self
+    }
+    pub fn seq_par(mut self, v: &[bool]) -> Self {
+        self.seq_par = v.to_vec();
+        self
+    }
     pub fn dp(mut self, v: &[u64]) -> Self {
         self.dp = v.to_vec();
+        self
+    }
+    /// Keep only strategies whose `tp·pp·dp` equals `world` — the "same
+    /// device budget, different factorization" comparison.
+    pub fn world_size(mut self, world: u64) -> Self {
+        self.world = Some(world);
         self
     }
     pub fn precision(mut self, p: Precision) -> Self {
@@ -188,76 +245,84 @@ impl GridBuilder {
         self
     }
 
-    /// Number of points `build` will produce.
+    /// Number of points `build` would produce with no divisibility or
+    /// world-size skipping — an upper bound on (and, for grids whose axes
+    /// are all mutually realizable, exactly) the built point count.
     pub fn point_count(&self) -> usize {
         self.devices.len()
             * self.evolutions.len()
             * self.overlaps.len()
+            * self.topologies.len()
             * self.hidden.len()
             * self.seq_len.len()
             * self.batch.len()
             * self.layers.len()
             * self.tp.len()
+            * self.pp.len()
+            * self.microbatches.len()
+            * self.seq_par.len()
             * self.dp.len()
     }
 
     /// Flatten into a [`ScenarioGrid`]. Head counts follow the Table 3
     /// convention (`config::heads_for`, rounded up to a multiple of TP so
-    /// Megatron head-slicing stays exact). Every config is validated —
-    /// an axis combination the model can't realize (e.g. a hidden size the
-    /// rounded head count doesn't divide) panics here rather than
-    /// producing silently-truncated attention shapes downstream.
+    /// Megatron head-slicing stays exact). Strategy-divisibility misfits
+    /// (layers % pp, seq-par token shards, `world_size` mismatches) are
+    /// skipped deterministically; any other invalid combination panics
+    /// rather than producing silently-truncated attention shapes
+    /// downstream.
     pub fn build(self) -> ScenarioGrid {
         let mut hardware = Vec::with_capacity(
-            self.devices.len() * self.evolutions.len() * self.overlaps.len(),
+            self.devices.len()
+                * self.evolutions.len()
+                * self.overlaps.len()
+                * self.topologies.len(),
         );
         for d in &self.devices {
             for ev in &self.evolutions {
                 for ov in &self.overlaps {
-                    hardware.push(HwPoint::evolved(d, *ev).with_overlap(*ov));
+                    for tk in &self.topologies {
+                        hardware.push(
+                            HwPoint::evolved(d, *ev)
+                                .with_overlap(*ov)
+                                .with_topology_kind(*tk),
+                        );
+                    }
                 }
             }
         }
-        let mut points = Vec::with_capacity(
-            hardware.len()
-                * self.hidden.len()
-                * self.seq_len.len()
-                * self.batch.len()
-                * self.layers.len()
-                * self.tp.len()
-                * self.dp.len(),
-        );
+        let mut points = Vec::with_capacity(self.point_count());
         for hw in 0..hardware.len() as u32 {
             for &h in &self.hidden {
                 for &sl in &self.seq_len {
                     for &b in &self.batch {
                         for &layers in &self.layers {
                             for &tp in &self.tp {
-                                for &dp in &self.dp {
-                                    let base = config::heads_for(h).max(tp);
-                                    let heads = (base + tp - 1) / tp * tp;
-                                    let cfg = ModelConfig {
-                                        hidden: h,
-                                        seq_len: sl,
-                                        batch: b,
-                                        layers,
-                                        heads,
-                                        ffn_mult: 4,
-                                        tp,
-                                        dp,
-                                        precision: self.precision,
+                                for &pp in &self.pp {
+                                    // microbatching is a pipeline concept:
+                                    // pp = 1 takes a single mb = 1 point
+                                    // instead of duplicating the axis.
+                                    let mbs: &[u64] = if pp > 1 {
+                                        &self.microbatches
+                                    } else {
+                                        &[1]
                                     };
-                                    if let Err(e) = cfg.validate() {
-                                        panic!(
-                                            "GridBuilder: H={h} TP={tp} is \
-                                             not realizable: {e}"
-                                        );
+                                    for &mb in mbs {
+                                        for &sp in &self.seq_par {
+                                            for &dp in &self.dp {
+                                                if let Some(cfg) = self.realize(
+                                                    h, sl, b, layers, tp, pp, mb,
+                                                    sp, dp,
+                                                ) {
+                                                    points.push(Scenario {
+                                                        cfg,
+                                                        opts: self.opts,
+                                                        hw,
+                                                    });
+                                                }
+                                            }
+                                        }
                                     }
-                                    points.push(Scenario {
-                                        cfg,
-                                        opts: self.opts,
-                                        hw,
-                                    });
                                 }
                             }
                         }
@@ -267,12 +332,57 @@ impl GridBuilder {
         }
         ScenarioGrid { hardware, points }
     }
+
+    /// One axis combination → a validated config, `None` when a strategy
+    /// divisibility rule or the world-size filter excludes it.
+    #[allow(clippy::too_many_arguments)]
+    fn realize(
+        &self,
+        h: u64,
+        sl: u64,
+        b: u64,
+        layers: u64,
+        tp: u64,
+        pp: u64,
+        mb: u64,
+        sp: bool,
+        dp: u64,
+    ) -> Option<ModelConfig> {
+        if let Some(w) = self.world {
+            if tp * pp * dp != w {
+                return None;
+            }
+        }
+        if layers % pp != 0 {
+            return None;
+        }
+        if sp && (tp == 1 || (sl * b) % tp != 0) {
+            return None;
+        }
+        let base = config::heads_for(h).max(tp);
+        let heads = (base + tp - 1) / tp * tp;
+        let cfg = ModelConfig {
+            hidden: h,
+            seq_len: sl,
+            batch: b,
+            layers,
+            heads,
+            ffn_mult: 4,
+            par: ParallelismSpec { tp, pp, microbatches: mb, dp, seq_par: sp },
+            precision: self.precision,
+        };
+        if let Err(e) = cfg.validate() {
+            panic!("GridBuilder: H={h} TP={tp} PP={pp} is not realizable: {e}");
+        }
+        Some(cfg)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::hw::catalog;
+    use crate::parallelism::Tier;
 
     #[test]
     fn cartesian_count_and_determinism() {
@@ -302,8 +412,8 @@ mod tests {
             .evolutions(&[Evolution::none(), Evolution::flop_vs_bw_2x()])
             .build();
         // innermost axis (dp) varies fastest...
-        assert_eq!(g.points[0].cfg.dp, 1);
-        assert_eq!(g.points[1].cfg.dp, 4);
+        assert_eq!(g.points[0].cfg.dp(), 1);
+        assert_eq!(g.points[1].cfg.dp(), 4);
         // ...then hidden, and hardware varies slowest.
         assert_eq!(g.points[0].cfg.hidden, 1024);
         assert_eq!(g.points[2].cfg.hidden, 2048);
@@ -342,6 +452,97 @@ mod tests {
             .batch(&[1, 4]);
         assert_eq!(b.point_count(), 6);
         assert_eq!(b.clone().build().len(), 6);
+    }
+
+    #[test]
+    fn divisibility_invalid_points_skipped_deterministically() {
+        // layers ∈ {4, 6} × pp ∈ {1, 4}: pp=4 divides 4 but not 6.
+        let build = || {
+            GridBuilder::new(&catalog::mi210())
+                .layers(&[4, 6])
+                .tp(&[2])
+                .pp(&[1, 4])
+                .microbatches(&[8])
+                .build()
+        };
+        let g = build();
+        // 4 raw combos minus the (layers=6, pp=4) misfit
+        assert_eq!(g.len(), 3);
+        for p in &g.points {
+            p.cfg.validate().unwrap();
+            assert_eq!(p.cfg.layers % p.cfg.pp(), 0);
+        }
+        let h = build();
+        for (a, b) in g.points.iter().zip(&h.points) {
+            assert_eq!(a.cfg, b.cfg);
+        }
+    }
+
+    #[test]
+    fn pp1_collapses_the_microbatch_axis() {
+        let g = GridBuilder::new(&catalog::mi210())
+            .layers(&[4])
+            .pp(&[1, 2])
+            .microbatches(&[4, 8])
+            .build();
+        // pp=1 contributes one point (mb=1); pp=2 contributes mb ∈ {4, 8}
+        assert_eq!(g.len(), 3);
+        assert_eq!(g.points[0].cfg.pp(), 1);
+        assert_eq!(g.points[0].cfg.microbatches(), 1);
+        assert_eq!(g.points[1].cfg.par.microbatches, 4);
+        assert_eq!(g.points[2].cfg.par.microbatches, 8);
+    }
+
+    #[test]
+    fn seq_par_skips_tp1_and_token_misfits() {
+        let g = GridBuilder::new(&catalog::mi210())
+            .seq_len(&[2048])
+            .tp(&[1, 8])
+            .seq_par(&[false, true])
+            .build();
+        // tp=1 gets only the sp=false point; tp=8 gets both
+        assert_eq!(g.len(), 3);
+        assert!(g
+            .points
+            .iter()
+            .all(|p| !(p.cfg.tp() == 1 && p.cfg.seq_par())));
+    }
+
+    #[test]
+    fn world_size_filter_keeps_exact_factorizations() {
+        let g = GridBuilder::new(&catalog::mi210())
+            .layers(&[8])
+            .tp(&[1, 2, 4, 8])
+            .pp(&[1, 2, 4, 8])
+            .microbatches(&[8])
+            .dp(&[1, 2, 4, 8])
+            .world_size(8)
+            .build();
+        assert!(!g.is_empty());
+        for p in &g.points {
+            assert_eq!(p.cfg.par.world_size(), 8, "{:?}", p.cfg.par);
+        }
+        // the power-of-two factorizations of 8 into three factors: C(5,2)=10
+        assert_eq!(g.len(), 10);
+    }
+
+    #[test]
+    fn topology_axis_multiplies_hardware_points() {
+        let g = GridBuilder::new(&catalog::mi210())
+            .topologies(&[TopologyKind::SingleTier, TopologyKind::tiered_8x(8)])
+            .tp(&[16])
+            .build();
+        assert_eq!(g.hardware.len(), 2);
+        assert_eq!(g.len(), 2);
+        // the tiered point maps a 16-wide TP group to the inter-node tier
+        let spec = g.points[1].cfg.par;
+        assert_eq!(
+            g.hardware[1].topology.tier_for(
+                crate::parallelism::CommGroup::TensorParallel,
+                &spec
+            ),
+            Tier::InterNode
+        );
     }
 
     #[test]

@@ -9,8 +9,10 @@
 //! # Shape of the engine
 //!
 //! A [`ScenarioGrid`] flattens the cartesian product of model axes
-//! (hidden, seq_len, batch, layers), parallelism axes (tp, dp), and
-//! hardware axes (`DeviceSpec` × `Evolution` × `OverlapModel`) into a
+//! (hidden, seq_len, batch, layers), parallelism axes (tp, pp,
+//! microbatches, seq-par, dp — with divisibility-invalid combinations
+//! skipped deterministically), and hardware axes (`DeviceSpec` ×
+//! `Evolution` × `OverlapModel` × `TopologyKind`) into a
 //! deterministically-ordered point list ([`GridBuilder`] documents the
 //! nesting; irregular grids use [`ScenarioGrid::from_parts`]). The
 //! executor ([`run`] / [`run_with`]) pulls contiguous chunks of points

@@ -64,8 +64,12 @@ impl Args {
             .unwrap_or(default)
     }
 
-    /// Comma-separated list of integers, e.g. `--tp 4,8,16`.
-    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> Vec<usize> {
+    /// Comma-separated list of any parseable values, e.g. `--tp 4,8,16`.
+    pub fn get_list<T: std::str::FromStr + Clone>(
+        &self,
+        key: &str,
+        default: &[T],
+    ) -> Vec<T> {
         match self.get(key) {
             None => default.to_vec(),
             Some(v) => v
@@ -73,7 +77,37 @@ impl Args {
                 .map(|s| {
                     s.trim()
                         .parse()
-                        .unwrap_or_else(|_| panic!("--{key}: bad integer {s:?}"))
+                        .unwrap_or_else(|_| panic!("--{key}: bad value {s:?}"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Comma-separated list of integers, e.g. `--tp 4,8,16`.
+    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        self.get_list(key, default)
+    }
+
+    /// Comma-separated list of u64s, e.g. `--hidden 4096,16384`.
+    pub fn get_u64_list(&self, key: &str, default: &[u64]) -> Vec<u64> {
+        self.get_list(key, default)
+    }
+
+    /// Comma-separated list of floats, e.g. `--evolutions 1,2,4`.
+    pub fn get_f64_list(&self, key: &str, default: &[f64]) -> Vec<f64> {
+        self.get_list(key, default)
+    }
+
+    /// Comma-separated list of 0/1 flags, e.g. `--seq-par 0,1`.
+    pub fn get_bool_list(&self, key: &str, default: &[bool]) -> Vec<bool> {
+        match self.get(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .map(|s| match s.trim() {
+                    "0" | "false" => false,
+                    "1" | "true" => true,
+                    other => panic!("--{key}: bad flag {other:?} (use 0/1)"),
                 })
                 .collect(),
         }
@@ -111,6 +145,15 @@ mod tests {
     fn list_parsing() {
         let a = parse(&["--tp", "4, 8,16"]);
         assert_eq!(a.get_usize_list("tp", &[]), vec![4, 8, 16]);
+    }
+
+    #[test]
+    fn typed_list_accessors() {
+        let a = parse(&["--hidden", "4096,16384", "--evolutions", "1, 2.5", "--seq-par", "0,1"]);
+        assert_eq!(a.get_u64_list("hidden", &[]), vec![4096, 16384]);
+        assert_eq!(a.get_f64_list("evolutions", &[]), vec![1.0, 2.5]);
+        assert_eq!(a.get_bool_list("seq-par", &[]), vec![false, true]);
+        assert_eq!(a.get_bool_list("missing", &[true]), vec![true]);
     }
 
     #[test]

@@ -13,7 +13,7 @@ use commscale::opmodel::{
 use commscale::sim::{simulate, AnalyticCost};
 
 fn mi210_cost(cfg: &ModelConfig) -> AnalyticCost {
-    AnalyticCost::new(catalog::mi210(), cfg.precision, cfg.tp, cfg.dp)
+    AnalyticCost::new(catalog::mi210(), cfg.precision, cfg.tp(), cfg.dp())
 }
 
 #[test]
@@ -28,7 +28,12 @@ fn simulated_compute_time_matches_closed_form_roofline() {
     let cost = mi210_cost(&cfg).with_eff(eff);
     let g = build_layer_graph(
         &cfg,
-        GraphOptions { tp_allreduce: false, dp_allreduce: false, non_gemm: false },
+        GraphOptions {
+            tp_allreduce: false,
+            dp_allreduce: false,
+            non_gemm: false,
+            ..Default::default()
+        },
     );
     let r = simulate(&g, &cost);
     let lc = LayerCounts::of(&cfg);
@@ -214,7 +219,7 @@ fn every_sweep_combination_simulates() {
     let d = catalog::mi210();
     let mut count = 0;
     for cfg in SweepGrid::default().combinations() {
-        let cost = AnalyticCost::new(d.clone(), cfg.precision, cfg.tp, 1);
+        let cost = AnalyticCost::new(d.clone(), cfg.precision, cfg.tp(), 1);
         let g = build_layer_graph(&cfg, GraphOptions::default());
         let r = simulate(&g, &cost);
         assert!(r.makespan.is_finite() && r.makespan > 0.0);
@@ -223,6 +228,47 @@ fn every_sweep_combination_simulates() {
         count += 1;
     }
     assert_eq!(count, 392);
+}
+
+#[test]
+fn strategy_space_end_to_end() {
+    // The parallelism layer's storyline: at one device budget, the
+    // strategy choice moves the Comp-vs-Comm balance.
+    use commscale::analysis::strategies;
+    let d = catalog::mi210();
+    let (points, summaries) = strategies::compare(&d, 64);
+    assert!(points.len() >= 1000, "{} points", points.len());
+    // pure DP pays no serialized comm; pure PP pays a bubble; TP pays
+    // serialized collectives — all visible in the aggregate bands.
+    let by = |arch: &str| summaries.iter().find(|s| s.archetype == arch).unwrap().clone();
+    assert!(by("pp").bubble_frac_mean > 0.0);
+    assert_eq!(by("tp").bubble_frac_mean, 0.0);
+    assert!(by("tp").comm_frac_max > by("dp").comm_frac_min);
+}
+
+#[test]
+fn pipeline_bubble_visible_in_sweep_results() {
+    use commscale::parallelism::ParallelismSpec;
+    use commscale::sweep::{self, GridBuilder};
+    let grid = GridBuilder::new(&catalog::mi210())
+        .hidden(&[8192])
+        .layers(&[8])
+        .tp(&[2])
+        .pp(&[1, 4])
+        .microbatches(&[4])
+        .build();
+    let metrics = sweep::run(&grid);
+    assert_eq!(grid.len(), 2);
+    let flat = &metrics[0];
+    let piped = &metrics[1];
+    assert_eq!(flat.bubble_time, 0.0);
+    let want = ParallelismSpec::none().with_pp(4, 4).bubble_fraction();
+    // exact over the pipelined span (optimizer tail excluded)
+    let got = piped.bubble_time / (piped.makespan - piped.opt_compute);
+    assert!((got - want).abs() < 1e-12);
+    // the pipelined stage does 1/4 the layer work (times 4 microbatches it
+    // does the same total) but pays the bubble on top
+    assert!(piped.bubble_time > 0.0);
 }
 
 #[test]

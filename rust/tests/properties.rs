@@ -6,12 +6,13 @@ use commscale::collectives::{CollectiveCost, CollectiveKind, ShmRing};
 use commscale::graph::{build_layer_graph, GraphOptions};
 use commscale::hw::{catalog, Evolution};
 use commscale::model::{LayerCounts, ModelConfig, Precision};
+use commscale::parallelism::ParallelismSpec;
 use commscale::sim::{simulate, AnalyticCost};
 use commscale::util::{stats, Json, Rng};
 
 const CASES: usize = 200;
 
-/// Random valid model config.
+/// Random valid model config (flat TP×DP strategy).
 fn arb_config(rng: &mut Rng) -> ModelConfig {
     let hidden = 1u64 << rng.range(7, 17); // 128 .. 64K
     let heads = (hidden / 64).max(1);
@@ -24,10 +25,23 @@ fn arb_config(rng: &mut Rng) -> ModelConfig {
         layers: rng.range(1, 8),
         heads,
         ffn_mult: 4,
-        tp,
-        dp: 1 << rng.range(0, 4),
+        par: ParallelismSpec::tp_dp(tp, 1 << rng.range(0, 4)),
         precision: *rng.choose(&[Precision::F32, Precision::F16, Precision::F8]),
     }
+}
+
+/// Random valid 3D strategy config: power-of-two degrees, layers divisible
+/// by pp, token count divisible by tp when sequence-parallel.
+fn arb_3d_config(rng: &mut Rng) -> ModelConfig {
+    let mut cfg = arb_config(rng);
+    let pp = 1u64 << rng.range(0, 4); // 1..8
+    let mb = if pp > 1 { 1u64 << rng.range(0, 5) } else { 1 };
+    cfg.layers = pp * rng.range(1, 4);
+    cfg.par.pp = pp;
+    cfg.par.microbatches = mb;
+    let tokens_shard = (cfg.seq_len * cfg.batch) % cfg.par.tp == 0;
+    cfg.par.seq_par = cfg.par.tp > 1 && tokens_shard && rng.f64() < 0.5;
+    cfg
 }
 
 #[test]
@@ -53,7 +67,7 @@ fn prop_sim_invariants_hold_for_random_configs() {
     let d = catalog::mi210();
     for i in 0..CASES {
         let cfg = arb_config(&mut rng);
-        let cost = AnalyticCost::new(d.clone(), cfg.precision, cfg.tp, cfg.dp);
+        let cost = AnalyticCost::new(d.clone(), cfg.precision, cfg.tp(), cfg.dp());
         let g = build_layer_graph(&cfg, GraphOptions::default());
         let r = simulate(&g, &cost);
         // invariants of any schedule:
@@ -87,15 +101,15 @@ fn prop_comm_fraction_monotone_in_flop_scale() {
     let d = catalog::mi210();
     for i in 0..50 {
         let mut cfg = arb_config(&mut rng);
-        cfg.tp = cfg.tp.max(2); // ensure there is serialized comm
-        if cfg.heads % cfg.tp != 0 {
+        cfg.par.tp = cfg.par.tp.max(2); // ensure there is serialized comm
+        if cfg.heads % cfg.par.tp != 0 {
             continue;
         }
         let g = build_layer_graph(&cfg, GraphOptions::default());
         let mut prev = -1.0;
         for scale in [1.0, 2.0, 4.0, 8.0] {
             let dev = Evolution { flop_scale: scale, bw_scale: 1.0 }.apply(&d);
-            let cost = AnalyticCost::new(dev, cfg.precision, cfg.tp, cfg.dp);
+            let cost = AnalyticCost::new(dev, cfg.precision, cfg.tp(), cfg.dp());
             let f = simulate(&g, &cost).comm_fraction();
             assert!(f >= prev - 1e-9, "case {i} scale {scale}: {f} < {prev}");
             prev = f;
@@ -217,6 +231,136 @@ fn prop_percentiles_bounded_by_extremes() {
         assert!(s.min <= s.p10 && s.p10 <= s.median);
         assert!(s.median <= s.p90 && s.p90 <= s.max);
         assert!(s.mean >= s.min - 1e-12 && s.mean <= s.max + 1e-12);
+    }
+}
+
+#[test]
+fn prop_3d_configs_validate_and_misfits_reject() {
+    // arb_3d_config's constructions always validate; perturbing any
+    // divisibility knob out of range must be rejected with a message
+    // naming the knob.
+    let mut rng = Rng::new(0x3D);
+    for i in 0..CASES {
+        let cfg = arb_3d_config(&mut rng);
+        cfg.validate().unwrap_or_else(|e| panic!("case {i}: {cfg:?}: {e}"));
+
+        // layers % pp misfit
+        let mut bad = cfg;
+        bad.par.pp = cfg.layers + 1;
+        let msg = bad.validate().unwrap_err().to_string();
+        assert!(msg.contains("pp"), "case {i}: {msg}");
+
+        // microbatches without a pipeline
+        let mut bad = cfg;
+        bad.par.pp = 1;
+        bad.par.microbatches = 2;
+        assert!(bad.validate().is_err(), "case {i}");
+
+        // tp that can't slice the heads
+        let mut bad = cfg;
+        bad.par.tp = cfg.heads * 2;
+        let msg = bad.validate().unwrap_err().to_string();
+        assert!(msg.contains("tp"), "case {i}: {msg}");
+    }
+}
+
+#[test]
+fn prop_3d_graphs_conserve_stage_work() {
+    // per-device GEMM flops = (layers/pp) × microbatches × per-layer flops,
+    // for any strategy; comm kinds follow the strategy's signature.
+    use commscale::graph::{CommClass, OpKind};
+    let mut rng = Rng::new(0x3D97);
+    for i in 0..CASES {
+        let cfg = arb_3d_config(&mut rng);
+        let g = build_layer_graph(&cfg, GraphOptions::default());
+        g.validate().unwrap();
+        let lc = LayerCounts::of(&cfg);
+        assert_eq!(
+            g.total_gemm_flops(),
+            cfg.stage_layers() * cfg.microbatches() * lc.iter_gemm_flops(),
+            "case {i}: {cfg:?}"
+        );
+        let has_ar = g.ops.iter().any(|o| {
+            matches!(o.kind, OpKind::AllReduce { class: CommClass::Serialized, .. })
+        });
+        let has_rs = g
+            .ops
+            .iter()
+            .any(|o| matches!(o.kind, OpKind::ReduceScatter { .. }));
+        if cfg.tp() > 1 {
+            assert!(has_ar != cfg.seq_par(), "case {i}: AR iff not seq-par");
+            assert!(has_rs == cfg.seq_par(), "case {i}: RS iff seq-par");
+        } else {
+            assert!(!has_ar && !has_rs, "case {i}");
+        }
+        let p2p = g.total_p2p_bytes();
+        if cfg.pp() > 1 {
+            // the boundary tensor is token-sharded under sequence
+            // parallelism
+            let shard = if cfg.seq_par() { cfg.tp() } else { 1 };
+            let act =
+                cfg.precision.bytes() * cfg.batch * cfg.seq_len * cfg.hidden / shard;
+            assert_eq!(p2p, 2 * cfg.microbatches() * act, "case {i}");
+        } else {
+            assert_eq!(p2p, 0, "case {i}");
+        }
+    }
+}
+
+#[test]
+fn prop_bubble_fraction_matches_closed_form_for_random_pipelines() {
+    use commscale::sweep::PointEvaluator;
+    let mut rng = Rng::new(0xBB1);
+    let d = catalog::mi210();
+    let mut ev = PointEvaluator::new();
+    for i in 0..40 {
+        let mut cfg = arb_3d_config(&mut rng);
+        cfg.par.pp = 1u64 << rng.range(1, 4); // force a pipeline
+        cfg.par.microbatches = 1u64 << rng.range(0, 5);
+        cfg.par.dp = 1; // dp ARs add a once-per-iteration drain tail
+        cfg.layers = cfg.par.pp * rng.range(1, 3);
+        let cost = AnalyticCost::from_spec(d.clone(), cfg.precision, cfg.par);
+        let m = ev.eval(&cfg, GraphOptions::default(), &cost);
+        let want = cfg.par.bubble_fraction();
+        // exact over the pipelined span (optimizer tail excluded)
+        let got = m.bubble_time / (m.makespan - m.opt_compute);
+        assert!(
+            (got - want).abs() < 1e-12,
+            "case {i}: {:?}: {got} vs {want}",
+            cfg.par,
+        );
+    }
+}
+
+#[test]
+fn prop_seq_par_never_raises_iteration_time() {
+    // RS + AG costs exactly what the AR did while the sharded LayerNorm /
+    // element-wise work shrinks — sequence parallelism can only help (in
+    // this serialized-chain model).
+    let mut rng = Rng::new(0x5E0F2);
+    let d = catalog::mi210();
+    for i in 0..60 {
+        let mut cfg = arb_config(&mut rng);
+        cfg.par.tp = cfg.par.tp.max(2);
+        if cfg.heads % cfg.par.tp != 0 || (cfg.seq_len * cfg.batch) % cfg.par.tp != 0
+        {
+            continue;
+        }
+        cfg.par.seq_par = false;
+        let cost = AnalyticCost::from_spec(d.clone(), cfg.precision, cfg.par);
+        let base = simulate(&build_layer_graph(&cfg, GraphOptions::default()), &cost);
+        let mut sp = cfg;
+        sp.par.seq_par = true;
+        let sp_cost = AnalyticCost::from_spec(d.clone(), sp.precision, sp.par);
+        let with_sp =
+            simulate(&build_layer_graph(&sp, GraphOptions::default()), &sp_cost);
+        assert!(
+            with_sp.makespan <= base.makespan * (1.0 + 1e-9),
+            "case {i}: {:?}: sp {} > base {}",
+            cfg.par,
+            with_sp.makespan,
+            base.makespan
+        );
     }
 }
 
