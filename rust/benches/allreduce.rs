@@ -3,9 +3,11 @@
 //! DESIGN.md §8 target is AR overhead < 15% of step time at DP=4 for the
 //! ~100M-param model (≈ 390 MB of f32 gradients).
 
+use std::path::Path;
+
 use commscale::collectives::ShmRing;
 use commscale::util::microbench::{bench_header, Bench};
-use commscale::util::Rng;
+use commscale::util::{Json, Rng};
 
 fn bufs(n: usize, len: usize) -> Vec<Vec<f32>> {
     let mut rng = Rng::new(1);
@@ -50,4 +52,13 @@ fn main() {
     let busbw =
         2.0 * (n - 1) as f64 / n as f64 * (4 * elems) as f64 / r.summary.median;
     println!("    -> bus bandwidth {:.2} GB/s", busbw / 1e9);
+    r.write_json_with(
+        Path::new("BENCH_allreduce.json"),
+        vec![
+            ("points", Json::num(1.0)),
+            ("points_per_sec", Json::num(1.0 / r.summary.median)),
+            ("bus_bandwidth_gbps", Json::num(busbw / 1e9)),
+        ],
+    )
+    .expect("write BENCH_allreduce.json");
 }

@@ -1,8 +1,11 @@
 //! Bench: Fig 7 — algorithmic slack & edge across the zoo. Prints the
 //! series the paper plots and times the generator.
 
+use std::path::Path;
+
 use commscale::analysis::algorithmic;
 use commscale::util::microbench::{bench_header, Bench};
+use commscale::util::Json;
 
 fn main() {
     bench_header("fig07: algorithmic slack & edge (normalized to BERT)");
@@ -10,6 +13,17 @@ fn main() {
     assert!(r.summary.mean < 1e-3, "fig7 generation must be sub-ms");
 
     let rows = algorithmic::fig7();
+    r.write_json_with(
+        Path::new("BENCH_fig07.json"),
+        vec![
+            ("points", Json::num(rows.len() as f64)),
+            (
+                "points_per_sec",
+                Json::num(rows.len() as f64 / r.summary.median),
+            ),
+        ],
+    )
+    .expect("write BENCH_fig07.json");
     println!("\n{:<14} {:>6} {:>6} {:>12} {:>12}", "model", "B", "TP", "slack_norm", "edge_norm");
     for row in &rows {
         println!(

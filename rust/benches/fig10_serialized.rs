@@ -3,20 +3,35 @@
 //! projection workload; the perf target in DESIGN.md §8 is < 50 ms for the
 //! whole grid.
 
+use std::path::Path;
+
 use commscale::analysis::serialized;
 use commscale::hw::catalog;
 use commscale::util::microbench::{bench_header, Bench};
+use commscale::util::Json;
 
 fn main() {
     bench_header("fig10: serialized comm fraction grid");
     let d = catalog::mi210();
 
+    let points = serialized::fig10(&d).len();
     let r = Bench::new("fig10_full_grid_35pts").run(|| serialized::fig10(&d));
     println!(
         "grid mean {:.2} ms (target < 50 ms)",
         r.summary.mean * 1e3
     );
     assert!(r.summary.median < 0.05, "grid too slow: {}s", r.summary.median);
+    r.write_json_with(
+        Path::new("BENCH_fig10.json"),
+        vec![
+            ("points", Json::num(points as f64)),
+            (
+                "points_per_sec",
+                Json::num(points as f64 / r.summary.median),
+            ),
+        ],
+    )
+    .expect("write BENCH_fig10.json");
 
     Bench::new("fig10_single_point")
         .run(|| serialized::simulate_point(&d, 65536, 4096, 128));

@@ -1,15 +1,30 @@
 //! Bench: Fig 11 — overlapped (DP) comm as % of compute, full grid.
 
+use std::path::Path;
+
 use commscale::analysis::overlapped;
 use commscale::hw::catalog;
 use commscale::util::microbench::{bench_header, Bench};
+use commscale::util::Json;
 
 fn main() {
     bench_header("fig11: overlapped comm % of compute grid");
     let d = catalog::mi210();
 
+    let points = overlapped::fig11(&d).len();
     let r = Bench::new("fig11_full_grid_30pts").run(|| overlapped::fig11(&d));
     assert!(r.summary.median < 0.05, "grid too slow");
+    r.write_json_with(
+        Path::new("BENCH_fig11.json"),
+        vec![
+            ("points", Json::num(points as f64)),
+            (
+                "points_per_sec",
+                Json::num(points as f64 / r.summary.median),
+            ),
+        ],
+    )
+    .expect("write BENCH_fig11.json");
 
     let pts = overlapped::fig11(&d);
     let min = pts.iter().map(|p| p.pct_of_compute).fold(f64::MAX, f64::min);

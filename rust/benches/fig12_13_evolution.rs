@@ -1,19 +1,39 @@
 //! Bench: Figs 12 & 13 — the hardware-evolution sweeps (3 scenarios each).
 
+use std::path::Path;
+
 use commscale::analysis::evolution;
 use commscale::hw::{catalog, Evolution};
 use commscale::util::microbench::{bench_header, Bench};
+use commscale::util::Json;
 
 fn main() {
     bench_header("fig12/13: hardware-evolution sweeps");
     let d = catalog::mi210();
     let scenarios = evolution::paper_scenarios();
 
+    let fig12_points: usize = evolution::fig12(&d, &scenarios)
+        .iter()
+        .map(|(_, pts)| pts.len())
+        .sum();
     let r = Bench::new("fig12_3_scenarios_x35pts")
         .run(|| evolution::fig12(&d, &scenarios));
     assert!(r.summary.median < 0.2, "fig12 too slow");
 
-    Bench::new("fig13_3_scenarios_x30pts").run(|| evolution::fig13(&d, &scenarios));
+    let r13 =
+        Bench::new("fig13_3_scenarios_x30pts").run(|| evolution::fig13(&d, &scenarios));
+    r.write_json_with(
+        Path::new("BENCH_fig12_13.json"),
+        vec![
+            ("points", Json::num(fig12_points as f64)),
+            (
+                "points_per_sec",
+                Json::num(fig12_points as f64 / r.summary.median),
+            ),
+            ("fig13_median_s", Json::num(r13.summary.median)),
+        ],
+    )
+    .expect("write BENCH_fig12_13.json");
 
     println!("\ncomm-fraction bands (paper: 20-50% / 30-65% / 40-75%):");
     for ev in [Evolution::none(), Evolution::flop_vs_bw_2x(), Evolution::flop_vs_bw_4x()]

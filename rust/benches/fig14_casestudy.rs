@@ -1,15 +1,30 @@
 //! Bench: Fig 14 — the end-to-end case study (three scenarios).
 
+use std::path::Path;
+
 use commscale::analysis::case_study;
 use commscale::hw::catalog;
 use commscale::util::microbench::{bench_header, Bench};
+use commscale::util::Json;
 
 fn main() {
     bench_header("fig14: end-to-end case study (H=64K, SL=4K, TP=128)");
     let d = catalog::mi210();
 
+    let points = case_study::fig14(&d).len();
     let r = Bench::new("fig14_three_scenarios").run(|| case_study::fig14(&d));
     assert!(r.summary.median < 0.05);
+    r.write_json_with(
+        Path::new("BENCH_fig14.json"),
+        vec![
+            ("points", Json::num(points as f64)),
+            (
+                "points_per_sec",
+                Json::num(points as f64 / r.summary.median),
+            ),
+        ],
+    )
+    .expect("write BENCH_fig14.json");
 
     println!();
     for s in case_study::fig14(&d) {

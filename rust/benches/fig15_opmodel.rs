@@ -40,6 +40,18 @@ fn main() {
     assert!(r.summary.mean < 1e-3);
 
     let data = accuracy::fig15(&db).expect("fig15");
+    let points = data.all_errors().len();
+    r.write_json_with(
+        Path::new("BENCH_fig15.json"),
+        vec![
+            ("points", commscale::util::Json::num(points as f64)),
+            (
+                "points_per_sec",
+                commscale::util::Json::num(points as f64 / r.summary.median),
+            ),
+        ],
+    )
+    .expect("write BENCH_fig15.json");
     println!();
     for (name, err) in data.all_errors() {
         println!("  {name:<18} geomean error {err:>5.1}%  (paper: ~7-15%)");

@@ -36,6 +36,11 @@ fn main() {
             Path::new("BENCH_paper_tables.json"),
             vec![
                 ("table3_combinations", Json::num(combos as f64)),
+                ("points", Json::num(combos as f64)),
+                (
+                    "points_per_sec",
+                    Json::num(combos as f64 / r_grid.summary.median),
+                ),
                 (
                     "combinations_per_sec",
                     Json::num(combos as f64 / r_grid.summary.median),

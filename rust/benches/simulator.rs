@@ -36,6 +36,10 @@ fn main() {
         vec![
             ("graph_ops", Json::num(n_ops as f64)),
             ("ops_per_sec", Json::num(ops_per_sec)),
+            // one "point" = one full-graph simulation, the same unit the
+            // sweep/figure benches report
+            ("points", Json::num(1.0)),
+            ("points_per_sec", Json::num(1.0 / r.summary.median)),
         ],
     )
     .expect("write BENCH_simulator.json");

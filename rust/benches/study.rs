@@ -1,0 +1,90 @@
+//! Bench: the declarative study pipeline — streaming row assembly,
+//! derived-metric evaluation, and group-by aggregation layered on the
+//! sweep engine. The overhead over the raw engine must stay small (the
+//! rows are where the query surface lives), and `BENCH_study.json`
+//! tracks the end-to-end points/sec trajectory across PRs.
+//!
+//! Env knobs (used by CI): `COMMSCALE_SWEEP_SMALL=1` shrinks the grid;
+//! `COMMSCALE_BENCH_QUICK=1` shortens the measurement window.
+
+use std::path::Path;
+
+use commscale::hw::catalog;
+use commscale::study::{run_study, RowSink, RunOptions, StudySpec, VecSink};
+use commscale::util::microbench::{bench_header, Bench};
+use commscale::util::Json;
+
+fn spec_text(small: bool) -> String {
+    let hidden = if small {
+        "[4096, 16384, 65536]"
+    } else {
+        "[1024, 2048, 4096, 8192, 16384, 32768, 65536]"
+    };
+    let evolutions = if small { "[1, 4]" } else { "[1, 2, 4]" };
+    format!(
+        r#"{{
+          "name": "bench",
+          "description": "study-pipeline throughput benchmark",
+          "axes": {{
+            "hidden": {hidden},
+            "seq_len": [1024, 2048, 4096, 8192],
+            "batch": [1, 2, 4],
+            "layers": [1, 2],
+            "tp": [4, 8, 16, 32, 64, 128, 256],
+            "dp": [1, 4, 16],
+            "evolutions": {evolutions}
+          }},
+          "metrics": ["comm_fraction",
+                      {{"name": "exposed_share",
+                        "expr": "exposed_comm / iter_time"}}],
+          "group_by": ["hidden", "flop_vs_bw"],
+          "aggregate": [
+            {{"metric": "comm_fraction", "ops": ["min", "mean", "max"]}},
+            {{"metric": "time_per_sample", "ops": ["argmin"],
+              "args": ["tp", "dp"]}}
+          ]
+        }}"#
+    )
+}
+
+fn main() {
+    bench_header("declarative study pipeline");
+    let small = std::env::var("COMMSCALE_SWEEP_SMALL").is_ok();
+    let spec = StudySpec::parse(&spec_text(small)).expect("bench spec parses");
+    let resolved = spec.resolve(&catalog::mi210()).expect("bench spec resolves");
+    let n = resolved.total_points();
+    println!(
+        "study grid: {n} points, {} hardware points, group-by aggregation",
+        resolved.hardware.len()
+    );
+    assert!(small || n >= 10_000, "full study grid must be >= 10k, got {n}");
+
+    let r = Bench::new("study_pipeline_grouped")
+        .max_iters(20)
+        .run(|| {
+            let mut sink = VecSink::new();
+            let outcome = {
+                let mut sinks: Vec<&mut dyn RowSink> = vec![&mut sink];
+                run_study(&resolved, RunOptions::default(), &mut sinks)
+                    .expect("study runs")
+            };
+            assert_eq!(outcome.points_evaluated, n);
+            assert!(outcome.groups_emitted > 0);
+            outcome.groups_emitted
+        });
+
+    let points_per_sec = n as f64 / r.summary.median;
+    println!(
+        "pipeline: {points_per_sec:.0} points/s end-to-end (rows + exprs + \
+         aggregation)"
+    );
+    r.write_json_with(
+        Path::new("BENCH_study.json"),
+        vec![
+            ("points", Json::num(n as f64)),
+            ("points_per_sec", Json::num(points_per_sec)),
+            ("small_grid", Json::Bool(small)),
+        ],
+    )
+    .expect("write BENCH_study.json");
+}

@@ -5,6 +5,53 @@
 use crate::model::flops::{amdahl_edge, slack_advantage};
 use crate::model::memory::{required_tp, round_tp_pow2};
 use crate::model::zoo::{self, ZooEntry};
+use crate::study::{MetricSpec, SinkSpec, Source, StudySpec};
+
+/// Fig 7 as a built-in [`StudySpec`] over the zoo source: slack and edge,
+/// normalized to BERT.
+pub fn study_fig7() -> StudySpec {
+    StudySpec {
+        name: "algorithmic".into(),
+        description: "Fig 7 — algorithmic slack (SL*B) and edge \
+                      ((H+SL)/TP), normalized to BERT"
+            .into(),
+        source: Source::Zoo,
+        columns: vec![
+            "name".into(),
+            "year".into(),
+            "batch".into(),
+            "tp".into(),
+        ],
+        metrics: vec![
+            MetricSpec::field("slack_norm"),
+            MetricSpec::field("edge_norm"),
+        ],
+        sinks: vec![SinkSpec::Table { title: String::new(), limit: 50 }],
+        ..StudySpec::default()
+    }
+}
+
+/// Fig 9b as a built-in [`StudySpec`]: the TP-requirement scaling `p/s`
+/// for every model larger than the Megatron-BERT anchor.
+pub fn study_fig9b() -> StudySpec {
+    StudySpec {
+        name: "tp_requirement".into(),
+        description: "Fig 9b — TP scaling (p/s) since Mega.-LM_BERT \
+                      (base TP = 8)"
+            .into(),
+        source: Source::Zoo,
+        filters: vec!["size_b > 3.9".into()],
+        columns: vec!["name".into(), "size_b".into()],
+        metrics: vec![
+            MetricSpec::field("p"),
+            MetricSpec::field("s"),
+            MetricSpec::field("tp_scale"),
+            MetricSpec::named("required_tp", "8 * tp_scale"),
+        ],
+        sinks: vec![SinkSpec::Table { title: String::new(), limit: 50 }],
+        ..StudySpec::default()
+    }
+}
 
 /// One Fig 7 data point.
 #[derive(Debug, Clone)]

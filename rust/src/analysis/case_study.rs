@@ -3,10 +3,16 @@
 //! H=64K, B=1, SL=4K, TP=128, flop-vs-bw = 4× (§4.3.7).
 
 use crate::config;
-use crate::graph::GraphOptions;
 use crate::hw::{DeviceSpec, Evolution};
+use crate::parallelism::TopologyKind;
 use crate::sim::{OverlapModel, SimReport};
-use crate::sweep::{self, HwPoint, Scenario, ScenarioGrid};
+use crate::study::{HwAxisSpec, MetricSpec, StudySpec};
+use crate::sweep::{self, HeadsPolicy};
+
+/// Node size of the pessimistic scenario's tiered fabric: TP = 128 fills
+/// one node exactly, so the TP collectives keep the fast fabric while the
+/// DP group (extent `tp·dp` = 512) crosses the ~8×-slower NIC tier [53].
+pub const PESSIMISTIC_NODE_SIZE: u64 = 128;
 
 /// One Fig 14 scenario's breakdown (fractions of iteration time).
 #[derive(Debug, Clone)]
@@ -44,30 +50,85 @@ fn breakdown(name: &str, r: SimReport) -> Fig14Scenario {
     }
 }
 
+/// Fig 14 as a built-in [`StudySpec`]: one model config (H=64K, B=1,
+/// SL=4K, TP=128, DP=4) across an explicit three-point hardware axis,
+/// with the breakdown fractions as derived metric expressions.
+pub fn study() -> StudySpec {
+    let cfg = config::fig14_config();
+    let mut s = StudySpec {
+        name: "case_study".into(),
+        description: "Fig 14 — end-to-end case study (H=64K, B=1, SL=4K, \
+                      TP=128, DP=4) across three hardware scenarios"
+            .into(),
+        ..StudySpec::default()
+    };
+    s.axes.hidden = vec![cfg.hidden];
+    s.axes.seq_len = vec![cfg.seq_len];
+    s.axes.batch = vec![cfg.batch];
+    s.axes.layers = vec![cfg.layers];
+    s.axes.tp = vec![cfg.tp()];
+    s.axes.dp = vec![cfg.dp()];
+    s.axes.heads = HeadsPolicy::FixedHeadDim;
+    let ev4 = Evolution::flop_vs_bw_4x();
+    s.axes.hardware = vec![
+        HwAxisSpec {
+            label: Some("today (1x)".into()),
+            evolution: Evolution::none(),
+            topology: TopologyKind::SingleTier,
+            interference: 1.0,
+        },
+        HwAxisSpec {
+            label: Some("flop-vs-bw 4x".into()),
+            evolution: ev4,
+            topology: TopologyKind::SingleTier,
+            interference: 1.0,
+        },
+        HwAxisSpec {
+            label: Some("4x + inter-node/interference".into()),
+            evolution: ev4,
+            topology: TopologyKind::tiered_8x(PESSIMISTIC_NODE_SIZE),
+            interference: OverlapModel::pessimistic().interference_factor,
+        },
+    ];
+    s.columns = vec!["scenario".into(), "topology".into()];
+    s.metrics = vec![
+        MetricSpec::named("compute_frac", "compute_time / makespan"),
+        MetricSpec::named(
+            "serialized_frac",
+            "min(serialized_comm, exposed_comm) / makespan",
+        ),
+        MetricSpec::named(
+            "dp_exposed_frac",
+            "max(exposed_comm - serialized_comm, 0) / makespan",
+        ),
+        MetricSpec::named(
+            "dp_hidden_frac",
+            "max(overlapped_comm - max(exposed_comm - serialized_comm, 0), \
+             0) / makespan",
+        ),
+    ];
+    s
+}
+
 /// The three scenarios of Fig 14:
 /// 1. today's hardware (1×), intra-node DP links;
 /// 2. flop-vs-bw 4× (the paper's headline case);
-/// 3. 4× plus inter-node DP links and interference (§4.3.7's ~8× [53]).
+/// 3. 4× plus inter-node DP links and interference (§4.3.7's ~8× [53]) —
+///    the NIC tier priced by the topology ([`PESSIMISTIC_NODE_SIZE`]),
+///    interference by the overlap model.
 ///
-/// One model config across a three-point hardware axis — a single engine
-/// sweep.
+/// Hardware axis declared by [`study`]; one engine sweep.
 pub fn fig14(device: &DeviceSpec) -> Vec<Fig14Scenario> {
-    let cfg = config::fig14_config();
-    let ev4 = Evolution::flop_vs_bw_4x();
-    let hardware = vec![
-        HwPoint::today(device),
-        HwPoint::evolved(device, ev4),
-        HwPoint::evolved(device, ev4).with_overlap(OverlapModel::pessimistic()),
-    ];
-    let names = ["today (1x)", "flop-vs-bw 4x", "4x + inter-node/interference"];
-    let points = (0..hardware.len() as u32)
-        .map(|hw| Scenario { cfg, opts: GraphOptions::default(), hw })
-        .collect();
-    let grid = ScenarioGrid::from_parts(hardware, points);
+    let resolved = study()
+        .resolve(device)
+        .expect("built-in fig14 study must resolve");
+    let names: Vec<String> =
+        resolved.hardware.iter().map(|h| h.label.clone()).collect();
+    let grid = resolved.full_grid();
     sweep::run(&grid)
         .iter()
         .zip(names)
-        .map(|(m, name)| breakdown(name, m.to_report()))
+        .map(|(m, name)| breakdown(&name, m.to_report()))
         .collect()
 }
 

@@ -2,9 +2,10 @@
 //! evolution: compute FLOPs scaling 2× and 4× faster than network
 //! bandwidth (§4.3.6).
 
-use crate::graph::GraphOptions;
 use crate::hw::{DeviceSpec, Evolution};
-use crate::sweep::{self, HwPoint, Scenario, ScenarioGrid};
+use crate::parallelism::TopologyKind;
+use crate::study::{HwAxisSpec, SeriesSpec, StudySpec};
+use crate::sweep::{self, HeadsPolicy};
 
 use super::overlapped::{self, Fig11Point};
 use super::serialized::{self, Fig10Point};
@@ -40,19 +41,45 @@ pub fn paper_scenarios() -> Vec<Evolution> {
     ]
 }
 
-/// Min/max comm fraction across the highlighted Fig 10 configs for one
-/// scenario — the paper's "20-50% → 30-65% → 40-75%" progression.
-/// Routed through the sweep engine over the evolved hardware point.
-pub fn comm_fraction_band(device: &DeviceSpec, ev: Evolution) -> (f64, f64) {
-    let points = serialized::highlighted_points()
-        .iter()
-        .map(|&(_, h, sl, tp)| Scenario {
-            cfg: serialized::point_config(h, sl, tp),
-            opts: GraphOptions::default(),
-            hw: 0,
+/// The highlighted (model @ required TP) configs under one hardware
+/// evolution, as a [`StudySpec`]: three labeled series, each pinning its
+/// own (H, SL, TP) — the irregular-grid case the series axis exists for.
+pub fn band_study(ev: Evolution) -> StudySpec {
+    let mut s = StudySpec {
+        name: "evolution_band".into(),
+        description: "comm-fraction band over the highlighted Fig 10 \
+                      configs under one flop-vs-bw scenario"
+            .into(),
+        ..StudySpec::default()
+    };
+    s.axes.heads = HeadsPolicy::FixedHeadDim;
+    s.axes.hardware = vec![HwAxisSpec {
+        label: None,
+        evolution: ev,
+        topology: TopologyKind::SingleTier,
+        interference: 1.0,
+    }];
+    s.axes.series = serialized::highlighted_points()
+        .into_iter()
+        .map(|(name, h, sl, tp)| SeriesSpec {
+            label: Some(name.to_string()),
+            hidden: Some(vec![h]),
+            seq_len: Some(vec![sl]),
+            tp: Some(vec![tp]),
+            ..SeriesSpec::default()
         })
         .collect();
-    let grid = ScenarioGrid::from_parts(vec![HwPoint::evolved(device, ev)], points);
+    s
+}
+
+/// Min/max comm fraction across the highlighted Fig 10 configs for one
+/// scenario — the paper's "20-50% → 30-65% → 40-75%" progression.
+/// Grid declared by [`band_study`], evaluated by the sweep engine.
+pub fn comm_fraction_band(device: &DeviceSpec, ev: Evolution) -> (f64, f64) {
+    let grid = band_study(ev)
+        .resolve(device)
+        .expect("built-in band study must resolve")
+        .full_grid();
     let mut lo = f64::MAX;
     let mut hi: f64 = 0.0;
     for m in sweep::run(&grid) {

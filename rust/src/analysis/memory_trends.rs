@@ -4,6 +4,27 @@
 
 use crate::model::memory::device_capacity_gb;
 use crate::model::zoo;
+use crate::study::{MetricSpec, SinkSpec, Source, StudySpec};
+
+/// Fig 6 as a built-in [`StudySpec`] over the zoo source: demand vs
+/// capacity trends per model, chronological.
+pub fn study() -> StudySpec {
+    StudySpec {
+        name: "memory_trends".into(),
+        description: "Fig 6 — model memory demand (H*SL, normalized) vs \
+                      device capacity trends"
+            .into(),
+        source: Source::Zoo,
+        columns: vec!["name".into(), "year".into()],
+        metrics: vec![
+            MetricSpec::field("demand_norm"),
+            MetricSpec::field("capacity_norm"),
+            MetricSpec::field("gap"),
+        ],
+        sinks: vec![SinkSpec::Table { title: String::new(), limit: 50 }],
+        ..StudySpec::default()
+    }
+}
 
 #[derive(Debug, Clone)]
 pub struct Fig6Row {

@@ -6,7 +6,8 @@ use crate::graph::GraphOptions;
 use crate::hw::DeviceSpec;
 use crate::model::{ModelConfig, Precision};
 use crate::sim::{AnalyticCost, CostProvider};
-use crate::sweep::{self, HwPoint, PointEvaluator, PointMetrics, Scenario, ScenarioGrid};
+use crate::study::{MetricSpec, SinkSpec, StudySpec};
+use crate::sweep::{self, HeadsPolicy, PointEvaluator, PointMetrics, ScenarioGrid};
 
 /// One Fig 11 point.
 #[derive(Debug, Clone)]
@@ -61,20 +62,54 @@ pub fn simulate_point(device: &DeviceSpec, hidden: u64, slb: u64) -> Fig11Point 
     point_with(&cfg, &cost)
 }
 
+/// Fig 11 as a built-in [`StudySpec`]: H × SL·B at TP = 16 / DP = 4, the
+/// overlapped-comm-vs-backward-compute percentage as a derived metric.
+pub fn study() -> StudySpec {
+    let mut s = StudySpec {
+        name: "overlapped".into(),
+        description: "Fig 11 — overlapped (DP) comm as % of backward \
+                      compute vs SL*B per hidden size"
+            .into(),
+        ..StudySpec::default()
+    };
+    s.axes.hidden = config::fig11_hidden_series();
+    s.axes.seq_len = config::fig11_slb_sweep();
+    s.axes.tp = vec![16];
+    s.axes.dp = vec![4];
+    s.axes.heads = HeadsPolicy::FixedHeadDim;
+    s.metrics = vec![
+        MetricSpec::named(
+            "pct_of_compute",
+            "100 * overlapped_comm / max(bwd_compute, 1e-12)",
+        ),
+        MetricSpec::named(
+            "exposed",
+            "exposed_comm > 1e-9 && overlapped_comm > 0",
+        ),
+    ];
+    s.sinks = vec![
+        SinkSpec::Table { title: String::new(), limit: 50 },
+        SinkSpec::Chart {
+            title: "overlapped comm % vs SL*B (log2)".into(),
+            x: "seq_len".into(),
+            y: "pct_of_compute".into(),
+            series: Some("hidden".into()),
+            log_x: true,
+            width: 64,
+            height: 16,
+        },
+    ];
+    s
+}
+
 /// The Fig 11 scenario grid on a device: H-major, SL·B-minor (shared with
-/// Fig 13's evolved variants and the determinism tests).
+/// Fig 13's evolved variants and the determinism tests). Resolved from
+/// the declarative [`study`] spec.
 pub fn fig11_grid(device: &DeviceSpec) -> ScenarioGrid {
-    let mut points = Vec::new();
-    for &h in &config::fig11_hidden_series() {
-        for &slb in &config::fig11_slb_sweep() {
-            points.push(Scenario {
-                cfg: point_config(h, slb),
-                opts: GraphOptions::default(),
-                hw: 0,
-            });
-        }
-    }
-    ScenarioGrid::from_parts(vec![HwPoint::today(device)], points)
+    study()
+        .resolve(device)
+        .expect("built-in fig11 study must resolve")
+        .full_grid()
 }
 
 /// Full Fig 11 dataset (parallel sweep).

@@ -6,7 +6,8 @@ use crate::graph::GraphOptions;
 use crate::hw::DeviceSpec;
 use crate::model::{ModelConfig, Precision};
 use crate::sim::{AnalyticCost, CostProvider, SimReport};
-use crate::sweep::{self, HwPoint, PointEvaluator, Scenario, ScenarioGrid};
+use crate::study::{MetricSpec, SeriesSpec, SinkSpec, StudySpec};
+use crate::sweep::{self, HeadsPolicy, PointEvaluator, ScenarioGrid};
 
 /// One Fig 10 point: a (series, TP) cell.
 #[derive(Debug, Clone)]
@@ -55,20 +56,51 @@ pub fn simulate_point_with(cfg: &ModelConfig, cost: &dyn CostProvider) -> SimRep
     PointEvaluator::new().eval_report(cfg, GraphOptions::default(), cost)
 }
 
+/// Fig 10 as a built-in [`StudySpec`]: the named (H, SL) series × the TP
+/// sweep, paper head-count policy, comm-fraction metric, chart over TP.
+pub fn study() -> StudySpec {
+    let mut s = StudySpec {
+        name: "serialized".into(),
+        description: "Fig 10 — fraction of serialized (TP) comm time per \
+                      (H, SL) series x TP degree"
+            .into(),
+        ..StudySpec::default()
+    };
+    s.axes.tp = config::fig10_tp_sweep();
+    s.axes.heads = HeadsPolicy::FixedHeadDim;
+    s.axes.series = config::fig10_series()
+        .into_iter()
+        .map(|(label, h, sl)| SeriesSpec {
+            label: Some(label.to_string()),
+            hidden: Some(vec![h]),
+            seq_len: Some(vec![sl]),
+            ..SeriesSpec::default()
+        })
+        .collect();
+    s.metrics = vec![MetricSpec::field("comm_fraction")];
+    s.sinks = vec![
+        SinkSpec::Table { title: String::new(), limit: 50 },
+        SinkSpec::Chart {
+            title: "serialized comm fraction vs TP (log2)".into(),
+            x: "tp".into(),
+            y: "comm_fraction".into(),
+            series: Some("series".into()),
+            log_x: true,
+            width: 64,
+            height: 16,
+        },
+    ];
+    s
+}
+
 /// The Fig 10 scenario grid on a device: every (series, TP) cell, in
 /// series-major, TP-minor order (shared with the determinism tests).
+/// Resolved from the declarative [`study`] spec.
 pub fn fig10_grid(device: &DeviceSpec) -> ScenarioGrid {
-    let mut points = Vec::new();
-    for (_, h, sl) in config::fig10_series() {
-        for &tp in &config::fig10_tp_sweep() {
-            points.push(Scenario {
-                cfg: point_config(h, sl, tp),
-                opts: GraphOptions::default(),
-                hw: 0,
-            });
-        }
-    }
-    ScenarioGrid::from_parts(vec![HwPoint::today(device)], points)
+    study()
+        .resolve(device)
+        .expect("built-in fig10 study must resolve")
+        .full_grid()
 }
 
 /// Generate the full Fig 10 dataset on a device (parallel sweep).

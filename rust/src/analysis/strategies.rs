@@ -19,7 +19,8 @@
 
 use crate::hw::{DeviceSpec, Evolution};
 use crate::parallelism::{ParallelismSpec, TopologyKind};
-use crate::sweep::{self, GridBuilder, PointMetrics, ScenarioGrid};
+use crate::study::{AggOp, AggSpec, StudySpec};
+use crate::sweep::{self, PointMetrics, ScenarioGrid};
 
 /// Microbatches in flight for every pipelined factorization (a common
 /// 1F1B depth; the bubble fraction is `(pp−1)/(MICROBATCHES+pp−1)`).
@@ -128,39 +129,74 @@ pub fn archetype(spec: &ParallelismSpec) -> &'static str {
     }
 }
 
-/// The comparison grid: 3 hardware evolutions × the model series × every
-/// factorization of `world`, on a tiered `NODE_SIZE`-per-node fabric.
-/// Well over 1k points for `world = 64`. The stack is `world` layers deep,
-/// so every power-of-two `pp ≤ world` divides it and stages stay uniform.
-///
-/// Assembled through [`GridBuilder`] — its `world_size` filter and
-/// deterministic divisibility skipping enumerate exactly the
-/// [`factorizations`] set, with one shared copy of the heads-rounding and
-/// misfit rules.
-pub fn strategy_grid(device: &DeviceSpec, world: u64) -> ScenarioGrid {
+/// The strategy comparison as a built-in [`StudySpec`]: every
+/// power-of-two factorization of `world` across the model series and
+/// three hardware evolutions on a tiered fabric, grouped by strategy
+/// archetype with comm/bubble/throughput aggregations.
+pub fn study(world: u64) -> StudySpec {
     assert!(
         world.is_power_of_two(),
         "strategy comparison factors power-of-two worlds, got {world}"
     );
     let degrees: Vec<u64> =
         (0..=world.trailing_zeros()).map(|e| 1u64 << e).collect();
-    GridBuilder::new(device)
-        .evolutions(&[
-            Evolution::none(),
-            Evolution::flop_vs_bw_2x(),
-            Evolution::flop_vs_bw_4x(),
-        ])
-        .topologies(&[TopologyKind::tiered_8x(NODE_SIZE)])
-        .hidden(&hidden_series())
-        .seq_len(&seq_len_series())
-        .layers(&[world])
-        .tp(&degrees)
-        .pp(&degrees)
-        .dp(&degrees)
-        .microbatches(&[MICROBATCHES])
-        .seq_par(&[false, true])
-        .world_size(world)
-        .build()
+    let mut s = StudySpec {
+        name: "strategies".into(),
+        description: "TP vs PP vs DP vs seq-par factorizations of one \
+                      device budget over a tiered fabric"
+            .into(),
+        ..StudySpec::default()
+    };
+    s.axes.hidden = hidden_series();
+    s.axes.seq_len = seq_len_series();
+    s.axes.layers = vec![world];
+    s.axes.tp = degrees.clone();
+    s.axes.pp = degrees.clone();
+    s.axes.dp = degrees;
+    s.axes.microbatches = vec![MICROBATCHES];
+    s.axes.seq_par = vec![false, true];
+    s.axes.world = Some(world);
+    s.axes.evolutions = vec![
+        Evolution::none(),
+        Evolution::flop_vs_bw_2x(),
+        Evolution::flop_vs_bw_4x(),
+    ];
+    s.axes.topologies = vec![TopologyKind::tiered_8x(NODE_SIZE)];
+    s.group_by = vec!["archetype".into()];
+    s.aggregate = vec![
+        AggSpec {
+            metric: "comm_fraction".into(),
+            ops: vec![AggOp::Min, AggOp::Mean, AggOp::Max],
+            args: vec![],
+        },
+        AggSpec {
+            metric: "bubble_fraction".into(),
+            ops: vec![AggOp::Mean],
+            args: vec![],
+        },
+        AggSpec {
+            metric: "time_per_sample".into(),
+            ops: vec![AggOp::Mean, AggOp::ArgMin],
+            args: vec!["tp".into(), "pp".into(), "dp".into(), "seq_par".into()],
+        },
+    ];
+    s
+}
+
+/// The comparison grid: 3 hardware evolutions × the model series × every
+/// factorization of `world`, on a tiered `NODE_SIZE`-per-node fabric.
+/// Well over 1k points for `world = 64`. The stack is `world` layers deep,
+/// so every power-of-two `pp ≤ world` divides it and stages stay uniform.
+///
+/// Declared by [`study`] — the spec's `world` filter and the grid
+/// builder's deterministic divisibility skipping enumerate exactly the
+/// [`factorizations`] set, with one shared copy of the heads-rounding and
+/// misfit rules.
+pub fn strategy_grid(device: &DeviceSpec, world: u64) -> ScenarioGrid {
+    study(world)
+        .resolve(device)
+        .expect("built-in strategies study must resolve")
+        .full_grid()
 }
 
 /// Run the comparison: every cell evaluated through the parallel sweep

@@ -30,6 +30,11 @@
 //!   evaluated across threads with per-worker graph-template caches,
 //!   memoized operator costs, and reusable simulation arenas — the
 //!   substrate for hundred-to-ten-thousand-point projection grids.
+//! * [`study`] — the declarative scenario-query surface: a serializable
+//!   [`study::StudySpec`] names the axes, filters, metrics (including
+//!   derived expressions), group-by aggregations, and sinks of a study;
+//!   execution streams chunk-by-chunk off the sweep engine, and every
+//!   paper artifact is a built-in spec ([`study::builtin`]).
 //! * [`opmodel`] — the paper's operator-level runtime models: fit on a
 //!   profiled baseline, project hundreds of configurations (§4.2.2).
 //! * [`profiler`] — ROI extraction: measures ground-truth operator times by
@@ -56,6 +61,7 @@ pub mod profiler;
 pub mod report;
 pub mod runtime;
 pub mod sim;
+pub mod study;
 pub mod sweep;
 pub mod util;
 
@@ -70,6 +76,7 @@ pub enum Error {
     Config(String),
     Sim(String),
     OpModel(String),
+    Study(String),
 }
 
 impl std::fmt::Display for Error {
@@ -82,6 +89,7 @@ impl std::fmt::Display for Error {
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Sim(m) => write!(f, "simulation error: {m}"),
             Error::OpModel(m) => write!(f, "opmodel error: {m}"),
+            Error::Study(m) => write!(f, "study error: {m}"),
         }
     }
 }

@@ -1,8 +1,11 @@
 //! `commscale` CLI — regenerates every table and figure of the paper and
-//! drives the profiler and the end-to-end DP trainer.
+//! drives the declarative study runner, the profiler, and the end-to-end
+//! DP trainer.
 //!
 //! ```text
 //! commscale table2|table3|fig6|fig7|fig9b|fig10|fig11|fig12|fig13|fig14
+//! commscale study <spec.json|name> [--explain] [--csv PATH]
+//! commscale study --list
 //! commscale fig15 [--measure] [--profile PATH]
 //! commscale sweep [--tp 1,8] [--pp 1,4] [--seq-par 0,1] ... [--csv PATH]
 //! commscale strategies [--world 64]                  # TP vs PP vs DP vs SP
@@ -18,20 +21,18 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use commscale::analysis::{
-    accuracy, algorithmic, case_study, evolution, memory_trends, overlapped,
-    serialized, strategies,
-};
+use commscale::analysis::{accuracy, strategies};
 use commscale::config::SweepGrid;
 use commscale::coordinator::Trainer;
 use commscale::hw::{catalog, DeviceSpec, Evolution};
-use commscale::model::{zoo, Precision};
+use commscale::model::Precision;
 use commscale::opmodel::SpeedupAccounting;
 use commscale::parallelism::TopologyKind;
 use commscale::profiler::{self, ProfileDb};
-use commscale::report::{ascii_bar_chart, ascii_line_chart, fmt_secs, Series, Table};
+use commscale::report::{fmt_secs, Table};
 use commscale::runtime::Runtime;
 use commscale::sim::AnalyticCost;
+use commscale::study::{self, builtin, RowSink, RunOptions, StudySpec};
 use commscale::sweep::{self, GridBuilder};
 use commscale::util::cli::Args;
 
@@ -45,16 +46,14 @@ fn main() -> Result<()> {
     let device = find_device(&args)?;
 
     match cmd {
-        "table2" => table2(&args),
-        "table3" => table3(&args),
-        "fig6" => fig6(&args),
-        "fig7" => fig7(&args),
-        "fig9b" => fig9b(&args),
-        "fig10" => fig10(&args, &device),
-        "fig11" => fig11(&args, &device),
-        "fig12" => fig12(&args, &device),
-        "fig13" => fig13(&args, &device),
-        "fig14" => fig14(&args, &device),
+        // every paper artifact routes through its built-in Study
+        // definition; one generic dispatch replaces the per-figure arms
+        "table2" | "table3" | "fig6" | "fig7" | "fig9b" | "fig10" | "fig11"
+        | "fig12" | "fig13" | "fig14" => {
+            builtin::render_artifact(cmd, &device, csv(&args))?;
+            Ok(())
+        }
+        "study" => study_cmd(&args, &device),
         "fig15" => fig15(&args),
         "sweep" => sweep_cmd(&args, &device),
         "strategies" => strategies_cmd(&args, &device),
@@ -72,12 +71,9 @@ fn main() -> Result<()> {
             Ok(())
         }
         "all" => {
-            for c in [
-                "table2", "table3", "fig6", "fig7", "fig9b", "fig10", "fig11",
-                "fig12", "fig13", "fig14",
-            ] {
+            for c in builtin::artifact_names() {
                 println!("\n================ {c} ================");
-                run_sub(c, &args, &device)?;
+                builtin::render_artifact(c, &device, csv(&args))?;
             }
             Ok(())
         }
@@ -89,10 +85,95 @@ fn main() -> Result<()> {
     }
 }
 
+/// `commscale study` — the declarative scenario-query surface: run a
+/// spec file or a built-in study through the streaming pipeline.
+fn study_cmd(args: &Args, device: &DeviceSpec) -> Result<()> {
+    if args.has("list") {
+        println!("built-in studies (run with `commscale study <name>`):\n");
+        for b in builtin::all() {
+            println!(
+                "  {:<24} {:<8} {}",
+                b.name,
+                b.artifact.unwrap_or("-"),
+                b.description
+            );
+        }
+        println!(
+            "\nuser-defined: commscale study path/to/spec.json \
+             (see examples/studies/)"
+        );
+        return Ok(());
+    }
+    let Some(target) = args.positional.get(1) else {
+        bail!(
+            "usage: commscale study <spec.json|builtin-name> [--explain] \
+             [--csv PATH] [--threads N] [--chunk N]; list built-ins with \
+             `commscale study --list`"
+        );
+    };
+    let spec: StudySpec = if target.ends_with(".json")
+        || Path::new(target).exists()
+    {
+        StudySpec::parse_file(Path::new(target))?
+    } else if let Some(b) = builtin::find(target) {
+        b.spec()
+    } else {
+        bail!(
+            "unknown study {target:?}: not a spec file on disk and not a \
+             built-in (see `commscale study --list`)"
+        );
+    };
+    let resolved = spec.resolve(device)?;
+    if args.has("explain") {
+        print!("{}", resolved.explain());
+        return Ok(());
+    }
+    eprint!("{}", resolved.explain());
+    let opts = RunOptions {
+        threads: args.get_usize("threads", 0),
+        chunk: args.get_usize("chunk", 0),
+    };
+    let mut sinks = study::build_sinks(&spec, csv(args));
+    let outcome = {
+        let mut refs: Vec<&mut dyn RowSink> =
+            sinks.iter_mut().map(|b| &mut **b).collect();
+        study::run_study(&resolved, opts, &mut refs)?
+    };
+    for r in &outcome.renders {
+        print!("{r}");
+    }
+    eprintln!(
+        "study {:?}: {} points evaluated, {} rows matched{}",
+        spec.name,
+        outcome.points_evaluated,
+        outcome.rows_matched,
+        if outcome.groups_emitted > 0 {
+            format!(", {} groups emitted", outcome.groups_emitted)
+        } else {
+            String::new()
+        }
+    );
+    Ok(())
+}
+
 const HELP: &str = "\
 commscale — Comp-vs.-Comm scaling analysis (Pati et al., 2023 reproduction)
 
-paper artifacts:
+declarative studies (the one scenario-query surface):
+  study <spec.json>      run a user-defined study: axes (model x
+                         parallelism x evolution x topology), filters,
+                         metrics (incl. derived expressions), group-by
+                         aggregation, and csv/jsonl/table/chart sinks —
+                         streamed chunk-by-chunk, so 100k+-point grids
+                         never materialize (see examples/studies/)
+  study <name>           run a built-in study by name (serialized,
+                         overlapped, strategies, ...)
+  study --list           list every built-in study
+  study ... --explain    print the resolved axes and point count only
+  study ... --csv PATH   append a streaming CSV sink
+  study ... --threads N --chunk N
+
+paper artifacts (each backed by a built-in study definition):
   table2            model-zoo hyperparameters
   table3            studied parameter grid
   fig6              model memory demand vs device capacity trends
@@ -107,7 +188,7 @@ paper artifacts:
   speedup           profiling-cost reduction accounting (the 2100x claim)
   all               every projection figure/table in sequence
 
-scenario studies (beyond the paper):
+raw sweeps (flag-driven; `study` is the richer surface):
   sweep             stream an arbitrary scenario grid as CSV (stdout or --csv)
     --hidden LIST --seq-len LIST --batch LIST --layers LIST
     --tp LIST --pp LIST --microbatches LIST --seq-par 0,1 --dp LIST
@@ -128,22 +209,6 @@ common options:
   --artifacts DIR                       AOT artifacts dir (default artifacts/)
 ";
 
-fn run_sub(cmd: &str, args: &Args, device: &DeviceSpec) -> Result<()> {
-    match cmd {
-        "table2" => table2(args),
-        "table3" => table3(args),
-        "fig6" => fig6(args),
-        "fig7" => fig7(args),
-        "fig9b" => fig9b(args),
-        "fig10" => fig10(args, device),
-        "fig11" => fig11(args, device),
-        "fig12" => fig12(args, device),
-        "fig13" => fig13(args, device),
-        "fig14" => fig14(args, device),
-        _ => unreachable!(),
-    }
-}
-
 fn find_device(args: &Args) -> Result<DeviceSpec> {
     let name = args.get_or("device", "mi210");
     catalog::find_device(name)
@@ -158,311 +223,6 @@ fn open_runtime(args: &Args) -> Result<Runtime> {
 
 fn csv(args: &Args) -> Option<&str> {
     args.get("csv")
-}
-
-// ---------------------------------------------------------------------------
-// tables
-// ---------------------------------------------------------------------------
-
-fn table2(args: &Args) -> Result<()> {
-    let mut t = Table::new(
-        "Table 2 — NLP model hyperparameters",
-        &["model", "year", "layers", "H", "heads", "size(B)", "type", "SL", "FC dim"],
-    );
-    for e in zoo::zoo() {
-        if e.futuristic {
-            continue;
-        }
-        t.row(vec![
-            e.name.to_string(),
-            e.year.to_string(),
-            e.layers.to_string(),
-            e.hidden.to_string(),
-            e.heads.to_string(),
-            format!("{}", e.size_b),
-            e.kind.to_string(),
-            e.seq_len.to_string(),
-            e.fc_dim.to_string(),
-        ]);
-    }
-    print!("{}", t.render());
-    t.maybe_write_csv(csv(args))?;
-    Ok(())
-}
-
-fn table3(args: &Args) -> Result<()> {
-    let g = SweepGrid::default();
-    let mut t = Table::new(
-        "Table 3 — parameters and setup of models studied",
-        &["parameter", "values"],
-    );
-    let fmt = |v: &[u64]| {
-        v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(", ")
-    };
-    t.row(vec!["H".into(), fmt(&g.hidden)]);
-    t.row(vec!["B".into(), fmt(&g.batch)]);
-    t.row(vec!["SL".into(), fmt(&g.seq_len)]);
-    t.row(vec!["TP degree".into(), fmt(&g.tp)]);
-    t.row(vec!["DP degree".into(), "any".into()]);
-    t.row(vec![
-        "serialized projections".into(),
-        g.serialized_projection_count().to_string(),
-    ]);
-    print!("{}", t.render());
-    t.maybe_write_csv(csv(args))?;
-    Ok(())
-}
-
-// ---------------------------------------------------------------------------
-// figures
-// ---------------------------------------------------------------------------
-
-fn fig6(args: &Args) -> Result<()> {
-    let rows = memory_trends::fig6();
-    let mut t = Table::new(
-        "Fig 6 — model memory demand (H*SL, normalized) vs device capacity",
-        &["model", "year", "demand(xBERT)", "capacity(x2018)", "gap"],
-    );
-    for r in &rows {
-        t.row(vec![
-            r.name.clone(),
-            r.year.to_string(),
-            format!("{:.1}", r.demand_norm),
-            format!("{:.1}", r.capacity_norm),
-            format!("{:.1}", r.gap),
-        ]);
-    }
-    print!("{}", t.render());
-    let s = vec![
-        Series::new(
-            "demand (H*SL, xBERT)",
-            rows.iter().map(|r| (r.year as f64, r.demand_norm.log2())).collect(),
-        ),
-        Series::new(
-            "capacity (x2018)",
-            rows.iter().map(|r| (r.year as f64, r.capacity_norm.log2())).collect(),
-        ),
-    ];
-    println!("{}", ascii_line_chart("log2 scaling vs year", &s, 64, 14, false));
-    t.maybe_write_csv(csv(args))?;
-    Ok(())
-}
-
-fn fig7(args: &Args) -> Result<()> {
-    let rows = algorithmic::fig7();
-    let mut t = Table::new(
-        "Fig 7 — algorithmic slack (SL*B) and edge ((H+SL)/TP), normalized to BERT",
-        &["model", "year", "B", "TP", "slack_norm", "edge_norm"],
-    );
-    for r in &rows {
-        t.row(vec![
-            r.name.clone(),
-            r.year.to_string(),
-            r.batch.to_string(),
-            r.tp.to_string(),
-            format!("{:.3}", r.slack_norm),
-            format!("{:.3}", r.edge_norm),
-        ]);
-    }
-    print!("{}", t.render());
-    let s = vec![
-        Series::new(
-            "slack (SL*B)",
-            rows.iter().enumerate().map(|(i, r)| (i as f64, r.slack_norm)).collect(),
-        ),
-        Series::new(
-            "edge ((H+SL)/TP)",
-            rows.iter().enumerate().map(|(i, r)| (i as f64, r.edge_norm)).collect(),
-        ),
-    ];
-    println!(
-        "{}",
-        ascii_line_chart("normalized to BERT (x = model index)", &s, 64, 12, false)
-    );
-    t.maybe_write_csv(csv(args))?;
-    Ok(())
-}
-
-fn fig9b(args: &Args) -> Result<()> {
-    let rows = algorithmic::fig9b();
-    let mut t = Table::new(
-        "Fig 9b — TP scaling (p/s) since Mega.-LM_BERT (base TP = 8)",
-        &["model", "size(B)", "p", "s", "p/s", "required TP"],
-    );
-    for r in &rows {
-        t.row(vec![
-            r.name.clone(),
-            format!("{}", r.size_b),
-            format!("{:.1}", r.p),
-            format!("{:.2}", r.s),
-            format!("{:.1}", r.scale),
-            format!("{:.0}", 8.0 * r.scale),
-        ]);
-    }
-    print!("{}", t.render());
-    t.maybe_write_csv(csv(args))?;
-    Ok(())
-}
-
-fn fig10(args: &Args, device: &DeviceSpec) -> Result<()> {
-    let pts = serialized::fig10(device);
-    let mut t = Table::new(
-        &format!("Fig 10 — fraction of serialized comm time ({})", device.name),
-        &["series", "TP", "comm %"],
-    );
-    let mut series: Vec<Series> = Vec::new();
-    for (label, _, _) in commscale::config::fig10_series() {
-        let points: Vec<(f64, f64)> = pts
-            .iter()
-            .filter(|p| p.series == label)
-            .map(|p| (p.tp as f64, 100.0 * p.comm_fraction))
-            .collect();
-        series.push(Series::new(label, points));
-    }
-    for p in &pts {
-        t.row(vec![
-            p.series.clone(),
-            p.tp.to_string(),
-            format!("{:.1}", 100.0 * p.comm_fraction),
-        ]);
-    }
-    print!("{}", t.render());
-    println!(
-        "{}",
-        ascii_line_chart("serialized comm % vs TP (log2)", &series, 64, 16, true)
-    );
-    println!("highlighted (model @ its required TP):");
-    for (name, h, sl, tp) in serialized::highlighted_points() {
-        let f = serialized::simulate_point(device, h, sl, tp).comm_fraction();
-        println!("  {name:<12} H={h:<6} SL={sl:<5} TP={tp:<4} -> {:.1}%", 100.0 * f);
-    }
-    t.maybe_write_csv(csv(args))?;
-    Ok(())
-}
-
-fn fig11(args: &Args, device: &DeviceSpec) -> Result<()> {
-    let pts = overlapped::fig11(device);
-    let mut t = Table::new(
-        &format!("Fig 11 — overlapped comm as % of compute time ({})", device.name),
-        &["H", "SL*B", "comm % of compute", "exposed?"],
-    );
-    let mut series: Vec<Series> = Vec::new();
-    for &h in &commscale::config::fig11_hidden_series() {
-        let points: Vec<(f64, f64)> = pts
-            .iter()
-            .filter(|p| p.hidden == h)
-            .map(|p| (p.slb as f64, p.pct_of_compute))
-            .collect();
-        series.push(Series::new(&format!("H={}K", h / 1024), points));
-    }
-    for p in &pts {
-        t.row(vec![
-            p.hidden.to_string(),
-            p.slb.to_string(),
-            format!("{:.1}", p.pct_of_compute),
-            if p.exposed { "yes" } else { "no" }.to_string(),
-        ]);
-    }
-    print!("{}", t.render());
-    println!(
-        "{}",
-        ascii_line_chart("overlapped comm % vs SL*B (log2)", &series, 64, 16, true)
-    );
-    t.maybe_write_csv(csv(args))?;
-    Ok(())
-}
-
-fn fig12(args: &Args, device: &DeviceSpec) -> Result<()> {
-    let mut t = Table::new(
-        &format!(
-            "Fig 12 — serialized comm fraction under hardware evolution ({})",
-            device.name
-        ),
-        &["flop-vs-bw", "series", "TP", "comm %"],
-    );
-    for (ratio, pts) in evolution::fig12(device, &evolution::paper_scenarios()) {
-        for p in pts {
-            t.row(vec![
-                format!("{ratio:.0}x"),
-                p.series.clone(),
-                p.tp.to_string(),
-                format!("{:.1}", 100.0 * p.comm_fraction),
-            ]);
-        }
-    }
-    print!("{}", t.render());
-    println!("comm-fraction band over highlighted configs:");
-    for ev in evolution::paper_scenarios() {
-        let (lo, hi) = evolution::comm_fraction_band(device, ev);
-        println!(
-            "  {:>3.0}x flop-vs-bw: {:>4.1}% – {:>4.1}%",
-            ev.ratio(),
-            100.0 * lo,
-            100.0 * hi
-        );
-    }
-    t.maybe_write_csv(csv(args))?;
-    Ok(())
-}
-
-fn fig13(args: &Args, device: &DeviceSpec) -> Result<()> {
-    let mut t = Table::new(
-        &format!(
-            "Fig 13 — overlapped comm %% of compute under hardware evolution ({})",
-            device.name
-        ),
-        &["flop-vs-bw", "H", "SL*B", "comm % of compute"],
-    );
-    for (ratio, pts) in evolution::fig13(device, &evolution::paper_scenarios()) {
-        for p in pts {
-            t.row(vec![
-                format!("{ratio:.0}x"),
-                p.hidden.to_string(),
-                p.slb.to_string(),
-                format!("{:.1}", p.pct_of_compute),
-            ]);
-        }
-    }
-    print!("{}", t.render());
-    for ev in evolution::paper_scenarios() {
-        let n = evolution::fig13_exposed_count(device, ev);
-        println!(
-            "  {:>3.0}x: {n}/30 grid points have comm >= 100% of compute (exposed)",
-            ev.ratio()
-        );
-    }
-    t.maybe_write_csv(csv(args))?;
-    Ok(())
-}
-
-fn fig14(args: &Args, device: &DeviceSpec) -> Result<()> {
-    let scenarios = case_study::fig14(device);
-    let mut t = Table::new(
-        "Fig 14 — end-to-end case study (H=64K, B=1, SL=4K, TP=128, DP=4)",
-        &["scenario", "compute %", "TP comm %", "DP exposed %", "DP hidden %", "critical comm %"],
-    );
-    for s in &scenarios {
-        t.row(vec![
-            s.name.clone(),
-            format!("{:.1}", 100.0 * s.compute_frac),
-            format!("{:.1}", 100.0 * s.serialized_frac),
-            format!("{:.1}", 100.0 * s.dp_exposed_frac),
-            format!("{:.1}", 100.0 * s.dp_hidden_frac),
-            format!("{:.1}", 100.0 * s.critical_comm_frac()),
-        ]);
-    }
-    print!("{}", t.render());
-    for s in &scenarios {
-        let bars = vec![
-            ("compute".to_string(), s.compute_frac),
-            ("TP comm (serialized)".to_string(), s.serialized_frac),
-            ("DP comm exposed".to_string(), s.dp_exposed_frac),
-            ("DP comm hidden".to_string(), s.dp_hidden_frac),
-        ];
-        println!("{}", ascii_bar_chart(&s.name, &bars, 48));
-    }
-    t.maybe_write_csv(csv(args))?;
-    Ok(())
 }
 
 fn fig15(args: &Args) -> Result<()> {

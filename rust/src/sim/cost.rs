@@ -20,13 +20,14 @@ pub trait CostProvider {
 }
 
 /// Modeling of DP-comm/compute co-execution effects (§4.3.7).
+///
+/// Wire speed is **not** modeled here: slower inter-node DP links (the
+/// paper's ~8× [53]) are priced by the [`NetworkTopology`] tier the DP
+/// group lands on. This model carries only the co-execution effect a
+/// tier cannot express — compute/comm interference on shared
+/// accelerator resources while a collective is overlapped.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct OverlapModel {
-    /// Multiplier on overlappable-comm time: slower inter-node links for
-    /// DP traffic (the paper quotes ~8× [53] vs intra-node). With a tiered
-    /// [`NetworkTopology`] the tier already prices the slower wire — keep
-    /// this at 1.0 there, or the penalty is applied twice.
-    pub internode_factor: f64,
     /// Additional slowdown from compute/comm interference on shared
     /// accelerator resources when overlapped.
     pub interference_factor: f64,
@@ -34,19 +35,24 @@ pub struct OverlapModel {
 
 impl Default for OverlapModel {
     fn default() -> Self {
-        // the paper's baseline optimistically uses intra-node links (§4.3.2)
-        OverlapModel { internode_factor: 1.0, interference_factor: 1.0 }
+        OverlapModel { interference_factor: 1.0 }
     }
 }
 
 impl OverlapModel {
-    /// The paper's Fig 14 third scenario: inter-node + interference.
+    pub fn interference(factor: f64) -> OverlapModel {
+        OverlapModel { interference_factor: factor }
+    }
+
+    /// The paper's Fig 14 third-scenario interference figure (§4.3.7);
+    /// pair it with an inter-node [`NetworkTopology`] tier for the full
+    /// pessimistic scenario.
     pub fn pessimistic() -> OverlapModel {
-        OverlapModel { internode_factor: 8.0, interference_factor: 1.25 }
+        OverlapModel { interference_factor: 1.25 }
     }
 
     pub fn total(&self) -> f64 {
-        self.internode_factor * self.interference_factor
+        self.interference_factor
     }
 }
 
@@ -244,7 +250,28 @@ mod tests {
             slow.comm_time(&ser_ar(bytes))
         );
         let r = slow.comm_time(&dp_ar(bytes)) / base.comm_time(&dp_ar(bytes));
-        assert!((r - 10.0).abs() < 1e-6, "8 × 1.25 = {r}");
+        assert!((r - 1.25).abs() < 1e-6, "interference alone = {r}");
+    }
+
+    #[test]
+    fn interference_stacks_on_the_internode_tier() {
+        // the folded pessimistic scenario: DP over the NIC tier, with
+        // interference multiplied on top — the wire penalty lives in the
+        // topology, the co-execution penalty in the overlap model.
+        let d = catalog::mi210();
+        let topo = TopologyKind::tiered_8x(8).realize(&d);
+        let tiered = cost().with_topology(topo);
+        let both = cost()
+            .with_topology(topo)
+            .with_overlap(OverlapModel::interference(1.25));
+        let bytes = 64 << 20;
+        let r = both.comm_time(&dp_ar(bytes)) / tiered.comm_time(&dp_ar(bytes));
+        assert!((r - 1.25).abs() < 1e-9, "interference on tiered = {r}");
+        // and the tier itself prices well beyond the old flat wire
+        assert!(
+            tiered.comm_time(&dp_ar(bytes))
+                > 5.0 * cost().comm_time(&dp_ar(bytes))
+        );
     }
 
     #[test]

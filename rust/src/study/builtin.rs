@@ -1,0 +1,596 @@
+//! Built-in studies: every paper artifact (`table2`–`fig14`) and the
+//! strategy comparison expressed as [`StudySpec`] definitions, plus the
+//! artifact renderers the CLI's per-figure commands print.
+//!
+//! The specs are the single source of truth for each artifact's scenario
+//! grid — the analysis modules resolve them (`serialized::fig10_grid` is
+//! `serialized::study().resolve(..).full_grid()`), the generic
+//! `commscale study <name>` runner executes them through the streaming
+//! pipeline, and [`render_artifact`] adds the figure-specific post-
+//! processing (highlighted rows, bar charts, band summaries) on top of
+//! the same data generators.
+
+use crate::analysis::{
+    algorithmic, case_study, evolution, memory_trends, overlapped, serialized,
+    strategies,
+};
+use crate::config::{self, SweepGrid};
+use crate::hw::DeviceSpec;
+use crate::model::zoo;
+use crate::report::{ascii_bar_chart, ascii_line_chart, Series, Table};
+use crate::{Error, Result};
+
+use super::spec::{SinkSpec, Source, StudySpec};
+
+/// One registry entry: a named spec constructor plus the paper-artifact
+/// alias it reproduces (if any).
+pub struct Builtin {
+    pub name: &'static str,
+    /// Paper artifact command this spec backs (`fig10`, `table2`, …).
+    pub artifact: Option<&'static str>,
+    pub description: &'static str,
+    spec_fn: fn() -> StudySpec,
+}
+
+impl Builtin {
+    pub fn spec(&self) -> StudySpec {
+        (self.spec_fn)()
+    }
+}
+
+fn table2_spec() -> StudySpec {
+    StudySpec {
+        name: "model_zoo".into(),
+        description: "Table 2 — NLP model hyperparameters (published \
+                      models only)"
+            .into(),
+        source: Source::Zoo,
+        filters: vec!["futuristic == 0".into()],
+        columns: vec![
+            "name".into(),
+            "year".into(),
+            "layers".into(),
+            "hidden".into(),
+            "heads".into(),
+            "size_b".into(),
+            "kind".into(),
+            "seq_len".into(),
+            "fc_dim".into(),
+        ],
+        ..StudySpec::default()
+    }
+}
+
+fn table3_spec() -> StudySpec {
+    StudySpec {
+        name: "parameter_grid".into(),
+        description: "Table 3 — parameters and setup of models studied"
+            .into(),
+        source: Source::Table3,
+        ..StudySpec::default()
+    }
+}
+
+fn fig12_spec() -> StudySpec {
+    let mut s = serialized::study();
+    s.name = "evolution_serialized".into();
+    s.description = "Fig 12 — serialized comm fraction under 1x/2x/4x \
+                     flop-vs-bw hardware evolution"
+        .into();
+    s.axes.evolutions = evolution::paper_scenarios();
+    // the inherited chart keys its lines on `series` only; with a 3-point
+    // evolution axis that would overlay all three scenarios on one line —
+    // keep the table, drop the chart (the fig12 renderer draws per-ratio)
+    s.sinks.retain(|k| matches!(k, SinkSpec::Table { .. }));
+    s
+}
+
+fn fig13_spec() -> StudySpec {
+    let mut s = overlapped::study();
+    s.name = "evolution_overlapped".into();
+    s.description = "Fig 13 — overlapped comm % of compute under 1x/2x/4x \
+                     flop-vs-bw hardware evolution"
+        .into();
+    s.axes.evolutions = evolution::paper_scenarios();
+    s.sinks.retain(|k| matches!(k, SinkSpec::Table { .. }));
+    s
+}
+
+fn strategies_spec() -> StudySpec {
+    strategies::study(64)
+}
+
+/// Every built-in study, in presentation order.
+pub fn all() -> Vec<Builtin> {
+    vec![
+        Builtin {
+            name: "model_zoo",
+            artifact: Some("table2"),
+            description: "Table 2 model-zoo hyperparameters",
+            spec_fn: table2_spec,
+        },
+        Builtin {
+            name: "parameter_grid",
+            artifact: Some("table3"),
+            description: "Table 3 studied parameter grid",
+            spec_fn: table3_spec,
+        },
+        Builtin {
+            name: "memory_trends",
+            artifact: Some("fig6"),
+            description: "Fig 6 memory demand vs capacity trends",
+            spec_fn: memory_trends::study,
+        },
+        Builtin {
+            name: "algorithmic",
+            artifact: Some("fig7"),
+            description: "Fig 7 algorithmic slack & edge vs BERT",
+            spec_fn: algorithmic::study_fig7,
+        },
+        Builtin {
+            name: "tp_requirement",
+            artifact: Some("fig9b"),
+            description: "Fig 9b required TP scaling per model",
+            spec_fn: algorithmic::study_fig9b,
+        },
+        Builtin {
+            name: "serialized",
+            artifact: Some("fig10"),
+            description: "Fig 10 serialized (TP) comm fraction grid",
+            spec_fn: serialized::study,
+        },
+        Builtin {
+            name: "overlapped",
+            artifact: Some("fig11"),
+            description: "Fig 11 overlapped (DP) comm vs compute grid",
+            spec_fn: overlapped::study,
+        },
+        Builtin {
+            name: "evolution_serialized",
+            artifact: Some("fig12"),
+            description: "Fig 12 serialized comm under hardware evolution",
+            spec_fn: fig12_spec,
+        },
+        Builtin {
+            name: "evolution_overlapped",
+            artifact: Some("fig13"),
+            description: "Fig 13 overlapped comm under hardware evolution",
+            spec_fn: fig13_spec,
+        },
+        Builtin {
+            name: "case_study",
+            artifact: Some("fig14"),
+            description: "Fig 14 end-to-end case study (3 scenarios)",
+            spec_fn: case_study::study,
+        },
+        Builtin {
+            name: "strategies",
+            artifact: None,
+            description: "TP vs PP vs DP vs SP strategy comparison \
+                          (world = 64)",
+            spec_fn: strategies_spec,
+        },
+    ]
+}
+
+/// Look a built-in up by study name or artifact alias.
+pub fn find(name: &str) -> Option<Builtin> {
+    all()
+        .into_iter()
+        .find(|b| b.name == name || b.artifact == Some(name))
+}
+
+/// The ten paper-artifact commands, in `commscale all` order.
+pub fn artifact_names() -> Vec<&'static str> {
+    all().into_iter().filter_map(|b| b.artifact).collect()
+}
+
+/// Render one paper artifact the way its figure command always has:
+/// tables, ASCII charts, highlighted rows. The data comes from the same
+/// study-backed generators the generic runner uses.
+pub fn render_artifact(
+    cmd: &str,
+    device: &DeviceSpec,
+    csv: Option<&str>,
+) -> Result<()> {
+    match cmd {
+        "table2" => table2(csv),
+        "table3" => table3(csv),
+        "fig6" => fig6(csv),
+        "fig7" => fig7(csv),
+        "fig9b" => fig9b(csv),
+        "fig10" => fig10(device, csv),
+        "fig11" => fig11(device, csv),
+        "fig12" => fig12(device, csv),
+        "fig13" => fig13(device, csv),
+        "fig14" => fig14(device, csv),
+        other => Err(Error::Study(format!(
+            "unknown artifact {other:?}; have {}",
+            artifact_names().join(", ")
+        ))),
+    }
+}
+
+fn table2(csv: Option<&str>) -> Result<()> {
+    let mut t = Table::new(
+        "Table 2 — NLP model hyperparameters",
+        &["model", "year", "layers", "H", "heads", "size(B)", "type", "SL", "FC dim"],
+    );
+    for e in zoo::zoo() {
+        if e.futuristic {
+            continue;
+        }
+        t.row(vec![
+            e.name.to_string(),
+            e.year.to_string(),
+            e.layers.to_string(),
+            e.hidden.to_string(),
+            e.heads.to_string(),
+            format!("{}", e.size_b),
+            e.kind.to_string(),
+            e.seq_len.to_string(),
+            e.fc_dim.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    t.maybe_write_csv(csv)?;
+    Ok(())
+}
+
+fn table3(csv: Option<&str>) -> Result<()> {
+    let g = SweepGrid::default();
+    let mut t = Table::new(
+        "Table 3 — parameters and setup of models studied",
+        &["parameter", "values"],
+    );
+    let fmt = |v: &[u64]| {
+        v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(", ")
+    };
+    t.row(vec!["H".into(), fmt(&g.hidden)]);
+    t.row(vec!["B".into(), fmt(&g.batch)]);
+    t.row(vec!["SL".into(), fmt(&g.seq_len)]);
+    t.row(vec!["TP degree".into(), fmt(&g.tp)]);
+    t.row(vec!["DP degree".into(), "any".into()]);
+    t.row(vec![
+        "serialized projections".into(),
+        g.serialized_projection_count().to_string(),
+    ]);
+    print!("{}", t.render());
+    t.maybe_write_csv(csv)?;
+    Ok(())
+}
+
+fn fig6(csv: Option<&str>) -> Result<()> {
+    let rows = memory_trends::fig6();
+    let mut t = Table::new(
+        "Fig 6 — model memory demand (H*SL, normalized) vs device capacity",
+        &["model", "year", "demand(xBERT)", "capacity(x2018)", "gap"],
+    );
+    for r in &rows {
+        t.row(vec![
+            r.name.clone(),
+            r.year.to_string(),
+            format!("{:.1}", r.demand_norm),
+            format!("{:.1}", r.capacity_norm),
+            format!("{:.1}", r.gap),
+        ]);
+    }
+    print!("{}", t.render());
+    let s = vec![
+        Series::new(
+            "demand (H*SL, xBERT)",
+            rows.iter().map(|r| (r.year as f64, r.demand_norm.log2())).collect(),
+        ),
+        Series::new(
+            "capacity (x2018)",
+            rows.iter().map(|r| (r.year as f64, r.capacity_norm.log2())).collect(),
+        ),
+    ];
+    println!("{}", ascii_line_chart("log2 scaling vs year", &s, 64, 14, false));
+    t.maybe_write_csv(csv)?;
+    Ok(())
+}
+
+fn fig7(csv: Option<&str>) -> Result<()> {
+    let rows = algorithmic::fig7();
+    let mut t = Table::new(
+        "Fig 7 — algorithmic slack (SL*B) and edge ((H+SL)/TP), normalized to BERT",
+        &["model", "year", "B", "TP", "slack_norm", "edge_norm"],
+    );
+    for r in &rows {
+        t.row(vec![
+            r.name.clone(),
+            r.year.to_string(),
+            r.batch.to_string(),
+            r.tp.to_string(),
+            format!("{:.3}", r.slack_norm),
+            format!("{:.3}", r.edge_norm),
+        ]);
+    }
+    print!("{}", t.render());
+    let s = vec![
+        Series::new(
+            "slack (SL*B)",
+            rows.iter().enumerate().map(|(i, r)| (i as f64, r.slack_norm)).collect(),
+        ),
+        Series::new(
+            "edge ((H+SL)/TP)",
+            rows.iter().enumerate().map(|(i, r)| (i as f64, r.edge_norm)).collect(),
+        ),
+    ];
+    println!(
+        "{}",
+        ascii_line_chart("normalized to BERT (x = model index)", &s, 64, 12, false)
+    );
+    t.maybe_write_csv(csv)?;
+    Ok(())
+}
+
+fn fig9b(csv: Option<&str>) -> Result<()> {
+    let rows = algorithmic::fig9b();
+    let mut t = Table::new(
+        "Fig 9b — TP scaling (p/s) since Mega.-LM_BERT (base TP = 8)",
+        &["model", "size(B)", "p", "s", "p/s", "required TP"],
+    );
+    for r in &rows {
+        t.row(vec![
+            r.name.clone(),
+            format!("{}", r.size_b),
+            format!("{:.1}", r.p),
+            format!("{:.2}", r.s),
+            format!("{:.1}", r.scale),
+            format!("{:.0}", 8.0 * r.scale),
+        ]);
+    }
+    print!("{}", t.render());
+    t.maybe_write_csv(csv)?;
+    Ok(())
+}
+
+fn fig10(device: &DeviceSpec, csv: Option<&str>) -> Result<()> {
+    let pts = serialized::fig10(device);
+    let mut t = Table::new(
+        &format!("Fig 10 — fraction of serialized comm time ({})", device.name),
+        &["series", "TP", "comm %"],
+    );
+    let mut series: Vec<Series> = Vec::new();
+    for (label, _, _) in config::fig10_series() {
+        let points: Vec<(f64, f64)> = pts
+            .iter()
+            .filter(|p| p.series == label)
+            .map(|p| (p.tp as f64, 100.0 * p.comm_fraction))
+            .collect();
+        series.push(Series::new(label, points));
+    }
+    for p in &pts {
+        t.row(vec![
+            p.series.clone(),
+            p.tp.to_string(),
+            format!("{:.1}", 100.0 * p.comm_fraction),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "{}",
+        ascii_line_chart("serialized comm % vs TP (log2)", &series, 64, 16, true)
+    );
+    println!("highlighted (model @ its required TP):");
+    for (name, h, sl, tp) in serialized::highlighted_points() {
+        let f = serialized::simulate_point(device, h, sl, tp).comm_fraction();
+        println!("  {name:<12} H={h:<6} SL={sl:<5} TP={tp:<4} -> {:.1}%", 100.0 * f);
+    }
+    t.maybe_write_csv(csv)?;
+    Ok(())
+}
+
+fn fig11(device: &DeviceSpec, csv: Option<&str>) -> Result<()> {
+    let pts = overlapped::fig11(device);
+    let mut t = Table::new(
+        &format!("Fig 11 — overlapped comm as % of compute time ({})", device.name),
+        &["H", "SL*B", "comm % of compute", "exposed?"],
+    );
+    let mut series: Vec<Series> = Vec::new();
+    for &h in &config::fig11_hidden_series() {
+        let points: Vec<(f64, f64)> = pts
+            .iter()
+            .filter(|p| p.hidden == h)
+            .map(|p| (p.slb as f64, p.pct_of_compute))
+            .collect();
+        series.push(Series::new(&format!("H={}K", h / 1024), points));
+    }
+    for p in &pts {
+        t.row(vec![
+            p.hidden.to_string(),
+            p.slb.to_string(),
+            format!("{:.1}", p.pct_of_compute),
+            if p.exposed { "yes" } else { "no" }.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "{}",
+        ascii_line_chart("overlapped comm % vs SL*B (log2)", &series, 64, 16, true)
+    );
+    t.maybe_write_csv(csv)?;
+    Ok(())
+}
+
+fn fig12(device: &DeviceSpec, csv: Option<&str>) -> Result<()> {
+    let mut t = Table::new(
+        &format!(
+            "Fig 12 — serialized comm fraction under hardware evolution ({})",
+            device.name
+        ),
+        &["flop-vs-bw", "series", "TP", "comm %"],
+    );
+    for (ratio, pts) in evolution::fig12(device, &evolution::paper_scenarios()) {
+        for p in pts {
+            t.row(vec![
+                format!("{ratio:.0}x"),
+                p.series.clone(),
+                p.tp.to_string(),
+                format!("{:.1}", 100.0 * p.comm_fraction),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+    println!("comm-fraction band over highlighted configs:");
+    for ev in evolution::paper_scenarios() {
+        let (lo, hi) = evolution::comm_fraction_band(device, ev);
+        println!(
+            "  {:>3.0}x flop-vs-bw: {:>4.1}% – {:>4.1}%",
+            ev.ratio(),
+            100.0 * lo,
+            100.0 * hi
+        );
+    }
+    t.maybe_write_csv(csv)?;
+    Ok(())
+}
+
+fn fig13(device: &DeviceSpec, csv: Option<&str>) -> Result<()> {
+    let mut t = Table::new(
+        &format!(
+            "Fig 13 — overlapped comm %% of compute under hardware evolution ({})",
+            device.name
+        ),
+        &["flop-vs-bw", "H", "SL*B", "comm % of compute"],
+    );
+    for (ratio, pts) in evolution::fig13(device, &evolution::paper_scenarios()) {
+        for p in pts {
+            t.row(vec![
+                format!("{ratio:.0}x"),
+                p.hidden.to_string(),
+                p.slb.to_string(),
+                format!("{:.1}", p.pct_of_compute),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+    for ev in evolution::paper_scenarios() {
+        let n = evolution::fig13_exposed_count(device, ev);
+        println!(
+            "  {:>3.0}x: {n}/30 grid points have comm >= 100% of compute (exposed)",
+            ev.ratio()
+        );
+    }
+    t.maybe_write_csv(csv)?;
+    Ok(())
+}
+
+fn fig14(device: &DeviceSpec, csv: Option<&str>) -> Result<()> {
+    let scenarios = case_study::fig14(device);
+    let mut t = Table::new(
+        "Fig 14 — end-to-end case study (H=64K, B=1, SL=4K, TP=128, DP=4)",
+        &["scenario", "compute %", "TP comm %", "DP exposed %", "DP hidden %", "critical comm %"],
+    );
+    for s in &scenarios {
+        t.row(vec![
+            s.name.clone(),
+            format!("{:.1}", 100.0 * s.compute_frac),
+            format!("{:.1}", 100.0 * s.serialized_frac),
+            format!("{:.1}", 100.0 * s.dp_exposed_frac),
+            format!("{:.1}", 100.0 * s.dp_hidden_frac),
+            format!("{:.1}", 100.0 * s.critical_comm_frac()),
+        ]);
+    }
+    print!("{}", t.render());
+    for s in &scenarios {
+        let bars = vec![
+            ("compute".to_string(), s.compute_frac),
+            ("TP comm (serialized)".to_string(), s.serialized_frac),
+            ("DP comm exposed".to_string(), s.dp_exposed_frac),
+            ("DP comm hidden".to_string(), s.dp_hidden_frac),
+        ];
+        println!("{}", ascii_bar_chart(&s.name, &bars, 48));
+    }
+    t.maybe_write_csv(csv)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::catalog;
+    use crate::study::run::{run_study, RowSink, RunOptions, VecSink};
+
+    #[test]
+    fn registry_covers_all_ten_artifacts() {
+        let names = artifact_names();
+        assert_eq!(
+            names,
+            vec![
+                "table2", "table3", "fig6", "fig7", "fig9b", "fig10", "fig11",
+                "fig12", "fig13", "fig14"
+            ]
+        );
+        for n in names {
+            assert!(find(n).is_some(), "artifact {n} not found");
+        }
+        assert!(find("strategies").is_some());
+        assert!(find("serialized").is_some(), "study-name lookup");
+        assert!(find("bogus").is_none());
+    }
+
+    #[test]
+    fn every_builtin_spec_resolves_and_roundtrips() {
+        let d = catalog::mi210();
+        for b in all() {
+            let spec = b.spec();
+            let resolved = spec.resolve(&d).unwrap_or_else(|e| {
+                panic!("builtin {} does not resolve: {e}", b.name)
+            });
+            assert!(resolved.total_points() > 0, "{} is empty", b.name);
+            let json = spec.to_json().to_string_pretty(2);
+            let back = StudySpec::parse(&json).unwrap_or_else(|e| {
+                panic!("builtin {} does not roundtrip: {e}\n{json}", b.name)
+            });
+            assert_eq!(spec, back, "builtin {} roundtrip drift", b.name);
+        }
+    }
+
+    #[test]
+    fn builtin_grid_studies_run_through_the_pipeline() {
+        let d = catalog::mi210();
+        for name in ["serialized", "overlapped", "case_study"] {
+            let spec = find(name).unwrap().spec();
+            let resolved = spec.resolve(&d).unwrap();
+            let mut sink = VecSink::new();
+            let outcome = {
+                let mut sinks: Vec<&mut dyn RowSink> = vec![&mut sink];
+                run_study(&resolved, RunOptions::default(), &mut sinks)
+                    .unwrap()
+            };
+            assert_eq!(outcome.points_evaluated, resolved.total_points());
+            assert!(!sink.rows.is_empty(), "{name} emitted no rows");
+        }
+    }
+
+    #[test]
+    fn fig10_study_pipeline_matches_figure_generator() {
+        // the generic study pipeline and the figure generator must agree
+        // bit-for-bit on the comm fraction of every (series, TP) cell.
+        let d = catalog::mi210();
+        let pts = serialized::fig10(&d);
+        let spec = serialized::study();
+        let resolved = spec.resolve(&d).unwrap();
+        let mut sink = VecSink::new();
+        {
+            let mut sinks: Vec<&mut dyn RowSink> = vec![&mut sink];
+            run_study(&resolved, RunOptions::default(), &mut sinks).unwrap();
+        }
+        assert_eq!(sink.rows.len(), pts.len());
+        let cf = sink.col("comm_fraction");
+        let tp = sink.col("tp");
+        for (row, p) in sink.rows.iter().zip(&pts) {
+            assert_eq!(row[tp].as_f64() as u64, p.tp);
+            assert_eq!(
+                row[cf].as_f64().to_bits(),
+                p.comm_fraction.to_bits(),
+                "TP={} series={}",
+                p.tp,
+                p.series
+            );
+        }
+    }
+}

@@ -1,0 +1,470 @@
+//! The study layer's tiny expression language: derived metrics
+//! (`exposed_comm / makespan`) and point filters (`tp <= 64 &&
+//! comm_fraction > 0.2`) over a row's named fields.
+//!
+//! Grammar (usual precedence, lowest first):
+//!
+//! ```text
+//! expr  := or
+//! or    := and ("||" and)*
+//! and   := cmp ("&&" cmp)*
+//! cmp   := add (("<" | "<=" | ">" | ">=" | "==" | "!=") add)?
+//! add   := mul (("+" | "-") mul)*
+//! mul   := unary (("*" | "/") unary)*
+//! unary := ("-" | "!") unary | primary
+//! primary := number | ident | ident "(" expr ("," expr)* ")" | "(" expr ")"
+//! ```
+//!
+//! Everything evaluates to `f64`; comparisons/logic yield 1.0 / 0.0 and
+//! treat any non-zero operand as true. Built-in functions: `min`, `max`,
+//! `abs`, `log2`. Identifiers are **bound to row-schema columns at parse
+//! time**, so an expression referencing an unknown field fails with the
+//! list of available fields instead of failing per-row — and evaluation
+//! is a pure index lookup, cheap enough for million-point streams.
+
+use crate::{Error, Result};
+
+/// A parsed, schema-bound expression.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    Num(f64),
+    /// Index into the row the expression was bound against.
+    Field(usize),
+    Unary(UnaryOp, Box<Expr>),
+    Binary(BinOp, Box<Expr>, Box<Expr>),
+    Call(Func, Vec<Expr>),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UnaryOp {
+    Neg,
+    Not,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Eq,
+    Ne,
+    And,
+    Or,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Func {
+    Min,
+    Max,
+    Abs,
+    Log2,
+}
+
+impl Expr {
+    /// Parse `text` against a column schema; identifiers must name a
+    /// schema column (bound by index).
+    pub fn parse(text: &str, schema: &[String]) -> Result<Expr> {
+        let tokens = tokenize(text)?;
+        let mut p = ExprParser { text, tokens, pos: 0, schema };
+        let e = p.or()?;
+        if p.pos != p.tokens.len() {
+            return Err(Error::Study(format!(
+                "expression {text:?}: unexpected {:?} after a complete \
+                 expression",
+                p.tokens[p.pos]
+            )));
+        }
+        Ok(e)
+    }
+
+    /// Evaluate against a row of numeric field values (the binding
+    /// schema's column order).
+    pub fn eval(&self, row: &[f64]) -> f64 {
+        match self {
+            Expr::Num(n) => *n,
+            Expr::Field(i) => row[*i],
+            Expr::Unary(op, e) => {
+                let v = e.eval(row);
+                match op {
+                    UnaryOp::Neg => -v,
+                    UnaryOp::Not => {
+                        if v == 0.0 {
+                            1.0
+                        } else {
+                            0.0
+                        }
+                    }
+                }
+            }
+            Expr::Binary(op, a, b) => {
+                let x = a.eval(row);
+                // short-circuit the logical ops
+                match op {
+                    BinOp::And => {
+                        return if x != 0.0 && b.eval(row) != 0.0 { 1.0 } else { 0.0 }
+                    }
+                    BinOp::Or => {
+                        return if x != 0.0 || b.eval(row) != 0.0 { 1.0 } else { 0.0 }
+                    }
+                    _ => {}
+                }
+                let y = b.eval(row);
+                let t = |c: bool| if c { 1.0 } else { 0.0 };
+                match op {
+                    BinOp::Add => x + y,
+                    BinOp::Sub => x - y,
+                    BinOp::Mul => x * y,
+                    BinOp::Div => x / y,
+                    BinOp::Lt => t(x < y),
+                    BinOp::Le => t(x <= y),
+                    BinOp::Gt => t(x > y),
+                    BinOp::Ge => t(x >= y),
+                    BinOp::Eq => t(x == y),
+                    BinOp::Ne => t(x != y),
+                    BinOp::And | BinOp::Or => unreachable!("short-circuited"),
+                }
+            }
+            Expr::Call(f, args) => {
+                let v: Vec<f64> = args.iter().map(|a| a.eval(row)).collect();
+                match f {
+                    Func::Min => v[0].min(v[1]),
+                    Func::Max => v[0].max(v[1]),
+                    Func::Abs => v[0].abs(),
+                    Func::Log2 => v[0].log2(),
+                }
+            }
+        }
+    }
+
+    /// True when the expression is a bare field reference.
+    pub fn as_field(&self) -> Option<usize> {
+        match self {
+            Expr::Field(i) => Some(*i),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Tok {
+    Num(f64),
+    Ident(String),
+    Op(&'static str),
+}
+
+fn tokenize(text: &str) -> Result<Vec<Tok>> {
+    let b = text.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            b' ' | b'\t' | b'\n' | b'\r' => i += 1,
+            b'0'..=b'9' | b'.' => {
+                let start = i;
+                while i < b.len()
+                    && (b[i].is_ascii_digit()
+                        || matches!(b[i], b'.' | b'e' | b'E')
+                        || (matches!(b[i], b'+' | b'-')
+                            && i > start
+                            && matches!(b[i - 1], b'e' | b'E')))
+                {
+                    i += 1;
+                }
+                let s = &text[start..i];
+                let n: f64 = s.parse().map_err(|_| {
+                    Error::Study(format!("expression: bad number {s:?}"))
+                })?;
+                out.push(Tok::Num(n));
+            }
+            b'a'..=b'z' | b'A'..=b'Z' | b'_' => {
+                let start = i;
+                while i < b.len()
+                    && (b[i].is_ascii_alphanumeric() || b[i] == b'_')
+                {
+                    i += 1;
+                }
+                out.push(Tok::Ident(text[start..i].to_string()));
+            }
+            _ => {
+                let two: &[u8] = if i + 1 < b.len() { &b[i..i + 2] } else { b"" };
+                let op: &'static str = match two {
+                    b"<=" => "<=",
+                    b">=" => ">=",
+                    b"==" => "==",
+                    b"!=" => "!=",
+                    b"&&" => "&&",
+                    b"||" => "||",
+                    _ => match c {
+                        b'+' => "+",
+                        b'-' => "-",
+                        b'*' => "*",
+                        b'/' => "/",
+                        b'<' => "<",
+                        b'>' => ">",
+                        b'!' => "!",
+                        b'(' => "(",
+                        b')' => ")",
+                        b',' => ",",
+                        _ => {
+                            return Err(Error::Study(format!(
+                                "expression: unexpected character {:?} at \
+                                 byte {i} of {text:?}",
+                                c as char
+                            )))
+                        }
+                    },
+                };
+                i += op.len();
+                out.push(Tok::Op(op));
+            }
+        }
+    }
+    Ok(out)
+}
+
+struct ExprParser<'a> {
+    text: &'a str,
+    tokens: Vec<Tok>,
+    pos: usize,
+    schema: &'a [String],
+}
+
+impl ExprParser<'_> {
+    fn peek_op(&self) -> Option<&'static str> {
+        match self.tokens.get(self.pos) {
+            Some(Tok::Op(o)) => Some(o),
+            _ => None,
+        }
+    }
+
+    fn eat_op(&mut self, op: &str) -> bool {
+        if self.peek_op() == Some(op) {
+            self.pos += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn or(&mut self) -> Result<Expr> {
+        let mut e = self.and()?;
+        while self.eat_op("||") {
+            e = Expr::Binary(BinOp::Or, Box::new(e), Box::new(self.and()?));
+        }
+        Ok(e)
+    }
+
+    fn and(&mut self) -> Result<Expr> {
+        let mut e = self.cmp()?;
+        while self.eat_op("&&") {
+            e = Expr::Binary(BinOp::And, Box::new(e), Box::new(self.cmp()?));
+        }
+        Ok(e)
+    }
+
+    fn cmp(&mut self) -> Result<Expr> {
+        let e = self.add()?;
+        for (tok, op) in [
+            ("<=", BinOp::Le),
+            (">=", BinOp::Ge),
+            ("==", BinOp::Eq),
+            ("!=", BinOp::Ne),
+            ("<", BinOp::Lt),
+            (">", BinOp::Gt),
+        ] {
+            if self.eat_op(tok) {
+                return Ok(Expr::Binary(op, Box::new(e), Box::new(self.add()?)));
+            }
+        }
+        Ok(e)
+    }
+
+    fn add(&mut self) -> Result<Expr> {
+        let mut e = self.mul()?;
+        loop {
+            if self.eat_op("+") {
+                e = Expr::Binary(BinOp::Add, Box::new(e), Box::new(self.mul()?));
+            } else if self.eat_op("-") {
+                e = Expr::Binary(BinOp::Sub, Box::new(e), Box::new(self.mul()?));
+            } else {
+                return Ok(e);
+            }
+        }
+    }
+
+    fn mul(&mut self) -> Result<Expr> {
+        let mut e = self.unary()?;
+        loop {
+            if self.eat_op("*") {
+                e = Expr::Binary(BinOp::Mul, Box::new(e), Box::new(self.unary()?));
+            } else if self.eat_op("/") {
+                e = Expr::Binary(BinOp::Div, Box::new(e), Box::new(self.unary()?));
+            } else {
+                return Ok(e);
+            }
+        }
+    }
+
+    fn unary(&mut self) -> Result<Expr> {
+        if self.eat_op("-") {
+            return Ok(Expr::Unary(UnaryOp::Neg, Box::new(self.unary()?)));
+        }
+        if self.eat_op("!") {
+            return Ok(Expr::Unary(UnaryOp::Not, Box::new(self.unary()?)));
+        }
+        self.primary()
+    }
+
+    fn primary(&mut self) -> Result<Expr> {
+        match self.tokens.get(self.pos).cloned() {
+            Some(Tok::Num(n)) => {
+                self.pos += 1;
+                Ok(Expr::Num(n))
+            }
+            Some(Tok::Ident(name)) => {
+                self.pos += 1;
+                if self.eat_op("(") {
+                    let func = match name.as_str() {
+                        "min" => Func::Min,
+                        "max" => Func::Max,
+                        "abs" => Func::Abs,
+                        "log2" => Func::Log2,
+                        other => {
+                            return Err(Error::Study(format!(
+                                "expression {:?}: unknown function {other:?} \
+                                 (have min, max, abs, log2)",
+                                self.text
+                            )))
+                        }
+                    };
+                    let mut args = vec![self.or()?];
+                    while self.eat_op(",") {
+                        args.push(self.or()?);
+                    }
+                    if !self.eat_op(")") {
+                        return Err(Error::Study(format!(
+                            "expression {:?}: missing ')' after {name} args",
+                            self.text
+                        )));
+                    }
+                    let want = match func {
+                        Func::Min | Func::Max => 2,
+                        Func::Abs | Func::Log2 => 1,
+                    };
+                    if args.len() != want {
+                        return Err(Error::Study(format!(
+                            "expression {:?}: {name} takes {want} argument(s), \
+                             got {}",
+                            self.text,
+                            args.len()
+                        )));
+                    }
+                    return Ok(Expr::Call(func, args));
+                }
+                match self.schema.iter().position(|s| s == &name) {
+                    Some(i) => Ok(Expr::Field(i)),
+                    None => Err(Error::Study(format!(
+                        "expression {:?}: unknown field {name:?}; available \
+                         fields: {}",
+                        self.text,
+                        self.schema.join(", ")
+                    ))),
+                }
+            }
+            Some(Tok::Op("(")) => {
+                self.pos += 1;
+                let e = self.or()?;
+                if !self.eat_op(")") {
+                    return Err(Error::Study(format!(
+                        "expression {:?}: missing ')'",
+                        self.text
+                    )));
+                }
+                Ok(e)
+            }
+            other => Err(Error::Study(format!(
+                "expression {:?}: expected a value, found {other:?}",
+                self.text
+            ))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn schema() -> Vec<String> {
+        ["tp", "makespan", "exposed_comm"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect()
+    }
+
+    fn eval(text: &str, row: &[f64]) -> f64 {
+        Expr::parse(text, &schema()).unwrap().eval(row)
+    }
+
+    #[test]
+    fn arithmetic_and_precedence() {
+        assert_eq!(eval("1 + 2 * 3", &[0.0, 0.0, 0.0]), 7.0);
+        assert_eq!(eval("(1 + 2) * 3", &[0.0, 0.0, 0.0]), 9.0);
+        assert_eq!(eval("-2 * 3", &[0.0, 0.0, 0.0]), -6.0);
+        assert_eq!(eval("4 / 2 - 1", &[0.0, 0.0, 0.0]), 1.0);
+    }
+
+    #[test]
+    fn fields_resolve_by_schema_index() {
+        let row = [8.0, 2.0, 0.5];
+        assert_eq!(eval("exposed_comm / makespan", &row), 0.25);
+        assert_eq!(eval("tp", &row), 8.0);
+    }
+
+    #[test]
+    fn comparisons_and_logic() {
+        let row = [8.0, 2.0, 0.5];
+        assert_eq!(eval("tp <= 8", &row), 1.0);
+        assert_eq!(eval("tp < 8", &row), 0.0);
+        assert_eq!(eval("tp == 8 && makespan > 1", &row), 1.0);
+        assert_eq!(eval("tp != 8 || makespan > 1", &row), 1.0);
+        assert_eq!(eval("!(tp == 8)", &row), 0.0);
+    }
+
+    #[test]
+    fn functions() {
+        let row = [8.0, 2.0, 0.5];
+        assert_eq!(eval("min(tp, 4)", &row), 4.0);
+        assert_eq!(eval("max(tp, 16)", &row), 16.0);
+        assert_eq!(eval("abs(0 - tp)", &row), 8.0);
+        assert_eq!(eval("log2(tp)", &row), 3.0);
+    }
+
+    #[test]
+    fn scientific_numbers() {
+        let v = eval("1.5e3 + 2e-1", &[0.0, 0.0, 0.0]);
+        assert!((v - 1500.2).abs() < 1e-9, "{v}");
+    }
+
+    #[test]
+    fn unknown_field_lists_alternatives() {
+        let err = Expr::parse("bogus + 1", &schema()).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("unknown field \"bogus\""), "{msg}");
+        assert!(msg.contains("makespan"), "{msg}");
+    }
+
+    #[test]
+    fn trailing_garbage_rejected() {
+        let err = Expr::parse("tp tp", &schema()).unwrap_err();
+        assert!(err.to_string().contains("unexpected"), "{err}");
+        assert!(Expr::parse("min(tp)", &schema()).is_err());
+        assert!(Expr::parse("(tp", &schema()).is_err());
+        assert!(Expr::parse("tp @ 2", &schema()).is_err());
+    }
+}

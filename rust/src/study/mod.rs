@@ -1,0 +1,43 @@
+//! The declarative Study API — one scenario-query surface for every
+//! figure, sweep, and custom analysis.
+//!
+//! The paper's economic claim (§4.3.8) is that operator models make
+//! *hundreds* of scenarios cheap; the sweep engine (PR 1) and the
+//! parallelism layer (PR 2) made tens of thousands of points per second
+//! possible. This module removes the last bottleneck — the query
+//! surface: instead of one hand-rolled grid + row struct + renderer per
+//! figure, a serializable [`StudySpec`] names
+//!
+//! * the **axes** (model × parallelism × hardware-evolution × topology,
+//!   with named series for irregular grids),
+//! * the **filters** (point predicates like `tp <= 64`),
+//! * the **metrics** (fields of [`crate::sweep::PointMetrics`] plus
+//!   derived expressions like `exposed_comm / iter_time`),
+//! * the **aggregation** (group-by with min/max/mean/count/argmin —
+//!   what makes million-point grids consumable), and
+//! * the **sinks** (streaming CSV/JSONL, bounded tables, ASCII charts).
+//!
+//! Execution ([`run_study`]) streams chunk-by-chunk off the sweep
+//! engine, so grids never fully materialize. Every paper artifact
+//! (`table2`–`fig14`, plus the strategy comparison) is a built-in spec
+//! ([`builtin`]); `commscale study <spec.json|name>` opens the same
+//! surface to user-defined studies, and `--explain` prints a spec's
+//! resolved axes and point count before anything runs.
+//!
+//! Specs parse via [`crate::util::json`] — no serde; round-tripping
+//! (`parse → to_json → parse`) is part of the contract.
+
+pub mod builtin;
+pub mod expr;
+pub mod run;
+pub mod spec;
+
+pub use expr::Expr;
+pub use run::{
+    build_sinks, run_study, ChartSink, CsvSink, JsonlSink, RowSink,
+    RunOptions, StudyOutcome, TableSink, Value, VecSink,
+};
+pub use spec::{
+    AggOp, AggSpec, AxesSpec, HwAxisSpec, MetricSpec, ResolvedStudy,
+    SeriesSpec, SinkSpec, Source, StudySpec,
+};

@@ -1,0 +1,1400 @@
+//! The streaming study runner: resolved spec → rows → filters → metrics
+//! → (optional group-by aggregation) → sinks.
+//!
+//! Execution streams chunk-by-chunk off the sweep engine: per (hardware
+//! point, segment) the model-axis enumerator fills a bounded scenario
+//! buffer, each full buffer is evaluated in parallel
+//! ([`crate::sweep::run_with`]), and every resulting row is pushed through
+//! the pipeline immediately — the full grid's metrics never exist in
+//! memory at once, which is what makes million-point studies consumable.
+//! Group-by aggregation holds one accumulator per group (min/max/mean/
+//! count/argmin/argmax), so a 100k-point sweep with a 20-group key uses
+//! 20 rows of state.
+
+use std::collections::HashMap;
+use std::io::Write as _;
+
+use crate::graph::GraphOptions;
+use crate::model::ModelConfig;
+use crate::report::{ascii_line_chart, Series, Table};
+use crate::sweep::{self, PointMetrics, Scenario, ScenarioGrid};
+use crate::util::Json;
+use crate::{Error, Result};
+
+use super::expr::Expr;
+use super::spec::{
+    AggOp, ResolvedHw, ResolvedSegment, ResolvedStudy, SinkSpec, Source,
+    StudySpec,
+};
+
+/// One cell of a result row.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Num(f64),
+    Str(String),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> f64 {
+        match self {
+            Value::Num(n) => *n,
+            Value::Bool(true) => 1.0,
+            Value::Bool(false) => 0.0,
+            Value::Str(_) => f64::NAN,
+        }
+    }
+
+    /// Deterministic text form (CSV cells, group keys, table cells).
+    pub fn render(&self) -> String {
+        match self {
+            Value::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 9e15 {
+                    format!("{}", *n as i64)
+                } else {
+                    format!("{n}")
+                }
+            }
+            Value::Str(s) => s.clone(),
+            Value::Bool(b) => (if *b { "1" } else { "0" }).to_string(),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            Value::Num(n) => Json::num(*n),
+            Value::Str(s) => Json::str(s),
+            Value::Bool(b) => Json::Bool(*b),
+        }
+    }
+}
+
+/// Kind of a schema field — expressions may only reference numeric (or
+/// boolean, read as 0/1) fields; strings are for labels and group keys.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FieldKind {
+    Num,
+    Str,
+    Bool,
+}
+
+/// The per-source base row schemas. Metric columns are appended after
+/// these at bind time.
+fn base_schema(source: Source) -> Vec<(&'static str, FieldKind)> {
+    use FieldKind::*;
+    match source {
+        Source::Grid => vec![
+            ("device", Str),
+            ("scenario", Str),
+            ("series", Str),
+            ("flop_vs_bw", Num),
+            ("topology", Str),
+            ("interference", Num),
+            ("hidden", Num),
+            ("seq_len", Num),
+            ("batch", Num),
+            ("layers", Num),
+            ("heads", Num),
+            ("ffn_mult", Num),
+            ("tp", Num),
+            ("pp", Num),
+            ("microbatches", Num),
+            ("seq_par", Bool),
+            ("dp", Num),
+            ("world", Num),
+            ("samples_per_iter", Num),
+            ("archetype", Str),
+            ("makespan", Num),
+            ("iter_time", Num),
+            ("compute_time", Num),
+            ("serialized_comm", Num),
+            ("overlapped_comm", Num),
+            ("p2p_comm", Num),
+            ("exposed_comm", Num),
+            ("hidden_comm", Num),
+            ("bubble_time", Num),
+            ("fwd_compute", Num),
+            ("bwd_compute", Num),
+            ("opt_compute", Num),
+            ("comm_fraction", Num),
+            ("bubble_fraction", Num),
+            ("time_per_sample", Num),
+        ],
+        Source::Zoo => vec![
+            ("name", Str),
+            ("kind", Str),
+            ("year", Num),
+            ("futuristic", Bool),
+            ("layers", Num),
+            ("hidden", Num),
+            ("heads", Num),
+            ("seq_len", Num),
+            ("fc_dim", Num),
+            ("size_b", Num),
+            ("batch", Num),
+            ("tp", Num),
+            ("slack", Num),
+            ("edge", Num),
+            ("slack_norm", Num),
+            ("edge_norm", Num),
+            ("demand_norm", Num),
+            ("capacity_norm", Num),
+            ("gap", Num),
+            ("p", Num),
+            ("s", Num),
+            ("tp_scale", Num),
+        ],
+        Source::Table3 => vec![("parameter", Str), ("values", Str)],
+    }
+}
+
+/// Default identity columns prepended to point-mode output when the spec
+/// lists none (zoo/table3 default to their whole base schema instead).
+fn default_id_columns(source: Source) -> Vec<&'static str> {
+    match source {
+        Source::Grid => vec![
+            "device", "scenario", "series", "flop_vs_bw", "topology", "hidden",
+            "seq_len", "batch", "layers", "ffn_mult", "tp", "pp",
+            "microbatches", "seq_par", "dp",
+        ],
+        Source::Zoo | Source::Table3 => Vec::new(),
+    }
+}
+
+/// Default metric columns when the spec lists none.
+fn default_metric_fields(source: Source) -> Vec<&'static str> {
+    match source {
+        Source::Grid => vec![
+            "makespan", "compute_time", "serialized_comm", "overlapped_comm",
+            "p2p_comm", "exposed_comm", "hidden_comm", "bubble_time",
+            "comm_fraction", "bubble_fraction", "time_per_sample",
+        ],
+        Source::Zoo | Source::Table3 => Vec::new(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sinks
+// ---------------------------------------------------------------------------
+
+/// A destination for result rows. `begin` receives the output columns;
+/// `finish` may return a rendered block (tables, charts) or a summary
+/// line for stdout.
+pub trait RowSink {
+    fn begin(&mut self, columns: &[String]) -> Result<()>;
+    fn row(&mut self, row: &[Value]) -> Result<()>;
+    fn finish(&mut self) -> Result<Option<String>>;
+}
+
+fn csv_escape(cell: &str) -> String {
+    if cell.contains(',') || cell.contains('"') || cell.contains('\n') {
+        format!("\"{}\"", cell.replace('"', "\"\""))
+    } else {
+        cell.to_string()
+    }
+}
+
+fn open_out(path: &str) -> Result<Box<dyn std::io::Write>> {
+    Ok(if path == "-" {
+        Box::new(std::io::BufWriter::new(std::io::stdout()))
+    } else {
+        Box::new(std::io::BufWriter::new(std::fs::File::create(path)?))
+    })
+}
+
+/// Streaming CSV writer (`path == "-"` → stdout).
+pub struct CsvSink {
+    path: String,
+    out: Option<Box<dyn std::io::Write>>,
+    rows: usize,
+}
+
+impl CsvSink {
+    pub fn new(path: &str) -> CsvSink {
+        CsvSink { path: path.to_string(), out: None, rows: 0 }
+    }
+}
+
+impl RowSink for CsvSink {
+    fn begin(&mut self, columns: &[String]) -> Result<()> {
+        let mut out = open_out(&self.path)?;
+        let header: Vec<String> =
+            columns.iter().map(|c| csv_escape(c)).collect();
+        writeln!(out, "{}", header.join(","))?;
+        self.out = Some(out);
+        Ok(())
+    }
+
+    fn row(&mut self, row: &[Value]) -> Result<()> {
+        let out = self.out.as_mut().expect("begin before row");
+        let cells: Vec<String> =
+            row.iter().map(|v| csv_escape(&v.render())).collect();
+        writeln!(out, "{}", cells.join(","))?;
+        self.rows += 1;
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<Option<String>> {
+        if let Some(out) = self.out.as_mut() {
+            out.flush()?;
+        }
+        if self.path != "-" {
+            Ok(Some(format!("wrote {} rows to {}", self.rows, self.path)))
+        } else {
+            Ok(None)
+        }
+    }
+}
+
+/// Streaming JSON-lines writer (one object per row).
+pub struct JsonlSink {
+    path: String,
+    columns: Vec<String>,
+    out: Option<Box<dyn std::io::Write>>,
+    rows: usize,
+}
+
+impl JsonlSink {
+    pub fn new(path: &str) -> JsonlSink {
+        JsonlSink {
+            path: path.to_string(),
+            columns: Vec::new(),
+            out: None,
+            rows: 0,
+        }
+    }
+}
+
+impl RowSink for JsonlSink {
+    fn begin(&mut self, columns: &[String]) -> Result<()> {
+        self.columns = columns.to_vec();
+        self.out = Some(open_out(&self.path)?);
+        Ok(())
+    }
+
+    fn row(&mut self, row: &[Value]) -> Result<()> {
+        let obj: std::collections::BTreeMap<String, Json> = self
+            .columns
+            .iter()
+            .zip(row)
+            .map(|(c, v)| (c.clone(), v.to_json()))
+            .collect();
+        let out = self.out.as_mut().expect("begin before row");
+        writeln!(out, "{}", Json::Obj(obj).to_string())?;
+        self.rows += 1;
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<Option<String>> {
+        if let Some(out) = self.out.as_mut() {
+            out.flush()?;
+        }
+        if self.path != "-" {
+            Ok(Some(format!("wrote {} rows to {}", self.rows, self.path)))
+        } else {
+            Ok(None)
+        }
+    }
+}
+
+/// Collecting table sink (bounded by `limit`; the overflow count is
+/// reported under the table).
+pub struct TableSink {
+    title: String,
+    limit: usize,
+    columns: Vec<String>,
+    rows: Vec<Vec<String>>,
+    seen: usize,
+}
+
+impl TableSink {
+    pub fn new(title: &str, limit: usize) -> TableSink {
+        TableSink {
+            title: title.to_string(),
+            limit: limit.max(1),
+            columns: Vec::new(),
+            rows: Vec::new(),
+            seen: 0,
+        }
+    }
+}
+
+impl RowSink for TableSink {
+    fn begin(&mut self, columns: &[String]) -> Result<()> {
+        self.columns = columns.to_vec();
+        Ok(())
+    }
+
+    fn row(&mut self, row: &[Value]) -> Result<()> {
+        self.seen += 1;
+        if self.rows.len() < self.limit {
+            self.rows.push(row.iter().map(|v| v.render()).collect());
+        }
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<Option<String>> {
+        let headers: Vec<&str> =
+            self.columns.iter().map(|c| c.as_str()).collect();
+        let mut t = Table::new(&self.title, &headers);
+        for r in &self.rows {
+            t.row(r.clone());
+        }
+        let mut text = t.render();
+        if self.seen > self.rows.len() {
+            text.push_str(&format!(
+                "({} more rows not shown; add a csv sink or --csv for the \
+                 full stream)\n",
+                self.seen - self.rows.len()
+            ));
+        }
+        Ok(Some(text))
+    }
+}
+
+/// Collecting ASCII line-chart sink: `y` over `x`, one line per distinct
+/// `series` value (or a single line when `series` is unset).
+pub struct ChartSink {
+    title: String,
+    x: String,
+    y: String,
+    series: Option<String>,
+    log_x: bool,
+    width: usize,
+    height: usize,
+    xi: usize,
+    yi: usize,
+    si: Option<usize>,
+    order: Vec<String>,
+    data: HashMap<String, Vec<(f64, f64)>>,
+}
+
+impl ChartSink {
+    pub fn new(
+        title: &str,
+        x: &str,
+        y: &str,
+        series: Option<&str>,
+        log_x: bool,
+        width: usize,
+        height: usize,
+    ) -> ChartSink {
+        ChartSink {
+            title: title.to_string(),
+            x: x.to_string(),
+            y: y.to_string(),
+            series: series.map(|s| s.to_string()),
+            log_x,
+            width,
+            height,
+            xi: 0,
+            yi: 0,
+            si: None,
+            order: Vec::new(),
+            data: HashMap::new(),
+        }
+    }
+}
+
+impl RowSink for ChartSink {
+    fn begin(&mut self, columns: &[String]) -> Result<()> {
+        let find = |name: &str| -> Result<usize> {
+            columns.iter().position(|c| c == name).ok_or_else(|| {
+                Error::Study(format!(
+                    "chart: field {name:?} is not an output column; columns: \
+                     {}",
+                    columns.join(", ")
+                ))
+            })
+        };
+        self.xi = find(&self.x)?;
+        self.yi = find(&self.y)?;
+        self.si = match &self.series {
+            Some(s) => Some(find(s)?),
+            None => None,
+        };
+        Ok(())
+    }
+
+    fn row(&mut self, row: &[Value]) -> Result<()> {
+        let key = match self.si {
+            Some(i) => row[i].render(),
+            None => self.y.clone(),
+        };
+        let x = row[self.xi].as_f64();
+        let y = row[self.yi].as_f64();
+        if x.is_nan() || y.is_nan() {
+            return Err(Error::Study(format!(
+                "chart: non-numeric point ({}, {}) for series {key:?}",
+                row[self.xi].render(),
+                row[self.yi].render()
+            )));
+        }
+        if !self.data.contains_key(&key) {
+            self.order.push(key.clone());
+        }
+        self.data.entry(key).or_default().push((x, y));
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<Option<String>> {
+        if self.order.is_empty() {
+            return Ok(Some(format!("{}: no data points\n", self.title)));
+        }
+        let series: Vec<Series> = self
+            .order
+            .iter()
+            .map(|k| Series::new(k, self.data[k].clone()))
+            .collect();
+        Ok(Some(format!(
+            "{}\n",
+            ascii_line_chart(
+                &self.title,
+                &series,
+                self.width,
+                self.height,
+                self.log_x
+            )
+        )))
+    }
+}
+
+/// Collecting sink for tests and in-process consumers.
+#[derive(Debug, Default)]
+pub struct VecSink {
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<Value>>,
+}
+
+impl VecSink {
+    pub fn new() -> VecSink {
+        VecSink::default()
+    }
+
+    /// Column index by name (panics on unknown — test helper).
+    pub fn col(&self, name: &str) -> usize {
+        self.columns
+            .iter()
+            .position(|c| c == name)
+            .unwrap_or_else(|| panic!("no column {name:?} in {:?}", self.columns))
+    }
+}
+
+impl RowSink for VecSink {
+    fn begin(&mut self, columns: &[String]) -> Result<()> {
+        self.columns = columns.to_vec();
+        Ok(())
+    }
+
+    fn row(&mut self, row: &[Value]) -> Result<()> {
+        self.rows.push(row.to_vec());
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<Option<String>> {
+        Ok(None)
+    }
+}
+
+/// Build the sink stack a spec asks for (default: one bounded table),
+/// appending an extra CSV sink for the CLI's `--csv PATH`.
+pub fn build_sinks(
+    spec: &StudySpec,
+    extra_csv: Option<&str>,
+) -> Vec<Box<dyn RowSink>> {
+    let mut sinks: Vec<Box<dyn RowSink>> = Vec::new();
+    for s in &spec.sinks {
+        match s {
+            SinkSpec::Csv { path } => sinks.push(Box::new(CsvSink::new(path))),
+            SinkSpec::Jsonl { path } => {
+                sinks.push(Box::new(JsonlSink::new(path)))
+            }
+            SinkSpec::Table { title, limit } => {
+                let title = if title.is_empty() { &spec.name } else { title };
+                sinks.push(Box::new(TableSink::new(title, *limit)));
+            }
+            SinkSpec::Chart { title, x, y, series, log_x, width, height } => {
+                sinks.push(Box::new(ChartSink::new(
+                    title,
+                    x,
+                    y,
+                    series.as_deref(),
+                    *log_x,
+                    *width,
+                    *height,
+                )))
+            }
+        }
+    }
+    if let Some(path) = extra_csv {
+        sinks.push(Box::new(CsvSink::new(path)));
+    }
+    if sinks.is_empty() {
+        sinks.push(Box::new(TableSink::new(&spec.name, 50)));
+    }
+    sinks
+}
+
+// ---------------------------------------------------------------------------
+// Aggregation
+// ---------------------------------------------------------------------------
+
+struct AggState {
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+    min_args: Vec<Value>,
+    max_args: Vec<Value>,
+}
+
+impl AggState {
+    fn new() -> AggState {
+        AggState {
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            min_args: Vec::new(),
+            max_args: Vec::new(),
+        }
+    }
+}
+
+struct BoundAgg {
+    metric_idx: usize,
+    metric_name: String,
+    ops: Vec<AggOp>,
+    arg_idx: Vec<usize>,
+    arg_names: Vec<String>,
+}
+
+struct Group {
+    keys: Vec<Value>,
+    states: Vec<AggState>,
+}
+
+/// Streaming group-by accumulator: one `Group` per distinct key tuple,
+/// emitted in first-seen (grid) order.
+struct Aggregator {
+    key_idx: Vec<usize>,
+    aggs: Vec<BoundAgg>,
+    index: HashMap<String, usize>,
+    groups: Vec<Group>,
+}
+
+impl Aggregator {
+    fn push(&mut self, row: &[Value]) {
+        let keys: Vec<Value> =
+            self.key_idx.iter().map(|&i| row[i].clone()).collect();
+        let key_text = keys
+            .iter()
+            .map(|v| v.render())
+            .collect::<Vec<_>>()
+            .join("\u{1}");
+        let gi = match self.index.get(&key_text) {
+            Some(&i) => i,
+            None => {
+                let i = self.groups.len();
+                self.index.insert(key_text, i);
+                self.groups.push(Group {
+                    keys,
+                    states: self.aggs.iter().map(|_| AggState::new()).collect(),
+                });
+                i
+            }
+        };
+        let g = &mut self.groups[gi];
+        for (a, st) in self.aggs.iter().zip(&mut g.states) {
+            let v = row[a.metric_idx].as_f64();
+            st.count += 1;
+            st.sum += v;
+            if v < st.min || st.min_args.is_empty() {
+                st.min = st.min.min(v);
+                st.min_args =
+                    a.arg_idx.iter().map(|&i| row[i].clone()).collect();
+            }
+            if v > st.max || st.max_args.is_empty() {
+                st.max = st.max.max(v);
+                st.max_args =
+                    a.arg_idx.iter().map(|&i| row[i].clone()).collect();
+            }
+        }
+    }
+
+    /// Output columns for grouped mode: group keys, the group size, then
+    /// one column per (metric, op) — argmin/argmax expand to one column
+    /// per reported arg field.
+    fn columns(&self, key_names: &[String]) -> Vec<String> {
+        let mut cols: Vec<String> = key_names.to_vec();
+        cols.push("points".to_string());
+        for a in &self.aggs {
+            for op in &a.ops {
+                match op {
+                    AggOp::Min => cols.push(format!("{}_min", a.metric_name)),
+                    AggOp::Max => cols.push(format!("{}_max", a.metric_name)),
+                    AggOp::Mean => cols.push(format!("{}_mean", a.metric_name)),
+                    AggOp::Count => {
+                        cols.push(format!("{}_count", a.metric_name))
+                    }
+                    AggOp::ArgMin => {
+                        for f in &a.arg_names {
+                            cols.push(format!("{f}_at_min_{}", a.metric_name));
+                        }
+                    }
+                    AggOp::ArgMax => {
+                        for f in &a.arg_names {
+                            cols.push(format!("{f}_at_max_{}", a.metric_name));
+                        }
+                    }
+                }
+            }
+        }
+        cols
+    }
+
+    fn emit(&self, sinks: &mut [&mut dyn RowSink]) -> Result<usize> {
+        for g in &self.groups {
+            let mut row: Vec<Value> = g.keys.clone();
+            let points = g.states.first().map(|s| s.count).unwrap_or(0);
+            row.push(Value::Num(points as f64));
+            for (a, st) in self.aggs.iter().zip(&g.states) {
+                for op in &a.ops {
+                    match op {
+                        AggOp::Min => row.push(Value::Num(st.min)),
+                        AggOp::Max => row.push(Value::Num(st.max)),
+                        AggOp::Mean => row.push(Value::Num(
+                            st.sum / st.count.max(1) as f64,
+                        )),
+                        AggOp::Count => row.push(Value::Num(st.count as f64)),
+                        AggOp::ArgMin => {
+                            row.extend(st.min_args.iter().cloned())
+                        }
+                        AggOp::ArgMax => {
+                            row.extend(st.max_args.iter().cloned())
+                        }
+                    }
+                }
+            }
+            for s in sinks.iter_mut() {
+                s.row(&row)?;
+            }
+        }
+        Ok(self.groups.len())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The runner
+// ---------------------------------------------------------------------------
+
+/// Execution knobs the CLI forwards.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RunOptions {
+    /// Worker threads (0 = all cores).
+    pub threads: usize,
+    /// Streaming chunk size override in points (0 = spec / default 16384).
+    pub chunk: usize,
+}
+
+/// What happened: the counts a caller (CLI, CI smoke, tests) checks.
+#[derive(Debug, Clone, Default)]
+pub struct StudyOutcome {
+    pub points_evaluated: usize,
+    pub rows_matched: usize,
+    pub groups_emitted: usize,
+    /// Rendered blocks (tables/charts) and sink summaries, in sink order.
+    pub renders: Vec<String>,
+}
+
+/// Bound pipeline state shared by every source's streaming loop.
+struct Pipeline {
+    base_len: usize,
+    filters: Vec<Expr>,
+    /// (name, derived expr, base-field index) — exactly one of the last
+    /// two is set.
+    metrics: Vec<(String, Option<Expr>, Option<usize>)>,
+    out_idx: Vec<usize>,
+    agg: Option<Aggregator>,
+    row: Vec<Value>,
+    nums: Vec<f64>,
+    outcome: StudyOutcome,
+}
+
+impl Pipeline {
+    /// Push the (already filled) base row through metrics → filters →
+    /// aggregation or sinks.
+    fn process_row(&mut self, sinks: &mut [&mut dyn RowSink]) -> Result<()> {
+        self.outcome.points_evaluated += 1;
+        self.nums.clear();
+        for v in &self.row {
+            self.nums.push(v.as_f64());
+        }
+        for (_, expr, base) in &self.metrics {
+            let v = match (expr, base) {
+                (_, Some(i)) => self.nums[*i],
+                (Some(e), None) => e.eval(&self.nums),
+                (None, None) => unreachable!("metric binds expr or field"),
+            };
+            self.row.push(Value::Num(v));
+            self.nums.push(v);
+        }
+        let keep = self.filters.iter().all(|f| f.eval(&self.nums) != 0.0);
+        if keep {
+            self.outcome.rows_matched += 1;
+            if let Some(agg) = &mut self.agg {
+                agg.push(&self.row);
+            } else {
+                let out: Vec<Value> =
+                    self.out_idx.iter().map(|&i| self.row[i].clone()).collect();
+                for s in sinks.iter_mut() {
+                    s.row(&out)?;
+                }
+            }
+        }
+        self.row.truncate(self.base_len);
+        Ok(())
+    }
+}
+
+fn field_index(schema: &[String], name: &str, what: &str) -> Result<usize> {
+    schema.iter().position(|s| s == name).ok_or_else(|| {
+        Error::Study(format!(
+            "{what}: unknown field {name:?}; available fields: {}",
+            schema.join(", ")
+        ))
+    })
+}
+
+fn expr_fields(e: &Expr, out: &mut Vec<usize>) {
+    match e {
+        Expr::Field(i) => out.push(*i),
+        Expr::Unary(_, a) => expr_fields(a, out),
+        Expr::Binary(_, a, b) => {
+            expr_fields(a, out);
+            expr_fields(b, out);
+        }
+        Expr::Call(_, args) => {
+            for a in args {
+                expr_fields(a, out);
+            }
+        }
+        Expr::Num(_) => {}
+    }
+}
+
+fn check_numeric(
+    e: &Expr,
+    kinds: &[FieldKind],
+    names: &[String],
+    what: &str,
+) -> Result<()> {
+    let mut fields = Vec::new();
+    expr_fields(e, &mut fields);
+    for i in fields {
+        if kinds[i] == FieldKind::Str {
+            return Err(Error::Study(format!(
+                "{what}: field {:?} is a string label; only numeric fields \
+                 can appear in expressions (use it in group_by or columns \
+                 instead)",
+                names[i]
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Run a resolved study through its sinks. Returns the outcome counts
+/// plus every sink's rendered output (in sink order).
+pub fn run_study(
+    resolved: &ResolvedStudy,
+    opts: RunOptions,
+    sinks: &mut [&mut dyn RowSink],
+) -> Result<StudyOutcome> {
+    let spec = &resolved.spec;
+
+    // -- bind schema, metrics, filters ------------------------------------
+    let base = base_schema(spec.source);
+    let mut schema_names: Vec<String> =
+        base.iter().map(|(n, _)| n.to_string()).collect();
+    let mut schema_kinds: Vec<FieldKind> =
+        base.iter().map(|(_, k)| *k).collect();
+    let base_len = schema_names.len();
+
+    let metric_specs: Vec<(String, String)> = if spec.metrics.is_empty() {
+        default_metric_fields(spec.source)
+            .iter()
+            .map(|f| (f.to_string(), f.to_string()))
+            .collect()
+    } else {
+        spec.metrics
+            .iter()
+            .map(|m| (m.name.clone(), m.expr.clone()))
+            .collect()
+    };
+    let mut metrics: Vec<(String, Option<Expr>, Option<usize>)> = Vec::new();
+    for (name, expr_text) in &metric_specs {
+        let existing = schema_names.iter().position(|s| s == name);
+        if let Some(i) = existing {
+            if expr_text != name || i >= base_len {
+                return Err(Error::Study(format!(
+                    "metrics: name {name:?} collides with an existing field; \
+                     pick a distinct name for the derived expression"
+                )));
+            }
+            if schema_kinds[i] == FieldKind::Str {
+                return Err(Error::Study(format!(
+                    "metrics: {name:?} is a string label, not a metric; list \
+                     it under \"columns\" (or \"group_by\") instead"
+                )));
+            }
+            metrics.push((name.clone(), None, Some(i)));
+        } else {
+            let e = Expr::parse(expr_text, &schema_names[..base_len])?;
+            check_numeric(
+                &e,
+                &schema_kinds[..base_len],
+                &schema_names[..base_len],
+                &format!("metric {name:?}"),
+            )?;
+            metrics.push((name.clone(), Some(e), None));
+        }
+        schema_names.push(name.clone());
+        schema_kinds.push(FieldKind::Num);
+    }
+
+    let mut filters = Vec::new();
+    for f in &spec.filters {
+        let e = Expr::parse(f, &schema_names)?;
+        check_numeric(&e, &schema_kinds, &schema_names, &format!("filter {f:?}"))?;
+        filters.push(e);
+    }
+
+    // -- output columns / aggregation --------------------------------------
+    let (out_names, out_idx, agg) = if spec.group_by.is_empty() {
+        let mut idx: Vec<usize> = Vec::new();
+        if spec.columns.is_empty() {
+            if spec.source == Source::Grid {
+                for c in default_id_columns(spec.source) {
+                    idx.push(field_index(&schema_names, c, "columns")?);
+                }
+            } else {
+                idx = (0..base_len).collect();
+            }
+        } else {
+            for c in &spec.columns {
+                idx.push(field_index(&schema_names, c, "columns")?);
+            }
+        }
+        for (name, _, _) in &metrics {
+            let i = field_index(&schema_names, name, "metrics")?;
+            if !idx.contains(&i) {
+                idx.push(i);
+            }
+        }
+        let names: Vec<String> =
+            idx.iter().map(|&i| schema_names[i].clone()).collect();
+        (names, idx, None)
+    } else {
+        let mut key_idx = Vec::new();
+        for k in &spec.group_by {
+            key_idx.push(field_index(&schema_names, k, "group_by")?);
+        }
+        let mut bound = Vec::new();
+        for a in &spec.aggregate {
+            let metric_idx =
+                field_index(&schema_names, &a.metric, "aggregate.metric")?;
+            if schema_kinds[metric_idx] == FieldKind::Str {
+                return Err(Error::Study(format!(
+                    "aggregate: {:?} is a string field and cannot be reduced",
+                    a.metric
+                )));
+            }
+            let mut arg_idx = Vec::new();
+            for f in &a.args {
+                arg_idx.push(field_index(&schema_names, f, "aggregate.args")?);
+            }
+            bound.push(BoundAgg {
+                metric_idx,
+                metric_name: a.metric.clone(),
+                ops: a.ops.clone(),
+                arg_idx,
+                arg_names: a.args.clone(),
+            });
+        }
+        let agg = Aggregator {
+            key_idx,
+            aggs: bound,
+            index: HashMap::new(),
+            groups: Vec::new(),
+        };
+        let names = agg.columns(&spec.group_by);
+        (names, Vec::new(), Some(agg))
+    };
+
+    for s in sinks.iter_mut() {
+        s.begin(&out_names)?;
+    }
+
+    let mut pl = Pipeline {
+        base_len,
+        filters,
+        metrics,
+        out_idx,
+        agg,
+        row: Vec::new(),
+        nums: Vec::new(),
+        outcome: StudyOutcome::default(),
+    };
+
+    // -- stream the source --------------------------------------------------
+    match spec.source {
+        Source::Grid => stream_grid(resolved, opts, &mut pl, sinks)?,
+        Source::Zoo => {
+            for row in zoo_rows() {
+                pl.row = row;
+                pl.process_row(sinks)?;
+            }
+        }
+        Source::Table3 => {
+            for row in table3_rows() {
+                pl.row = row;
+                pl.process_row(sinks)?;
+            }
+        }
+    }
+
+    // -- finish --------------------------------------------------------------
+    if let Some(agg) = pl.agg.take() {
+        pl.outcome.groups_emitted = agg.emit(sinks)?;
+    }
+    let mut outcome = pl.outcome;
+    for s in sinks.iter_mut() {
+        if let Some(text) = s.finish()? {
+            outcome.renders.push(text);
+        }
+    }
+    Ok(outcome)
+}
+
+fn stream_grid(
+    resolved: &ResolvedStudy,
+    opts: RunOptions,
+    pl: &mut Pipeline,
+    sinks: &mut [&mut dyn RowSink],
+) -> Result<()> {
+    let chunk = if opts.chunk > 0 {
+        opts.chunk
+    } else if resolved.spec.chunk > 0 {
+        resolved.spec.chunk
+    } else {
+        16384
+    };
+    for hw in &resolved.hardware {
+        for seg in &resolved.segments {
+            let mut buf: Vec<ModelConfig> =
+                Vec::with_capacity(chunk.min(65536));
+            let mut failed: Option<Error> = None;
+            {
+                let pl: &mut Pipeline = &mut *pl;
+                let sinks: &mut [&mut dyn RowSink] = &mut *sinks;
+                let failed = &mut failed;
+                let buf = &mut buf;
+                seg.builder.model_configs(&mut |cfg| {
+                    if failed.is_some() {
+                        return;
+                    }
+                    buf.push(cfg);
+                    if buf.len() >= chunk {
+                        if let Err(e) =
+                            eval_chunk(pl, sinks, hw, seg, buf, opts.threads)
+                        {
+                            *failed = Some(e);
+                        }
+                        buf.clear();
+                    }
+                });
+            }
+            if let Some(e) = failed {
+                return Err(e);
+            }
+            if !buf.is_empty() {
+                eval_chunk(pl, sinks, hw, seg, &buf, opts.threads)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+fn eval_chunk(
+    pl: &mut Pipeline,
+    sinks: &mut [&mut dyn RowSink],
+    hw: &ResolvedHw,
+    seg: &ResolvedSegment,
+    cfgs: &[ModelConfig],
+    threads: usize,
+) -> Result<()> {
+    let grid = ScenarioGrid {
+        hardware: vec![hw.point.clone()],
+        points: cfgs
+            .iter()
+            .map(|&cfg| Scenario { cfg, opts: GraphOptions::default(), hw: 0 })
+            .collect(),
+    };
+    let metrics = sweep::run_with(&grid, threads);
+    let series = seg.label.clone().unwrap_or_default();
+    for (cfg, m) in cfgs.iter().zip(&metrics) {
+        fill_grid_row(&mut pl.row, hw, &series, cfg, m);
+        pl.process_row(sinks)?;
+    }
+    Ok(())
+}
+
+fn fill_grid_row(
+    row: &mut Vec<Value>,
+    hw: &ResolvedHw,
+    series: &str,
+    cfg: &ModelConfig,
+    m: &PointMetrics,
+) {
+    let samples = (cfg.batch * cfg.microbatches() * cfg.dp()) as f64;
+    row.clear();
+    row.push(Value::Str(hw.point.device.name.clone()));
+    row.push(Value::Str(hw.label.clone()));
+    row.push(Value::Str(series.to_string()));
+    row.push(Value::Num(hw.ratio));
+    row.push(Value::Str(hw.point.topology.label()));
+    row.push(Value::Num(hw.interference));
+    row.push(Value::Num(cfg.hidden as f64));
+    row.push(Value::Num(cfg.seq_len as f64));
+    row.push(Value::Num(cfg.batch as f64));
+    row.push(Value::Num(cfg.layers as f64));
+    row.push(Value::Num(cfg.heads as f64));
+    row.push(Value::Num(cfg.ffn_mult as f64));
+    row.push(Value::Num(cfg.tp() as f64));
+    row.push(Value::Num(cfg.pp() as f64));
+    row.push(Value::Num(cfg.microbatches() as f64));
+    row.push(Value::Bool(cfg.seq_par()));
+    row.push(Value::Num(cfg.dp() as f64));
+    row.push(Value::Num(cfg.par.world_size() as f64));
+    row.push(Value::Num(samples));
+    row.push(Value::Str(
+        crate::analysis::strategies::archetype(&cfg.par).to_string(),
+    ));
+    row.push(Value::Num(m.makespan));
+    row.push(Value::Num(m.makespan)); // iter_time alias
+    row.push(Value::Num(m.compute_time));
+    row.push(Value::Num(m.serialized_comm));
+    row.push(Value::Num(m.overlapped_comm));
+    row.push(Value::Num(m.p2p_comm));
+    row.push(Value::Num(m.exposed_comm));
+    row.push(Value::Num(m.hidden_comm));
+    row.push(Value::Num(m.bubble_time));
+    row.push(Value::Num(m.fwd_compute));
+    row.push(Value::Num(m.bwd_compute));
+    row.push(Value::Num(m.opt_compute));
+    row.push(Value::Num(m.comm_fraction()));
+    row.push(Value::Num(m.bubble_fraction()));
+    row.push(Value::Num(m.makespan / samples));
+}
+
+/// The zoo source's rows: every [`crate::model::zoo`] entry with the
+/// Figs 6/7/9b per-model metrics precomputed (same formulas, zoo order).
+fn zoo_rows() -> Vec<Vec<Value>> {
+    use crate::analysis::{algorithmic, memory_trends};
+    let entries = crate::model::zoo();
+    let fig6 = memory_trends::fig6();
+    let fig7 = algorithmic::fig7();
+    assert_eq!(entries.len(), fig6.len());
+    assert_eq!(entries.len(), fig7.len());
+    const ANCHOR_B: f64 = 3.9;
+    entries
+        .iter()
+        .enumerate()
+        .map(|(i, e)| {
+            let p = e.size_b / ANCHOR_B;
+            let s = algorithmic::capacity_scale_for_year(e.year);
+            vec![
+                Value::Str(e.name.to_string()),
+                Value::Str(e.kind.to_string()),
+                Value::Num(e.year as f64),
+                Value::Bool(e.futuristic),
+                Value::Num(e.layers as f64),
+                Value::Num(e.hidden as f64),
+                Value::Num(e.heads as f64),
+                Value::Num(e.seq_len as f64),
+                Value::Num(e.fc_dim as f64),
+                Value::Num(e.size_b),
+                Value::Num(fig7[i].batch as f64),
+                Value::Num(fig7[i].tp as f64),
+                Value::Num(fig7[i].slack),
+                Value::Num(fig7[i].edge),
+                Value::Num(fig7[i].slack_norm),
+                Value::Num(fig7[i].edge_norm),
+                Value::Num(fig6[i].demand_norm),
+                Value::Num(fig6[i].capacity_norm),
+                Value::Num(fig6[i].gap),
+                Value::Num(p),
+                Value::Num(s),
+                Value::Num(p / s),
+            ]
+        })
+        .collect()
+}
+
+/// The Table 3 parameter listing as rows.
+pub(crate) fn table3_rows() -> Vec<Vec<Value>> {
+    let g = crate::config::SweepGrid::default();
+    let fmt = |v: &[u64]| {
+        v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(", ")
+    };
+    vec![
+        vec![Value::Str("H".into()), Value::Str(fmt(&g.hidden))],
+        vec![Value::Str("B".into()), Value::Str(fmt(&g.batch))],
+        vec![Value::Str("SL".into()), Value::Str(fmt(&g.seq_len))],
+        vec![Value::Str("TP degree".into()), Value::Str(fmt(&g.tp))],
+        vec![Value::Str("DP degree".into()), Value::Str("any".into())],
+        vec![
+            Value::Str("serialized projections".into()),
+            Value::Str(g.serialized_projection_count().to_string()),
+        ],
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::catalog;
+    use crate::study::spec::StudySpec;
+
+    fn run_spec(spec_text: &str, opts: RunOptions) -> (VecSink, StudyOutcome) {
+        let spec = StudySpec::parse(spec_text).unwrap();
+        let resolved = spec.resolve(&catalog::mi210()).unwrap();
+        let mut sink = VecSink::new();
+        let outcome = {
+            let mut sinks: Vec<&mut dyn RowSink> = vec![&mut sink];
+            run_study(&resolved, opts, &mut sinks).unwrap()
+        };
+        (sink, outcome)
+    }
+
+    #[test]
+    fn point_rows_match_engine_metrics() {
+        let text = r#"{"name":"t","axes":{"hidden":[4096,16384],"tp":[8,32]}}"#;
+        let (sink, outcome) = run_spec(text, RunOptions::default());
+        assert_eq!(outcome.points_evaluated, 4);
+        assert_eq!(outcome.rows_matched, 4);
+        assert_eq!(sink.rows.len(), 4);
+        // cross-check against the materialized grid + engine
+        let spec = StudySpec::parse(text).unwrap();
+        let resolved = spec.resolve(&catalog::mi210()).unwrap();
+        let grid = resolved.full_grid();
+        let want = sweep::run(&grid);
+        let mk = sink.col("makespan");
+        let cf = sink.col("comm_fraction");
+        for (row, m) in sink.rows.iter().zip(&want) {
+            assert_eq!(row[mk].as_f64().to_bits(), m.makespan.to_bits());
+            assert_eq!(
+                row[cf].as_f64().to_bits(),
+                m.comm_fraction().to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn derived_metrics_and_filters() {
+        let text = r#"{
+          "name": "t",
+          "axes": {"hidden": [4096, 16384], "tp": [8, 32]},
+          "metrics": ["comm_fraction",
+                      {"name": "exposed_share",
+                       "expr": "exposed_comm / iter_time"}],
+          "filter": ["hidden == 16384"]
+        }"#;
+        let (sink, outcome) = run_spec(text, RunOptions::default());
+        assert_eq!(outcome.points_evaluated, 4);
+        assert_eq!(outcome.rows_matched, 2);
+        let h = sink.col("hidden");
+        let cf = sink.col("comm_fraction");
+        let es = sink.col("exposed_share");
+        for row in &sink.rows {
+            assert_eq!(row[h].as_f64(), 16384.0);
+            // exposed_comm / iter_time is exactly the comm fraction
+            assert_eq!(
+                row[es].as_f64().to_bits(),
+                row[cf].as_f64().to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn chunked_streaming_is_invariant() {
+        let text = r#"{"name":"t","axes":{"hidden":[1024,4096],"tp":[1,8,16],
+                       "dp":[1,4],"evolutions":[1,4]}}"#;
+        let (full, _) = run_spec(text, RunOptions { threads: 2, chunk: 0 });
+        let (tiny, _) = run_spec(text, RunOptions { threads: 2, chunk: 3 });
+        assert_eq!(full.rows.len(), 24);
+        assert_eq!(full.columns, tiny.columns);
+        for (a, b) in full.rows.iter().zip(&tiny.rows) {
+            for (x, y) in a.iter().zip(b) {
+                match (x, y) {
+                    (Value::Num(p), Value::Num(q)) => {
+                        assert_eq!(p.to_bits(), q.to_bits())
+                    }
+                    _ => assert_eq!(x, y),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn group_by_aggregates_min_mean_max_argmin() {
+        let text = r#"{
+          "name": "t",
+          "axes": {"hidden": [4096, 16384], "tp": [4, 16, 64]},
+          "group_by": ["hidden"],
+          "aggregate": [
+            {"metric": "comm_fraction", "ops": ["min", "mean", "max"]},
+            {"metric": "makespan", "ops": ["argmin"], "args": ["tp"]}
+          ]
+        }"#;
+        let (sink, outcome) = run_spec(text, RunOptions::default());
+        assert_eq!(outcome.points_evaluated, 6);
+        assert_eq!(outcome.groups_emitted, 2);
+        assert_eq!(sink.rows.len(), 2);
+        assert_eq!(
+            sink.columns,
+            vec![
+                "hidden",
+                "points",
+                "comm_fraction_min",
+                "comm_fraction_mean",
+                "comm_fraction_max",
+                "tp_at_min_makespan"
+            ]
+        );
+        // manual cross-check on the H=4096 group
+        let spec = StudySpec::parse(text).unwrap();
+        let resolved = spec.resolve(&catalog::mi210()).unwrap();
+        let grid = resolved.full_grid();
+        let all = sweep::run(&grid);
+        let cells: Vec<(u64, f64, f64)> = all
+            .iter()
+            .zip(&grid.points)
+            .filter(|(_, sc)| sc.cfg.hidden == 4096)
+            .map(|(m, sc)| (sc.cfg.tp(), m.comm_fraction(), m.makespan))
+            .collect();
+        assert_eq!(cells.len(), 3);
+        let row = &sink.rows[0];
+        assert_eq!(row[0].as_f64(), 4096.0);
+        assert_eq!(row[1].as_f64(), 3.0);
+        let min = cells.iter().map(|c| c.1).fold(f64::INFINITY, f64::min);
+        let max = cells.iter().map(|c| c.1).fold(f64::NEG_INFINITY, f64::max);
+        let mean = cells.iter().map(|c| c.1).sum::<f64>() / 3.0;
+        assert_eq!(row[2].as_f64().to_bits(), min.to_bits());
+        assert!((row[3].as_f64() - mean).abs() < 1e-15);
+        assert_eq!(row[4].as_f64().to_bits(), max.to_bits());
+        let best_tp = cells
+            .iter()
+            .min_by(|a, b| a.2.partial_cmp(&b.2).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(row[5].as_f64(), best_tp as f64);
+    }
+
+    #[test]
+    fn zoo_source_rows() {
+        let text = r#"{
+          "name": "zoo",
+          "source": "zoo",
+          "filter": ["futuristic == 0"]
+        }"#;
+        let (sink, outcome) = run_spec(text, RunOptions::default());
+        assert_eq!(outcome.points_evaluated, crate::model::zoo().len());
+        assert_eq!(sink.rows.len(), 8); // Table 2's published models
+        let name = sink.col("name");
+        let gap = sink.col("gap");
+        assert_eq!(sink.rows[0][name], Value::Str("BERT".into()));
+        assert!((sink.rows[0][gap].as_f64() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table3_source_rows() {
+        let (sink, _) = run_spec(
+            r#"{"name":"t3","source":"table3"}"#,
+            RunOptions::default(),
+        );
+        assert_eq!(sink.rows.len(), 6);
+        assert_eq!(sink.columns, vec!["parameter", "values"]);
+        assert_eq!(sink.rows[5][1], Value::Str("196".into()));
+    }
+
+    #[test]
+    fn string_fields_rejected_in_expressions() {
+        let spec = StudySpec::parse(
+            r#"{"name":"x","metrics":[{"name":"bad","expr":"topology + 1"}]}"#,
+        )
+        .unwrap();
+        let resolved = spec.resolve(&catalog::mi210()).unwrap();
+        let mut sink = VecSink::new();
+        let mut sinks: Vec<&mut dyn RowSink> = vec![&mut sink];
+        let err = run_study(&resolved, RunOptions::default(), &mut sinks)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("string label"), "{err}");
+    }
+
+    #[test]
+    fn unknown_group_key_is_actionable() {
+        let spec = StudySpec::parse(
+            r#"{"name":"x","group_by":["hiden"],
+               "aggregate":[{"metric":"makespan","ops":["mean"]}]}"#,
+        )
+        .unwrap();
+        let resolved = spec.resolve(&catalog::mi210()).unwrap();
+        let mut sink = VecSink::new();
+        let mut sinks: Vec<&mut dyn RowSink> = vec![&mut sink];
+        let err = run_study(&resolved, RunOptions::default(), &mut sinks)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown field \"hiden\""), "{err}");
+        assert!(err.contains("hidden"), "{err}");
+    }
+
+    #[test]
+    fn csv_sink_streams_header_and_rows() {
+        let spec = StudySpec::parse(
+            r#"{"name":"csv","axes":{"hidden":[4096],"tp":[8,16]}}"#,
+        )
+        .unwrap();
+        let resolved = spec.resolve(&catalog::mi210()).unwrap();
+        let dir = std::env::temp_dir();
+        let path = dir.join("commscale_study_csv_test.csv");
+        let path_str = path.to_str().unwrap().to_string();
+        let mut csv = CsvSink::new(&path_str);
+        {
+            let mut sinks: Vec<&mut dyn RowSink> = vec![&mut csv];
+            run_study(&resolved, RunOptions::default(), &mut sinks).unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("device,scenario,series,"), "{}", lines[0]);
+        assert!(lines[0].contains("comm_fraction"));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn series_labels_flow_into_rows() {
+        let text = r#"{
+          "name": "s",
+          "axes": {"tp": [8],
+                   "series": [{"label": "a", "hidden": 4096},
+                              {"label": "b", "hidden": 16384}]}
+        }"#;
+        let (sink, _) = run_spec(text, RunOptions::default());
+        let s = sink.col("series");
+        assert_eq!(sink.rows[0][s], Value::Str("a".into()));
+        assert_eq!(sink.rows[1][s], Value::Str("b".into()));
+    }
+}

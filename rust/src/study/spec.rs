@@ -1,0 +1,1589 @@
+//! The declarative study specification: a serializable description of
+//! *what to sweep* (scenario axes), *what to keep* (filters), *what to
+//! report* (metrics, including derived expressions), *how to condense it*
+//! (group-by aggregation), and *where it goes* (sinks).
+//!
+//! Specs parse from JSON via [`crate::util::json`] (`StudySpec::from_json`)
+//! and serialize back (`StudySpec::to_json`) — round-tripping is part of
+//! the contract and is covered by `tests/study_api.rs`. Resolution
+//! ([`StudySpec::resolve`]) binds a spec to a device and produces the
+//! hardware points and per-segment grid builders the streaming runner
+//! ([`super::run`]) executes; [`ResolvedStudy::explain`] prints the
+//! resolved axes and point counts without simulating anything.
+
+use std::collections::BTreeMap;
+
+use crate::hw::{catalog, DeviceSpec, Evolution};
+use crate::model::Precision;
+use crate::parallelism::TopologyKind;
+use crate::sim::OverlapModel;
+use crate::sweep::{GridBuilder, HeadsPolicy, HwPoint, Scenario, ScenarioGrid};
+use crate::util::Json;
+use crate::{Error, Result};
+
+/// Where a study's rows come from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Source {
+    /// The sweep engine over a scenario grid (the default).
+    Grid,
+    /// The published-model zoo (Table 2) with the algorithmic per-model
+    /// metrics of Figs 6/7/9b precomputed as row fields.
+    Zoo,
+    /// The Table 3 parameter listing (parameter/values string rows).
+    Table3,
+}
+
+impl Source {
+    fn as_str(&self) -> &'static str {
+        match self {
+            Source::Grid => "grid",
+            Source::Zoo => "zoo",
+            Source::Table3 => "table3",
+        }
+    }
+
+    fn parse(s: &str) -> Result<Source> {
+        match s {
+            "grid" => Ok(Source::Grid),
+            "zoo" => Ok(Source::Zoo),
+            "table3" => Ok(Source::Table3),
+            other => Err(Error::Study(format!(
+                "source: unknown {other:?} (expected \"grid\", \"zoo\", or \
+                 \"table3\")"
+            ))),
+        }
+    }
+}
+
+/// One explicit hardware point: an evolution step, a topology recipe, and
+/// the overlapped-comm interference factor. The `label` becomes the row's
+/// `scenario` field (Fig 14 names its three scenarios this way).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HwAxisSpec {
+    pub label: Option<String>,
+    pub evolution: Evolution,
+    pub topology: TopologyKind,
+    pub interference: f64,
+}
+
+impl HwAxisSpec {
+    pub fn new(evolution: Evolution, topology: TopologyKind) -> HwAxisSpec {
+        HwAxisSpec { label: None, evolution, topology, interference: 1.0 }
+    }
+}
+
+/// Per-series overrides of the model axes: Fig 10's named (H, SL) series
+/// and the highlighted per-model (H, SL, TP) pairings are irregular —
+/// not a cartesian product — so a spec may enumerate `series`, each
+/// overriding any subset of the model axes (unset axes inherit the
+/// spec-level values).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SeriesSpec {
+    pub label: Option<String>,
+    pub hidden: Option<Vec<u64>>,
+    pub seq_len: Option<Vec<u64>>,
+    pub batch: Option<Vec<u64>>,
+    pub layers: Option<Vec<u64>>,
+    pub ffn_mult: Option<Vec<u64>>,
+    pub tp: Option<Vec<u64>>,
+    pub pp: Option<Vec<u64>>,
+    pub microbatches: Option<Vec<u64>>,
+    pub seq_par: Option<Vec<bool>>,
+    pub dp: Option<Vec<u64>>,
+}
+
+/// The scenario axes of a grid-source study — the declarative form of
+/// [`GridBuilder`] plus series/explicit-hardware irregularity.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AxesSpec {
+    pub hidden: Vec<u64>,
+    pub seq_len: Vec<u64>,
+    pub batch: Vec<u64>,
+    pub layers: Vec<u64>,
+    pub ffn_mult: Vec<u64>,
+    pub tp: Vec<u64>,
+    pub pp: Vec<u64>,
+    pub microbatches: Vec<u64>,
+    pub seq_par: Vec<bool>,
+    pub dp: Vec<u64>,
+    /// Hardware evolutions (crossed with `topologies`) — ignored when
+    /// `hardware` lists explicit points.
+    pub evolutions: Vec<Evolution>,
+    pub topologies: Vec<TopologyKind>,
+    /// Explicit hardware points (labels allowed); overrides the
+    /// evolutions × topologies product when non-empty.
+    pub hardware: Vec<HwAxisSpec>,
+    pub series: Vec<SeriesSpec>,
+    /// Keep only strategies with `tp·pp·dp == world`.
+    pub world: Option<u64>,
+    pub heads: HeadsPolicy,
+    pub precision: Precision,
+}
+
+impl Default for AxesSpec {
+    fn default() -> Self {
+        AxesSpec {
+            hidden: vec![4096],
+            seq_len: vec![2048],
+            batch: vec![1],
+            layers: vec![1],
+            ffn_mult: vec![4],
+            tp: vec![1],
+            pp: vec![1],
+            microbatches: vec![1],
+            seq_par: vec![false],
+            dp: vec![1],
+            evolutions: vec![Evolution::none()],
+            topologies: vec![TopologyKind::SingleTier],
+            hardware: Vec::new(),
+            series: Vec::new(),
+            world: None,
+            heads: HeadsPolicy::RoundToTp,
+            precision: Precision::F16,
+        }
+    }
+}
+
+/// A named output column: `expr` evaluates over the row's fields.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricSpec {
+    pub name: String,
+    pub expr: String,
+}
+
+impl MetricSpec {
+    /// A metric that is just a field reference (`name == expr`).
+    pub fn field(name: &str) -> MetricSpec {
+        MetricSpec { name: name.to_string(), expr: name.to_string() }
+    }
+
+    pub fn named(name: &str, expr: &str) -> MetricSpec {
+        MetricSpec { name: name.to_string(), expr: expr.to_string() }
+    }
+}
+
+/// Aggregation operators over a group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AggOp {
+    Min,
+    Max,
+    Mean,
+    Count,
+    /// Report `args` fields at the row minimizing the metric.
+    ArgMin,
+    /// Report `args` fields at the row maximizing the metric.
+    ArgMax,
+}
+
+impl AggOp {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            AggOp::Min => "min",
+            AggOp::Max => "max",
+            AggOp::Mean => "mean",
+            AggOp::Count => "count",
+            AggOp::ArgMin => "argmin",
+            AggOp::ArgMax => "argmax",
+        }
+    }
+
+    fn parse(s: &str) -> Result<AggOp> {
+        match s {
+            "min" => Ok(AggOp::Min),
+            "max" => Ok(AggOp::Max),
+            "mean" => Ok(AggOp::Mean),
+            "count" => Ok(AggOp::Count),
+            "argmin" => Ok(AggOp::ArgMin),
+            "argmax" => Ok(AggOp::ArgMax),
+            other => Err(Error::Study(format!(
+                "aggregate op: unknown {other:?} (expected min, max, mean, \
+                 count, argmin, or argmax)"
+            ))),
+        }
+    }
+}
+
+/// One aggregation: a metric (a field or metric name) reduced by `ops`
+/// within each group; `args` lists the fields reported at the arg-min/max
+/// row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AggSpec {
+    pub metric: String,
+    pub ops: Vec<AggOp>,
+    pub args: Vec<String>,
+}
+
+/// Where result rows go. CSV/JSONL stream row-by-row; table and chart
+/// sinks collect (bounded for tables) and render at the end.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SinkSpec {
+    /// `path == "-"` streams to stdout.
+    Csv { path: String },
+    Jsonl { path: String },
+    Table { title: String, limit: usize },
+    Chart {
+        title: String,
+        x: String,
+        y: String,
+        series: Option<String>,
+        log_x: bool,
+        width: usize,
+        height: usize,
+    },
+}
+
+/// The serializable study description — the one scenario-query surface
+/// every figure, sweep, and custom analysis goes through.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StudySpec {
+    pub name: String,
+    pub description: String,
+    pub source: Source,
+    /// Device name (resolved against the catalog); `None` uses the
+    /// caller's default (the CLI's `--device`).
+    pub device: Option<String>,
+    pub axes: AxesSpec,
+    /// Point filters, ANDed. Expressions over the row fields.
+    pub filters: Vec<String>,
+    /// Output metrics; empty keeps the full metric set.
+    pub metrics: Vec<MetricSpec>,
+    /// Identity columns prepended to the output; empty uses defaults.
+    pub columns: Vec<String>,
+    pub group_by: Vec<String>,
+    pub aggregate: Vec<AggSpec>,
+    pub sinks: Vec<SinkSpec>,
+    /// Streaming chunk size in points (0 = default 16384).
+    pub chunk: usize,
+}
+
+impl Default for StudySpec {
+    fn default() -> Self {
+        StudySpec {
+            name: String::new(),
+            description: String::new(),
+            source: Source::Grid,
+            device: None,
+            axes: AxesSpec::default(),
+            filters: Vec::new(),
+            metrics: Vec::new(),
+            columns: Vec::new(),
+            group_by: Vec::new(),
+            aggregate: Vec::new(),
+            sinks: Vec::new(),
+            chunk: 0,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSON parsing
+// ---------------------------------------------------------------------------
+
+fn check_keys(obj: &BTreeMap<String, Json>, what: &str, allowed: &[&str]) -> Result<()> {
+    for k in obj.keys() {
+        if !allowed.contains(&k.as_str()) {
+            return Err(Error::Study(format!(
+                "{what}: unknown key {k:?}; allowed keys: {}",
+                allowed.join(", ")
+            )));
+        }
+    }
+    Ok(())
+}
+
+fn u64_list(v: &Json, what: &str) -> Result<Vec<u64>> {
+    let arr = v.as_arr().ok_or_else(|| {
+        Error::Study(format!("{what}: expected an array of integers"))
+    })?;
+    let mut out = Vec::with_capacity(arr.len());
+    for item in arr {
+        let n = item.as_f64().ok_or_else(|| {
+            Error::Study(format!("{what}: expected integers, found {item:?}"))
+        })?;
+        if n < 1.0 || n.fract() != 0.0 {
+            return Err(Error::Study(format!(
+                "{what}: values must be positive integers, got {n}"
+            )));
+        }
+        out.push(n as u64);
+    }
+    if out.is_empty() {
+        return Err(Error::Study(format!("{what}: axis must not be empty")));
+    }
+    Ok(out)
+}
+
+fn bool_list(v: &Json, what: &str) -> Result<Vec<bool>> {
+    let arr = v.as_arr().ok_or_else(|| {
+        Error::Study(format!("{what}: expected an array of booleans"))
+    })?;
+    let mut out = Vec::with_capacity(arr.len());
+    for item in arr {
+        match item {
+            Json::Bool(b) => out.push(*b),
+            Json::Num(n) if *n == 0.0 => out.push(false),
+            Json::Num(n) if *n == 1.0 => out.push(true),
+            other => {
+                return Err(Error::Study(format!(
+                    "{what}: expected booleans (or 0/1), found {other:?}"
+                )))
+            }
+        }
+    }
+    if out.is_empty() {
+        return Err(Error::Study(format!("{what}: axis must not be empty")));
+    }
+    Ok(out)
+}
+
+fn str_list(v: &Json, what: &str) -> Result<Vec<String>> {
+    let arr = v.as_arr().ok_or_else(|| {
+        Error::Study(format!("{what}: expected an array of strings"))
+    })?;
+    arr.iter()
+        .map(|item| {
+            item.as_str().map(|s| s.to_string()).ok_or_else(|| {
+                Error::Study(format!("{what}: expected strings, found {item:?}"))
+            })
+        })
+        .collect()
+}
+
+fn parse_evolution(v: &Json, what: &str) -> Result<Evolution> {
+    if let Some(r) = v.as_f64() {
+        if r <= 0.0 {
+            return Err(Error::Study(format!(
+                "{what}: flop-vs-bw ratio must be positive, got {r}"
+            )));
+        }
+        return Ok(Evolution { flop_scale: r, bw_scale: 1.0 });
+    }
+    if let Some(obj) = v.as_obj() {
+        check_keys(obj, what, &["flop", "bw"])?;
+        let scale = |key: &str| -> Result<f64> {
+            match v.get(key) {
+                None => Ok(1.0),
+                Some(x) => x.as_f64().ok_or_else(|| {
+                    Error::Study(format!(
+                        "{what}.{key}: expected a number, found {x:?}"
+                    ))
+                }),
+            }
+        };
+        let flop = scale("flop")?;
+        let bw = scale("bw")?;
+        if flop <= 0.0 || bw <= 0.0 {
+            return Err(Error::Study(format!(
+                "{what}: flop/bw scales must be positive, got {flop}/{bw}"
+            )));
+        }
+        return Ok(Evolution { flop_scale: flop, bw_scale: bw });
+    }
+    Err(Error::Study(format!(
+        "{what}: expected a flop-vs-bw ratio number or {{\"flop\", \"bw\"}}, \
+         found {v:?}"
+    )))
+}
+
+fn evolution_to_json(ev: &Evolution) -> Json {
+    if ev.bw_scale == 1.0 {
+        Json::num(ev.flop_scale)
+    } else {
+        Json::obj(vec![
+            ("flop", Json::num(ev.flop_scale)),
+            ("bw", Json::num(ev.bw_scale)),
+        ])
+    }
+}
+
+fn parse_topology(v: &Json, what: &str) -> Result<TopologyKind> {
+    if let Some(s) = v.as_str() {
+        if s == "flat" {
+            return Ok(TopologyKind::SingleTier);
+        }
+        if let Some(n) = s.strip_prefix("node") {
+            let node_size: u64 = n.parse().map_err(|_| {
+                Error::Study(format!("{what}: bad node size in {s:?}"))
+            })?;
+            if node_size == 0 {
+                return Err(Error::Study(format!(
+                    "{what}: node size must be >= 1"
+                )));
+            }
+            return Ok(TopologyKind::tiered_8x(node_size));
+        }
+        return Err(Error::Study(format!(
+            "{what}: unknown topology {s:?} (expected \"flat\" or \"node<k>\")"
+        )));
+    }
+    if let Some(obj) = v.as_obj() {
+        check_keys(obj, what, &["node_size", "inter_bw_frac", "inter_latency_x"])?;
+        let node_size = v.u64_field("node_size").map_err(|_| {
+            Error::Study(format!("{what}: tiered topology needs \"node_size\""))
+        })?;
+        if node_size == 0 {
+            return Err(Error::Study(format!("{what}: node size must be >= 1")));
+        }
+        let knob = |key: &str, default: f64| -> Result<f64> {
+            let x = match v.get(key) {
+                None => return Ok(default),
+                Some(x) => x.as_f64().ok_or_else(|| {
+                    Error::Study(format!(
+                        "{what}.{key}: expected a number, found {x:?}"
+                    ))
+                })?,
+            };
+            if x <= 0.0 {
+                return Err(Error::Study(format!(
+                    "{what}.{key}: must be positive, got {x}"
+                )));
+            }
+            Ok(x)
+        };
+        let frac = knob("inter_bw_frac", 1.0 / 8.0)?;
+        let lat = knob("inter_latency_x", 10.0)?;
+        return Ok(TopologyKind::Tiered {
+            node_size,
+            inter_bw_frac: frac,
+            inter_latency_x: lat,
+        });
+    }
+    Err(Error::Study(format!(
+        "{what}: expected \"flat\", \"node<k>\", or a tiered object, found \
+         {v:?}"
+    )))
+}
+
+fn topology_to_json(tk: &TopologyKind) -> Json {
+    match *tk {
+        TopologyKind::SingleTier => Json::str("flat"),
+        TopologyKind::Tiered { node_size, inter_bw_frac, inter_latency_x } => {
+            if (inter_bw_frac - 1.0 / 8.0).abs() < 1e-12 && inter_latency_x == 10.0 {
+                Json::str(&format!("node{node_size}"))
+            } else {
+                Json::obj(vec![
+                    ("node_size", Json::num(node_size as f64)),
+                    ("inter_bw_frac", Json::num(inter_bw_frac)),
+                    ("inter_latency_x", Json::num(inter_latency_x)),
+                ])
+            }
+        }
+    }
+}
+
+impl AxesSpec {
+    fn from_json(v: &Json) -> Result<AxesSpec> {
+        let obj = v
+            .as_obj()
+            .ok_or_else(|| Error::Study("axes: expected an object".into()))?;
+        check_keys(
+            obj,
+            "axes",
+            &[
+                "hidden", "seq_len", "batch", "layers", "ffn_mult", "tp", "pp",
+                "microbatches", "seq_par", "dp", "evolutions", "topologies",
+                "hardware", "series", "world", "heads", "precision",
+            ],
+        )?;
+        let mut a = AxesSpec::default();
+        for (key, field) in [
+            ("hidden", &mut a.hidden as &mut Vec<u64>),
+            ("seq_len", &mut a.seq_len),
+            ("batch", &mut a.batch),
+            ("layers", &mut a.layers),
+            ("ffn_mult", &mut a.ffn_mult),
+            ("tp", &mut a.tp),
+            ("pp", &mut a.pp),
+            ("microbatches", &mut a.microbatches),
+            ("dp", &mut a.dp),
+        ] {
+            if let Some(x) = v.get(key) {
+                *field = u64_list(x, &format!("axes.{key}"))?;
+            }
+        }
+        if let Some(x) = v.get("seq_par") {
+            a.seq_par = bool_list(x, "axes.seq_par")?;
+        }
+        if let Some(x) = v.get("evolutions") {
+            let arr = x.as_arr().ok_or_else(|| {
+                Error::Study("axes.evolutions: expected an array".into())
+            })?;
+            a.evolutions = arr
+                .iter()
+                .map(|e| parse_evolution(e, "axes.evolutions"))
+                .collect::<Result<Vec<_>>>()?;
+            if a.evolutions.is_empty() {
+                return Err(Error::Study(
+                    "axes.evolutions: axis must not be empty".into(),
+                ));
+            }
+        }
+        if let Some(x) = v.get("topologies") {
+            let arr = x.as_arr().ok_or_else(|| {
+                Error::Study("axes.topologies: expected an array".into())
+            })?;
+            a.topologies = arr
+                .iter()
+                .map(|t| parse_topology(t, "axes.topologies"))
+                .collect::<Result<Vec<_>>>()?;
+            if a.topologies.is_empty() {
+                return Err(Error::Study(
+                    "axes.topologies: axis must not be empty".into(),
+                ));
+            }
+        }
+        if let Some(x) = v.get("hardware") {
+            let arr = x.as_arr().ok_or_else(|| {
+                Error::Study("axes.hardware: expected an array".into())
+            })?;
+            for h in arr {
+                let hobj = h.as_obj().ok_or_else(|| {
+                    Error::Study("axes.hardware: expected objects".into())
+                })?;
+                check_keys(
+                    hobj,
+                    "axes.hardware",
+                    &["label", "evolution", "topology", "interference"],
+                )?;
+                let mut hw = HwAxisSpec::new(
+                    Evolution::none(),
+                    TopologyKind::SingleTier,
+                );
+                if let Some(l) = h.get("label") {
+                    hw.label = Some(
+                        l.as_str()
+                            .ok_or_else(|| {
+                                Error::Study(
+                                    "axes.hardware.label: expected a string"
+                                        .into(),
+                                )
+                            })?
+                            .to_string(),
+                    );
+                }
+                if let Some(e) = h.get("evolution") {
+                    hw.evolution = parse_evolution(e, "axes.hardware.evolution")?;
+                }
+                if let Some(t) = h.get("topology") {
+                    hw.topology = parse_topology(t, "axes.hardware.topology")?;
+                }
+                if let Some(f) = h.get("interference") {
+                    let x = f.as_f64().ok_or_else(|| {
+                        Error::Study(
+                            "axes.hardware.interference: expected a number"
+                                .into(),
+                        )
+                    })?;
+                    if x <= 0.0 {
+                        return Err(Error::Study(format!(
+                            "axes.hardware.interference: must be positive, \
+                             got {x}"
+                        )));
+                    }
+                    hw.interference = x;
+                }
+                a.hardware.push(hw);
+            }
+        }
+        if let Some(x) = v.get("series") {
+            let arr = x.as_arr().ok_or_else(|| {
+                Error::Study("axes.series: expected an array".into())
+            })?;
+            for s in arr {
+                let sobj = s.as_obj().ok_or_else(|| {
+                    Error::Study("axes.series: expected objects".into())
+                })?;
+                check_keys(
+                    sobj,
+                    "axes.series",
+                    &[
+                        "label", "hidden", "seq_len", "batch", "layers",
+                        "ffn_mult", "tp", "pp", "microbatches", "seq_par", "dp",
+                    ],
+                )?;
+                let mut ss = SeriesSpec::default();
+                if let Some(l) = s.get("label") {
+                    ss.label = Some(
+                        l.as_str()
+                            .ok_or_else(|| {
+                                Error::Study(
+                                    "axes.series.label: expected a string"
+                                        .into(),
+                                )
+                            })?
+                            .to_string(),
+                    );
+                }
+                for (key, slot) in [
+                    ("hidden", &mut ss.hidden as &mut Option<Vec<u64>>),
+                    ("seq_len", &mut ss.seq_len),
+                    ("batch", &mut ss.batch),
+                    ("layers", &mut ss.layers),
+                    ("ffn_mult", &mut ss.ffn_mult),
+                    ("tp", &mut ss.tp),
+                    ("pp", &mut ss.pp),
+                    ("microbatches", &mut ss.microbatches),
+                    ("dp", &mut ss.dp),
+                ] {
+                    if let Some(x) = s.get(key) {
+                        // scalar shorthand: {"hidden": 4096} == [4096]
+                        let list = if x.as_f64().is_some() {
+                            u64_list(
+                                &Json::arr(vec![x.clone()]),
+                                &format!("axes.series.{key}"),
+                            )?
+                        } else {
+                            u64_list(x, &format!("axes.series.{key}"))?
+                        };
+                        *slot = Some(list);
+                    }
+                }
+                if let Some(x) = s.get("seq_par") {
+                    ss.seq_par = Some(bool_list(x, "axes.series.seq_par")?);
+                }
+                a.series.push(ss);
+            }
+        }
+        if let Some(w) = v.get("world") {
+            let n = w.as_f64().ok_or_else(|| {
+                Error::Study("axes.world: expected an integer".into())
+            })?;
+            if n < 1.0 || n.fract() != 0.0 {
+                return Err(Error::Study(format!(
+                    "axes.world: must be a positive integer, got {n}"
+                )));
+            }
+            a.world = Some(n as u64);
+        }
+        if let Some(h) = v.get("heads") {
+            a.heads = match h.as_str() {
+                Some("round-to-tp") => HeadsPolicy::RoundToTp,
+                Some("paper") => HeadsPolicy::FixedHeadDim,
+                _ => {
+                    return Err(Error::Study(format!(
+                        "axes.heads: expected \"round-to-tp\" or \"paper\", \
+                         found {h:?}"
+                    )))
+                }
+            };
+        }
+        if let Some(p) = v.get("precision") {
+            a.precision = match p.as_str() {
+                Some("fp32") => Precision::F32,
+                Some("fp16") => Precision::F16,
+                Some("bf16") => Precision::BF16,
+                Some("fp8") => Precision::F8,
+                _ => {
+                    return Err(Error::Study(format!(
+                        "axes.precision: expected fp32|fp16|bf16|fp8, found \
+                         {p:?}"
+                    )))
+                }
+            };
+        }
+        Ok(a)
+    }
+
+    fn to_json(&self) -> Json {
+        let d = AxesSpec::default();
+        let mut pairs: Vec<(&str, Json)> = Vec::new();
+        let nums = |v: &[u64]| Json::arr(v.iter().map(|&n| Json::num(n as f64)));
+        for (key, ours, default) in [
+            ("hidden", &self.hidden, &d.hidden),
+            ("seq_len", &self.seq_len, &d.seq_len),
+            ("batch", &self.batch, &d.batch),
+            ("layers", &self.layers, &d.layers),
+            ("ffn_mult", &self.ffn_mult, &d.ffn_mult),
+            ("tp", &self.tp, &d.tp),
+            ("pp", &self.pp, &d.pp),
+            ("microbatches", &self.microbatches, &d.microbatches),
+            ("dp", &self.dp, &d.dp),
+        ] {
+            if ours != default {
+                pairs.push((key, nums(ours)));
+            }
+        }
+        if self.seq_par != d.seq_par {
+            pairs.push((
+                "seq_par",
+                Json::arr(self.seq_par.iter().map(|&b| Json::Bool(b))),
+            ));
+        }
+        if self.evolutions != d.evolutions {
+            pairs.push((
+                "evolutions",
+                Json::arr(self.evolutions.iter().map(evolution_to_json)),
+            ));
+        }
+        if self.topologies != d.topologies {
+            pairs.push((
+                "topologies",
+                Json::arr(self.topologies.iter().map(topology_to_json)),
+            ));
+        }
+        if !self.hardware.is_empty() {
+            pairs.push((
+                "hardware",
+                Json::arr(self.hardware.iter().map(|h| {
+                    let mut p: Vec<(&str, Json)> = Vec::new();
+                    if let Some(l) = &h.label {
+                        p.push(("label", Json::str(l)));
+                    }
+                    p.push(("evolution", evolution_to_json(&h.evolution)));
+                    p.push(("topology", topology_to_json(&h.topology)));
+                    if h.interference != 1.0 {
+                        p.push(("interference", Json::num(h.interference)));
+                    }
+                    Json::obj(p)
+                })),
+            ));
+        }
+        if !self.series.is_empty() {
+            pairs.push((
+                "series",
+                Json::arr(self.series.iter().map(|s| {
+                    let mut p: Vec<(&str, Json)> = Vec::new();
+                    if let Some(l) = &s.label {
+                        p.push(("label", Json::str(l)));
+                    }
+                    for (key, v) in [
+                        ("hidden", &s.hidden),
+                        ("seq_len", &s.seq_len),
+                        ("batch", &s.batch),
+                        ("layers", &s.layers),
+                        ("ffn_mult", &s.ffn_mult),
+                        ("tp", &s.tp),
+                        ("pp", &s.pp),
+                        ("microbatches", &s.microbatches),
+                        ("dp", &s.dp),
+                    ] {
+                        if let Some(list) = v {
+                            p.push((key, nums(list)));
+                        }
+                    }
+                    if let Some(sp) = &s.seq_par {
+                        p.push((
+                            "seq_par",
+                            Json::arr(sp.iter().map(|&b| Json::Bool(b))),
+                        ));
+                    }
+                    Json::obj(p)
+                })),
+            ));
+        }
+        if let Some(w) = self.world {
+            pairs.push(("world", Json::num(w as f64)));
+        }
+        if self.heads != d.heads {
+            pairs.push(("heads", Json::str("paper")));
+        }
+        if self.precision != d.precision {
+            pairs.push(("precision", Json::str(self.precision.name())));
+        }
+        Json::obj(pairs)
+    }
+}
+
+impl StudySpec {
+    pub fn parse(text: &str) -> Result<StudySpec> {
+        let v = Json::parse(text)
+            .map_err(|e| Error::Study(format!("spec is not valid JSON: {e}")))?;
+        StudySpec::from_json(&v)
+    }
+
+    pub fn parse_file(path: &std::path::Path) -> Result<StudySpec> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            Error::Study(format!("cannot read spec {}: {e}", path.display()))
+        })?;
+        StudySpec::parse(&text)
+    }
+
+    pub fn from_json(v: &Json) -> Result<StudySpec> {
+        let obj = v.as_obj().ok_or_else(|| {
+            Error::Study("spec: expected a JSON object".into())
+        })?;
+        check_keys(
+            obj,
+            "spec",
+            &[
+                "name", "description", "source", "device", "axes", "filter",
+                "metrics", "columns", "group_by", "aggregate", "sinks", "chunk",
+            ],
+        )?;
+        let mut s = StudySpec {
+            name: v.str_field("name").map_err(|_| {
+                Error::Study("spec: missing required key \"name\"".into())
+            })?.to_string(),
+            ..StudySpec::default()
+        };
+        if let Some(d) = v.get("description") {
+            s.description = d
+                .as_str()
+                .ok_or_else(|| {
+                    Error::Study("description: expected a string".into())
+                })?
+                .to_string();
+        }
+        if let Some(src) = v.get("source") {
+            s.source = Source::parse(src.as_str().ok_or_else(|| {
+                Error::Study("source: expected a string".into())
+            })?)?;
+        }
+        if let Some(d) = v.get("device") {
+            s.device = Some(
+                d.as_str()
+                    .ok_or_else(|| {
+                        Error::Study("device: expected a string".into())
+                    })?
+                    .to_string(),
+            );
+        }
+        if let Some(a) = v.get("axes") {
+            if s.source != Source::Grid {
+                return Err(Error::Study(format!(
+                    "axes: only valid for \"grid\" studies, not {:?}",
+                    s.source.as_str()
+                )));
+            }
+            s.axes = AxesSpec::from_json(a)?;
+        }
+        if let Some(f) = v.get("filter") {
+            s.filters = match f {
+                Json::Str(one) => vec![one.clone()],
+                other => str_list(other, "filter")?,
+            };
+        }
+        if let Some(m) = v.get("metrics") {
+            let arr = m.as_arr().ok_or_else(|| {
+                Error::Study("metrics: expected an array".into())
+            })?;
+            for item in arr {
+                match item {
+                    Json::Str(name) => s.metrics.push(MetricSpec::field(name)),
+                    Json::Obj(mo) => {
+                        check_keys(mo, "metrics", &["name", "expr"])?;
+                        let name = item.str_field("name").map_err(|_| {
+                            Error::Study(
+                                "metrics: each object needs a \"name\"".into(),
+                            )
+                        })?;
+                        let expr = item
+                            .get("expr")
+                            .and_then(Json::as_str)
+                            .unwrap_or(name);
+                        s.metrics.push(MetricSpec::named(name, expr));
+                    }
+                    other => {
+                        return Err(Error::Study(format!(
+                            "metrics: expected field names or \
+                             {{name, expr}} objects, found {other:?}"
+                        )))
+                    }
+                }
+            }
+        }
+        if let Some(c) = v.get("columns") {
+            s.columns = str_list(c, "columns")?;
+        }
+        if let Some(g) = v.get("group_by") {
+            s.group_by = str_list(g, "group_by")?;
+        }
+        if let Some(a) = v.get("aggregate") {
+            let arr = a.as_arr().ok_or_else(|| {
+                Error::Study("aggregate: expected an array".into())
+            })?;
+            for item in arr {
+                let iobj = item.as_obj().ok_or_else(|| {
+                    Error::Study("aggregate: expected objects".into())
+                })?;
+                check_keys(iobj, "aggregate", &["metric", "ops", "args"])?;
+                let metric = item.str_field("metric").map_err(|_| {
+                    Error::Study(
+                        "aggregate: each entry needs a \"metric\"".into(),
+                    )
+                })?;
+                let ops = item
+                    .get("ops")
+                    .map(|o| str_list(o, "aggregate.ops"))
+                    .transpose()?
+                    .unwrap_or_else(|| vec!["mean".to_string()]);
+                let ops = ops
+                    .iter()
+                    .map(|o| AggOp::parse(o))
+                    .collect::<Result<Vec<_>>>()?;
+                let args = item
+                    .get("args")
+                    .map(|x| str_list(x, "aggregate.args"))
+                    .transpose()?
+                    .unwrap_or_default();
+                if args.is_empty()
+                    && ops.iter().any(|o| matches!(o, AggOp::ArgMin | AggOp::ArgMax))
+                {
+                    return Err(Error::Study(format!(
+                        "aggregate {metric:?}: argmin/argmax need \"args\" \
+                         (the fields to report at the extremal row)"
+                    )));
+                }
+                s.aggregate.push(AggSpec {
+                    metric: metric.to_string(),
+                    ops,
+                    args,
+                });
+            }
+        }
+        if s.group_by.is_empty() != s.aggregate.is_empty() {
+            return Err(Error::Study(
+                "group_by and aggregate must be used together (grouping \
+                 without a reduction, or a reduction without groups, is \
+                 ambiguous)"
+                    .into(),
+            ));
+        }
+        if let Some(snk) = v.get("sinks") {
+            let arr = snk.as_arr().ok_or_else(|| {
+                Error::Study("sinks: expected an array".into())
+            })?;
+            for item in arr {
+                let iobj = item.as_obj().ok_or_else(|| {
+                    Error::Study("sinks: expected objects".into())
+                })?;
+                let kind = item.str_field("kind").map_err(|_| {
+                    Error::Study("sinks: each sink needs a \"kind\"".into())
+                })?;
+                let sink = match kind {
+                    "csv" => {
+                        check_keys(iobj, "sinks.csv", &["kind", "path"])?;
+                        SinkSpec::Csv {
+                            path: item
+                                .get("path")
+                                .and_then(Json::as_str)
+                                .unwrap_or("-")
+                                .to_string(),
+                        }
+                    }
+                    "jsonl" => {
+                        check_keys(iobj, "sinks.jsonl", &["kind", "path"])?;
+                        SinkSpec::Jsonl {
+                            path: item
+                                .get("path")
+                                .and_then(Json::as_str)
+                                .unwrap_or("-")
+                                .to_string(),
+                        }
+                    }
+                    "table" => {
+                        check_keys(iobj, "sinks.table", &["kind", "title", "limit"])?;
+                        SinkSpec::Table {
+                            title: item
+                                .get("title")
+                                .and_then(Json::as_str)
+                                .unwrap_or("")
+                                .to_string(),
+                            limit: item
+                                .get("limit")
+                                .and_then(Json::as_u64)
+                                .unwrap_or(50)
+                                as usize,
+                        }
+                    }
+                    "chart" => {
+                        check_keys(
+                            iobj,
+                            "sinks.chart",
+                            &["kind", "title", "x", "y", "series", "log_x",
+                              "width", "height"],
+                        )?;
+                        SinkSpec::Chart {
+                            title: item
+                                .get("title")
+                                .and_then(Json::as_str)
+                                .unwrap_or("")
+                                .to_string(),
+                            x: item.str_field("x").map_err(|_| {
+                                Error::Study(
+                                    "sinks.chart: needs an \"x\" field".into(),
+                                )
+                            })?.to_string(),
+                            y: item.str_field("y").map_err(|_| {
+                                Error::Study(
+                                    "sinks.chart: needs a \"y\" field".into(),
+                                )
+                            })?.to_string(),
+                            series: item
+                                .get("series")
+                                .and_then(Json::as_str)
+                                .map(|s| s.to_string()),
+                            log_x: item
+                                .get("log_x")
+                                .and_then(Json::as_bool)
+                                .unwrap_or(false),
+                            width: item
+                                .get("width")
+                                .and_then(Json::as_u64)
+                                .unwrap_or(64) as usize,
+                            height: item
+                                .get("height")
+                                .and_then(Json::as_u64)
+                                .unwrap_or(16) as usize,
+                        }
+                    }
+                    other => {
+                        return Err(Error::Study(format!(
+                            "sinks: unknown kind {other:?} (expected csv, \
+                             jsonl, table, or chart)"
+                        )))
+                    }
+                };
+                s.sinks.push(sink);
+            }
+        }
+        if let Some(c) = v.get("chunk") {
+            s.chunk = c.as_u64().ok_or_else(|| {
+                Error::Study("chunk: expected an integer".into())
+            })? as usize;
+        }
+        Ok(s)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![("name", Json::str(&self.name))];
+        if !self.description.is_empty() {
+            pairs.push(("description", Json::str(&self.description)));
+        }
+        if self.source != Source::Grid {
+            pairs.push(("source", Json::str(self.source.as_str())));
+        }
+        if let Some(d) = &self.device {
+            pairs.push(("device", Json::str(d)));
+        }
+        if self.source == Source::Grid && self.axes != AxesSpec::default() {
+            pairs.push(("axes", self.axes.to_json()));
+        }
+        if !self.filters.is_empty() {
+            pairs.push((
+                "filter",
+                Json::arr(self.filters.iter().map(|f| Json::str(f))),
+            ));
+        }
+        if !self.metrics.is_empty() {
+            pairs.push((
+                "metrics",
+                Json::arr(self.metrics.iter().map(|m| {
+                    if m.name == m.expr {
+                        Json::str(&m.name)
+                    } else {
+                        Json::obj(vec![
+                            ("name", Json::str(&m.name)),
+                            ("expr", Json::str(&m.expr)),
+                        ])
+                    }
+                })),
+            ));
+        }
+        if !self.columns.is_empty() {
+            pairs.push((
+                "columns",
+                Json::arr(self.columns.iter().map(|c| Json::str(c))),
+            ));
+        }
+        if !self.group_by.is_empty() {
+            pairs.push((
+                "group_by",
+                Json::arr(self.group_by.iter().map(|g| Json::str(g))),
+            ));
+        }
+        if !self.aggregate.is_empty() {
+            pairs.push((
+                "aggregate",
+                Json::arr(self.aggregate.iter().map(|a| {
+                    let mut p = vec![
+                        ("metric", Json::str(&a.metric)),
+                        (
+                            "ops",
+                            Json::arr(
+                                a.ops.iter().map(|o| Json::str(o.as_str())),
+                            ),
+                        ),
+                    ];
+                    if !a.args.is_empty() {
+                        p.push((
+                            "args",
+                            Json::arr(a.args.iter().map(|x| Json::str(x))),
+                        ));
+                    }
+                    Json::obj(p)
+                })),
+            ));
+        }
+        if !self.sinks.is_empty() {
+            pairs.push((
+                "sinks",
+                Json::arr(self.sinks.iter().map(|s| match s {
+                    SinkSpec::Csv { path } => Json::obj(vec![
+                        ("kind", Json::str("csv")),
+                        ("path", Json::str(path)),
+                    ]),
+                    SinkSpec::Jsonl { path } => Json::obj(vec![
+                        ("kind", Json::str("jsonl")),
+                        ("path", Json::str(path)),
+                    ]),
+                    SinkSpec::Table { title, limit } => Json::obj(vec![
+                        ("kind", Json::str("table")),
+                        ("title", Json::str(title)),
+                        ("limit", Json::num(*limit as f64)),
+                    ]),
+                    SinkSpec::Chart {
+                        title, x, y, series, log_x, width, height,
+                    } => {
+                        let mut p = vec![
+                            ("kind", Json::str("chart")),
+                            ("title", Json::str(title)),
+                            ("x", Json::str(x)),
+                            ("y", Json::str(y)),
+                        ];
+                        if let Some(sv) = series {
+                            p.push(("series", Json::str(sv)));
+                        }
+                        p.push(("log_x", Json::Bool(*log_x)));
+                        p.push(("width", Json::num(*width as f64)));
+                        p.push(("height", Json::num(*height as f64)));
+                        Json::obj(p)
+                    }
+                })),
+            ));
+        }
+        if self.chunk != 0 {
+            pairs.push(("chunk", Json::num(self.chunk as f64)));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Bind the spec to a device (the spec's own `device` wins over
+    /// `default_device`) and resolve the axes into hardware points and
+    /// per-segment grid builders. Cheap: nothing is simulated and no
+    /// point list is materialized.
+    pub fn resolve(&self, default_device: &DeviceSpec) -> Result<ResolvedStudy> {
+        let device = match &self.device {
+            Some(name) => catalog::find_device(name).ok_or_else(|| {
+                Error::Study(format!(
+                    "device: unknown {name:?} (see `commscale help` for the \
+                     catalog)"
+                ))
+            })?,
+            None => default_device.clone(),
+        };
+
+        let hardware: Vec<ResolvedHw> = if self.source != Source::Grid {
+            Vec::new()
+        } else if !self.axes.hardware.is_empty() {
+            self.axes
+                .hardware
+                .iter()
+                .map(|h| ResolvedHw::realize(&device, h))
+                .collect()
+        } else {
+            let mut out = Vec::new();
+            for ev in &self.axes.evolutions {
+                for tk in &self.axes.topologies {
+                    out.push(ResolvedHw::realize(
+                        &device,
+                        &HwAxisSpec::new(*ev, *tk),
+                    ));
+                }
+            }
+            out
+        };
+
+        let segments: Vec<ResolvedSegment> = if self.source != Source::Grid {
+            Vec::new()
+        } else if self.axes.series.is_empty() {
+            vec![ResolvedSegment {
+                label: None,
+                builder: self.segment_builder(&device, &SeriesSpec::default()),
+            }]
+        } else {
+            self.axes
+                .series
+                .iter()
+                .map(|s| ResolvedSegment {
+                    label: s.label.clone(),
+                    builder: self.segment_builder(&device, s),
+                })
+                .collect()
+        };
+
+        Ok(ResolvedStudy { spec: self.clone(), device, hardware, segments })
+    }
+
+    fn segment_builder(&self, device: &DeviceSpec, s: &SeriesSpec) -> GridBuilder {
+        let a = &self.axes;
+        let pick = |over: &Option<Vec<u64>>, base: &Vec<u64>| -> Vec<u64> {
+            over.clone().unwrap_or_else(|| base.clone())
+        };
+        let mut b = GridBuilder::new(device)
+            .hidden(&pick(&s.hidden, &a.hidden))
+            .seq_len(&pick(&s.seq_len, &a.seq_len))
+            .batch(&pick(&s.batch, &a.batch))
+            .layers(&pick(&s.layers, &a.layers))
+            .ffn_mult(&pick(&s.ffn_mult, &a.ffn_mult))
+            .tp(&pick(&s.tp, &a.tp))
+            .pp(&pick(&s.pp, &a.pp))
+            .microbatches(&pick(&s.microbatches, &a.microbatches))
+            .seq_par(s.seq_par.as_ref().unwrap_or(&a.seq_par))
+            .dp(&pick(&s.dp, &a.dp))
+            .heads_policy(a.heads)
+            .precision(a.precision);
+        if let Some(w) = a.world {
+            b = b.world_size(w);
+        }
+        b
+    }
+}
+
+/// A realized hardware point plus the labels/ratios the row fields carry.
+#[derive(Debug, Clone)]
+pub struct ResolvedHw {
+    pub label: String,
+    pub point: HwPoint,
+    pub ratio: f64,
+    pub interference: f64,
+}
+
+impl ResolvedHw {
+    fn realize(device: &DeviceSpec, h: &HwAxisSpec) -> ResolvedHw {
+        // keep the unevolved device (and its name) for the 1× point so
+        // study rows label today's hardware as the catalog device.
+        let base = if h.evolution == Evolution::none() {
+            HwPoint::today(device)
+        } else {
+            HwPoint::evolved(device, h.evolution)
+        };
+        let point = base
+            .with_topology_kind(h.topology)
+            .with_overlap(OverlapModel::interference(h.interference));
+        let label = h.label.clone().unwrap_or_else(|| {
+            format!("{:.0}x·{}", h.evolution.ratio(), h.topology.label())
+        });
+        ResolvedHw {
+            label,
+            point,
+            ratio: h.evolution.ratio(),
+            interference: h.interference,
+        }
+    }
+}
+
+/// One irregular segment of the grid: a labeled [`GridBuilder`] over the
+/// model axes (hardware axes live on [`ResolvedStudy::hardware`]).
+#[derive(Debug, Clone)]
+pub struct ResolvedSegment {
+    pub label: Option<String>,
+    pub builder: GridBuilder,
+}
+
+/// A spec bound to a device: hardware points × segments, ready to stream.
+#[derive(Debug, Clone)]
+pub struct ResolvedStudy {
+    pub spec: StudySpec,
+    pub device: DeviceSpec,
+    pub hardware: Vec<ResolvedHw>,
+    pub segments: Vec<ResolvedSegment>,
+}
+
+impl ResolvedStudy {
+    /// Realized model points per segment (divisibility/world skips
+    /// applied), without building anything.
+    pub fn segment_counts(&self) -> Vec<usize> {
+        self.segments
+            .iter()
+            .map(|s| s.builder.realized_model_count())
+            .collect()
+    }
+
+    /// Total scenario points the study will stream.
+    pub fn total_points(&self) -> usize {
+        match self.spec.source {
+            Source::Grid => {
+                self.hardware.len() * self.segment_counts().iter().sum::<usize>()
+            }
+            Source::Zoo => crate::model::zoo().len(),
+            Source::Table3 => super::run::table3_rows().len(),
+        }
+    }
+
+    /// Materialize the full grid (hardware-major, then segments, then the
+    /// builder's model-axis nesting) — for figure-sized studies, tests,
+    /// and the perf baseline; the streaming runner never calls this.
+    pub fn full_grid(&self) -> ScenarioGrid {
+        let mut hardware = Vec::with_capacity(self.hardware.len());
+        for h in &self.hardware {
+            hardware.push(h.point.clone());
+        }
+        let mut points = Vec::new();
+        for hw in 0..hardware.len() as u32 {
+            for seg in &self.segments {
+                seg.builder.model_configs(&mut |cfg| {
+                    points.push(Scenario {
+                        cfg,
+                        opts: crate::graph::GraphOptions::default(),
+                        hw,
+                    });
+                });
+            }
+        }
+        ScenarioGrid::from_parts(hardware, points)
+    }
+
+    /// Human-readable resolution report: the axes, hardware points,
+    /// per-segment realized counts, and the total — printed by
+    /// `commscale study --explain` before (or instead of) running.
+    pub fn explain(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let s = &self.spec;
+        let _ = writeln!(out, "study {:?} on {}", s.name, self.device.name);
+        if !s.description.is_empty() {
+            let _ = writeln!(out, "  {}", s.description);
+        }
+        let _ = writeln!(out, "  source: {}", s.source.as_str());
+        if s.source == Source::Grid {
+            let _ = writeln!(out, "  hardware points ({}):", self.hardware.len());
+            for h in &self.hardware {
+                let _ = writeln!(
+                    out,
+                    "    {:<32} flop-vs-bw {:.1}x, topology {}, interference \
+                     {:.2}",
+                    h.label,
+                    h.ratio,
+                    h.point.topology.label(),
+                    h.interference
+                );
+            }
+            let counts = self.segment_counts();
+            let _ = writeln!(out, "  segments ({}):", self.segments.len());
+            for (seg, n) in self.segments.iter().zip(&counts) {
+                let _ = writeln!(
+                    out,
+                    "    {:<32} {} model points",
+                    seg.label.clone().unwrap_or_else(|| "(base axes)".into()),
+                    n
+                );
+            }
+            let _ = writeln!(
+                out,
+                "  total: {} hardware x {} model = {} scenario points",
+                self.hardware.len(),
+                counts.iter().sum::<usize>(),
+                self.total_points()
+            );
+        } else {
+            let _ = writeln!(out, "  rows: {}", self.total_points());
+        }
+        if !s.filters.is_empty() {
+            let _ = writeln!(out, "  filter: {}", s.filters.join(" && "));
+        }
+        if !s.metrics.is_empty() {
+            let names: Vec<&str> =
+                s.metrics.iter().map(|m| m.name.as_str()).collect();
+            let _ = writeln!(out, "  metrics: {}", names.join(", "));
+        }
+        if !s.group_by.is_empty() {
+            let _ = writeln!(out, "  group by: {}", s.group_by.join(", "));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::catalog;
+
+    fn mi210() -> DeviceSpec {
+        catalog::mi210()
+    }
+
+    #[test]
+    fn minimal_spec_parses_with_defaults() {
+        let s = StudySpec::parse(r#"{"name": "tiny"}"#).unwrap();
+        assert_eq!(s.name, "tiny");
+        assert_eq!(s.source, Source::Grid);
+        assert_eq!(s.axes, AxesSpec::default());
+        let r = s.resolve(&mi210()).unwrap();
+        assert_eq!(r.hardware.len(), 1);
+        assert_eq!(r.segments.len(), 1);
+        assert_eq!(r.total_points(), 1);
+    }
+
+    #[test]
+    fn missing_name_is_actionable() {
+        let err = StudySpec::parse("{}").unwrap_err().to_string();
+        assert!(err.contains("missing required key \"name\""), "{err}");
+    }
+
+    #[test]
+    fn unknown_keys_are_rejected_with_alternatives() {
+        let err = StudySpec::parse(r#"{"name": "x", "axis": {}}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown key \"axis\""), "{err}");
+        assert!(err.contains("axes"), "{err}");
+        let err = StudySpec::parse(
+            r#"{"name": "x", "axes": {"hiden": [1]}}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("unknown key \"hiden\""), "{err}");
+    }
+
+    #[test]
+    fn bad_axis_values_are_rejected() {
+        for (spec, needle) in [
+            (r#"{"name":"x","axes":{"tp":[0]}}"#, "positive integers"),
+            (r#"{"name":"x","axes":{"tp":[]}}"#, "must not be empty"),
+            (r#"{"name":"x","axes":{"tp":"8"}}"#, "expected an array"),
+            (r#"{"name":"x","axes":{"evolutions":[0]}}"#, "must be positive"),
+            (
+                r#"{"name":"x","axes":{"topologies":["mesh"]}}"#,
+                "unknown topology",
+            ),
+            (r#"{"name":"x","axes":{"heads":"exact"}}"#, "round-to-tp"),
+        ] {
+            let err = StudySpec::parse(spec).unwrap_err().to_string();
+            assert!(err.contains(needle), "{spec}: {err}");
+        }
+    }
+
+    #[test]
+    fn group_by_requires_aggregate() {
+        let err = StudySpec::parse(
+            r#"{"name":"x","group_by":["hidden"]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("group_by and aggregate"), "{err}");
+    }
+
+    #[test]
+    fn argmin_requires_args() {
+        let err = StudySpec::parse(
+            r#"{"name":"x","group_by":["hidden"],
+               "aggregate":[{"metric":"makespan","ops":["argmin"]}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("argmin/argmax need \"args\""), "{err}");
+    }
+
+    #[test]
+    fn cartesian_hardware_and_series_resolution() {
+        let s = StudySpec::parse(
+            r#"{
+              "name": "r",
+              "axes": {
+                "evolutions": [1, 4],
+                "topologies": ["flat", "node8"],
+                "series": [
+                  {"label": "a", "hidden": 4096, "tp": [4, 8]},
+                  {"label": "b", "hidden": [16384], "seq_len": [4096]}
+                ]
+              }
+            }"#,
+        )
+        .unwrap();
+        let r = s.resolve(&mi210()).unwrap();
+        assert_eq!(r.hardware.len(), 4); // 2 evolutions x 2 topologies
+        assert_eq!(r.segments.len(), 2);
+        assert_eq!(r.segment_counts(), vec![2, 1]);
+        assert_eq!(r.total_points(), 4 * 3);
+        let g = r.full_grid();
+        assert_eq!(g.len(), 12);
+        // hardware-major order; within hw0, segment a's two tp points first
+        assert_eq!(g.points[0].cfg.hidden, 4096);
+        assert_eq!(g.points[0].cfg.tp(), 4);
+        assert_eq!(g.points[1].cfg.tp(), 8);
+        assert_eq!(g.points[2].cfg.hidden, 16384);
+        assert_eq!(g.points[2].cfg.seq_len, 4096);
+        assert_eq!(g.points[3].hw, 1);
+    }
+
+    #[test]
+    fn explicit_hardware_overrides_cartesian() {
+        let s = StudySpec::parse(
+            r#"{
+              "name": "hw",
+              "axes": {
+                "evolutions": [1, 2, 4],
+                "hardware": [
+                  {"label": "today"},
+                  {"label": "worst", "evolution": 4, "topology": "node128",
+                   "interference": 1.25}
+                ]
+              }
+            }"#,
+        )
+        .unwrap();
+        let r = s.resolve(&mi210()).unwrap();
+        assert_eq!(r.hardware.len(), 2);
+        assert_eq!(r.hardware[0].label, "today");
+        assert_eq!(r.hardware[0].ratio, 1.0);
+        assert_eq!(r.hardware[1].interference, 1.25);
+        assert_eq!(r.hardware[1].point.overlap.interference_factor, 1.25);
+        assert_eq!(r.hardware[1].point.topology.node_size, 128);
+    }
+
+    #[test]
+    fn device_resolution() {
+        let s = StudySpec::parse(r#"{"name":"d","device":"a100"}"#).unwrap();
+        let r = s.resolve(&mi210()).unwrap();
+        assert_eq!(r.device.name, "A100");
+        let bad = StudySpec::parse(r#"{"name":"d","device":"tpu9"}"#).unwrap();
+        let err = bad.resolve(&mi210()).unwrap_err().to_string();
+        assert!(err.contains("unknown \"tpu9\""), "{err}");
+    }
+
+    #[test]
+    fn roundtrip_parse_serialize_parse() {
+        let text = r#"{
+          "name": "rt",
+          "description": "roundtrip",
+          "device": "mi210",
+          "axes": {
+            "hidden": [4096, 16384],
+            "tp": [1, 8, 64],
+            "seq_par": [false, true],
+            "evolutions": [1, 4],
+            "topologies": ["node8"],
+            "world": 64,
+            "heads": "paper",
+            "precision": "fp8"
+          },
+          "filter": ["tp <= 64"],
+          "metrics": ["comm_fraction", {"name": "exposed_share",
+                                        "expr": "exposed_comm / makespan"}],
+          "group_by": ["hidden"],
+          "aggregate": [{"metric": "comm_fraction", "ops": ["min", "mean"]},
+                        {"metric": "time_per_sample", "ops": ["argmin"],
+                         "args": ["tp", "dp"]}],
+          "sinks": [{"kind": "csv", "path": "-"},
+                    {"kind": "table", "title": "t", "limit": 10}],
+          "chunk": 512
+        }"#;
+        let a = StudySpec::parse(text).unwrap();
+        let b = StudySpec::parse(&a.to_json().to_string_pretty(2)).unwrap();
+        assert_eq!(a, b);
+        let c = StudySpec::parse(&b.to_json().to_string()).unwrap();
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn explain_reports_counts_without_running() {
+        let s = StudySpec::parse(
+            r#"{"name":"e","axes":{"hidden":[1024,4096],"tp":[1,8],
+                "evolutions":[1,2]}}"#,
+        )
+        .unwrap();
+        let text = s.resolve(&mi210()).unwrap().explain();
+        assert!(text.contains("2 hardware x 4 model = 8"), "{text}");
+    }
+}

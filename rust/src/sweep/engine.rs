@@ -277,6 +277,35 @@ pub fn run_with(grid: &ScenarioGrid, threads: usize) -> Vec<PointMetrics> {
     out
 }
 
+/// Evaluate an already-materialized grid chunk-by-chunk, handing each
+/// chunk's scenarios and metrics to `sink` as soon as they are ready.
+/// Only one chunk of *metrics* is ever alive, so large result sets are
+/// consumable with bounded memory. Results are bit-identical to
+/// [`run_with`] (each point is a pure function of its scenario); chunk
+/// boundaries only affect cache warm-up cost — the test below pins this,
+/// and it is the invariant the study runner's enumerator-driven
+/// streaming (which never materializes the point list either; see
+/// `study::run`) relies on.
+pub fn run_streamed(
+    grid: &ScenarioGrid,
+    threads: usize,
+    chunk: usize,
+    sink: &mut dyn FnMut(&[Scenario], &[PointMetrics]),
+) {
+    let chunk = chunk.max(1);
+    let mut start = 0;
+    while start < grid.points.len() {
+        let end = (start + chunk).min(grid.points.len());
+        let sub = ScenarioGrid {
+            hardware: grid.hardware.clone(),
+            points: grid.points[start..end].to_vec(),
+        };
+        let metrics = run_with(&sub, threads);
+        sink(&sub.points, &metrics);
+        start = end;
+    }
+}
+
 /// The bit-identity oracle and bench baseline: one fresh graph build and
 /// one fresh `simulate` per point, single-threaded, no caches, no arena —
 /// exactly what the per-figure loops did before the sweep engine existed.
@@ -468,6 +497,26 @@ mod tests {
     fn empty_grid_is_fine() {
         let grid = ScenarioGrid { hardware: vec![], points: vec![] };
         assert!(run(&grid).is_empty());
+    }
+
+    #[test]
+    fn streamed_chunks_are_bit_identical_to_batch() {
+        let grid = strategy_grid();
+        let want = run_with(&grid, 2);
+        for chunk in [1usize, 7, 64, 10_000] {
+            let mut got: Vec<PointMetrics> = Vec::new();
+            let mut seen = 0usize;
+            run_streamed(&grid, 2, chunk, &mut |pts, ms| {
+                assert_eq!(pts.len(), ms.len());
+                assert!(pts.len() <= chunk);
+                seen += pts.len();
+                got.extend_from_slice(ms);
+            });
+            assert_eq!(seen, grid.len());
+            for (a, b) in want.iter().zip(&got) {
+                assert_eq!(a.to_bits(), b.to_bits(), "chunk={chunk}");
+            }
+        }
     }
 
     #[test]

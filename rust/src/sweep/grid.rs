@@ -117,12 +117,31 @@ impl ScenarioGrid {
     }
 }
 
+/// How a grid derives the attention-head count from (hidden, tp).
+///
+/// The two policies exist because the paper's figure grids predate the
+/// strategy-validation layer: Fig 10 sweeps TP to 256 on H = 4K (32
+/// heads), which Megatron head-slicing cannot realize exactly — the
+/// figures price the ideal sliced GEMMs anyway. User-authored study
+/// grids default to [`HeadsPolicy::RoundToTp`], which rounds the head
+/// count up so every built config passes `ModelConfig::validate`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HeadsPolicy {
+    /// `heads_for(h).max(tp)` rounded up to a multiple of `tp`; every
+    /// built config is validated (panics on misfits — authoring bugs).
+    RoundToTp,
+    /// The paper's fixed head_dim = 128 (`config::heads_for`), no
+    /// rounding and no validation — bit-compatible with the per-figure
+    /// `point_config` constructors.
+    FixedHeadDim,
+}
+
 /// Cartesian grid builder over the paper's axes.
 ///
 /// Axis nesting (outermost → innermost): hardware (devices × evolutions ×
 /// overlap models × topologies, in that order) → hidden → seq_len → batch
-/// → layers → tp → pp → microbatches → seq_par → dp. Hardware is
-/// outermost so each worker's graph-template and cost caches see long
+/// → layers → ffn_mult → tp → pp → microbatches → seq_par → dp. Hardware
+/// is outermost so each worker's graph-template and cost caches see long
 /// runs of points sharing a device.
 ///
 /// Combinations the strategy cannot realize (layers % pp != 0, seq-par
@@ -142,12 +161,14 @@ pub struct GridBuilder {
     seq_len: Vec<u64>,
     batch: Vec<u64>,
     layers: Vec<u64>,
+    ffn_mult: Vec<u64>,
     tp: Vec<u64>,
     pp: Vec<u64>,
     microbatches: Vec<u64>,
     seq_par: Vec<bool>,
     dp: Vec<u64>,
     world: Option<u64>,
+    heads: HeadsPolicy,
     precision: Precision,
     opts: GraphOptions,
 }
@@ -167,12 +188,14 @@ impl GridBuilder {
             seq_len: vec![2048],
             batch: vec![1],
             layers: vec![1],
+            ffn_mult: vec![4],
             tp: vec![1],
             pp: vec![1],
             microbatches: vec![1],
             seq_par: vec![false],
             dp: vec![1],
             world: None,
+            heads: HeadsPolicy::RoundToTp,
             precision: Precision::F16,
             opts: GraphOptions::default(),
         }
@@ -210,6 +233,11 @@ impl GridBuilder {
         self.layers = v.to_vec();
         self
     }
+    /// FC expansion factors (the paper's fixed 4, or wider MoE-style FFNs).
+    pub fn ffn_mult(mut self, v: &[u64]) -> Self {
+        self.ffn_mult = v.to_vec();
+        self
+    }
     pub fn tp(mut self, v: &[u64]) -> Self {
         self.tp = v.to_vec();
         self
@@ -236,6 +264,11 @@ impl GridBuilder {
         self.world = Some(world);
         self
     }
+    /// Head-count policy (see [`HeadsPolicy`]); defaults to `RoundToTp`.
+    pub fn heads_policy(mut self, p: HeadsPolicy) -> Self {
+        self.heads = p;
+        self
+    }
     pub fn precision(mut self, p: Precision) -> Self {
         self.precision = p;
         self
@@ -257,11 +290,63 @@ impl GridBuilder {
             * self.seq_len.len()
             * self.batch.len()
             * self.layers.len()
+            * self.ffn_mult.len()
             * self.tp.len()
             * self.pp.len()
             * self.microbatches.len()
             * self.seq_par.len()
             * self.dp.len()
+    }
+
+    /// Stream every *model-axis* combination (hardware axes excluded) in
+    /// build order, applying the heads policy, the deterministic
+    /// divisibility skipping, and the world-size filter. [`GridBuilder::build`]
+    /// is this enumerator crossed with the hardware axes; the study layer
+    /// uses it directly so million-point grids never materialize.
+    pub fn model_configs(&self, f: &mut dyn FnMut(ModelConfig)) {
+        for &h in &self.hidden {
+            for &sl in &self.seq_len {
+                for &b in &self.batch {
+                    for &layers in &self.layers {
+                        for &fm in &self.ffn_mult {
+                            for &tp in &self.tp {
+                                for &pp in &self.pp {
+                                    // microbatching is a pipeline concept:
+                                    // pp = 1 takes a single mb = 1 point
+                                    // instead of duplicating the axis.
+                                    let mbs: &[u64] = if pp > 1 {
+                                        &self.microbatches
+                                    } else {
+                                        &[1]
+                                    };
+                                    for &mb in mbs {
+                                        for &sp in &self.seq_par {
+                                            for &dp in &self.dp {
+                                                if let Some(cfg) = self.realize(
+                                                    h, sl, b, layers, fm, tp,
+                                                    pp, mb, sp, dp,
+                                                ) {
+                                                    f(cfg);
+                                                }
+                                            }
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Count of points [`GridBuilder::build`] would actually produce per
+    /// hardware point — `point_count` minus the divisibility/world skips.
+    /// Enumerates without simulating, so it is cheap even for huge grids.
+    pub fn realized_model_count(&self) -> usize {
+        let mut n = 0usize;
+        self.model_configs(&mut |_| n += 1);
+        n
     }
 
     /// Flatten into a [`ScenarioGrid`]. Head counts follow the Table 3
@@ -293,48 +378,18 @@ impl GridBuilder {
         }
         let mut points = Vec::with_capacity(self.point_count());
         for hw in 0..hardware.len() as u32 {
-            for &h in &self.hidden {
-                for &sl in &self.seq_len {
-                    for &b in &self.batch {
-                        for &layers in &self.layers {
-                            for &tp in &self.tp {
-                                for &pp in &self.pp {
-                                    // microbatching is a pipeline concept:
-                                    // pp = 1 takes a single mb = 1 point
-                                    // instead of duplicating the axis.
-                                    let mbs: &[u64] = if pp > 1 {
-                                        &self.microbatches
-                                    } else {
-                                        &[1]
-                                    };
-                                    for &mb in mbs {
-                                        for &sp in &self.seq_par {
-                                            for &dp in &self.dp {
-                                                if let Some(cfg) = self.realize(
-                                                    h, sl, b, layers, tp, pp, mb,
-                                                    sp, dp,
-                                                ) {
-                                                    points.push(Scenario {
-                                                        cfg,
-                                                        opts: self.opts,
-                                                        hw,
-                                                    });
-                                                }
-                                            }
-                                        }
-                                    }
-                                }
-                            }
-                        }
-                    }
-                }
-            }
+            self.model_configs(&mut |cfg| {
+                points.push(Scenario { cfg, opts: self.opts, hw })
+            });
         }
         ScenarioGrid { hardware, points }
     }
 
-    /// One axis combination → a validated config, `None` when a strategy
-    /// divisibility rule or the world-size filter excludes it.
+    /// One axis combination → a config, `None` when a strategy
+    /// divisibility rule or the world-size filter excludes it. Under
+    /// [`HeadsPolicy::RoundToTp`] the config is validated (panics on
+    /// authoring bugs); [`HeadsPolicy::FixedHeadDim`] reproduces the
+    /// figure constructors verbatim and skips validation.
     #[allow(clippy::too_many_arguments)]
     fn realize(
         &self,
@@ -342,6 +397,7 @@ impl GridBuilder {
         sl: u64,
         b: u64,
         layers: u64,
+        fm: u64,
         tp: u64,
         pp: u64,
         mb: u64,
@@ -359,20 +415,27 @@ impl GridBuilder {
         if sp && (tp == 1 || (sl * b) % tp != 0) {
             return None;
         }
-        let base = config::heads_for(h).max(tp);
-        let heads = (base + tp - 1) / tp * tp;
+        let heads = match self.heads {
+            HeadsPolicy::RoundToTp => {
+                let base = config::heads_for(h).max(tp);
+                (base + tp - 1) / tp * tp
+            }
+            HeadsPolicy::FixedHeadDim => config::heads_for(h),
+        };
         let cfg = ModelConfig {
             hidden: h,
             seq_len: sl,
             batch: b,
             layers,
             heads,
-            ffn_mult: 4,
+            ffn_mult: fm,
             par: ParallelismSpec { tp, pp, microbatches: mb, dp, seq_par: sp },
             precision: self.precision,
         };
-        if let Err(e) = cfg.validate() {
-            panic!("GridBuilder: H={h} TP={tp} PP={pp} is not realizable: {e}");
+        if self.heads == HeadsPolicy::RoundToTp {
+            if let Err(e) = cfg.validate() {
+                panic!("GridBuilder: H={h} TP={tp} PP={pp} is not realizable: {e}");
+            }
         }
         Some(cfg)
     }
@@ -543,6 +606,49 @@ mod tests {
             ),
             Tier::InterNode
         );
+    }
+
+    #[test]
+    fn ffn_mult_axis_nests_outside_tp() {
+        let b = GridBuilder::new(&catalog::mi210())
+            .hidden(&[4096])
+            .ffn_mult(&[4, 8])
+            .tp(&[1, 2]);
+        assert_eq!(b.point_count(), 4);
+        assert_eq!(b.realized_model_count(), 4);
+        let g = b.build();
+        assert_eq!(g.len(), 4);
+        assert_eq!(g.points[0].cfg.ffn_mult, 4);
+        assert_eq!(g.points[1].cfg.ffn_mult, 4);
+        assert_eq!(g.points[1].cfg.tp(), 2);
+        assert_eq!(g.points[2].cfg.ffn_mult, 8);
+        for p in &g.points {
+            p.cfg.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn fixed_head_dim_policy_matches_figure_constructors() {
+        // Fig 10's H=4K column sweeps TP past the head count; the paper
+        // policy must keep heads at head_dim = 128 without rounding.
+        let g = GridBuilder::new(&catalog::mi210())
+            .hidden(&[4096])
+            .tp(&[16, 256])
+            .heads_policy(HeadsPolicy::FixedHeadDim)
+            .build();
+        assert_eq!(g.points[0].cfg.heads, 32);
+        assert_eq!(g.points[1].cfg.heads, 32);
+    }
+
+    #[test]
+    fn realized_model_count_reflects_skips() {
+        // layers ∈ {4, 6} × pp ∈ {1, 4}: the (6, 4) misfit is skipped.
+        let b = GridBuilder::new(&catalog::mi210())
+            .layers(&[4, 6])
+            .pp(&[1, 4])
+            .microbatches(&[8]);
+        assert_eq!(b.point_count(), 4);
+        assert_eq!(b.realized_model_count(), 3);
     }
 
     #[test]

@@ -1,0 +1,283 @@
+//! Study-API regression tests: the built-in figure studies must
+//! reproduce the pre-redesign grids bit-identically, specs must
+//! round-trip through JSON, malformed specs must fail with actionable
+//! messages, and the shipped example specs must parse, resolve, and run.
+
+use std::path::{Path, PathBuf};
+
+use commscale::analysis::{serialized, strategies};
+use commscale::config;
+use commscale::graph::GraphOptions;
+use commscale::hw::{catalog, Evolution};
+use commscale::parallelism::TopologyKind;
+use commscale::study::{
+    run_study, RowSink, RunOptions, StudySpec, Value, VecSink,
+};
+use commscale::sweep::{self, GridBuilder, HwPoint, Scenario, ScenarioGrid};
+
+fn examples_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples/studies")
+}
+
+fn example_specs() -> Vec<PathBuf> {
+    let mut out: Vec<PathBuf> = std::fs::read_dir(examples_dir())
+        .expect("examples/studies exists")
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.extension().map(|x| x == "json").unwrap_or(false))
+        .collect();
+    out.sort();
+    assert!(out.len() >= 3, "ship at least three example specs");
+    out
+}
+
+// ---------------------------------------------------------------------------
+// golden: built-in figure studies == pre-redesign grids, bit for bit
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fig10_study_grid_is_bit_identical_to_pre_redesign_grid() {
+    let d = catalog::mi210();
+    // the pre-redesign fig10 grid, assembled verbatim from the per-point
+    // constructor (the code fig10_grid used before the Study API)
+    let mut points = Vec::new();
+    for (_, h, sl) in config::fig10_series() {
+        for &tp in &config::fig10_tp_sweep() {
+            points.push(Scenario {
+                cfg: serialized::point_config(h, sl, tp),
+                opts: GraphOptions::default(),
+                hw: 0,
+            });
+        }
+    }
+    let expected =
+        ScenarioGrid::from_parts(vec![HwPoint::today(&d)], points);
+    let got = serialized::fig10_grid(&d);
+    assert_eq!(got.len(), expected.len());
+    assert_eq!(got.hardware.len(), 1);
+    for (a, b) in got.points.iter().zip(&expected.points) {
+        assert_eq!(a.cfg, b.cfg);
+        assert_eq!(a.hw, b.hw);
+    }
+    let ma = sweep::run(&expected);
+    let mb = sweep::run(&got);
+    for (i, (x, y)) in ma.iter().zip(&mb).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "fig10 point {i} drifted");
+    }
+}
+
+#[test]
+fn fig11_study_grid_is_bit_identical_to_pre_redesign_grid() {
+    use commscale::analysis::overlapped;
+    let d = catalog::mi210();
+    let mut points = Vec::new();
+    for &h in &config::fig11_hidden_series() {
+        for &slb in &config::fig11_slb_sweep() {
+            points.push(Scenario {
+                cfg: overlapped::point_config(h, slb),
+                opts: GraphOptions::default(),
+                hw: 0,
+            });
+        }
+    }
+    let expected =
+        ScenarioGrid::from_parts(vec![HwPoint::today(&d)], points);
+    let got = overlapped::fig11_grid(&d);
+    assert_eq!(got.len(), expected.len());
+    for (a, b) in got.points.iter().zip(&expected.points) {
+        assert_eq!(a.cfg, b.cfg);
+    }
+    let ma = sweep::run(&expected);
+    let mb = sweep::run(&got);
+    for (i, (x, y)) in ma.iter().zip(&mb).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "fig11 point {i} drifted");
+    }
+}
+
+#[test]
+fn strategies_study_grid_is_bit_identical_to_pre_redesign_builder() {
+    let d = catalog::mi210();
+    let world = 64u64;
+    // the pre-redesign strategy grid, assembled directly through
+    // GridBuilder exactly as strategies::strategy_grid did before the
+    // Study API existed
+    let degrees: Vec<u64> =
+        (0..=world.trailing_zeros()).map(|e| 1u64 << e).collect();
+    let expected = GridBuilder::new(&d)
+        .evolutions(&[
+            Evolution::none(),
+            Evolution::flop_vs_bw_2x(),
+            Evolution::flop_vs_bw_4x(),
+        ])
+        .topologies(&[TopologyKind::tiered_8x(strategies::NODE_SIZE)])
+        .hidden(&strategies::hidden_series())
+        .seq_len(&strategies::seq_len_series())
+        .layers(&[world])
+        .tp(&degrees)
+        .pp(&degrees)
+        .dp(&degrees)
+        .microbatches(&[strategies::MICROBATCHES])
+        .seq_par(&[false, true])
+        .world_size(world)
+        .build();
+    let got = strategies::strategy_grid(&d, world);
+    assert_eq!(got.len(), expected.len());
+    assert_eq!(got.hardware.len(), expected.hardware.len());
+    for (a, b) in got.hardware.iter().zip(&expected.hardware) {
+        assert_eq!(a.evolution.ratio(), b.evolution.ratio());
+        assert_eq!(a.topology, b.topology);
+    }
+    for (a, b) in got.points.iter().zip(&expected.points) {
+        assert_eq!(a.cfg, b.cfg);
+        assert_eq!(a.hw, b.hw);
+    }
+    let ma = sweep::run(&expected);
+    let mb = sweep::run(&got);
+    for (i, (x, y)) in ma.iter().zip(&mb).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "strategy point {i} drifted: {:?}",
+            got.points[i].cfg.par
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// example specs: parse, round-trip, resolve, run
+// ---------------------------------------------------------------------------
+
+#[test]
+fn example_specs_parse_and_roundtrip() {
+    for path in example_specs() {
+        let spec = StudySpec::parse_file(&path)
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        let json = spec.to_json().to_string_pretty(2);
+        let back = StudySpec::parse(&json)
+            .unwrap_or_else(|e| panic!("{} roundtrip: {e}", path.display()));
+        assert_eq!(spec, back, "{} drifts through JSON", path.display());
+    }
+}
+
+#[test]
+fn big_example_resolves_to_at_least_100k_points() {
+    let path = examples_dir().join("tp_pp_evolution_argmin.json");
+    let spec = StudySpec::parse_file(&path).unwrap();
+    let resolved = spec.resolve(&catalog::mi210()).unwrap();
+    assert!(
+        resolved.total_points() >= 100_000,
+        "the flagship example must exceed 100k points, got {}",
+        resolved.total_points()
+    );
+    // grouped output stays tiny: one row per (H, SL, flop-vs-bw) cell
+    assert_eq!(spec.group_by, vec!["hidden", "seq_len", "flop_vs_bw"]);
+    let explain = resolved.explain();
+    assert!(explain.contains("scenario points"), "{explain}");
+}
+
+#[test]
+fn moe_example_runs_and_respects_its_filter() {
+    let path = examples_dir().join("moe_wide_ffn.json");
+    let spec = StudySpec::parse_file(&path).unwrap();
+    let resolved = spec.resolve(&catalog::mi210()).unwrap();
+    let mut sink = VecSink::new();
+    let outcome = {
+        let mut sinks: Vec<&mut dyn RowSink> = vec![&mut sink];
+        run_study(&resolved, RunOptions::default(), &mut sinks).unwrap()
+    };
+    assert_eq!(outcome.points_evaluated, resolved.total_points());
+    assert!(!sink.rows.is_empty());
+    let cf = sink.col("comm_fraction");
+    let fm = sink.col("ffn_mult");
+    for row in &sink.rows {
+        assert!(row[cf].as_f64() < 0.95, "filter must hold");
+    }
+    // the study's thesis: at fixed (H, SL, TP, hw), wider FFNs dilute the
+    // serialized-comm share
+    let tp = sink.col("tp");
+    let h = sink.col("hidden");
+    let sl = sink.col("seq_len");
+    let sc = sink.col("scenario");
+    let sp = sink.col("seq_par");
+    let pick = |want_fm: f64| -> f64 {
+        sink.rows
+            .iter()
+            .find(|r| {
+                r[fm].as_f64() == want_fm
+                    && r[tp].as_f64() == 16.0
+                    && r[h].as_f64() == 16384.0
+                    && r[sl].as_f64() == 2048.0
+                    && r[sp] == Value::Bool(false)
+                    && r[sc].render().starts_with("1x")
+            })
+            .expect("cell present")[cf]
+            .as_f64()
+    };
+    assert!(pick(16.0) < pick(4.0), "wider FFN must dilute comm share");
+}
+
+#[test]
+fn topology_example_aggregates_per_fabric() {
+    let path = examples_dir().join("topology_node_size_scan.json");
+    let spec = StudySpec::parse_file(&path).unwrap();
+    let resolved = spec.resolve(&catalog::mi210()).unwrap();
+    let mut sink = VecSink::new();
+    let outcome = {
+        let mut sinks: Vec<&mut dyn RowSink> = vec![&mut sink];
+        run_study(&resolved, RunOptions::default(), &mut sinks).unwrap()
+    };
+    assert!(outcome.groups_emitted > 0);
+    assert_eq!(sink.rows.len(), outcome.groups_emitted);
+    // group keys are (topology, archetype); every fabric appears
+    for fabric in ["flat", "node2", "node8", "node32"] {
+        assert!(
+            sink.rows.iter().any(|r| r[0] == Value::Str(fabric.into())),
+            "missing fabric {fabric}"
+        );
+    }
+    // argmin columns carry the winning factorization
+    let col = sink.col("tp_at_min_time_per_sample");
+    for row in &sink.rows {
+        let tp = row[col].as_f64();
+        assert!((1.0..=64.0).contains(&tp));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// malformed specs fail with actionable messages
+// ---------------------------------------------------------------------------
+
+#[test]
+fn malformed_specs_error_messages() {
+    for (text, needle) in [
+        ("{", "not valid JSON"),
+        ("{}", "missing required key \"name\""),
+        (r#"{"name":"x","axess":{}}"#, "unknown key \"axess\""),
+        (r#"{"name":"x","axes":{"tp":[3,0]}}"#, "positive integers"),
+        (
+            r#"{"name":"x","filter":["bogus > 1"]}"#,
+            "unknown field \"bogus\"",
+        ),
+        (
+            r#"{"name":"x","sinks":[{"kind":"parquet"}]}"#,
+            "unknown kind \"parquet\"",
+        ),
+        (
+            r#"{"name":"x","source":"zoo","axes":{"tp":[2]}}"#,
+            "only valid for \"grid\"",
+        ),
+    ] {
+        let err = match StudySpec::parse(text) {
+            Err(e) => e.to_string(),
+            Ok(spec) => {
+                // filter errors surface at bind time
+                let resolved = spec.resolve(&catalog::mi210()).unwrap();
+                let mut sink = VecSink::new();
+                let mut sinks: Vec<&mut dyn RowSink> = vec![&mut sink];
+                run_study(&resolved, RunOptions::default(), &mut sinks)
+                    .expect_err("must fail")
+                    .to_string()
+            }
+        };
+        assert!(err.contains(needle), "{text}: {err}");
+    }
+}

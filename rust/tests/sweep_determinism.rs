@@ -328,6 +328,82 @@ fn pp_bubble_fraction_matches_closed_form_on_uniform_stages() {
 }
 
 #[test]
+fn fig14_scenarios_pinned_to_first_principles_hardware() {
+    // Re-pin of the Fig 14 case study after the PR-3 fold: inter-node DP
+    // links are priced by the NetworkTopology tier (bw/8, 10x hop
+    // latency), and OverlapModel carries only the interference factor.
+    // Each scenario must equal a fresh graph + simulate over explicitly
+    // constructed hardware, bit for bit.
+    use commscale::analysis::case_study;
+    use commscale::parallelism::TopologyKind;
+    use commscale::sim::OverlapModel;
+    use commscale::sweep::HwPoint;
+
+    let d = catalog::mi210();
+    let scenarios = case_study::fig14(&d);
+    assert_eq!(scenarios.len(), 3);
+    assert_eq!(scenarios[0].name, "today (1x)");
+    assert_eq!(scenarios[1].name, "flop-vs-bw 4x");
+    assert_eq!(scenarios[2].name, "4x + inter-node/interference");
+
+    let cfg = config::fig14_config();
+    let ev4 = Evolution::flop_vs_bw_4x();
+    let hardware = [
+        HwPoint::today(&d),
+        HwPoint::evolved(&d, ev4),
+        HwPoint::evolved(&d, ev4)
+            .with_topology_kind(TopologyKind::tiered_8x(
+                case_study::PESSIMISTIC_NODE_SIZE,
+            ))
+            .with_overlap(OverlapModel::interference(1.25)),
+    ];
+    for (s, hw) in scenarios.iter().zip(&hardware) {
+        let cost = AnalyticCost::from_spec(
+            hw.device.clone(),
+            cfg.precision,
+            cfg.par,
+        )
+        .with_topology(hw.topology)
+        .with_overlap(hw.overlap);
+        let g = build_layer_graph(&cfg, GraphOptions::default());
+        let r = simulate(&g, &cost);
+        assert_eq!(
+            s.report.makespan.to_bits(),
+            r.makespan.to_bits(),
+            "{}: makespan drifted",
+            s.name
+        );
+        assert_eq!(
+            s.report.exposed_comm.to_bits(),
+            r.exposed_comm.to_bits(),
+            "{}: exposed comm drifted",
+            s.name
+        );
+        assert_eq!(
+            s.report.overlapped_comm.to_bits(),
+            r.overlapped_comm.to_bits(),
+            "{}: overlapped comm drifted",
+            s.name
+        );
+    }
+
+    // the folded tier placement: TP (extent 128 = node size) stays on the
+    // fast fabric, the DP group (extent 512) crosses the NIC
+    use commscale::parallelism::{CommGroup, Tier};
+    let topo = &hardware[2].topology;
+    assert_eq!(
+        topo.tier_for(CommGroup::TensorParallel, &cfg.par),
+        Tier::IntraNode
+    );
+    assert_eq!(
+        topo.tier_for(CommGroup::DataParallel, &cfg.par),
+        Tier::InterNode
+    );
+    // and the pessimistic scenario still exposes DP comm beyond the 4x one
+    assert!(scenarios[2].dp_exposed_frac > scenarios[1].dp_exposed_frac);
+}
+
+#[test]
 fn thread_count_never_changes_results() {
     // a mixed grid spanning every axis class at once
     let grid = sweep::GridBuilder::new(&catalog::mi210())
