@@ -1,0 +1,123 @@
+//! Bench: the strategy optimizer vs the exhaustive study on the shipped
+//! 103k-point `tp_pp_evolution_argmin` example — the acceptance check
+//! that `commscale optimize` returns **identical argmin strategy rows**
+//! while evaluating **<= 20% of the grid**, and the machine-readable
+//! trajectory record `BENCH_optimizer.json` (`points_per_sec`,
+//! `pruned_fraction`).
+//!
+//! Env knobs (used by CI): `COMMSCALE_BENCH_QUICK=1` / `--quick` shrinks
+//! the grid (~7k points) and the measurement budget.
+
+use std::path::Path;
+use std::time::Instant;
+
+use commscale::hw::{catalog, Evolution};
+use commscale::optimizer::{self, OptimizeOptions};
+use commscale::study::{run_study, RowSink, RunOptions, StudySpec, VecSink};
+use commscale::util::microbench::{bench_header, fmt_time, Bench};
+use commscale::util::Json;
+
+fn main() {
+    bench_header("strategy optimizer (search vs exhaustive sweep)");
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("COMMSCALE_BENCH_QUICK").is_ok();
+
+    let spec_path = Path::new("../examples/studies/tp_pp_evolution_argmin.json");
+    let mut spec = StudySpec::parse_file(spec_path)
+        .expect("examples/studies/tp_pp_evolution_argmin.json");
+    spec.sinks.clear(); // rows are consumed in-process here
+    if quick {
+        spec.axes.hidden = vec![4096, 16384];
+        spec.axes.seq_len = vec![2048, 8192];
+        spec.axes.evolutions =
+            vec![Evolution::none(), Evolution::flop_vs_bw_4x()];
+    }
+    let device = catalog::mi210();
+    let resolved = spec.resolve(&device).unwrap();
+    let total = resolved.total_points();
+    println!(
+        "grid: {total} scenario points ({} hardware points)",
+        resolved.hardware.len()
+    );
+    if !quick {
+        assert!(
+            total > 100_000,
+            "the example study shrank below its 103k-point billing: {total}"
+        );
+    }
+
+    // -- exhaustive baseline (timed once: it is the slow side) -------------
+    let t0 = Instant::now();
+    let mut exhaustive = VecSink::new();
+    {
+        let mut sinks: Vec<&mut dyn RowSink> = vec![&mut exhaustive];
+        run_study(&resolved, RunOptions::default(), &mut sinks).unwrap();
+    }
+    let exhaustive_secs = t0.elapsed().as_secs_f64();
+    println!(
+        "exhaustive study: {} total, {:.0} points/s, {} groups",
+        fmt_time(exhaustive_secs),
+        total as f64 / exhaustive_secs,
+        exhaustive.rows.len()
+    );
+
+    // -- the search, measured ----------------------------------------------
+    let opts = OptimizeOptions::default();
+    let res = Bench::new("optimizer_search")
+        .measure(std::time::Duration::from_millis(if quick { 300 } else { 2000 }))
+        .max_iters(if quick { 5 } else { 8 })
+        .run(|| optimizer::optimize_study(&resolved, &opts).unwrap());
+    let report = optimizer::optimize_study(&resolved, &opts).unwrap();
+
+    // -- acceptance: identical argmin rows, <= 20% of the grid evaluated ---
+    report
+        .matches_exhaustive(&exhaustive.columns, &exhaustive.rows)
+        .unwrap_or_else(|e| panic!("search diverged from the sweep: {e}"));
+    let eval_frac = report.evaluated as f64 / report.candidates as f64;
+    println!(
+        "search: {} of {} candidates evaluated ({:.1}% pruned), {} groups, \
+         argmin rows identical to the exhaustive study",
+        report.evaluated,
+        report.candidates,
+        100.0 * report.pruned_fraction(),
+        report.groups
+    );
+    assert!(
+        eval_frac <= 0.20,
+        "acceptance: the search must evaluate <= 20% of the grid, \
+         evaluated {:.1}%",
+        100.0 * eval_frac
+    );
+
+    let search_secs = res.summary.median;
+    let speedup = exhaustive_secs / search_secs;
+    println!(
+        "search {} vs exhaustive {} — {speedup:.1}x",
+        fmt_time(search_secs),
+        fmt_time(exhaustive_secs)
+    );
+
+    res.write_json_with(
+        Path::new("BENCH_optimizer.json"),
+        vec![
+            ("grid_points", Json::num(total as f64)),
+            ("candidates", Json::num(report.candidates as f64)),
+            ("evaluated", Json::num(report.evaluated as f64)),
+            ("groups", Json::num(report.groups as f64)),
+            ("pruned_fraction", Json::num(report.pruned_fraction())),
+            (
+                "points_per_sec",
+                Json::num(report.candidates as f64 / search_secs),
+            ),
+            (
+                "evaluated_per_sec",
+                Json::num(report.evaluated as f64 / search_secs),
+            ),
+            ("exhaustive_secs", Json::num(exhaustive_secs)),
+            ("speedup_vs_exhaustive", Json::num(speedup)),
+            ("quick", Json::Bool(quick)),
+        ],
+    )
+    .unwrap();
+    println!("wrote BENCH_optimizer.json");
+}

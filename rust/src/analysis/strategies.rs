@@ -18,6 +18,7 @@
 //! compare directly.
 
 use crate::hw::{DeviceSpec, Evolution};
+use crate::optimizer::{self, OptimizeOptions, OptimizeReport};
 use crate::parallelism::{ParallelismSpec, TopologyKind};
 use crate::study::{AggOp, AggSpec, StudySpec};
 use crate::sweep::{self, PointMetrics, ScenarioGrid};
@@ -246,6 +247,96 @@ pub fn compare(
     (points, summaries)
 }
 
+/// Find the per-archetype winners by **search** instead of sweeping: the
+/// strategy study's group-by argmin driven through the branch-and-bound
+/// optimizer. `commscale strategies` pairs this with
+/// [`check_search`] against the exhaustive [`compare`] — the report is a
+/// search + verification pass, and the pruned fraction it prints is the
+/// optimizer's savings on this grid.
+pub fn search(device: &DeviceSpec, world: u64) -> crate::Result<OptimizeReport> {
+    let resolved = study(world).resolve(device)?;
+    optimizer::optimize_study(&resolved, &OptimizeOptions::default())
+}
+
+/// Exhaustive per-archetype argmin over [`compare`]'s points, in stream
+/// order — the oracle [`check_search`] verifies a search report against.
+pub fn brute_best_by_archetype(
+    points: &[StrategyPoint],
+) -> Vec<(&'static str, ParallelismSpec, f64)> {
+    let mut rows: Vec<(&'static str, ParallelismSpec, f64)> = Vec::new();
+    for p in points {
+        let t = p.time_per_sample();
+        match rows.iter_mut().find(|r| r.0 == p.archetype) {
+            None => rows.push((p.archetype, p.spec, t)),
+            Some(r) => {
+                if t < r.2 {
+                    r.1 = p.spec;
+                    r.2 = t;
+                }
+            }
+        }
+    }
+    rows
+}
+
+/// Verify a search report against the brute-force winners: identical
+/// archetype order, bit-identical minima, identical winning strategies.
+/// Returns a description of the first divergence — a pruning bug must
+/// fail loudly, not silently ship a wrong strategy table.
+pub fn check_search(
+    report: &OptimizeReport,
+    brute: &[(&'static str, ParallelismSpec, f64)],
+) -> std::result::Result<(), String> {
+    let col = |name: &str| -> std::result::Result<usize, String> {
+        report
+            .columns
+            .iter()
+            .position(|c| c == name)
+            .ok_or_else(|| format!("search report lacks column {name:?}"))
+    };
+    let min_i = col("time_per_sample_min")?;
+    let tp_i = col("tp_at_min_time_per_sample")?;
+    let pp_i = col("pp_at_min_time_per_sample")?;
+    let dp_i = col("dp_at_min_time_per_sample")?;
+    let sp_i = col("seq_par_at_min_time_per_sample")?;
+    if report.rows.len() != brute.len() {
+        return Err(format!(
+            "search found {} archetype groups, exhaustive found {}",
+            report.rows.len(),
+            brute.len()
+        ));
+    }
+    for (row, (arch, spec, t)) in report.rows.iter().zip(brute) {
+        if row[0].render() != *arch {
+            return Err(format!(
+                "group order diverged: search {:?}, exhaustive {arch:?}",
+                row[0].render()
+            ));
+        }
+        if row[min_i].as_f64().to_bits() != t.to_bits() {
+            return Err(format!(
+                "{arch}: search min {} != exhaustive min {t}",
+                row[min_i].as_f64()
+            ));
+        }
+        let (tp, pp, dp) = (
+            row[tp_i].as_f64() as u64,
+            row[pp_i].as_f64() as u64,
+            row[dp_i].as_f64() as u64,
+        );
+        let sp = row[sp_i].as_f64() != 0.0;
+        if tp != spec.tp || pp != spec.pp || dp != spec.dp || sp != spec.seq_par
+        {
+            return Err(format!(
+                "{arch}: search winner tp{tp}·pp{pp}·dp{dp}·sp{sp} != \
+                 exhaustive {:?}",
+                spec
+            ));
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -367,6 +458,35 @@ mod tests {
         for s in &summaries {
             assert!(s.time_per_sample_mean > 0.0);
         }
+    }
+
+    #[test]
+    fn search_matches_exhaustive_comparison() {
+        // the report path: branch-and-bound winners verified against the
+        // full sweep, with real pruning.
+        let d = catalog::mi210();
+        let (points, _) = compare(&d, 16);
+        let report = search(&d, 16).unwrap();
+        let brute = brute_best_by_archetype(&points);
+        check_search(&report, &brute).unwrap();
+        assert_eq!(report.candidates, points.len());
+        assert!(
+            report.evaluated < report.candidates,
+            "evaluated {}/{} — the search pruned nothing",
+            report.evaluated,
+            report.candidates
+        );
+    }
+
+    #[test]
+    fn check_search_flags_divergence() {
+        let d = catalog::mi210();
+        let (points, _) = compare(&d, 16);
+        let report = search(&d, 16).unwrap();
+        let mut brute = brute_best_by_archetype(&points);
+        brute[0].2 *= 2.0; // corrupt the oracle
+        let err = check_search(&report, &brute).unwrap_err();
+        assert!(err.contains("min"), "{err}");
     }
 
     #[test]

@@ -56,6 +56,7 @@ pub mod graph;
 pub mod hw;
 pub mod model;
 pub mod opmodel;
+pub mod optimizer;
 pub mod parallelism;
 pub mod profiler;
 pub mod report;

@@ -27,12 +27,15 @@ use commscale::coordinator::Trainer;
 use commscale::hw::{catalog, DeviceSpec, Evolution};
 use commscale::model::Precision;
 use commscale::opmodel::SpeedupAccounting;
+use commscale::optimizer;
 use commscale::parallelism::TopologyKind;
 use commscale::profiler::{self, ProfileDb};
 use commscale::report::{fmt_secs, Table};
 use commscale::runtime::Runtime;
 use commscale::sim::AnalyticCost;
-use commscale::study::{self, builtin, RowSink, RunOptions, StudySpec};
+use commscale::study::{
+    self, builtin, RowSink, RunOptions, SpecSink, StudySpec, VecSink,
+};
 use commscale::sweep::{self, GridBuilder};
 use commscale::util::cli::Args;
 
@@ -54,6 +57,7 @@ fn main() -> Result<()> {
             Ok(())
         }
         "study" => study_cmd(&args, &device),
+        "optimize" => optimize_cmd(&args, &device),
         "fig15" => fig15(&args),
         "sweep" => sweep_cmd(&args, &device),
         "strategies" => strategies_cmd(&args, &device),
@@ -111,18 +115,7 @@ fn study_cmd(args: &Args, device: &DeviceSpec) -> Result<()> {
              `commscale study --list`"
         );
     };
-    let spec: StudySpec = if target.ends_with(".json")
-        || Path::new(target).exists()
-    {
-        StudySpec::parse_file(Path::new(target))?
-    } else if let Some(b) = builtin::find(target) {
-        b.spec()
-    } else {
-        bail!(
-            "unknown study {target:?}: not a spec file on disk and not a \
-             built-in (see `commscale study --list`)"
-        );
-    };
+    let spec = load_spec(target)?;
     let resolved = spec.resolve(device)?;
     if args.has("explain") {
         print!("{}", resolved.explain());
@@ -156,6 +149,165 @@ fn study_cmd(args: &Args, device: &DeviceSpec) -> Result<()> {
     Ok(())
 }
 
+/// Resolve a `study`/`optimize` target: a spec file on disk, or a
+/// built-in by study name or artifact alias.
+fn load_spec(target: &str) -> Result<StudySpec> {
+    if target.ends_with(".json") || Path::new(target).exists() {
+        Ok(StudySpec::parse_file(Path::new(target))?)
+    } else if let Some(b) = builtin::find(target) {
+        Ok(b.spec())
+    } else {
+        bail!(
+            "unknown study {target:?}: not a spec file on disk and not a \
+             built-in (see `commscale study --list`)"
+        );
+    }
+}
+
+/// `commscale optimize` — the strategy optimizer: search a grid study's
+/// group-by argmin (memory feasibility + branch-and-bound) instead of
+/// sweeping every point, with optional exhaustive verification and
+/// winner re-emission as a new study spec.
+fn optimize_cmd(args: &Args, device: &DeviceSpec) -> Result<()> {
+    let Some(target) = args.positional.get(1) else {
+        bail!(
+            "usage: commscale optimize <spec.json|builtin-name> [--explain] \
+             [--csv PATH] [--emit-spec PATH] [--threads N] \
+             [--memory-cap FRAC] [--verify]; the spec needs group_by plus \
+             one argmin aggregation over makespan|iter_time|\
+             time_per_sample|comm_fraction"
+        );
+    };
+    let spec = load_spec(target)?;
+    let resolved = spec.resolve(device)?;
+    if args.has("explain") {
+        print!("{}", resolved.explain());
+        if let Some(a) = spec
+            .aggregate
+            .iter()
+            .find(|a| a.ops.contains(&study::AggOp::ArgMin))
+        {
+            println!(
+                "  optimize: searching min {} per ({}) group, reporting {}",
+                a.metric,
+                spec.group_by.join(", "),
+                a.args.join(", ")
+            );
+        }
+        return Ok(());
+    }
+    let memory_cap = match args.get("memory-cap") {
+        None => None,
+        Some(s) => {
+            let frac: f64 = s
+                .parse()
+                .context("--memory-cap must be a number (fraction of HBM)")?;
+            if !frac.is_finite() || frac <= 0.0 {
+                bail!(
+                    "--memory-cap must be a positive fraction of device \
+                     HBM (e.g. 0.9), got {s}"
+                );
+            }
+            Some(frac)
+        }
+    };
+    if memory_cap.is_some() && args.has("verify") {
+        bail!(
+            "--verify compares against the capacity-blind exhaustive \
+             study; drop --memory-cap to verify"
+        );
+    }
+    let opts = optimizer::OptimizeOptions {
+        threads: args.get_usize("threads", 0),
+        memory_cap,
+    };
+    let t0 = std::time::Instant::now();
+    let report = optimizer::optimize_study(&resolved, &opts)?;
+    let secs = t0.elapsed().as_secs_f64();
+
+    let headers: Vec<&str> =
+        report.columns.iter().map(|c| c.as_str()).collect();
+    let mut t = Table::new(
+        &format!("optimize {} — min {} per group", spec.name, report.metric),
+        &headers,
+    );
+    let shown = report.rows.len().min(60);
+    for row in report.rows.iter().take(shown) {
+        t.row(row.iter().map(|v| v.render()).collect());
+    }
+    print!("{}", t.render());
+    if report.rows.len() > shown {
+        println!(
+            "({} more groups not shown; --csv streams all)",
+            report.rows.len() - shown
+        );
+    }
+    eprintln!(
+        "optimize {:?}: {} groups; evaluated {} of {} candidates \
+         ({:.1}% pruned{}) in {:.2}s",
+        spec.name,
+        report.groups,
+        report.evaluated,
+        report.candidates,
+        100.0 * report.pruned_fraction(),
+        if report.infeasible > 0 {
+            format!(", {} memory-infeasible", report.infeasible)
+        } else {
+            String::new()
+        },
+        secs
+    );
+
+    if let Some(path) = csv(args) {
+        use std::io::Write;
+        let mut out = std::io::BufWriter::new(
+            std::fs::File::create(path)
+                .with_context(|| format!("cannot create {path:?}"))?,
+        );
+        writeln!(out, "{}", report.columns.join(","))?;
+        for row in &report.rows {
+            let cells: Vec<String> =
+                row.iter().map(|v| v.render()).collect();
+            writeln!(out, "{}", cells.join(","))?;
+        }
+        out.flush()?;
+        eprintln!("wrote {} rows to {path}", report.rows.len());
+    }
+
+    if let Some(path) = args.get("emit-spec") {
+        let mut sink =
+            SpecSink::new(path, &spec.name, None, spec.device.as_deref());
+        sink.begin(&report.columns)?;
+        for row in &report.rows {
+            sink.row(row)?;
+        }
+        if let Some(msg) = sink.finish()? {
+            print!("{msg}");
+        }
+    }
+
+    if args.has("verify") {
+        let mut vs = VecSink::new();
+        {
+            let mut sinks: Vec<&mut dyn RowSink> = vec![&mut vs];
+            study::run_study(
+                &resolved,
+                RunOptions { threads: opts.threads, chunk: 0 },
+                &mut sinks,
+            )?;
+        }
+        if let Err(e) = report.matches_exhaustive(&vs.columns, &vs.rows) {
+            bail!("VERIFICATION FAILED: {e}");
+        }
+        println!(
+            "verified: search argmin rows identical to the exhaustive \
+             study ({} points)",
+            resolved.total_points()
+        );
+    }
+    Ok(())
+}
+
 const HELP: &str = "\
 commscale — Comp-vs.-Comm scaling analysis (Pati et al., 2023 reproduction)
 
@@ -172,6 +324,25 @@ declarative studies (the one scenario-query surface):
   study ... --explain    print the resolved axes and point count only
   study ... --csv PATH   append a streaming CSV sink
   study ... --threads N --chunk N
+  (a {\"kind\": \"spec\", \"path\": ...} sink re-emits grouped argmin rows
+   as a new study spec — coarse winners seed a fine follow-up study)
+
+strategy optimizer (search, not sweep):
+  optimize <spec|name>   find each group's argmin strategy WITHOUT
+                         evaluating the full grid: memory-capacity
+                         feasibility pruning + branch-and-bound on a
+                         monotone lower bound from the memoized cost
+                         tables. Argmin rows are bit-identical to the
+                         exhaustive study's; typically <20% of points
+                         are simulated. The spec needs group_by + one
+                         argmin over makespan|iter_time|time_per_sample|
+                         comm_fraction.
+    --explain            resolved axes + the searched objective
+    --verify             also run the exhaustive study and assert the
+                         argmin rows match bit-for-bit (loud on any bug)
+    --emit-spec PATH     write the winners as a new runnable study spec
+    --memory-cap FRAC    refuse strategies needing > FRAC of device HBM
+    --csv PATH --threads N
 
 paper artifacts (each backed by a built-in study definition):
   table2            model-zoo hyperparameters
@@ -197,7 +368,9 @@ raw sweeps (flag-driven; `study` is the richer surface):
     --world N              keep only strategies with tp*pp*dp == N
     --threads N            worker threads (default: all cores)
   strategies        TP vs PP vs DP vs seq-par comparison at a fixed device
-    [--world 64]    budget over a tiered fabric (>= 1k-point sweep)
+    [--world 64]    budget over a tiered fabric (>= 1k-point sweep), plus
+                    the optimizer's searched argmin table verified
+                    against the sweep bit-for-bit
 
 measurement / training:
   profile [--reps N] [--out profiles/profile.json] [--ar-ranks 4]
@@ -306,6 +479,9 @@ fn sweep_cmd(args: &Args, device: &DeviceSpec) -> Result<()> {
         b = b.world_size(w);
     }
 
+    if let Some(reason) = b.empty_reason() {
+        bail!("sweep grid is empty: {reason}");
+    }
     let grid = b.build();
     let threads = args.get_usize("threads", 0);
     eprintln!(
@@ -440,6 +616,41 @@ fn strategies_cmd(args: &Args, device: &DeviceSpec) -> Result<()> {
         ]);
     }
     print!("{}", d.render());
+
+    // search + verification pass: the same per-archetype winners found by
+    // the branch-and-bound optimizer, checked against the sweep above.
+    let report = strategies::search(device, world)?;
+    let brute = strategies::brute_best_by_archetype(&points);
+    if let Err(e) = strategies::check_search(&report, &brute) {
+        bail!("optimizer verification failed: {e}");
+    }
+    let ev_col = report
+        .columns
+        .iter()
+        .position(|c| c == "evaluated")
+        .context("search report lacks 'evaluated'")?;
+    let mut s = Table::new(
+        "argmin strategy per archetype (branch-and-bound search, verified \
+         against the sweep)",
+        &["archetype", "candidates", "evaluated", "best strategy", "t/sample"],
+    );
+    for (row, (arch, spec, t)) in report.rows.iter().zip(&brute) {
+        s.row(vec![
+            arch.to_string(),
+            row[1].render(),
+            row[ev_col].render(),
+            spec.label(),
+            fmt_secs(*t),
+        ]);
+    }
+    print!("{}", s.render());
+    println!(
+        "search evaluated {} of {} candidates ({:.1}% pruned) and matched \
+         the exhaustive argmin bit-for-bit",
+        report.evaluated,
+        report.candidates,
+        100.0 * report.pruned_fraction()
+    );
     d.maybe_write_csv(csv(args))?;
     Ok(())
 }

@@ -1,0 +1,147 @@
+//! Memory-capacity feasibility — the search's first pruning stage.
+//!
+//! The paper's Fig 6 stress is that model memory demand grows
+//! quadratically while device capacity grows linearly; a strategy
+//! optimizer therefore has to know which factorizations *fit* before it
+//! prices them. This module extends `model::memory::TrainingFootprint`
+//! with strategy awareness: how TP/PP shard the parameter state, how
+//! 1F1B bounds the number of in-flight microbatch activations, and how
+//! sequence parallelism shards the replicated activations.
+//!
+//! Feasibility pruning is **opt-in**
+//! ([`crate::optimizer::OptimizeOptions::memory_cap`]): the exhaustive
+//! sweep it must stay argmin-equivalent to does not model capacity, so
+//! the equivalence mode runs with the check off and the capacity-aware
+//! mode reports how many candidates it refused to price.
+
+use crate::model::ModelConfig;
+
+/// Strategy-aware per-device training footprint, in bytes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StrategyFootprint {
+    /// Weights + gradients of this rank's parameter shard.
+    pub weight_grad_bytes: u64,
+    /// Adam moments (2 x f32) of the shard.
+    pub optimizer_bytes: u64,
+    /// Stashed activations for backprop, all in-flight microbatches.
+    pub activation_bytes: u64,
+}
+
+impl StrategyFootprint {
+    pub fn of(cfg: &ModelConfig) -> StrategyFootprint {
+        let p = cfg.precision.bytes();
+        // TP shards every weight matrix, PP shards the layer stack; DP
+        // replicates (no ZeRO modeled).
+        let shard = cfg.param_count() / (cfg.tp() * cfg.pp());
+        // 1F1B keeps at most `pp` microbatches' activations alive on a
+        // stage (one per in-flight slot), never more than `microbatches`.
+        let inflight = cfg.microbatches().min(cfg.pp()).max(1);
+        // Of the ~10H bytes/token the backward pass stashes, the GEMM
+        // intermediates (~7H: qkv, attention, fc) are TP-sharded; the
+        // residual/LayerNorm copies (~3H) replicate unless sequence
+        // parallelism shards the token rows too.
+        let sharded = 7 * cfg.hidden * p / cfg.tp();
+        let replicated =
+            3 * cfg.hidden * p / if cfg.seq_par() { cfg.tp() } else { 1 };
+        let act_per_token = sharded + replicated;
+        StrategyFootprint {
+            weight_grad_bytes: 2 * shard * p,
+            optimizer_bytes: shard * 2 * 4,
+            activation_bytes: cfg.stage_layers()
+                * cfg.seq_len
+                * cfg.batch
+                * act_per_token
+                * inflight,
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.weight_grad_bytes + self.optimizer_bytes + self.activation_bytes
+    }
+}
+
+/// Does the strategy fit in `capacity_bytes · cap_fraction` of device
+/// memory? (`cap_fraction` leaves headroom for workspace/fragmentation —
+/// 1.0 uses the full HBM.)
+pub fn fits(cfg: &ModelConfig, capacity_bytes: u64, cap_fraction: f64) -> bool {
+    StrategyFootprint::of(cfg).total() as f64
+        <= capacity_bytes as f64 * cap_fraction
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::catalog;
+    use crate::parallelism::ParallelismSpec;
+
+    fn cfg(tp: u64, pp: u64, dp: u64) -> ModelConfig {
+        ModelConfig {
+            hidden: 16384,
+            seq_len: 2048,
+            batch: 1,
+            layers: 32,
+            heads: 128,
+            ffn_mult: 4,
+            par: ParallelismSpec {
+                tp,
+                pp,
+                microbatches: if pp > 1 { 8 } else { 1 },
+                dp,
+                seq_par: false,
+            },
+            precision: crate::model::Precision::F16,
+        }
+    }
+
+    #[test]
+    fn tp_and_pp_shard_the_parameter_state() {
+        let serial = StrategyFootprint::of(&cfg(1, 1, 1));
+        let sharded = StrategyFootprint::of(&cfg(4, 4, 1));
+        assert_eq!(
+            serial.weight_grad_bytes,
+            16 * sharded.weight_grad_bytes
+        );
+        assert_eq!(serial.optimizer_bytes, 16 * sharded.optimizer_bytes);
+    }
+
+    #[test]
+    fn dp_replicates_instead_of_sharding() {
+        assert_eq!(
+            StrategyFootprint::of(&cfg(1, 1, 1)).total(),
+            StrategyFootprint::of(&cfg(1, 1, 8)).total()
+        );
+    }
+
+    #[test]
+    fn pipeline_inflight_microbatches_offset_stage_sharding() {
+        // pp=4 cuts the stage to 1/4 of the layers but keeps 4 microbatch
+        // activations in flight: activation memory is a wash, parameter
+        // memory shrinks 4x.
+        let flat = StrategyFootprint::of(&cfg(1, 1, 1));
+        let piped = StrategyFootprint::of(&cfg(1, 4, 1));
+        assert_eq!(flat.activation_bytes, piped.activation_bytes);
+        assert_eq!(flat.weight_grad_bytes, 4 * piped.weight_grad_bytes);
+    }
+
+    #[test]
+    fn seq_par_shards_the_replicated_activations() {
+        let dense = StrategyFootprint::of(&cfg(8, 1, 1));
+        let mut c = cfg(8, 1, 1);
+        c.par.seq_par = true;
+        let sp = StrategyFootprint::of(&c);
+        assert!(sp.activation_bytes < dense.activation_bytes);
+        assert_eq!(sp.weight_grad_bytes, dense.weight_grad_bytes);
+    }
+
+    #[test]
+    fn capacity_check_separates_fitting_from_oversized() {
+        let d = catalog::mi210(); // 64 GB
+        // a 32-layer H=16K model on a single device (~60 GB of weights
+        // + opt state alone) cannot fit ...
+        assert!(!fits(&cfg(1, 1, 1), d.mem_capacity, 1.0));
+        // ... but a 64-way sharded stage does
+        assert!(fits(&cfg(8, 8, 1), d.mem_capacity, 1.0));
+        // headroom fraction tightens the cut
+        assert!(!fits(&cfg(8, 8, 1), d.mem_capacity, 0.001));
+    }
+}

@@ -1,0 +1,599 @@
+//! Strategy optimizer: **search** TP×PP×DP×SP factorizations instead of
+//! sweeping them.
+//!
+//! The paper's headline numbers (communication claiming 40–75% of the
+//! runtime as models and hardware scale) depend on *which*
+//! parallelization each scale would actually use — i.e. on an argmin
+//! over strategies at every (model, hardware) cell. The exhaustive grids
+//! the study layer streams (103k points for one TP×PP×evolution study)
+//! answer that argmin by pricing every candidate; this module answers it
+//! by pricing a fraction of them:
+//!
+//! 1. **Memory-capacity feasibility** ([`memory`]) — strategies whose
+//!    per-device footprint exceeds the HBM are refused before costing
+//!    (opt-in, since the exhaustive baseline does not model capacity);
+//! 2. **Branch-and-bound** ([`bound`], [`search`]) — a monotone lower
+//!    bound computed from the sweep engine's memoized cost tables orders
+//!    the candidates; evaluation stops the moment the bound floor passes
+//!    the incumbent. The argmin is **bit-identical** to the exhaustive
+//!    sweep's, including first-row tie-breaks
+//!    (`tests/optimizer_golden.rs`).
+//!
+//! Surfaces: [`optimize_study`] runs the search over any grid-source
+//! [`StudySpec`] with a group-by argmin (the `commscale optimize` CLI),
+//! the winners re-emit as a new serializable spec through the study
+//! layer's spec sink (coarse search seeds fine search), and
+//! `analysis::strategies` routes its report through the same search plus
+//! an exhaustive verification pass.
+
+pub mod bound;
+pub mod memory;
+pub mod search;
+
+pub use bound::{lower_bound, Objective, FP_GUARD};
+pub use memory::StrategyFootprint;
+pub use search::{Candidate, GroupOutcome};
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::study::spec::{ResolvedStudy, Source};
+use crate::study::run as study_run;
+use crate::study::{AggOp, AggSpec, Expr, FieldKind, Value};
+use crate::sweep::{self, EvalCtx, ScenarioGrid};
+use crate::{Error, Result};
+
+/// Search knobs.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OptimizeOptions {
+    /// Worker threads across groups (0 = all cores).
+    pub threads: usize,
+    /// Memory-capacity feasibility pruning: the fraction of device HBM a
+    /// candidate may occupy. `None` (default) disables the check so the
+    /// result stays argmin-equivalent to the capacity-blind exhaustive
+    /// sweep.
+    pub memory_cap: Option<f64>,
+}
+
+/// One group's search result row, plus the stats a caller reports.
+#[derive(Debug, Clone)]
+pub struct OptimizeReport {
+    /// The spec's argmin metric (objective) name, e.g. `time_per_sample`.
+    pub metric: String,
+    pub objective: Objective,
+    /// Arg fields reported at the winning row.
+    pub args: Vec<String>,
+    /// Output columns: group keys, `points`, `{metric}_min`,
+    /// `{arg}_at_min_{metric}`…, `evaluated`.
+    pub columns: Vec<String>,
+    /// One row per group, in exhaustive-stream (first-seen) order.
+    pub rows: Vec<Vec<Value>>,
+    /// Candidate totals across all groups.
+    pub candidates: usize,
+    /// Points actually simulated.
+    pub evaluated: usize,
+    /// Points refused by the memory-capacity check.
+    pub infeasible: usize,
+    pub groups: usize,
+}
+
+impl OptimizeReport {
+    /// Fraction of the grid the search never had to simulate.
+    pub fn pruned_fraction(&self) -> f64 {
+        if self.candidates == 0 {
+            0.0
+        } else {
+            1.0 - self.evaluated as f64 / self.candidates as f64
+        }
+    }
+
+    /// Compare this report against an exhaustive grouped run's output:
+    /// every column the two share (all but the search-only `evaluated`)
+    /// must match **bit-for-bit**, rows in group order. Returns the
+    /// first divergence. `commscale optimize --verify`, the golden
+    /// tests, and the acceptance bench all call this one comparison, so
+    /// they can never drift apart.
+    pub fn matches_exhaustive(
+        &self,
+        columns: &[String],
+        rows: &[Vec<Value>],
+    ) -> std::result::Result<(), String> {
+        if self.rows.len() != rows.len() {
+            return Err(format!(
+                "search found {} groups, the exhaustive study {} — group \
+                 keys diverged",
+                self.rows.len(),
+                rows.len()
+            ));
+        }
+        let shared: Vec<(usize, usize)> = self
+            .columns
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.as_str() != "evaluated")
+            .filter_map(|(i, c)| {
+                columns.iter().position(|e| e == c).map(|j| (i, j))
+            })
+            .collect();
+        // group keys + points always align; the argmin args are the
+        // payload — anything less means the outputs aren't comparable
+        if shared.len() < 2 + self.args.len() {
+            return Err(format!(
+                "too few shared columns between search {:?} and \
+                 exhaustive {columns:?}",
+                self.columns
+            ));
+        }
+        for (gi, (srow, erow)) in self.rows.iter().zip(rows).enumerate() {
+            for &(i, j) in &shared {
+                let same = match (&srow[i], &erow[j]) {
+                    (Value::Num(a), Value::Num(b)) => {
+                        a.to_bits() == b.to_bits()
+                    }
+                    (a, b) => a == b,
+                };
+                if !same {
+                    return Err(format!(
+                        "group {gi}, column {:?}: search {} != exhaustive {}",
+                        self.columns[i],
+                        srow[i].render(),
+                        erow[j].render()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+struct Group {
+    keys: Vec<Value>,
+    cands: Vec<Candidate>,
+}
+
+/// The validated search problem extracted from a spec.
+struct Problem {
+    objective: Objective,
+    metric: String,
+    args: Vec<String>,
+    key_idx: Vec<usize>,
+    arg_idx: Vec<usize>,
+    filters: Vec<Expr>,
+    binding: study_run::MetricBinding,
+}
+
+fn extract_problem(resolved: &ResolvedStudy) -> Result<Problem> {
+    let spec = &resolved.spec;
+    if spec.source != Source::Grid {
+        return Err(Error::Study(format!(
+            "optimize: only \"grid\" studies have a strategy space to \
+             search, not {:?}",
+            spec.source.as_str()
+        )));
+    }
+    if resolved.total_points() == 0 {
+        return Err(Error::Study(format!(
+            "optimize: study {:?} resolves to an empty grid: {}",
+            spec.name,
+            resolved.empty_reason()
+        )));
+    }
+    let argmins: Vec<&AggSpec> = spec
+        .aggregate
+        .iter()
+        .filter(|a| a.ops.contains(&AggOp::ArgMin))
+        .collect();
+    let agg = match argmins.as_slice() {
+        [one] => *one,
+        [] => {
+            return Err(Error::Study(
+                "optimize: the spec needs a group_by plus one argmin \
+                 aggregation (the per-group strategy winner to search \
+                 for); see `commscale study --list` for examples"
+                    .into(),
+            ))
+        }
+        _ => {
+            return Err(Error::Study(format!(
+                "optimize: exactly one argmin aggregation is searchable, \
+                 found {} — drop the others or run the exhaustive study",
+                argmins.len()
+            )))
+        }
+    };
+    let objective = Objective::parse(&agg.metric).ok_or_else(|| {
+        Error::Study(format!(
+            "optimize: no sound lower bound exists for {:?}; searchable \
+             objectives: {} (run the exhaustive study for anything else)",
+            agg.metric,
+            Objective::supported()
+        ))
+    })?;
+    if spec.group_by.is_empty() {
+        return Err(Error::Study(
+            "optimize: group_by is empty — name the model/hardware cells \
+             the winner is searched per"
+                .into(),
+        ));
+    }
+
+    let binding = study_run::bind_metrics(spec)?;
+    let identity_len = study_run::grid_identity_len();
+    let mut key_idx = Vec::new();
+    for k in &spec.group_by {
+        let i = study_run::field_index(&binding.names, k, "group_by")?;
+        if i >= identity_len {
+            return Err(Error::Study(format!(
+                "optimize: group key {k:?} is a simulated metric; the \
+                 search can only group on scenario identity fields \
+                 (device, hidden, tp, flop_vs_bw, ...)"
+            )));
+        }
+        key_idx.push(i);
+    }
+    let mut arg_idx = Vec::new();
+    for a in &agg.args {
+        arg_idx.push(study_run::field_index(&binding.names, a, "aggregate.args")?);
+    }
+    let mut filters = Vec::new();
+    for f in &spec.filters {
+        let e = Expr::parse(f, &binding.names)?;
+        let mut fields = Vec::new();
+        expr_fields(&e, &mut fields);
+        for i in fields {
+            if i >= identity_len {
+                return Err(Error::Study(format!(
+                    "optimize: filter {f:?} reads the simulated metric \
+                     {:?}, which pruning would have to evaluate anyway — \
+                     drop the filter or run the exhaustive study",
+                    binding.names[i]
+                )));
+            }
+            if binding.kinds[i] == FieldKind::Str {
+                return Err(Error::Study(format!(
+                    "filter {f:?}: field {:?} is a string label; only \
+                     numeric fields can appear in expressions",
+                    binding.names[i]
+                )));
+            }
+        }
+        filters.push(e);
+    }
+    Ok(Problem {
+        objective,
+        metric: agg.metric.clone(),
+        args: agg.args.clone(),
+        key_idx,
+        arg_idx,
+        filters,
+        binding,
+    })
+}
+
+fn expr_fields(e: &Expr, out: &mut Vec<usize>) {
+    match e {
+        Expr::Field(i) => out.push(*i),
+        Expr::Unary(_, a) => expr_fields(a, out),
+        Expr::Binary(_, a, b) => {
+            expr_fields(a, out);
+            expr_fields(b, out);
+        }
+        Expr::Call(_, args) => {
+            for a in args {
+                expr_fields(a, out);
+            }
+        }
+        Expr::Num(_) => {}
+    }
+}
+
+/// Search a resolved grid study for its per-group argmin strategies.
+///
+/// Candidates stream through the exact enumeration order the exhaustive
+/// runner uses (hardware-major, then segments, then the grid builder's
+/// axis nesting), so group order, `points` counts, and tie-breaks all
+/// match `run_study` — the golden tests compare the two bit-for-bit.
+pub fn optimize_study(
+    resolved: &ResolvedStudy,
+    opts: &OptimizeOptions,
+) -> Result<OptimizeReport> {
+    let p = extract_problem(resolved)?;
+
+    // -- enumerate candidates into groups (no simulation) ------------------
+    let hw_grid = ScenarioGrid {
+        hardware: resolved.hardware.iter().map(|h| h.point.clone()).collect(),
+        points: Vec::new(),
+    };
+    let mut groups: Vec<Group> = Vec::new();
+    let mut index: HashMap<String, usize> = HashMap::new();
+    let mut row: Vec<Value> = Vec::new();
+    let mut nums: Vec<f64> = Vec::new();
+    let mut order: u32 = 0;
+    let mut candidates = 0usize;
+    for (hi, hw) in resolved.hardware.iter().enumerate() {
+        for (si, seg) in resolved.segments.iter().enumerate() {
+            let series = seg.label.clone().unwrap_or_default();
+            let groups = &mut groups;
+            let index = &mut index;
+            let row = &mut row;
+            let nums = &mut nums;
+            let order = &mut order;
+            let candidates = &mut candidates;
+            seg.builder.model_configs(&mut |cfg| {
+                let my_order = *order;
+                *order += 1;
+                study_run::fill_grid_identity(row, hw, &series, &cfg);
+                if !p.filters.is_empty() {
+                    nums.clear();
+                    for v in row.iter() {
+                        nums.push(v.as_f64());
+                    }
+                    nums.resize(p.binding.names.len(), f64::NAN);
+                    if !p.filters.iter().all(|f| f.eval(nums) != 0.0) {
+                        return;
+                    }
+                }
+                *candidates += 1;
+                let keys: Vec<Value> =
+                    p.key_idx.iter().map(|&i| row[i].clone()).collect();
+                let key_text = study_run::group_key_text(&keys);
+                let gi = match index.get(&key_text) {
+                    Some(&i) => i,
+                    None => {
+                        let i = groups.len();
+                        index.insert(key_text, i);
+                        groups.push(Group { keys, cands: Vec::new() });
+                        i
+                    }
+                };
+                groups[gi].cands.push(Candidate {
+                    cfg,
+                    hw: hi as u32,
+                    seg: si as u32,
+                    order: my_order,
+                });
+            });
+        }
+    }
+
+    // -- search each group (parallel across groups) ------------------------
+    let n_groups = groups.len();
+    let mut outcomes: Vec<Option<GroupOutcome>> = vec![None; n_groups];
+    let requested = if opts.threads == 0 {
+        sweep::default_threads()
+    } else {
+        opts.threads
+    };
+    let threads = requested.max(1).min(n_groups.max(1));
+    if threads <= 1 {
+        let mut ctx = EvalCtx::new();
+        for (g, slot) in groups.iter().zip(outcomes.iter_mut()) {
+            *slot = search::search_group(
+                &mut ctx,
+                &hw_grid,
+                &g.cands,
+                p.objective,
+                opts.memory_cap,
+            );
+        }
+    } else {
+        let queue: Mutex<Vec<(usize, &mut Option<GroupOutcome>)>> =
+            Mutex::new(outcomes.iter_mut().enumerate().collect());
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                s.spawn(|| {
+                    let mut ctx = EvalCtx::new();
+                    loop {
+                        let item = queue.lock().unwrap().pop();
+                        let Some((gi, slot)) = item else { break };
+                        *slot = search::search_group(
+                            &mut ctx,
+                            &hw_grid,
+                            &groups[gi].cands,
+                            p.objective,
+                            opts.memory_cap,
+                        );
+                    }
+                });
+            }
+        });
+    }
+
+    // -- assemble the report ------------------------------------------------
+    let mut columns: Vec<String> = resolved.spec.group_by.clone();
+    columns.push("points".into());
+    columns.push(format!("{}_min", p.metric));
+    for a in &p.args {
+        columns.push(format!("{a}_at_min_{}", p.metric));
+    }
+    columns.push("evaluated".into());
+
+    let mut rows = Vec::with_capacity(n_groups);
+    let mut evaluated = 0usize;
+    let mut infeasible = 0usize;
+    let mut winner_row: Vec<Value> = Vec::new();
+    let mut winner_nums: Vec<f64> = Vec::new();
+    for (g, out) in groups.iter().zip(&outcomes) {
+        let mut r = g.keys.clone();
+        r.push(Value::Num(g.cands.len() as f64));
+        match out {
+            Some(out) => {
+                evaluated += out.evaluated;
+                infeasible += out.infeasible;
+                let w = &g.cands[out.winner];
+                let hw = &resolved.hardware[w.hw as usize];
+                let series = resolved.segments[w.seg as usize]
+                    .label
+                    .clone()
+                    .unwrap_or_default();
+                study_run::fill_grid_identity(
+                    &mut winner_row,
+                    hw,
+                    &series,
+                    &w.cfg,
+                );
+                study_run::fill_grid_metrics(
+                    &mut winner_row,
+                    &w.cfg,
+                    &out.metrics,
+                );
+                // derived metric columns, exactly as the pipeline appends
+                winner_nums.clear();
+                for v in winner_row.iter() {
+                    winner_nums.push(v.as_f64());
+                }
+                study_run::append_derived_metrics(
+                    &p.binding.metrics,
+                    &mut winner_row,
+                    &mut winner_nums,
+                );
+                r.push(Value::Num(out.best));
+                for &ai in &p.arg_idx {
+                    r.push(winner_row[ai].clone());
+                }
+                r.push(Value::Num(out.evaluated as f64));
+            }
+            None => {
+                // every candidate failed the memory check
+                infeasible += g.cands.len();
+                r.push(Value::Num(f64::NAN));
+                for _ in &p.arg_idx {
+                    r.push(Value::Num(f64::NAN));
+                }
+                r.push(Value::Num(0.0));
+            }
+        }
+        rows.push(r);
+    }
+
+    Ok(OptimizeReport {
+        metric: p.metric,
+        objective: p.objective,
+        args: p.args,
+        columns,
+        rows,
+        candidates,
+        evaluated,
+        infeasible,
+        groups: n_groups,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::catalog;
+    use crate::study::StudySpec;
+
+    fn resolve(text: &str) -> ResolvedStudy {
+        StudySpec::parse(text).unwrap().resolve(&catalog::mi210()).unwrap()
+    }
+
+    #[test]
+    fn rejects_unsupported_objectives_and_shapes() {
+        // no argmin at all
+        let r = resolve(
+            r#"{"name":"x","group_by":["hidden"],
+                "aggregate":[{"metric":"makespan","ops":["min"]}]}"#,
+        );
+        let e = optimize_study(&r, &OptimizeOptions::default()).unwrap_err();
+        assert!(e.to_string().contains("one argmin"), "{e}");
+
+        // unboundable objective
+        let r = resolve(
+            r#"{"name":"x","group_by":["hidden"],
+                "aggregate":[{"metric":"bubble_fraction","ops":["argmin"],
+                              "args":["tp"]}]}"#,
+        );
+        let e = optimize_study(&r, &OptimizeOptions::default()).unwrap_err();
+        assert!(e.to_string().contains("time_per_sample"), "{e}");
+
+        // metric group key
+        let r = resolve(
+            r#"{"name":"x","group_by":["comm_fraction"],
+                "aggregate":[{"metric":"makespan","ops":["argmin"],
+                              "args":["tp"]}]}"#,
+        );
+        let e = optimize_study(&r, &OptimizeOptions::default()).unwrap_err();
+        assert!(e.to_string().contains("identity"), "{e}");
+
+        // metric-dependent filter
+        let r = resolve(
+            r#"{"name":"x","group_by":["hidden"],
+                "filter":["comm_fraction < 0.5"],
+                "aggregate":[{"metric":"makespan","ops":["argmin"],
+                              "args":["tp"]}]}"#,
+        );
+        let e = optimize_study(&r, &OptimizeOptions::default()).unwrap_err();
+        assert!(e.to_string().contains("exhaustive"), "{e}");
+    }
+
+    #[test]
+    fn empty_grid_is_an_actionable_error() {
+        let r = resolve(
+            r#"{"name":"x",
+                "axes":{"tp":[2,4],"pp":[1],"dp":[1],"world":7,
+                        "layers":[8]},
+                "group_by":["hidden"],
+                "aggregate":[{"metric":"makespan","ops":["argmin"],
+                              "args":["tp"]}]}"#,
+        );
+        let e = optimize_study(&r, &OptimizeOptions::default()).unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("empty grid"), "{msg}");
+        assert!(msg.contains("world_size 7"), "{msg}");
+    }
+
+    #[test]
+    fn identity_filters_narrow_the_candidate_set() {
+        let text = r#"{
+          "name": "f",
+          "axes": {"hidden": [4096, 16384], "layers": [8],
+                   "tp": [1, 2, 4, 8], "pp": [1, 4], "microbatches": [4],
+                   "dp": [1, 2]},
+          "filter": ["tp >= 2"],
+          "group_by": ["hidden"],
+          "aggregate": [{"metric": "time_per_sample", "ops": ["argmin"],
+                         "args": ["tp", "pp", "dp"]}]
+        }"#;
+        let r = resolve(text);
+        let report =
+            optimize_study(&r, &OptimizeOptions::default()).unwrap();
+        assert_eq!(report.groups, 2);
+        // tp=1 strategies filtered out: 3 tp x 2 pp x 2 dp per hidden
+        let pts: f64 = report.rows.iter().map(|r| r[1].as_f64()).sum();
+        assert_eq!(pts, 24.0);
+        assert!(report.evaluated <= report.candidates);
+        // the winner honors the filter
+        let tp_col = report
+            .columns
+            .iter()
+            .position(|c| c == "tp_at_min_time_per_sample")
+            .unwrap();
+        for row in &report.rows {
+            assert!(row[tp_col].as_f64() >= 2.0);
+        }
+    }
+
+    #[test]
+    fn memory_cap_all_infeasible_group_yields_nan_row() {
+        // one enormous un-shardable model, 1 GB of "capacity" headroom
+        let text = r#"{
+          "name": "m",
+          "axes": {"hidden": [65536], "seq_len": [8192], "layers": [96],
+                   "tp": [1], "dp": [1]},
+          "group_by": ["hidden"],
+          "aggregate": [{"metric": "makespan", "ops": ["argmin"],
+                         "args": ["tp"]}]
+        }"#;
+        let r = resolve(text);
+        let opts = OptimizeOptions {
+            threads: 1,
+            memory_cap: Some(1e-6),
+        };
+        let report = optimize_study(&r, &opts).unwrap();
+        assert_eq!(report.evaluated, 0);
+        assert_eq!(report.infeasible, 1);
+        assert!(report.rows[0][2].as_f64().is_nan());
+    }
+}

@@ -1,0 +1,250 @@
+//! The per-group branch-and-bound: feasibility-prune, bound, sort,
+//! evaluate best-first, stop when the bound floor passes the incumbent.
+//!
+//! # Argmin equivalence contract
+//!
+//! The exhaustive study's `argmin` keeps the **first** row attaining the
+//! group minimum, in grid stream order. The search reproduces that
+//! exactly:
+//!
+//! * candidates carry their stream-order index (`order`);
+//! * the bound is sound (`bound ≤ true value`), so a candidate pruned by
+//!   `bound > best` can never beat — or even tie — the incumbent;
+//! * candidates are visited in ascending-bound order, so once one bound
+//!   exceeds the incumbent every remaining bound does too (the stop is a
+//!   single comparison, not a scan);
+//! * on an exact value tie the lower stream-order candidate wins,
+//!   matching the streaming aggregator's strict-`<` update rule.
+
+use crate::graph::GraphOptions;
+use crate::model::ModelConfig;
+use crate::sweep::{EvalCtx, PointMetrics, Scenario, ScenarioGrid};
+
+use super::bound::{lower_bound, Objective};
+use super::memory;
+
+/// One search candidate: a realizable config bound to a hardware point
+/// and a segment, tagged with its exhaustive-stream order.
+#[derive(Debug, Clone, Copy)]
+pub struct Candidate {
+    pub cfg: ModelConfig,
+    /// Index into the resolved study's hardware points.
+    pub hw: u32,
+    /// Index into the resolved study's segments (for the series label).
+    pub seg: u32,
+    /// Position in the exhaustive stream (the argmin tie-break key).
+    pub order: u32,
+}
+
+impl Candidate {
+    pub fn scenario(&self) -> Scenario {
+        Scenario { cfg: self.cfg, opts: GraphOptions::default(), hw: self.hw }
+    }
+}
+
+/// What one group's search found.
+#[derive(Debug, Clone, Copy)]
+pub struct GroupOutcome {
+    /// Index of the winner within the group's candidate slice.
+    pub winner: usize,
+    /// The winning objective value (bit-identical to the exhaustive min).
+    pub best: f64,
+    /// The winner's evaluated metrics.
+    pub metrics: PointMetrics,
+    /// Candidates actually simulated.
+    pub evaluated: usize,
+    /// Candidates refused by the memory-capacity check.
+    pub infeasible: usize,
+}
+
+/// Search one group. Returns `None` when the memory check rejects every
+/// candidate (only possible with `memory_cap` set).
+pub fn search_group(
+    ctx: &mut EvalCtx,
+    hw_grid: &ScenarioGrid,
+    cands: &[Candidate],
+    obj: Objective,
+    memory_cap: Option<f64>,
+) -> Option<GroupOutcome> {
+    // -- stage 1: memory-capacity feasibility ------------------------------
+    let feasible: Vec<usize> = match memory_cap {
+        None => (0..cands.len()).collect(),
+        Some(frac) => (0..cands.len())
+            .filter(|&i| {
+                let cap =
+                    hw_grid.hardware[cands[i].hw as usize].device.mem_capacity;
+                memory::fits(&cands[i].cfg, cap, frac)
+            })
+            .collect(),
+    };
+    let infeasible = cands.len() - feasible.len();
+    if feasible.is_empty() {
+        return None;
+    }
+
+    // -- stage 2: bound every survivor (no simulation) ---------------------
+    let mut by_bound: Vec<(f64, usize)> = feasible
+        .iter()
+        .map(|&i| (lower_bound(ctx, hw_grid, &cands[i].scenario(), obj), i))
+        .collect();
+    by_bound.sort_by(|a, b| {
+        a.0.partial_cmp(&b.0)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.1.cmp(&b.1))
+    });
+
+    // -- stage 3: best-first evaluation with the bound as the stop rule ----
+    let mut best = f64::INFINITY;
+    let mut winner = usize::MAX;
+    let mut winner_metrics = PointMetrics::default();
+    let mut evaluated = 0usize;
+    for &(lb, i) in &by_bound {
+        if lb > best {
+            break; // sorted ascending: every remaining bound exceeds best
+        }
+        let m = ctx.eval(hw_grid, &cands[i].scenario());
+        evaluated += 1;
+        let t = obj.of(&cands[i].cfg, &m);
+        // strict improvement, or an exact tie resolved to earlier stream
+        // order — the aggregator's first-minimum semantics
+        if t < best
+            || (winner != usize::MAX
+                && t == best
+                && cands[i].order < cands[winner].order)
+        {
+            best = t;
+            winner = i;
+            winner_metrics = m;
+        }
+    }
+    debug_assert!(winner != usize::MAX);
+    Some(GroupOutcome {
+        winner,
+        best,
+        metrics: winner_metrics,
+        evaluated,
+        infeasible,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::catalog;
+    use crate::sweep::{GridBuilder, HwPoint};
+
+    fn group(world: u64) -> (ScenarioGrid, Vec<Candidate>) {
+        let d = catalog::mi210();
+        let grid = ScenarioGrid {
+            hardware: vec![HwPoint::today(&d)],
+            points: Vec::new(),
+        };
+        let degrees: Vec<u64> =
+            (0..=world.trailing_zeros()).map(|e| 1u64 << e).collect();
+        let cands: Vec<Candidate> = GridBuilder::new(&d)
+            .hidden(&[8192])
+            .seq_len(&[2048])
+            .layers(&[world])
+            .tp(&degrees)
+            .pp(&degrees)
+            .microbatches(&[8])
+            .seq_par(&[false, true])
+            .dp(&degrees)
+            .world_size(world)
+            .build()
+            .points
+            .iter()
+            .enumerate()
+            .map(|(i, sc)| Candidate {
+                cfg: sc.cfg,
+                hw: 0,
+                seg: 0,
+                order: i as u32,
+            })
+            .collect();
+        (grid, cands)
+    }
+
+    /// Brute force in stream order — the oracle the search must match.
+    fn brute(
+        ctx: &mut EvalCtx,
+        grid: &ScenarioGrid,
+        cands: &[Candidate],
+        obj: Objective,
+    ) -> (usize, f64) {
+        let mut best = f64::INFINITY;
+        let mut win = usize::MAX;
+        for (i, c) in cands.iter().enumerate() {
+            let t = obj.of(&c.cfg, &ctx.eval(grid, &c.scenario()));
+            if t < best {
+                best = t;
+                win = i;
+            }
+        }
+        (win, best)
+    }
+
+    #[test]
+    fn search_matches_brute_force_and_prunes() {
+        let (grid, cands) = group(16);
+        // 15 power-of-two triples + 10 seq-par variants
+        assert_eq!(cands.len(), 25);
+        for obj in [Objective::TimePerSample, Objective::IterTime] {
+            let mut ctx = EvalCtx::new();
+            let (bwin, bbest) = brute(&mut ctx, &grid, &cands, obj);
+            let out = search_group(&mut ctx, &grid, &cands, obj, None)
+                .expect("no memory cap, group cannot be empty");
+            assert_eq!(out.winner, bwin, "{obj:?}");
+            assert_eq!(out.best.to_bits(), bbest.to_bits(), "{obj:?}");
+            assert!(
+                out.evaluated < cands.len(),
+                "{obj:?}: evaluated {} of {} — the bound pruned nothing",
+                out.evaluated,
+                cands.len()
+            );
+        }
+    }
+
+    #[test]
+    fn exact_ties_resolve_to_stream_order() {
+        let (grid, mut cands) = group(8);
+        // duplicate every candidate (same config twice, later order):
+        // the winner must be the *first* copy.
+        let dup: Vec<Candidate> = cands
+            .iter()
+            .map(|c| Candidate { order: c.order + 1000, ..*c })
+            .collect();
+        cands.extend(dup);
+        let mut ctx = EvalCtx::new();
+        let out = search_group(
+            &mut ctx,
+            &grid,
+            &cands,
+            Objective::TimePerSample,
+            None,
+        )
+        .unwrap();
+        assert!(
+            cands[out.winner].order < 1000,
+            "tie must resolve to the earliest stream order, got {}",
+            cands[out.winner].order
+        );
+    }
+
+    #[test]
+    fn memory_cap_reports_infeasible_candidates() {
+        let (grid, cands) = group(8);
+        let mut ctx = EvalCtx::new();
+        // an absurdly tight cap rejects everything
+        let none =
+            search_group(&mut ctx, &grid, &cands, Objective::IterTime, Some(1e-9));
+        assert!(none.is_none());
+        // a full-HBM cap keeps the sharded strategies and counts the rest
+        // (tp1·pp1·dp8 replicates ~77 GB of state on a 64 GB device)
+        let out =
+            search_group(&mut ctx, &grid, &cands, Objective::IterTime, Some(1.0))
+                .unwrap();
+        assert!(out.infeasible >= 1);
+        assert!(out.infeasible < cands.len());
+    }
+}

@@ -34,8 +34,8 @@ pub mod spec;
 
 pub use expr::Expr;
 pub use run::{
-    build_sinks, run_study, ChartSink, CsvSink, JsonlSink, RowSink,
-    RunOptions, StudyOutcome, TableSink, Value, VecSink,
+    build_sinks, run_study, ChartSink, CsvSink, FieldKind, JsonlSink,
+    RowSink, RunOptions, SpecSink, StudyOutcome, TableSink, Value, VecSink,
 };
 pub use spec::{
     AggOp, AggSpec, AxesSpec, HwAxisSpec, MetricSpec, ResolvedStudy,

@@ -80,7 +80,7 @@ pub enum FieldKind {
 
 /// The per-source base row schemas. Metric columns are appended after
 /// these at bind time.
-fn base_schema(source: Source) -> Vec<(&'static str, FieldKind)> {
+pub(crate) fn base_schema(source: Source) -> Vec<(&'static str, FieldKind)> {
     use FieldKind::*;
     match source {
         Source::Grid => vec![
@@ -459,6 +459,229 @@ impl RowSink for ChartSink {
     }
 }
 
+/// The model/strategy axes a seeded series may pin, in `AxesSpec` order.
+const SERIES_AXES: [&str; 10] = [
+    "hidden", "seq_len", "batch", "layers", "ffn_mult", "tp", "pp",
+    "microbatches", "seq_par", "dp",
+];
+
+/// Collecting sink that re-emits grouped argmin/argmax rows as a **new**
+/// serializable [`StudySpec`]: one series per winning row, pinning every
+/// axis named by a group key or an `*_at_min_*`/`*_at_max_*` column.
+/// Distinct `flop_vs_bw` / `topology` key values become the seeded spec's
+/// hardware axes. A coarse search over wide axes thereby emits the exact
+/// spec of the fine follow-up study — the ROADMAP's "argmin rows as a new
+/// spec" seam.
+///
+/// Axes absent from the emitted columns fall back to the seeded spec's
+/// defaults: include every non-default model axis (e.g. `layers`) in
+/// `group_by` or the argmin `args` so the winners re-resolve exactly.
+///
+/// Hardware fidelity caveat: rows carry only the flop-vs-bw *ratio*, so
+/// evolutions are reconstructed as `{flop: ratio, bw: 1}` and `nodeN`
+/// topologies with the default tier knobs. That is exact for ratio-style
+/// specs (every shipped example); a source study using explicit
+/// `{"flop", "bw"}` evolutions, custom tier knobs, or interference
+/// factors should re-declare its hardware axes on the seeded spec.
+pub struct SpecSink {
+    path: String,
+    name: String,
+    device: Option<String>,
+    columns: Vec<String>,
+    rows: Vec<Vec<Value>>,
+}
+
+impl SpecSink {
+    /// `source_name`/`device` come from the study being run; `name`
+    /// overrides the emitted spec's name (default `<source>_seeded`).
+    pub fn new(path: &str, source_name: &str, name: Option<&str>, device: Option<&str>) -> SpecSink {
+        SpecSink {
+            path: path.to_string(),
+            name: name
+                .map(|n| n.to_string())
+                .unwrap_or_else(|| format!("{source_name}_seeded")),
+            device: device.map(|d| d.to_string()),
+            columns: Vec::new(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Build the seeded spec from the collected rows (also used by
+    /// `commscale optimize --emit-spec`).
+    pub fn build_spec(&self) -> Result<StudySpec> {
+        let points_idx =
+            self.columns.iter().position(|c| c == "points").ok_or_else(|| {
+                Error::Study(
+                    "spec sink needs grouped rows (add group_by + an \
+                     argmin/argmax aggregation)"
+                        .into(),
+                )
+            })?;
+        // a column pins an axis if it IS the axis (group key) or reports
+        // it at the extremum (`tp_at_min_time_per_sample`)
+        let axis_of = |col: &str| -> Option<&'static str> {
+            SERIES_AXES.iter().copied().find(|a| {
+                col == *a
+                    || col.strip_prefix(*a).is_some_and(|rest| {
+                        rest.starts_with("_at_min_")
+                            || rest.starts_with("_at_max_")
+                    })
+            })
+        };
+        if !self.columns.iter().any(|c| axis_of(c).is_some()) {
+            return Err(Error::Study(format!(
+                "spec sink found no axis-bearing columns among {:?}; group \
+                 by a model axis or report one via argmin args",
+                self.columns
+            )));
+        }
+
+        let mut spec = StudySpec {
+            name: self.name.clone(),
+            description: "seeded from argmin winners (spec sink)".into(),
+            device: self.device.clone(),
+            ..StudySpec::default()
+        };
+        // argmin/argmax arg columns (as opposed to group-key axis columns)
+        let arg_idx: Vec<usize> = self
+            .columns
+            .iter()
+            .enumerate()
+            .filter(|(_, col)| {
+                SERIES_AXES.iter().any(|a| {
+                    col.strip_prefix(*a).is_some_and(|rest| {
+                        rest.starts_with("_at_min_")
+                            || rest.starts_with("_at_max_")
+                    })
+                })
+            })
+            .map(|(i, _)| i)
+            .collect();
+
+        let mut evolutions: Vec<crate::hw::Evolution> = Vec::new();
+        let mut topologies: Vec<crate::parallelism::TopologyKind> = Vec::new();
+        for row in &self.rows {
+            // a group whose every arg is NaN had no feasible winner (a
+            // memory-capped search) — seeding it would pin the default
+            // serial strategy the search just refused; skip the row
+            if !arg_idx.is_empty()
+                && arg_idx.iter().all(|&i| !row[i].as_f64().is_finite())
+            {
+                continue;
+            }
+            let mut series = super::spec::SeriesSpec::default();
+            let mut label_parts: Vec<String> = Vec::new();
+            for (ci, col) in self.columns.iter().enumerate() {
+                let v = &row[ci];
+                if ci < points_idx {
+                    label_parts.push(format!("{col}={}", v.render()));
+                }
+                if col == "flop_vs_bw" {
+                    let r = v.as_f64();
+                    if r.is_finite()
+                        && !evolutions
+                            .iter()
+                            .any(|e| e.flop_scale == r && e.bw_scale == 1.0)
+                    {
+                        evolutions.push(crate::hw::Evolution {
+                            flop_scale: r,
+                            bw_scale: 1.0,
+                        });
+                    }
+                    continue;
+                }
+                if col == "topology" {
+                    if let Value::Str(label) = v {
+                        let tk = if label == "flat" {
+                            Some(crate::parallelism::TopologyKind::SingleTier)
+                        } else {
+                            label.strip_prefix("node").and_then(|n| {
+                                n.parse::<u64>().ok().map(
+                                    crate::parallelism::TopologyKind::tiered_8x,
+                                )
+                            })
+                        };
+                        if let Some(tk) = tk {
+                            if !topologies.contains(&tk) {
+                                topologies.push(tk);
+                            }
+                        }
+                    }
+                    continue;
+                }
+                let Some(axis) = axis_of(col) else { continue };
+                let n = v.as_f64();
+                if !n.is_finite() || n < 0.0 {
+                    continue; // an all-infeasible group emits NaN args
+                }
+                if axis == "seq_par" {
+                    series.seq_par = Some(vec![n != 0.0]);
+                    continue;
+                }
+                let val = vec![n as u64];
+                match axis {
+                    "hidden" => series.hidden = Some(val),
+                    "seq_len" => series.seq_len = Some(val),
+                    "batch" => series.batch = Some(val),
+                    "layers" => series.layers = Some(val),
+                    "ffn_mult" => series.ffn_mult = Some(val),
+                    "tp" => series.tp = Some(val),
+                    "pp" => series.pp = Some(val),
+                    "microbatches" => series.microbatches = Some(val),
+                    "dp" => series.dp = Some(val),
+                    _ => unreachable!("SERIES_AXES is exhaustive"),
+                }
+            }
+            series.label = Some(label_parts.join(" "));
+            spec.axes.series.push(series);
+        }
+        if !evolutions.is_empty() {
+            spec.axes.evolutions = evolutions;
+        }
+        if !topologies.is_empty() {
+            spec.axes.topologies = topologies;
+        }
+        if spec.axes.series.is_empty() {
+            return Err(Error::Study(
+                "spec sink has no seedable winner rows (none received, or \
+                 every group was memory-infeasible)"
+                    .into(),
+            ));
+        }
+        Ok(spec)
+    }
+}
+
+impl RowSink for SpecSink {
+    fn begin(&mut self, columns: &[String]) -> Result<()> {
+        self.columns = columns.to_vec();
+        Ok(())
+    }
+
+    fn row(&mut self, row: &[Value]) -> Result<()> {
+        if self.rows.len() >= 10_000 {
+            return Err(Error::Study(
+                "spec sink: more than 10000 rows — a seeded spec wants \
+                 grouped winners, not raw points (add group_by)"
+                    .into(),
+            ));
+        }
+        self.rows.push(row.to_vec());
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<Option<String>> {
+        let spec = self.build_spec()?;
+        let json = spec.to_json().to_string_pretty(2);
+        std::fs::write(&self.path, json + "\n")?;
+        Ok(Some(format!(
+            "wrote seeded study spec ({} series) to {}\n",
+            spec.axes.series.len(),
+            self.path
+        )))
+    }
+}
+
 /// Collecting sink for tests and in-process consumers.
 #[derive(Debug, Default)]
 pub struct VecSink {
@@ -524,6 +747,12 @@ pub fn build_sinks(
                     *height,
                 )))
             }
+            SinkSpec::Spec { path, name } => sinks.push(Box::new(SpecSink::new(
+                path,
+                &spec.name,
+                name.as_deref(),
+                spec.device.as_deref(),
+            ))),
         }
     }
     if let Some(path) = extra_csv {
@@ -587,11 +816,7 @@ impl Aggregator {
     fn push(&mut self, row: &[Value]) {
         let keys: Vec<Value> =
             self.key_idx.iter().map(|&i| row[i].clone()).collect();
-        let key_text = keys
-            .iter()
-            .map(|v| v.render())
-            .collect::<Vec<_>>()
-            .join("\u{1}");
+        let key_text = group_key_text(&keys);
         let gi = match self.index.get(&key_text) {
             Some(&i) => i,
             None => {
@@ -730,15 +955,7 @@ impl Pipeline {
         for v in &self.row {
             self.nums.push(v.as_f64());
         }
-        for (_, expr, base) in &self.metrics {
-            let v = match (expr, base) {
-                (_, Some(i)) => self.nums[*i],
-                (Some(e), None) => e.eval(&self.nums),
-                (None, None) => unreachable!("metric binds expr or field"),
-            };
-            self.row.push(Value::Num(v));
-            self.nums.push(v);
-        }
+        append_derived_metrics(&self.metrics, &mut self.row, &mut self.nums);
         let keep = self.filters.iter().all(|f| f.eval(&self.nums) != 0.0);
         if keep {
             self.outcome.rows_matched += 1;
@@ -757,7 +974,11 @@ impl Pipeline {
     }
 }
 
-fn field_index(schema: &[String], name: &str, what: &str) -> Result<usize> {
+pub(crate) fn field_index(
+    schema: &[String],
+    name: &str,
+    what: &str,
+) -> Result<usize> {
     schema.iter().position(|s| s == name).ok_or_else(|| {
         Error::Study(format!(
             "{what}: unknown field {name:?}; available fields: {}",
@@ -804,16 +1025,24 @@ fn check_numeric(
     Ok(())
 }
 
-/// Run a resolved study through its sinks. Returns the outcome counts
-/// plus every sink's rendered output (in sink order).
-pub fn run_study(
-    resolved: &ResolvedStudy,
-    opts: RunOptions,
-    sinks: &mut [&mut dyn RowSink],
-) -> Result<StudyOutcome> {
-    let spec = &resolved.spec;
+/// A spec's row schema with metric columns bound: the base fields plus
+/// one appended column per metric (field references resolved, derived
+/// expressions parsed against the base schema only — so a metric
+/// referencing another metric, including a cycle, fails with the
+/// offending field named).
+pub(crate) struct MetricBinding {
+    pub names: Vec<String>,
+    pub kinds: Vec<FieldKind>,
+    pub base_len: usize,
+    /// (name, derived expr, base-field index) — exactly one of the last
+    /// two is set.
+    pub metrics: Vec<(String, Option<Expr>, Option<usize>)>,
+}
 
-    // -- bind schema, metrics, filters ------------------------------------
+/// Bind a spec's metric columns onto its source's base schema. Shared by
+/// the streaming runner and the strategy optimizer so both see identical
+/// columns and identical error messages.
+pub(crate) fn bind_metrics(spec: &StudySpec) -> Result<MetricBinding> {
     let base = base_schema(spec.source);
     let mut schema_names: Vec<String> =
         base.iter().map(|(n, _)| n.to_string()).collect();
@@ -862,6 +1091,76 @@ pub fn run_study(
         schema_names.push(name.clone());
         schema_kinds.push(FieldKind::Num);
     }
+    Ok(MetricBinding {
+        names: schema_names,
+        kinds: schema_kinds,
+        base_len,
+        metrics,
+    })
+}
+
+/// Canonical text form of a group-key tuple — the one definition the
+/// streaming aggregator and the strategy optimizer both hash, so their
+/// group partitions can never drift apart.
+pub(crate) fn group_key_text(keys: &[Value]) -> String {
+    keys.iter().map(|v| v.render()).collect::<Vec<_>>().join("\u{1}")
+}
+
+/// Append the derived-metric columns onto a base-filled row, extending
+/// the numeric view in lockstep — the one definition the streaming
+/// pipeline and the optimizer's winner-row reconstruction both use, so
+/// derived values stay bit-identical between the two paths.
+pub(crate) fn append_derived_metrics(
+    metrics: &[(String, Option<Expr>, Option<usize>)],
+    row: &mut Vec<Value>,
+    nums: &mut Vec<f64>,
+) {
+    for (_, expr, base) in metrics {
+        let v = match (expr, base) {
+            (_, Some(i)) => nums[*i],
+            (Some(e), None) => e.eval(nums),
+            (None, None) => unreachable!("metric binds expr or field"),
+        };
+        row.push(Value::Num(v));
+        nums.push(v);
+    }
+}
+
+/// Index of the first simulated-metric field (`makespan`) in the grid
+/// base schema — everything before it is scenario identity, known
+/// without evaluating the point.
+pub(crate) fn grid_identity_len() -> usize {
+    base_schema(Source::Grid)
+        .iter()
+        .position(|(n, _)| *n == "makespan")
+        .expect("grid schema carries makespan")
+}
+
+/// Run a resolved study through its sinks. Returns the outcome counts
+/// plus every sink's rendered output (in sink order).
+pub fn run_study(
+    resolved: &ResolvedStudy,
+    opts: RunOptions,
+    sinks: &mut [&mut dyn RowSink],
+) -> Result<StudyOutcome> {
+    let spec = &resolved.spec;
+
+    if spec.source == Source::Grid && resolved.total_points() == 0 {
+        return Err(Error::Study(format!(
+            "study {:?} resolves to an empty grid: {}",
+            spec.name,
+            resolved.empty_reason()
+        )));
+    }
+
+    // -- bind schema, metrics, filters ------------------------------------
+    let binding = bind_metrics(spec)?;
+    let MetricBinding {
+        names: schema_names,
+        kinds: schema_kinds,
+        base_len,
+        metrics,
+    } = binding;
 
     let mut filters = Vec::new();
     for f in &spec.filters {
@@ -1050,12 +1349,14 @@ fn eval_chunk(
     Ok(())
 }
 
-fn fill_grid_row(
+/// Fill the scenario-identity prefix of a grid row (everything knowable
+/// without simulating the point — the optimizer groups and pre-filters on
+/// these fields alone).
+pub(crate) fn fill_grid_identity(
     row: &mut Vec<Value>,
     hw: &ResolvedHw,
     series: &str,
     cfg: &ModelConfig,
-    m: &PointMetrics,
 ) {
     let samples = (cfg.batch * cfg.microbatches() * cfg.dp()) as f64;
     row.clear();
@@ -1081,6 +1382,15 @@ fn fill_grid_row(
     row.push(Value::Str(
         crate::analysis::strategies::archetype(&cfg.par).to_string(),
     ));
+}
+
+/// Append the simulated-metric fields onto an identity-filled grid row.
+pub(crate) fn fill_grid_metrics(
+    row: &mut Vec<Value>,
+    cfg: &ModelConfig,
+    m: &PointMetrics,
+) {
+    let samples = (cfg.batch * cfg.microbatches() * cfg.dp()) as f64;
     row.push(Value::Num(m.makespan));
     row.push(Value::Num(m.makespan)); // iter_time alias
     row.push(Value::Num(m.compute_time));
@@ -1096,6 +1406,17 @@ fn fill_grid_row(
     row.push(Value::Num(m.comm_fraction()));
     row.push(Value::Num(m.bubble_fraction()));
     row.push(Value::Num(m.makespan / samples));
+}
+
+fn fill_grid_row(
+    row: &mut Vec<Value>,
+    hw: &ResolvedHw,
+    series: &str,
+    cfg: &ModelConfig,
+    m: &PointMetrics,
+) {
+    fill_grid_identity(row, hw, series, cfg);
+    fill_grid_metrics(row, cfg, m);
 }
 
 /// The zoo source's rows: every [`crate::model::zoo`] entry with the

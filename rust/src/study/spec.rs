@@ -214,7 +214,8 @@ pub struct AggSpec {
 }
 
 /// Where result rows go. CSV/JSONL stream row-by-row; table and chart
-/// sinks collect (bounded for tables) and render at the end.
+/// sinks collect (bounded for tables) and render at the end; the spec
+/// sink turns grouped argmin rows into a new serializable study.
 #[derive(Debug, Clone, PartialEq)]
 pub enum SinkSpec {
     /// `path == "-"` streams to stdout.
@@ -230,6 +231,12 @@ pub enum SinkSpec {
         width: usize,
         height: usize,
     },
+    /// Re-emit grouped argmin/argmax rows as a **new** `StudySpec` JSON
+    /// file: one series per winning row, pinning the model/strategy axes
+    /// the `*_at_min_*`/`*_at_max_*` columns (and group keys) name. A
+    /// coarse search's winners become the axes of a fine study — the
+    /// optimizer's seeding surface.
+    Spec { path: String, name: Option<String> },
 }
 
 /// The serializable study description — the one scenario-query surface
@@ -1027,10 +1034,26 @@ impl StudySpec {
                                 .unwrap_or(16) as usize,
                         }
                     }
+                    "spec" => {
+                        check_keys(iobj, "sinks.spec", &["kind", "path", "name"])?;
+                        SinkSpec::Spec {
+                            path: item.str_field("path").map_err(|_| {
+                                Error::Study(
+                                    "sinks.spec: needs a \"path\" for the \
+                                     emitted study JSON"
+                                        .into(),
+                                )
+                            })?.to_string(),
+                            name: item
+                                .get("name")
+                                .and_then(Json::as_str)
+                                .map(|s| s.to_string()),
+                        }
+                    }
                     other => {
                         return Err(Error::Study(format!(
                             "sinks: unknown kind {other:?} (expected csv, \
-                             jsonl, table, or chart)"
+                             jsonl, table, chart, or spec)"
                         )))
                     }
                 };
@@ -1147,6 +1170,16 @@ impl StudySpec {
                         p.push(("log_x", Json::Bool(*log_x)));
                         p.push(("width", Json::num(*width as f64)));
                         p.push(("height", Json::num(*height as f64)));
+                        Json::obj(p)
+                    }
+                    SinkSpec::Spec { path, name } => {
+                        let mut p = vec![
+                            ("kind", Json::str("spec")),
+                            ("path", Json::str(path)),
+                        ];
+                        if let Some(n) = name {
+                            p.push(("name", Json::str(n)));
+                        }
                         Json::obj(p)
                     }
                 })),
@@ -1311,6 +1344,27 @@ impl ResolvedStudy {
         }
     }
 
+    /// Why a grid study realizes zero points — the per-segment
+    /// [`GridBuilder::empty_reason`] diagnoses, joined. Meaningful only
+    /// when [`ResolvedStudy::total_points`] is zero; the runner and the
+    /// optimizer surface this instead of a silent zero-row study.
+    pub fn empty_reason(&self) -> String {
+        let mut reasons: Vec<String> = Vec::new();
+        for seg in &self.segments {
+            if let Some(r) = seg.builder.empty_reason() {
+                match &seg.label {
+                    Some(l) => reasons.push(format!("series {l:?}: {r}")),
+                    None => reasons.push(r),
+                }
+            }
+        }
+        if reasons.is_empty() {
+            "no hardware or model points resolved".into()
+        } else {
+            reasons.join("; ")
+        }
+    }
+
     /// Materialize the full grid (hardware-major, then segments, then the
     /// builder's model-axis nesting) — for figure-sized studies, tests,
     /// and the perf baseline; the streaming runner never calls this.
@@ -1376,6 +1430,9 @@ impl ResolvedStudy {
                 counts.iter().sum::<usize>(),
                 self.total_points()
             );
+            if self.total_points() == 0 {
+                let _ = writeln!(out, "  EMPTY GRID: {}", self.empty_reason());
+            }
         } else {
             let _ = writeln!(out, "  rows: {}", self.total_points());
         }

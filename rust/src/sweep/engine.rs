@@ -2,7 +2,7 @@
 //! per-worker reusable state, in parallel, bit-identically to the naive
 //! serial path.
 //!
-//! Per-worker state ([`WorkerCtx`]):
+//! Per-worker state ([`EvalCtx`]):
 //!
 //! * a [`SimArena`] so `simulate` reuses its end-times buffer — zero heap
 //!   allocation per point once warmed;
@@ -165,8 +165,16 @@ impl CostProvider for MemoCost<'_> {
 
 type CostKey = (u32, ParallelismSpec, Precision);
 
-/// Per-worker reusable state (see module docs).
-struct WorkerCtx {
+/// Per-worker reusable evaluation state (see module docs): the arena, the
+/// graph-template cache, the per-(hardware, strategy, precision) cost
+/// cache, and the memoized operator-cost table.
+///
+/// Public because the strategy optimizer drives single points through the
+/// same caches: [`EvalCtx::eval`] is the branch-and-bound's "evaluate"
+/// step, and [`EvalCtx::with_graph_and_cost`] hands its lower-bound
+/// former a rewritten template plus the memoized cost provider without
+/// running the simulator.
+pub struct EvalCtx {
     arena: SimArena,
     templates: HashMap<GraphShapeKey, OpGraph>,
     costs: HashMap<CostKey, (u32, AnalyticCost)>,
@@ -174,9 +182,15 @@ struct WorkerCtx {
     memo: RefCell<HashMap<(u32, OpKind), f64>>,
 }
 
-impl WorkerCtx {
-    fn new() -> WorkerCtx {
-        WorkerCtx {
+impl Default for EvalCtx {
+    fn default() -> Self {
+        EvalCtx::new()
+    }
+}
+
+impl EvalCtx {
+    pub fn new() -> EvalCtx {
+        EvalCtx {
             arena: SimArena::new(),
             templates: HashMap::new(),
             costs: HashMap::new(),
@@ -185,24 +199,12 @@ impl WorkerCtx {
         }
     }
 
-    fn eval(&mut self, grid: &ScenarioGrid, sc: &Scenario) -> PointMetrics {
-        let WorkerCtx { arena, templates, costs, next_cost_id, memo } = self;
-
-        let key: CostKey = (sc.hw, sc.cfg.par, sc.cfg.precision);
-        let entry = costs.entry(key).or_insert_with(|| {
-            let hw = &grid.hardware[sc.hw as usize];
-            let id = *next_cost_id;
-            *next_cost_id += 1;
-            let cost = AnalyticCost::from_spec(
-                hw.device.clone(),
-                sc.cfg.precision,
-                sc.cfg.par,
-            )
-            .with_topology(hw.topology)
-            .with_overlap(hw.overlap);
-            (id, cost)
-        });
-        let (cost_id, cost) = (entry.0, &entry.1);
+    /// Evaluate one scenario point through the shared caches —
+    /// bit-identical to [`run_serial_reference`] on the same point.
+    pub fn eval(&mut self, grid: &ScenarioGrid, sc: &Scenario) -> PointMetrics {
+        let EvalCtx { arena, templates, costs, next_cost_id, memo } = self;
+        let (cost_id, cost) =
+            cost_entry(costs, next_cost_id, grid, sc);
 
         let shape = GraphShapeKey::of(&sc.cfg, sc.opts);
         let g = templates
@@ -215,6 +217,58 @@ impl WorkerCtx {
         apply_pipeline(&mut r, sc.cfg.pp(), sc.cfg.microbatches());
         PointMetrics::from_report(&r)
     }
+
+    /// Hand `f` the rewritten template graph and the memoized cost
+    /// provider for a scenario, without simulating. The optimizer's
+    /// lower-bound former uses this on a one-layer/one-microbatch
+    /// surrogate config: ~30 memoized cost lookups instead of a full
+    /// graph evaluation.
+    pub fn with_graph_and_cost<R>(
+        &mut self,
+        grid: &ScenarioGrid,
+        sc: &Scenario,
+        f: impl FnOnce(&OpGraph, &dyn CostProvider) -> R,
+    ) -> R {
+        let EvalCtx { templates, costs, next_cost_id, memo, .. } = self;
+        let (cost_id, cost) =
+            cost_entry(costs, next_cost_id, grid, sc);
+
+        let shape = GraphShapeKey::of(&sc.cfg, sc.opts);
+        let g = templates
+            .entry(shape)
+            .or_insert_with(|| build_layer_graph(&sc.cfg, sc.opts));
+        rewrite_layer_graph(&sc.cfg, sc.opts, g);
+
+        let memo = MemoCost { inner: cost, id: cost_id, memo: &*memo };
+        f(g, &memo)
+    }
+}
+
+/// Resolve (or create) the memoized cost provider for a scenario's
+/// (hardware, strategy, precision) combination — one map probe on the
+/// per-point hot path. Free function over the split-out fields so the
+/// caller keeps its other field borrows.
+fn cost_entry<'c>(
+    costs: &'c mut HashMap<CostKey, (u32, AnalyticCost)>,
+    next_cost_id: &mut u32,
+    grid: &ScenarioGrid,
+    sc: &Scenario,
+) -> (u32, &'c AnalyticCost) {
+    let key: CostKey = (sc.hw, sc.cfg.par, sc.cfg.precision);
+    let entry = costs.entry(key).or_insert_with(|| {
+        let hw = &grid.hardware[sc.hw as usize];
+        let id = *next_cost_id;
+        *next_cost_id += 1;
+        let cost = AnalyticCost::from_spec(
+            hw.device.clone(),
+            sc.cfg.precision,
+            sc.cfg.par,
+        )
+        .with_topology(hw.topology)
+        .with_overlap(hw.overlap);
+        (id, cost)
+    });
+    (entry.0, &entry.1)
 }
 
 /// Worker threads to use when the caller asks for "auto".
@@ -243,7 +297,7 @@ pub fn run_with(grid: &ScenarioGrid, threads: usize) -> Vec<PointMetrics> {
     let threads = requested.max(1).min(n);
 
     if threads == 1 {
-        let mut ctx = WorkerCtx::new();
+        let mut ctx = EvalCtx::new();
         for (slot, sc) in out.iter_mut().zip(&grid.points) {
             *slot = ctx.eval(grid, sc);
         }
@@ -261,7 +315,7 @@ pub fn run_with(grid: &ScenarioGrid, threads: usize) -> Vec<PointMetrics> {
         std::thread::scope(|s| {
             for _ in 0..threads {
                 s.spawn(|| {
-                    let mut ctx = WorkerCtx::new();
+                    let mut ctx = EvalCtx::new();
                     loop {
                         let item = queue.lock().unwrap().pop();
                         let Some((ci, slice)) = item else { break };

@@ -349,6 +349,118 @@ impl GridBuilder {
         n
     }
 
+    /// Why the grid realizes **zero** points, if it does.
+    ///
+    /// Deterministic divisibility skipping is the right behavior for one
+    /// misfit point inside a large grid, but a grid where *every* point is
+    /// skipped (a prime `world_size` over power-of-two axes, `world`
+    /// smaller than the smallest `tp·pp·dp` product, layers no `pp`
+    /// divides) would otherwise surface as a silent zero-row sweep. This
+    /// diagnoses which rule emptied the grid so callers (`commscale
+    /// sweep`, the study runner, the optimizer) can fail with an
+    /// actionable message instead. Returns `None` when at least one point
+    /// survives.
+    pub fn empty_reason(&self) -> Option<String> {
+        if self.realized_model_count() > 0 {
+            return None;
+        }
+        if self.point_count() == 0 {
+            return Some(
+                "an axis is empty — every axis needs at least one value"
+                    .into(),
+            );
+        }
+        // Peel the skip rules one at a time, in the order `realize`
+        // applies them, and report the first one that kills every point.
+        if let Some(w) = self.world {
+            let mut products: Vec<u64> = Vec::new();
+            let mut any = false;
+            for &tp in &self.tp {
+                for &pp in &self.pp {
+                    for &dp in &self.dp {
+                        let p = tp.saturating_mul(pp).saturating_mul(dp);
+                        products.push(p);
+                        any |= p == w;
+                    }
+                }
+            }
+            if !any {
+                let min = products.iter().copied().min().unwrap_or(0);
+                let max = products.iter().copied().max().unwrap_or(0);
+                let hint = if w < min {
+                    format!(
+                        "the smallest available product is {min} > {w} — \
+                         add smaller degrees (e.g. tp/pp/dp = 1)"
+                    )
+                } else if w > max {
+                    format!(
+                        "the largest available product is {max} < {w} — \
+                         add larger degrees"
+                    )
+                } else if w > 1 && w < 1_000_000 && (2..w).all(|d| w % d != 0) {
+                    format!(
+                        "{w} is prime, so the only factorizations are \
+                         degenerate (one degree = {w}, the rest 1) — add \
+                         {w} itself to an axis, or pick a composite world"
+                    )
+                } else {
+                    "no combination of the listed degrees multiplies to it"
+                        .into()
+                };
+                return Some(format!(
+                    "world_size {w} admits no factorization from tp {:?} x \
+                     pp {:?} x dp {:?}: {hint}",
+                    self.tp, self.pp, self.dp
+                ));
+            }
+        }
+        // Something survives the world filter; check layers % pp next
+        // (among world-surviving pp values only, so the message names the
+        // rule that actually binds).
+        let pp_ok = |pp: u64| -> bool {
+            match self.world {
+                None => true,
+                Some(w) => self.tp.iter().any(|&tp| {
+                    self.dp.iter().any(|&dp| {
+                        tp.saturating_mul(pp).saturating_mul(dp) == w
+                    })
+                }),
+            }
+        };
+        let divisible = self.layers.iter().any(|&l| {
+            self.pp.iter().any(|&pp| pp_ok(pp) && l % pp == 0)
+        });
+        if !divisible {
+            return Some(format!(
+                "no pp in {:?} divides any layer count in {:?} (pipeline \
+                 stages must hold equal layer counts) — adjust layers or pp",
+                self.pp, self.layers
+            ));
+        }
+        // Last rule standing: sequence parallelism.
+        if self.seq_par.iter().all(|&sp| sp) {
+            if self.tp.iter().all(|&tp| tp == 1) {
+                return Some(
+                    "seq_par = [true] with tp = [1]: sequence parallelism \
+                     replaces TP collectives, so it needs tp > 1 — add \
+                     false to seq_par or raise tp"
+                        .into(),
+                );
+            }
+            return Some(format!(
+                "seq_par = [true] but no tp in {:?} divides any SL*B token \
+                 count from seq_len {:?} x batch {:?} — add false to \
+                 seq_par or fix the token shard",
+                self.tp, self.seq_len, self.batch
+            ));
+        }
+        Some(
+            "every axis combination is excluded by the divisibility/world \
+             rules (no single rule binds alone — loosen the axes)"
+                .into(),
+        )
+    }
+
     /// Flatten into a [`ScenarioGrid`]. Head counts follow the Table 3
     /// convention (`config::heads_for`, rounded up to a multiple of TP so
     /// Megatron head-slicing stays exact). Strategy-divisibility misfits

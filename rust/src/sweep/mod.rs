@@ -51,6 +51,6 @@ pub mod grid;
 
 pub use engine::{
     default_threads, run, run_serial_reference, run_streamed, run_with,
-    PointEvaluator, PointMetrics,
+    EvalCtx, PointEvaluator, PointMetrics,
 };
 pub use grid::{GridBuilder, HeadsPolicy, HwPoint, Scenario, ScenarioGrid};

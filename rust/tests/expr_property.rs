@@ -1,0 +1,303 @@
+//! Property tests for the study expression language: generated
+//! well-formed expressions (seeded LCG — fully deterministic, no
+//! ambient randomness) must evaluate identically to a naive reference
+//! interpreter after rendering to text and re-parsing, under both a
+//! fully-parenthesized and a precedence-aware minimal renderer. Plus
+//! pinned precedence/associativity edge cases (`a-b-c`, unary minus,
+//! nested parens).
+
+use commscale::study::Expr;
+
+// ---------------------------------------------------------------------------
+// deterministic generator
+// ---------------------------------------------------------------------------
+
+/// Minimal LCG (Knuth MMIX constants) — keeps the suite free of any
+/// platform randomness.
+struct Lcg(u64);
+
+impl Lcg {
+    fn next(&mut self) -> u64 {
+        self.0 = self
+            .0
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        self.0 >> 33
+    }
+
+    fn below(&mut self, n: u64) -> u64 {
+        self.next() % n
+    }
+}
+
+const FIELDS: [&str; 3] = ["alpha", "beta", "gamma"];
+const BINOPS: [&str; 12] = [
+    "+", "-", "*", "/", "<", "<=", ">", ">=", "==", "!=", "&&", "||",
+];
+
+/// The reference AST — independent of `Expr`, so the test exercises the
+/// real tokenizer/parser rather than round-tripping its own structures.
+enum Ast {
+    Num(f64),
+    Field(usize),
+    Neg(Box<Ast>),
+    Not(Box<Ast>),
+    Bin(&'static str, Box<Ast>, Box<Ast>),
+    Call(&'static str, Vec<Ast>),
+}
+
+fn gen(rng: &mut Lcg, depth: u32) -> Ast {
+    if depth == 0 || rng.below(4) == 0 {
+        return if rng.below(2) == 0 {
+            // eighth-steps keep decimal renderings exact
+            Ast::Num(rng.below(1600) as f64 / 8.0)
+        } else {
+            Ast::Field(rng.below(FIELDS.len() as u64) as usize)
+        };
+    }
+    match rng.below(16) {
+        0..=11 => {
+            let op = BINOPS[rng.below(BINOPS.len() as u64) as usize];
+            Ast::Bin(
+                op,
+                Box::new(gen(rng, depth - 1)),
+                Box::new(gen(rng, depth - 1)),
+            )
+        }
+        12 => Ast::Neg(Box::new(gen(rng, depth - 1))),
+        13 => Ast::Not(Box::new(gen(rng, depth - 1))),
+        14 => Ast::Call(
+            "abs",
+            vec![gen(rng, depth - 1)],
+        ),
+        _ => {
+            let f = if rng.below(2) == 0 { "min" } else { "max" };
+            Ast::Call(f, vec![gen(rng, depth - 1), gen(rng, depth - 1)])
+        }
+    }
+}
+
+/// The naive reference interpreter — mirrors the documented semantics
+/// (comparisons/logic yield 1.0/0.0, `&&`/`||` short-circuit on != 0).
+fn reference_eval(ast: &Ast, row: &[f64]) -> f64 {
+    let t = |c: bool| if c { 1.0 } else { 0.0 };
+    match ast {
+        Ast::Num(n) => *n,
+        Ast::Field(i) => row[*i],
+        Ast::Neg(a) => -reference_eval(a, row),
+        Ast::Not(a) => t(reference_eval(a, row) == 0.0),
+        Ast::Bin("&&", a, b) => t(reference_eval(a, row) != 0.0
+            && reference_eval(b, row) != 0.0),
+        Ast::Bin("||", a, b) => t(reference_eval(a, row) != 0.0
+            || reference_eval(b, row) != 0.0),
+        Ast::Bin(op, a, b) => {
+            let x = reference_eval(a, row);
+            let y = reference_eval(b, row);
+            match *op {
+                "+" => x + y,
+                "-" => x - y,
+                "*" => x * y,
+                "/" => x / y,
+                "<" => t(x < y),
+                "<=" => t(x <= y),
+                ">" => t(x > y),
+                ">=" => t(x >= y),
+                "==" => t(x == y),
+                "!=" => t(x != y),
+                other => panic!("unknown op {other}"),
+            }
+        }
+        Ast::Call("abs", args) => reference_eval(&args[0], row).abs(),
+        Ast::Call("min", args) => {
+            reference_eval(&args[0], row).min(reference_eval(&args[1], row))
+        }
+        Ast::Call("max", args) => {
+            reference_eval(&args[0], row).max(reference_eval(&args[1], row))
+        }
+        Ast::Call(other, _) => panic!("unknown fn {other}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// renderers
+// ---------------------------------------------------------------------------
+
+/// Fully parenthesized: precedence-proof by construction.
+fn render_paren(ast: &Ast) -> String {
+    match ast {
+        Ast::Num(n) => format!("{n}"),
+        Ast::Field(i) => FIELDS[*i].to_string(),
+        Ast::Neg(a) => format!("(-{})", render_paren(a)),
+        Ast::Not(a) => format!("(!{})", render_paren(a)),
+        Ast::Bin(op, a, b) => {
+            format!("({} {op} {})", render_paren(a), render_paren(b))
+        }
+        Ast::Call(f, args) => {
+            let parts: Vec<String> = args.iter().map(render_paren).collect();
+            format!("{f}({})", parts.join(", "))
+        }
+    }
+}
+
+/// Grammar precedence levels: `||` 1, `&&` 2, comparisons 3, add 4,
+/// mul 5, unary 6, primary 7.
+fn prec(ast: &Ast) -> u8 {
+    match ast {
+        Ast::Num(_) | Ast::Field(_) | Ast::Call(..) => 7,
+        Ast::Neg(_) | Ast::Not(_) => 6,
+        Ast::Bin(op, ..) => match *op {
+            "||" => 1,
+            "&&" => 2,
+            "<" | "<=" | ">" | ">=" | "==" | "!=" => 3,
+            "+" | "-" => 4,
+            _ => 5,
+        },
+    }
+}
+
+/// Minimal parens: wraps a subexpression only when the grammar demands
+/// it — the renderer that actually stresses precedence/associativity
+/// handling in the parser.
+fn render_minimal(ast: &Ast, required: u8) -> String {
+    let p = prec(ast);
+    let s = match ast {
+        Ast::Num(n) => format!("{n}"),
+        Ast::Field(i) => FIELDS[*i].to_string(),
+        Ast::Neg(a) => format!("-{}", render_minimal(a, 6)),
+        Ast::Not(a) => format!("!{}", render_minimal(a, 6)),
+        Ast::Bin(op, a, b) => {
+            // left-assoc chains keep the left child at the same level;
+            // comparisons are non-associative, so both sides must sit at
+            // the additive level or be wrapped
+            let (lp, rp) = if p == 3 { (4, 4) } else { (p, p + 1) };
+            format!(
+                "{} {op} {}",
+                render_minimal(a, lp),
+                render_minimal(b, rp)
+            )
+        }
+        Ast::Call(f, args) => {
+            let parts: Vec<String> =
+                args.iter().map(|a| render_minimal(a, 1)).collect();
+            format!("{f}({})", parts.join(", "))
+        }
+    };
+    if p < required {
+        format!("({s})")
+    } else {
+        s
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the properties
+// ---------------------------------------------------------------------------
+
+fn schema() -> Vec<String> {
+    FIELDS.iter().map(|s| s.to_string()).collect()
+}
+
+fn rows() -> Vec<[f64; 3]> {
+    vec![
+        [0.0, 0.0, 0.0],
+        [1.0, 2.0, 3.0],
+        [-4.5, 0.25, 1e6],
+        [8.0, -1.0, 0.5],
+        [1e-9, -1e9, 42.0],
+    ]
+}
+
+fn assert_same(a: f64, b: f64, what: &str) {
+    let same = a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan());
+    assert!(same, "{what}: parsed {a} vs reference {b}");
+}
+
+#[test]
+fn generated_expressions_match_reference_interpreter() {
+    let mut rng = Lcg(0x5eed_cafe_f00d_0001);
+    let schema = schema();
+    let rows = rows();
+    for case in 0..300 {
+        let ast = gen(&mut rng, 4);
+        for (ri, renderer) in [render_paren(&ast), render_minimal(&ast, 1)]
+            .into_iter()
+            .enumerate()
+        {
+            let parsed =
+                Expr::parse(&renderer, &schema).unwrap_or_else(|e| {
+                    panic!("case {case}/{ri} failed to parse {renderer:?}: {e}")
+                });
+            for row in &rows {
+                assert_same(
+                    parsed.eval(row),
+                    reference_eval(&ast, row),
+                    &format!("case {case}/{ri}: {renderer}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn left_associativity_pinned() {
+    let schema = schema();
+    let row = [10.0, 3.0, 2.0];
+    let eval = |text: &str| Expr::parse(text, &schema).unwrap().eval(&row);
+    // a - b - c is (a - b) - c, never a - (b - c)
+    assert_eq!(eval("alpha - beta - gamma"), 5.0);
+    assert_eq!(eval("alpha - (beta - gamma)"), 9.0);
+    // division chains the same way
+    assert_eq!(eval("alpha / beta / gamma"), 10.0 / 3.0 / 2.0);
+    // mixed add/sub stays left-to-right
+    assert_eq!(eval("alpha - beta + gamma"), 9.0);
+}
+
+#[test]
+fn unary_minus_pinned() {
+    let schema = schema();
+    let row = [2.0, 3.0, 0.0];
+    let eval = |text: &str| Expr::parse(text, &schema).unwrap().eval(&row);
+    // unary binds tighter than * : (-a) * b (structurally; check via !)
+    assert_eq!(eval("!gamma * 5"), 5.0); // (!0) * 5, not !(0 * 5)
+    assert_eq!(eval("-alpha * beta"), -6.0);
+    // unary minus of a parenthesized sum
+    assert_eq!(eval("-(alpha + beta)"), -5.0);
+    // double negation and minus-before-literal
+    assert_eq!(eval("--alpha"), 2.0);
+    assert_eq!(eval("alpha - -beta"), 5.0);
+    assert_eq!(eval("2 * -3"), -6.0);
+    // unary binds before comparison
+    assert_eq!(eval("-alpha < 0"), 1.0);
+}
+
+#[test]
+fn nested_parens_pinned() {
+    let schema = schema();
+    let row = [2.0, 3.0, 4.0];
+    let eval = |text: &str| Expr::parse(text, &schema).unwrap().eval(&row);
+    assert_eq!(eval("((alpha))"), 2.0);
+    assert_eq!(eval("(alpha + beta) * gamma"), 20.0);
+    assert_eq!(eval("alpha + beta * gamma"), 14.0);
+    assert_eq!(eval("((alpha + (beta)) * (gamma))"), 20.0);
+    assert_eq!(eval("min((alpha), max(beta, (gamma)))"), 2.0);
+}
+
+#[test]
+fn logic_precedence_pinned() {
+    let schema = schema();
+    let row = [1.0, 0.0, 5.0];
+    let eval = |text: &str| Expr::parse(text, &schema).unwrap().eval(&row);
+    // && binds tighter than ||
+    assert_eq!(eval("alpha || beta && beta"), 1.0);
+    assert_eq!(eval("(alpha || beta) && beta"), 0.0);
+    // comparison binds tighter than &&
+    assert_eq!(eval("gamma > 1 && alpha == 1"), 1.0);
+}
+
+#[test]
+fn comparisons_do_not_chain() {
+    // the grammar allows one comparison per level: `1 < 2 == 1` is a
+    // parse error, not silent chaining
+    let err = Expr::parse("1 < 2 == 1", &schema()).unwrap_err();
+    assert!(err.to_string().contains("unexpected"), "{err}");
+}

@@ -1,0 +1,144 @@
+//! Degenerate-grid diagnosis: a grid where *every* point is skipped by
+//! the divisibility/world rules must produce an actionable error or an
+//! explicit empty-grid notice — never silent zero rows.
+
+use commscale::hw::catalog;
+use commscale::study::{
+    run_study, RowSink, RunOptions, StudySpec, VecSink,
+};
+use commscale::sweep::GridBuilder;
+
+#[test]
+fn prime_world_over_pow2_axes_is_diagnosed() {
+    let b = GridBuilder::new(&catalog::mi210())
+        .layers(&[8])
+        .tp(&[1, 2, 4, 8])
+        .pp(&[1, 2, 4])
+        .microbatches(&[4])
+        .dp(&[1, 2, 4, 8])
+        .world_size(7);
+    assert_eq!(b.realized_model_count(), 0);
+    let reason = b.empty_reason().expect("empty grid must carry a reason");
+    assert!(reason.contains("world_size 7"), "{reason}");
+    assert!(reason.contains("prime"), "{reason}");
+}
+
+#[test]
+fn world_smaller_than_every_degree_is_diagnosed() {
+    let b = GridBuilder::new(&catalog::mi210()).tp(&[8]).world_size(2);
+    let reason = b.empty_reason().unwrap();
+    assert!(reason.contains("world_size 2"), "{reason}");
+    assert!(reason.contains("smallest available product is 8"), "{reason}");
+}
+
+#[test]
+fn world_larger_than_every_product_is_diagnosed() {
+    let b = GridBuilder::new(&catalog::mi210())
+        .tp(&[1, 2])
+        .world_size(64);
+    let reason = b.empty_reason().unwrap();
+    assert!(reason.contains("largest available product is 2"), "{reason}");
+}
+
+#[test]
+fn layers_indivisible_by_every_pp_is_diagnosed() {
+    let b = GridBuilder::new(&catalog::mi210())
+        .layers(&[7])
+        .pp(&[2, 4])
+        .microbatches(&[4]);
+    let reason = b.empty_reason().unwrap();
+    assert!(reason.contains("pp"), "{reason}");
+    assert!(reason.contains("[7]"), "{reason}");
+}
+
+#[test]
+fn seq_par_without_tp_is_diagnosed() {
+    let b = GridBuilder::new(&catalog::mi210())
+        .tp(&[1])
+        .seq_par(&[true]);
+    let reason = b.empty_reason().unwrap();
+    assert!(reason.contains("seq_par"), "{reason}");
+    assert!(reason.contains("tp > 1"), "{reason}");
+}
+
+#[test]
+fn seq_par_token_misfit_is_diagnosed() {
+    // SL*B = 2 tokens cannot shard across tp = 4
+    let b = GridBuilder::new(&catalog::mi210())
+        .seq_len(&[2])
+        .batch(&[1])
+        .tp(&[4])
+        .seq_par(&[true]);
+    let reason = b.empty_reason().unwrap();
+    assert!(reason.contains("seq_par"), "{reason}");
+    assert!(reason.contains("token"), "{reason}");
+}
+
+#[test]
+fn partially_valid_grids_have_no_reason_and_build_rows() {
+    // pp = 4 misfits layers 6, but pp = 1 survives: not an empty grid
+    let b = GridBuilder::new(&catalog::mi210())
+        .layers(&[6])
+        .pp(&[1, 4])
+        .microbatches(&[4]);
+    assert!(b.empty_reason().is_none());
+    assert_eq!(b.clone().build().len(), 1);
+
+    // a healthy world filter keeps its factorizations
+    let b = GridBuilder::new(&catalog::mi210())
+        .layers(&[8])
+        .tp(&[1, 2, 4, 8])
+        .pp(&[1, 2, 4, 8])
+        .microbatches(&[4])
+        .dp(&[1, 2, 4, 8])
+        .world_size(8);
+    assert!(b.empty_reason().is_none());
+    assert!(!b.clone().build().is_empty());
+}
+
+#[test]
+fn empty_axis_is_diagnosed() {
+    let b = GridBuilder::new(&catalog::mi210()).hidden(&[]);
+    let reason = b.empty_reason().unwrap();
+    assert!(reason.contains("axis is empty"), "{reason}");
+}
+
+#[test]
+fn study_runner_refuses_empty_grids_with_the_reason() {
+    let spec = StudySpec::parse(
+        r#"{"name": "empty",
+            "axes": {"layers": [8], "tp": [2, 4], "world": 7}}"#,
+    )
+    .unwrap();
+    let resolved = spec.resolve(&catalog::mi210()).unwrap();
+    assert_eq!(resolved.total_points(), 0);
+    // --explain carries an explicit empty-grid notice ...
+    let text = resolved.explain();
+    assert!(text.contains("EMPTY GRID"), "{text}");
+    assert!(text.contains("world_size 7"), "{text}");
+    // ... and running it is a hard, named error, not zero silent rows
+    let mut sink = VecSink::new();
+    let mut sinks: Vec<&mut dyn RowSink> = vec![&mut sink];
+    let err = run_study(&resolved, RunOptions::default(), &mut sinks)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("empty grid"), "{err}");
+    assert!(err.contains("world_size 7"), "{err}");
+    assert!(sink.rows.is_empty());
+}
+
+#[test]
+fn sweep_cli_refuses_empty_grids() {
+    // `commscale sweep --world 7` over pow2 axes must exit nonzero with
+    // the diagnosis, not print a bare CSV header.
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_commscale"))
+        .args([
+            "sweep", "--layers", "8", "--tp", "2,4", "--pp", "1", "--dp",
+            "1,2", "--world", "7",
+        ])
+        .output()
+        .expect("run commscale");
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("world_size 7"), "{err}");
+}

@@ -1,0 +1,271 @@
+//! Golden equivalence: on pinned small grids the optimizer's argmin must
+//! be **bit-identical** to the exhaustive sweep's, tie-breaks included —
+//! any pruning-soundness bug fails these tests loudly.
+
+use commscale::hw::catalog;
+use commscale::optimizer::{optimize_study, OptimizeOptions};
+use commscale::study::{
+    run_study, RowSink, RunOptions, SpecSink, StudySpec, VecSink,
+};
+
+fn run_exhaustive(spec: &StudySpec) -> VecSink {
+    let resolved = spec.resolve(&catalog::mi210()).unwrap();
+    let mut sink = VecSink::new();
+    {
+        let mut sinks: Vec<&mut dyn RowSink> = vec![&mut sink];
+        run_study(&resolved, RunOptions::default(), &mut sinks).unwrap();
+    }
+    sink
+}
+
+/// Run both paths and assert every shared column matches bit-for-bit.
+/// Returns (evaluated, candidates) for pruning assertions.
+fn assert_search_equals_sweep(spec_text: &str) -> (usize, usize) {
+    let spec = StudySpec::parse(spec_text).unwrap();
+    let resolved = spec.resolve(&catalog::mi210()).unwrap();
+    let report = optimize_study(
+        &resolved,
+        &OptimizeOptions { threads: 2, memory_cap: None },
+    )
+    .unwrap();
+    let exhaustive = run_exhaustive(&spec);
+
+    report
+        .matches_exhaustive(&exhaustive.columns, &exhaustive.rows)
+        .unwrap_or_else(|e| {
+            panic!("{:?}: search diverged from the sweep: {e}", spec.name)
+        });
+    (report.evaluated, report.candidates)
+}
+
+/// The ISSUE-pinned shape: <= 2k points, 3 topologies, 2 evolution steps.
+#[test]
+fn golden_small_grid_three_topologies_two_evolutions() {
+    let (evaluated, candidates) = assert_search_equals_sweep(
+        r#"{
+          "name": "golden_small",
+          "axes": {
+            "hidden": [4096, 16384],
+            "seq_len": [2048],
+            "batch": [1, 2],
+            "layers": [8],
+            "tp": [1, 4],
+            "pp": [1, 4],
+            "microbatches": [4],
+            "seq_par": [false, true],
+            "dp": [1, 4],
+            "evolutions": [1, 4],
+            "topologies": ["flat", "node4", "node16"]
+          },
+          "group_by": ["hidden", "flop_vs_bw", "topology"],
+          "aggregate": [{"metric": "time_per_sample",
+                         "ops": ["min", "argmin"],
+                         "args": ["tp", "pp", "dp", "seq_par",
+                                  "microbatches", "batch"]}]
+        }"#,
+    );
+    assert!(candidates <= 2000, "grid grew past the golden pin: {candidates}");
+    assert!(candidates >= 400, "grid shrank: {candidates}");
+    assert!(
+        evaluated < candidates,
+        "no pruning on the golden grid ({evaluated}/{candidates})"
+    );
+    // small grids have few per-group tiers to discriminate; the hard
+    // <= 20% acceptance bar lives in benches/optimizer.rs on the 103k
+    // example, where dp/batch/mb spread is wide
+    assert!(
+        (evaluated as f64) <= 0.75 * candidates as f64,
+        "weak pruning: {evaluated}/{candidates}"
+    );
+}
+
+#[test]
+fn golden_iter_time_objective() {
+    let (evaluated, candidates) = assert_search_equals_sweep(
+        r#"{
+          "name": "golden_iter_time",
+          "axes": {
+            "hidden": [8192],
+            "seq_len": [2048, 8192],
+            "layers": [8],
+            "tp": [1, 2, 4, 8],
+            "pp": [1, 2, 4],
+            "microbatches": [4],
+            "seq_par": [false, true],
+            "dp": [1, 2],
+            "evolutions": [1, 4],
+            "topologies": ["node8"]
+          },
+          "group_by": ["seq_len", "flop_vs_bw"],
+          "aggregate": [{"metric": "makespan", "ops": ["min", "argmin"],
+                         "args": ["tp", "pp", "dp", "seq_par"]}]
+        }"#,
+    );
+    assert!(evaluated < candidates, "{evaluated}/{candidates}");
+}
+
+/// The comm-fraction objective has a weaker bound; equality must still be
+/// exact (pruning just saves less).
+#[test]
+fn golden_comm_fraction_objective() {
+    let (evaluated, candidates) = assert_search_equals_sweep(
+        r#"{
+          "name": "golden_comm_fraction",
+          "axes": {
+            "hidden": [4096, 16384],
+            "seq_len": [2048],
+            "layers": [8],
+            "tp": [1, 2, 8],
+            "pp": [1, 4],
+            "microbatches": [4],
+            "dp": [1, 4],
+            "evolutions": [1, 4],
+            "topologies": ["node8"]
+          },
+          "group_by": ["hidden", "flop_vs_bw"],
+          "aggregate": [{"metric": "comm_fraction",
+                         "ops": ["min", "argmin"],
+                         "args": ["tp", "pp", "dp"]}]
+        }"#,
+    );
+    assert!(evaluated <= candidates);
+}
+
+/// Duplicated axis values create bit-exact ties; both paths must keep the
+/// first-in-stream row.
+#[test]
+fn golden_exact_ties_resolve_identically() {
+    assert_search_equals_sweep(
+        r#"{
+          "name": "golden_ties",
+          "axes": {
+            "hidden": [4096],
+            "seq_len": [2048],
+            "layers": [8],
+            "tp": [4, 4, 1],
+            "pp": [1, 2],
+            "microbatches": [4],
+            "dp": [2, 2, 1],
+            "evolutions": [1, 2]
+          },
+          "group_by": ["flop_vs_bw"],
+          "aggregate": [{"metric": "time_per_sample",
+                         "ops": ["min", "argmin"],
+                         "args": ["tp", "pp", "dp"]}]
+        }"#,
+    );
+}
+
+/// Series segments, a string group key, and a derived-metric arg all flow
+/// through the search identically.
+#[test]
+fn golden_series_and_derived_metric_args() {
+    assert_search_equals_sweep(
+        r#"{
+          "name": "golden_series",
+          "axes": {
+            "layers": [8],
+            "tp": [1, 2, 8],
+            "pp": [1, 4],
+            "microbatches": [4],
+            "dp": [1, 4],
+            "series": [{"label": "small", "hidden": 4096},
+                       {"label": "large", "hidden": 16384,
+                        "seq_len": [4096]}],
+            "topologies": ["node8"]
+          },
+          "metrics": ["comm_fraction",
+                      {"name": "exposed_share",
+                       "expr": "exposed_comm / iter_time"}],
+          "group_by": ["series"],
+          "aggregate": [{"metric": "time_per_sample",
+                         "ops": ["min", "argmin"],
+                         "args": ["tp", "pp", "dp", "exposed_share"]}]
+        }"#,
+    );
+}
+
+/// Identity filters narrow both paths the same way.
+#[test]
+fn golden_filtered_grid() {
+    assert_search_equals_sweep(
+        r#"{
+          "name": "golden_filtered",
+          "axes": {
+            "hidden": [4096, 16384],
+            "layers": [8],
+            "tp": [1, 2, 4, 8],
+            "pp": [1, 2],
+            "microbatches": [4],
+            "dp": [1, 2, 4],
+            "evolutions": [1, 4]
+          },
+          "filter": ["tp * dp >= 2", "world <= 16"],
+          "group_by": ["hidden", "flop_vs_bw"],
+          "aggregate": [{"metric": "time_per_sample",
+                         "ops": ["min", "argmin"],
+                         "args": ["tp", "pp", "dp"]}]
+        }"#,
+    );
+}
+
+/// The winners round-trip through the spec sink into a runnable study
+/// whose grid is exactly the winner set.
+#[test]
+fn seeded_spec_roundtrips_and_resolves() {
+    let spec = StudySpec::parse(
+        r#"{
+          "name": "seed_me",
+          "axes": {
+            "hidden": [4096, 16384],
+            "layers": [8],
+            "tp": [1, 4],
+            "pp": [1, 4],
+            "microbatches": [4],
+            "dp": [1, 4],
+            "evolutions": [1, 4],
+            "topologies": ["node8"]
+          },
+          "group_by": ["hidden", "flop_vs_bw"],
+          "aggregate": [{"metric": "time_per_sample",
+                         "ops": ["min", "argmin"],
+                         "args": ["tp", "pp", "dp", "seq_par",
+                                  "microbatches", "batch", "layers",
+                                  "seq_len"]}]
+        }"#,
+    )
+    .unwrap();
+    let resolved = spec.resolve(&catalog::mi210()).unwrap();
+    let report = optimize_study(
+        &resolved,
+        &OptimizeOptions { threads: 1, memory_cap: None },
+    )
+    .unwrap();
+
+    let path = std::env::temp_dir().join("commscale_seeded_spec_test.json");
+    let path_str = path.to_str().unwrap().to_string();
+    let mut sink = SpecSink::new(&path_str, &spec.name, None, None);
+    sink.begin(&report.columns).unwrap();
+    for row in &report.rows {
+        sink.row(row).unwrap();
+    }
+    let msg = sink.finish().unwrap().unwrap();
+    assert!(msg.contains("seeded"), "{msg}");
+
+    let seeded = StudySpec::parse_file(&path).unwrap();
+    assert_eq!(seeded.name, "seed_me_seeded");
+    assert_eq!(seeded.axes.series.len(), report.rows.len());
+    let seeded_resolved = seeded.resolve(&catalog::mi210()).unwrap();
+    // one pinned winner per series, crossed with the two distinct
+    // evolutions lifted from the flop_vs_bw group key
+    assert_eq!(seeded_resolved.total_points(), 2 * report.rows.len());
+    // and the seeded study actually runs
+    let mut vs = VecSink::new();
+    {
+        let mut sinks: Vec<&mut dyn RowSink> = vec![&mut vs];
+        run_study(&seeded_resolved, RunOptions::default(), &mut sinks)
+            .unwrap();
+    }
+    assert_eq!(vs.rows.len(), seeded_resolved.total_points());
+    let _ = std::fs::remove_file(&path);
+}

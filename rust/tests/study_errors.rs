@@ -1,0 +1,130 @@
+//! Malformed-`StudySpec` coverage: every `tests/data/*.json` fixture
+//! must fail with an error that **names the offending field**, and the
+//! CLI's `--explain` path must stay healthy end-to-end.
+
+use std::path::{Path, PathBuf};
+
+use commscale::hw::catalog;
+use commscale::study::{run_study, RowSink, RunOptions, StudySpec, VecSink};
+
+fn fixture(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/data")
+        .join(name)
+}
+
+/// Parse a fixture; if parsing succeeds the error must surface at
+/// resolve/run time instead. Returns the first error message met.
+fn first_error(name: &str) -> String {
+    let path = fixture(name);
+    let spec = match StudySpec::parse_file(&path) {
+        Err(e) => return e.to_string(),
+        Ok(s) => s,
+    };
+    let resolved = match spec.resolve(&catalog::mi210()) {
+        Err(e) => return e.to_string(),
+        Ok(r) => r,
+    };
+    let mut sink = VecSink::new();
+    let mut sinks: Vec<&mut dyn RowSink> = vec![&mut sink];
+    match run_study(&resolved, RunOptions::default(), &mut sinks) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("fixture {name} unexpectedly ran clean"),
+    }
+}
+
+#[test]
+fn unknown_axis_names_the_key_and_the_alternatives() {
+    let err = first_error("unknown_axis.json");
+    assert!(err.contains("hiden"), "{err}");
+    assert!(err.contains("hidden"), "{err}"); // the allowed-keys list
+}
+
+#[test]
+fn bad_filter_op_names_the_character_and_expression() {
+    let err = first_error("bad_filter_op.json");
+    assert!(err.contains('~'), "{err}");
+    assert!(err.contains("tp ~ 2"), "{err}");
+}
+
+#[test]
+fn cyclic_derived_metric_names_the_unresolvable_field() {
+    // metric expressions bind against the *base* schema only, so a
+    // metric-to-metric reference — and therefore any cycle — fails by
+    // naming the field it cannot resolve.
+    let err = first_error("cyclic_metric.json");
+    assert!(err.contains("pong"), "{err}");
+    assert!(err.contains("available fields"), "{err}");
+}
+
+#[test]
+fn unknown_aggregate_op_is_named_with_alternatives() {
+    let err = first_error("bad_agg_op.json");
+    assert!(err.contains("median"), "{err}");
+    assert!(err.contains("argmin"), "{err}");
+}
+
+#[test]
+fn unknown_sink_kind_is_named_with_alternatives() {
+    let err = first_error("bad_sink_kind.json");
+    assert!(err.contains("parquet"), "{err}");
+    assert!(err.contains("spec"), "{err}"); // the new sink is advertised
+}
+
+#[test]
+fn every_fixture_is_covered_by_a_test() {
+    // adding a fixture without an assertion should fail loudly here
+    let dir = fixture("");
+    let mut names: Vec<String> = std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .collect();
+    names.sort();
+    assert_eq!(
+        names,
+        vec![
+            "bad_agg_op.json",
+            "bad_filter_op.json",
+            "bad_sink_kind.json",
+            "cyclic_metric.json",
+            "unknown_axis.json",
+        ]
+    );
+}
+
+// ---------------------------------------------------------------------------
+// CLI smoke: --explain must work for both the study and optimize paths,
+// and a malformed spec must exit nonzero naming the field.
+// ---------------------------------------------------------------------------
+
+fn commscale(args: &[&str]) -> std::process::Output {
+    std::process::Command::new(env!("CARGO_BIN_EXE_commscale"))
+        .args(args)
+        .output()
+        .expect("spawn commscale")
+}
+
+#[test]
+fn study_explain_smoke() {
+    let out = commscale(&["study", "strategies", "--explain"]);
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("scenario points"), "{text}");
+}
+
+#[test]
+fn optimize_explain_smoke() {
+    let out = commscale(&["optimize", "strategies", "--explain"]);
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("searching min time_per_sample"), "{text}");
+}
+
+#[test]
+fn malformed_spec_fails_the_cli_with_the_field_named() {
+    let path = fixture("unknown_axis.json");
+    let out = commscale(&["study", path.to_str().unwrap(), "--explain"]);
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("hiden"), "{err}");
+}
