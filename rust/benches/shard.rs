@@ -1,0 +1,143 @@
+//! Bench: sharded scatter/gather vs a single worker on the shipped
+//! 103k-point `tp_pp_evolution_argmin` example — real `commscale shard
+//! run` processes (1-thread workers, emulating one host per shard), CSV
+//! outputs diffed byte-for-byte, and `BENCH_shard.json` recording
+//! `points_per_sec` at n = 1 vs n = 4.
+//!
+//! The acceptance bar (n = 4 at ≥ 2× the n = 1 rate) assumes ≥ 4 cores;
+//! on smaller machines the bar scales to half the ideal core-limited
+//! speedup. Env knobs (used by CI): `COMMSCALE_BENCH_QUICK=1` / `--quick`
+//! shrinks the grid; `COMMSCALE_SHARD_RELAX=1` reports without asserting.
+
+use std::path::Path;
+use std::time::Instant;
+
+use commscale::hw::{catalog, Evolution};
+use commscale::study::{SinkSpec, StudySpec};
+use commscale::util::microbench::{bench_header, fmt_time, BenchResult};
+use commscale::util::stats::Summary;
+use commscale::util::Json;
+
+fn run_shard(spec_path: &Path, n: usize, csv: &Path) -> f64 {
+    let t0 = Instant::now();
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_commscale"))
+        .args([
+            "shard",
+            "run",
+            "-n",
+            &n.to_string(),
+            spec_path.to_str().unwrap(),
+            "--worker-threads",
+            "1",
+            "--csv",
+            csv.to_str().unwrap(),
+        ])
+        .output()
+        .expect("spawn commscale shard run");
+    assert!(
+        out.status.success(),
+        "shard run -n {n} failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    bench_header("sharded scatter/gather (process-per-shard)");
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("COMMSCALE_BENCH_QUICK").is_ok();
+    let relax = std::env::var("COMMSCALE_SHARD_RELAX").is_ok();
+
+    let example =
+        Path::new("../examples/studies/tp_pp_evolution_argmin.json");
+    let mut spec = StudySpec::parse_file(example).expect("example spec");
+    spec.sinks = vec![SinkSpec::Table { title: String::new(), limit: 1 }];
+    if quick {
+        spec.axes.hidden = vec![4096, 16384];
+        spec.axes.seq_len = vec![2048, 8192];
+        spec.axes.evolutions =
+            vec![Evolution::none(), Evolution::flop_vs_bw_4x()];
+    }
+    let resolved = spec.resolve(&catalog::mi210()).unwrap();
+    let points = resolved.total_points();
+    if !quick {
+        assert!(
+            points > 100_000,
+            "the example study shrank below its 103k-point billing: {points}"
+        );
+    }
+    let dir = std::env::temp_dir()
+        .join(format!("commscale_shard_bench_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let spec_path = dir.join("bench_spec.json");
+    std::fs::write(&spec_path, spec.to_json().to_string_pretty(2) + "\n")
+        .unwrap();
+
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    println!(
+        "grid: {points} scenario points; workers pinned to 1 thread each \
+         ({cores} cores available)"
+    );
+
+    let csv1 = dir.join("n1.csv");
+    let csv4 = dir.join("n4.csv");
+    let n1_secs = run_shard(&spec_path, 1, &csv1);
+    let n4_secs = run_shard(&spec_path, 4, &csv4);
+    let pps1 = points as f64 / n1_secs;
+    let pps4 = points as f64 / n4_secs;
+    let speedup = n1_secs / n4_secs;
+    println!(
+        "n=1: {} ({pps1:.0} points/s)   n=4: {} ({pps4:.0} points/s)   \
+         speedup {speedup:.2}x",
+        fmt_time(n1_secs),
+        fmt_time(n4_secs),
+    );
+
+    // gather correctness rides along: both runs produced the same bytes
+    let a = std::fs::read(&csv1).unwrap();
+    let b = std::fs::read(&csv4).unwrap();
+    assert!(!a.is_empty(), "empty CSV from the n=1 run");
+    assert_eq!(a, b, "n=1 and n=4 shard runs produced different CSV bytes");
+
+    // acceptance: >= half the core-limited ideal (= 2x on >= 4 cores)
+    let required = if relax {
+        0.0
+    } else {
+        0.5 * (cores.min(4) as f64)
+    };
+    println!(
+        "acceptance: speedup {speedup:.2}x vs required {required:.2}x \
+         (cores {cores}, relax {relax})"
+    );
+    assert!(
+        speedup >= required,
+        "n=4 scatter/gather must reach {required:.2}x over n=1 on \
+         {cores} cores, got {speedup:.2}x"
+    );
+
+    let res = BenchResult {
+        name: "shard_scatter_gather_n4".into(),
+        iters: 1,
+        summary: Summary::of(&[n4_secs]),
+    };
+    res.write_json_with(
+        Path::new("BENCH_shard.json"),
+        vec![
+            ("points", Json::num(points as f64)),
+            ("workers", Json::num(4.0)),
+            ("worker_threads", Json::num(1.0)),
+            ("cores", Json::num(cores as f64)),
+            ("points_per_sec", Json::num(pps4)),
+            ("points_per_sec_n1", Json::num(pps1)),
+            ("secs_n1", Json::num(n1_secs)),
+            ("secs_n4", Json::num(n4_secs)),
+            ("speedup_n4_vs_n1", Json::num(speedup)),
+            ("quick", Json::Bool(quick)),
+        ],
+    )
+    .unwrap();
+    println!("wrote BENCH_shard.json");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -35,6 +35,10 @@
 //!   derived expressions), group-by aggregations, and sinks of a study;
 //!   execution streams chunk-by-chunk off the sweep engine, and every
 //!   paper artifact is a built-in spec ([`study::builtin`]).
+//! * [`shard`] — distributed scatter/gather execution: studies and
+//!   optimizer searches partition into deterministic shards (point
+//!   ranges / group-key ranges) run as worker processes on any host,
+//!   and the merge is bit-identical to single-process output.
 //! * [`opmodel`] — the paper's operator-level runtime models: fit on a
 //!   profiled baseline, project hundreds of configurations (§4.2.2).
 //! * [`profiler`] — ROI extraction: measures ground-truth operator times by
@@ -61,6 +65,7 @@ pub mod parallelism;
 pub mod profiler;
 pub mod report;
 pub mod runtime;
+pub mod shard;
 pub mod sim;
 pub mod study;
 pub mod sweep;

@@ -32,6 +32,7 @@ use commscale::parallelism::TopologyKind;
 use commscale::profiler::{self, ProfileDb};
 use commscale::report::{fmt_secs, Table};
 use commscale::runtime::Runtime;
+use commscale::shard;
 use commscale::sim::AnalyticCost;
 use commscale::study::{
     self, builtin, RowSink, RunOptions, SpecSink, StudySpec, VecSink,
@@ -58,6 +59,7 @@ fn main() -> Result<()> {
         }
         "study" => study_cmd(&args, &device),
         "optimize" => optimize_cmd(&args, &device),
+        "shard" => shard_cmd(&args, &device),
         "fig15" => fig15(&args),
         "sweep" => sweep_cmd(&args, &device),
         "strategies" => strategies_cmd(&args, &device),
@@ -225,23 +227,14 @@ fn optimize_cmd(args: &Args, device: &DeviceSpec) -> Result<()> {
     let report = optimizer::optimize_study(&resolved, &opts)?;
     let secs = t0.elapsed().as_secs_f64();
 
-    let headers: Vec<&str> =
-        report.columns.iter().map(|c| c.as_str()).collect();
-    let mut t = Table::new(
+    render_search_output(
         &format!("optimize {} — min {} per group", spec.name, report.metric),
-        &headers,
-    );
-    let shown = report.rows.len().min(60);
-    for row in report.rows.iter().take(shown) {
-        t.row(row.iter().map(|v| v.render()).collect());
-    }
-    print!("{}", t.render());
-    if report.rows.len() > shown {
-        println!(
-            "({} more groups not shown; --csv streams all)",
-            report.rows.len() - shown
-        );
-    }
+        &spec,
+        &report.columns,
+        &report.rows,
+        csv(args),
+        args.get("emit-spec"),
+    )?;
     eprintln!(
         "optimize {:?}: {} groups; evaluated {} of {} candidates \
          ({:.1}% pruned{}) in {:.2}s",
@@ -257,34 +250,6 @@ fn optimize_cmd(args: &Args, device: &DeviceSpec) -> Result<()> {
         },
         secs
     );
-
-    if let Some(path) = csv(args) {
-        use std::io::Write;
-        let mut out = std::io::BufWriter::new(
-            std::fs::File::create(path)
-                .with_context(|| format!("cannot create {path:?}"))?,
-        );
-        writeln!(out, "{}", report.columns.join(","))?;
-        for row in &report.rows {
-            let cells: Vec<String> =
-                row.iter().map(|v| v.render()).collect();
-            writeln!(out, "{}", cells.join(","))?;
-        }
-        out.flush()?;
-        eprintln!("wrote {} rows to {path}", report.rows.len());
-    }
-
-    if let Some(path) = args.get("emit-spec") {
-        let mut sink =
-            SpecSink::new(path, &spec.name, None, spec.device.as_deref());
-        sink.begin(&report.columns)?;
-        for row in &report.rows {
-            sink.row(row)?;
-        }
-        if let Some(msg) = sink.finish()? {
-            print!("{msg}");
-        }
-    }
 
     if args.has("verify") {
         let mut vs = VecSink::new();
@@ -305,6 +270,350 @@ fn optimize_cmd(args: &Args, device: &DeviceSpec) -> Result<()> {
             resolved.total_points()
         );
     }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// commscale shard — scatter/gather execution across processes/hosts
+// ---------------------------------------------------------------------------
+
+const SHARD_USAGE: &str = "\
+usage: commscale shard <run|worker|plan|merge> ...
+  shard run -n N <spec|name> [--optimize] [--csv PATH] [--emit-spec PATH]
+            [--worker-threads T] [--keep-dir DIR]
+  shard worker --shard k/n <spec|name> [--optimize] [--out PATH] [--threads T]
+  shard plan -n N <spec|name> [--optimize]
+  shard merge <spec|name> FILE... [--optimize] [--csv PATH] [--emit-spec PATH]
+see `commscale help` for the full shard story";
+
+/// Extract `-n N` / `--shards N` plus the remaining positionals after the
+/// sub-subcommand (the tiny CLI parser treats single-dash `-n` as a
+/// positional, so it is peeled here).
+fn shard_n_and_rest(args: &Args) -> Result<(Option<usize>, Vec<String>)> {
+    let mut n = args
+        .get("shards")
+        .map(|s| s.parse::<usize>())
+        .transpose()
+        .context("--shards must be an integer")?;
+    let mut rest = Vec::new();
+    let mut it = args.positional.iter().skip(2).peekable();
+    while let Some(a) = it.next() {
+        if a == "-n" {
+            let v = it
+                .next()
+                .context("-n needs a shard count, e.g. `shard run -n 4`")?;
+            n = Some(v.parse().context("-n must be an integer")?);
+        } else {
+            rest.push(a.clone());
+        }
+    }
+    Ok((n, rest))
+}
+
+fn shard_cmd(args: &Args, device: &DeviceSpec) -> Result<()> {
+    if args.has("memory-cap") {
+        bail!(
+            "--memory-cap is not supported under `commscale shard` (shard \
+             workers pin it off so the merged argmin stays equivalent to \
+             the exhaustive study); run `commscale optimize --memory-cap` \
+             unsharded instead"
+        );
+    }
+    match args.positional.get(1).map(String::as_str) {
+        Some("run") => shard_run(args, device),
+        Some("worker") => shard_worker(args, device),
+        Some("plan") => shard_plan(args),
+        Some("merge") => shard_merge(args, device),
+        _ => bail!("{SHARD_USAGE}"),
+    }
+}
+
+/// Render a search's winner rows: bounded table on stdout, optional CSV,
+/// optional winner re-emission as a seeded spec. Shared by `commscale
+/// optimize` and the sharded gather so their file outputs can never
+/// drift apart (CI diffs them byte-for-byte).
+fn render_search_output(
+    title: &str,
+    spec: &StudySpec,
+    columns: &[String],
+    rows: &[Vec<commscale::study::Value>],
+    csv_path: Option<&str>,
+    emit_spec: Option<&str>,
+) -> Result<()> {
+    let headers: Vec<&str> = columns.iter().map(|c| c.as_str()).collect();
+    let mut t = Table::new(title, &headers);
+    let shown = rows.len().min(60);
+    for row in rows.iter().take(shown) {
+        t.row(row.iter().map(|v| v.render()).collect());
+    }
+    print!("{}", t.render());
+    if rows.len() > shown {
+        println!(
+            "({} more groups not shown; --csv streams all)",
+            rows.len() - shown
+        );
+    }
+    if let Some(path) = csv_path {
+        use std::io::Write;
+        let mut out = std::io::BufWriter::new(
+            std::fs::File::create(path)
+                .with_context(|| format!("cannot create {path:?}"))?,
+        );
+        writeln!(out, "{}", columns.join(","))?;
+        for row in rows {
+            let cells: Vec<String> = row.iter().map(|v| v.render()).collect();
+            writeln!(out, "{}", cells.join(","))?;
+        }
+        out.flush()?;
+        eprintln!("wrote {} rows to {path}", rows.len());
+    }
+    if let Some(path) = emit_spec {
+        let mut sink =
+            SpecSink::new(path, &spec.name, None, spec.device.as_deref());
+        sink.begin(columns)?;
+        for row in rows {
+            sink.row(row)?;
+        }
+        if let Some(msg) = sink.finish()? {
+            print!("{msg}");
+        }
+    }
+    Ok(())
+}
+
+/// `commscale shard worker --shard k/n <spec>` — run one shard, stream
+/// the payload (jsonl) to stdout or `--out`.
+fn shard_worker(args: &Args, device: &DeviceSpec) -> Result<()> {
+    let (_, rest) = shard_n_and_rest(args)?;
+    let target = rest.first().context(
+        "shard worker needs a spec: commscale shard worker --shard k/n \
+         <spec.json|name>",
+    )?;
+    let id = shard::ShardId::parse(
+        args.get("shard")
+            .context("shard worker needs --shard k/n (e.g. --shard 0/4)")?,
+    )?;
+    let spec = load_spec(target)?;
+    let resolved = spec.resolve(device)?;
+    let opts = RunOptions {
+        threads: args.get_usize("threads", 0),
+        chunk: args.get_usize("chunk", 0),
+    };
+    let out_path = args.get_or("out", "-");
+    let summary = if out_path == "-" {
+        let stdout = std::io::stdout();
+        let mut out = std::io::BufWriter::new(stdout.lock());
+        shard::run_worker(&resolved, id, args.has("optimize"), opts, &mut out)?
+    } else {
+        let mut out = std::io::BufWriter::new(
+            std::fs::File::create(out_path)
+                .with_context(|| format!("cannot create {out_path:?}"))?,
+        );
+        shard::run_worker(&resolved, id, args.has("optimize"), opts, &mut out)?
+    };
+    eprintln!(
+        "shard {id} of {:?}: units [{}, {}) of {}, {} points evaluated, {} \
+         rows",
+        spec.name,
+        summary.range.0,
+        summary.range.1,
+        summary.units,
+        summary.footer.points_evaluated,
+        summary.footer.rows_matched,
+    );
+    Ok(())
+}
+
+/// `commscale shard plan -n N <spec>` — print the multi-host recipe.
+fn shard_plan(args: &Args) -> Result<()> {
+    let (n, rest) = shard_n_and_rest(args)?;
+    let n = n.context("shard plan needs -n N (the shard count)")?;
+    shard::ShardId::new(0, n)?; // validates n >= 1 with the canonical error
+    let target = rest.first().context("shard plan needs a spec or name")?;
+    print!(
+        "{}",
+        shard::plan_text(
+            target,
+            n,
+            args.has("optimize"),
+            args.get_or("device", "mi210")
+        )
+    );
+    Ok(())
+}
+
+/// `commscale shard run -n N <spec>` — local scatter/gather: spawn N
+/// worker processes of this binary, then merge their payload files
+/// through the spec's sinks. Output is bit-identical to `commscale
+/// study`/`optimize` on the same spec.
+fn shard_run(args: &Args, device: &DeviceSpec) -> Result<()> {
+    let (n, rest) = shard_n_and_rest(args)?;
+    let n = n.context("shard run needs -n N (the shard count)")?;
+    shard::ShardId::new(0, n)?;
+    let target = rest.first().context("shard run needs a spec or name")?;
+    let spec = load_spec(target)?;
+    let resolved = spec.resolve(device)?;
+    eprint!("{}", resolved.explain());
+
+    let dir = match args.get("keep-dir") {
+        Some(d) => std::path::PathBuf::from(d),
+        None => std::env::temp_dir()
+            .join(format!("commscale_shard_{}", std::process::id())),
+    };
+    std::fs::create_dir_all(&dir)
+        .with_context(|| format!("cannot create shard dir {dir:?}"))?;
+
+    let exe = std::env::current_exe().context("cannot locate commscale")?;
+    let worker_threads = args.get_usize("worker-threads", 0);
+    let mut children = Vec::new();
+    let mut files = Vec::new();
+    for k in 0..n {
+        let out = dir.join(format!("shard_{k}_of_{n}.jsonl"));
+        let mut cmd = std::process::Command::new(&exe);
+        cmd.arg("shard")
+            .arg("worker")
+            .arg("--shard")
+            .arg(format!("{k}/{n}"))
+            .arg(target)
+            .arg("--device")
+            .arg(args.get_or("device", "mi210"))
+            .arg("--out")
+            .arg(&out)
+            .arg("--threads")
+            .arg(worker_threads.to_string());
+        if args.has("optimize") {
+            cmd.arg("--optimize");
+        }
+        let child = cmd
+            .spawn()
+            .with_context(|| format!("cannot spawn shard worker {k}/{n}"))?;
+        children.push((k, child));
+        files.push(out);
+    }
+    let mut failure: Option<String> = None;
+    for (k, mut child) in children {
+        if failure.is_some() {
+            // a sibling already failed: stop the rest instead of letting
+            // them burn cores on payloads nobody will merge
+            let _ = child.kill();
+            let _ = child.wait();
+            continue;
+        }
+        match child.wait() {
+            Ok(status) if status.success() => {}
+            Ok(status) => {
+                failure = Some(format!(
+                    "shard worker {k}/{n} failed ({status}); see its stderr"
+                ));
+            }
+            Err(e) => {
+                failure =
+                    Some(format!("cannot wait for shard worker {k}/{n}: {e}"));
+            }
+        }
+    }
+    if let Some(msg) = failure {
+        if args.get("keep-dir").is_none() {
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+        bail!("{msg}");
+    }
+
+    let inputs: Result<Vec<shard::merge::ShardInput>> = files
+        .iter()
+        .map(|f| {
+            shard::merge::ShardInput::from_file(f.to_str().unwrap())
+                .map_err(Into::into)
+        })
+        .collect();
+    let result = shard_gather(args, &spec, &resolved, inputs?);
+    if args.get("keep-dir").is_none() {
+        let _ = std::fs::remove_dir_all(&dir);
+    } else {
+        eprintln!("shard payloads kept in {}", dir.display());
+    }
+    result
+}
+
+/// `commscale shard merge <spec> FILE...` — the multi-host gather: merge
+/// worker payload files produced elsewhere.
+fn shard_merge(args: &Args, device: &DeviceSpec) -> Result<()> {
+    let (_, rest) = shard_n_and_rest(args)?;
+    let target = rest.first().context(
+        "shard merge needs the spec plus the worker payload files: \
+         commscale shard merge <spec.json|name> shard_*.jsonl",
+    )?;
+    if rest.len() < 2 {
+        bail!("shard merge: no payload files given (expected every worker's \
+               --out file)");
+    }
+    let spec = load_spec(target)?;
+    let resolved = spec.resolve(device)?;
+    let inputs: Result<Vec<shard::merge::ShardInput>> = rest[1..]
+        .iter()
+        .map(|f| shard::merge::ShardInput::from_file(f).map_err(Into::into))
+        .collect();
+    shard_gather(args, &spec, &resolved, inputs?)
+}
+
+/// Shared gather tail of `shard run` / `shard merge`: drive the spec's
+/// sinks (study mode) or render the merged search report (optimize mode).
+fn shard_gather(
+    args: &Args,
+    spec: &StudySpec,
+    resolved: &commscale::study::ResolvedStudy,
+    inputs: Vec<shard::merge::ShardInput>,
+) -> Result<()> {
+    if args.has("optimize") {
+        let merged = shard::merge_optimize(resolved, inputs)?;
+        render_search_output(
+            &format!(
+                "shard-merged optimize {} ({} groups)",
+                spec.name, merged.groups
+            ),
+            spec,
+            &merged.columns,
+            &merged.rows,
+            csv(args),
+            args.get("emit-spec"),
+        )?;
+        eprintln!(
+            "shard-merged optimize {:?}: {} groups; evaluated {} of {} \
+             candidates ({:.1}% pruned{})",
+            spec.name,
+            merged.groups,
+            merged.evaluated,
+            merged.candidates,
+            100.0 * merged.pruned_fraction(),
+            if merged.infeasible > 0 {
+                format!(", {} memory-infeasible", merged.infeasible)
+            } else {
+                String::new()
+            },
+        );
+        return Ok(());
+    }
+
+    let mut sinks = study::build_sinks(spec, csv(args));
+    let outcome = {
+        let mut refs: Vec<&mut dyn RowSink> =
+            sinks.iter_mut().map(|b| &mut **b).collect();
+        shard::merge_study(resolved, inputs, &mut refs)?
+    };
+    for r in &outcome.renders {
+        print!("{r}");
+    }
+    eprintln!(
+        "shard-merged study {:?}: {} points evaluated, {} rows matched{}",
+        spec.name,
+        outcome.points_evaluated,
+        outcome.rows_matched,
+        if outcome.groups_emitted > 0 {
+            format!(", {} groups emitted", outcome.groups_emitted)
+        } else {
+            String::new()
+        }
+    );
     Ok(())
 }
 
@@ -343,6 +652,23 @@ strategy optimizer (search, not sweep):
     --emit-spec PATH     write the winners as a new runnable study spec
     --memory-cap FRAC    refuse strategies needing > FRAC of device HBM
     --csv PATH --threads N
+
+sharded scatter/gather (split one study/search across processes or hosts;
+merged output is bit-identical to single-process execution):
+  shard run -n N <spec|name>   partition into N shards, run them as local
+                         worker processes, merge through the spec's sinks
+    --optimize           shard the `commscale optimize` search by group
+                         keys instead of the study by point ranges
+    --worker-threads T   threads per worker (default: all cores each)
+    --csv PATH --emit-spec PATH   as in study/optimize
+    --keep-dir DIR       keep the worker payload files for inspection
+  shard worker --shard k/n <spec|name> [--out PATH] [--optimize]
+                         run one shard anywhere, streaming a jsonl payload
+                         (exact-bits row/aggregate state) to stdout/--out
+  shard plan -n N <spec|name>   print the multi-host worker + merge recipe
+  shard merge <spec|name> FILE...   gather payload files produced on other
+                         hosts; refuses mismatched specs/devices, overlapping
+                         or missing shards, and truncated payloads
 
 paper artifacts (each backed by a built-in study definition):
   table2            model-zoo hyperparameters

@@ -74,7 +74,12 @@ pub struct OptimizeReport {
     pub evaluated: usize,
     /// Points refused by the memory-capacity check.
     pub infeasible: usize,
+    /// Groups this report covers (the shard's slice, if sharded).
     pub groups: usize,
+    /// Groups in the whole study's key space — equals `groups` for an
+    /// unsharded run; shard workers put it in their payload header so the
+    /// merge can check every plan partitioned the same space.
+    pub total_groups: usize,
 }
 
 impl OptimizeReport {
@@ -297,6 +302,22 @@ pub fn optimize_study(
     resolved: &ResolvedStudy,
     opts: &OptimizeOptions,
 ) -> Result<OptimizeReport> {
+    optimize_study_shard(resolved, opts, None)
+}
+
+/// [`optimize_study`] restricted to one shard of the **group-key space**:
+/// shard `k` of `n` searches the contiguous slice `[k·G/n, (k+1)·G/n)` of
+/// the groups in first-seen stream order. Groups are independent — the
+/// candidate enumeration is cheap and every shard performs it
+/// identically, so concatenating the shard reports in `k` order
+/// reproduces the unsharded report exactly (rows, `points` counts,
+/// `evaluated` totals, tie-breaks). This is the optimizer's
+/// scatter/gather seam (`commscale shard ... --optimize`).
+pub fn optimize_study_shard(
+    resolved: &ResolvedStudy,
+    opts: &OptimizeOptions,
+    shard: Option<(usize, usize)>,
+) -> Result<OptimizeReport> {
     let p = extract_problem(resolved)?;
 
     // -- enumerate candidates into groups (no simulation) ------------------
@@ -354,6 +375,22 @@ pub fn optimize_study(
                 });
             });
         }
+    }
+
+    // -- shard slice: keep only this worker's group range ------------------
+    let total_groups = groups.len();
+    if let Some((k, n)) = shard {
+        if n == 0 || k >= n {
+            return Err(Error::Study(format!(
+                "optimize shard {k}/{n} is malformed: need 0 <= k < n, n >= 1"
+            )));
+        }
+        let total = groups.len();
+        let lo = k * total / n;
+        let hi = (k + 1) * total / n;
+        groups.drain(hi..);
+        groups.drain(..lo);
+        candidates = groups.iter().map(|g| g.cands.len()).sum();
     }
 
     // -- search each group (parallel across groups) ------------------------
@@ -476,6 +513,7 @@ pub fn optimize_study(
         evaluated,
         infeasible,
         groups: n_groups,
+        total_groups,
     })
 }
 
@@ -573,6 +611,55 @@ mod tests {
         for row in &report.rows {
             assert!(row[tp_col].as_f64() >= 2.0);
         }
+    }
+
+    #[test]
+    fn group_sharded_search_concatenates_to_full_report() {
+        let text = r#"{
+          "name": "s",
+          "axes": {"hidden": [4096, 16384], "layers": [8],
+                   "tp": [1, 2, 4, 8], "pp": [1, 4], "microbatches": [4],
+                   "dp": [1, 2], "evolutions": [1, 2, 4]},
+          "group_by": ["hidden", "flop_vs_bw"],
+          "aggregate": [{"metric": "time_per_sample", "ops": ["argmin"],
+                         "args": ["tp", "pp", "dp"]}]
+        }"#;
+        let r = resolve(text);
+        let opts = OptimizeOptions { threads: 1, memory_cap: None };
+        let full = optimize_study(&r, &opts).unwrap();
+        assert_eq!(full.groups, 6);
+        for n in [1usize, 2, 3, 5, 8] {
+            let mut rows: Vec<Vec<Value>> = Vec::new();
+            let (mut cand, mut eval, mut groups) = (0usize, 0usize, 0usize);
+            for k in 0..n {
+                let rep =
+                    optimize_study_shard(&r, &opts, Some((k, n))).unwrap();
+                assert_eq!(rep.columns, full.columns);
+                cand += rep.candidates;
+                eval += rep.evaluated;
+                groups += rep.groups;
+                rows.extend(rep.rows);
+            }
+            assert_eq!(groups, full.groups, "n = {n}");
+            assert_eq!(cand, full.candidates, "n = {n}");
+            assert_eq!(eval, full.evaluated, "n = {n}");
+            assert_eq!(rows.len(), full.rows.len());
+            for (a, b) in rows.iter().zip(&full.rows) {
+                for (x, y) in a.iter().zip(b) {
+                    match (x, y) {
+                        (Value::Num(p), Value::Num(q)) => {
+                            assert_eq!(p.to_bits(), q.to_bits())
+                        }
+                        _ => assert_eq!(x, y),
+                    }
+                }
+            }
+        }
+        // malformed shard coordinates are loud
+        let e = optimize_study_shard(&r, &opts, Some((0, 0))).unwrap_err();
+        assert!(e.to_string().contains("malformed"), "{e}");
+        let e = optimize_study_shard(&r, &opts, Some((3, 2))).unwrap_err();
+        assert!(e.to_string().contains("malformed"), "{e}");
     }
 
     #[test]

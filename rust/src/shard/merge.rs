@@ -1,0 +1,609 @@
+//! The gather side: validate a set of shard payloads against the target
+//! spec and against each other, then fold them — in shard order — through
+//! the study's real sinks (or into a merged optimizer report).
+//!
+//! Validation is deliberately loud. Every failure mode of a scatter plan
+//! gone wrong has a named error: payloads from a different spec/device,
+//! mixed shard counts, duplicate shard indices (overlapping plans),
+//! missing shards, disagreeing unit totals, and truncated streams (a
+//! payload whose footer never arrived, e.g. a worker killed mid-write).
+
+use std::io::BufRead;
+
+use crate::study::run as study_run;
+use crate::study::spec::ResolvedStudy;
+use crate::study::{RowSink, StudyOutcome, Value};
+use crate::{Error, Result};
+
+use super::payload::{self, ShardFooter, ShardHeader, ShardLine, ShardMode};
+use super::spec_fingerprint;
+
+/// One shard input: a label for error messages (file path or "worker k")
+/// plus its line stream.
+pub struct ShardInput {
+    pub label: String,
+    pub reader: Box<dyn BufRead>,
+}
+
+impl ShardInput {
+    pub fn new(label: &str, reader: Box<dyn BufRead>) -> ShardInput {
+        ShardInput { label: label.to_string(), reader }
+    }
+
+    pub fn from_file(path: &str) -> Result<ShardInput> {
+        let f = std::fs::File::open(path).map_err(|e| {
+            Error::Study(format!("cannot open shard payload {path:?}: {e}"))
+        })?;
+        Ok(ShardInput::new(path, Box::new(std::io::BufReader::new(f))))
+    }
+
+    pub fn from_bytes(label: &str, bytes: Vec<u8>) -> ShardInput {
+        ShardInput::new(label, Box::new(std::io::Cursor::new(bytes)))
+    }
+}
+
+struct ParsedShard {
+    label: String,
+    header: ShardHeader,
+    reader: Box<dyn BufRead>,
+    line_no: usize,
+}
+
+impl ParsedShard {
+    /// Next body/footer line (`None` at EOF).
+    fn next_line(&mut self) -> Result<Option<ShardLine>> {
+        let mut line = String::new();
+        loop {
+            line.clear();
+            let n = self.reader.read_line(&mut line)?;
+            if n == 0 {
+                return Ok(None);
+            }
+            self.line_no += 1;
+            let trimmed = line.trim();
+            if trimmed.is_empty() {
+                continue;
+            }
+            let what = format!("{} line {}", self.label, self.line_no);
+            return payload::parse_line(trimmed, &what).map(Some);
+        }
+    }
+}
+
+/// Read every header, validate the set, and order by shard index.
+fn open_shards(
+    inputs: Vec<ShardInput>,
+    expect_mode: ShardMode,
+    expect_fingerprint: &str,
+    expect_device: &str,
+    expect_units: Option<usize>,
+    spec_name: &str,
+) -> Result<Vec<ParsedShard>> {
+    if inputs.is_empty() {
+        return Err(Error::Study(
+            "shard merge: no payloads given (pass every worker's output file)"
+                .into(),
+        ));
+    }
+    let mut shards = Vec::with_capacity(inputs.len());
+    for input in inputs {
+        let ShardInput { label, mut reader } = input;
+        let mut first = String::new();
+        loop {
+            first.clear();
+            if reader.read_line(&mut first)? == 0 {
+                return Err(Error::Study(format!(
+                    "{label} is empty — not a shard payload"
+                )));
+            }
+            if !first.trim().is_empty() {
+                break;
+            }
+        }
+        let header = ShardHeader::parse_line(first.trim(), &label)?;
+        shards.push(ParsedShard { label, header, reader, line_no: 1 });
+    }
+
+    // -- step 1: the plan must be structurally coherent on its own ---------
+    // (mutual checks first, so a broken plan is named as such even when the
+    // payloads also fail the target checks below)
+    let first = shards[0].header.clone();
+    let n = first.n;
+    for s in &shards {
+        let h = &s.header;
+        if h.k >= h.n {
+            return Err(Error::Study(format!(
+                "{}: malformed shard {}/{} (k must be < n)",
+                s.label, h.k, h.n
+            )));
+        }
+        if h.n != n {
+            return Err(Error::Study(format!(
+                "{}: overlapping shard plans — payload is shard {}/{} but \
+                 other payloads use n = {n}; all shards must come from one \
+                 `--shard k/{n}` plan",
+                s.label, h.k, h.n
+            )));
+        }
+        if h.fingerprint != first.fingerprint || h.spec_name != first.spec_name
+        {
+            return Err(Error::Study(format!(
+                "{}: merging mismatched specs — payload comes from study \
+                 {:?} (fingerprint {}) but {} comes from {:?} (fingerprint \
+                 {}); rerun every worker from one spec file",
+                s.label,
+                h.spec_name,
+                h.fingerprint,
+                shards[0].label,
+                first.spec_name,
+                first.fingerprint
+            )));
+        }
+        if h.units != first.units {
+            return Err(Error::Study(format!(
+                "{}: shard disagrees on the unit total ({} vs {}) — \
+                 payloads come from different resolutions of the spec",
+                s.label, h.units, first.units
+            )));
+        }
+        if h.mode != first.mode {
+            return Err(Error::Study(format!(
+                "{}: payload mode {:?} differs from {}'s {:?} — study and \
+                 optimize shards cannot merge together",
+                s.label,
+                h.mode.as_str(),
+                shards[0].label,
+                first.mode.as_str()
+            )));
+        }
+    }
+    shards.sort_by_key(|s| s.header.k);
+    if let Some(w) = shards.windows(2).find(|w| w[0].header.k == w[1].header.k)
+    {
+        return Err(Error::Study(format!(
+            "overlapping shard plans: shard {}/{n} appears more than once \
+             ({} and {})",
+            w[0].header.k, w[0].label, w[1].label
+        )));
+    }
+    if shards.len() != n {
+        let have: Vec<usize> = shards.iter().map(|s| s.header.k).collect();
+        let missing: Vec<String> = (0..n)
+            .filter(|k| !have.contains(k))
+            .map(|k| format!("{k}/{n}"))
+            .collect();
+        return Err(Error::Study(format!(
+            "incomplete shard set: got {} of {n} payloads, missing {}",
+            shards.len(),
+            missing.join(", ")
+        )));
+    }
+
+    // -- step 2: the (coherent) plan must match the merge target -----------
+    if first.mode != expect_mode {
+        return Err(Error::Study(format!(
+            "{}: payload mode is {:?} but this merge expects {:?} (use \
+             --optimize for optimizer shards, omit it for study shards)",
+            shards[0].label,
+            first.mode.as_str(),
+            expect_mode.as_str()
+        )));
+    }
+    if first.fingerprint != expect_fingerprint || first.spec_name != spec_name
+    {
+        return Err(Error::Study(format!(
+            "{}: merging mismatched specs — payload was produced from study \
+             {:?} (fingerprint {}), but the merge target is {:?} \
+             (fingerprint {expect_fingerprint}); rerun the workers from the \
+             same spec file",
+            shards[0].label, first.spec_name, first.fingerprint, spec_name
+        )));
+    }
+    if first.device != expect_device {
+        return Err(Error::Study(format!(
+            "{}: merging mismatched specs — payload ran on device {:?}, \
+             merge target resolves to {:?} (pass the same --device)",
+            shards[0].label, first.device, expect_device
+        )));
+    }
+    if let Some(want) = expect_units {
+        if first.units != want {
+            return Err(Error::Study(format!(
+                "shard merge: payloads partition {} units but the spec \
+                 resolves to {want} here — device or spec drift between \
+                 scatter and gather",
+                first.units
+            )));
+        }
+    }
+    Ok(shards)
+}
+
+/// Merge study-mode shard payloads through `sinks`, reproducing
+/// single-process `run_study` output bit-for-bit. The spec decides the
+/// mode: no `group_by` ⇒ rows concatenate in shard order; otherwise the
+/// serialized partial aggregates fold in shard order and emit once.
+pub fn merge_study(
+    resolved: &ResolvedStudy,
+    inputs: Vec<ShardInput>,
+    sinks: &mut [&mut dyn RowSink],
+) -> Result<StudyOutcome> {
+    let (out_names, mut pl) = study_run::bind_study(resolved)?;
+    let expect_mode = if resolved.spec.group_by.is_empty() {
+        ShardMode::Rows
+    } else {
+        ShardMode::Groups
+    };
+    let mut shards = open_shards(
+        inputs,
+        expect_mode,
+        &spec_fingerprint(&resolved.spec),
+        &resolved.device.name,
+        Some(resolved.total_points()),
+        &resolved.spec.name,
+    )?;
+
+    for s in &shards {
+        if s.header.columns != out_names {
+            return Err(Error::Study(format!(
+                "{}: payload columns {:?} differ from the spec's {:?} — \
+                 merging mismatched specs",
+                s.label, s.header.columns, out_names
+            )));
+        }
+    }
+
+    for s in sinks.iter_mut() {
+        s.begin(&out_names)?;
+    }
+
+    let mut outcome = StudyOutcome::default();
+    let mut agg = pl.agg.as_mut();
+    for shard in &mut shards {
+        let mut footer: Option<ShardFooter> = None;
+        let mut body_rows = 0usize;
+        while let Some(line) = shard.next_line()? {
+            match line {
+                ShardLine::Row(row) => {
+                    if footer.is_some() || expect_mode != ShardMode::Rows {
+                        return Err(Error::Study(format!(
+                            "{}: unexpected row line",
+                            shard.label
+                        )));
+                    }
+                    if row.len() != out_names.len() {
+                        return Err(Error::Study(format!(
+                            "{}: corrupted row line — {} cells where the \
+                             spec emits {} columns",
+                            shard.label,
+                            row.len(),
+                            out_names.len()
+                        )));
+                    }
+                    body_rows += 1;
+                    for s in sinks.iter_mut() {
+                        s.row(&row)?;
+                    }
+                }
+                ShardLine::Group { keys, states } => {
+                    if footer.is_some() || expect_mode != ShardMode::Groups {
+                        return Err(Error::Study(format!(
+                            "{}: unexpected group line",
+                            shard.label
+                        )));
+                    }
+                    let agg =
+                        agg.as_mut().expect("group mode binds an aggregator");
+                    // corrupted-but-parseable payloads get named errors,
+                    // not panics deeper in the fold
+                    if states.len() != agg.aggs.len() {
+                        return Err(Error::Study(format!(
+                            "{}: corrupted group line — {} aggregation \
+                             states where the spec defines {}",
+                            shard.label,
+                            states.len(),
+                            agg.aggs.len()
+                        )));
+                    }
+                    if let Some(a) = agg
+                        .aggs
+                        .iter()
+                        .zip(&states)
+                        .find(|(a, st)| a.track_values != st.values.is_some())
+                    {
+                        return Err(Error::Study(format!(
+                            "{}: corrupted group line — aggregation {:?} \
+                             {} its percentile value multiset",
+                            shard.label,
+                            a.0.metric_name,
+                            if a.0.track_values {
+                                "is missing"
+                            } else {
+                                "unexpectedly carries"
+                            }
+                        )));
+                    }
+                    if keys.len() != agg.key_idx.len() {
+                        return Err(Error::Study(format!(
+                            "{}: corrupted group line — {} group keys where \
+                             the spec groups by {}",
+                            shard.label,
+                            keys.len(),
+                            agg.key_idx.len()
+                        )));
+                    }
+                    agg.merge_group(keys, states);
+                }
+                ShardLine::End(f) => {
+                    footer = Some(f);
+                }
+            }
+        }
+        let Some(f) = footer else {
+            return Err(Error::Study(format!(
+                "{}: truncated shard payload (no end marker) — the worker \
+                 died mid-stream; rerun shard {}/{}",
+                shard.label, shard.header.k, shard.header.n
+            )));
+        };
+        if expect_mode == ShardMode::Rows && body_rows != f.rows_matched {
+            return Err(Error::Study(format!(
+                "{}: payload carries {body_rows} rows but its footer counts \
+                 {} — truncated or corrupted stream",
+                shard.label, f.rows_matched
+            )));
+        }
+        outcome.points_evaluated += f.points_evaluated;
+        outcome.rows_matched += f.rows_matched;
+    }
+
+    if let Some(agg) = pl.agg.take() {
+        outcome.groups_emitted = agg.emit(sinks)?;
+    }
+    for s in sinks.iter_mut() {
+        if let Some(text) = s.finish()? {
+            outcome.renders.push(text);
+        }
+    }
+    Ok(outcome)
+}
+
+/// A merged optimizer scatter/gather: the concatenated winner rows plus
+/// the summed search counters — field-for-field what the unsharded
+/// [`crate::optimizer::optimize_study`] report carries.
+#[derive(Debug, Clone)]
+pub struct MergedOptimize {
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<Value>>,
+    pub candidates: usize,
+    pub evaluated: usize,
+    pub infeasible: usize,
+    pub groups: usize,
+}
+
+impl MergedOptimize {
+    pub fn pruned_fraction(&self) -> f64 {
+        if self.candidates == 0 {
+            0.0
+        } else {
+            1.0 - self.evaluated as f64 / self.candidates as f64
+        }
+    }
+}
+
+/// Merge optimize-mode shard payloads: group-range winner rows
+/// concatenate in shard order.
+pub fn merge_optimize(
+    resolved: &ResolvedStudy,
+    inputs: Vec<ShardInput>,
+) -> Result<MergedOptimize> {
+    let mut shards = open_shards(
+        inputs,
+        ShardMode::Optimize,
+        &spec_fingerprint(&resolved.spec),
+        &resolved.device.name,
+        None, // units = total groups; only workers enumerate them
+        &resolved.spec.name,
+    )?;
+    let columns = shards[0].header.columns.clone();
+    for s in &shards {
+        if s.header.columns != columns {
+            return Err(Error::Study(format!(
+                "{}: payload columns differ across shards — merging \
+                 mismatched searches",
+                s.label
+            )));
+        }
+    }
+    let mut merged = MergedOptimize {
+        columns,
+        rows: Vec::new(),
+        candidates: 0,
+        evaluated: 0,
+        infeasible: 0,
+        groups: 0,
+    };
+    for shard in &mut shards {
+        let mut footer: Option<ShardFooter> = None;
+        let mut body_rows = 0usize;
+        while let Some(line) = shard.next_line()? {
+            match line {
+                ShardLine::Row(row) => {
+                    body_rows += 1;
+                    merged.rows.push(row);
+                }
+                ShardLine::Group { .. } => {
+                    return Err(Error::Study(format!(
+                        "{}: unexpected group line in an optimize payload",
+                        shard.label
+                    )));
+                }
+                ShardLine::End(f) => footer = Some(f),
+            }
+        }
+        let Some(f) = footer else {
+            return Err(Error::Study(format!(
+                "{}: truncated shard payload (no end marker) — rerun shard \
+                 {}/{}",
+                shard.label, shard.header.k, shard.header.n
+            )));
+        };
+        if body_rows != f.rows_matched {
+            return Err(Error::Study(format!(
+                "{}: payload carries {body_rows} winner rows but its footer \
+                 counts {}",
+                shard.label, f.rows_matched
+            )));
+        }
+        merged.candidates += f.candidates;
+        merged.evaluated += f.evaluated;
+        merged.infeasible += f.infeasible;
+        merged.groups += body_rows;
+    }
+    if merged.groups != shards[0].header.units {
+        return Err(Error::Study(format!(
+            "shard merge: {} winner rows gathered but the search space has \
+             {} groups — a shard ran against a different grid",
+            merged.groups,
+            shards[0].header.units
+        )));
+    }
+    Ok(merged)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::catalog;
+    use crate::shard::{run_worker, ShardId};
+    use crate::study::{RunOptions, StudySpec, VecSink};
+
+    fn resolve(text: &str) -> ResolvedStudy {
+        StudySpec::parse(text)
+            .unwrap()
+            .resolve(&catalog::mi210())
+            .unwrap()
+    }
+
+    fn tiny() -> ResolvedStudy {
+        resolve(r#"{"name":"tiny","axes":{"hidden":[1024],"tp":[1,2,4,8]}}"#)
+    }
+
+    fn payload(resolved: &ResolvedStudy, k: usize, n: usize) -> Vec<u8> {
+        let mut buf = Vec::new();
+        run_worker(
+            resolved,
+            ShardId::new(k, n).unwrap(),
+            false,
+            RunOptions { threads: 1, chunk: 0 },
+            &mut buf,
+        )
+        .unwrap();
+        buf
+    }
+
+    fn merge_err(resolved: &ResolvedStudy, payloads: Vec<(String, Vec<u8>)>) -> String {
+        let inputs = payloads
+            .into_iter()
+            .map(|(label, bytes)| ShardInput::from_bytes(&label, bytes))
+            .collect();
+        let mut sink = VecSink::new();
+        let mut sinks: Vec<&mut dyn RowSink> = vec![&mut sink];
+        merge_study(resolved, inputs, &mut sinks)
+            .expect_err("merge should fail")
+            .to_string()
+    }
+
+    #[test]
+    fn duplicate_shard_is_an_overlapping_plan() {
+        let r = tiny();
+        let err = merge_err(
+            &r,
+            vec![
+                ("a".into(), payload(&r, 0, 2)),
+                ("b".into(), payload(&r, 0, 2)),
+            ],
+        );
+        assert!(err.contains("overlapping shard plans"), "{err}");
+        assert!(err.contains("0/2"), "{err}");
+    }
+
+    #[test]
+    fn mixed_shard_counts_are_an_overlapping_plan() {
+        let r = tiny();
+        let err = merge_err(
+            &r,
+            vec![
+                ("a".into(), payload(&r, 0, 2)),
+                ("b".into(), payload(&r, 1, 3)),
+            ],
+        );
+        assert!(err.contains("overlapping shard plans"), "{err}");
+    }
+
+    #[test]
+    fn missing_shards_are_named() {
+        let r = tiny();
+        let err = merge_err(&r, vec![("a".into(), payload(&r, 1, 4))]);
+        assert!(err.contains("incomplete shard set"), "{err}");
+        assert!(err.contains("0/4"), "{err}");
+        assert!(err.contains("2/4"), "{err}");
+        assert!(err.contains("3/4"), "{err}");
+    }
+
+    #[test]
+    fn mismatched_spec_is_refused() {
+        let r = tiny();
+        let other = resolve(
+            r#"{"name":"tiny","axes":{"hidden":[1024],"tp":[1,2,4,16]}}"#,
+        );
+        let err = merge_err(
+            &r,
+            vec![
+                ("a".into(), payload(&r, 0, 2)),
+                ("b".into(), payload(&other, 1, 2)),
+            ],
+        );
+        assert!(err.contains("merging mismatched specs"), "{err}");
+    }
+
+    #[test]
+    fn truncated_payload_is_detected() {
+        let r = tiny();
+        let mut cut = payload(&r, 1, 2);
+        // chop the footer line off
+        let keep = {
+            let text = String::from_utf8(cut.clone()).unwrap();
+            let without_footer: Vec<&str> = text
+                .lines()
+                .filter(|l| !l.contains("\"end\""))
+                .collect();
+            without_footer.join("\n") + "\n"
+        };
+        cut = keep.into_bytes();
+        let err = merge_err(
+            &r,
+            vec![("a".into(), payload(&r, 0, 2)), ("b".into(), cut)],
+        );
+        assert!(err.contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn study_payload_refused_by_optimize_merge_and_vice_versa() {
+        let r = tiny();
+        let inputs =
+            vec![ShardInput::from_bytes("a", payload(&r, 0, 1))];
+        let err = merge_optimize(&r, inputs).unwrap_err().to_string();
+        assert!(err.contains("expects"), "{err}");
+    }
+
+    #[test]
+    fn garbage_file_is_not_a_payload() {
+        let r = tiny();
+        let err = merge_err(
+            &r,
+            vec![("notes.txt".into(), b"hello,world\n1,2\n".to_vec())],
+        );
+        assert!(err.contains("not a commscale shard payload"), "{err}");
+    }
+}

@@ -1,0 +1,340 @@
+//! Distributed scatter/gather execution for million-point studies.
+//!
+//! A [`crate::study::StudySpec`] (or a `commscale optimize` search) is
+//! partitioned into `n` deterministic shards, each runnable in its own
+//! process or on its own host, and the merged result is **bit-identical**
+//! to single-process execution — rows, group-by aggregates (including
+//! exact means via [`crate::util::stats::ExactSum`] and exact
+//! percentiles), argmin tie-breaks, and every sink, the `{"kind":
+//! "spec"}` seeding sink included.
+//!
+//! Partitioning rides the seams earlier PRs left:
+//!
+//! * **Row-level studies** split the *global realized-point stream* —
+//!   hardware-major, then segments, then the grid builder's axis nesting
+//!   ([`crate::sweep::GridBuilder::model_configs_range`]) — into `n`
+//!   contiguous index windows ([`unit_range`]). Concatenating worker
+//!   outputs in shard order reproduces the exact stream order.
+//! * **Group-by studies** run the same point windows but ship
+//!   serialized *partial aggregates* instead of rows; the coordinator
+//!   folds them in shard order ([`crate::study::run::AggState::merge`]),
+//!   which preserves first-seen group order and first-row tie-breaks.
+//! * **Optimizer searches** split the *group-key space*
+//!   ([`crate::optimizer::optimize_study_shard`]): groups are
+//!   independent, so winner rows concatenate.
+//!
+//! Three CLI surfaces (`commscale shard …`): `run -n N` spawns local
+//! worker processes and merges (the single-host scatter/gather); `worker
+//! --shard k/n` + `merge` are the multi-host path — run workers
+//! anywhere, copy their payload files back, merge once. `plan -n N`
+//! prints that recipe. The wire format is [`payload`]; the merge
+//! validation and fold live in [`merge`]. DESIGN.md §12 documents the
+//! partitioning seams, the mergeable-aggregate algebra, and the
+//! determinism argument.
+
+pub mod merge;
+pub mod payload;
+
+pub use merge::{merge_optimize, merge_study, MergedOptimize, ShardInput};
+pub use payload::{ShardFooter, ShardHeader, ShardMode};
+
+use std::io::Write;
+
+use crate::optimizer::{self, OptimizeOptions};
+use crate::study::spec::ResolvedStudy;
+use crate::study::{run as study_run, RowSink, RunOptions, StudySpec, Value};
+use crate::{Error, Result};
+
+/// One shard's coordinates: `k` of `n`, 0-indexed (`--shard k/n`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardId {
+    pub k: usize,
+    pub n: usize,
+}
+
+impl ShardId {
+    /// Validated constructor: `n >= 1`, `k < n`.
+    pub fn new(k: usize, n: usize) -> Result<ShardId> {
+        if n == 0 {
+            return Err(Error::Study(format!(
+                "shard {k}/{n} is malformed: the shard count n must be >= 1 \
+                 (a 0-shard plan executes nothing)"
+            )));
+        }
+        if k >= n {
+            return Err(Error::Study(format!(
+                "shard {k}/{n} is malformed: shards are 0-indexed, so the \
+                 index k must satisfy k < n (valid: 0/{n} .. {}/{n})",
+                n - 1
+            )));
+        }
+        Ok(ShardId { k, n })
+    }
+
+    /// Parse the CLI form `"k/n"`.
+    pub fn parse(s: &str) -> Result<ShardId> {
+        let parts: Option<(usize, usize)> = s.split_once('/').and_then(
+            |(k, n)| Some((k.parse().ok()?, n.parse().ok()?)),
+        );
+        match parts {
+            Some((k, n)) => ShardId::new(k, n),
+            None => Err(Error::Study(format!(
+                "--shard wants k/n with integer k and n (e.g. 0/4), got {s:?}"
+            ))),
+        }
+    }
+}
+
+impl std::fmt::Display for ShardId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}/{}", self.k, self.n)
+    }
+}
+
+/// Shard `k`'s contiguous window of `total` units: `[k·T/n, (k+1)·T/n)`.
+/// The windows tile `[0, total)` exactly and are a pure function of
+/// `(total, k, n)` — every worker and the coordinator compute the same
+/// partition independently.
+pub fn unit_range(total: usize, id: ShardId) -> (usize, usize) {
+    (id.k * total / id.n, (id.k + 1) * total / id.n)
+}
+
+/// FNV-1a over the canonical (sorted-key, compact) spec JSON. Two specs
+/// fingerprint equal iff they serialize identically — the identity the
+/// merge uses to refuse payloads from a different study.
+pub fn spec_fingerprint(spec: &StudySpec) -> String {
+    let text = spec.to_json().to_string();
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in text.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    format!("{h:016x}")
+}
+
+/// What a worker did — echoed on stderr by the CLI.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkerSummary {
+    pub mode: ShardMode,
+    pub range: (usize, usize),
+    pub units: usize,
+    pub footer: ShardFooter,
+}
+
+/// Streaming [`RowSink`] that writes a shard payload: the header on
+/// `begin`, one `{"r": …}` line per row. The footer is the worker's job
+/// (it knows the outcome counters only after the stream ends).
+struct PayloadRowSink<'a> {
+    header: ShardHeader,
+    out: &'a mut dyn Write,
+}
+
+impl RowSink for PayloadRowSink<'_> {
+    fn begin(&mut self, columns: &[String]) -> Result<()> {
+        self.header.columns = columns.to_vec();
+        writeln!(self.out, "{}", self.header.to_line())?;
+        Ok(())
+    }
+
+    fn row(&mut self, row: &[Value]) -> Result<()> {
+        writeln!(self.out, "{}", payload::row_line(row))?;
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<Option<String>> {
+        Ok(None)
+    }
+}
+
+fn base_header(
+    resolved: &ResolvedStudy,
+    id: ShardId,
+    mode: ShardMode,
+    units: usize,
+) -> ShardHeader {
+    ShardHeader {
+        spec_name: resolved.spec.name.clone(),
+        fingerprint: spec_fingerprint(&resolved.spec),
+        device: resolved.device.name.clone(),
+        mode,
+        k: id.k,
+        n: id.n,
+        units,
+        columns: Vec::new(),
+    }
+}
+
+/// Execute one shard of a resolved study (or, with `optimize`, of its
+/// argmin search) and stream the payload to `out`. This is the body of
+/// `commscale shard worker`; the property tests drive it in-process.
+pub fn run_worker(
+    resolved: &ResolvedStudy,
+    id: ShardId,
+    optimize: bool,
+    opts: RunOptions,
+    out: &mut dyn Write,
+) -> Result<WorkerSummary> {
+    if optimize {
+        return run_optimize_worker(resolved, id, opts, out);
+    }
+    let units = resolved.total_points();
+    let range = unit_range(units, id);
+    let mode = if resolved.spec.group_by.is_empty() {
+        ShardMode::Rows
+    } else {
+        ShardMode::Groups
+    };
+
+    let outcome = match mode {
+        ShardMode::Rows => {
+            // rows stream straight into the payload as they are produced
+            let mut sink = PayloadRowSink {
+                header: base_header(resolved, id, mode, units),
+                out: &mut *out,
+            };
+            let mut sinks: Vec<&mut dyn RowSink> = vec![&mut sink];
+            let (_, outcome, agg) =
+                study_run::run_study_shard(resolved, opts, range, &mut sinks)?;
+            debug_assert!(agg.is_none());
+            outcome
+        }
+        _ => {
+            // group mode ships partial-aggregate state, not rows
+            let mut sinks: Vec<&mut dyn RowSink> = Vec::new();
+            let (columns, outcome, agg) =
+                study_run::run_study_shard(resolved, opts, range, &mut sinks)?;
+            let mut header = base_header(resolved, id, mode, units);
+            header.columns = columns;
+            writeln!(out, "{}", header.to_line())?;
+            let agg = agg.expect("group-by study builds an aggregator");
+            for g in &agg.groups {
+                writeln!(out, "{}", payload::group_line(&g.keys, &g.states))?;
+            }
+            outcome
+        }
+    };
+
+    let footer = ShardFooter {
+        points_evaluated: outcome.points_evaluated,
+        rows_matched: outcome.rows_matched,
+        ..ShardFooter::default()
+    };
+    writeln!(out, "{}", payload::end_line(&footer))?;
+    out.flush()?;
+    Ok(WorkerSummary { mode, range, units, footer })
+}
+
+fn run_optimize_worker(
+    resolved: &ResolvedStudy,
+    id: ShardId,
+    opts: RunOptions,
+    out: &mut dyn Write,
+) -> Result<WorkerSummary> {
+    let search_opts = OptimizeOptions { threads: opts.threads, memory_cap: None };
+    let report = optimizer::optimize_study_shard(
+        resolved,
+        &search_opts,
+        Some((id.k, id.n)),
+    )?;
+    let units = report.total_groups;
+    let mut header = base_header(resolved, id, ShardMode::Optimize, units);
+    header.columns = report.columns.clone();
+    writeln!(out, "{}", header.to_line())?;
+    for row in &report.rows {
+        writeln!(out, "{}", payload::row_line(row))?;
+    }
+    let footer = ShardFooter {
+        points_evaluated: report.evaluated,
+        rows_matched: report.rows.len(),
+        candidates: report.candidates,
+        evaluated: report.evaluated,
+        infeasible: report.infeasible,
+    };
+    writeln!(out, "{}", payload::end_line(&footer))?;
+    out.flush()?;
+    Ok(WorkerSummary {
+        mode: ShardMode::Optimize,
+        range: unit_range(units, id),
+        units,
+        footer,
+    })
+}
+
+/// Render the multi-host recipe for a plan: the `n` worker commands plus
+/// the final merge (printed by `commscale shard plan`).
+pub fn plan_text(target: &str, n: usize, optimize: bool, device: &str) -> String {
+    use std::fmt::Write as _;
+    let opt = if optimize { " --optimize" } else { "" };
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "# scatter: run each worker on any host (same binary, same spec)"
+    );
+    let mut files = Vec::new();
+    for k in 0..n {
+        let file = format!("shard_{k}_of_{n}.jsonl");
+        let _ = writeln!(
+            out,
+            "commscale shard worker --shard {k}/{n} {target}{opt} \
+             --device {device} --out {file}"
+        );
+        files.push(file);
+    }
+    let _ = writeln!(out, "# gather: copy the payload files to one host, then");
+    let _ = writeln!(
+        out,
+        "commscale shard merge {target}{opt} --device {device} {}",
+        files.join(" ")
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_id_validation() {
+        assert_eq!(ShardId::parse("0/4").unwrap(), ShardId { k: 0, n: 4 });
+        assert_eq!(ShardId::parse("3/4").unwrap(), ShardId { k: 3, n: 4 });
+        for (text, needle) in [
+            ("0/0", "n must be >= 1"),
+            ("4/4", "k < n"),
+            ("9/2", "k < n"),
+            ("banana", "k/n"),
+            ("1/", "k/n"),
+            ("/2", "k/n"),
+            ("-1/2", "k/n"),
+        ] {
+            let err = ShardId::parse(text).unwrap_err().to_string();
+            assert!(err.contains(needle), "{text}: {err}");
+        }
+    }
+
+    #[test]
+    fn unit_ranges_tile_exactly() {
+        for total in [0usize, 1, 7, 100, 103_680] {
+            for n in [1usize, 2, 3, 5, 8, 64] {
+                let mut next = 0usize;
+                for k in 0..n {
+                    let (lo, hi) = unit_range(total, ShardId { k, n });
+                    assert_eq!(lo, next, "total {total} n {n} k {k}");
+                    assert!(hi >= lo);
+                    next = hi;
+                }
+                assert_eq!(next, total);
+            }
+        }
+    }
+
+    #[test]
+    fn fingerprint_tracks_spec_identity() {
+        let a = StudySpec::parse(r#"{"name":"x","axes":{"tp":[1,8]}}"#).unwrap();
+        let same =
+            StudySpec::parse(r#"{"axes":{"tp":[1,8]},"name":"x"}"#).unwrap();
+        let other =
+            StudySpec::parse(r#"{"name":"x","axes":{"tp":[1,16]}}"#).unwrap();
+        assert_eq!(spec_fingerprint(&a), spec_fingerprint(&same));
+        assert_ne!(spec_fingerprint(&a), spec_fingerprint(&other));
+    }
+}

@@ -1,0 +1,451 @@
+//! The shard wire format: JSON-lines with **exact** f64 round-tripping.
+//!
+//! A worker's stream is one `{"shard": …}` header line, a body of
+//! `{"r": …}` row lines (rows/optimize modes) or `{"g": …}` group lines
+//! (groups mode), and one `{"end": …}` footer — the footer doubles as a
+//! truncation check, since a killed worker cannot have written it.
+//!
+//! Bit-exactness rules: finite numbers ride as plain JSON numbers (the
+//! writer emits Rust's shortest round-trip form and the reader parses via
+//! `str::parse::<f64>`, which restores the exact bits); the values JSON
+//! cannot carry — NaN, ±inf, and the sign of `-0.0` — are escaped as
+//! `{"bits": "<16 hex digits>"}`. Aggregate state (Shewchuk partials,
+//! ±inf/NaN counters, min/max sentinels, percentile value multisets)
+//! always goes through the same encoding, so a merged accumulator is
+//! rebuilt from exactly the bits the worker held.
+
+use crate::study::run::AggState;
+use crate::study::Value;
+use crate::util::stats::ExactSum;
+use crate::util::Json;
+use crate::{Error, Result};
+
+/// What a payload's body contains.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardMode {
+    /// Final output rows of a point-mode study (no `group_by`).
+    Rows,
+    /// Serialized partial-aggregate state of a group-by study.
+    Groups,
+    /// Final argmin rows of a `commscale optimize` group-range shard.
+    Optimize,
+}
+
+impl ShardMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ShardMode::Rows => "rows",
+            ShardMode::Groups => "groups",
+            ShardMode::Optimize => "optimize",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<ShardMode> {
+        match s {
+            "rows" => Ok(ShardMode::Rows),
+            "groups" => Ok(ShardMode::Groups),
+            "optimize" => Ok(ShardMode::Optimize),
+            other => Err(Error::Study(format!(
+                "shard payload: unknown mode {other:?}"
+            ))),
+        }
+    }
+}
+
+/// The identity line every payload leads with. Merging refuses payloads
+/// whose identity does not match the target spec (fingerprint, device,
+/// columns) or each other (n, units, mode) — the "merging mismatched
+/// specs" failure class.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardHeader {
+    pub spec_name: String,
+    /// FNV-1a of the canonical spec JSON (see `shard::spec_fingerprint`).
+    pub fingerprint: String,
+    /// Resolved device name — the one axis the spec may leave to the CLI.
+    pub device: String,
+    pub mode: ShardMode,
+    pub k: usize,
+    pub n: usize,
+    /// Total partitionable units (scenario points, source rows, or
+    /// optimizer groups) — all shards of one plan must agree.
+    pub units: usize,
+    pub columns: Vec<String>,
+}
+
+/// The closing counters; `candidates`/`evaluated`/`infeasible` are
+/// meaningful in optimize mode only.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ShardFooter {
+    pub points_evaluated: usize,
+    pub rows_matched: usize,
+    pub candidates: usize,
+    pub evaluated: usize,
+    pub infeasible: usize,
+}
+
+/// One parsed body/footer line.
+#[derive(Debug)]
+pub(crate) enum ShardLine {
+    Row(Vec<Value>),
+    Group { keys: Vec<Value>, states: Vec<AggState> },
+    End(ShardFooter),
+}
+
+// ---------------------------------------------------------------------------
+// exact scalar encoding
+// ---------------------------------------------------------------------------
+
+pub(crate) fn enc_f64(x: f64) -> Json {
+    if x.is_finite() && !(x == 0.0 && x.is_sign_negative()) {
+        Json::num(x)
+    } else {
+        Json::obj(vec![("bits", Json::str(&format!("{:016x}", x.to_bits())))])
+    }
+}
+
+pub(crate) fn dec_f64(v: &Json, what: &str) -> Result<f64> {
+    if let Some(n) = v.as_f64() {
+        return Ok(n);
+    }
+    if let Some(b) = v.get("bits").and_then(Json::as_str) {
+        return u64::from_str_radix(b, 16).map(f64::from_bits).map_err(|e| {
+            Error::Study(format!("shard payload: bad {what} bits {b:?}: {e}"))
+        });
+    }
+    Err(Error::Study(format!(
+        "shard payload: {what} is neither a number nor {{\"bits\"}}: {v:?}"
+    )))
+}
+
+pub(crate) fn enc_value(v: &Value) -> Json {
+    match v {
+        Value::Str(s) => Json::str(s),
+        Value::Bool(b) => Json::Bool(*b),
+        Value::Num(x) => enc_f64(*x),
+    }
+}
+
+pub(crate) fn dec_value(v: &Json, what: &str) -> Result<Value> {
+    match v {
+        Json::Str(s) => Ok(Value::Str(s.clone())),
+        Json::Bool(b) => Ok(Value::Bool(*b)),
+        _ => dec_f64(v, what).map(Value::Num),
+    }
+}
+
+fn enc_values(vs: &[Value]) -> Json {
+    Json::arr(vs.iter().map(enc_value))
+}
+
+fn dec_values(v: &Json, what: &str) -> Result<Vec<Value>> {
+    let arr = v.as_arr().ok_or_else(|| {
+        Error::Study(format!("shard payload: {what} is not an array"))
+    })?;
+    arr.iter().map(|x| dec_value(x, what)).collect()
+}
+
+fn dec_f64s(v: &Json, what: &str) -> Result<Vec<f64>> {
+    let arr = v.as_arr().ok_or_else(|| {
+        Error::Study(format!("shard payload: {what} is not an array"))
+    })?;
+    arr.iter().map(|x| dec_f64(x, what)).collect()
+}
+
+// ---------------------------------------------------------------------------
+// aggregate state
+// ---------------------------------------------------------------------------
+
+fn enc_state(st: &AggState) -> Json {
+    let (partials, pos_inf, neg_inf, nan) = st.sum.raw_parts();
+    let mut pairs = vec![
+        ("count", Json::num(st.count as f64)),
+        ("sum", Json::arr(partials.iter().map(|&x| enc_f64(x)))),
+        (
+            "nonfinite",
+            Json::arr(
+                [pos_inf, neg_inf, nan]
+                    .iter()
+                    .map(|&c| Json::num(c as f64)),
+            ),
+        ),
+        ("min", enc_f64(st.min)),
+        ("max", enc_f64(st.max)),
+        ("min_args", enc_values(&st.min_args)),
+        ("max_args", enc_values(&st.max_args)),
+    ];
+    if let Some(vals) = &st.values {
+        pairs.push(("values", Json::arr(vals.iter().map(|&x| enc_f64(x)))));
+    }
+    Json::obj(pairs)
+}
+
+fn dec_state(v: &Json) -> Result<AggState> {
+    let count = v.u64_field("count").map_err(|e| {
+        Error::Study(format!("shard payload: group state: {e}"))
+    })?;
+    let partials = dec_f64s(v.req("sum")?, "sum partial")?;
+    let nonfinite = dec_f64s(v.req("nonfinite")?, "nonfinite counter")?;
+    if nonfinite.len() != 3 {
+        return Err(Error::Study(
+            "shard payload: nonfinite counters need 3 entries".into(),
+        ));
+    }
+    let sum = ExactSum::from_raw(
+        &partials,
+        nonfinite[0] as u64,
+        nonfinite[1] as u64,
+        nonfinite[2] as u64,
+    );
+    Ok(AggState {
+        count,
+        sum,
+        min: dec_f64(v.req("min")?, "min")?,
+        max: dec_f64(v.req("max")?, "max")?,
+        min_args: dec_values(v.req("min_args")?, "min_args")?,
+        max_args: dec_values(v.req("max_args")?, "max_args")?,
+        values: match v.get("values") {
+            Some(x) => Some(dec_f64s(x, "percentile value")?),
+            None => None,
+        },
+    })
+}
+
+// ---------------------------------------------------------------------------
+// lines
+// ---------------------------------------------------------------------------
+
+impl ShardHeader {
+    pub fn to_line(&self) -> String {
+        Json::obj(vec![(
+            "shard",
+            Json::obj(vec![
+                ("spec", Json::str(&self.spec_name)),
+                ("fingerprint", Json::str(&self.fingerprint)),
+                ("device", Json::str(&self.device)),
+                ("mode", Json::str(self.mode.as_str())),
+                ("k", Json::num(self.k as f64)),
+                ("n", Json::num(self.n as f64)),
+                ("units", Json::num(self.units as f64)),
+                (
+                    "columns",
+                    Json::arr(self.columns.iter().map(|c| Json::str(c))),
+                ),
+            ]),
+        )])
+        .to_string()
+    }
+
+    /// Parse a payload's first line; `what` names the source for errors.
+    pub fn parse_line(line: &str, what: &str) -> Result<ShardHeader> {
+        let bad = |detail: &str| {
+            Error::Study(format!(
+                "{what} is not a commscale shard payload ({detail}); produce \
+                 shards with `commscale shard worker --shard k/n <spec>`"
+            ))
+        };
+        let v = Json::parse(line).map_err(|_| bad("first line is not JSON"))?;
+        let h = v.get("shard").ok_or_else(|| bad("missing shard header"))?;
+        let columns = h
+            .get("columns")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| bad("header lacks columns"))?
+            .iter()
+            .map(|c| {
+                c.as_str()
+                    .map(|s| s.to_string())
+                    .ok_or_else(|| bad("non-string column"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ShardHeader {
+            spec_name: h
+                .str_field("spec")
+                .map_err(|_| bad("header lacks spec"))?
+                .to_string(),
+            fingerprint: h
+                .str_field("fingerprint")
+                .map_err(|_| bad("header lacks fingerprint"))?
+                .to_string(),
+            device: h
+                .str_field("device")
+                .map_err(|_| bad("header lacks device"))?
+                .to_string(),
+            mode: ShardMode::parse(
+                h.str_field("mode").map_err(|_| bad("header lacks mode"))?,
+            )?,
+            k: h.u64_field("k").map_err(|_| bad("header lacks k"))? as usize,
+            n: h.u64_field("n").map_err(|_| bad("header lacks n"))? as usize,
+            units: h.u64_field("units").map_err(|_| bad("header lacks units"))?
+                as usize,
+            columns,
+        })
+    }
+}
+
+pub(crate) fn row_line(row: &[Value]) -> String {
+    Json::obj(vec![("r", enc_values(row))]).to_string()
+}
+
+pub(crate) fn group_line(keys: &[Value], states: &[AggState]) -> String {
+    Json::obj(vec![(
+        "g",
+        Json::obj(vec![
+            ("keys", enc_values(keys)),
+            ("states", Json::arr(states.iter().map(enc_state))),
+        ]),
+    )])
+    .to_string()
+}
+
+pub(crate) fn end_line(f: &ShardFooter) -> String {
+    Json::obj(vec![(
+        "end",
+        Json::obj(vec![
+            ("points", Json::num(f.points_evaluated as f64)),
+            ("matched", Json::num(f.rows_matched as f64)),
+            ("candidates", Json::num(f.candidates as f64)),
+            ("evaluated", Json::num(f.evaluated as f64)),
+            ("infeasible", Json::num(f.infeasible as f64)),
+        ]),
+    )])
+    .to_string()
+}
+
+/// Parse one body/footer line.
+pub(crate) fn parse_line(line: &str, what: &str) -> Result<ShardLine> {
+    let v = Json::parse(line).map_err(|e| {
+        Error::Study(format!("{what}: bad shard payload line: {e}"))
+    })?;
+    if let Some(r) = v.get("r") {
+        return Ok(ShardLine::Row(dec_values(r, "row value")?));
+    }
+    if let Some(g) = v.get("g") {
+        let keys = dec_values(g.req("keys")?, "group key")?;
+        let states = g
+            .req("states")?
+            .as_arr()
+            .ok_or_else(|| {
+                Error::Study(format!("{what}: group states is not an array"))
+            })?
+            .iter()
+            .map(dec_state)
+            .collect::<Result<Vec<_>>>()?;
+        return Ok(ShardLine::Group { keys, states });
+    }
+    if let Some(e) = v.get("end") {
+        let field = |k: &str| -> Result<usize> {
+            Ok(e.u64_field(k).map_err(|err| {
+                Error::Study(format!("{what}: shard footer: {err}"))
+            })? as usize)
+        };
+        return Ok(ShardLine::End(ShardFooter {
+            points_evaluated: field("points")?,
+            rows_matched: field("matched")?,
+            candidates: field("candidates")?,
+            evaluated: field("evaluated")?,
+            infeasible: field("infeasible")?,
+        }));
+    }
+    Err(Error::Study(format!(
+        "{what}: unrecognized shard payload line (expected \"r\", \"g\", or \
+         \"end\"): {}",
+        line.chars().take(80).collect::<String>()
+    )))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f64_encoding_is_exact_for_every_class() {
+        for x in [
+            0.0,
+            -0.0,
+            1.0,
+            -1.5,
+            1e-300,
+            f64::MAX,
+            f64::MIN_POSITIVE,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::NAN,
+            0.1 + 0.2,
+            9007199254740993.0, // 2^53 + 1 rounds to 2^53; still exact bits
+        ] {
+            let text = enc_f64(x).to_string();
+            let back = dec_f64(&Json::parse(&text).unwrap(), "t").unwrap();
+            assert_eq!(back.to_bits(), x.to_bits(), "{x} via {text}");
+        }
+    }
+
+    #[test]
+    fn row_and_group_lines_roundtrip() {
+        let row = vec![
+            Value::Str("node8".into()),
+            Value::Bool(true),
+            Value::Num(0.1 + 0.2),
+            Value::Num(f64::NAN),
+        ];
+        let line = row_line(&row);
+        match parse_line(&line, "t").unwrap() {
+            ShardLine::Row(back) => {
+                assert_eq!(back.len(), row.len());
+                match (&back[3], &row[3]) {
+                    (Value::Num(a), Value::Num(b)) => {
+                        assert_eq!(a.to_bits(), b.to_bits())
+                    }
+                    _ => panic!(),
+                }
+                assert_eq!(back[0], row[0]);
+                assert_eq!(back[1], row[1]);
+            }
+            other => panic!("{other:?}"),
+        }
+
+        let mut st = AggState::new(true);
+        for (i, v) in [3.0, 1.0, 2.0, f64::NAN].iter().enumerate() {
+            st.observe(*v, &[Value::Num(i as f64)], &[0]);
+        }
+        let line = group_line(&[Value::Num(4096.0)], &[st.clone()]);
+        match parse_line(&line, "t").unwrap() {
+            ShardLine::Group { keys, states } => {
+                assert_eq!(keys, vec![Value::Num(4096.0)]);
+                let back = &states[0];
+                assert_eq!(back.count, st.count);
+                assert_eq!(back.min.to_bits(), st.min.to_bits());
+                assert_eq!(back.max.to_bits(), st.max.to_bits());
+                assert_eq!(
+                    back.sum.value().to_bits(),
+                    st.sum.value().to_bits()
+                );
+                let (a, b) =
+                    (back.values.as_ref().unwrap(), st.values.as_ref().unwrap());
+                assert_eq!(a.len(), b.len());
+                for (x, y) in a.iter().zip(b) {
+                    assert_eq!(x.to_bits(), y.to_bits());
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn header_roundtrip_and_garbage_rejection() {
+        let h = ShardHeader {
+            spec_name: "s".into(),
+            fingerprint: "deadbeefdeadbeef".into(),
+            device: "MI210".into(),
+            mode: ShardMode::Groups,
+            k: 2,
+            n: 5,
+            units: 103_680,
+            columns: vec!["hidden".into(), "points".into()],
+        };
+        let back = ShardHeader::parse_line(&h.to_line(), "t").unwrap();
+        assert_eq!(back, h);
+        let err =
+            ShardHeader::parse_line("device,hidden,tp", "file x").unwrap_err();
+        assert!(err.to_string().contains("not a commscale shard payload"));
+        assert!(err.to_string().contains("file x"));
+    }
+}

@@ -18,6 +18,7 @@ use crate::graph::GraphOptions;
 use crate::model::ModelConfig;
 use crate::report::{ascii_line_chart, Series, Table};
 use crate::sweep::{self, PointMetrics, Scenario, ScenarioGrid};
+use crate::util::stats::ExactSum;
 use crate::util::Json;
 use crate::{Error, Result};
 
@@ -768,82 +769,150 @@ pub fn build_sinks(
 // Aggregation
 // ---------------------------------------------------------------------------
 
-struct AggState {
-    count: u64,
-    sum: f64,
-    min: f64,
-    max: f64,
-    min_args: Vec<Value>,
-    max_args: Vec<Value>,
+/// Per-(group, aggregation) accumulator state. Every reduction the Study
+/// API offers is expressed through **mergeable** components — count, an
+/// order-independent [`ExactSum`], running min/max with their arg rows,
+/// and (for percentiles) the raw value multiset — so a shard can
+/// serialize its state and a coordinator can fold shards together in
+/// stream order with results bit-identical to one process seeing every
+/// row (`shard::payload` serializes it; DESIGN.md §12 has the algebra).
+#[derive(Debug, Clone)]
+pub(crate) struct AggState {
+    pub(crate) count: u64,
+    pub(crate) sum: ExactSum,
+    pub(crate) min: f64,
+    pub(crate) max: f64,
+    pub(crate) min_args: Vec<Value>,
+    pub(crate) max_args: Vec<Value>,
+    /// The raw metric values — kept only when a percentile op needs them
+    /// (`None` otherwise, so ordinary aggregations stay O(groups)).
+    pub(crate) values: Option<Vec<f64>>,
 }
 
 impl AggState {
-    fn new() -> AggState {
+    pub(crate) fn new(track_values: bool) -> AggState {
         AggState {
             count: 0,
-            sum: 0.0,
+            sum: ExactSum::new(),
             min: f64::INFINITY,
             max: f64::NEG_INFINITY,
             min_args: Vec::new(),
             max_args: Vec::new(),
+            values: if track_values { Some(Vec::new()) } else { None },
+        }
+    }
+
+    /// Fold one row's metric value in (stream order).
+    pub(crate) fn observe(&mut self, v: f64, row: &[Value], arg_idx: &[usize]) {
+        let first = self.count == 0;
+        self.count += 1;
+        self.sum.add(v);
+        if v < self.min || first {
+            self.min = self.min.min(v);
+            self.min_args = arg_idx.iter().map(|&i| row[i].clone()).collect();
+        }
+        if v > self.max || first {
+            self.max = self.max.max(v);
+            self.max_args = arg_idx.iter().map(|&i| row[i].clone()).collect();
+        }
+        if let Some(vals) = &mut self.values {
+            vals.push(v);
+        }
+    }
+
+    /// Fold a state that observed a **strictly later** contiguous slice
+    /// of the row stream. Ties keep `self`'s args (the earlier slice) —
+    /// exactly the sequential first-row tie-break.
+    pub(crate) fn merge(&mut self, later: &AggState) {
+        if later.count == 0 {
+            return;
+        }
+        if self.count == 0 {
+            *self = later.clone();
+            return;
+        }
+        self.count += later.count;
+        self.sum.merge(&later.sum);
+        // min/max are never NaN (they only move through `min`/`max` from
+        // the ±inf sentinels), so strict comparison is total here
+        if later.min < self.min {
+            self.min = later.min;
+            self.min_args = later.min_args.clone();
+        }
+        if later.max > self.max {
+            self.max = later.max;
+            self.max_args = later.max_args.clone();
+        }
+        match (&mut self.values, &later.values) {
+            (Some(a), Some(b)) => a.extend_from_slice(b),
+            (None, None) => {}
+            _ => unreachable!("value tracking differs between shards"),
         }
     }
 }
 
-struct BoundAgg {
-    metric_idx: usize,
-    metric_name: String,
-    ops: Vec<AggOp>,
-    arg_idx: Vec<usize>,
-    arg_names: Vec<String>,
+pub(crate) struct BoundAgg {
+    pub(crate) metric_idx: usize,
+    pub(crate) metric_name: String,
+    pub(crate) ops: Vec<AggOp>,
+    pub(crate) arg_idx: Vec<usize>,
+    pub(crate) arg_names: Vec<String>,
+    /// Any percentile op ⇒ the state keeps the raw values.
+    pub(crate) track_values: bool,
 }
 
-struct Group {
-    keys: Vec<Value>,
-    states: Vec<AggState>,
+pub(crate) struct Group {
+    pub(crate) keys: Vec<Value>,
+    pub(crate) states: Vec<AggState>,
 }
 
 /// Streaming group-by accumulator: one `Group` per distinct key tuple,
 /// emitted in first-seen (grid) order.
-struct Aggregator {
-    key_idx: Vec<usize>,
-    aggs: Vec<BoundAgg>,
-    index: HashMap<String, usize>,
-    groups: Vec<Group>,
+pub(crate) struct Aggregator {
+    pub(crate) key_idx: Vec<usize>,
+    pub(crate) aggs: Vec<BoundAgg>,
+    pub(crate) index: HashMap<String, usize>,
+    pub(crate) groups: Vec<Group>,
 }
 
 impl Aggregator {
     fn push(&mut self, row: &[Value]) {
         let keys: Vec<Value> =
             self.key_idx.iter().map(|&i| row[i].clone()).collect();
+        let gi = self.group_index(keys);
+        let g = &mut self.groups[gi];
+        for (a, st) in self.aggs.iter().zip(&mut g.states) {
+            st.observe(row[a.metric_idx].as_f64(), row, &a.arg_idx);
+        }
+    }
+
+    /// Find-or-insert a group slot for a key tuple (first-seen order).
+    pub(crate) fn group_index(&mut self, keys: Vec<Value>) -> usize {
         let key_text = group_key_text(&keys);
-        let gi = match self.index.get(&key_text) {
+        match self.index.get(&key_text) {
             Some(&i) => i,
             None => {
                 let i = self.groups.len();
                 self.index.insert(key_text, i);
-                self.groups.push(Group {
-                    keys,
-                    states: self.aggs.iter().map(|_| AggState::new()).collect(),
-                });
+                let states = self
+                    .aggs
+                    .iter()
+                    .map(|a| AggState::new(a.track_values))
+                    .collect();
+                self.groups.push(Group { keys, states });
                 i
             }
-        };
+        }
+    }
+
+    /// Fold a later shard's group in (keys + per-agg states, stream
+    /// order): the coordinator's merge step.
+    pub(crate) fn merge_group(&mut self, keys: Vec<Value>, states: Vec<AggState>) {
+        let gi = self.group_index(keys);
         let g = &mut self.groups[gi];
-        for (a, st) in self.aggs.iter().zip(&mut g.states) {
-            let v = row[a.metric_idx].as_f64();
-            st.count += 1;
-            st.sum += v;
-            if v < st.min || st.min_args.is_empty() {
-                st.min = st.min.min(v);
-                st.min_args =
-                    a.arg_idx.iter().map(|&i| row[i].clone()).collect();
-            }
-            if v > st.max || st.max_args.is_empty() {
-                st.max = st.max.max(v);
-                st.max_args =
-                    a.arg_idx.iter().map(|&i| row[i].clone()).collect();
-            }
+        assert_eq!(g.states.len(), states.len(), "aggregation arity differs");
+        for (mine, later) in g.states.iter_mut().zip(&states) {
+            mine.merge(later);
         }
     }
 
@@ -862,6 +931,9 @@ impl Aggregator {
                     AggOp::Count => {
                         cols.push(format!("{}_count", a.metric_name))
                     }
+                    AggOp::Percentile(p) => {
+                        cols.push(format!("{}_p{p}", a.metric_name))
+                    }
                     AggOp::ArgMin => {
                         for f in &a.arg_names {
                             cols.push(format!("{f}_at_min_{}", a.metric_name));
@@ -878,20 +950,37 @@ impl Aggregator {
         cols
     }
 
-    fn emit(&self, sinks: &mut [&mut dyn RowSink]) -> Result<usize> {
+    pub(crate) fn emit(&self, sinks: &mut [&mut dyn RowSink]) -> Result<usize> {
         for g in &self.groups {
             let mut row: Vec<Value> = g.keys.clone();
             let points = g.states.first().map(|s| s.count).unwrap_or(0);
             row.push(Value::Num(points as f64));
             for (a, st) in self.aggs.iter().zip(&g.states) {
+                // sorted once per state, shared by every percentile op
+                let mut sorted: Option<Vec<f64>> = None;
                 for op in &a.ops {
                     match op {
                         AggOp::Min => row.push(Value::Num(st.min)),
                         AggOp::Max => row.push(Value::Num(st.max)),
                         AggOp::Mean => row.push(Value::Num(
-                            st.sum / st.count.max(1) as f64,
+                            st.sum.value() / st.count.max(1) as f64,
                         )),
                         AggOp::Count => row.push(Value::Num(st.count as f64)),
+                        AggOp::Percentile(p) => {
+                            let vals = sorted.get_or_insert_with(|| {
+                                let mut v = st
+                                    .values
+                                    .clone()
+                                    .expect("percentile op tracks values");
+                                v.sort_by(|a, b| a.total_cmp(b));
+                                v
+                            });
+                            row.push(Value::Num(
+                                crate::util::stats::percentile_nearest_rank_sorted(
+                                    vals, *p,
+                                ),
+                            ));
+                        }
                         AggOp::ArgMin => {
                             row.extend(st.min_args.iter().cloned())
                         }
@@ -933,17 +1022,17 @@ pub struct StudyOutcome {
 }
 
 /// Bound pipeline state shared by every source's streaming loop.
-struct Pipeline {
+pub(crate) struct Pipeline {
     base_len: usize,
     filters: Vec<Expr>,
     /// (name, derived expr, base-field index) — exactly one of the last
     /// two is set.
     metrics: Vec<(String, Option<Expr>, Option<usize>)>,
     out_idx: Vec<usize>,
-    agg: Option<Aggregator>,
+    pub(crate) agg: Option<Aggregator>,
     row: Vec<Value>,
     nums: Vec<f64>,
-    outcome: StudyOutcome,
+    pub(crate) outcome: StudyOutcome,
 }
 
 impl Pipeline {
@@ -1136,13 +1225,14 @@ pub(crate) fn grid_identity_len() -> usize {
         .expect("grid schema carries makespan")
 }
 
-/// Run a resolved study through its sinks. Returns the outcome counts
-/// plus every sink's rendered output (in sink order).
-pub fn run_study(
+/// Bind a resolved study into output columns plus a ready-to-stream
+/// [`Pipeline`] — everything [`run_study`] does short of touching the
+/// source. The shard worker and the shard-merge coordinator both reuse
+/// this, so the three paths can never disagree on columns, filters,
+/// metric expressions, or aggregation shape.
+pub(crate) fn bind_study(
     resolved: &ResolvedStudy,
-    opts: RunOptions,
-    sinks: &mut [&mut dyn RowSink],
-) -> Result<StudyOutcome> {
+) -> Result<(Vec<String>, Pipeline)> {
     let spec = &resolved.spec;
 
     if spec.source == Source::Grid && resolved.total_points() == 0 {
@@ -1213,12 +1303,17 @@ pub fn run_study(
             for f in &a.args {
                 arg_idx.push(field_index(&schema_names, f, "aggregate.args")?);
             }
+            let track_values = a
+                .ops
+                .iter()
+                .any(|o| matches!(o, AggOp::Percentile(_)));
             bound.push(BoundAgg {
                 metric_idx,
                 metric_name: a.metric.clone(),
                 ops: a.ops.clone(),
                 arg_idx,
                 arg_names: a.args.clone(),
+                track_values,
             });
         }
         let agg = Aggregator {
@@ -1231,11 +1326,7 @@ pub fn run_study(
         (names, Vec::new(), Some(agg))
     };
 
-    for s in sinks.iter_mut() {
-        s.begin(&out_names)?;
-    }
-
-    let mut pl = Pipeline {
+    let pl = Pipeline {
         base_len,
         filters,
         metrics,
@@ -1245,23 +1336,22 @@ pub fn run_study(
         nums: Vec::new(),
         outcome: StudyOutcome::default(),
     };
+    Ok((out_names, pl))
+}
 
-    // -- stream the source --------------------------------------------------
-    match spec.source {
-        Source::Grid => stream_grid(resolved, opts, &mut pl, sinks)?,
-        Source::Zoo => {
-            for row in zoo_rows() {
-                pl.row = row;
-                pl.process_row(sinks)?;
-            }
-        }
-        Source::Table3 => {
-            for row in table3_rows() {
-                pl.row = row;
-                pl.process_row(sinks)?;
-            }
-        }
+/// Run a resolved study through its sinks. Returns the outcome counts
+/// plus every sink's rendered output (in sink order).
+pub fn run_study(
+    resolved: &ResolvedStudy,
+    opts: RunOptions,
+    sinks: &mut [&mut dyn RowSink],
+) -> Result<StudyOutcome> {
+    let (out_names, mut pl) = bind_study(resolved)?;
+    for s in sinks.iter_mut() {
+        s.begin(&out_names)?;
     }
+
+    stream_source(resolved, opts, &mut pl, sinks, None)?;
 
     // -- finish --------------------------------------------------------------
     if let Some(agg) = pl.agg.take() {
@@ -1276,11 +1366,66 @@ pub fn run_study(
     Ok(outcome)
 }
 
+/// Stream one shard's contiguous slice `[range.0, range.1)` of the
+/// study's global row stream (grid points in enumeration order, or
+/// zoo/table3 rows). Point-mode rows flow into `sinks` (begun with the
+/// study's columns); group-by state is **returned un-emitted** for the
+/// shard layer to serialize. `run_study` ≡ this over the full range plus
+/// `Aggregator::emit` — the equivalence the shard property tests pin.
+pub(crate) fn run_study_shard(
+    resolved: &ResolvedStudy,
+    opts: RunOptions,
+    range: (usize, usize),
+    sinks: &mut [&mut dyn RowSink],
+) -> Result<(Vec<String>, StudyOutcome, Option<Aggregator>)> {
+    let (out_names, mut pl) = bind_study(resolved)?;
+    for s in sinks.iter_mut() {
+        s.begin(&out_names)?;
+    }
+    stream_source(resolved, opts, &mut pl, sinks, Some(range))?;
+    let agg = pl.agg.take();
+    Ok((out_names, pl.outcome, agg))
+}
+
+/// Dispatch a source's row stream through the pipeline, optionally
+/// restricted to the global index range `[lo, hi)`.
+fn stream_source(
+    resolved: &ResolvedStudy,
+    opts: RunOptions,
+    pl: &mut Pipeline,
+    sinks: &mut [&mut dyn RowSink],
+    range: Option<(usize, usize)>,
+) -> Result<()> {
+    match resolved.spec.source {
+        Source::Grid => stream_grid(resolved, opts, pl, sinks, range),
+        Source::Zoo => stream_rows(zoo_rows(), pl, sinks, range),
+        Source::Table3 => stream_rows(table3_rows(), pl, sinks, range),
+    }
+}
+
+fn stream_rows(
+    rows: Vec<Vec<Value>>,
+    pl: &mut Pipeline,
+    sinks: &mut [&mut dyn RowSink],
+    range: Option<(usize, usize)>,
+) -> Result<()> {
+    let (lo, hi) = range.unwrap_or((0, usize::MAX));
+    for (i, row) in rows.into_iter().enumerate() {
+        if i < lo || i >= hi {
+            continue;
+        }
+        pl.row = row;
+        pl.process_row(sinks)?;
+    }
+    Ok(())
+}
+
 fn stream_grid(
     resolved: &ResolvedStudy,
     opts: RunOptions,
     pl: &mut Pipeline,
     sinks: &mut [&mut dyn RowSink],
+    range: Option<(usize, usize)>,
 ) -> Result<()> {
     let chunk = if opts.chunk > 0 {
         opts.chunk
@@ -1289,8 +1434,27 @@ fn stream_grid(
     } else {
         16384
     };
+    // global index of the current (hardware, segment) block's first point
+    let mut base = 0usize;
+    let counts: Vec<usize> = match range {
+        // block sizes let a shard skip disjoint blocks without enumerating
+        Some(_) => resolved.segment_counts(),
+        None => Vec::new(),
+    };
     for hw in &resolved.hardware {
-        for seg in &resolved.segments {
+        for (si, seg) in resolved.segments.iter().enumerate() {
+            let (block_lo, block_hi) = match range {
+                Some((lo, hi)) => {
+                    let count = counts[si];
+                    let start = base;
+                    base += count;
+                    if start + count <= lo || start >= hi {
+                        continue; // block entirely outside the shard
+                    }
+                    (lo.saturating_sub(start), hi - start)
+                }
+                None => (0, usize::MAX),
+            };
             let mut buf: Vec<ModelConfig> =
                 Vec::with_capacity(chunk.min(65536));
             let mut failed: Option<Error> = None;
@@ -1299,20 +1463,24 @@ fn stream_grid(
                 let sinks: &mut [&mut dyn RowSink] = &mut *sinks;
                 let failed = &mut failed;
                 let buf = &mut buf;
-                seg.builder.model_configs(&mut |cfg| {
-                    if failed.is_some() {
-                        return;
-                    }
-                    buf.push(cfg);
-                    if buf.len() >= chunk {
-                        if let Err(e) =
-                            eval_chunk(pl, sinks, hw, seg, buf, opts.threads)
-                        {
-                            *failed = Some(e);
+                seg.builder.model_configs_range(
+                    block_lo,
+                    block_hi,
+                    &mut |cfg| {
+                        if failed.is_some() {
+                            return;
                         }
-                        buf.clear();
-                    }
-                });
+                        buf.push(cfg);
+                        if buf.len() >= chunk {
+                            if let Err(e) = eval_chunk(
+                                pl, sinks, hw, seg, buf, opts.threads,
+                            ) {
+                                *failed = Some(e);
+                            }
+                            buf.clear();
+                        }
+                    },
+                );
             }
             if let Some(e) = failed {
                 return Err(e);
@@ -1621,6 +1789,93 @@ mod tests {
             .unwrap()
             .0;
         assert_eq!(row[5].as_f64(), best_tp as f64);
+    }
+
+    #[test]
+    fn percentile_aggregation_is_exact() {
+        let text = r#"{
+          "name": "p",
+          "axes": {"hidden": [4096, 16384], "tp": [1, 4, 16, 64]},
+          "group_by": ["hidden"],
+          "aggregate": [{"metric": "makespan",
+                         "ops": ["p0", "p50", "p90", "p100"]}]
+        }"#;
+        let (sink, outcome) = run_spec(text, RunOptions::default());
+        assert_eq!(outcome.groups_emitted, 2);
+        assert_eq!(
+            sink.columns,
+            vec![
+                "hidden",
+                "points",
+                "makespan_p0",
+                "makespan_p50",
+                "makespan_p90",
+                "makespan_p100"
+            ]
+        );
+        // manual cross-check against the sorted per-group value multiset
+        let spec = StudySpec::parse(text).unwrap();
+        let resolved = spec.resolve(&catalog::mi210()).unwrap();
+        let grid = resolved.full_grid();
+        let all = sweep::run(&grid);
+        for (gi, h) in [4096u64, 16384].iter().enumerate() {
+            let mut vals: Vec<f64> = all
+                .iter()
+                .zip(&grid.points)
+                .filter(|(_, sc)| sc.cfg.hidden == *h)
+                .map(|(m, _)| m.makespan)
+                .collect();
+            vals.sort_by(|a, b| a.total_cmp(b));
+            assert_eq!(vals.len(), 4);
+            let row = &sink.rows[gi];
+            // nearest-rank over 4 values: p0 -> 1st, p50 -> 2nd,
+            // p90 -> ceil(3.6) = 4th, p100 -> 4th
+            assert_eq!(row[2].as_f64().to_bits(), vals[0].to_bits());
+            assert_eq!(row[3].as_f64().to_bits(), vals[1].to_bits());
+            assert_eq!(row[4].as_f64().to_bits(), vals[3].to_bits());
+            assert_eq!(row[5].as_f64().to_bits(), vals[3].to_bits());
+        }
+    }
+
+    #[test]
+    fn agg_state_merge_matches_sequential_at_every_split() {
+        // ties, NaN, and negatives — merge(a, b) over any split must equal
+        // the sequential fold, first-row tie-breaks included
+        let vals = [3.0, 1.0, f64::NAN, 1.0, -2.0, -2.0, 5.0];
+        let row_of =
+            |i: usize, v: f64| vec![Value::Num(i as f64), Value::Num(v)];
+        let mut seq = AggState::new(true);
+        for (i, &v) in vals.iter().enumerate() {
+            seq.observe(v, &row_of(i, v), &[0]);
+        }
+        for split in 0..=vals.len() {
+            let mut a = AggState::new(true);
+            for (i, &v) in vals[..split].iter().enumerate() {
+                a.observe(v, &row_of(i, v), &[0]);
+            }
+            let mut b = AggState::new(true);
+            for (j, &v) in vals[split..].iter().enumerate() {
+                let i = split + j;
+                b.observe(v, &row_of(i, v), &[0]);
+            }
+            a.merge(&b);
+            assert_eq!(a.count, seq.count, "split {split}");
+            assert_eq!(a.min.to_bits(), seq.min.to_bits(), "split {split}");
+            assert_eq!(a.max.to_bits(), seq.max.to_bits(), "split {split}");
+            assert_eq!(
+                a.sum.value().to_bits(),
+                seq.sum.value().to_bits(),
+                "split {split}"
+            );
+            assert_eq!(a.min_args, seq.min_args, "split {split}");
+            assert_eq!(a.max_args, seq.max_args, "split {split}");
+            let (av, sv) =
+                (a.values.as_ref().unwrap(), seq.values.as_ref().unwrap());
+            assert_eq!(av.len(), sv.len());
+            for (x, y) in av.iter().zip(sv) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
     }
 
     #[test]

@@ -169,6 +169,11 @@ pub enum AggOp {
     Max,
     Mean,
     Count,
+    /// Exact nearest-rank percentile (`"p50"`, `"p99"`, …): the group's
+    /// values are kept and sorted by IEEE total order, so the result is a
+    /// pure function of the value multiset — mergeable across shards
+    /// bit-for-bit.
+    Percentile(u8),
     /// Report `args` fields at the row minimizing the metric.
     ArgMin,
     /// Report `args` fields at the row maximizing the metric.
@@ -176,14 +181,15 @@ pub enum AggOp {
 }
 
 impl AggOp {
-    pub fn as_str(&self) -> &'static str {
+    pub fn as_str(&self) -> String {
         match self {
-            AggOp::Min => "min",
-            AggOp::Max => "max",
-            AggOp::Mean => "mean",
-            AggOp::Count => "count",
-            AggOp::ArgMin => "argmin",
-            AggOp::ArgMax => "argmax",
+            AggOp::Min => "min".into(),
+            AggOp::Max => "max".into(),
+            AggOp::Mean => "mean".into(),
+            AggOp::Count => "count".into(),
+            AggOp::Percentile(p) => format!("p{p}"),
+            AggOp::ArgMin => "argmin".into(),
+            AggOp::ArgMax => "argmax".into(),
         }
     }
 
@@ -195,10 +201,28 @@ impl AggOp {
             "count" => Ok(AggOp::Count),
             "argmin" => Ok(AggOp::ArgMin),
             "argmax" => Ok(AggOp::ArgMax),
-            other => Err(Error::Study(format!(
-                "aggregate op: unknown {other:?} (expected min, max, mean, \
-                 count, argmin, or argmax)"
-            ))),
+            other => {
+                if let Some(rank) = other.strip_prefix('p') {
+                    if let Ok(p) = rank.parse::<u8>() {
+                        if p <= 100 && !rank.is_empty() {
+                            return Ok(AggOp::Percentile(p));
+                        }
+                    }
+                    if rank.chars().all(|c| c.is_ascii_digit())
+                        && !rank.is_empty()
+                    {
+                        return Err(Error::Study(format!(
+                            "aggregate op: percentile rank must be 0..=100, \
+                             got {other:?}"
+                        )));
+                    }
+                }
+                Err(Error::Study(format!(
+                    "aggregate op: unknown {other:?} (expected min, max, \
+                     mean, count, argmin, argmax, or a percentile like \
+                     \"p50\")"
+                )))
+            }
         }
     }
 }
@@ -1124,7 +1148,7 @@ impl StudySpec {
                         (
                             "ops",
                             Json::arr(
-                                a.ops.iter().map(|o| Json::str(o.as_str())),
+                                a.ops.iter().map(|o| Json::str(&o.as_str())),
                             ),
                         ),
                     ];
@@ -1519,6 +1543,43 @@ mod tests {
         .unwrap_err()
         .to_string();
         assert!(err.contains("group_by and aggregate"), "{err}");
+    }
+
+    #[test]
+    fn percentile_ops_parse_and_roundtrip() {
+        let s = StudySpec::parse(
+            r#"{"name":"p","group_by":["hidden"],
+               "aggregate":[{"metric":"makespan",
+                             "ops":["p0","p50","p99","p100","mean"]}]}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            s.aggregate[0].ops,
+            vec![
+                AggOp::Percentile(0),
+                AggOp::Percentile(50),
+                AggOp::Percentile(99),
+                AggOp::Percentile(100),
+                AggOp::Mean,
+            ]
+        );
+        let back = StudySpec::parse(&s.to_json().to_string()).unwrap();
+        assert_eq!(s, back);
+
+        for (text, needle) in [
+            ("p101", "0..=100"),
+            ("p200", "0..=100"),
+            ("median", "percentile like \"p50\""),
+            ("p", "unknown"),
+            ("p5x", "unknown"),
+        ] {
+            let spec = format!(
+                r#"{{"name":"x","group_by":["hidden"],
+                    "aggregate":[{{"metric":"makespan","ops":["{text}"]}}]}}"#
+            );
+            let err = StudySpec::parse(&spec).unwrap_err().to_string();
+            assert!(err.contains(needle), "{text}: {err}");
+        }
     }
 
     #[test]

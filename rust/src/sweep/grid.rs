@@ -304,6 +304,42 @@ impl GridBuilder {
     /// is this enumerator crossed with the hardware axes; the study layer
     /// uses it directly so million-point grids never materialize.
     pub fn model_configs(&self, f: &mut dyn FnMut(ModelConfig)) {
+        self.model_configs_until(&mut |cfg| {
+            f(cfg);
+            true
+        });
+    }
+
+    /// [`GridBuilder::model_configs`] restricted to the realized-index
+    /// window `[lo, hi)` — the shard layer's chunk seam. Indices count
+    /// *realized* configs (skips excluded), so `(lo, hi)` windows taken
+    /// from a partition of `0..realized_model_count()` tile the stream
+    /// exactly; enumeration stops early once `hi` is reached.
+    pub fn model_configs_range(
+        &self,
+        lo: usize,
+        hi: usize,
+        f: &mut dyn FnMut(ModelConfig),
+    ) {
+        let mut idx = 0usize;
+        self.model_configs_until(&mut |cfg| {
+            if idx >= hi {
+                return false;
+            }
+            if idx >= lo {
+                f(cfg);
+            }
+            idx += 1;
+            idx < hi
+        });
+    }
+
+    /// Early-exit enumerator underlying [`GridBuilder::model_configs`]:
+    /// stops (returning `false`) the first time `f` does.
+    pub fn model_configs_until(
+        &self,
+        f: &mut dyn FnMut(ModelConfig) -> bool,
+    ) -> bool {
         for &h in &self.hidden {
             for &sl in &self.seq_len {
                 for &b in &self.batch {
@@ -326,7 +362,9 @@ impl GridBuilder {
                                                     h, sl, b, layers, fm, tp,
                                                     pp, mb, sp, dp,
                                                 ) {
-                                                    f(cfg);
+                                                    if !f(cfg) {
+                                                        return false;
+                                                    }
                                                 }
                                             }
                                         }
@@ -338,6 +376,7 @@ impl GridBuilder {
                 }
             }
         }
+        true
     }
 
     /// Count of points [`GridBuilder::build`] would actually produce per
@@ -750,6 +789,40 @@ mod tests {
             .build();
         assert_eq!(g.points[0].cfg.heads, 32);
         assert_eq!(g.points[1].cfg.heads, 32);
+    }
+
+    #[test]
+    fn model_configs_range_tiles_the_stream() {
+        // a grid with deterministic skips (the (layers=6, pp=4) misfit):
+        // every partition of [0, n) must tile the full enumeration exactly
+        let b = GridBuilder::new(&catalog::mi210())
+            .hidden(&[1024, 4096])
+            .layers(&[4, 6])
+            .tp(&[2])
+            .pp(&[1, 4])
+            .microbatches(&[4, 8])
+            .dp(&[1, 2]);
+        let mut all = Vec::new();
+        b.model_configs(&mut |c| all.push(c));
+        let n = all.len();
+        assert_eq!(n, b.realized_model_count());
+        assert!(n > 8);
+        for parts in [1usize, 2, 3, 5, 8, n] {
+            let mut tiled = Vec::new();
+            for k in 0..parts {
+                let lo = k * n / parts;
+                let hi = (k + 1) * n / parts;
+                b.model_configs_range(lo, hi, &mut |c| tiled.push(c));
+            }
+            assert_eq!(tiled.len(), n, "parts = {parts}");
+            for (a, c) in all.iter().zip(&tiled) {
+                assert_eq!(a, c);
+            }
+        }
+        // out-of-range windows are empty, not panics
+        let mut none = 0;
+        b.model_configs_range(n, n + 5, &mut |_| none += 1);
+        assert_eq!(none, 0);
     }
 
     #[test]

@@ -1,5 +1,183 @@
-//! Statistics helpers: summary stats, percentiles, and the least-squares
-//! fits the operator-level models (§4.2.2) are built on.
+//! Statistics helpers: summary stats, percentiles, the least-squares
+//! fits the operator-level models (§4.2.2) are built on, and the
+//! order-independent [`ExactSum`] accumulator the sharded study merge
+//! relies on.
+
+/// Exact f64 accumulator (Shewchuk partials — the `math.fsum` algorithm):
+/// [`ExactSum::value`] is the **correctly rounded** sum of every value
+/// pushed so far, independent of push *and merge* order. That property is
+/// what makes `sum`/`mean` group-by aggregates mergeable across study
+/// shards bit-for-bit: a single process accumulating rows in stream order
+/// and a coordinator merging per-shard partial sums both round the same
+/// exact real number once (DESIGN.md §12).
+///
+/// Non-finite inputs are tracked by sign/NaN counters rather than fed to
+/// the expansion, so `inf + (-inf) = NaN`, `inf + x = inf`, and NaN
+/// poisoning all behave identically regardless of ordering. If the exact
+/// running sum of *finite* inputs leaves the f64 range the accumulator
+/// panics loudly (like CPython's `fsum` raising `OverflowError`): no
+/// finite-width representation could keep the result order-independent
+/// there, and a loud stop beats a silent single-vs-sharded divergence.
+/// Unreachable for this crate's inputs — simulated times summed over
+/// bounded grids sit hundreds of orders of magnitude below `f64::MAX`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ExactSum {
+    /// Non-overlapping partials in increasing-magnitude order.
+    partials: Vec<f64>,
+    pos_inf: u64,
+    neg_inf: u64,
+    nan: u64,
+}
+
+impl ExactSum {
+    pub fn new() -> ExactSum {
+        ExactSum::default()
+    }
+
+    /// Add one value exactly.
+    pub fn add(&mut self, x: f64) {
+        if x.is_nan() {
+            self.nan += 1;
+            return;
+        }
+        if x.is_infinite() {
+            if x > 0.0 {
+                self.pos_inf += 1;
+            } else {
+                self.neg_inf += 1;
+            }
+            return;
+        }
+        // the fsum sweep: two-sum x against every partial, keeping the
+        // non-zero round-off terms as the new partial list
+        let mut x = x;
+        let mut i = 0;
+        for j in 0..self.partials.len() {
+            let mut y = self.partials[j];
+            if x.abs() < y.abs() {
+                std::mem::swap(&mut x, &mut y);
+            }
+            let hi = x + y;
+            assert!(
+                hi.is_finite(),
+                "ExactSum overflow: the exact running sum left the f64 \
+                 range (|sum| > ~1.8e308) and cannot stay order-independent"
+            );
+            let lo = y - (hi - x);
+            if lo != 0.0 {
+                self.partials[i] = lo;
+                i += 1;
+            }
+            x = hi;
+        }
+        self.partials.truncate(i);
+        if x != 0.0 {
+            self.partials.push(x);
+        }
+    }
+
+    /// Fold another accumulator in. Because both sides are exact, the
+    /// result equals accumulating every underlying value into one
+    /// `ExactSum` in any order.
+    pub fn merge(&mut self, other: &ExactSum) {
+        for &p in &other.partials {
+            self.add(p);
+        }
+        self.pos_inf += other.pos_inf;
+        self.neg_inf += other.neg_inf;
+        self.nan += other.nan;
+    }
+
+    /// The correctly rounded sum of everything added so far.
+    pub fn value(&self) -> f64 {
+        if self.nan > 0 || (self.pos_inf > 0 && self.neg_inf > 0) {
+            return f64::NAN;
+        }
+        if self.pos_inf > 0 {
+            return f64::INFINITY;
+        }
+        if self.neg_inf > 0 {
+            return f64::NEG_INFINITY;
+        }
+        // round the expansion: sum from the largest partial down, then
+        // apply the half-way (round-to-even) correction using the sign of
+        // the next-lower partial — CPython's msum tail
+        let p = &self.partials;
+        let mut n = p.len();
+        if n == 0 {
+            return 0.0;
+        }
+        n -= 1;
+        let mut hi = p[n];
+        let mut lo = 0.0;
+        while n > 0 {
+            let x = hi;
+            n -= 1;
+            let y = p[n];
+            hi = x + y;
+            let yr = hi - x;
+            lo = y - yr;
+            if lo != 0.0 {
+                break;
+            }
+        }
+        if n > 0 && ((lo < 0.0 && p[n - 1] < 0.0) || (lo > 0.0 && p[n - 1] > 0.0))
+        {
+            let y = lo * 2.0;
+            let x = hi + y;
+            if y == x - hi {
+                hi = x;
+            }
+        }
+        hi
+    }
+
+    /// Serialization view: the raw partials plus the (+inf, -inf, NaN)
+    /// counters. [`ExactSum::from_raw`] round-trips them exactly.
+    pub fn raw_parts(&self) -> (&[f64], u64, u64, u64) {
+        (&self.partials, self.pos_inf, self.neg_inf, self.nan)
+    }
+
+    /// Rebuild from serialized parts (re-normalizes, so any list of
+    /// finite partials is accepted).
+    pub fn from_raw(
+        partials: &[f64],
+        pos_inf: u64,
+        neg_inf: u64,
+        nan: u64,
+    ) -> ExactSum {
+        let mut s = ExactSum {
+            partials: Vec::new(),
+            pos_inf,
+            neg_inf,
+            nan,
+        };
+        for &p in partials {
+            s.add(p);
+        }
+        s
+    }
+}
+
+/// Exact nearest-rank percentile over a value multiset: sort by IEEE total
+/// order (deterministic even with NaNs and signed zeros), then take the
+/// `ceil(p/100 * n)`-th smallest (1-based; `p = 0` takes the minimum).
+/// Total-order sorting plus integer rank arithmetic make the result a
+/// pure function of the multiset — shard-merge order cannot perturb it.
+pub fn percentile_nearest_rank(values: &mut [f64], p: u8) -> f64 {
+    values.sort_by(|a, b| a.total_cmp(b));
+    percentile_nearest_rank_sorted(values, p)
+}
+
+/// [`percentile_nearest_rank`] over an already total-order-sorted slice —
+/// callers evaluating several percentile ranks sort once and reuse.
+pub fn percentile_nearest_rank_sorted(sorted: &[f64], p: u8) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of an empty group");
+    assert!(p <= 100, "percentile rank {p} out of range");
+    let n = sorted.len() as u64;
+    let rank = ((p as u64 * n + 99) / 100).max(1);
+    sorted[(rank - 1) as usize]
+}
 
 /// Summary statistics over a sample of timings/values.
 #[derive(Debug, Clone, PartialEq)]
@@ -177,6 +355,96 @@ mod tests {
             .collect();
         let (a, _) = proportional_fit(&xs, &ys);
         assert!((a - 3.0).abs() < 0.01, "a = {a}");
+    }
+
+    #[test]
+    fn exact_sum_is_order_and_partition_independent() {
+        // values chosen to defeat naive summation: huge/tiny cancellation
+        let vals = [
+            1e16, 1.0, -1e16, 1e-9, 3.5, -2.25, 1e8, -1e-9, 7e-3, 2.0,
+            -1e8, 0.1, 123456.789, -0.1, 1e-300,
+        ];
+        let mut seq = ExactSum::new();
+        for &v in &vals {
+            seq.add(v);
+        }
+        let want = seq.value();
+        // every rotation, summed in two merged halves at every split point
+        for rot in 0..vals.len() {
+            let mut rotated = vals.to_vec();
+            rotated.rotate_left(rot);
+            for split in 0..=rotated.len() {
+                let (a, b) = rotated.split_at(split);
+                let mut left = ExactSum::new();
+                for &v in a {
+                    left.add(v);
+                }
+                let mut right = ExactSum::new();
+                for &v in b {
+                    right.add(v);
+                }
+                left.merge(&right);
+                assert_eq!(
+                    left.value().to_bits(),
+                    want.to_bits(),
+                    "rot {rot} split {split}"
+                );
+            }
+        }
+        // the cancelling pairs vanish exactly — naive summation would
+        // have smeared 1e16 rounding error over the small terms
+        let expected = 1.0 + 3.5 - 2.25 + 7e-3 + 2.0 + 123456.789;
+        assert!((want - expected).abs() < 1e-9, "{want} vs {expected}");
+    }
+
+    #[test]
+    fn exact_sum_nonfinite_semantics() {
+        let mut s = ExactSum::new();
+        s.add(1.0);
+        s.add(f64::INFINITY);
+        assert_eq!(s.value(), f64::INFINITY);
+        let mut t = ExactSum::new();
+        t.add(f64::NEG_INFINITY);
+        s.merge(&t);
+        assert!(s.value().is_nan(), "inf + -inf must be NaN");
+        let mut u = ExactSum::new();
+        u.add(f64::NAN);
+        u.add(5.0);
+        assert!(u.value().is_nan());
+    }
+
+    #[test]
+    #[should_panic(expected = "ExactSum overflow")]
+    fn exact_sum_finite_overflow_is_loud() {
+        let mut s = ExactSum::new();
+        s.add(f64::MAX);
+        s.add(f64::MAX);
+    }
+
+    #[test]
+    fn exact_sum_raw_roundtrip() {
+        let mut s = ExactSum::new();
+        for v in [0.1, 0.2, 1e16, -1e16, 0.3, f64::INFINITY] {
+            s.add(v);
+        }
+        let (p, pi, ni, nan) = s.raw_parts();
+        let back = ExactSum::from_raw(p, pi, ni, nan);
+        assert_eq!(back.value().to_bits(), s.value().to_bits());
+    }
+
+    #[test]
+    fn percentile_nearest_rank_picks_members() {
+        let mut v = [5.0, 1.0, 4.0, 2.0, 3.0];
+        assert_eq!(percentile_nearest_rank(&mut v, 0), 1.0);
+        assert_eq!(percentile_nearest_rank(&mut v, 50), 3.0);
+        assert_eq!(percentile_nearest_rank(&mut v, 90), 5.0);
+        assert_eq!(percentile_nearest_rank(&mut v, 100), 5.0);
+        let mut two = [10.0, 20.0];
+        assert_eq!(percentile_nearest_rank(&mut two, 50), 10.0);
+        assert_eq!(percentile_nearest_rank(&mut two, 51), 20.0);
+        // deterministic with NaNs: total order sorts them last
+        let mut with_nan = [2.0, f64::NAN, 1.0];
+        assert_eq!(percentile_nearest_rank(&mut with_nan, 50), 2.0);
     }
 
     #[test]

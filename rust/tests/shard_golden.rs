@@ -1,0 +1,186 @@
+//! Golden scatter/gather equivalence on the shipped PR 4 example:
+//! `commscale shard run` on (a debug-sized cut of)
+//! `examples/studies/tp_pp_evolution_argmin.json` must reproduce the
+//! optimizer-golden argmin rows — tie-breaks included — and its CSV and
+//! spec-sink files must equal the single-process bytes exactly. The
+//! full-size 103k-point 4-shard diff runs in CI release mode.
+
+use std::path::{Path, PathBuf};
+
+use commscale::hw::catalog;
+use commscale::optimizer::{optimize_study, OptimizeOptions};
+use commscale::study::{
+    run_study, CsvSink, RowSink, RunOptions, SpecSink, StudySpec, VecSink,
+};
+
+fn example_spec() -> StudySpec {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("../examples/studies/tp_pp_evolution_argmin.json");
+    let mut spec = StudySpec::parse_file(&path).expect("example spec");
+    // the same deterministic cut benches/optimizer.rs uses in quick mode,
+    // further narrowed on batch so debug-mode cargo test stays fast
+    spec.axes.hidden = vec![4096, 16384];
+    spec.axes.seq_len = vec![2048, 8192];
+    spec.axes.batch = vec![1, 2];
+    spec.axes.evolutions = vec![
+        commscale::hw::Evolution::none(),
+        commscale::hw::Evolution::flop_vs_bw_4x(),
+    ];
+    spec.sinks.clear();
+    spec
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("commscale_shard_golden_{name}"))
+}
+
+fn commscale(args: &[&str]) -> std::process::Output {
+    std::process::Command::new(env!("CARGO_BIN_EXE_commscale"))
+        .args(args)
+        .output()
+        .expect("spawn commscale")
+}
+
+#[test]
+fn shard_run_reproduces_optimizer_golden_argmin_rows() {
+    let mut spec = example_spec();
+
+    // -- single-process golden: rows + csv + seeded spec in one pass -------
+    let resolved = spec.resolve(&catalog::mi210()).unwrap();
+    let single_csv = tmp("single.csv");
+    let single_seed = tmp("single_seed.json");
+    let mut vec_sink = VecSink::new();
+    let mut csv_sink = CsvSink::new(single_csv.to_str().unwrap());
+    let mut seed_sink = SpecSink::new(
+        single_seed.to_str().unwrap(),
+        &spec.name,
+        None,
+        spec.device.as_deref(),
+    );
+    {
+        let mut sinks: Vec<&mut dyn RowSink> =
+            vec![&mut vec_sink, &mut csv_sink, &mut seed_sink];
+        run_study(&resolved, RunOptions::default(), &mut sinks)
+            .expect("single-process study");
+    }
+    assert!(!vec_sink.rows.is_empty());
+
+    // -- the PR 4 golden: branch-and-bound argmin ≡ exhaustive rows --------
+    let report = optimize_study(
+        &resolved,
+        &OptimizeOptions { threads: 2, memory_cap: None },
+    )
+    .expect("optimizer search");
+    report
+        .matches_exhaustive(&vec_sink.columns, &vec_sink.rows)
+        .expect("optimizer argmin rows match the exhaustive study");
+
+    // -- commscale shard run -n 3: bytes must equal the single process -----
+    let sharded_csv = tmp("sharded.csv");
+    let sharded_seed = tmp("sharded_seed.json");
+    spec.sinks = vec![
+        commscale::study::SinkSpec::Csv {
+            path: sharded_csv.to_str().unwrap().to_string(),
+        },
+        commscale::study::SinkSpec::Spec {
+            path: sharded_seed.to_str().unwrap().to_string(),
+            name: None,
+        },
+    ];
+    let spec_path = tmp("spec.json");
+    std::fs::write(&spec_path, spec.to_json().to_string_pretty(2) + "\n")
+        .unwrap();
+
+    let out = commscale(&[
+        "shard",
+        "run",
+        "-n",
+        "3",
+        spec_path.to_str().unwrap(),
+        "--worker-threads",
+        "1",
+    ]);
+    assert!(
+        out.status.success(),
+        "shard run failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    let single_bytes = std::fs::read(&single_csv).unwrap();
+    let sharded_bytes = std::fs::read(&sharded_csv).unwrap();
+    assert!(!single_bytes.is_empty());
+    assert_eq!(
+        single_bytes, sharded_bytes,
+        "sharded CSV differs from single-process CSV"
+    );
+    let single_seed_bytes = std::fs::read(&single_seed).unwrap();
+    let sharded_seed_bytes = std::fs::read(&sharded_seed).unwrap();
+    assert_eq!(
+        single_seed_bytes, sharded_seed_bytes,
+        "sharded spec-sink output differs from single-process"
+    );
+
+    // -- sharded optimize: merged winner rows == the search report ---------
+    let opt_csv = tmp("opt.csv");
+    let out = commscale(&[
+        "shard",
+        "run",
+        "-n",
+        "3",
+        "--optimize",
+        spec_path.to_str().unwrap(),
+        "--worker-threads",
+        "1",
+        "--csv",
+        opt_csv.to_str().unwrap(),
+    ]);
+    assert!(
+        out.status.success(),
+        "shard run --optimize failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let mut want = report.columns.join(",") + "\n";
+    for row in &report.rows {
+        let cells: Vec<String> = row.iter().map(|v| v.render()).collect();
+        want.push_str(&cells.join(","));
+        want.push('\n');
+    }
+    let got = std::fs::read_to_string(&opt_csv).unwrap();
+    assert_eq!(got, want, "sharded optimize CSV differs from the search");
+
+    for p in [
+        &single_csv, &single_seed, &sharded_csv, &sharded_seed, &spec_path,
+        &opt_csv,
+    ] {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+/// Malformed shard coordinates must fail loudly at the CLI boundary.
+#[test]
+fn malformed_shard_coordinates_fail_loudly() {
+    let spec = tmp("malformed_target.json");
+    std::fs::write(
+        &spec,
+        r#"{"name": "t", "axes": {"hidden": [1024], "tp": [1, 2]}}"#,
+    )
+    .unwrap();
+    for (coords, needle) in [
+        ("0/0", "n must be >= 1"),
+        ("4/4", "k < n"),
+        ("7/2", "k < n"),
+        ("x/y", "k/n"),
+    ] {
+        let out = commscale(&[
+            "shard",
+            "worker",
+            "--shard",
+            coords,
+            spec.to_str().unwrap(),
+        ]);
+        assert!(!out.status.success(), "--shard {coords} should fail");
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(err.contains(needle), "--shard {coords}: {err}");
+    }
+    let _ = std::fs::remove_file(&spec);
+}

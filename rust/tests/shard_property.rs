@@ -1,0 +1,248 @@
+//! Property tests for sharded scatter/gather execution, in the style of
+//! `tests/expr_property.rs`: LCG-seeded random study specs (axes,
+//! filters, derived metrics, group-by aggregations incl. percentiles,
+//! series) are run single-process and as `n ∈ {1, 2, 3, 5, 8}` shards
+//! through the real worker payload + merge path — merged rows, columns,
+//! aggregates, and outcome counts must be **bit-identical** to the
+//! single-process run, every time.
+
+use commscale::hw::catalog;
+use commscale::shard::{self, ShardId, ShardInput};
+use commscale::study::{
+    run_study, ResolvedStudy, RowSink, RunOptions, StudySpec, Value, VecSink,
+};
+
+// ---------------------------------------------------------------------------
+// deterministic generator (Knuth MMIX LCG — no ambient randomness)
+// ---------------------------------------------------------------------------
+
+struct Lcg(u64);
+
+impl Lcg {
+    fn next(&mut self) -> u64 {
+        self.0 = self
+            .0
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        self.0 >> 33
+    }
+
+    fn below(&mut self, n: u64) -> u64 {
+        self.next() % n
+    }
+
+    fn chance(&mut self, percent: u64) -> bool {
+        self.below(100) < percent
+    }
+
+    fn pick<'a>(&mut self, xs: &'a [&'a str]) -> &'a str {
+        xs[self.below(xs.len() as u64) as usize]
+    }
+}
+
+/// One random grid spec: small enough to keep debug-mode runtimes sane,
+/// wide enough to hit every pipeline feature. `grouped` pins whether the
+/// spec aggregates (so both pipeline shapes are always covered).
+fn gen_spec(rng: &mut Lcg, grouped: bool) -> String {
+    let hidden = rng.pick(&["[1024]", "[4096]", "[1024, 4096]"]);
+    let seq_len = rng.pick(&["[2048]", "[1024, 2048]"]);
+    let batch = rng.pick(&["[1]", "[1, 2]"]);
+    // tp always offers a >1 degree so seq_par points survive
+    let tp = rng.pick(&["[1, 2]", "[2, 4]", "[1, 4, 8]"]);
+    let (layers, pp, mb) = if rng.chance(40) {
+        ("[4]", "[1, 4]", "[2]")
+    } else {
+        ("[2]", "[1]", "[1]")
+    };
+    let seq_par = rng.pick(&["[false]", "[false, true]"]);
+    let dp = rng.pick(&["[1]", "[1, 2]"]);
+    let evolutions = rng.pick(&["[1]", "[1, 4]"]);
+    let topologies = rng.pick(&["[\"flat\"]", "[\"node4\"]"]);
+
+    let mut spec = format!(
+        r#"{{"name": "prop",
+  "axes": {{"hidden": {hidden}, "seq_len": {seq_len}, "batch": {batch},
+            "layers": {layers}, "tp": {tp}, "pp": {pp},
+            "microbatches": {mb}, "seq_par": {seq_par}, "dp": {dp},
+            "evolutions": {evolutions}, "topologies": {topologies}"#
+    );
+    if rng.chance(30) {
+        spec.push_str(
+            r#", "series": [{"label": "a", "hidden": 1024},
+                            {"label": "b", "hidden": 4096, "seq_len": [2048]}]"#,
+        );
+    }
+    spec.push('}');
+
+    if rng.chance(40) {
+        let f = rng.pick(&[
+            r#"["tp <= 4"]"#,
+            r#"["hidden >= 1024", "world <= 16"]"#,
+            r#"["comm_fraction < 0.99"]"#,
+        ]);
+        spec.push_str(&format!(r#", "filter": {f}"#));
+    }
+    if rng.chance(40) {
+        spec.push_str(
+            r#", "metrics": ["comm_fraction", "time_per_sample",
+                 {"name": "exposed_share", "expr": "exposed_comm / iter_time"}]"#,
+        );
+    }
+    if grouped {
+        let keys = rng.pick(&[
+            r#"["hidden"]"#,
+            r#"["hidden", "flop_vs_bw"]"#,
+            r#"["topology", "tp"]"#,
+            r#"["series", "hidden"]"#,
+        ]);
+        let aggs = rng.pick(&[
+            r#"[{"metric": "makespan", "ops": ["min", "mean", "max", "count"]}]"#,
+            r#"[{"metric": "time_per_sample", "ops": ["min", "argmin"],
+                 "args": ["tp", "pp", "dp"]},
+                {"metric": "comm_fraction", "ops": ["mean", "p50"]}]"#,
+            r#"[{"metric": "comm_fraction", "ops": ["p0", "p50", "p90", "p100"]}]"#,
+            r#"[{"metric": "exposed_comm", "ops": ["mean", "p99", "argmax"],
+                 "args": ["tp", "seq_par"]}]"#,
+        ]);
+        spec.push_str(&format!(
+            r#", "group_by": {keys}, "aggregate": {aggs}"#
+        ));
+    }
+    spec.push('}');
+    spec
+}
+
+// ---------------------------------------------------------------------------
+// single-process vs scatter/gather
+// ---------------------------------------------------------------------------
+
+fn run_single(resolved: &ResolvedStudy, opts: RunOptions) -> VecSink {
+    let mut sink = VecSink::new();
+    {
+        let mut sinks: Vec<&mut dyn RowSink> = vec![&mut sink];
+        run_study(resolved, opts, &mut sinks).expect("single-process run");
+    }
+    sink
+}
+
+fn run_sharded(
+    resolved: &ResolvedStudy,
+    n: usize,
+    opts: RunOptions,
+) -> VecSink {
+    let mut inputs = Vec::new();
+    for k in 0..n {
+        let mut buf: Vec<u8> = Vec::new();
+        shard::run_worker(
+            resolved,
+            ShardId::new(k, n).unwrap(),
+            false,
+            opts,
+            &mut buf,
+        )
+        .unwrap_or_else(|e| panic!("worker {k}/{n}: {e}"));
+        inputs.push(ShardInput::from_bytes(&format!("worker {k}/{n}"), buf));
+    }
+    let mut sink = VecSink::new();
+    let outcome = {
+        let mut sinks: Vec<&mut dyn RowSink> = vec![&mut sink];
+        shard::merge_study(resolved, inputs, &mut sinks)
+            .unwrap_or_else(|e| panic!("merge n={n}: {e}"))
+    };
+    assert_eq!(
+        outcome.points_evaluated,
+        resolved.total_points(),
+        "merged point count, n={n}"
+    );
+    sink
+}
+
+fn assert_identical(a: &VecSink, b: &VecSink, what: &str) {
+    assert_eq!(a.columns, b.columns, "{what}: columns");
+    assert_eq!(a.rows.len(), b.rows.len(), "{what}: row count");
+    for (ri, (x, y)) in a.rows.iter().zip(&b.rows).enumerate() {
+        for (ci, (u, v)) in x.iter().zip(y).enumerate() {
+            let same = match (u, v) {
+                (Value::Num(p), Value::Num(q)) => p.to_bits() == q.to_bits(),
+                _ => u == v,
+            };
+            assert!(
+                same,
+                "{what}: row {ri} col {} ({ci}): {} vs {}",
+                a.columns[ci],
+                u.render(),
+                v.render()
+            );
+        }
+    }
+}
+
+#[test]
+fn random_specs_merge_bit_identically_for_every_shard_count() {
+    let mut rng = Lcg(0x5eed_0d15_71b3_37e3);
+    let device = catalog::mi210();
+    for case in 0..10usize {
+        // even cases group-by-aggregate, odd cases stream raw rows — both
+        // pipeline shapes covered regardless of the seed's draws
+        let text = gen_spec(&mut rng, case % 2 == 0);
+        let spec = StudySpec::parse(&text)
+            .unwrap_or_else(|e| panic!("case {case} spec invalid: {e}\n{text}"));
+        let resolved = spec.resolve(&device).unwrap();
+        assert!(
+            resolved.total_points() > 0,
+            "case {case} resolved empty\n{text}"
+        );
+        assert!(
+            resolved.total_points() <= 1500,
+            "case {case} too big for a debug-mode property test: {}",
+            resolved.total_points()
+        );
+        // odd cases stress a tiny streaming chunk as well
+        let opts = RunOptions {
+            threads: 1,
+            chunk: if case % 2 == 1 { 7 } else { 0 },
+        };
+        let single = run_single(&resolved, opts);
+        for n in [1usize, 2, 3, 5, 8] {
+            let merged = run_sharded(&resolved, n, opts);
+            assert_identical(
+                &single,
+                &merged,
+                &format!("case {case} n={n}\n{text}"),
+            );
+        }
+    }
+}
+
+/// The zoo source shards by row index the same way.
+#[test]
+fn zoo_source_shards_bit_identically() {
+    let spec = StudySpec::parse(
+        r#"{"name": "zoo_shard", "source": "zoo",
+            "group_by": ["futuristic"],
+            "aggregate": [{"metric": "gap", "ops": ["mean", "p50", "max"]},
+                          {"metric": "slack", "ops": ["argmin"],
+                           "args": ["year"]}]}"#,
+    )
+    .unwrap();
+    let resolved = spec.resolve(&catalog::mi210()).unwrap();
+    let single = run_single(&resolved, RunOptions::default());
+    for n in [1usize, 2, 3, 5, 8] {
+        let merged = run_sharded(&resolved, n, RunOptions::default());
+        assert_identical(&single, &merged, &format!("zoo n={n}"));
+    }
+}
+
+/// More shards than units: the surplus shards carry empty ranges and the
+/// merge still reproduces the single-process output.
+#[test]
+fn more_shards_than_points_is_exact() {
+    let spec = StudySpec::parse(
+        r#"{"name": "tiny", "axes": {"hidden": [1024], "tp": [1, 2, 4]}}"#,
+    )
+    .unwrap();
+    let resolved = spec.resolve(&catalog::mi210()).unwrap();
+    let single = run_single(&resolved, RunOptions::default());
+    let merged = run_sharded(&resolved, 8, RunOptions::default());
+    assert_identical(&single, &merged, "3 points over 8 shards");
+}

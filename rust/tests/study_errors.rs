@@ -87,6 +87,10 @@ fn every_fixture_is_covered_by_a_test() {
             "bad_filter_op.json",
             "bad_sink_kind.json",
             "cyclic_metric.json",
+            "shard_mismatch.jsonl",
+            "shard_overlap_a.jsonl",
+            "shard_overlap_b.jsonl",
+            "shard_tiny_spec.json",
             "unknown_axis.json",
         ]
     );
@@ -127,4 +131,102 @@ fn malformed_spec_fails_the_cli_with_the_field_named() {
     assert!(!out.status.success());
     let err = String::from_utf8_lossy(&out.stderr);
     assert!(err.contains("hiden"), "{err}");
+}
+
+// ---------------------------------------------------------------------------
+// shard CLI smokes: malformed shard coordinates and poisoned merge plans
+// must all fail loudly, naming the problem.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shard_zero_of_zero_is_rejected() {
+    let spec = fixture("shard_tiny_spec.json");
+    let out = commscale(&[
+        "shard", "worker", "--shard", "0/0", spec.to_str().unwrap(),
+    ]);
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("n must be >= 1"), "{err}");
+}
+
+#[test]
+fn shard_k_at_least_n_is_rejected() {
+    let spec = fixture("shard_tiny_spec.json");
+    for coords in ["2/2", "5/3"] {
+        let out = commscale(&[
+            "shard", "worker", "--shard", coords, spec.to_str().unwrap(),
+        ]);
+        assert!(!out.status.success(), "--shard {coords}");
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(err.contains("k < n"), "--shard {coords}: {err}");
+    }
+}
+
+#[test]
+fn shard_memory_cap_is_rejected_loudly() {
+    // shard workers pin memory_cap off; silently ignoring the flag would
+    // return different winners than `commscale optimize --memory-cap`
+    let spec = fixture("shard_tiny_spec.json");
+    let out = commscale(&[
+        "shard",
+        "run",
+        "-n",
+        "2",
+        "--optimize",
+        "--memory-cap",
+        "0.5",
+        spec.to_str().unwrap(),
+    ]);
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("not supported under"), "{err}");
+}
+
+#[test]
+fn overlapping_shard_plan_fixture_fails_the_merge() {
+    let spec = fixture("shard_tiny_spec.json");
+    let a = fixture("shard_overlap_a.jsonl");
+    let b = fixture("shard_overlap_b.jsonl");
+    let out = commscale(&[
+        "shard",
+        "merge",
+        spec.to_str().unwrap(),
+        a.to_str().unwrap(),
+        b.to_str().unwrap(),
+    ]);
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("overlapping shard plans"), "{err}");
+    assert!(err.contains("0/2"), "{err}");
+}
+
+#[test]
+fn mismatched_spec_fixture_fails_the_merge() {
+    let spec = fixture("shard_tiny_spec.json");
+    let bad = fixture("shard_mismatch.jsonl");
+    let out = commscale(&[
+        "shard",
+        "merge",
+        spec.to_str().unwrap(),
+        bad.to_str().unwrap(),
+    ]);
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("merging mismatched specs"), "{err}");
+    assert!(err.contains("some_other_study"), "{err}");
+}
+
+#[test]
+fn non_payload_file_fails_the_merge() {
+    let spec = fixture("shard_tiny_spec.json");
+    let not_a_payload = fixture("unknown_axis.json");
+    let out = commscale(&[
+        "shard",
+        "merge",
+        spec.to_str().unwrap(),
+        not_a_payload.to_str().unwrap(),
+    ]);
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("not a commscale shard payload"), "{err}");
 }
