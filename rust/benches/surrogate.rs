@@ -1,0 +1,140 @@
+//! Bench: surrogate fidelity vs the exact simulation on the shipped
+//! 103k-point `tp_pp_evolution_argmin` example — the acceptance check
+//! that `--fidelity surrogate` delivers the billed speedup (>= 10x full,
+//! >= 5x quick) **and** stays inside the paper's 15% error budget on an
+//! LCG-sampled calibration set, plus the machine-readable trajectory
+//! record `BENCH_surrogate.json` (`points_per_sec`, `speedup_vs_exact`,
+//! `max_rel_err`).
+//!
+//! Env knobs (used by CI): `COMMSCALE_BENCH_QUICK=1` / `--quick` shrinks
+//! the grid (~7k points) and the measurement budget.
+
+use std::path::Path;
+use std::time::Instant;
+
+use commscale::hw::{catalog, Evolution};
+use commscale::study::{
+    calibrate, run_study, RowSink, RunOptions, StudySpec, VecSink,
+};
+use commscale::sweep::Fidelity;
+use commscale::util::microbench::{bench_header, fmt_time, Bench};
+use commscale::util::Json;
+
+fn main() {
+    bench_header("surrogate fidelity (estimator vs exact simulation)");
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("COMMSCALE_BENCH_QUICK").is_ok();
+
+    let spec_path = Path::new("../examples/studies/tp_pp_evolution_argmin.json");
+    let mut spec = StudySpec::parse_file(spec_path)
+        .expect("examples/studies/tp_pp_evolution_argmin.json");
+    spec.sinks.clear(); // rows are consumed in-process here
+    if quick {
+        spec.axes.hidden = vec![4096, 16384];
+        spec.axes.seq_len = vec![2048, 8192];
+        spec.axes.evolutions =
+            vec![Evolution::none(), Evolution::flop_vs_bw_4x()];
+    }
+    let device = catalog::mi210();
+    let resolved = spec.resolve(&device).unwrap();
+    let total = resolved.total_points();
+    println!(
+        "grid: {total} scenario points ({} hardware points)",
+        resolved.hardware.len()
+    );
+    if !quick {
+        assert!(
+            total > 100_000,
+            "the example study shrank below its 103k-point billing: {total}"
+        );
+    }
+
+    // -- exact baseline (timed once: it is the slow side) ------------------
+    let t0 = Instant::now();
+    let mut exact = VecSink::new();
+    {
+        let mut sinks: Vec<&mut dyn RowSink> = vec![&mut exact];
+        run_study(&resolved, RunOptions::default(), &mut sinks).unwrap();
+    }
+    let exact_secs = t0.elapsed().as_secs_f64();
+    println!(
+        "exact study: {} total, {:.0} points/s, {} groups",
+        fmt_time(exact_secs),
+        total as f64 / exact_secs,
+        exact.rows.len()
+    );
+
+    // -- the surrogate, measured -------------------------------------------
+    spec.fidelity = Fidelity::Surrogate;
+    let sur_resolved = spec.resolve(&device).unwrap();
+    let res = Bench::new("surrogate_study")
+        .measure(std::time::Duration::from_millis(if quick { 300 } else { 2000 }))
+        .max_iters(if quick { 5 } else { 10 })
+        .run(|| {
+            let mut sink = VecSink::new();
+            let mut sinks: Vec<&mut dyn RowSink> = vec![&mut sink];
+            run_study(&sur_resolved, RunOptions::default(), &mut sinks)
+                .unwrap();
+            sink.rows.len()
+        });
+    let mut sur = VecSink::new();
+    {
+        let mut sinks: Vec<&mut dyn RowSink> = vec![&mut sur];
+        run_study(&sur_resolved, RunOptions::default(), &mut sinks).unwrap();
+    }
+
+    // -- sanity: fidelity changes values, never the grid shape -------------
+    assert_eq!(exact.columns, sur.columns, "column drift across fidelities");
+    assert_eq!(
+        exact.rows.len(),
+        sur.rows.len(),
+        "group-count drift across fidelities"
+    );
+
+    let sur_secs = res.summary.median;
+    let points_per_sec = total as f64 / sur_secs;
+    let speedup = exact_secs / sur_secs;
+    println!(
+        "surrogate {} vs exact {} — {speedup:.1}x ({points_per_sec:.0} \
+         points/s)",
+        fmt_time(sur_secs),
+        fmt_time(exact_secs)
+    );
+
+    // -- calibration: the measured error bound -----------------------------
+    let samples = if quick { 64 } else { 256 };
+    let cal = calibrate(&sur_resolved, samples).unwrap();
+    print!("{}", cal.render());
+
+    // -- acceptance ---------------------------------------------------------
+    let need = if quick { 5.0 } else { 10.0 };
+    assert!(
+        speedup >= need,
+        "acceptance: surrogate must be >= {need}x the exact study, got \
+         {speedup:.1}x"
+    );
+    assert!(
+        cal.max_rel_err <= 0.15,
+        "acceptance: sampled max relative error {:.4} above the 15% \
+         budget (worst: {:?})",
+        cal.max_rel_err,
+        cal.worst
+    );
+
+    res.write_json_with(
+        Path::new("BENCH_surrogate.json"),
+        vec![
+            ("grid_points", Json::num(total as f64)),
+            ("groups", Json::num(sur.rows.len() as f64)),
+            ("points_per_sec", Json::num(points_per_sec)),
+            ("exact_secs", Json::num(exact_secs)),
+            ("speedup_vs_exact", Json::num(speedup)),
+            ("error_sampled", Json::num(cal.sampled as f64)),
+            ("max_rel_err", Json::num(cal.max_rel_err)),
+            ("mean_rel_err", Json::num(cal.mean_rel_err)),
+            ("quick", Json::Bool(quick)),
+        ],
+    )
+    .unwrap();
+    println!("wrote BENCH_surrogate.json");
+}

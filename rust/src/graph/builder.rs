@@ -33,7 +33,7 @@ use crate::model::LayerCounts;
 use super::{CommClass, OpGraph, OpId, OpKind, Phase};
 
 /// What to include in the built graph.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct GraphOptions {
     /// Emit the serialized TP activation/error collectives (only
     /// meaningful when `cfg.tp() > 1`).

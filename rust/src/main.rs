@@ -35,9 +35,10 @@ use commscale::runtime::Runtime;
 use commscale::shard;
 use commscale::sim::AnalyticCost;
 use commscale::study::{
-    self, builtin, RowSink, RunOptions, SpecSink, StudySpec, VecSink,
+    self, builtin, Execution, RowSink, RunOptions, SpecSink, StudySpec,
+    VecSink,
 };
-use commscale::sweep::{self, GridBuilder};
+use commscale::sweep::{self, Fidelity, GridBuilder};
 use commscale::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -113,41 +114,105 @@ fn study_cmd(args: &Args, device: &DeviceSpec) -> Result<()> {
     let Some(target) = args.positional.get(1) else {
         bail!(
             "usage: commscale study <spec.json|builtin-name> [--explain] \
-             [--csv PATH] [--threads N] [--chunk N]; list built-ins with \
+             [--csv PATH] [--threads N] [--chunk N] \
+             [--fidelity exact|surrogate] [--error-sample K \
+             [--error-bound FRAC]]; list built-ins with \
              `commscale study --list`"
         );
     };
-    let spec = load_spec(target)?;
+    let mut spec = load_spec(target)?;
+    apply_fidelity(args, &mut spec)?;
     let resolved = spec.resolve(device)?;
     if args.has("explain") {
         print!("{}", resolved.explain());
         return Ok(());
+    }
+    let error_sample = args.get_usize("error-sample", 0);
+    if error_sample > 0 && spec.fidelity != Fidelity::Surrogate {
+        bail!(
+            "--error-sample calibrates the surrogate estimator against the \
+             exact simulation; add --fidelity surrogate (or put \
+             \"fidelity\": \"surrogate\" in the spec)"
+        );
     }
     eprint!("{}", resolved.explain());
     let opts = RunOptions {
         threads: args.get_usize("threads", 0),
         chunk: args.get_usize("chunk", 0),
     };
-    let mut sinks = study::build_sinks(&spec, csv(args));
-    let outcome = {
-        let mut refs: Vec<&mut dyn RowSink> =
-            sinks.iter_mut().map(|b| &mut **b).collect();
-        study::run_study(&resolved, opts, &mut refs)?
-    };
-    for r in &outcome.renders {
-        print!("{r}");
-    }
-    eprintln!(
-        "study {:?}: {} points evaluated, {} rows matched{}",
-        spec.name,
-        outcome.points_evaluated,
-        outcome.rows_matched,
-        if outcome.groups_emitted > 0 {
-            format!(", {} groups emitted", outcome.groups_emitted)
-        } else {
-            String::new()
+    if resolved.spec.execution == Execution::Search {
+        let report = optimizer::optimize_study(
+            &resolved,
+            &optimizer::OptimizeOptions {
+                threads: opts.threads,
+                memory_cap: None,
+            },
+        )?;
+        let mut sinks = study::build_sinks(&spec, csv(args));
+        for s in sinks.iter_mut() {
+            s.begin(&report.columns)?;
         }
-    );
+        for row in &report.rows {
+            for s in sinks.iter_mut() {
+                s.row(row)?;
+            }
+        }
+        for s in sinks.iter_mut() {
+            if let Some(r) = s.finish()? {
+                print!("{r}");
+            }
+        }
+        eprintln!(
+            "study {:?} (execution: search): {} groups; evaluated {} of {} \
+             candidates ({:.1}% pruned)",
+            spec.name,
+            report.groups,
+            report.evaluated,
+            report.candidates,
+            100.0 * report.pruned_fraction(),
+        );
+    } else {
+        let mut sinks = study::build_sinks(&spec, csv(args));
+        let outcome = {
+            let mut refs: Vec<&mut dyn RowSink> =
+                sinks.iter_mut().map(|b| &mut **b).collect();
+            study::run_study(&resolved, opts, &mut refs)?
+        };
+        for r in &outcome.renders {
+            print!("{r}");
+        }
+        eprintln!(
+            "study {:?}: {} points evaluated, {} rows matched{}",
+            spec.name,
+            outcome.points_evaluated,
+            outcome.rows_matched,
+            if outcome.groups_emitted > 0 {
+                format!(", {} groups emitted", outcome.groups_emitted)
+            } else {
+                String::new()
+            }
+        );
+    }
+    if error_sample > 0 {
+        let cal = study::calibrate(&resolved, error_sample)?;
+        print!("{}", cal.render());
+        if let Some(bound) = args.get("error-bound") {
+            let bound: f64 = bound
+                .parse()
+                .context("--error-bound must be a fraction, e.g. 0.15")?;
+            if cal.max_rel_err > bound {
+                bail!(
+                    "CALIBRATION FAILED: sampled max relative error {:.4} \
+                     exceeds the --error-bound {bound}",
+                    cal.max_rel_err
+                );
+            }
+            println!(
+                "calibration ok: max relative error {:.4} <= bound {bound}",
+                cal.max_rel_err
+            );
+        }
+    }
     Ok(())
 }
 
@@ -166,6 +231,31 @@ fn load_spec(target: &str) -> Result<StudySpec> {
     }
 }
 
+/// Apply the `--fidelity` CLI override to a loaded spec **before**
+/// `resolve`: the override lands inside the spec itself, so shard
+/// fingerprints, `to_json` round-trips, and the optimizer all see it
+/// without a side channel.
+fn apply_fidelity(args: &Args, spec: &mut StudySpec) -> Result<()> {
+    if let Some(text) = args.get("fidelity") {
+        let f = Fidelity::parse(text).with_context(|| {
+            format!(
+                "--fidelity: unknown {text:?} (expected one of {})",
+                Fidelity::supported()
+            )
+        })?;
+        if f != Fidelity::Exact && spec.source != study::Source::Grid {
+            bail!(
+                "--fidelity {}: only grid studies are simulated (this spec \
+                 reads {:?} rows); drop the flag or use exact",
+                f.as_str(),
+                spec.source.as_str()
+            );
+        }
+        spec.fidelity = f;
+    }
+    Ok(())
+}
+
 /// `commscale optimize` — the strategy optimizer: search a grid study's
 /// group-by argmin (memory feasibility + branch-and-bound) instead of
 /// sweeping every point, with optional exhaustive verification and
@@ -180,7 +270,8 @@ fn optimize_cmd(args: &Args, device: &DeviceSpec) -> Result<()> {
              time_per_sample|comm_fraction"
         );
     };
-    let spec = load_spec(target)?;
+    let mut spec = load_spec(target)?;
+    apply_fidelity(args, &mut spec)?;
     let resolved = spec.resolve(device)?;
     if args.has("explain") {
         print!("{}", resolved.explain());
@@ -393,7 +484,8 @@ fn shard_worker(args: &Args, device: &DeviceSpec) -> Result<()> {
         args.get("shard")
             .context("shard worker needs --shard k/n (e.g. --shard 0/4)")?,
     )?;
-    let spec = load_spec(target)?;
+    let mut spec = load_spec(target)?;
+    apply_fidelity(args, &mut spec)?;
     let resolved = spec.resolve(device)?;
     let opts = RunOptions {
         threads: args.get_usize("threads", 0),
@@ -451,7 +543,8 @@ fn shard_run(args: &Args, device: &DeviceSpec) -> Result<()> {
     let n = n.context("shard run needs -n N (the shard count)")?;
     shard::ShardId::new(0, n)?;
     let target = rest.first().context("shard run needs a spec or name")?;
-    let spec = load_spec(target)?;
+    let mut spec = load_spec(target)?;
+    apply_fidelity(args, &mut spec)?;
     let resolved = spec.resolve(device)?;
     eprint!("{}", resolved.explain());
 
@@ -483,6 +576,9 @@ fn shard_run(args: &Args, device: &DeviceSpec) -> Result<()> {
             .arg(worker_threads.to_string());
         if args.has("optimize") {
             cmd.arg("--optimize");
+        }
+        if let Some(f) = args.get("fidelity") {
+            cmd.arg("--fidelity").arg(f);
         }
         let child = cmd
             .spawn()
@@ -547,7 +643,8 @@ fn shard_merge(args: &Args, device: &DeviceSpec) -> Result<()> {
         bail!("shard merge: no payload files given (expected every worker's \
                --out file)");
     }
-    let spec = load_spec(target)?;
+    let mut spec = load_spec(target)?;
+    apply_fidelity(args, &mut spec)?;
     let resolved = spec.resolve(device)?;
     let inputs: Result<Vec<shard::merge::ShardInput>> = rest[1..]
         .iter()
@@ -633,8 +730,19 @@ declarative studies (the one scenario-query surface):
   study ... --explain    print the resolved axes and point count only
   study ... --csv PATH   append a streaming CSV sink
   study ... --threads N --chunk N
+  study ... --fidelity exact|surrogate
+                         surrogate swaps the per-point simulation for the
+                         closed-form estimator built on the same memoized
+                         cost tables: 10-100x faster row-level studies,
+                         same streaming/sharding machinery (DESIGN.md §13)
+  study ... --error-sample K [--error-bound FRAC]
+                         re-run K LCG-sampled points at exact fidelity and
+                         report the surrogate's max/mean relative makespan
+                         error; --error-bound fails the run if max > FRAC
   (a {\"kind\": \"spec\", \"path\": ...} sink re-emits grouped argmin rows
-   as a new study spec — coarse winners seed a fine follow-up study)
+   as a new study spec — coarse winners seed a fine follow-up study;
+   \"execution\": \"search\" routes a grouped-argmin spec through the
+   optimizer's branch-and-bound instead of the exhaustive sweep)
 
 strategy optimizer (search, not sweep):
   optimize <spec|name>   find each group's argmin strategy WITHOUT
@@ -651,6 +759,8 @@ strategy optimizer (search, not sweep):
                          argmin rows match bit-for-bit (loud on any bug)
     --emit-spec PATH     write the winners as a new runnable study spec
     --memory-cap FRAC    refuse strategies needing > FRAC of device HBM
+    --fidelity exact|surrogate   evaluate candidates with the estimator
+                         (argmin equals a surrogate exhaustive sweep)
     --csv PATH --threads N
 
 sharded scatter/gather (split one study/search across processes or hosts;
@@ -661,6 +771,9 @@ merged output is bit-identical to single-process execution):
                          keys instead of the study by point ranges
     --worker-threads T   threads per worker (default: all cores each)
     --csv PATH --emit-spec PATH   as in study/optimize
+    --fidelity exact|surrogate    forwarded to every worker; the merged
+                         surrogate output stays byte-identical to a
+                         single-process surrogate run
     --keep-dir DIR       keep the worker payload files for inspection
   shard worker --shard k/n <spec|name> [--out PATH] [--optimize]
                          run one shard anywhere, streaming a jsonl payload

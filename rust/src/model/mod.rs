@@ -20,7 +20,7 @@ use crate::parallelism::ParallelismSpec;
 /// TP, PP (+ microbatches), DP, and sequence parallelism. Under PP,
 /// `batch` is the per-microbatch batch; the global batch is
 /// `batch · microbatches · dp`.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct ModelConfig {
     pub hidden: u64,
     pub seq_len: u64,

@@ -36,8 +36,8 @@
 //! equivalence tests (`tests/optimizer_golden.rs`) enforce the result:
 //! bit-identical argmins to the exhaustive sweep.
 
-use crate::graph::{CommClass, OpKind, Phase};
 use crate::model::ModelConfig;
+use crate::sim::{surrogate_config, SurrogateDigest};
 use crate::sweep::{EvalCtx, PointMetrics, Scenario, ScenarioGrid};
 
 /// Guard band absorbing the ulp-level difference between the simulator's
@@ -92,88 +92,21 @@ pub fn samples(cfg: &ModelConfig) -> f64 {
     (cfg.batch * cfg.microbatches() * cfg.dp()) as f64
 }
 
-/// Per-layer cost digest extracted from the surrogate graph in one walk.
-struct LayerDigest {
-    /// Duration sum along the dependency path (fwd chain, backward
-    /// input-grad spine, serialized TP collectives) — floor 2.
-    path: f64,
-    /// Sum of ALL compute durations (compute-stream FIFO) — floor 1.
-    compute: f64,
-    /// One layer's overlappable DP all-reduce duration.
-    ar: f64,
-    /// One microbatch's stage-boundary send durations (fwd + bwd).
-    p2p: f64,
-    /// The true optimizer-step duration for the *real* stage (queried
-    /// with the exact scaled byte count, so it memoizes with the real
-    /// graph's op).
-    opt: f64,
-}
-
-fn digest(ctx: &mut EvalCtx, grid: &ScenarioGrid, sc: &Scenario) -> LayerDigest {
-    let cfg = &sc.cfg;
-    // One-layer, one-microbatch surrogate with the same strategy and
-    // payload axes: `layers = pp` makes `stage_layers = 1`; costs never
-    // read `microbatches`, so the memoized durations equal the real
-    // graph's bit-for-bit.
-    let mut sur = *cfg;
-    sur.layers = cfg.pp();
-    sur.par.microbatches = 1;
-    let sur_sc = Scenario { cfg: sur, opts: sc.opts, hw: sc.hw };
-    let stage_layers = cfg.stage_layers();
-
+/// The shared surrogate digest ([`crate::sim::surrogate`], where PR 4's
+/// private extraction now lives) plus the real stage's optimizer-step
+/// duration — everything [`lower_bound`] reads.
+fn digest(
+    ctx: &mut EvalCtx,
+    grid: &ScenarioGrid,
+    sc: &Scenario,
+) -> (SurrogateDigest, f64) {
+    let sur_sc =
+        Scenario { cfg: surrogate_config(&sc.cfg), opts: sc.opts, hw: sc.hw };
+    let stage_layers = sc.cfg.stage_layers();
     ctx.with_graph_and_cost(grid, &sur_sc, |g, cost| {
-        let mut d =
-            LayerDigest { path: 0.0, compute: 0.0, ar: 0.0, p2p: 0.0, opt: 0.0 };
-        let mut opt_bytes = 0u64;
-        // the last steady chain op (not optimizer, not overlappable AR,
-        // not a P2P send) anchors the dependency-path walk below
-        let mut tail: Option<usize> = None;
-        for (i, op) in g.ops.iter().enumerate() {
-            if matches!(op.phase, Phase::Optimizer) {
-                if let OpKind::Elementwise { bytes } = op.kind {
-                    opt_bytes = bytes; // 6 x one layer's parameter bytes
-                }
-                continue;
-            }
-            match op.kind.comm_payload() {
-                None => {
-                    d.compute += cost.compute_time(&op.kind);
-                    tail = Some(i);
-                }
-                Some((_, Some(CommClass::Serialized))) => {
-                    tail = Some(i);
-                }
-                Some((_, Some(CommClass::Overlappable))) => {
-                    d.ar += cost.comm_time(&op.kind);
-                }
-                Some((_, None)) => {
-                    d.p2p += cost.comm_time(&op.kind);
-                }
-            }
-        }
-        // Dependency-path walk: each op on the walk directly depends on
-        // `deps[0]`, so it starts no earlier than that op ends — any
-        // root-to-tail dependency path is a sound floor. Following the
-        // first dep from the chain tail traces the fwd chain and the
-        // backward input-grad spine; the branched weight-grad GEMMs are
-        // never anyone's `deps[0]`, so the walk skips exactly the ops
-        // that can hide under the serialized collectives.
-        let mut cur = tail;
-        while let Some(i) = cur {
-            let op = &g.ops[i];
-            d.path += match op.kind.comm_payload() {
-                None => cost.compute_time(&op.kind),
-                Some(_) => cost.comm_time(&op.kind),
-            };
-            cur = op.deps.first().map(|dep| dep.0);
-        }
-        if opt_bytes > 0 {
-            // the real graph's optimizer op covers the whole stage
-            d.opt = cost.compute_time(&OpKind::Elementwise {
-                bytes: stage_layers * opt_bytes,
-            });
-        }
-        d
+        let d = SurrogateDigest::extract(g, cost);
+        let opt = d.opt_time(cost, stage_layers);
+        (d, opt)
     })
 }
 
@@ -187,7 +120,7 @@ pub fn lower_bound(
     obj: Objective,
 ) -> f64 {
     let cfg = &sc.cfg;
-    let d = digest(ctx, grid, sc);
+    let (d, opt) = digest(ctx, grid, sc);
     let sl = cfg.stage_layers() as f64;
     let mb = cfg.microbatches() as f64;
 
@@ -203,9 +136,9 @@ pub fn lower_bound(
         // second independent floor (final makespan >= pre-stretch one).
         let scale = (mb + (pp - 1) as f64) / mb;
         let steady_lb = steady_floor.max(p2p_total);
-        (steady_lb * scale + d.opt).max(ar_total + d.opt)
+        (steady_lb * scale + opt).max(ar_total + opt)
     } else {
-        steady_floor.max(ar_total) + d.opt
+        steady_floor.max(ar_total) + opt
     };
 
     match obj {
@@ -223,7 +156,7 @@ pub fn lower_bound(
             if cfg.pp() > 1 || makespan_lb <= 0.0 {
                 return 0.0;
             }
-            let compute_ub = (mb * sl * d.compute + d.opt) * (1.0 + 1e-9);
+            let compute_ub = (mb * sl * d.compute + opt) * (1.0 + 1e-9);
             ((1.0 - compute_ub / makespan_lb) * FP_GUARD).max(0.0)
         }
     }

@@ -411,6 +411,7 @@ pub fn optimize_study_shard(
                 &g.cands,
                 p.objective,
                 opts.memory_cap,
+                resolved.spec.fidelity,
             );
         }
     } else {
@@ -429,6 +430,7 @@ pub fn optimize_study_shard(
                             &groups[gi].cands,
                             p.objective,
                             opts.memory_cap,
+                            resolved.spec.fidelity,
                         );
                     }
                 });

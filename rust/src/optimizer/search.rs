@@ -18,7 +18,7 @@
 
 use crate::graph::GraphOptions;
 use crate::model::ModelConfig;
-use crate::sweep::{EvalCtx, PointMetrics, Scenario, ScenarioGrid};
+use crate::sweep::{EvalCtx, Fidelity, PointMetrics, Scenario, ScenarioGrid};
 
 use super::bound::{lower_bound, Objective};
 use super::memory;
@@ -59,12 +59,18 @@ pub struct GroupOutcome {
 
 /// Search one group. Returns `None` when the memory check rejects every
 /// candidate (only possible with `memory_cap` set).
+///
+/// `fidelity` picks the evaluator for stage 3: the bound is sound
+/// against the surrogate estimate too (every floor it sums is a term
+/// the estimator also includes — see `sim::surrogate`), so a surrogate
+/// search stays argmin-identical to a surrogate exhaustive sweep.
 pub fn search_group(
     ctx: &mut EvalCtx,
     hw_grid: &ScenarioGrid,
     cands: &[Candidate],
     obj: Objective,
     memory_cap: Option<f64>,
+    fidelity: Fidelity,
 ) -> Option<GroupOutcome> {
     // -- stage 1: memory-capacity feasibility ------------------------------
     let feasible: Vec<usize> = match memory_cap {
@@ -102,7 +108,7 @@ pub fn search_group(
         if lb > best {
             break; // sorted ascending: every remaining bound exceeds best
         }
-        let m = ctx.eval(hw_grid, &cands[i].scenario());
+        let m = ctx.eval_at(hw_grid, &cands[i].scenario(), fidelity);
         evaluated += 1;
         let t = obj.of(&cands[i].cfg, &m);
         // strict improvement, or an exact tie resolved to earlier stream
@@ -171,11 +177,12 @@ mod tests {
         grid: &ScenarioGrid,
         cands: &[Candidate],
         obj: Objective,
+        fidelity: Fidelity,
     ) -> (usize, f64) {
         let mut best = f64::INFINITY;
         let mut win = usize::MAX;
         for (i, c) in cands.iter().enumerate() {
-            let t = obj.of(&c.cfg, &ctx.eval(grid, &c.scenario()));
+            let t = obj.of(&c.cfg, &ctx.eval_at(grid, &c.scenario(), fidelity));
             if t < best {
                 best = t;
                 win = i;
@@ -191,9 +198,11 @@ mod tests {
         assert_eq!(cands.len(), 25);
         for obj in [Objective::TimePerSample, Objective::IterTime] {
             let mut ctx = EvalCtx::new();
-            let (bwin, bbest) = brute(&mut ctx, &grid, &cands, obj);
-            let out = search_group(&mut ctx, &grid, &cands, obj, None)
-                .expect("no memory cap, group cannot be empty");
+            let (bwin, bbest) =
+                brute(&mut ctx, &grid, &cands, obj, Fidelity::Exact);
+            let out =
+                search_group(&mut ctx, &grid, &cands, obj, None, Fidelity::Exact)
+                    .expect("no memory cap, group cannot be empty");
             assert_eq!(out.winner, bwin, "{obj:?}");
             assert_eq!(out.best.to_bits(), bbest.to_bits(), "{obj:?}");
             assert!(
@@ -202,6 +211,30 @@ mod tests {
                 out.evaluated,
                 cands.len()
             );
+        }
+    }
+
+    #[test]
+    fn surrogate_search_matches_surrogate_brute_force() {
+        // the bound must stay sound against the *estimator* too: the
+        // surrogate search's winner and value must be bit-identical to a
+        // surrogate-fidelity exhaustive scan.
+        let (grid, cands) = group(16);
+        for obj in [Objective::TimePerSample, Objective::IterTime] {
+            let mut ctx = EvalCtx::new();
+            let (bwin, bbest) =
+                brute(&mut ctx, &grid, &cands, obj, Fidelity::Surrogate);
+            let out = search_group(
+                &mut ctx,
+                &grid,
+                &cands,
+                obj,
+                None,
+                Fidelity::Surrogate,
+            )
+            .expect("no memory cap, group cannot be empty");
+            assert_eq!(out.winner, bwin, "{obj:?}");
+            assert_eq!(out.best.to_bits(), bbest.to_bits(), "{obj:?}");
         }
     }
 
@@ -222,6 +255,7 @@ mod tests {
             &cands,
             Objective::TimePerSample,
             None,
+            Fidelity::Exact,
         )
         .unwrap();
         assert!(
@@ -236,14 +270,26 @@ mod tests {
         let (grid, cands) = group(8);
         let mut ctx = EvalCtx::new();
         // an absurdly tight cap rejects everything
-        let none =
-            search_group(&mut ctx, &grid, &cands, Objective::IterTime, Some(1e-9));
+        let none = search_group(
+            &mut ctx,
+            &grid,
+            &cands,
+            Objective::IterTime,
+            Some(1e-9),
+            Fidelity::Exact,
+        );
         assert!(none.is_none());
         // a full-HBM cap keeps the sharded strategies and counts the rest
         // (tp1·pp1·dp8 replicates ~77 GB of state on a 64 GB device)
-        let out =
-            search_group(&mut ctx, &grid, &cands, Objective::IterTime, Some(1.0))
-                .unwrap();
+        let out = search_group(
+            &mut ctx,
+            &grid,
+            &cands,
+            Objective::IterTime,
+            Some(1.0),
+            Fidelity::Exact,
+        )
+        .unwrap();
         assert!(out.infeasible >= 1);
         assert!(out.infeasible < cands.len());
     }

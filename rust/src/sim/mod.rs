@@ -10,6 +10,8 @@
 
 pub mod cost;
 pub mod engine;
+pub mod surrogate;
 
 pub use cost::{AnalyticCost, CostProvider, OverlapModel};
 pub use engine::{apply_pipeline, simulate, simulate_with, SimArena, SimReport};
+pub use surrogate::{estimate_report, surrogate_config, SurrogateDigest};

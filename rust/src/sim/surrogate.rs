@@ -1,0 +1,467 @@
+//! The surrogate estimator: full per-row metrics from a one-layer /
+//! one-microbatch digest, without simulating the real graph.
+//!
+//! PR 4's branch-and-bound already exploited the key structural fact of
+//! the builder's graphs: all `microbatches × stage_layers` layer passes
+//! carry identical op payloads, so every per-pass quantity can be read
+//! off a **surrogate config** (`layers = pp`, `microbatches = 1`) whose
+//! ops memoize with the real graph's bit-for-bit. This module extracts
+//! that digest into a shared home and extends it from a makespan *floor*
+//! to a full [`SimReport`] *estimate* (DESIGN.md §13):
+//!
+//! * **forward** — every fwd op (compute and serialized collectives)
+//!   sits on one dependency chain, so the steady period is exactly the
+//!   per-pass sum: `fwd_end = L · fwd_chain`, `L = mb · stage_layers`.
+//! * **backward** — the weight-grad GEMMs branch off the input-grad
+//!   spine and hide under the serialized collectives, so the repeated
+//!   pass is a small event graph with two contended resources (the
+//!   compute-stream FIFO and the dependency spine). Its asymptotic
+//!   period is the maximum cycle mean; [`SurrogateDigest::extract`]
+//!   computes it over all single-wrap circuits: `compute total` (the
+//!   empty cut), the spine path (the full cut), and every mixed circuit
+//!   that follows the spine through a run of serialized collectives and
+//!   returns through the compute FIFO of the next pass.
+//! * **DP all-reduce / P2P streams** — FIFO closed forms: last-issue
+//!   plus drain, or first-issue plus total busy time when saturated.
+//! * **optimizer** — the real stage's op, queried with the exact scaled
+//!   byte count (so it memoizes with the real graph's op).
+//!
+//! What the estimate drops is the O(one-pass) boundary transients —
+//! fwd/bwd handoff and the last pass's packing — a ~1/L relative error,
+//! measured end-to-end by `commscale study --fidelity surrogate
+//! --error-sample K` and pinned by `tests/surrogate_fidelity.rs`.
+//!
+//! The estimate is deliberately **never below** the bound's two floors
+//! (`lower_bound` in `optimizer/bound.rs` reads the same digest), so the
+//! optimizer's pruning stays sound when it searches at surrogate
+//! fidelity.
+
+use crate::graph::{CommClass, OpGraph, OpKind, Phase};
+use crate::model::ModelConfig;
+
+use super::cost::CostProvider;
+use super::engine::SimReport;
+
+/// The one-layer / one-microbatch config whose graph the digest reads.
+/// `layers = pp` makes `stage_layers = 1`; costs never read
+/// `microbatches`, so every memoized duration equals the real graph's
+/// bit-for-bit.
+pub fn surrogate_config(cfg: &ModelConfig) -> ModelConfig {
+    let mut sur = *cfg;
+    sur.layers = cfg.pp();
+    sur.par.microbatches = 1;
+    sur
+}
+
+/// Per-layer cost digest extracted from the surrogate graph in one walk.
+///
+/// The first four fields and [`SurrogateDigest::opt_time`] feed the
+/// optimizer's lower bound exactly as PR 4's private digest did (same
+/// accumulation order, same bits); the rest extend it to the full-report
+/// estimator ([`estimate_report`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SurrogateDigest {
+    /// Duration sum along the dependency path (fwd chain, backward
+    /// input-grad spine, serialized TP collectives) — bound floor 2.
+    pub path: f64,
+    /// Sum of ALL compute durations (compute-stream FIFO) — bound floor 1.
+    pub compute: f64,
+    /// One layer's overlappable DP all-reduce duration.
+    pub ar: f64,
+    /// One microbatch's stage-boundary send durations (fwd + bwd).
+    pub p2p: f64,
+    /// The surrogate optimizer op's byte count (6 × one layer's parameter
+    /// bytes); [`SurrogateDigest::opt_time`] scales it to the real stage.
+    pub opt_bytes: u64,
+    /// Per-pass forward chain: every fwd compute op and serialized
+    /// collective (the fwd graph is one dependency chain, so this is the
+    /// exact steady period).
+    pub fwd_chain: f64,
+    /// Per-pass forward compute (busy-time scaling).
+    pub fwd_compute: f64,
+    /// Per-pass backward compute (busy-time scaling; also the empty-cut
+    /// circuit of the backward period).
+    pub bwd_compute: f64,
+    /// Backward portion of the dependency-path walk (the full-cut
+    /// circuit of the backward period).
+    pub bwd_path: f64,
+    /// Per-pass serialized-collective busy time (fwd + bwd).
+    pub serialized: f64,
+    /// Asymptotic per-pass period of the repeated backward segment: the
+    /// maximum cycle mean over single-wrap circuits of the pass's event
+    /// graph — `max(bwd_compute, bwd_path, mixed circuits)`.
+    pub bwd_period: f64,
+}
+
+/// One backward-pass entry of the mixed-circuit scan, in emission order.
+struct BwdEntry {
+    /// Serialized collective (`+dur` inside a circuit's spine segment)
+    /// vs compute (`−dur` off-spine: it rides the FIFO return path).
+    comm: bool,
+    dur: f64,
+    /// Graph op index, to look up spine membership after the walk.
+    op: usize,
+}
+
+impl SurrogateDigest {
+    /// Extract the digest from a surrogate graph (`surrogate_config`'s
+    /// shape: one layer, one microbatch) — ~30 memoized cost lookups and
+    /// one O(ops²) scan over the ~16-op backward pass, no simulation.
+    pub fn extract(g: &OpGraph, cost: &dyn CostProvider) -> SurrogateDigest {
+        let mut d = SurrogateDigest::default();
+        // the last steady chain op (not optimizer, not overlappable AR,
+        // not a P2P send) anchors the dependency-path walk below
+        let mut tail: Option<usize> = None;
+        let mut bwd: Vec<BwdEntry> = Vec::with_capacity(24);
+        for (i, op) in g.ops.iter().enumerate() {
+            if matches!(op.phase, Phase::Optimizer) {
+                if let OpKind::Elementwise { bytes } = op.kind {
+                    d.opt_bytes = bytes; // 6 x one layer's parameter bytes
+                }
+                continue;
+            }
+            let is_fwd = matches!(op.phase, Phase::Forward);
+            match op.kind.comm_payload() {
+                None => {
+                    let t = cost.compute_time(&op.kind);
+                    d.compute += t;
+                    tail = Some(i);
+                    if is_fwd {
+                        d.fwd_chain += t;
+                        d.fwd_compute += t;
+                    } else {
+                        d.bwd_compute += t;
+                        bwd.push(BwdEntry { comm: false, dur: t, op: i });
+                    }
+                }
+                Some((_, Some(CommClass::Serialized))) => {
+                    let t = cost.comm_time(&op.kind);
+                    d.serialized += t;
+                    tail = Some(i);
+                    if is_fwd {
+                        d.fwd_chain += t;
+                    } else {
+                        bwd.push(BwdEntry { comm: true, dur: t, op: i });
+                    }
+                }
+                Some((_, Some(CommClass::Overlappable))) => {
+                    d.ar += cost.comm_time(&op.kind);
+                }
+                Some((_, None)) => {
+                    d.p2p += cost.comm_time(&op.kind);
+                }
+            }
+        }
+        // Dependency-path walk: each op on the walk directly depends on
+        // `deps[0]`, so it starts no earlier than that op ends — any
+        // root-to-tail dependency path is a sound floor. Following the
+        // first dep from the chain tail traces the fwd chain and the
+        // backward input-grad spine; the branched weight-grad GEMMs are
+        // never anyone's `deps[0]`, so the walk skips exactly the ops
+        // that can hide under the serialized collectives.
+        let mut spine = vec![false; g.ops.len()];
+        let mut cur = tail;
+        while let Some(i) = cur {
+            let op = &g.ops[i];
+            spine[i] = true;
+            let t = match op.kind.comm_payload() {
+                None => cost.compute_time(&op.kind),
+                Some(_) => cost.comm_time(&op.kind),
+            };
+            d.path += t;
+            if matches!(op.phase, Phase::Backward) {
+                d.bwd_path += t;
+            }
+            cur = op.deps.first().map(|dep| dep.0);
+        }
+        d.bwd_period = bwd_period(&bwd, &spine, d.bwd_compute, d.bwd_path);
+        d
+    }
+
+    /// The real stage's optimizer-step duration, queried with the exact
+    /// scaled byte count so it memoizes with the real graph's op.
+    pub fn opt_time(&self, cost: &dyn CostProvider, stage_layers: u64) -> f64 {
+        if self.opt_bytes == 0 {
+            return 0.0;
+        }
+        cost.compute_time(&OpKind::Elementwise {
+            bytes: stage_layers * self.opt_bytes,
+        })
+    }
+}
+
+/// Maximum cycle mean of the repeated backward pass, over single-wrap
+/// circuits. A circuit enters the pass at a spine compute op, follows
+/// the dependency spine (accumulating the serialized collectives it
+/// crosses, `+dur`), leaves at a later spine compute op, and returns to
+/// the entry op of the *next* pass along the compute-stream FIFO — which
+/// carries every compute op outside the segment, i.e. the pass's full
+/// compute total minus the weight-grad GEMMs inside the segment
+/// (`−dur`). The empty segment is the pure compute-FIFO circuit; the
+/// full-pass segment is the spine path. Windows are scanned over the
+/// doubled array (circuits may wrap the pass boundary), length-capped at
+/// one pass — multi-wrap circuits have per-pass means dominated by the
+/// single-wrap maximum.
+fn bwd_period(
+    bwd: &[BwdEntry],
+    spine: &[bool],
+    bwd_compute: f64,
+    bwd_path: f64,
+) -> f64 {
+    let n = bwd.len();
+    let mut best = 0.0f64;
+    for i in 0..n {
+        if bwd[i].comm || !spine[bwd[i].op] {
+            continue; // circuits enter at a spine compute op
+        }
+        let mut sum = 0.0f64;
+        for j in i..i + n {
+            let e = &bwd[j % n];
+            if e.comm {
+                sum += e.dur;
+            } else if spine[e.op] {
+                best = best.max(sum); // circuits leave at a spine compute op
+            } else {
+                sum -= e.dur;
+            }
+        }
+    }
+    // the full-cut circuit (the spine path) is in the scanned set, but
+    // anchor on the walk's sum explicitly so the bound's floor can never
+    // exceed the estimate by a fold-order ulp
+    (bwd_compute + best).max(bwd_path)
+}
+
+/// Estimate the **pre-pipeline** [`SimReport`] of the real config from
+/// its digest. `opt` is [`SurrogateDigest::opt_time`] for the real
+/// stage. The caller applies [`super::apply_pipeline`] afterwards,
+/// exactly like the exact path does.
+///
+/// Every term is ≥ the corresponding `lower_bound` floor (compute FIFO,
+/// dependency path, AR drain, P2P FIFO — see module docs), so the
+/// optimizer's pruning stays sound at surrogate fidelity.
+pub fn estimate_report(
+    cfg: &ModelConfig,
+    d: &SurrogateDigest,
+    opt: f64,
+) -> SimReport {
+    let sl = cfg.stage_layers() as f64;
+    let mb = cfg.microbatches() as f64;
+    let l = mb * sl;
+
+    // forward: one chain, period exact; backward: max cycle mean
+    let fwd_end = l * d.fwd_chain;
+    let bwd_end = fwd_end + l * d.bwd_period;
+
+    // P2P stream: one fwd + one bwd send per microbatch, equal payloads.
+    // Sparse regime: the last bwd send is issued at the backward end and
+    // drains alone. Saturated regime: the first send is issued after the
+    // first microbatch's forward pass and the FIFO stays busy.
+    let p2p_iter = mb * d.p2p;
+    let p2p_end = if d.p2p > 0.0 {
+        (bwd_end + 0.5 * d.p2p).max(sl * d.fwd_chain + p2p_iter)
+    } else {
+        0.0
+    };
+    let steady = bwd_end.max(p2p_end);
+
+    // DP AR stream: `stage_layers` all-reduces issued one backward-pass
+    // period apart during the last microbatch; drains past the backward
+    // end when an AR outlasts its issue spacing.
+    let ar_iter = sl * d.ar;
+    let ar_end = if d.ar > 0.0 {
+        bwd_end + d.ar + (sl - 1.0) * (d.ar - d.bwd_period).max(0.0)
+    } else {
+        0.0
+    };
+
+    let makespan = steady.max(ar_end) + opt;
+    let fwd_compute = l * d.fwd_compute;
+    let bwd_compute = l * d.bwd_compute;
+    let compute_time = fwd_compute + bwd_compute + opt;
+    let serialized_comm = l * d.serialized;
+    let exposed_comm = (makespan - compute_time).max(0.0);
+    let total_comm = serialized_comm + ar_iter + p2p_iter;
+    let hidden_comm = (total_comm - exposed_comm).max(0.0);
+
+    SimReport {
+        makespan,
+        compute_time,
+        serialized_comm,
+        overlapped_comm: ar_iter,
+        p2p_comm: p2p_iter,
+        exposed_comm,
+        hidden_comm,
+        bubble_time: 0.0,
+        steady_span: steady,
+        fwd_compute,
+        bwd_compute,
+        opt_compute: opt,
+        intervals: Vec::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{build_layer_graph, GraphOptions};
+    use crate::hw::catalog;
+    use crate::model::Precision;
+    use crate::parallelism::ParallelismSpec;
+    use crate::sim::{apply_pipeline, simulate, AnalyticCost};
+
+    fn cfg(par: ParallelismSpec) -> ModelConfig {
+        ModelConfig {
+            hidden: 4096,
+            seq_len: 2048,
+            batch: 1,
+            layers: 8,
+            heads: 32,
+            ffn_mult: 4,
+            par,
+            precision: Precision::F16,
+        }
+    }
+
+    fn exact_and_estimate(c: &ModelConfig) -> (SimReport, SimReport) {
+        let cost = AnalyticCost::from_spec(catalog::mi210(), c.precision, c.par);
+        let g = build_layer_graph(c, GraphOptions::default());
+        let mut exact = simulate(&g, &cost);
+        apply_pipeline(&mut exact, c.pp(), c.microbatches());
+
+        let sur = surrogate_config(c);
+        let sg = build_layer_graph(&sur, GraphOptions::default());
+        let d = SurrogateDigest::extract(&sg, &cost);
+        let opt = d.opt_time(&cost, c.stage_layers());
+        let mut est = estimate_report(c, &d, opt);
+        apply_pipeline(&mut est, c.pp(), c.microbatches());
+        (exact, est)
+    }
+
+    #[test]
+    fn serial_config_is_exact_up_to_fold_order() {
+        // no comm at all: the makespan IS compute-FIFO total + optimizer,
+        // and both paths sum the same memoized durations
+        let (exact, est) = exact_and_estimate(&cfg(ParallelismSpec::none()));
+        assert!((est.makespan / exact.makespan - 1.0).abs() < 1e-12);
+        assert!((est.compute_time / exact.compute_time - 1.0).abs() < 1e-12);
+        assert_eq!(est.serialized_comm, 0.0);
+    }
+
+    #[test]
+    fn estimate_tracks_exact_across_the_strategy_space() {
+        let mut worst: (f64, ParallelismSpec) = (0.0, ParallelismSpec::none());
+        let mut checked = 0;
+        for tp in [1u64, 4, 8] {
+            for (pp, mb) in [(1u64, 1u64), (2, 4), (4, 8)] {
+                for dp in [1u64, 4] {
+                    for sp in [false, true] {
+                        let par = ParallelismSpec::tp_dp(tp, dp)
+                            .with_pp(pp, mb)
+                            .with_seq_par(sp);
+                        let c = cfg(par);
+                        if c.validate().is_err() {
+                            continue;
+                        }
+                        let (exact, est) = exact_and_estimate(&c);
+                        let rel =
+                            (est.makespan / exact.makespan - 1.0).abs();
+                        if rel > worst.0 {
+                            worst = (rel, par);
+                        }
+                        checked += 1;
+                    }
+                }
+            }
+        }
+        assert!(checked > 30, "strategy coverage too thin: {checked}");
+        // the pinned end-to-end bound lives in tests/surrogate_fidelity.rs;
+        // this is the in-module smoke at half that tolerance
+        assert!(
+            worst.0 < 0.08,
+            "worst makespan error {:.4} at {:?}",
+            worst.0,
+            worst.1
+        );
+    }
+
+    #[test]
+    fn busy_metrics_scale_exactly() {
+        // busy times are per-pass sums × L — no estimation involved, so
+        // they match the exact simulation to fold-order precision
+        for par in [
+            ParallelismSpec::tp_dp(8, 4),
+            ParallelismSpec::tp_dp(4, 2).with_pp(2, 8).with_seq_par(true),
+        ] {
+            let c = cfg(par);
+            let (exact, est) = exact_and_estimate(&c);
+            for (a, b) in [
+                (exact.serialized_comm, est.serialized_comm),
+                (exact.overlapped_comm, est.overlapped_comm),
+                (exact.p2p_comm, est.p2p_comm),
+                (exact.fwd_compute, est.fwd_compute),
+                (exact.bwd_compute, est.bwd_compute),
+                (exact.opt_compute, est.opt_compute),
+            ] {
+                if a == 0.0 {
+                    assert_eq!(b, 0.0);
+                } else {
+                    assert!((b / a - 1.0).abs() < 1e-9, "{a} vs {b} at {par:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn estimate_never_sits_below_the_bound_floors() {
+        // the floors lower_bound derives from the same digest must not
+        // exceed the estimate — this is what keeps surrogate-fidelity
+        // search pruning sound (the cross-module test lives in
+        // tests/surrogate_fidelity.rs)
+        for tp in [1u64, 8] {
+            for (pp, mb) in [(1u64, 1u64), (4, 8)] {
+                for dp in [1u64, 4] {
+                    let par = ParallelismSpec::tp_dp(tp, dp).with_pp(pp, mb);
+                    let c = cfg(par);
+                    if c.validate().is_err() {
+                        continue;
+                    }
+                    let cost = AnalyticCost::from_spec(
+                        catalog::mi210(),
+                        c.precision,
+                        c.par,
+                    );
+                    let sur = surrogate_config(&c);
+                    let sg = build_layer_graph(&sur, GraphOptions::default());
+                    let d = SurrogateDigest::extract(&sg, &cost);
+                    let opt = d.opt_time(&cost, c.stage_layers());
+                    let est = estimate_report(&c, &d, opt);
+                    let sl = c.stage_layers() as f64;
+                    let l = c.microbatches() as f64 * sl;
+                    let guard = 1.0 - 1e-9;
+                    assert!(est.steady_span >= l * d.compute * guard);
+                    assert!(est.steady_span >= l * d.path * guard);
+                    assert!(est.steady_span >= est.p2p_comm * guard);
+                    assert!(est.makespan >= (sl * d.ar + opt) * guard);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn digest_reads_the_surrogate_shape() {
+        let c = cfg(ParallelismSpec::tp_dp(8, 4).with_pp(2, 4));
+        let sur = surrogate_config(&c);
+        assert_eq!(sur.stage_layers(), 1);
+        assert_eq!(sur.microbatches(), 1);
+        let cost = AnalyticCost::from_spec(catalog::mi210(), c.precision, c.par);
+        let g = build_layer_graph(&sur, GraphOptions::default());
+        let d = SurrogateDigest::extract(&g, &cost);
+        assert!(d.compute > 0.0 && d.path > 0.0);
+        assert!(d.ar > 0.0, "dp > 1 must digest an AR");
+        assert!(d.p2p > 0.0, "pp > 1 must digest the sends");
+        assert!(d.opt_bytes > 0);
+        assert!(d.bwd_period >= d.bwd_compute.max(d.bwd_path));
+        assert!(d.fwd_chain >= d.fwd_compute);
+    }
+}

@@ -1,0 +1,281 @@
+//! Surrogate-fidelity calibration: measure the estimator's error on a
+//! deterministic sample of the study's own grid.
+//!
+//! The paper validates its operator model against measured hardware and
+//! reports <15% error (§3.4); this module is the same loop one level up —
+//! the surrogate estimator ([`crate::sim::estimate_report`]) is validated
+//! against the exact discrete-event simulation it replaces, on the exact
+//! scenarios the study sweeps. `commscale study <spec> --fidelity
+//! surrogate --error-sample K` re-runs K LCG-sampled grid points at both
+//! fidelities and reports the max/mean relative makespan error, so every
+//! surrogate run can carry its own measured error bound instead of a
+//! global promise.
+//!
+//! Determinism: the sample indices come from a fixed-seed LCG over the
+//! realized point stream (the same global ordering the runner and the
+//! shard layer use), so the same spec always calibrates on the same
+//! points and reports the same bits.
+
+use crate::graph::GraphOptions;
+use crate::model::ModelConfig;
+use crate::sweep::{EvalCtx, Scenario, ScenarioGrid};
+use crate::{Error, Result};
+
+use super::spec::{ResolvedStudy, Source};
+
+/// Result of one calibration pass: the sampled error distribution plus
+/// the worst offender (so a blown bound is immediately reproducible).
+#[derive(Debug, Clone)]
+pub struct Calibration {
+    /// Realized points in the study's stream.
+    pub total_points: usize,
+    /// Points re-evaluated at both fidelities (≤ `total_points`).
+    pub sampled: usize,
+    /// max over samples of |surrogate − exact| / exact (makespan).
+    pub max_rel_err: f64,
+    /// mean over samples of the same ratio.
+    pub mean_rel_err: f64,
+    /// The scenario behind `max_rel_err`.
+    pub worst: Option<WorstPoint>,
+}
+
+/// The sampled point with the largest relative makespan error.
+#[derive(Debug, Clone)]
+pub struct WorstPoint {
+    pub cfg: ModelConfig,
+    pub hw_label: String,
+    /// Exact makespan (seconds).
+    pub exact: f64,
+    /// Surrogate makespan (seconds).
+    pub surrogate: f64,
+}
+
+impl Calibration {
+    /// Human-readable report block (the CLI prints this verbatim).
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "calibration: {} of {} points re-run at exact fidelity",
+            self.sampled, self.total_points
+        );
+        let _ = writeln!(
+            out,
+            "  makespan relative error: max {:.3}%  mean {:.3}%",
+            self.max_rel_err * 100.0,
+            self.mean_rel_err * 100.0
+        );
+        if let Some(w) = &self.worst {
+            let c = &w.cfg;
+            let _ = writeln!(
+                out,
+                "  worst: hw {} H={} SL={} B={} L={} tp={} pp={} mb={} \
+                 sp={} dp={} (exact {:.6e}s, surrogate {:.6e}s)",
+                w.hw_label,
+                c.hidden,
+                c.seq_len,
+                c.batch,
+                c.layers,
+                c.tp(),
+                c.pp(),
+                c.microbatches(),
+                c.seq_par(),
+                c.dp(),
+                w.exact,
+                w.surrogate
+            );
+        }
+        out
+    }
+}
+
+/// First `k` distinct indices in `[0, total)` from a fixed-seed LCG
+/// (Knuth MMIX multiplier), ascending. `k ≥ total` selects everything.
+fn sample_indices(total: usize, k: usize) -> Vec<usize> {
+    if k >= total {
+        return (0..total).collect();
+    }
+    let mut picked = std::collections::BTreeSet::new();
+    let mut state: u64 = 0x5EED_CA11_B4A7_E5u64;
+    while picked.len() < k {
+        state = state
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        // high bits: the low bits of an LCG cycle with short periods
+        picked.insert(((state >> 33) as usize) % total);
+    }
+    picked.into_iter().collect()
+}
+
+/// Re-run `samples` LCG-chosen points of a grid study at both fidelities
+/// and measure the surrogate's relative makespan error.
+///
+/// The sample is drawn over the same realized-point global ordering the
+/// runner streams (hardware outer, segments inner), so calibration sees
+/// exactly the rows a sweep would produce. Both fidelities share one
+/// [`EvalCtx`] — the same memoized cost tables a real run uses.
+pub fn calibrate(resolved: &ResolvedStudy, samples: usize) -> Result<Calibration> {
+    if resolved.spec.source != Source::Grid {
+        return Err(Error::Study(
+            "--error-sample: calibration runs grid points at both \
+             fidelities; this study has no grid"
+                .into(),
+        ));
+    }
+    if samples == 0 {
+        return Err(Error::Study(
+            "--error-sample: need at least 1 sample point".into(),
+        ));
+    }
+    let total = resolved.total_points();
+    if total == 0 {
+        return Err(Error::Study(format!(
+            "--error-sample: the study grid is empty: {}",
+            resolved.empty_reason()
+        )));
+    }
+
+    let wanted = sample_indices(total, samples);
+    let counts = resolved.segment_counts();
+
+    let mut ctx = EvalCtx::new();
+    let mut cal = Calibration {
+        total_points: total,
+        sampled: 0,
+        max_rel_err: 0.0,
+        mean_rel_err: 0.0,
+        worst: None,
+    };
+    let mut err_sum = 0.0f64;
+
+    // Walk (hardware, segment) blocks in stream order; `base` is the
+    // block's first global index (mirrors the runner's stream_grid).
+    let mut base = 0usize;
+    let mut cursor = 0usize; // next unconsumed index in `wanted`
+    for hw in &resolved.hardware {
+        for (si, seg) in resolved.segments.iter().enumerate() {
+            let count = counts[si];
+            let start = base;
+            base += count;
+            // local (in-segment) indices of the samples in this block
+            let mut locals = Vec::new();
+            while cursor < wanted.len() && wanted[cursor] < start + count {
+                locals.push(wanted[cursor] - start);
+                cursor += 1;
+            }
+            if locals.is_empty() {
+                continue;
+            }
+            let (lo, hi) = (locals[0], locals[locals.len() - 1] + 1);
+            let mut cfgs = Vec::with_capacity(locals.len());
+            {
+                let mut idx = lo;
+                let mut next = 0usize;
+                seg.builder.model_configs_range(lo, hi, &mut |cfg| {
+                    if next < locals.len() && locals[next] == idx {
+                        cfgs.push(cfg);
+                        next += 1;
+                    }
+                    idx += 1;
+                });
+            }
+            let grid = ScenarioGrid {
+                hardware: vec![hw.point.clone()],
+                points: cfgs
+                    .iter()
+                    .map(|&cfg| Scenario {
+                        cfg,
+                        opts: GraphOptions::default(),
+                        hw: 0,
+                    })
+                    .collect(),
+            };
+            for (i, sc) in grid.points.iter().enumerate() {
+                let exact = ctx.eval(&grid, sc);
+                let sur = ctx.eval_surrogate(&grid, sc);
+                let rel = if exact.makespan > 0.0 {
+                    (sur.makespan - exact.makespan).abs() / exact.makespan
+                } else {
+                    0.0
+                };
+                cal.sampled += 1;
+                err_sum += rel;
+                if rel >= cal.max_rel_err {
+                    cal.max_rel_err = rel;
+                    cal.worst = Some(WorstPoint {
+                        cfg: cfgs[i],
+                        hw_label: hw.label.clone(),
+                        exact: exact.makespan,
+                        surrogate: sur.makespan,
+                    });
+                }
+            }
+        }
+    }
+    if cal.sampled > 0 {
+        cal.mean_rel_err = err_sum / cal.sampled as f64;
+    }
+    Ok(cal)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::catalog;
+    use crate::study::spec::StudySpec;
+
+    fn resolved(text: &str) -> ResolvedStudy {
+        StudySpec::parse(text).unwrap().resolve(&catalog::mi210()).unwrap()
+    }
+
+    #[test]
+    fn sample_indices_are_deterministic_sorted_distinct() {
+        let a = sample_indices(1000, 32);
+        let b = sample_indices(1000, 32);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 32);
+        assert!(a.windows(2).all(|w| w[0] < w[1]), "{a:?}");
+        assert!(a.iter().all(|&i| i < 1000));
+        // k >= total selects the whole stream
+        assert_eq!(sample_indices(7, 100), (0..7).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn calibrate_reports_a_small_error_on_a_real_grid() {
+        let r = resolved(
+            r#"{"name": "cal", "fidelity": "surrogate",
+                "axes": {"hidden": [4096], "seq_len": [2048], "batch": [4],
+                         "layers": [8], "tp": [1, 2, 4, 8],
+                         "pp": [1, 2], "microbatches": [8],
+                         "seq_par": [false, true], "dp": [1, 2]}}"#,
+        );
+        let cal = calibrate(&r, 1_000_000).unwrap(); // oversampled: all points
+        assert_eq!(cal.sampled, cal.total_points);
+        assert!(cal.sampled > 10, "grid too small: {}", cal.sampled);
+        assert!(
+            cal.max_rel_err < 0.15,
+            "surrogate error above the paper's bound: {:.4} at {:?}",
+            cal.max_rel_err,
+            cal.worst
+        );
+        assert!(cal.mean_rel_err <= cal.max_rel_err);
+        assert!(cal.worst.is_some());
+        let text = cal.render();
+        assert!(text.contains("relative error"), "{text}");
+    }
+
+    #[test]
+    fn calibrate_rejects_empty_and_non_grid_studies() {
+        let r = resolved(r#"{"name": "zoo-cal", "source": "zoo"}"#);
+        let err = calibrate(&r, 8).unwrap_err().to_string();
+        assert!(err.contains("no grid"), "{err}");
+
+        let r = resolved(
+            r#"{"name": "cal", "axes": {"hidden": [4096], "layers": [3],
+                "pp": [2]}}"#,
+        );
+        let err = calibrate(&r, 8).unwrap_err().to_string();
+        assert!(err.contains("empty"), "{err}");
+    }
+}

@@ -28,16 +28,18 @@
 //! (`parse → to_json → parse`) is part of the contract.
 
 pub mod builtin;
+pub mod calibrate;
 pub mod expr;
 pub mod run;
 pub mod spec;
 
+pub use calibrate::{calibrate, Calibration};
 pub use expr::Expr;
 pub use run::{
     build_sinks, run_study, ChartSink, CsvSink, FieldKind, JsonlSink,
     RowSink, RunOptions, SpecSink, StudyOutcome, TableSink, Value, VecSink,
 };
 pub use spec::{
-    AggOp, AggSpec, AxesSpec, HwAxisSpec, MetricSpec, ResolvedStudy,
-    SeriesSpec, SinkSpec, Source, StudySpec,
+    AggOp, AggSpec, AxesSpec, Execution, HwAxisSpec, MetricSpec,
+    ResolvedStudy, SeriesSpec, SinkSpec, Source, StudySpec,
 };

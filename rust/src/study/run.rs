@@ -17,7 +17,7 @@ use std::io::Write as _;
 use crate::graph::GraphOptions;
 use crate::model::ModelConfig;
 use crate::report::{ascii_line_chart, Series, Table};
-use crate::sweep::{self, PointMetrics, Scenario, ScenarioGrid};
+use crate::sweep::{self, Fidelity, PointMetrics, Scenario, ScenarioGrid};
 use crate::util::stats::ExactSum;
 use crate::util::Json;
 use crate::{Error, Result};
@@ -1474,6 +1474,7 @@ fn stream_grid(
                         if buf.len() >= chunk {
                             if let Err(e) = eval_chunk(
                                 pl, sinks, hw, seg, buf, opts.threads,
+                                resolved.spec.fidelity,
                             ) {
                                 *failed = Some(e);
                             }
@@ -1486,7 +1487,10 @@ fn stream_grid(
                 return Err(e);
             }
             if !buf.is_empty() {
-                eval_chunk(pl, sinks, hw, seg, &buf, opts.threads)?;
+                eval_chunk(
+                    pl, sinks, hw, seg, &buf, opts.threads,
+                    resolved.spec.fidelity,
+                )?;
             }
         }
     }
@@ -1500,6 +1504,7 @@ fn eval_chunk(
     seg: &ResolvedSegment,
     cfgs: &[ModelConfig],
     threads: usize,
+    fidelity: Fidelity,
 ) -> Result<()> {
     let grid = ScenarioGrid {
         hardware: vec![hw.point.clone()],
@@ -1508,7 +1513,7 @@ fn eval_chunk(
             .map(|&cfg| Scenario { cfg, opts: GraphOptions::default(), hw: 0 })
             .collect(),
     };
-    let metrics = sweep::run_with(&grid, threads);
+    let metrics = sweep::run_at(&grid, threads, fidelity);
     let series = seg.label.clone().unwrap_or_default();
     for (cfg, m) in cfgs.iter().zip(&metrics) {
         fill_grid_row(&mut pl.row, hw, &series, cfg, m);

@@ -17,7 +17,7 @@ use crate::hw::{catalog, DeviceSpec, Evolution};
 use crate::model::Precision;
 use crate::parallelism::TopologyKind;
 use crate::sim::OverlapModel;
-use crate::sweep::{GridBuilder, HeadsPolicy, HwPoint, Scenario, ScenarioGrid};
+use crate::sweep::{Fidelity, GridBuilder, HeadsPolicy, HwPoint, Scenario, ScenarioGrid};
 use crate::util::Json;
 use crate::{Error, Result};
 
@@ -34,7 +34,7 @@ pub enum Source {
 }
 
 impl Source {
-    fn as_str(&self) -> &'static str {
+    pub fn as_str(&self) -> &'static str {
         match self {
             Source::Grid => "grid",
             Source::Zoo => "zoo",
@@ -51,6 +51,40 @@ impl Source {
                 "source: unknown {other:?} (expected \"grid\", \"zoo\", or \
                  \"table3\")"
             ))),
+        }
+    }
+}
+
+/// How a grouped-argmin study is executed.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum Execution {
+    /// Evaluate every grid point through the sweep engine (the default).
+    #[default]
+    Sweep,
+    /// Route the study through the strategy optimizer's branch-and-bound
+    /// search ([`crate::optimizer::optimize_study`]): grouped argmin rows
+    /// only, bit-identical to the exhaustive sweep, usually much cheaper.
+    Search,
+}
+
+impl Execution {
+    pub fn parse(s: &str) -> Option<Execution> {
+        match s {
+            "sweep" => Some(Execution::Sweep),
+            "search" => Some(Execution::Search),
+            _ => None,
+        }
+    }
+
+    /// The values [`Execution::parse`] accepts, for error messages.
+    pub fn supported() -> &'static str {
+        "\"sweep\", \"search\""
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Execution::Sweep => "sweep",
+            Execution::Search => "search",
         }
     }
 }
@@ -285,6 +319,14 @@ pub struct StudySpec {
     pub sinks: Vec<SinkSpec>,
     /// Streaming chunk size in points (0 = default 16384).
     pub chunk: usize,
+    /// Per-point evaluation fidelity: `Exact` runs the full graph
+    /// simulation; `Surrogate` uses the closed-form estimator
+    /// ([`crate::sim::estimate_report`]) — 10–100× faster, within the
+    /// measured error bound (DESIGN.md §13).
+    pub fidelity: Fidelity,
+    /// `Search` routes grouped-argmin studies through the optimizer's
+    /// branch-and-bound instead of the exhaustive sweep.
+    pub execution: Execution,
 }
 
 impl Default for StudySpec {
@@ -302,6 +344,8 @@ impl Default for StudySpec {
             aggregate: Vec::new(),
             sinks: Vec::new(),
             chunk: 0,
+            fidelity: Fidelity::default(),
+            execution: Execution::default(),
         }
     }
 }
@@ -839,6 +883,7 @@ impl StudySpec {
             &[
                 "name", "description", "source", "device", "axes", "filter",
                 "metrics", "columns", "group_by", "aggregate", "sinks", "chunk",
+                "fidelity", "execution",
             ],
         )?;
         let mut s = StudySpec {
@@ -1089,6 +1134,56 @@ impl StudySpec {
                 Error::Study("chunk: expected an integer".into())
             })? as usize;
         }
+        if let Some(f) = v.get("fidelity") {
+            let text = f.as_str().ok_or_else(|| {
+                Error::Study(format!(
+                    "fidelity: expected a string (one of {})",
+                    Fidelity::supported()
+                ))
+            })?;
+            s.fidelity = Fidelity::parse(text).ok_or_else(|| {
+                Error::Study(format!(
+                    "fidelity: unknown {text:?} (expected one of {})",
+                    Fidelity::supported()
+                ))
+            })?;
+            if s.fidelity != Fidelity::Exact && s.source != Source::Grid {
+                return Err(Error::Study(format!(
+                    "fidelity: \"{}\" only applies to \"grid\" studies (the \
+                     estimator replaces the sweep-engine simulation); {:?} \
+                     rows are not simulated — drop the key or use \"exact\"",
+                    s.fidelity.as_str(),
+                    s.source.as_str()
+                )));
+            }
+        }
+        if let Some(e) = v.get("execution") {
+            let text = e.as_str().ok_or_else(|| {
+                Error::Study(format!(
+                    "execution: expected a string (one of {})",
+                    Execution::supported()
+                ))
+            })?;
+            s.execution = Execution::parse(text).ok_or_else(|| {
+                Error::Study(format!(
+                    "execution: unknown {text:?} (expected one of {})",
+                    Execution::supported()
+                ))
+            })?;
+            if s.execution == Execution::Search
+                && !s.aggregate.iter().any(|a| {
+                    a.ops.iter().any(|o| matches!(o, AggOp::ArgMin))
+                })
+            {
+                return Err(Error::Study(
+                    "execution: \"search\" runs the optimizer's grouped \
+                     argmin search, so the spec needs group_by plus an \
+                     aggregate with an \"argmin\" op (use \"sweep\" for \
+                     row-level studies)"
+                        .into(),
+                ));
+            }
+        }
         Ok(s)
     }
 
@@ -1211,6 +1306,12 @@ impl StudySpec {
         }
         if self.chunk != 0 {
             pairs.push(("chunk", Json::num(self.chunk as f64)));
+        }
+        if self.fidelity != Fidelity::default() {
+            pairs.push(("fidelity", Json::str(self.fidelity.as_str())));
+        }
+        if self.execution != Execution::default() {
+            pairs.push(("execution", Json::str(self.execution.as_str())));
         }
         Json::obj(pairs)
     }
@@ -1424,6 +1525,12 @@ impl ResolvedStudy {
             let _ = writeln!(out, "  {}", s.description);
         }
         let _ = writeln!(out, "  source: {}", s.source.as_str());
+        if s.fidelity != Fidelity::default() {
+            let _ = writeln!(out, "  fidelity: {}", s.fidelity.as_str());
+        }
+        if s.execution != Execution::default() {
+            let _ = writeln!(out, "  execution: {}", s.execution.as_str());
+        }
         if s.source == Source::Grid {
             let _ = writeln!(out, "  hardware points ({}):", self.hardware.len());
             for h in &self.hardware {

@@ -32,11 +32,49 @@ use crate::graph::{
 use crate::model::{ModelConfig, Precision};
 use crate::parallelism::ParallelismSpec;
 use crate::sim::{
-    apply_pipeline, simulate, simulate_with, AnalyticCost, CostProvider,
-    SimArena, SimReport,
+    apply_pipeline, estimate_report, simulate, simulate_with, surrogate_config,
+    AnalyticCost, CostProvider, SimArena, SimReport, SurrogateDigest,
 };
 
 use super::grid::{Scenario, ScenarioGrid};
+
+/// How a sweep evaluates each point.
+///
+/// `Exact` runs the discrete-event simulator on the full per-device
+/// graph; `Surrogate` scales a memoized one-layer/one-microbatch digest
+/// to a full-report estimate (`sim::surrogate`, DESIGN.md §13) — 10–100×
+/// faster with a small, measurable error (`--error-sample`). Both are
+/// pure functions of the scenario, so every determinism property (thread
+/// count, chunking, shard merges) holds at either fidelity.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, Hash)]
+pub enum Fidelity {
+    #[default]
+    Exact,
+    Surrogate,
+}
+
+impl Fidelity {
+    /// Parse a spec/CLI fidelity value.
+    pub fn parse(s: &str) -> Option<Fidelity> {
+        match s {
+            "exact" => Some(Fidelity::Exact),
+            "surrogate" => Some(Fidelity::Surrogate),
+            _ => None,
+        }
+    }
+
+    /// The values [`Fidelity::parse`] accepts, for error messages.
+    pub fn supported() -> &'static str {
+        "\"exact\", \"surrogate\""
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Fidelity::Exact => "exact",
+            Fidelity::Surrogate => "surrogate",
+        }
+    }
+}
 
 /// Scalar outcome of one scenario point: a [`SimReport`] minus the per-op
 /// intervals, `Copy` so sweep results live in one flat allocation.
@@ -180,6 +218,12 @@ pub struct EvalCtx {
     costs: HashMap<CostKey, (u32, AnalyticCost)>,
     next_cost_id: u32,
     memo: RefCell<HashMap<(u32, OpKind), f64>>,
+    /// Surrogate digests keyed by (cost id, surrogate config, graph
+    /// options). The surrogate config collapses `layers` to `pp` and
+    /// `microbatches` to 1, so whole axes of a grid (layer count,
+    /// microbatch count) share one digest — the surrogate hot path is
+    /// usually a single map probe plus closed-form arithmetic.
+    digests: HashMap<(u32, ModelConfig, GraphOptions), SurrogateDigest>,
 }
 
 impl Default for EvalCtx {
@@ -196,13 +240,59 @@ impl EvalCtx {
             costs: HashMap::new(),
             next_cost_id: 0,
             memo: RefCell::new(HashMap::new()),
+            digests: HashMap::new(),
         }
+    }
+
+    /// Evaluate one scenario point at the given fidelity.
+    pub fn eval_at(
+        &mut self,
+        grid: &ScenarioGrid,
+        sc: &Scenario,
+        fidelity: Fidelity,
+    ) -> PointMetrics {
+        match fidelity {
+            Fidelity::Exact => self.eval(grid, sc),
+            Fidelity::Surrogate => self.eval_surrogate(grid, sc),
+        }
+    }
+
+    /// Evaluate one scenario point at surrogate fidelity: resolve (or
+    /// extract) its one-layer/one-microbatch digest and scale it to a
+    /// full report (`sim::surrogate`) — no per-point simulation, and on
+    /// a digest-cache hit no graph work at all.
+    pub fn eval_surrogate(
+        &mut self,
+        grid: &ScenarioGrid,
+        sc: &Scenario,
+    ) -> PointMetrics {
+        let EvalCtx { templates, costs, next_cost_id, memo, digests, .. } =
+            self;
+        let (cost_id, cost) = cost_entry(costs, next_cost_id, grid, sc);
+        let memo = MemoCost { inner: cost, id: cost_id, memo: &*memo };
+
+        let sur = surrogate_config(&sc.cfg);
+        let d = digests
+            .entry((cost_id, sur, sc.opts))
+            .or_insert_with(|| {
+                let shape = GraphShapeKey::of(&sur, sc.opts);
+                let g = templates
+                    .entry(shape)
+                    .or_insert_with(|| build_layer_graph(&sur, sc.opts));
+                rewrite_layer_graph(&sur, sc.opts, g);
+                SurrogateDigest::extract(g, &memo)
+            });
+
+        let opt = d.opt_time(&memo, sc.cfg.stage_layers());
+        let mut r = estimate_report(&sc.cfg, d, opt);
+        apply_pipeline(&mut r, sc.cfg.pp(), sc.cfg.microbatches());
+        PointMetrics::from_report(&r)
     }
 
     /// Evaluate one scenario point through the shared caches —
     /// bit-identical to [`run_serial_reference`] on the same point.
     pub fn eval(&mut self, grid: &ScenarioGrid, sc: &Scenario) -> PointMetrics {
-        let EvalCtx { arena, templates, costs, next_cost_id, memo } = self;
+        let EvalCtx { arena, templates, costs, next_cost_id, memo, .. } = self;
         let (cost_id, cost) =
             cost_entry(costs, next_cost_id, grid, sc);
 
@@ -288,6 +378,17 @@ pub fn run(grid: &ScenarioGrid) -> Vec<PointMetrics> {
 /// evaluates inline with a single worker context — same caches, same
 /// results, no thread spawns.
 pub fn run_with(grid: &ScenarioGrid, threads: usize) -> Vec<PointMetrics> {
+    run_at(grid, threads, Fidelity::Exact)
+}
+
+/// [`run_with`] at an explicit fidelity. Either fidelity evaluates each
+/// point as a pure function of its scenario, so results are independent
+/// of thread count and chunk boundaries.
+pub fn run_at(
+    grid: &ScenarioGrid,
+    threads: usize,
+    fidelity: Fidelity,
+) -> Vec<PointMetrics> {
     let n = grid.points.len();
     let mut out = vec![PointMetrics::default(); n];
     if n == 0 {
@@ -299,7 +400,7 @@ pub fn run_with(grid: &ScenarioGrid, threads: usize) -> Vec<PointMetrics> {
     if threads == 1 {
         let mut ctx = EvalCtx::new();
         for (slot, sc) in out.iter_mut().zip(&grid.points) {
-            *slot = ctx.eval(grid, sc);
+            *slot = ctx.eval_at(grid, sc, fidelity);
         }
         return out;
     }
@@ -321,7 +422,11 @@ pub fn run_with(grid: &ScenarioGrid, threads: usize) -> Vec<PointMetrics> {
                         let Some((ci, slice)) = item else { break };
                         let base = ci * chunk;
                         for (j, slot) in slice.iter_mut().enumerate() {
-                            *slot = ctx.eval(grid, &grid.points[base + j]);
+                            *slot = ctx.eval_at(
+                                grid,
+                                &grid.points[base + j],
+                                fidelity,
+                            );
                         }
                     }
                 });

@@ -50,7 +50,7 @@ pub mod engine;
 pub mod grid;
 
 pub use engine::{
-    default_threads, run, run_serial_reference, run_streamed, run_with,
-    EvalCtx, PointEvaluator, PointMetrics,
+    default_threads, run, run_at, run_serial_reference, run_streamed,
+    run_with, EvalCtx, Fidelity, PointEvaluator, PointMetrics,
 };
 pub use grid::{GridBuilder, HeadsPolicy, HwPoint, Scenario, ScenarioGrid};

@@ -138,9 +138,57 @@ impl BenchResult {
         for (k, v) in extra {
             obj.insert(k.to_string(), v);
         }
-        let text = Json::Obj(obj).to_string_pretty(2);
+        let text = Json::Obj(obj.clone()).to_string_pretty(2);
         std::fs::write(path, text + "\n")?;
         println!("    wrote {}", path.display());
+        self.append_history(path, &obj)?;
+        Ok(())
+    }
+
+    /// Append this run's rollup row to the committed bench-history ledger
+    /// (`BENCH_HISTORY.md`), if one is present next to the JSON artifact
+    /// or one directory up (benches run from `rust/`; the ledger lives at
+    /// the repo root). The `BENCH_*.json` files are per-machine
+    /// artifacts; the ledger is the per-PR trajectory that lives in git.
+    /// No ledger → no append, so ad-hoc runs in scratch dirs stay silent.
+    fn append_history(
+        &self,
+        json_path: &Path,
+        obj: &std::collections::BTreeMap<String, Json>,
+    ) -> crate::Result<()> {
+        let dir = json_path.parent().unwrap_or_else(|| Path::new("."));
+        let ledger = [dir.to_path_buf(), dir.join("..")]
+            .into_iter()
+            .map(|b| b.join("BENCH_HISTORY.md"))
+            .find(|p| p.exists());
+        let Some(ledger) = ledger else { return Ok(()) };
+        // everything beyond the timing core is a bench-specific headline
+        // figure (points/sec, speedup, error bounds…) — carry it verbatim
+        const CORE: [&str; 8] = [
+            "name", "iters", "mean_s", "median_s", "p90_s", "min_s",
+            "max_s", "std_s",
+        ];
+        let extras: Vec<String> = obj
+            .iter()
+            .filter(|(k, _)| !CORE.contains(&k.as_str()))
+            .map(|(k, v)| format!("{k}={}", v.to_string()))
+            .collect();
+        let artifact = json_path
+            .file_name()
+            .map(|f| f.to_string_lossy().into_owned())
+            .unwrap_or_default();
+        let line = format!(
+            "| {} | {} | {} | {} | {} |\n",
+            artifact,
+            self.name,
+            fmt_time(self.summary.median),
+            self.iters,
+            if extras.is_empty() { "-".to_string() } else { extras.join(", ") },
+        );
+        use std::io::Write as _;
+        let mut f = std::fs::OpenOptions::new().append(true).open(&ledger)?;
+        f.write_all(line.as_bytes())?;
+        println!("    appended {} to {}", self.name, ledger.display());
         Ok(())
     }
 }

@@ -72,6 +72,46 @@ fn unknown_sink_kind_is_named_with_alternatives() {
 }
 
 #[test]
+fn unknown_fidelity_is_named_with_alternatives() {
+    let err = first_error("bad_fidelity.json");
+    assert!(err.contains("aproximate"), "{err}");
+    assert!(err.contains("surrogate"), "{err}");
+    assert!(err.contains("exact"), "{err}");
+}
+
+#[test]
+fn unknown_execution_is_named_with_alternatives() {
+    let err = first_error("bad_execution.json");
+    assert!(err.contains("paralel"), "{err}");
+    assert!(err.contains("search"), "{err}");
+    assert!(err.contains("sweep"), "{err}");
+}
+
+#[test]
+fn surrogate_fidelity_rejects_non_grid_sources() {
+    // zoo/table3 rows are precomputed, not simulated — a surrogate there
+    // would silently be a no-op, so the parse refuses it outright
+    let err = StudySpec::parse(
+        r#"{"name": "z", "source": "zoo", "fidelity": "surrogate"}"#,
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("grid"), "{err}");
+    assert!(err.contains("zoo"), "{err}");
+}
+
+#[test]
+fn search_execution_requires_a_grouped_argmin() {
+    let err = StudySpec::parse(
+        r#"{"name": "s", "axes": {"hidden": [1024]}, "execution": "search"}"#,
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("argmin"), "{err}");
+    assert!(err.contains("group_by"), "{err}");
+}
+
+#[test]
 fn every_fixture_is_covered_by_a_test() {
     // adding a fixture without an assertion should fail loudly here
     let dir = fixture("");
@@ -84,6 +124,8 @@ fn every_fixture_is_covered_by_a_test() {
         names,
         vec![
             "bad_agg_op.json",
+            "bad_execution.json",
+            "bad_fidelity.json",
             "bad_filter_op.json",
             "bad_sink_kind.json",
             "cyclic_metric.json",
@@ -131,6 +173,35 @@ fn malformed_spec_fails_the_cli_with_the_field_named() {
     assert!(!out.status.success());
     let err = String::from_utf8_lossy(&out.stderr);
     assert!(err.contains("hiden"), "{err}");
+}
+
+#[test]
+fn unknown_cli_fidelity_fails_with_the_alternatives() {
+    let out = commscale(&[
+        "study", "strategies", "--fidelity", "fast", "--explain",
+    ]);
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("fast"), "{err}");
+    assert!(err.contains("surrogate"), "{err}");
+}
+
+#[test]
+fn error_sample_without_surrogate_fidelity_is_rejected() {
+    let out = commscale(&["study", "strategies", "--error-sample", "4"]);
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--fidelity surrogate"), "{err}");
+}
+
+#[test]
+fn surrogate_fidelity_explain_smoke() {
+    let out = commscale(&[
+        "study", "strategies", "--fidelity", "surrogate", "--explain",
+    ]);
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("fidelity: surrogate"), "{text}");
 }
 
 // ---------------------------------------------------------------------------

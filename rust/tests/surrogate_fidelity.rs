@@ -1,0 +1,306 @@
+//! Surrogate-fidelity acceptance: the closed-form estimator must track
+//! the exact simulation within a pinned error bound on random specs, the
+//! optimizer's bound must stay sound against the estimator (surrogate
+//! search ≡ surrogate exhaustive sweep, bit-for-bit), and surrogate runs
+//! must shard/merge byte-identically to single-process execution — the
+//! same contracts the exact path pins in `tests/optimizer_golden.rs` and
+//! `tests/shard_property.rs`.
+
+use commscale::hw::catalog;
+use commscale::optimizer::{self, OptimizeOptions};
+use commscale::shard::{self, ShardId, ShardInput};
+use commscale::study::{
+    calibrate, run_study, ResolvedStudy, RowSink, RunOptions, StudySpec,
+    Value, VecSink,
+};
+use commscale::sweep::Fidelity;
+
+/// Relative makespan error the estimator must never exceed on the grids
+/// below. The paper validates its operator model to <15% (§3.4); the
+/// surrogate's only losses vs the exact simulation are O(1/L) transient
+/// terms, so it inherits the same budget.
+const PINNED_REL_ERR: f64 = 0.15;
+
+// ---------------------------------------------------------------------------
+// deterministic generator (Knuth MMIX LCG — no ambient randomness)
+// ---------------------------------------------------------------------------
+
+struct Lcg(u64);
+
+impl Lcg {
+    fn next(&mut self) -> u64 {
+        self.0 = self
+            .0
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        self.0 >> 33
+    }
+
+    fn pick<'a>(&mut self, xs: &'a [&'a str]) -> &'a str {
+        xs[(self.next() % xs.len() as u64) as usize]
+    }
+}
+
+/// A random row-level grid spec reporting `makespan`. Filters stay on
+/// identity fields only, so both fidelities keep exactly the same rows
+/// and the streams align row-for-row.
+fn gen_spec(rng: &mut Lcg) -> String {
+    let hidden = rng.pick(&["[1024]", "[4096]", "[1024, 8192]"]);
+    let seq_len = rng.pick(&["[2048]", "[512, 2048]"]);
+    let batch = rng.pick(&["[1]", "[4]"]);
+    let tp = rng.pick(&["[1, 2]", "[2, 8]", "[1, 4]"]);
+    let (layers, pp, mb) = if rng.next() % 2 == 0 {
+        ("[8]", "[1, 2, 4]", "[4, 8]")
+    } else {
+        ("[4]", "[1, 4]", "[4]")
+    };
+    let seq_par = rng.pick(&["[false]", "[false, true]"]);
+    let dp = rng.pick(&["[1]", "[1, 2]"]);
+    let evolutions = rng.pick(&["[1]", "[1, 4]"]);
+    let topologies = rng.pick(&["[\"flat\"]", "[\"node4\"]"]);
+    let filter = rng.pick(&["", r#", "filter": ["tp * pp * dp <= 16"]"#]);
+    format!(
+        r#"{{"name": "sur-prop",
+  "axes": {{"hidden": {hidden}, "seq_len": {seq_len}, "batch": {batch},
+            "layers": {layers}, "tp": {tp}, "pp": {pp},
+            "microbatches": {mb}, "seq_par": {seq_par}, "dp": {dp},
+            "evolutions": {evolutions}, "topologies": {topologies}}}{filter},
+  "metrics": ["makespan", "time_per_sample", "comm_fraction"]}}"#
+    )
+}
+
+fn run_single(resolved: &ResolvedStudy, opts: RunOptions) -> VecSink {
+    let mut sink = VecSink::new();
+    {
+        let mut sinks: Vec<&mut dyn RowSink> = vec![&mut sink];
+        run_study(resolved, opts, &mut sinks).expect("run_study");
+    }
+    sink
+}
+
+fn col(sink: &VecSink, name: &str) -> usize {
+    sink.columns
+        .iter()
+        .position(|c| c == name)
+        .unwrap_or_else(|| panic!("no column {name} in {:?}", sink.columns))
+}
+
+// ---------------------------------------------------------------------------
+// property: pinned error bound on LCG-random specs
+// ---------------------------------------------------------------------------
+
+#[test]
+fn surrogate_error_stays_under_the_pinned_bound_on_random_specs() {
+    let device = catalog::mi210();
+    let mut rng = Lcg(0x5eed_f1de_117e_57a1);
+    for case in 0..6usize {
+        let text = gen_spec(&mut rng);
+        let mut spec = StudySpec::parse(&text)
+            .unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+        let exact = run_single(
+            &spec.resolve(&device).unwrap(),
+            RunOptions { threads: 1, chunk: 0 },
+        );
+        spec.fidelity = Fidelity::Surrogate;
+        let sur = run_single(
+            &spec.resolve(&device).unwrap(),
+            RunOptions { threads: 1, chunk: 0 },
+        );
+        assert_eq!(exact.columns, sur.columns, "case {case}");
+        assert_eq!(exact.rows.len(), sur.rows.len(), "case {case}");
+        assert!(!exact.rows.is_empty(), "case {case} resolved empty\n{text}");
+        let mk = col(&exact, "makespan");
+        for (ri, (er, sr)) in exact.rows.iter().zip(&sur.rows).enumerate() {
+            let (e, s) = (er[mk].as_f64(), sr[mk].as_f64());
+            assert!(e > 0.0, "case {case} row {ri}: exact makespan {e}");
+            let rel = (s - e).abs() / e;
+            assert!(
+                rel <= PINNED_REL_ERR,
+                "case {case} row {ri}: surrogate {s:.6e} vs exact {e:.6e} \
+                 (rel {rel:.4})\nidentity: {:?}\n{text}",
+                &er[..6]
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// calibration: the CLI's --error-sample loop, driven as a library
+// ---------------------------------------------------------------------------
+
+#[test]
+fn calibration_matches_a_manual_exact_rerun() {
+    let device = catalog::mi210();
+    let spec = StudySpec::parse(
+        r#"{"name": "cal", "fidelity": "surrogate",
+            "axes": {"hidden": [4096, 8192], "seq_len": [2048],
+                     "batch": [4], "layers": [8], "tp": [2, 8],
+                     "pp": [1, 2, 4], "microbatches": [8],
+                     "seq_par": [false, true], "dp": [1, 2]}}"#,
+    )
+    .unwrap();
+    let resolved = spec.resolve(&device).unwrap();
+    let cal = calibrate(&resolved, 16).unwrap();
+    assert_eq!(cal.sampled, 16);
+    assert!(cal.total_points > 16);
+    assert!(
+        cal.max_rel_err <= PINNED_REL_ERR,
+        "calibration bound blown: {:.4} at {:?}",
+        cal.max_rel_err,
+        cal.worst
+    );
+    // calibration is deterministic: same spec, same bits
+    let again = calibrate(&resolved, 16).unwrap();
+    assert_eq!(cal.max_rel_err.to_bits(), again.max_rel_err.to_bits());
+    assert_eq!(cal.mean_rel_err.to_bits(), again.mean_rel_err.to_bits());
+}
+
+// ---------------------------------------------------------------------------
+// golden: surrogate search ≡ surrogate exhaustive sweep, bit-for-bit
+// ---------------------------------------------------------------------------
+
+const ARGMIN_SPEC: &str = r#"{"name": "sur-argmin",
+  "axes": {"hidden": [4096, 8192], "seq_len": [2048], "batch": [4],
+           "layers": [8], "tp": [1, 2, 4, 8], "pp": [1, 2, 4],
+           "microbatches": [8], "seq_par": [false, true], "dp": [1, 2],
+           "evolutions": [1, 4]},
+  "fidelity": "surrogate",
+  "group_by": ["hidden", "flop_vs_bw"],
+  "aggregate": [{"metric": "time_per_sample", "ops": ["min", "argmin"],
+                 "args": ["tp", "pp", "dp", "seq_par", "microbatches"]}]}"#;
+
+#[test]
+fn surrogate_search_rows_match_the_surrogate_exhaustive_study() {
+    let device = catalog::mi210();
+    let spec = StudySpec::parse(ARGMIN_SPEC).unwrap();
+    let resolved = spec.resolve(&device).unwrap();
+    let exhaustive =
+        run_single(&resolved, RunOptions { threads: 1, chunk: 0 });
+    let report = optimizer::optimize_study(
+        &resolved,
+        &OptimizeOptions { threads: 1, memory_cap: None },
+    )
+    .unwrap();
+    report
+        .matches_exhaustive(&exhaustive.columns, &exhaustive.rows)
+        .unwrap_or_else(|e| panic!("surrogate search diverged: {e}"));
+    assert!(
+        report.evaluated < report.candidates,
+        "the bound pruned nothing at surrogate fidelity: {} of {}",
+        report.evaluated,
+        report.candidates
+    );
+}
+
+#[test]
+fn surrogate_argmin_groups_mirror_the_exact_grid_shape() {
+    // fidelity changes the metric values, never the grid: group count and
+    // per-group `points` are identity-derived and must match exactly.
+    let device = catalog::mi210();
+    let spec = StudySpec::parse(ARGMIN_SPEC).unwrap();
+    let sur = run_single(
+        &spec.resolve(&device).unwrap(),
+        RunOptions { threads: 1, chunk: 0 },
+    );
+    let mut exact_spec = spec.clone();
+    exact_spec.fidelity = Fidelity::Exact;
+    let exact = run_single(
+        &exact_spec.resolve(&device).unwrap(),
+        RunOptions { threads: 1, chunk: 0 },
+    );
+    assert_eq!(sur.columns, exact.columns);
+    assert_eq!(sur.rows.len(), exact.rows.len());
+    let keys = [col(&sur, "hidden"), col(&sur, "flop_vs_bw"), col(&sur, "points")];
+    for (sr, er) in sur.rows.iter().zip(&exact.rows) {
+        for &k in &keys {
+            assert_eq!(sr[k], er[k], "group identity diverged");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// sharding: surrogate runs merge bit-identically to single-process
+// ---------------------------------------------------------------------------
+
+fn assert_identical(a: &VecSink, b: &VecSink, what: &str) {
+    assert_eq!(a.columns, b.columns, "{what}: columns");
+    assert_eq!(a.rows.len(), b.rows.len(), "{what}: row count");
+    for (ri, (x, y)) in a.rows.iter().zip(&b.rows).enumerate() {
+        for (ci, (u, v)) in x.iter().zip(y).enumerate() {
+            let same = match (u, v) {
+                (Value::Num(p), Value::Num(q)) => p.to_bits() == q.to_bits(),
+                _ => u == v,
+            };
+            assert!(
+                same,
+                "{what}: row {ri} col {} ({ci}): {} vs {}",
+                a.columns[ci],
+                u.render(),
+                v.render()
+            );
+        }
+    }
+}
+
+#[test]
+fn sharded_surrogate_study_merges_bit_identically() {
+    let device = catalog::mi210();
+    let spec = StudySpec::parse(ARGMIN_SPEC).unwrap();
+    let resolved = spec.resolve(&device).unwrap();
+    let opts = RunOptions { threads: 1, chunk: 0 };
+    let single = run_single(&resolved, opts);
+    for n in [2usize, 3, 5] {
+        let mut inputs = Vec::new();
+        for k in 0..n {
+            let mut buf: Vec<u8> = Vec::new();
+            shard::run_worker(
+                &resolved,
+                ShardId::new(k, n).unwrap(),
+                false,
+                opts,
+                &mut buf,
+            )
+            .unwrap_or_else(|e| panic!("worker {k}/{n}: {e}"));
+            inputs.push(ShardInput::from_bytes(&format!("worker {k}/{n}"), buf));
+        }
+        let mut sink = VecSink::new();
+        {
+            let mut sinks: Vec<&mut dyn RowSink> = vec![&mut sink];
+            shard::merge_study(&resolved, inputs, &mut sinks)
+                .unwrap_or_else(|e| panic!("merge n={n}: {e}"));
+        }
+        assert_identical(&single, &sink, &format!("surrogate n={n}"));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// bound soundness against the estimator, through the public surface
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fidelity_is_fenced_into_the_shard_fingerprint() {
+    // a surrogate worker payload must refuse to merge into an exact run:
+    // the fidelity lives in the spec, so the FNV fingerprint covers it.
+    let device = catalog::mi210();
+    let spec = StudySpec::parse(ARGMIN_SPEC).unwrap();
+    let sur = spec.resolve(&device).unwrap();
+    let mut exact_spec = spec.clone();
+    exact_spec.fidelity = Fidelity::Exact;
+    let exact = exact_spec.resolve(&device).unwrap();
+    let opts = RunOptions { threads: 1, chunk: 0 };
+
+    let mut buf: Vec<u8> = Vec::new();
+    shard::run_worker(&sur, ShardId::new(0, 1).unwrap(), false, opts, &mut buf)
+        .unwrap();
+    let input = ShardInput::from_bytes("surrogate worker", buf);
+    let mut sink = VecSink::new();
+    let err = {
+        let mut sinks: Vec<&mut dyn RowSink> = vec![&mut sink];
+        shard::merge_study(&exact, vec![input], &mut sinks).unwrap_err()
+    };
+    let msg = err.to_string();
+    assert!(
+        msg.contains("mismatched specs") || msg.contains("fingerprint"),
+        "expected a spec-mismatch refusal, got: {msg}"
+    );
+}
