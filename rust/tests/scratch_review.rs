@@ -1,0 +1,31 @@
+use commscale::hw::catalog;
+use commscale::study::{calibrate, StudySpec};
+use commscale::sweep::{EvalCtx, Scenario, ScenarioGrid};
+use commscale::graph::GraphOptions;
+
+#[test]
+fn review_calibrate_hw_collision() {
+    let device = catalog::mi210();
+    let spec = StudySpec::parse(
+        r#"{"name": "c", "fidelity": "surrogate",
+            "axes": {"hidden": [4096], "seq_len": [2048], "batch": [4],
+                     "layers": [8], "tp": [1, 2], "pp": [1, 2],
+                     "microbatches": [8], "dp": [1, 2],
+                     "evolutions": [1, 8]}}"#,
+    ).unwrap();
+    let resolved = spec.resolve(&device).unwrap();
+    assert_eq!(resolved.hardware.len(), 2);
+    let cal = calibrate(&resolved, 1_000_000).unwrap();
+    let w = cal.worst.unwrap();
+    // recompute the worst point's exact makespan with a FRESH ctx and the
+    // hardware the label claims
+    let hw = resolved.hardware.iter().find(|h| h.label == w.hw_label).unwrap();
+    let grid = ScenarioGrid {
+        hardware: vec![hw.point.clone()],
+        points: vec![Scenario { cfg: w.cfg, opts: GraphOptions::default(), hw: 0 }],
+    };
+    let mut ctx = EvalCtx::new();
+    let m = ctx.eval(&grid, &grid.points[0]);
+    eprintln!("calibrate exact = {:.9e}, fresh-ctx exact = {:.9e}, hw = {}", w.exact, m.makespan, w.hw_label);
+    assert_eq!(m.makespan.to_bits(), w.exact.to_bits(), "calibrate used a stale cost model for {}", w.hw_label);
+}
