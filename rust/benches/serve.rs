@@ -1,0 +1,207 @@
+//! Bench: `commscale serve` hot-cache query latency vs a cold CLI run of
+//! the same built-in paper-figure spec, plus the disk warm-start vs cold
+//! start comparison (DESIGN.md §14 acceptance: hot ≥ 10× cold with the
+//! served bytes identical to the CLI's, and warm-start measurably
+//! faster than cold start). Writes the machine-readable trajectory
+//! record `BENCH_serve.json`.
+//!
+//! Env knobs (used by CI): `COMMSCALE_BENCH_QUICK=1` / `--quick` relaxes
+//! the hot-vs-cold bound to 5× and shrinks the measurement budget.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use commscale::cache::{disk, SharedCache};
+use commscale::hw::{catalog, Evolution};
+use commscale::serve::{self, ServeOptions};
+use commscale::sweep::{EvalCtx, GridBuilder, ScenarioGrid};
+use commscale::util::microbench::{bench_header, fmt_time, Bench};
+use commscale::util::Json;
+
+const SPEC: &str = "fig10";
+
+/// Minimal close-delimited HTTP client: returns the response body.
+fn http_query(addr: std::net::SocketAddr, target: &str, body: &str) -> Vec<u8> {
+    let mut s = TcpStream::connect(addr).expect("connect to serve");
+    let req = format!(
+        "POST {target} HTTP/1.1\r\nHost: bench\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(req.as_bytes()).unwrap();
+    let mut resp = Vec::new();
+    s.read_to_end(&mut resp).unwrap();
+    let text_head = String::from_utf8_lossy(&resp[..resp.len().min(64)]);
+    assert!(
+        text_head.starts_with("HTTP/1.1 200"),
+        "query failed: {text_head}"
+    );
+    let split = resp
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .expect("response has a header/body split");
+    resp[split + 4..].to_vec()
+}
+
+fn warm_grid() -> ScenarioGrid {
+    let d = catalog::mi210();
+    GridBuilder::new(&d)
+        .hidden(&[4096, 8192, 16384, 32768])
+        .seq_len(&[2048, 4096])
+        .batch(&[1, 2])
+        .layers(&[1, 2])
+        .tp(&[4, 8, 16, 32])
+        .dp(&[1, 4])
+        .evolutions(&[
+            Evolution::none(),
+            Evolution::flop_vs_bw_2x(),
+            Evolution::flop_vs_bw_4x(),
+        ])
+        .build()
+}
+
+/// Evaluate every grid point through one worker context backed by
+/// `shared`, exactly as a fresh server/CLI process would on first touch.
+fn eval_all(grid: &ScenarioGrid, shared: Arc<SharedCache>) -> f64 {
+    let mut ctx = EvalCtx::with_cache(Some(shared));
+    let mut acc = 0.0;
+    for sc in &grid.points {
+        acc += ctx.eval(grid, sc).makespan;
+    }
+    acc
+}
+
+fn main() {
+    bench_header("commscale serve (resident query service)");
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("COMMSCALE_BENCH_QUICK").is_ok();
+
+    // -- cold CLI baseline: full process running the same figure spec ------
+    let dir = std::env::temp_dir().join(format!("commscale_bench_serve_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let csv_path = dir.join("cold_cli.csv");
+    let exe = env!("CARGO_BIN_EXE_commscale");
+    let mut cold_cli_secs = f64::INFINITY;
+    for _ in 0..2 {
+        let t0 = Instant::now();
+        let status = std::process::Command::new(exe)
+            .args([
+                "study",
+                SPEC,
+                "--csv",
+                csv_path.to_str().unwrap(),
+            ])
+            .stdout(std::process::Stdio::null())
+            .stderr(std::process::Stdio::null())
+            .status()
+            .expect("spawn cold CLI study");
+        assert!(status.success(), "cold CLI run failed");
+        cold_cli_secs = cold_cli_secs.min(t0.elapsed().as_secs_f64());
+    }
+    let cli_bytes = std::fs::read(&csv_path).expect("cold CLI csv");
+    println!(
+        "cold CLI ({SPEC}, best of 2): {} for {} bytes of rows",
+        fmt_time(cold_cli_secs),
+        cli_bytes.len()
+    );
+
+    // -- resident server: first query warms, then measure hot latency ------
+    let opts = ServeOptions { addr: "127.0.0.1:0".into(), ..Default::default() };
+    let server = serve::spawn(&catalog::mi210(), &opts).expect("spawn server");
+    let addr = server.addr();
+    let body = format!("{{\"name\": \"{SPEC}\"}}");
+    let served = http_query(addr, "/query?format=csv", &body);
+    assert_eq!(
+        served, cli_bytes,
+        "served rows must be byte-identical to the cold CLI csv"
+    );
+
+    let res = Bench::new("serve_hot_query")
+        .measure(Duration::from_millis(if quick { 300 } else { 2000 }))
+        .max_iters(if quick { 20 } else { 200 })
+        .run(|| http_query(addr, "/query?format=csv", &body).len());
+    let hot_secs = res.summary.median;
+    let hot_speedup = cold_cli_secs / hot_secs;
+    println!(
+        "hot query: {} median — {hot_speedup:.1}x vs the cold CLI",
+        fmt_time(hot_secs)
+    );
+    // every hot reply must still carry the exact bytes
+    let again = http_query(addr, "/query?format=csv", &body);
+    assert_eq!(again, cli_bytes, "hot reply drifted from the cold CLI bytes");
+    server.shutdown();
+
+    // -- disk warm-start vs cold start -------------------------------------
+    // Persist one run's operator-cost table, then compare fresh worker
+    // contexts: cold (empty cache) vs warm (cache seeded from the
+    // snapshot). Only the op table persists — points are recomputed on
+    // both sides, so the delta is exactly what the snapshot buys.
+    let grid = warm_grid();
+    let snap = dir.join("opcache.jsonl");
+    let seed_cache = Arc::new(SharedCache::new());
+    let baseline = eval_all(&grid, seed_cache.clone());
+    disk::save(&seed_cache, &snap).expect("save op-cost snapshot");
+
+    let cold_res = Bench::new("serve_cold_start")
+        .measure(Duration::from_millis(if quick { 300 } else { 1500 }))
+        .max_iters(if quick { 5 } else { 15 })
+        .run(|| {
+            let c = Arc::new(SharedCache::new());
+            eval_all(&grid, c)
+        });
+    let warm_res = Bench::new("serve_warm_start")
+        .measure(Duration::from_millis(if quick { 300 } else { 1500 }))
+        .max_iters(if quick { 5 } else { 15 })
+        .run(|| {
+            let c = Arc::new(SharedCache::new());
+            disk::load(&c, &snap).expect("load op-cost snapshot");
+            let acc = eval_all(&grid, c);
+            assert_eq!(acc.to_bits(), baseline.to_bits(), "warm-start drift");
+            acc
+        });
+    let cold_start = cold_res.summary.median;
+    let warm_start = warm_res.summary.median;
+    let warm_speedup = cold_start / warm_start;
+    println!(
+        "{}-point warm-start grid: cold {} vs warm {} — {warm_speedup:.2}x",
+        grid.len(),
+        fmt_time(cold_start),
+        fmt_time(warm_start)
+    );
+
+    let _ = std::fs::remove_dir_all(&dir);
+
+    res.write_json_with(
+        Path::new("BENCH_serve.json"),
+        vec![
+            ("spec", Json::str(SPEC)),
+            ("cold_cli_s", Json::num(cold_cli_secs)),
+            ("hot_query_s", Json::num(hot_secs)),
+            ("hot_speedup_vs_cold_cli", Json::num(hot_speedup)),
+            ("row_bytes", Json::num(cli_bytes.len() as f64)),
+            ("warmstart_grid_points", Json::num(grid.len() as f64)),
+            ("cold_start_s", Json::num(cold_start)),
+            ("warm_start_s", Json::num(warm_start)),
+            ("warmstart_speedup", Json::num(warm_speedup)),
+            ("quick", Json::Bool(quick)),
+        ],
+    )
+    .expect("write BENCH_serve.json");
+    println!("wrote BENCH_serve.json");
+
+    // -- acceptance ---------------------------------------------------------
+    let need = if quick { 5.0 } else { 10.0 };
+    assert!(
+        hot_speedup >= need,
+        "acceptance: hot-cache query must be >= {need}x the cold CLI, got \
+         {hot_speedup:.1}x"
+    );
+    assert!(
+        warm_start < cold_start,
+        "acceptance: disk warm-start ({}) must beat cold start ({})",
+        fmt_time(warm_start),
+        fmt_time(cold_start)
+    );
+}

@@ -1,0 +1,415 @@
+//! Persistent warm-start snapshots of the operator-cost cache.
+//!
+//! Format: JSON-lines, reusing the shard wire-format conventions
+//! (`shard/payload.rs`) — exact-bits `f64` encoding via
+//! `enc_f64`/`dec_f64`, a leading identity line, and a trailing footer
+//! that doubles as a truncation check:
+//!
+//! ```text
+//! {"opcache":{"crate":"<CARGO_PKG_VERSION>","format":1}}
+//! {"fp":"<16 hex>","op":{"kind":"gemm","m":"…","n":"…","k":"…","count":"…"},"t":<enc_f64>}
+//! …
+//! {"end":{"checksum":"<16 hex>","entries":N}}
+//! ```
+//!
+//! `OpKind` byte/shape fields are `u64` and may exceed 2^53, so they ride
+//! as decimal *strings*, not JSON numbers (the hand-rolled JSON layer
+//! stores numbers as `f64`).
+//!
+//! Staleness and corruption are rejected, never repaired: the header
+//! must carry the current format version *and* crate version (cost-model
+//! changes between releases would otherwise replay stale bits), the
+//! footer's entry count and FNV-1a checksum over the body lines must
+//! match, and any malformed line fails the whole load. A failed load
+//! leaves the in-memory cache exactly as it was — the caller falls back
+//! to a cold rebuild, which can only ever cost time, not correctness
+//! (`tests/cache_layer.rs` pins all three rejection classes).
+
+use std::path::Path;
+
+use crate::graph::{CommClass, OpKind};
+use crate::shard::payload::{dec_f64, enc_f64};
+use crate::util::Json;
+use crate::{Error, Result};
+
+use super::{fnv1a_update, SharedCache, FNV_OFFSET};
+
+/// Bump when the line format changes shape.
+pub const FORMAT_VERSION: u64 = 1;
+
+fn crate_version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}
+
+fn bad(path: &Path, detail: &str) -> Error {
+    Error::Study(format!(
+        "op-cost cache {}: {detail}; ignoring it and rebuilding cold",
+        path.display()
+    ))
+}
+
+// ---------------------------------------------------------------------------
+// OpKind <-> JSON (u64 fields as decimal strings)
+// ---------------------------------------------------------------------------
+
+fn class_str(c: CommClass) -> &'static str {
+    match c {
+        CommClass::Serialized => "serialized",
+        CommClass::Overlappable => "overlappable",
+    }
+}
+
+fn parse_class(s: &str) -> Result<CommClass> {
+    match s {
+        "serialized" => Ok(CommClass::Serialized),
+        "overlappable" => Ok(CommClass::Overlappable),
+        other => Err(Error::Study(format!("unknown comm class {other:?}"))),
+    }
+}
+
+fn u64_str(v: u64) -> Json {
+    Json::str(&v.to_string())
+}
+
+fn parse_u64(v: &Json, what: &str) -> Result<u64> {
+    v.as_str()
+        .and_then(|s| s.parse::<u64>().ok())
+        .ok_or_else(|| {
+            Error::Study(format!("{what} is not a decimal u64 string: {v:?}"))
+        })
+}
+
+pub(crate) fn op_to_json(k: &OpKind) -> Json {
+    match *k {
+        OpKind::Gemm { m, n, k, count } => Json::obj(vec![
+            ("kind", Json::str("gemm")),
+            ("m", u64_str(m)),
+            ("n", u64_str(n)),
+            ("k", u64_str(k)),
+            ("count", u64_str(count)),
+        ]),
+        OpKind::LayerNorm { rows, h } => Json::obj(vec![
+            ("kind", Json::str("layernorm")),
+            ("rows", u64_str(rows)),
+            ("h", u64_str(h)),
+        ]),
+        OpKind::Elementwise { bytes } => Json::obj(vec![
+            ("kind", Json::str("elementwise")),
+            ("bytes", u64_str(bytes)),
+        ]),
+        OpKind::AllReduce { bytes, class } => Json::obj(vec![
+            ("kind", Json::str("allreduce")),
+            ("bytes", u64_str(bytes)),
+            ("class", Json::str(class_str(class))),
+        ]),
+        OpKind::ReduceScatter { bytes, class } => Json::obj(vec![
+            ("kind", Json::str("reducescatter")),
+            ("bytes", u64_str(bytes)),
+            ("class", Json::str(class_str(class))),
+        ]),
+        OpKind::AllGather { bytes, class } => Json::obj(vec![
+            ("kind", Json::str("allgather")),
+            ("bytes", u64_str(bytes)),
+            ("class", Json::str(class_str(class))),
+        ]),
+        OpKind::SendRecv { bytes } => Json::obj(vec![
+            ("kind", Json::str("sendrecv")),
+            ("bytes", u64_str(bytes)),
+        ]),
+    }
+}
+
+pub(crate) fn op_from_json(v: &Json) -> Result<OpKind> {
+    let field = |name: &str| -> Result<u64> { parse_u64(v.req(name)?, name) };
+    match v.str_field("kind")? {
+        "gemm" => Ok(OpKind::Gemm {
+            m: field("m")?,
+            n: field("n")?,
+            k: field("k")?,
+            count: field("count")?,
+        }),
+        "layernorm" => {
+            Ok(OpKind::LayerNorm { rows: field("rows")?, h: field("h")? })
+        }
+        "elementwise" => Ok(OpKind::Elementwise { bytes: field("bytes")? }),
+        "allreduce" => Ok(OpKind::AllReduce {
+            bytes: field("bytes")?,
+            class: parse_class(v.str_field("class")?)?,
+        }),
+        "reducescatter" => Ok(OpKind::ReduceScatter {
+            bytes: field("bytes")?,
+            class: parse_class(v.str_field("class")?)?,
+        }),
+        "allgather" => Ok(OpKind::AllGather {
+            bytes: field("bytes")?,
+            class: parse_class(v.str_field("class")?)?,
+        }),
+        "sendrecv" => Ok(OpKind::SendRecv { bytes: field("bytes")? }),
+        other => Err(Error::Study(format!("unknown op kind {other:?}"))),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// save / load
+// ---------------------------------------------------------------------------
+
+/// Snapshot the cache's operator-cost table to `path` (atomically: write
+/// a sibling temp file, then rename). Returns the entry count written.
+pub fn save(cache: &SharedCache, path: &Path) -> Result<usize> {
+    let entries = cache.op_dump();
+    let mut body = String::new();
+    let mut checksum = FNV_OFFSET;
+    for (fp, op, t) in &entries {
+        let line = Json::obj(vec![
+            ("fp", Json::str(&format!("{fp:016x}"))),
+            ("op", op_to_json(op)),
+            ("t", enc_f64(*t)),
+        ])
+        .to_string();
+        checksum = fnv1a_update(checksum, line.as_bytes());
+        checksum = fnv1a_update(checksum, b"\n");
+        body.push_str(&line);
+        body.push('\n');
+    }
+    let header = Json::obj(vec![(
+        "opcache",
+        Json::obj(vec![
+            ("format", Json::num(FORMAT_VERSION as f64)),
+            ("crate", Json::str(crate_version())),
+        ]),
+    )])
+    .to_string();
+    let footer = Json::obj(vec![(
+        "end",
+        Json::obj(vec![
+            ("entries", Json::num(entries.len() as f64)),
+            ("checksum", Json::str(&format!("{checksum:016x}"))),
+        ]),
+    )])
+    .to_string();
+    let text = format!("{header}\n{body}{footer}\n");
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, text)?;
+    std::fs::rename(&tmp, path)?;
+    Ok(entries.len())
+}
+
+/// Load a snapshot into `cache`. Strict: any header/version mismatch,
+/// malformed line, truncation, count mismatch, or checksum mismatch is an
+/// error and the cache is left untouched. Returns the entry count seeded.
+pub fn load(cache: &SharedCache, path: &Path) -> Result<usize> {
+    let text = std::fs::read_to_string(path)?;
+    let mut lines = text.lines();
+
+    let header = lines.next().ok_or_else(|| bad(path, "file is empty"))?;
+    let h = Json::parse(header)
+        .map_err(|_| bad(path, "header line is not JSON"))?;
+    let oc = h
+        .get("opcache")
+        .ok_or_else(|| bad(path, "missing opcache header"))?;
+    let format = oc
+        .u64_field("format")
+        .map_err(|_| bad(path, "header lacks format version"))?;
+    if format != FORMAT_VERSION {
+        return Err(bad(
+            path,
+            &format!("format version {format} != {FORMAT_VERSION}"),
+        ));
+    }
+    let wrote = oc
+        .str_field("crate")
+        .map_err(|_| bad(path, "header lacks crate version"))?;
+    if wrote != crate_version() {
+        return Err(bad(
+            path,
+            &format!(
+                "written by crate {wrote}, this is {} (cost models may \
+                 differ between releases)",
+                crate_version()
+            ),
+        ));
+    }
+
+    let mut entries: Vec<(u64, OpKind, f64)> = Vec::new();
+    let mut checksum = FNV_OFFSET;
+    let mut footer: Option<(usize, u64)> = None;
+    for line in lines {
+        if footer.is_some() {
+            return Err(bad(path, "data after footer"));
+        }
+        let v = Json::parse(line)
+            .map_err(|_| bad(path, "body line is not JSON"))?;
+        if let Some(e) = v.get("end") {
+            let n = e
+                .u64_field("entries")
+                .map_err(|_| bad(path, "footer lacks entries"))?;
+            let sum = e
+                .str_field("checksum")
+                .ok()
+                .and_then(|s| u64::from_str_radix(s, 16).ok())
+                .ok_or_else(|| bad(path, "footer lacks checksum"))?;
+            footer = Some((n as usize, sum));
+            continue;
+        }
+        checksum = fnv1a_update(checksum, line.as_bytes());
+        checksum = fnv1a_update(checksum, b"\n");
+        let fp = v
+            .str_field("fp")
+            .ok()
+            .and_then(|s| u64::from_str_radix(s, 16).ok())
+            .ok_or_else(|| bad(path, "body line lacks fp"))?;
+        let op = op_from_json(v.req("op").map_err(|_| {
+            bad(path, "body line lacks op")
+        })?)
+        .map_err(|e| bad(path, &format!("bad op: {e}")))?;
+        let t = dec_f64(v.req("t").map_err(|_| bad(path, "body line lacks t"))?, "t")
+            .map_err(|e| bad(path, &format!("bad duration: {e}")))?;
+        entries.push((fp, op, t));
+    }
+
+    let (n, sum) =
+        footer.ok_or_else(|| bad(path, "missing footer (truncated?)"))?;
+    if n != entries.len() {
+        return Err(bad(
+            path,
+            &format!("footer claims {n} entries, body has {}", entries.len()),
+        ));
+    }
+    if sum != checksum {
+        return Err(bad(
+            path,
+            &format!("checksum mismatch ({sum:016x} != {checksum:016x})"),
+        ));
+    }
+    cache.op_seed(&entries);
+    Ok(entries.len())
+}
+
+/// [`load`], but a missing or rejected snapshot is not an error — it just
+/// means a cold start. Returns the number of entries seeded (0 on any
+/// rejection), and the rejection reason on stderr so operators can see
+/// why a warm-start didn't take.
+pub fn warm_start(cache: &SharedCache, path: &Path) -> usize {
+    if !path.exists() {
+        return 0;
+    }
+    match load(cache, path) {
+        Ok(n) => n,
+        Err(e) => {
+            eprintln!("warning: {e}");
+            0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::SharedCache;
+
+    fn sample_entries() -> Vec<(u64, OpKind, f64)> {
+        vec![
+            (
+                0xdead_beef,
+                OpKind::Gemm { m: 1 << 60, n: 4096, k: 4096, count: 3 },
+                1.25e-3,
+            ),
+            (
+                0xdead_beef,
+                OpKind::AllReduce {
+                    bytes: 1 << 54,
+                    class: CommClass::Serialized,
+                },
+                -0.0, // exercises the bits escape
+            ),
+            (7, OpKind::LayerNorm { rows: 2048, h: 4096 }, 3.5e-6),
+            (7, OpKind::SendRecv { bytes: 12345 }, 9.0e-5),
+        ]
+    }
+
+    #[test]
+    fn op_json_roundtrips_large_u64_exactly() {
+        for (_, op, _) in sample_entries() {
+            let text = op_to_json(&op).to_string();
+            let back = op_from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, op, "via {text}");
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip_is_exact() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("commscale_opcache_roundtrip.jsonl");
+        let a = SharedCache::new();
+        a.op_seed(&sample_entries());
+        let wrote = save(&a, &path).unwrap();
+        assert_eq!(wrote, sample_entries().len());
+
+        let b = SharedCache::new();
+        let read = load(&b, &path).unwrap();
+        assert_eq!(read, wrote);
+        let mut x = a.op_dump();
+        let mut y = b.op_dump();
+        x.sort_by_key(|e| (e.0, format!("{:?}", e.1)));
+        y.sort_by_key(|e| (e.0, format!("{:?}", e.1)));
+        assert_eq!(x.len(), y.len());
+        for ((fa, oa, ta), (fb, ob, tb)) in x.iter().zip(&y) {
+            assert_eq!((fa, oa), (fb, ob));
+            assert_eq!(ta.to_bits(), tb.to_bits());
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corrupted_body_is_rejected() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("commscale_opcache_corrupt.jsonl");
+        let a = SharedCache::new();
+        a.op_seed(&sample_entries());
+        save(&a, &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        // flip one digit in a body line (not header, not footer)
+        let corrupted = text.replacen("4096", "4097", 1);
+        assert_ne!(text, corrupted);
+        std::fs::write(&path, corrupted).unwrap();
+        let b = SharedCache::new();
+        let err = load(&b, &path).unwrap_err().to_string();
+        assert!(err.contains("checksum mismatch"), "{err}");
+        assert_eq!(b.op_dump().len(), 0, "failed load must not seed");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn stale_version_and_truncation_are_rejected() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("commscale_opcache_stale.jsonl");
+        let a = SharedCache::new();
+        a.op_seed(&sample_entries());
+        save(&a, &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+
+        // wrong crate version
+        let stale = text.replacen(crate_version(), "0.0.0-other", 1);
+        std::fs::write(&path, &stale).unwrap();
+        let err = load(&SharedCache::new(), &path).unwrap_err().to_string();
+        assert!(err.contains("written by crate"), "{err}");
+
+        // truncated: drop the footer line
+        let no_footer: String = text
+            .lines()
+            .filter(|l| !l.contains("\"end\""))
+            .map(|l| format!("{l}\n"))
+            .collect();
+        std::fs::write(&path, &no_footer).unwrap();
+        let err = load(&SharedCache::new(), &path).unwrap_err().to_string();
+        assert!(err.contains("missing footer"), "{err}");
+
+        // warm_start treats both as a cold start, not an error
+        assert_eq!(warm_start(&SharedCache::new(), &path), 0);
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(
+            warm_start(&SharedCache::new(), &dir.join("does_not_exist.jsonl")),
+            0
+        );
+    }
+}

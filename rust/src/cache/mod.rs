@@ -1,0 +1,540 @@
+//! Shared, fingerprint-keyed evaluation caches (DESIGN.md §14).
+//!
+//! The sweep engine's per-worker caches (graph templates, operator-cost
+//! memos, surrogate digests) are rebuilt from scratch by every
+//! [`crate::sweep::EvalCtx`] — cheap within one big sweep, but pure waste
+//! for a resident query service answering many small, overlapping
+//! studies, and for repeated one-shot CLI runs. This module hoists those
+//! caches behind one process-wide, `Mutex`-protected [`SharedCache`]:
+//!
+//! * **operator costs** — `(cost fingerprint, OpKind) → seconds`, grouped
+//!   per fingerprint so a new worker context seeds its local memo with
+//!   one map clone; this is the table that persists to disk ([`disk`]);
+//! * **graph templates** — `GraphShapeKey → OpGraph`, cloned out (workers
+//!   rewrite payloads in place, so only the dependency structure is
+//!   shared);
+//! * **surrogate digests** — `(cost fingerprint, surrogate config, graph
+//!   options) → SurrogateDigest`;
+//! * **point metrics** — `(cost fingerprint, config, options, fidelity) →
+//!   PointMetrics`, so a repeated query skips evaluation entirely.
+//!
+//! Keys are *content* fingerprints (FNV-1a, the PR 5 hash — see
+//! [`cost_fingerprint`]), not per-context ids, so entries are valid
+//! across threads, queries, and (for the disk-persisted table) process
+//! lifetimes. Every cached value is a pure function of its key, and a
+//! hit returns the exact bits the first computation produced — the same
+//! argument that makes the per-worker memos bit-safe makes the shared
+//! cache bit-safe, and `tests/cache_layer.rs` pins it against
+//! [`crate::sweep::run_serial_reference`].
+//!
+//! Each table is LRU-bounded ([`Lru`]): a long-lived server cannot grow
+//! without bound no matter what mix of queries it sees. Eviction only
+//! ever costs recomputation, never correctness.
+//!
+//! The cache is opt-in: [`EvalCtx`](crate::sweep::EvalCtx) picks up the
+//! process-global instance only after [`install`] has been called (the
+//! serve loop and `--warm-cache` CLI runs do; plain batch runs keep the
+//! exact pre-cache behavior).
+
+pub mod disk;
+
+use std::collections::HashMap;
+use std::hash::Hash;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::graph::{GraphOptions, GraphShapeKey, OpGraph, OpKind};
+use crate::model::{ModelConfig, Precision};
+use crate::parallelism::ParallelismSpec;
+use crate::sim::SurrogateDigest;
+use crate::sweep::{Fidelity, HwPoint, PointMetrics};
+
+/// FNV-1a offset basis (the `shard::spec_fingerprint` hash).
+pub const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+
+/// Fold `bytes` into a running FNV-1a state (start from [`FNV_OFFSET`]).
+pub fn fnv1a_update(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// FNV-1a of `bytes` in one shot.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    fnv1a_update(FNV_OFFSET, bytes)
+}
+
+/// Content fingerprint of everything an `AnalyticCost` is built from: the
+/// (already evolved) device, the network topology, the overlap model, the
+/// precision, and the parallelism strategy. Two scenarios with equal
+/// fingerprints see bit-identical operator costs, so the fingerprint — not
+/// a per-worker dense id — is the cross-context cache key.
+///
+/// Hashed via the `Debug` form: every constituent is a plain scalar
+/// struct whose derived `Debug` output is a total, deterministic function
+/// of its value (`f64` Debug prints the shortest round-trip form, so
+/// distinct bit patterns print distinctly except for the
+/// `-0.0`-vs-`0.0`-free data we store).
+pub fn cost_fingerprint(
+    hw: &HwPoint,
+    precision: Precision,
+    par: ParallelismSpec,
+) -> u64 {
+    let text = format!(
+        "{:?}|{:?}|{:?}|{:?}|{:?}",
+        hw.device, hw.topology, hw.overlap, precision, par
+    );
+    fnv1a(text.as_bytes())
+}
+
+/// A bounded map with least-recently-used eviction. Entries carry a
+/// monotone use tick; eviction scans for the minimum — O(len), but it
+/// only runs on insert past capacity, and the capacities here are modest,
+/// so the common path (a hit) stays a single hash probe.
+struct Lru<K, V> {
+    map: HashMap<K, (u64, V)>,
+    cap: usize,
+    tick: u64,
+    evictions: u64,
+}
+
+impl<K: Eq + Hash + Clone, V> Lru<K, V> {
+    fn new(cap: usize) -> Lru<K, V> {
+        Lru { map: HashMap::new(), cap: cap.max(1), tick: 0, evictions: 0 }
+    }
+
+    fn get(&mut self, k: &K) -> Option<&V> {
+        self.tick += 1;
+        let tick = self.tick;
+        match self.map.get_mut(k) {
+            Some(slot) => {
+                slot.0 = tick;
+                Some(&slot.1)
+            }
+            None => None,
+        }
+    }
+
+    fn get_mut(&mut self, k: &K) -> Option<&mut V> {
+        self.tick += 1;
+        let tick = self.tick;
+        match self.map.get_mut(k) {
+            Some(slot) => {
+                slot.0 = tick;
+                Some(&mut slot.1)
+            }
+            None => None,
+        }
+    }
+
+    /// Insert if absent (first writer wins — all writers compute the same
+    /// bits, so dropping a duplicate is free) and bump recency.
+    fn insert(&mut self, k: K, v: V) {
+        self.tick += 1;
+        let tick = self.tick;
+        self.map.entry(k).or_insert((0, v)).0 = tick;
+        while self.map.len() > self.cap {
+            let oldest = self
+                .map
+                .iter()
+                .min_by_key(|(_, (t, _))| *t)
+                .map(|(k, _)| k.clone());
+            match oldest {
+                Some(k) => {
+                    self.map.remove(&k);
+                    self.evictions += 1;
+                }
+                None => break,
+            }
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.map.len()
+    }
+}
+
+/// Hit/miss/eviction counters for `serve`'s `/healthz` and the bench
+/// report. Monotone over the cache's lifetime.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CacheStats {
+    pub op_hits: u64,
+    pub op_misses: u64,
+    pub graph_hits: u64,
+    pub graph_misses: u64,
+    pub digest_hits: u64,
+    pub digest_misses: u64,
+    pub point_hits: u64,
+    pub point_misses: u64,
+    pub evictions: u64,
+    /// Operator-cost entries seeded from a disk warm-start.
+    pub disk_loaded: u64,
+}
+
+/// Entry counts per table (for `/healthz` and capacity sanity checks).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CacheSizes {
+    /// Distinct cost fingerprints resident in the op table.
+    pub op_tables: usize,
+    /// Total `(fingerprint, OpKind)` entries across those tables.
+    pub op_entries: usize,
+    pub graphs: usize,
+    pub digests: usize,
+    pub points: usize,
+}
+
+/// Capacity bounds for each table (entry counts, not bytes).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CacheCaps {
+    /// Max distinct cost fingerprints in the op table (each holds one
+    /// `OpKind → f64` map; a fingerprint is one (hardware, strategy,
+    /// precision) combination).
+    pub op_tables: usize,
+    pub graphs: usize,
+    pub digests: usize,
+    pub points: usize,
+}
+
+impl Default for CacheCaps {
+    fn default() -> CacheCaps {
+        CacheCaps {
+            op_tables: 4096,
+            graphs: 256,
+            digests: 65_536,
+            points: 262_144,
+        }
+    }
+}
+
+type DigestKey = (u64, ModelConfig, GraphOptions);
+type PointKey = (u64, ModelConfig, GraphOptions, Fidelity);
+
+struct CacheInner {
+    ops: Lru<u64, HashMap<OpKind, f64>>,
+    graphs: Lru<GraphShapeKey, OpGraph>,
+    digests: Lru<DigestKey, SurrogateDigest>,
+    points: Lru<PointKey, PointMetrics>,
+    stats: CacheStats,
+}
+
+/// The process-wide shared evaluation cache (module docs above).
+/// All methods take `&self`; a single `Mutex` guards the four tables —
+/// workers touch it once per cold (hardware, strategy, precision)
+/// combination and once per point, both of which are cheap relative to
+/// the graph/simulation work a hit saves.
+pub struct SharedCache {
+    inner: Mutex<CacheInner>,
+}
+
+impl Default for SharedCache {
+    fn default() -> Self {
+        SharedCache::new()
+    }
+}
+
+impl SharedCache {
+    pub fn new() -> SharedCache {
+        SharedCache::with_caps(CacheCaps::default())
+    }
+
+    pub fn with_caps(caps: CacheCaps) -> SharedCache {
+        SharedCache {
+            inner: Mutex::new(CacheInner {
+                ops: Lru::new(caps.op_tables),
+                graphs: Lru::new(caps.graphs),
+                digests: Lru::new(caps.digests),
+                points: Lru::new(caps.points),
+                stats: CacheStats::default(),
+            }),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, CacheInner> {
+        // a poisoned mutex only means another worker panicked mid-insert;
+        // every entry is internally consistent, so keep serving
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Clone the operator-cost table for one fingerprint, to seed a new
+    /// worker context's local memo. Empty when the fingerprint is cold.
+    pub fn op_snapshot(&self, fp: u64) -> Vec<(OpKind, f64)> {
+        let mut g = self.lock();
+        match g.ops.get(&fp) {
+            Some(m) => {
+                g.stats.op_hits += 1;
+                m.iter().map(|(k, v)| (*k, *v)).collect()
+            }
+            None => {
+                g.stats.op_misses += 1;
+                Vec::new()
+            }
+        }
+    }
+
+    /// Merge a worker's memoized operator costs into the shared table
+    /// (insert-if-absent: every producer computes identical bits).
+    pub fn publish_ops(&self, fp: u64, entries: &[(OpKind, f64)]) {
+        if entries.is_empty() {
+            return;
+        }
+        let mut g = self.lock();
+        match g.ops.get_mut(&fp) {
+            Some(m) => {
+                for (k, v) in entries {
+                    m.entry(*k).or_insert(*v);
+                }
+            }
+            None => {
+                g.ops.insert(fp, entries.iter().copied().collect());
+            }
+        }
+    }
+
+    pub fn get_graph(&self, shape: &GraphShapeKey) -> Option<OpGraph> {
+        let mut g = self.lock();
+        match g.graphs.get(shape) {
+            Some(gr) => {
+                g.stats.graph_hits += 1;
+                Some(gr.clone())
+            }
+            None => {
+                g.stats.graph_misses += 1;
+                None
+            }
+        }
+    }
+
+    pub fn put_graph(&self, shape: GraphShapeKey, graph: &OpGraph) {
+        self.lock().graphs.insert(shape, graph.clone());
+    }
+
+    pub fn get_digest(
+        &self,
+        fp: u64,
+        sur: &ModelConfig,
+        opts: GraphOptions,
+    ) -> Option<SurrogateDigest> {
+        let mut g = self.lock();
+        match g.digests.get(&(fp, *sur, opts)) {
+            Some(d) => {
+                g.stats.digest_hits += 1;
+                Some(*d)
+            }
+            None => {
+                g.stats.digest_misses += 1;
+                None
+            }
+        }
+    }
+
+    pub fn put_digest(
+        &self,
+        fp: u64,
+        sur: &ModelConfig,
+        opts: GraphOptions,
+        d: SurrogateDigest,
+    ) {
+        self.lock().digests.insert((fp, *sur, opts), d);
+    }
+
+    pub fn get_point(
+        &self,
+        fp: u64,
+        cfg: &ModelConfig,
+        opts: GraphOptions,
+        fidelity: Fidelity,
+    ) -> Option<PointMetrics> {
+        let mut g = self.lock();
+        match g.points.get(&(fp, *cfg, opts, fidelity)) {
+            Some(m) => {
+                g.stats.point_hits += 1;
+                Some(*m)
+            }
+            None => {
+                g.stats.point_misses += 1;
+                None
+            }
+        }
+    }
+
+    pub fn put_point(
+        &self,
+        fp: u64,
+        cfg: &ModelConfig,
+        opts: GraphOptions,
+        fidelity: Fidelity,
+        m: PointMetrics,
+    ) {
+        self.lock().points.insert((fp, *cfg, opts, fidelity), m);
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let g = self.lock();
+        let mut s = g.stats;
+        s.evictions = g.ops.evictions
+            + g.graphs.evictions
+            + g.digests.evictions
+            + g.points.evictions;
+        s
+    }
+
+    pub fn sizes(&self) -> CacheSizes {
+        let g = self.lock();
+        CacheSizes {
+            op_tables: g.ops.len(),
+            op_entries: g.ops.map.values().map(|(_, m)| m.len()).sum(),
+            graphs: g.graphs.len(),
+            digests: g.digests.len(),
+            points: g.points.len(),
+        }
+    }
+
+    /// All operator-cost entries, sorted deterministically — the disk
+    /// snapshot body (`disk::save`).
+    pub(crate) fn op_dump(&self) -> Vec<(u64, OpKind, f64)> {
+        let g = self.lock();
+        let mut out: Vec<(u64, OpKind, f64)> = Vec::new();
+        for (fp, (_, m)) in g.ops.map.iter() {
+            for (k, v) in m.iter() {
+                out.push((*fp, *k, *v));
+            }
+        }
+        out.sort_by(|a, b| {
+            (a.0, format!("{:?}", a.1)).cmp(&(b.0, format!("{:?}", b.1)))
+        });
+        out
+    }
+
+    /// Seed the op table from a disk snapshot (insert-if-absent).
+    pub(crate) fn op_seed(&self, entries: &[(u64, OpKind, f64)]) {
+        let mut g = self.lock();
+        let mut loaded = 0u64;
+        for (fp, k, v) in entries {
+            match g.ops.get_mut(fp) {
+                Some(m) => {
+                    m.entry(*k).or_insert(*v);
+                }
+                None => {
+                    let mut m = HashMap::new();
+                    m.insert(*k, *v);
+                    g.ops.insert(*fp, m);
+                }
+            }
+            loaded += 1;
+        }
+        g.stats.disk_loaded += loaded;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the process-global instance
+// ---------------------------------------------------------------------------
+
+static GLOBAL: OnceLock<Arc<SharedCache>> = OnceLock::new();
+
+/// Install `cache` as the process-global shared cache. Subsequent
+/// [`crate::sweep::EvalCtx::new`] calls consult it. Returns `false` if a
+/// global cache was already installed (the first one stays).
+pub fn install(cache: Arc<SharedCache>) -> bool {
+    GLOBAL.set(cache).is_ok()
+}
+
+/// The installed process-global cache, if any.
+pub fn global() -> Option<&'static Arc<SharedCache>> {
+    GLOBAL.get()
+}
+
+/// The process-global cache, installing a default-capacity one if none
+/// exists yet. Always returns the authoritative instance — if another
+/// thread (or an earlier server in the same test process) won the
+/// install race, that one is returned.
+pub fn install_default() -> Arc<SharedCache> {
+    GLOBAL.get_or_init(|| Arc::new(SharedCache::new())).clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::catalog;
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let mut lru: Lru<u32, u32> = Lru::new(2);
+        lru.insert(1, 10);
+        lru.insert(2, 20);
+        assert_eq!(lru.get(&1), Some(&10)); // 1 is now the most recent
+        lru.insert(3, 30); // evicts 2
+        assert_eq!(lru.len(), 2);
+        assert_eq!(lru.get(&2), None);
+        assert_eq!(lru.get(&1), Some(&10));
+        assert_eq!(lru.get(&3), Some(&30));
+        assert_eq!(lru.evictions, 1);
+    }
+
+    #[test]
+    fn lru_insert_is_first_writer_wins() {
+        let mut lru: Lru<u32, u32> = Lru::new(4);
+        lru.insert(1, 10);
+        lru.insert(1, 99);
+        assert_eq!(lru.get(&1), Some(&10));
+        assert_eq!(lru.len(), 1);
+    }
+
+    #[test]
+    fn cost_fingerprints_separate_hardware_precision_and_strategy() {
+        let base = HwPoint::today(&catalog::mi210());
+        let other_hw = HwPoint::today(&catalog::a100());
+        let par = ParallelismSpec::tp_dp(8, 1);
+        let a = cost_fingerprint(&base, Precision::F16, par);
+        assert_eq!(a, cost_fingerprint(&base, Precision::F16, par));
+        assert_ne!(a, cost_fingerprint(&other_hw, Precision::F16, par));
+        assert_ne!(a, cost_fingerprint(&base, Precision::F32, par));
+        assert_ne!(
+            a,
+            cost_fingerprint(&base, Precision::F16, ParallelismSpec::tp_dp(16, 1))
+        );
+    }
+
+    #[test]
+    fn point_cache_separates_fidelities() {
+        let cache = SharedCache::new();
+        let cfg = crate::model::ModelConfig {
+            hidden: 4096,
+            seq_len: 2048,
+            batch: 1,
+            layers: 2,
+            heads: 32,
+            ffn_mult: 4,
+            par: ParallelismSpec::tp_dp(8, 1),
+            precision: Precision::F16,
+        };
+        let m = PointMetrics { makespan: 1.5, ..PointMetrics::default() };
+        cache.put_point(7, &cfg, GraphOptions::default(), Fidelity::Exact, m);
+        assert_eq!(
+            cache
+                .get_point(7, &cfg, GraphOptions::default(), Fidelity::Exact)
+                .map(|p| p.makespan),
+            Some(1.5)
+        );
+        assert!(cache
+            .get_point(7, &cfg, GraphOptions::default(), Fidelity::Surrogate)
+            .is_none());
+        let s = cache.stats();
+        assert_eq!((s.point_hits, s.point_misses), (1, 1));
+    }
+
+    #[test]
+    fn op_publish_and_snapshot_roundtrip() {
+        let cache = SharedCache::new();
+        let k1 = OpKind::Gemm { m: 64, n: 64, k: 64, count: 1 };
+        let k2 = OpKind::Elementwise { bytes: 1 << 20 };
+        cache.publish_ops(42, &[(k1, 1e-3), (k2, 2e-4)]);
+        cache.publish_ops(42, &[(k1, 9.9)]); // duplicate: first bits win
+        let mut snap = cache.op_snapshot(42);
+        snap.sort_by(|a, b| format!("{:?}", a.0).cmp(&format!("{:?}", b.0)));
+        assert_eq!(snap.len(), 2);
+        assert!(snap.iter().any(|(k, v)| *k == k1 && *v == 1e-3));
+        assert!(cache.op_snapshot(43).is_empty());
+    }
+}

@@ -39,6 +39,13 @@
 //!   optimizer searches partition into deterministic shards (point
 //!   ranges / group-key ranges) run as worker processes on any host,
 //!   and the merge is bit-identical to single-process output.
+//! * [`cache`] — the shared, fingerprint-keyed evaluation cache: operator
+//!   costs, graph templates, surrogate digests, and point metrics behind
+//!   LRU bounds, with a versioned+checksummed on-disk operator-cost
+//!   snapshot for cross-process warm-starts.
+//! * [`serve`] — the resident query service: a dependency-free HTTP/1.1
+//!   server (`commscale serve`) that answers `StudySpec` queries over the
+//!   shared cache and streams rows through the study sinks.
 //! * [`opmodel`] — the paper's operator-level runtime models: fit on a
 //!   profiled baseline, project hundreds of configurations (§4.2.2).
 //! * [`profiler`] — ROI extraction: measures ground-truth operator times by
@@ -53,6 +60,7 @@
 //!   the build is fully offline, so these have no external dependencies.
 
 pub mod analysis;
+pub mod cache;
 pub mod collectives;
 pub mod config;
 pub mod coordinator;
@@ -65,6 +73,7 @@ pub mod parallelism;
 pub mod profiler;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod shard;
 pub mod sim;
 pub mod study;

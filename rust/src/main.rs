@@ -12,6 +12,7 @@
 //! commscale speedup
 //! commscale profile [--reps N] [--out PATH]          # ROI ground truth
 //! commscale train [--model small] [--dp 4] [--steps 100] [--csv PATH]
+//! commscale serve [--addr HOST:PORT] [--warm-cache PATH]
 //! commscale all                                      # every projection figure
 //! ```
 //!
@@ -22,6 +23,7 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use commscale::analysis::{accuracy, strategies};
+use commscale::cache;
 use commscale::config::SweepGrid;
 use commscale::coordinator::Trainer;
 use commscale::hw::{catalog, DeviceSpec, Evolution};
@@ -32,6 +34,7 @@ use commscale::parallelism::TopologyKind;
 use commscale::profiler::{self, ProfileDb};
 use commscale::report::{fmt_secs, Table};
 use commscale::runtime::Runtime;
+use commscale::serve::{self, ServeOptions};
 use commscale::shard;
 use commscale::sim::AnalyticCost;
 use commscale::study::{
@@ -61,6 +64,7 @@ fn main() -> Result<()> {
         "study" => study_cmd(&args, &device),
         "optimize" => optimize_cmd(&args, &device),
         "shard" => shard_cmd(&args, &device),
+        "serve" => serve_cmd(&args, &device),
         "fig15" => fig15(&args),
         "sweep" => sweep_cmd(&args, &device),
         "strategies" => strategies_cmd(&args, &device),
@@ -127,6 +131,7 @@ fn study_cmd(args: &Args, device: &DeviceSpec) -> Result<()> {
         print!("{}", resolved.explain());
         return Ok(());
     }
+    let warm = warm_cache(args);
     let error_sample = args.get_usize("error-sample", 0);
     if error_sample > 0 && spec.fidelity != Fidelity::Surrogate {
         bail!(
@@ -213,7 +218,53 @@ fn study_cmd(args: &Args, device: &DeviceSpec) -> Result<()> {
             );
         }
     }
+    save_warm_cache(warm);
     Ok(())
+}
+
+/// `commscale serve` — the resident query service: a dependency-free
+/// HTTP server answering StudySpec queries over the shared evaluation
+/// cache (DESIGN.md §14). Runs until `POST /shutdown`.
+fn serve_cmd(args: &Args, device: &DeviceSpec) -> Result<()> {
+    let opts = ServeOptions {
+        addr: args.get_or("addr", "127.0.0.1:7177").to_string(),
+        threads: args.get_usize("threads", 0),
+        chunk: args.get_usize("chunk", 0),
+        cache_path: args.get("warm-cache").map(std::path::PathBuf::from),
+    };
+    serve::serve(device, &opts)?;
+    Ok(())
+}
+
+/// `--warm-cache PATH` wiring shared by `study`/`optimize`: install the
+/// process-global evaluation cache and seed its operator-cost table from
+/// a previous run's snapshot (leniently — a missing or stale file means
+/// a cold start, never an error). Returns the handle for the post-run
+/// save.
+fn warm_cache(
+    args: &Args,
+) -> Option<(std::sync::Arc<cache::SharedCache>, std::path::PathBuf)> {
+    let path = std::path::PathBuf::from(args.get("warm-cache")?);
+    let shared = cache::install_default();
+    let n = cache::disk::warm_start(&shared, &path);
+    if n > 0 {
+        eprintln!(
+            "warm-started {} op-cost entries from {}",
+            n,
+            path.display()
+        );
+    }
+    Some((shared, path))
+}
+
+/// Save the warm cache back after a run (the snapshot only grows: it
+/// re-emits everything loaded plus whatever this run computed).
+fn save_warm_cache(warm: Option<(std::sync::Arc<cache::SharedCache>, std::path::PathBuf)>) {
+    let Some((shared, path)) = warm else { return };
+    match cache::disk::save(&shared, &path) {
+        Ok(n) => eprintln!("saved {} op-cost entries to {}", n, path.display()),
+        Err(e) => eprintln!("warning: cache save failed: {e}"),
+    }
 }
 
 /// Resolve a `study`/`optimize` target: a spec file on disk, or a
@@ -289,21 +340,8 @@ fn optimize_cmd(args: &Args, device: &DeviceSpec) -> Result<()> {
         }
         return Ok(());
     }
-    let memory_cap = match args.get("memory-cap") {
-        None => None,
-        Some(s) => {
-            let frac: f64 = s
-                .parse()
-                .context("--memory-cap must be a number (fraction of HBM)")?;
-            if !frac.is_finite() || frac <= 0.0 {
-                bail!(
-                    "--memory-cap must be a positive fraction of device \
-                     HBM (e.g. 0.9), got {s}"
-                );
-            }
-            Some(frac)
-        }
-    };
+    let warm = warm_cache(args);
+    let memory_cap = parse_memory_cap(args)?;
     if memory_cap.is_some() && args.has("verify") {
         bail!(
             "--verify compares against the capacity-blind exhaustive \
@@ -361,7 +399,29 @@ fn optimize_cmd(args: &Args, device: &DeviceSpec) -> Result<()> {
             resolved.total_points()
         );
     }
+    save_warm_cache(warm);
     Ok(())
+}
+
+/// Parse `--memory-cap FRAC` (a positive finite fraction of device HBM).
+/// Shared by `optimize` and the shard paths so the flag means the same
+/// thing everywhere.
+fn parse_memory_cap(args: &Args) -> Result<Option<f64>> {
+    match args.get("memory-cap") {
+        None => Ok(None),
+        Some(s) => {
+            let frac: f64 = s
+                .parse()
+                .context("--memory-cap must be a number (fraction of HBM)")?;
+            if !frac.is_finite() || frac <= 0.0 {
+                bail!(
+                    "--memory-cap must be a positive fraction of device \
+                     HBM (e.g. 0.9), got {s}"
+                );
+            }
+            Ok(Some(frac))
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -370,9 +430,10 @@ fn optimize_cmd(args: &Args, device: &DeviceSpec) -> Result<()> {
 
 const SHARD_USAGE: &str = "\
 usage: commscale shard <run|worker|plan|merge> ...
-  shard run -n N <spec|name> [--optimize] [--csv PATH] [--emit-spec PATH]
-            [--worker-threads T] [--keep-dir DIR]
-  shard worker --shard k/n <spec|name> [--optimize] [--out PATH] [--threads T]
+  shard run -n N <spec|name> [--optimize [--memory-cap FRAC]] [--csv PATH]
+            [--emit-spec PATH] [--worker-threads T] [--keep-dir DIR]
+  shard worker --shard k/n <spec|name> [--optimize [--memory-cap FRAC]]
+            [--out PATH] [--threads T]
   shard plan -n N <spec|name> [--optimize]
   shard merge <spec|name> FILE... [--optimize] [--csv PATH] [--emit-spec PATH]
 see `commscale help` for the full shard story";
@@ -402,12 +463,11 @@ fn shard_n_and_rest(args: &Args) -> Result<(Option<usize>, Vec<String>)> {
 }
 
 fn shard_cmd(args: &Args, device: &DeviceSpec) -> Result<()> {
-    if args.has("memory-cap") {
+    if args.has("memory-cap") && !args.has("optimize") {
         bail!(
-            "--memory-cap is not supported under `commscale shard` (shard \
-             workers pin it off so the merged argmin stays equivalent to \
-             the exhaustive study); run `commscale optimize --memory-cap` \
-             unsharded instead"
+            "--memory-cap only constrains the optimize search (studies \
+             enumerate points, not strategies); add --optimize or drop \
+             the flag"
         );
     }
     match args.positional.get(1).map(String::as_str) {
@@ -491,17 +551,32 @@ fn shard_worker(args: &Args, device: &DeviceSpec) -> Result<()> {
         threads: args.get_usize("threads", 0),
         chunk: args.get_usize("chunk", 0),
     };
+    let memory_cap = parse_memory_cap(args)?;
     let out_path = args.get_or("out", "-");
     let summary = if out_path == "-" {
         let stdout = std::io::stdout();
         let mut out = std::io::BufWriter::new(stdout.lock());
-        shard::run_worker(&resolved, id, args.has("optimize"), opts, &mut out)?
+        shard::run_worker_capped(
+            &resolved,
+            id,
+            args.has("optimize"),
+            opts,
+            memory_cap,
+            &mut out,
+        )?
     } else {
         let mut out = std::io::BufWriter::new(
             std::fs::File::create(out_path)
                 .with_context(|| format!("cannot create {out_path:?}"))?,
         );
-        shard::run_worker(&resolved, id, args.has("optimize"), opts, &mut out)?
+        shard::run_worker_capped(
+            &resolved,
+            id,
+            args.has("optimize"),
+            opts,
+            memory_cap,
+            &mut out,
+        )?
     };
     eprintln!(
         "shard {id} of {:?}: units [{}, {}) of {}, {} points evaluated, {} \
@@ -542,6 +617,7 @@ fn shard_run(args: &Args, device: &DeviceSpec) -> Result<()> {
     let (n, rest) = shard_n_and_rest(args)?;
     let n = n.context("shard run needs -n N (the shard count)")?;
     shard::ShardId::new(0, n)?;
+    parse_memory_cap(args)?; // fail fast, before any worker spawns
     let target = rest.first().context("shard run needs a spec or name")?;
     let mut spec = load_spec(target)?;
     apply_fidelity(args, &mut spec)?;
@@ -576,6 +652,11 @@ fn shard_run(args: &Args, device: &DeviceSpec) -> Result<()> {
             .arg(worker_threads.to_string());
         if args.has("optimize") {
             cmd.arg("--optimize");
+        }
+        if let Some(cap) = args.get("memory-cap") {
+            // one flag, every worker: group shards are independent, so a
+            // uniform cap merges into exactly the single-process report
+            cmd.arg("--memory-cap").arg(cap);
         }
         if let Some(f) = args.get("fidelity") {
             cmd.arg("--fidelity").arg(f);
@@ -739,6 +820,11 @@ declarative studies (the one scenario-query surface):
                          re-run K LCG-sampled points at exact fidelity and
                          report the surrogate's max/mean relative makespan
                          error; --error-bound fails the run if max > FRAC
+  study ... --warm-cache PATH
+                         persist the memoized operator-cost tables across
+                         runs: seed them from PATH before the run (cold
+                         start if missing/stale) and save them back after
+                         (also on `optimize`; `serve` holds them resident)
   (a {\"kind\": \"spec\", \"path\": ...} sink re-emits grouped argmin rows
    as a new study spec — coarse winners seed a fine follow-up study;
    \"execution\": \"search\" routes a grouped-argmin spec through the
@@ -761,7 +847,25 @@ strategy optimizer (search, not sweep):
     --memory-cap FRAC    refuse strategies needing > FRAC of device HBM
     --fidelity exact|surrogate   evaluate candidates with the estimator
                          (argmin equals a surrogate exhaustive sweep)
-    --csv PATH --threads N
+    --csv PATH --threads N --warm-cache PATH
+
+resident query service (cross-run cache reuse; DESIGN.md §14):
+  serve                  long-lived HTTP server answering study queries
+                         over the shared evaluation cache: repeated or
+                         overlapping queries skip simulation entirely,
+                         and every served row stream is byte-identical
+                         to the cold CLI run of the same spec
+    --addr HOST:PORT     bind address (default 127.0.0.1:7177; port 0
+                         picks an ephemeral port)
+    --threads N          sweep worker threads per query (default: cores
+                         minus a server/IO reserve; COMMSCALE_THREADS
+                         overrides)
+    --warm-cache PATH    load the op-cost snapshot at startup, save it
+                         back on graceful shutdown
+    routes: GET /healthz | GET /studies | POST /query[?format=jsonl|csv]
+            (body: {\"name\": \"fig10\"} or a full inline spec JSON;
+             fidelity/execution honored) | POST /shutdown
+    curl -s localhost:7177/query -d '{\"name\": \"fig10\"}'   # jsonl rows
 
 sharded scatter/gather (split one study/search across processes or hosts;
 merged output is bit-identical to single-process execution):
@@ -769,6 +873,9 @@ merged output is bit-identical to single-process execution):
                          worker processes, merge through the spec's sinks
     --optimize           shard the `commscale optimize` search by group
                          keys instead of the study by point ranges
+    --memory-cap FRAC    (with --optimize) forward the HBM-capacity cap
+                         to every worker; the merged capped argmin equals
+                         the single-process `optimize --memory-cap` report
     --worker-threads T   threads per worker (default: all cores each)
     --csv PATH --emit-spec PATH   as in study/optimize
     --fidelity exact|surrogate    forwarded to every worker; the merged

@@ -1,0 +1,525 @@
+//! `commscale serve` — the resident query service (DESIGN.md §14).
+//!
+//! A long-lived, dependency-free HTTP/1.1 server over
+//! `std::net::TcpListener`: clients POST [`crate::study::StudySpec`]
+//! queries (a built-in study by name, or a full inline spec) and rows
+//! stream back as jsonl or CSV through the same sink machinery the CLI
+//! uses — so a served response is byte-identical to the cold CLI run of
+//! the same spec (`tests/serve_api.rs` diffs them, and CI repeats the
+//! diff across fidelities and the search execution).
+//!
+//! The point of residency is the [`crate::cache`] layer: the server
+//! installs the process-global [`SharedCache`], so cost tables, graph
+//! templates, surrogate digests, and point metrics built by one query
+//! are reused by every later query that overlaps it — repeated or
+//! near-repeated queries skip evaluation entirely, which is where the
+//! ≥10× hot-vs-cold bound in `benches/serve.rs` comes from. With
+//! `--warm-cache PATH` the operator-cost table additionally persists
+//! across restarts ([`crate::cache::disk`]).
+//!
+//! # Protocol
+//!
+//! | route | semantics |
+//! |---|---|
+//! | `GET /healthz` | liveness + cache stats/sizes (JSON) |
+//! | `GET /studies` | the built-in study list (JSON) |
+//! | `POST /query[?format=jsonl\|csv]` | run a study, stream rows back |
+//! | `POST /shutdown` | graceful stop (the reply confirms) |
+//!
+//! `POST /query` bodies: `{"name": "fig10"}` (optionally with
+//! `"fidelity": "exact"|"surrogate"`) runs a built-in; any other JSON
+//! object is parsed as a full inline `StudySpec` (its own `fidelity` and
+//! `execution` fields are honored — `"execution": "search"` routes
+//! through the optimizer). The spec's own sinks are ignored: the
+//! response body is exactly the row stream in the requested format
+//! (default jsonl). Responses are close-delimited (`Connection: close`),
+//! so `curl` just works.
+//!
+//! Spec errors are detected before the status line goes out (400 + JSON
+//! error). A failure *after* streaming began can only truncate the body —
+//! the connection drops without the final newline-terminated row ever
+//! lying about values.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::cache::{self, SharedCache};
+use crate::hw::DeviceSpec;
+use crate::optimizer::{self, OptimizeOptions};
+use crate::study::run::{CsvSink, JsonlSink};
+use crate::study::{self, builtin, Execution, RowSink, RunOptions, StudySpec};
+use crate::sweep::Fidelity;
+use crate::util::Json;
+use crate::{Error, Result};
+
+/// Server configuration (`commscale serve` flags).
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Bind address; `127.0.0.1:7177` by default, port `0` for ephemeral.
+    pub addr: String,
+    /// Sweep worker threads per query (`0` = auto: available parallelism
+    /// minus the server/IO reserve — see `sweep::default_threads`).
+    pub threads: usize,
+    /// Streaming chunk size per query (`0` = auto).
+    pub chunk: usize,
+    /// Warm-start snapshot: loaded (leniently) at startup, saved at
+    /// graceful shutdown.
+    pub cache_path: Option<PathBuf>,
+}
+
+impl Default for ServeOptions {
+    fn default() -> ServeOptions {
+        ServeOptions {
+            addr: "127.0.0.1:7177".to_string(),
+            threads: 0,
+            chunk: 0,
+            cache_path: None,
+        }
+    }
+}
+
+struct ServerState {
+    device: DeviceSpec,
+    cache: Arc<SharedCache>,
+    threads: usize,
+    chunk: usize,
+    stop: Arc<AtomicBool>,
+    addr: SocketAddr,
+    queries: AtomicU64,
+}
+
+/// A running server (background accept loop) — the in-process handle the
+/// tests and benches drive. The CLI uses [`serve`] instead, which runs
+/// the accept loop on the calling thread.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop the accept loop and wait for it to exit. In-flight query
+    /// threads drain on their own; new connections are refused.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr); // wake the acceptor
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Bind, install the shared cache, and run the accept loop on this
+/// thread until `POST /shutdown` (the CLI entry point). Returns after a
+/// graceful shutdown, saving the warm-start snapshot if configured.
+pub fn serve(device: &DeviceSpec, opts: &ServeOptions) -> Result<()> {
+    let (listener, state) = bind(device, opts)?;
+    eprintln!(
+        "commscale serve: listening on http://{} (device {}, {} worker \
+         threads/query; POST /shutdown to stop)",
+        state.addr,
+        state.device.name,
+        if state.threads == 0 {
+            crate::sweep::default_threads()
+        } else {
+            state.threads
+        },
+    );
+    accept_loop(listener, state.clone());
+    finish(&state, opts);
+    Ok(())
+}
+
+/// Bind and run the accept loop on a background thread (tests/benches).
+pub fn spawn(device: &DeviceSpec, opts: &ServeOptions) -> Result<ServerHandle> {
+    let (listener, state) = bind(device, opts)?;
+    let addr = state.addr;
+    let stop = state.stop.clone();
+    let opts = opts.clone();
+    let join = std::thread::spawn(move || {
+        accept_loop(listener, state.clone());
+        finish(&state, &opts);
+    });
+    Ok(ServerHandle { addr, stop, join: Some(join) })
+}
+
+fn bind(
+    device: &DeviceSpec,
+    opts: &ServeOptions,
+) -> Result<(TcpListener, Arc<ServerState>)> {
+    let listener = TcpListener::bind(&opts.addr).map_err(|e| {
+        Error::Study(format!("serve: cannot bind {}: {e}", opts.addr))
+    })?;
+    let addr = listener.local_addr()?;
+    let cache = cache::install_default();
+    if let Some(path) = &opts.cache_path {
+        let n = cache::disk::warm_start(&cache, path);
+        if n > 0 {
+            eprintln!(
+                "commscale serve: warm-started {} op-cost entries from {}",
+                n,
+                path.display()
+            );
+        }
+    }
+    let state = Arc::new(ServerState {
+        device: device.clone(),
+        cache,
+        threads: opts.threads,
+        chunk: opts.chunk,
+        stop: Arc::new(AtomicBool::new(false)),
+        addr,
+        queries: AtomicU64::new(0),
+    });
+    Ok((listener, state))
+}
+
+fn finish(state: &ServerState, opts: &ServeOptions) {
+    if let Some(path) = &opts.cache_path {
+        match cache::disk::save(&state.cache, path) {
+            Ok(n) => eprintln!(
+                "commscale serve: saved {} op-cost entries to {}",
+                n,
+                path.display()
+            ),
+            Err(e) => eprintln!("warning: cache save failed: {e}"),
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, state: Arc<ServerState>) {
+    for conn in listener.incoming() {
+        if state.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(stream) = conn else { continue };
+        let state = state.clone();
+        std::thread::spawn(move || {
+            if let Err(e) = handle_connection(stream, &state) {
+                eprintln!("serve: connection error: {e}");
+            }
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// request plumbing (hand-rolled HTTP/1.1, close-delimited responses)
+// ---------------------------------------------------------------------------
+
+const MAX_HEAD: usize = 64 * 1024;
+const MAX_BODY: usize = 8 * 1024 * 1024;
+
+struct Request {
+    method: String,
+    path: String,
+    query: String,
+    body: Vec<u8>,
+}
+
+fn find_subslice(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+fn read_request(stream: &mut TcpStream) -> Result<Request> {
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut tmp = [0u8; 4096];
+    let head_end = loop {
+        if let Some(pos) = find_subslice(&buf, b"\r\n\r\n") {
+            break pos;
+        }
+        if buf.len() > MAX_HEAD {
+            return Err(Error::Study("request head too large".into()));
+        }
+        let n = stream.read(&mut tmp)?;
+        if n == 0 {
+            return Err(Error::Study("connection closed mid-request".into()));
+        }
+        buf.extend_from_slice(&tmp[..n]);
+    };
+    let head = String::from_utf8_lossy(&buf[..head_end]).into_owned();
+    let mut lines = head.lines();
+    let request_line = lines
+        .next()
+        .ok_or_else(|| Error::Study("empty request".into()))?;
+    let mut parts = request_line.split_whitespace();
+    let method = parts
+        .next()
+        .ok_or_else(|| Error::Study("bad request line".into()))?
+        .to_string();
+    let target = parts
+        .next()
+        .ok_or_else(|| Error::Study("bad request line".into()))?;
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target.to_string(), String::new()),
+    };
+    let mut content_length = 0usize;
+    for line in lines {
+        if let Some((k, v)) = line.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().map_err(|_| {
+                    Error::Study("bad Content-Length".into())
+                })?;
+            }
+        }
+    }
+    if content_length > MAX_BODY {
+        return Err(Error::Study("request body too large".into()));
+    }
+    let mut body: Vec<u8> = buf[head_end + 4..].to_vec();
+    while body.len() < content_length {
+        let n = stream.read(&mut tmp)?;
+        if n == 0 {
+            return Err(Error::Study("connection closed mid-body".into()));
+        }
+        body.extend_from_slice(&tmp[..n]);
+    }
+    body.truncate(content_length);
+    Ok(Request { method, path, query, body })
+}
+
+fn write_head(
+    stream: &mut TcpStream,
+    status: &str,
+    content_type: &str,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\n\
+         Connection: close\r\n\r\n"
+    );
+    stream.write_all(head.as_bytes())
+}
+
+fn respond_json(
+    stream: &mut TcpStream,
+    status: &str,
+    body: &Json,
+) -> std::io::Result<()> {
+    write_head(stream, status, "application/json")?;
+    let mut text = body.to_string();
+    text.push('\n');
+    stream.write_all(text.as_bytes())?;
+    stream.flush()
+}
+
+fn respond_error(stream: &mut TcpStream, status: &str, msg: &str) {
+    let _ = respond_json(
+        stream,
+        status,
+        &Json::obj(vec![("error", Json::str(msg))]),
+    );
+}
+
+fn handle_connection(mut stream: TcpStream, state: &ServerState) -> Result<()> {
+    let req = match read_request(&mut stream) {
+        Ok(r) => r,
+        Err(e) => {
+            respond_error(&mut stream, "400 Bad Request", &e.to_string());
+            return Ok(());
+        }
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            respond_json(&mut stream, "200 OK", &healthz(state))?;
+        }
+        ("GET", "/studies") => {
+            let list = Json::arr(builtin::all().iter().map(|b| {
+                Json::obj(vec![
+                    ("name", Json::str(b.name)),
+                    (
+                        "artifact",
+                        match b.artifact {
+                            Some(a) => Json::str(a),
+                            None => Json::Null,
+                        },
+                    ),
+                    ("description", Json::str(b.description)),
+                ])
+            }));
+            respond_json(&mut stream, "200 OK", &list)?;
+        }
+        ("POST", "/shutdown") => {
+            state.stop.store(true, Ordering::SeqCst);
+            respond_json(
+                &mut stream,
+                "200 OK",
+                &Json::obj(vec![("status", Json::str("shutting down"))]),
+            )?;
+            // the acceptor may already be blocked in accept(): wake it
+            let _ = TcpStream::connect(state.addr);
+        }
+        ("POST", "/query") => {
+            state.queries.fetch_add(1, Ordering::Relaxed);
+            handle_query(stream, state, &req)?;
+        }
+        _ => {
+            respond_error(
+                &mut stream,
+                "404 Not Found",
+                &format!(
+                    "{} {} — routes: GET /healthz, GET /studies, \
+                     POST /query, POST /shutdown",
+                    req.method, req.path
+                ),
+            );
+        }
+    }
+    Ok(())
+}
+
+fn healthz(state: &ServerState) -> Json {
+    let s = state.cache.stats();
+    let z = state.cache.sizes();
+    Json::obj(vec![
+        ("status", Json::str("ok")),
+        ("device", Json::str(&state.device.name)),
+        ("queries", Json::num(state.queries.load(Ordering::Relaxed) as f64)),
+        (
+            "cache",
+            Json::obj(vec![
+                ("op_hits", Json::num(s.op_hits as f64)),
+                ("op_misses", Json::num(s.op_misses as f64)),
+                ("graph_hits", Json::num(s.graph_hits as f64)),
+                ("graph_misses", Json::num(s.graph_misses as f64)),
+                ("digest_hits", Json::num(s.digest_hits as f64)),
+                ("digest_misses", Json::num(s.digest_misses as f64)),
+                ("point_hits", Json::num(s.point_hits as f64)),
+                ("point_misses", Json::num(s.point_misses as f64)),
+                ("evictions", Json::num(s.evictions as f64)),
+                ("disk_loaded", Json::num(s.disk_loaded as f64)),
+                ("op_tables", Json::num(z.op_tables as f64)),
+                ("op_entries", Json::num(z.op_entries as f64)),
+                ("graphs", Json::num(z.graphs as f64)),
+                ("digests", Json::num(z.digests as f64)),
+                ("points", Json::num(z.points as f64)),
+            ]),
+        ),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// POST /query
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Format {
+    Jsonl,
+    Csv,
+}
+
+/// Resolve a query body into a runnable spec. `{"name": …}` (with only
+/// an optional `"fidelity"` beside it) names a built-in; any other
+/// object is a full inline `StudySpec`.
+fn query_spec(body: &str) -> Result<StudySpec> {
+    let v = Json::parse(body).map_err(|e| {
+        Error::Study(format!("query body is not JSON: {e}"))
+    })?;
+    let obj = v.as_obj().ok_or_else(|| {
+        Error::Study("query body must be a JSON object".into())
+    })?;
+    let named = obj.contains_key("name")
+        && obj.keys().all(|k| k == "name" || k == "fidelity");
+    if named {
+        let name = v.str_field("name")?;
+        let b = builtin::find(name).ok_or_else(|| {
+            Error::Study(format!(
+                "unknown built-in study {name:?} (GET /studies lists them)"
+            ))
+        })?;
+        let mut spec = b.spec();
+        if let Some(text) = v.get("fidelity").and_then(Json::as_str) {
+            let f = Fidelity::parse(text).ok_or_else(|| {
+                Error::Study(format!(
+                    "unknown fidelity {text:?} (expected one of {})",
+                    Fidelity::supported()
+                ))
+            })?;
+            if f != Fidelity::Exact && spec.source != study::Source::Grid {
+                return Err(Error::Study(format!(
+                    "fidelity {}: only grid studies are simulated (this \
+                     spec reads {:?} rows)",
+                    f.as_str(),
+                    spec.source.as_str()
+                )));
+            }
+            spec.fidelity = f;
+        }
+        Ok(spec)
+    } else {
+        StudySpec::parse(body)
+    }
+}
+
+fn handle_query(
+    mut stream: TcpStream,
+    state: &ServerState,
+    req: &Request,
+) -> Result<()> {
+    let format = match req
+        .query
+        .split('&')
+        .find_map(|kv| kv.strip_prefix("format="))
+    {
+        None | Some("jsonl") => Format::Jsonl,
+        Some("csv") => Format::Csv,
+        Some(other) => {
+            respond_error(
+                &mut stream,
+                "400 Bad Request",
+                &format!("unknown format {other:?} (want jsonl or csv)"),
+            );
+            return Ok(());
+        }
+    };
+    let body = String::from_utf8_lossy(&req.body).into_owned();
+
+    // everything that can fail cheaply happens before the status line
+    let resolved = query_spec(&body).and_then(|mut spec| {
+        spec.sinks.clear(); // the response body IS the sink
+        spec.resolve(&state.device)
+    });
+    let resolved = match resolved {
+        Ok(r) => r,
+        Err(e) => {
+            respond_error(&mut stream, "400 Bad Request", &e.to_string());
+            return Ok(());
+        }
+    };
+
+    let content_type = match format {
+        Format::Jsonl => "application/jsonl",
+        Format::Csv => "text/csv",
+    };
+    write_head(&mut stream, "200 OK", content_type)?;
+    let writer: Box<dyn Write> =
+        Box::new(std::io::BufWriter::new(stream.try_clone()?));
+    let mut sink: Box<dyn RowSink> = match format {
+        Format::Jsonl => Box::new(JsonlSink::to_writer(writer)),
+        Format::Csv => Box::new(CsvSink::to_writer(writer)),
+    };
+
+    if resolved.spec.execution == Execution::Search {
+        let report = optimizer::optimize_study(
+            &resolved,
+            &OptimizeOptions { threads: state.threads, memory_cap: None },
+        )?;
+        sink.begin(&report.columns)?;
+        for row in &report.rows {
+            sink.row(row)?;
+        }
+        sink.finish()?;
+    } else {
+        let opts = RunOptions { threads: state.threads, chunk: state.chunk };
+        let mut refs: Vec<&mut dyn RowSink> = vec![&mut *sink];
+        study::run_study(&resolved, opts, &mut refs)?;
+    }
+    stream.flush()?;
+    Ok(())
+}

@@ -167,6 +167,7 @@ fn base_header(
 /// Execute one shard of a resolved study (or, with `optimize`, of its
 /// argmin search) and stream the payload to `out`. This is the body of
 /// `commscale shard worker`; the property tests drive it in-process.
+/// Capacity-blind: see [`run_worker_capped`] for `--memory-cap` searches.
 pub fn run_worker(
     resolved: &ResolvedStudy,
     id: ShardId,
@@ -174,8 +175,26 @@ pub fn run_worker(
     opts: RunOptions,
     out: &mut dyn Write,
 ) -> Result<WorkerSummary> {
+    run_worker_capped(resolved, id, optimize, opts, None, out)
+}
+
+/// [`run_worker`] with an optional HBM-fraction capacity cap for the
+/// optimize mode. Every worker of a sharded search must receive the
+/// SAME cap (the `shard run` driver forwards one flag to all workers) —
+/// group shards are independent, so a uniform cap merges into exactly
+/// the report a single-process `optimize --memory-cap` run produces.
+/// The cap is ignored in study (non-optimize) mode, which enumerates
+/// points, not strategies.
+pub fn run_worker_capped(
+    resolved: &ResolvedStudy,
+    id: ShardId,
+    optimize: bool,
+    opts: RunOptions,
+    memory_cap: Option<f64>,
+    out: &mut dyn Write,
+) -> Result<WorkerSummary> {
     if optimize {
-        return run_optimize_worker(resolved, id, opts, out);
+        return run_optimize_worker(resolved, id, opts, memory_cap, out);
     }
     let units = resolved.total_points();
     let range = unit_range(units, id);
@@ -228,9 +247,10 @@ fn run_optimize_worker(
     resolved: &ResolvedStudy,
     id: ShardId,
     opts: RunOptions,
+    memory_cap: Option<f64>,
     out: &mut dyn Write,
 ) -> Result<WorkerSummary> {
-    let search_opts = OptimizeOptions { threads: opts.threads, memory_cap: None };
+    let search_opts = OptimizeOptions { threads: opts.threads, memory_cap };
     let report = optimizer::optimize_study_shard(
         resolved,
         &search_opts,

@@ -214,11 +214,21 @@ impl CsvSink {
     pub fn new(path: &str) -> CsvSink {
         CsvSink { path: path.to_string(), out: None, rows: 0 }
     }
+
+    /// Stream into a caller-provided writer (the serve path: rows go
+    /// straight down the connection). `finish` flushes but reports no
+    /// "wrote N rows" note.
+    pub fn to_writer(out: Box<dyn std::io::Write>) -> CsvSink {
+        CsvSink { path: "-".to_string(), out: Some(out), rows: 0 }
+    }
 }
 
 impl RowSink for CsvSink {
     fn begin(&mut self, columns: &[String]) -> Result<()> {
-        let mut out = open_out(&self.path)?;
+        let mut out = match self.out.take() {
+            Some(o) => o,
+            None => open_out(&self.path)?,
+        };
         let header: Vec<String> =
             columns.iter().map(|c| csv_escape(c)).collect();
         writeln!(out, "{}", header.join(","))?;
@@ -264,12 +274,25 @@ impl JsonlSink {
             rows: 0,
         }
     }
+
+    /// Stream into a caller-provided writer (the serve path). `finish`
+    /// flushes but reports no "wrote N rows" note.
+    pub fn to_writer(out: Box<dyn std::io::Write>) -> JsonlSink {
+        JsonlSink {
+            path: "-".to_string(),
+            columns: Vec::new(),
+            out: Some(out),
+            rows: 0,
+        }
+    }
 }
 
 impl RowSink for JsonlSink {
     fn begin(&mut self, columns: &[String]) -> Result<()> {
         self.columns = columns.to_vec();
-        self.out = Some(open_out(&self.path)?);
+        if self.out.is_none() {
+            self.out = Some(open_out(&self.path)?);
+        }
         Ok(())
     }
 

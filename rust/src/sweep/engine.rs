@@ -22,9 +22,11 @@
 //! `tests/sweep_determinism.rs`).
 
 use std::cell::RefCell;
+use std::collections::hash_map::Entry;
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
+use crate::cache::{self, SharedCache};
 use crate::graph::{
     build_layer_graph, rewrite_layer_graph, GraphOptions, GraphShapeKey,
     OpGraph, OpKind,
@@ -215,7 +217,9 @@ type CostKey = (u32, ParallelismSpec, Precision);
 pub struct EvalCtx {
     arena: SimArena,
     templates: HashMap<GraphShapeKey, OpGraph>,
-    costs: HashMap<CostKey, (u32, AnalyticCost)>,
+    /// Per-(hardware, strategy, precision) cost providers: dense local id,
+    /// content fingerprint ([`cache::cost_fingerprint`]), provider.
+    costs: HashMap<CostKey, (u32, u64, AnalyticCost)>,
     next_cost_id: u32,
     memo: RefCell<HashMap<(u32, OpKind), f64>>,
     /// Surrogate digests keyed by (cost id, surrogate config, graph
@@ -224,6 +228,12 @@ pub struct EvalCtx {
     /// microbatch count) share one digest — the surrogate hot path is
     /// usually a single map probe plus closed-form arithmetic.
     digests: HashMap<(u32, ModelConfig, GraphOptions), SurrogateDigest>,
+    /// The process-global shared cache, when one is installed
+    /// (`cache::install`): local misses consult it, and everything this
+    /// context computes is published back — cost memos on drop, graph
+    /// templates/digests/point metrics as they are produced. `None` (no
+    /// cache installed) reproduces the pre-cache behavior exactly.
+    shared: Option<Arc<SharedCache>>,
 }
 
 impl Default for EvalCtx {
@@ -234,6 +244,17 @@ impl Default for EvalCtx {
 
 impl EvalCtx {
     pub fn new() -> EvalCtx {
+        EvalCtx::with_cache(cache::global().cloned())
+    }
+
+    /// A context that ignores any installed global cache (the oracle side
+    /// of cache-identity tests).
+    pub fn uncached() -> EvalCtx {
+        EvalCtx::with_cache(None)
+    }
+
+    /// A context wired to an explicit shared cache (or none).
+    pub fn with_cache(shared: Option<Arc<SharedCache>>) -> EvalCtx {
         EvalCtx {
             arena: SimArena::new(),
             templates: HashMap::new(),
@@ -241,6 +262,7 @@ impl EvalCtx {
             next_cost_id: 0,
             memo: RefCell::new(HashMap::new()),
             digests: HashMap::new(),
+            shared,
         }
     }
 
@@ -266,46 +288,81 @@ impl EvalCtx {
         grid: &ScenarioGrid,
         sc: &Scenario,
     ) -> PointMetrics {
-        let EvalCtx { templates, costs, next_cost_id, memo, digests, .. } =
+        let EvalCtx { templates, costs, next_cost_id, memo, digests, shared, .. } =
             self;
-        let (cost_id, cost) = cost_entry(costs, next_cost_id, grid, sc);
+        let (cost_id, cost_fp, cost) =
+            cost_entry(costs, next_cost_id, memo, shared, grid, sc);
+        if let Some(s) = shared {
+            if let Some(m) =
+                s.get_point(cost_fp, &sc.cfg, sc.opts, Fidelity::Surrogate)
+            {
+                return m;
+            }
+        }
         let memo = MemoCost { inner: cost, id: cost_id, memo: &*memo };
 
         let sur = surrogate_config(&sc.cfg);
-        let d = digests
-            .entry((cost_id, sur, sc.opts))
-            .or_insert_with(|| {
-                let shape = GraphShapeKey::of(&sur, sc.opts);
-                let g = templates
-                    .entry(shape)
-                    .or_insert_with(|| build_layer_graph(&sur, sc.opts));
-                rewrite_layer_graph(&sur, sc.opts, g);
-                SurrogateDigest::extract(g, &memo)
-            });
+        let d = match digests.entry((cost_id, sur, sc.opts)) {
+            Entry::Occupied(e) => e.into_mut(),
+            Entry::Vacant(v) => {
+                let hit = shared
+                    .as_ref()
+                    .and_then(|s| s.get_digest(cost_fp, &sur, sc.opts));
+                let d = hit.unwrap_or_else(|| {
+                    let shape = GraphShapeKey::of(&sur, sc.opts);
+                    let g = shared_template(templates, shared, shape, || {
+                        build_layer_graph(&sur, sc.opts)
+                    });
+                    rewrite_layer_graph(&sur, sc.opts, g);
+                    let d = SurrogateDigest::extract(g, &memo);
+                    if let Some(s) = shared {
+                        s.put_digest(cost_fp, &sur, sc.opts, d);
+                    }
+                    d
+                });
+                v.insert(d)
+            }
+        };
 
         let opt = d.opt_time(&memo, sc.cfg.stage_layers());
         let mut r = estimate_report(&sc.cfg, d, opt);
         apply_pipeline(&mut r, sc.cfg.pp(), sc.cfg.microbatches());
-        PointMetrics::from_report(&r)
+        let pm = PointMetrics::from_report(&r);
+        if let Some(s) = shared {
+            s.put_point(cost_fp, &sc.cfg, sc.opts, Fidelity::Surrogate, pm);
+        }
+        pm
     }
 
     /// Evaluate one scenario point through the shared caches —
     /// bit-identical to [`run_serial_reference`] on the same point.
     pub fn eval(&mut self, grid: &ScenarioGrid, sc: &Scenario) -> PointMetrics {
-        let EvalCtx { arena, templates, costs, next_cost_id, memo, .. } = self;
-        let (cost_id, cost) =
-            cost_entry(costs, next_cost_id, grid, sc);
+        let EvalCtx { arena, templates, costs, next_cost_id, memo, shared, .. } =
+            self;
+        let (cost_id, cost_fp, cost) =
+            cost_entry(costs, next_cost_id, memo, shared, grid, sc);
+        if let Some(s) = shared {
+            if let Some(m) =
+                s.get_point(cost_fp, &sc.cfg, sc.opts, Fidelity::Exact)
+            {
+                return m;
+            }
+        }
 
         let shape = GraphShapeKey::of(&sc.cfg, sc.opts);
-        let g = templates
-            .entry(shape)
-            .or_insert_with(|| build_layer_graph(&sc.cfg, sc.opts));
+        let g = shared_template(templates, shared, shape, || {
+            build_layer_graph(&sc.cfg, sc.opts)
+        });
         rewrite_layer_graph(&sc.cfg, sc.opts, g);
 
         let memo = MemoCost { inner: cost, id: cost_id, memo: &*memo };
         let mut r = simulate_with(g, &memo, arena, false);
         apply_pipeline(&mut r, sc.cfg.pp(), sc.cfg.microbatches());
-        PointMetrics::from_report(&r)
+        let pm = PointMetrics::from_report(&r);
+        if let Some(s) = shared {
+            s.put_point(cost_fp, &sc.cfg, sc.opts, Fidelity::Exact, pm);
+        }
+        pm
     }
 
     /// Hand `f` the rewritten template graph and the memoized cost
@@ -319,14 +376,14 @@ impl EvalCtx {
         sc: &Scenario,
         f: impl FnOnce(&OpGraph, &dyn CostProvider) -> R,
     ) -> R {
-        let EvalCtx { templates, costs, next_cost_id, memo, .. } = self;
-        let (cost_id, cost) =
-            cost_entry(costs, next_cost_id, grid, sc);
+        let EvalCtx { templates, costs, next_cost_id, memo, shared, .. } = self;
+        let (cost_id, _, cost) =
+            cost_entry(costs, next_cost_id, memo, shared, grid, sc);
 
         let shape = GraphShapeKey::of(&sc.cfg, sc.opts);
-        let g = templates
-            .entry(shape)
-            .or_insert_with(|| build_layer_graph(&sc.cfg, sc.opts));
+        let g = shared_template(templates, shared, shape, || {
+            build_layer_graph(&sc.cfg, sc.opts)
+        });
         rewrite_layer_graph(&sc.cfg, sc.opts, g);
 
         let memo = MemoCost { inner: cost, id: cost_id, memo: &*memo };
@@ -334,21 +391,90 @@ impl EvalCtx {
     }
 }
 
+/// When the context drops, donate its memoized operator costs to the
+/// shared cache (keyed by content fingerprint, so any future context —
+/// this process or, via [`cache::disk`], a later one — can seed from
+/// them). Per-context granularity keeps lock traffic off the per-point
+/// hot path.
+impl Drop for EvalCtx {
+    fn drop(&mut self) {
+        let Some(shared) = self.shared.take() else { return };
+        let memo = self.memo.borrow();
+        if memo.is_empty() {
+            return;
+        }
+        let mut fp_of: HashMap<u32, u64> = HashMap::new();
+        for v in self.costs.values() {
+            fp_of.insert(v.0, v.1);
+        }
+        let mut by_fp: HashMap<u64, Vec<(OpKind, f64)>> = HashMap::new();
+        for (&(id, kind), &t) in memo.iter() {
+            if let Some(&fp) = fp_of.get(&id) {
+                by_fp.entry(fp).or_default().push((kind, t));
+            }
+        }
+        for (fp, entries) in by_fp {
+            shared.publish_ops(fp, &entries);
+        }
+    }
+}
+
+/// Resolve a graph template: local map first, then the shared cache
+/// (cloned out — callers rewrite payloads in place on their own copy),
+/// else build fresh and publish. Free function over the split-out fields
+/// so callers keep their other borrows.
+fn shared_template<'t>(
+    templates: &'t mut HashMap<GraphShapeKey, OpGraph>,
+    shared: &Option<Arc<SharedCache>>,
+    shape: GraphShapeKey,
+    build: impl FnOnce() -> OpGraph,
+) -> &'t mut OpGraph {
+    match templates.entry(shape) {
+        Entry::Occupied(e) => e.into_mut(),
+        Entry::Vacant(v) => {
+            let g = match shared.as_ref().and_then(|s| s.get_graph(&shape)) {
+                Some(g) => g,
+                None => {
+                    let g = build();
+                    if let Some(s) = shared {
+                        s.put_graph(shape, &g);
+                    }
+                    g
+                }
+            };
+            v.insert(g)
+        }
+    }
+}
+
 /// Resolve (or create) the memoized cost provider for a scenario's
 /// (hardware, strategy, precision) combination — one map probe on the
 /// per-point hot path. Free function over the split-out fields so the
-/// caller keeps its other field borrows.
+/// caller keeps its other field borrows. On a local miss with a shared
+/// cache installed, the combination's content fingerprint is computed and
+/// the shared operator-cost table for that fingerprint seeds the local
+/// memo — a warm-started context never recomputes an op another context
+/// (or a previous process, via the disk snapshot) already priced.
 fn cost_entry<'c>(
-    costs: &'c mut HashMap<CostKey, (u32, AnalyticCost)>,
+    costs: &'c mut HashMap<CostKey, (u32, u64, AnalyticCost)>,
     next_cost_id: &mut u32,
+    memo: &RefCell<HashMap<(u32, OpKind), f64>>,
+    shared: &Option<Arc<SharedCache>>,
     grid: &ScenarioGrid,
     sc: &Scenario,
-) -> (u32, &'c AnalyticCost) {
+) -> (u32, u64, &'c AnalyticCost) {
     let key: CostKey = (sc.hw, sc.cfg.par, sc.cfg.precision);
     let entry = costs.entry(key).or_insert_with(|| {
         let hw = &grid.hardware[sc.hw as usize];
         let id = *next_cost_id;
         *next_cost_id += 1;
+        let fp = cache::cost_fingerprint(hw, sc.cfg.precision, sc.cfg.par);
+        if let Some(s) = shared {
+            let mut m = memo.borrow_mut();
+            for (kind, t) in s.op_snapshot(fp) {
+                m.entry((id, kind)).or_insert(t);
+            }
+        }
         let cost = AnalyticCost::from_spec(
             hw.device.clone(),
             sc.cfg.precision,
@@ -356,16 +482,38 @@ fn cost_entry<'c>(
         )
         .with_topology(hw.topology)
         .with_overlap(hw.overlap);
-        (id, cost)
+        (id, fp, cost)
     });
-    (entry.0, &entry.1)
+    (entry.0, entry.1, &entry.2)
 }
 
-/// Worker threads to use when the caller asks for "auto".
+/// Worker threads to use when the caller asks for "auto": the
+/// `COMMSCALE_THREADS` env override when set, else available parallelism
+/// minus a small reserve (2 cores at ≥16, 1 at ≥4) so a resident server's
+/// accept/IO threads — or the shell the CLI ran from — keep a core under
+/// a saturating sweep. Always at least 1.
 pub fn default_threads() -> usize {
-    std::thread::available_parallelism()
+    if let Ok(v) = std::env::var("COMMSCALE_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+        eprintln!(
+            "warning: ignoring COMMSCALE_THREADS={v:?} (want an integer >= 1)"
+        );
+    }
+    let avail = std::thread::available_parallelism()
         .map(|n| n.get())
-        .unwrap_or(1)
+        .unwrap_or(1);
+    let reserve = if avail >= 16 {
+        2
+    } else if avail >= 4 {
+        1
+    } else {
+        0
+    };
+    (avail - reserve).max(1)
 }
 
 /// Evaluate every grid point in parallel across all available cores.
@@ -702,6 +850,56 @@ mod tests {
             let fast = ev.eval_report(&cfg, GraphOptions::default(), &cost);
             assert_eq!(naive.makespan.to_bits(), fast.makespan.to_bits());
             assert_eq!(naive.intervals, fast.intervals);
+        }
+    }
+
+    #[test]
+    fn default_threads_is_positive() {
+        assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn shared_cache_preserves_exact_bit_identity() {
+        let grid = strategy_grid();
+        let reference = run_serial_reference(&grid);
+        let shared = Arc::new(crate::cache::SharedCache::new());
+        // three passes: cold, op/graph-warm, fully point-cached — all must
+        // return the exact serial-reference bits
+        for pass in 0..3 {
+            let mut ctx = EvalCtx::with_cache(Some(shared.clone()));
+            for (i, sc) in grid.points.iter().enumerate() {
+                let m = ctx.eval(&grid, sc);
+                assert_eq!(
+                    m.to_bits(),
+                    reference[i].to_bits(),
+                    "pass {pass} point {i}"
+                );
+            }
+        }
+        let stats = shared.stats();
+        assert!(stats.point_hits as usize >= grid.len(), "{stats:?}");
+    }
+
+    #[test]
+    fn shared_cache_preserves_surrogate_bits() {
+        let grid = strategy_grid();
+        let mut plain = EvalCtx::uncached();
+        let shared = Arc::new(crate::cache::SharedCache::new());
+        let want: Vec<PointMetrics> = grid
+            .points
+            .iter()
+            .map(|sc| plain.eval_surrogate(&grid, sc))
+            .collect();
+        for pass in 0..2 {
+            let mut ctx = EvalCtx::with_cache(Some(shared.clone()));
+            for (i, sc) in grid.points.iter().enumerate() {
+                let m = ctx.eval_surrogate(&grid, sc);
+                assert_eq!(
+                    m.to_bits(),
+                    want[i].to_bits(),
+                    "pass {pass} point {i}"
+                );
+            }
         }
     }
 

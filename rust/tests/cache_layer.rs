@@ -1,0 +1,143 @@
+//! Shared-cache integration: eviction under tiny capacity bounds and
+//! disk warm-start corruption handling can reorder or drop cache
+//! entries, but they must NEVER change output bytes — every point stays
+//! a pure function of its scenario.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use commscale::cache::{disk, CacheCaps, SharedCache};
+use commscale::hw::{catalog, Evolution};
+use commscale::sweep::{run_serial_reference, EvalCtx, GridBuilder, ScenarioGrid};
+
+fn grid() -> ScenarioGrid {
+    GridBuilder::new(&catalog::mi210())
+        .hidden(&[4096, 16384])
+        .seq_len(&[2048, 8192])
+        .batch(&[1])
+        .layers(&[1, 2])
+        .tp(&[4, 16, 64])
+        .dp(&[1, 4])
+        .evolutions(&[Evolution::none(), Evolution::flop_vs_bw_4x()])
+        .build()
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir()
+        .join(format!("commscale_cache_layer_{}_{name}", std::process::id()))
+}
+
+fn eval_bits(g: &ScenarioGrid, cache: Arc<SharedCache>) -> Vec<[u64; 11]> {
+    let mut ctx = EvalCtx::with_cache(Some(cache));
+    g.points.iter().map(|sc| ctx.eval(g, sc).to_bits()).collect()
+}
+
+#[test]
+fn tiny_caps_evict_constantly_but_never_change_bits() {
+    let g = grid();
+    let reference: Vec<[u64; 11]> =
+        run_serial_reference(&g).iter().map(|m| m.to_bits()).collect();
+    // capacities far below the grid's working set: every table churns
+    let shared = Arc::new(SharedCache::with_caps(CacheCaps {
+        op_tables: 3,
+        graphs: 1,
+        digests: 4,
+        points: 8,
+    }));
+    for pass in 0..3 {
+        let bits = eval_bits(&g, shared.clone());
+        assert_eq!(bits, reference, "pass {pass} diverged under eviction");
+    }
+    let stats = shared.stats();
+    assert!(
+        stats.evictions > 0,
+        "caps this small must evict (sizes: {:?})",
+        shared.sizes()
+    );
+    let sizes = shared.sizes();
+    assert!(sizes.op_tables <= 3 && sizes.graphs <= 1 && sizes.points <= 8);
+}
+
+#[test]
+fn corrupt_or_stale_snapshots_rebuild_instead_of_serving_wrong_bytes() {
+    let g = grid();
+    let reference: Vec<[u64; 11]> =
+        run_serial_reference(&g).iter().map(|m| m.to_bits()).collect();
+
+    // build a genuine snapshot
+    let snap = tmp("snapshot.jsonl");
+    let seed = Arc::new(SharedCache::new());
+    assert_eq!(eval_bits(&g, seed.clone()), reference);
+    let saved = disk::save(&seed, &snap).expect("save snapshot");
+    assert!(saved > 0, "a sweep must publish op-cost entries");
+
+    // a clean load reproduces the reference exactly
+    let clean = Arc::new(SharedCache::new());
+    let loaded = disk::load(&clean, &snap).expect("clean load");
+    assert_eq!(loaded, saved);
+    assert_eq!(eval_bits(&g, clean), reference, "warm-start drift");
+
+    // corrupt one payload byte: load must refuse, warm_start must fall
+    // back to a cold (empty) cache, and the run must still be exact
+    let text = std::fs::read_to_string(&snap).unwrap();
+    let corrupted = text.replacen("\"t\":", "\"t\" :", 1);
+    assert_ne!(text, corrupted, "corruption did not apply");
+    let bad = tmp("corrupted.jsonl");
+    std::fs::write(&bad, corrupted).unwrap();
+    let cold = Arc::new(SharedCache::new());
+    assert!(disk::load(&cold, &bad).is_err(), "corrupt load must fail");
+    assert_eq!(disk::warm_start(&cold, &bad), 0);
+    assert_eq!(cold.stats().disk_loaded, 0, "partial seed leaked in");
+    assert_eq!(eval_bits(&g, cold), reference, "rebuild after corruption");
+
+    // missing file: silent cold start
+    let missing = tmp("never_written.jsonl");
+    let fresh = Arc::new(SharedCache::new());
+    assert_eq!(disk::warm_start(&fresh, &missing), 0);
+
+    let _ = std::fs::remove_file(&snap);
+    let _ = std::fs::remove_file(&bad);
+}
+
+#[test]
+fn warm_cache_cli_flag_roundtrips_and_survives_corruption() {
+    let exe = env!("CARGO_BIN_EXE_commscale");
+    let snap = tmp("cli_snapshot.jsonl");
+    let run = |csv: &PathBuf| {
+        let out = std::process::Command::new(exe)
+            .args(["study", "fig10", "--warm-cache"])
+            .arg(&snap)
+            .arg("--csv")
+            .arg(csv)
+            .output()
+            .expect("spawn commscale");
+        assert!(
+            out.status.success(),
+            "warm-cache run failed: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        std::fs::read(csv).expect("csv output")
+    };
+
+    let a_path = tmp("a.csv");
+    let b_path = tmp("b.csv");
+    let c_path = tmp("c.csv");
+    let cold = run(&a_path); // cold start, writes the snapshot
+    assert!(snap.exists(), "--warm-cache must persist a snapshot");
+    let warm = run(&b_path); // warm start from the snapshot
+    assert_eq!(warm, cold, "warm-started rows drifted from cold rows");
+
+    // garbage snapshot: the CLI warns, rebuilds, and rewrites it valid
+    std::fs::write(&snap, "definitely not a snapshot\n").unwrap();
+    let rebuilt = run(&c_path);
+    assert_eq!(rebuilt, cold, "post-corruption rows drifted");
+    let check = Arc::new(SharedCache::new());
+    assert!(
+        disk::load(&check, &snap).expect("rewritten snapshot is valid") > 0,
+        "the run must rewrite a loadable snapshot"
+    );
+
+    for p in [&snap, &a_path, &b_path, &c_path] {
+        let _ = std::fs::remove_file(p);
+    }
+}

@@ -1,0 +1,199 @@
+//! `commscale serve` integration: served row streams must be
+//! byte-identical to the cold CLI run of the same spec — across two
+//! built-in paper-figure specs, both fidelities, and the search
+//! execution — plus protocol-level checks (healthz, studies, errors,
+//! shutdown).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+
+use commscale::hw::catalog;
+use commscale::optimizer::{optimize_study, OptimizeOptions};
+use commscale::serve::{self, ServeOptions};
+use commscale::study::{builtin, CsvSink, RowSink, StudySpec};
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir()
+        .join(format!("commscale_serve_api_{}_{name}", std::process::id()))
+}
+
+fn spawn_server() -> serve::ServerHandle {
+    serve::spawn(
+        &catalog::mi210(),
+        &ServeOptions { addr: "127.0.0.1:0".into(), ..Default::default() },
+    )
+    .expect("spawn serve on an ephemeral port")
+}
+
+/// Minimal close-delimited HTTP client: returns (status line, body).
+fn http(
+    addr: SocketAddr,
+    method: &str,
+    target: &str,
+    body: &str,
+) -> (String, Vec<u8>) {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    let req = format!(
+        "{method} {target} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(req.as_bytes()).unwrap();
+    let mut resp = Vec::new();
+    s.read_to_end(&mut resp).unwrap();
+    let split = resp
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .expect("header/body split");
+    let head = String::from_utf8_lossy(&resp[..split]).into_owned();
+    let status = head.lines().next().unwrap_or("").to_string();
+    (status, resp[split + 4..].to_vec())
+}
+
+fn cli_csv(args: &[&str], path: &std::path::Path) -> Vec<u8> {
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_commscale"))
+        .args(args)
+        .arg("--csv")
+        .arg(path)
+        .output()
+        .expect("spawn commscale");
+    assert!(
+        out.status.success(),
+        "CLI {args:?} failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    std::fs::read(path).expect("CLI csv output")
+}
+
+#[test]
+fn served_rows_equal_cold_cli_bytes_across_specs_and_fidelities() {
+    let server = spawn_server();
+    let addr = server.addr();
+
+    // two built-in paper figures × both fidelities
+    for spec in ["fig10", "fig11"] {
+        for fidelity in ["exact", "surrogate"] {
+            let path = tmp(&format!("{spec}_{fidelity}.csv"));
+            let want =
+                cli_csv(&["study", spec, "--fidelity", fidelity], &path);
+            let body = format!(
+                "{{\"name\": \"{spec}\", \"fidelity\": \"{fidelity}\"}}"
+            );
+            let (status, got) = http(addr, "POST", "/query?format=csv", &body);
+            assert!(status.contains("200"), "{spec}/{fidelity}: {status}");
+            assert_eq!(
+                got, want,
+                "served {spec} ({fidelity}) drifted from the cold CLI bytes"
+            );
+            // a repeat query answers from the warm cache — same bytes
+            let (_, hot) = http(addr, "POST", "/query?format=csv", &body);
+            assert_eq!(hot, want, "hot {spec} ({fidelity}) reply drifted");
+            let _ = std::fs::remove_file(&path);
+        }
+    }
+    server.shutdown();
+}
+
+#[test]
+fn served_search_execution_routes_through_the_optimizer() {
+    // an inline grouped-argmin spec with "execution": "search" must come
+    // back as exactly the optimizer's winner rows
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("../examples/studies/tp_pp_evolution_argmin.json");
+    let mut spec = StudySpec::parse_file(&path).expect("example spec");
+    spec.axes.hidden = vec![4096, 16384];
+    spec.axes.seq_len = vec![2048];
+    spec.axes.batch = vec![1];
+    spec.sinks.clear();
+    spec.execution = commscale::study::Execution::Search;
+
+    // expected: the optimizer report driven through a CsvSink (the same
+    // sink code the server streams through)
+    let resolved = spec.resolve(&catalog::mi210()).unwrap();
+    let report = optimize_study(
+        &resolved,
+        &OptimizeOptions { threads: 0, memory_cap: None },
+    )
+    .expect("search");
+    let want_path = tmp("search_want.csv");
+    {
+        let mut sink = CsvSink::new(want_path.to_str().unwrap());
+        sink.begin(&report.columns).unwrap();
+        for row in &report.rows {
+            sink.row(row).unwrap();
+        }
+        sink.finish().unwrap();
+    }
+    let want = std::fs::read(&want_path).unwrap();
+    let _ = std::fs::remove_file(&want_path);
+
+    let server = spawn_server();
+    let body = spec.to_json().to_string();
+    let (status, got) =
+        http(server.addr(), "POST", "/query?format=csv", &body);
+    assert!(status.contains("200"), "search query: {status}");
+    assert_eq!(got, want, "served search rows drifted from the optimizer");
+    server.shutdown();
+}
+
+#[test]
+fn healthz_studies_and_error_paths() {
+    let server = spawn_server();
+    let addr = server.addr();
+
+    let (status, body) = http(addr, "GET", "/healthz", "");
+    let text = String::from_utf8_lossy(&body).into_owned();
+    assert!(status.contains("200"), "healthz: {status}");
+    assert!(text.contains("\"status\""), "healthz body: {text}");
+    assert!(text.contains("point_hits"), "healthz lacks cache stats: {text}");
+
+    let (status, body) = http(addr, "GET", "/studies", "");
+    let text = String::from_utf8_lossy(&body).into_owned();
+    assert!(status.contains("200"));
+    for b in builtin::all() {
+        assert!(text.contains(b.name), "studies listing misses {}", b.name);
+    }
+
+    // error paths: bad JSON, unknown study, bad fidelity, bad format,
+    // unknown route — all refused before any row is streamed
+    let (status, _) = http(addr, "POST", "/query", "not json");
+    assert!(status.contains("400"), "bad JSON: {status}");
+    let (status, _) =
+        http(addr, "POST", "/query", "{\"name\": \"no_such_study\"}");
+    assert!(status.contains("400"), "unknown study: {status}");
+    let (status, _) = http(
+        addr,
+        "POST",
+        "/query",
+        "{\"name\": \"fig10\", \"fidelity\": \"psychic\"}",
+    );
+    assert!(status.contains("400"), "bad fidelity: {status}");
+    let (status, _) = http(
+        addr,
+        "POST",
+        "/query?format=parquet",
+        "{\"name\": \"fig10\"}",
+    );
+    assert!(status.contains("400"), "bad format: {status}");
+    let (status, _) = http(addr, "GET", "/nope", "");
+    assert!(status.contains("404"), "unknown route: {status}");
+
+    server.shutdown();
+}
+
+#[test]
+fn shutdown_route_stops_the_accept_loop() {
+    let server = spawn_server();
+    let addr = server.addr();
+    let (status, body) = http(addr, "POST", "/shutdown", "");
+    assert!(status.contains("200"), "shutdown: {status}");
+    assert!(String::from_utf8_lossy(&body).contains("shutting down"));
+    // the handle's own shutdown is now a no-op join; it must not hang
+    server.shutdown();
+    // and the port stops accepting (the listener is gone)
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    assert!(
+        TcpStream::connect(addr).is_err(),
+        "listener still accepting after shutdown"
+    );
+}
