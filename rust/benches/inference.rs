@@ -1,0 +1,152 @@
+//! Bench: inference-workload sweeps (prefill + decode) through the sweep
+//! engine — exact-fidelity throughput on a serving grid, the surrogate
+//! speedup on the same grid, and the structural gates that make the
+//! numbers trustworthy (engine bits == serial reference, decode rows
+//! carry no backward/optimizer time). Writes the machine-readable
+//! trajectory record `BENCH_inference.json`.
+//!
+//! Env knobs (used by CI): `COMMSCALE_BENCH_QUICK=1` / `--quick` shrinks
+//! the grid and measurement budget and drops the surrogate-speedup gate
+//! (the grid is too small to amortize digest building on CI runners).
+
+use std::path::Path;
+use std::time::Duration;
+
+use commscale::hw::{catalog, Evolution};
+use commscale::inference::WorkloadKind;
+use commscale::sweep::{
+    run_at, run_serial_reference, Fidelity, GridBuilder, PointMetrics,
+    ScenarioGrid,
+};
+use commscale::util::microbench::{bench_header, fmt_time, Bench};
+use commscale::util::Json;
+
+/// The serving grid: prefill + decode over TP × batch × gen_len ×
+/// hardware evolutions. Quick mode keeps the same shape, fewer cells.
+fn inference_grid(quick: bool) -> ScenarioGrid {
+    let d = catalog::mi210();
+    let mut b = GridBuilder::new(&d)
+        .seq_len(&[2048])
+        .layers(&[4])
+        .dp(&[1])
+        .workloads(&[WorkloadKind::Prefill, WorkloadKind::Decode]);
+    if quick {
+        b = b
+            .hidden(&[4096, 16384])
+            .batch(&[1, 8])
+            .tp(&[1, 8])
+            .gen_len(&[128])
+            .evolutions(&[Evolution::none()]);
+    } else {
+        b = b
+            .hidden(&[4096, 8192, 16384, 32768])
+            .batch(&[1, 4, 16])
+            .tp(&[1, 4, 8, 16])
+            .gen_len(&[64, 512])
+            .evolutions(&[Evolution::none(), Evolution::flop_vs_bw_4x()]);
+    }
+    b.build()
+}
+
+fn bits(rows: &[PointMetrics]) -> Vec<u64> {
+    rows.iter().map(|m| m.makespan.to_bits()).collect()
+}
+
+fn main() {
+    bench_header("commscale inference (prefill/decode workloads)");
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("COMMSCALE_BENCH_QUICK").is_ok();
+
+    let grid = inference_grid(quick);
+    let n = grid.len();
+    println!("serving grid: {n} points (prefill + decode)");
+
+    // -- correctness gates before timing anything --------------------------
+    let reference = run_serial_reference(&grid);
+    let engine = run_at(&grid, 4, Fidelity::Exact);
+    assert_eq!(
+        bits(&engine),
+        bits(&reference),
+        "engine diverged from the serial reference on the inference grid"
+    );
+    for (sc, m) in grid.points.iter().zip(&reference) {
+        assert_eq!(
+            m.bwd_compute.to_bits(),
+            0f64.to_bits(),
+            "{:?}: inference row has backward time",
+            sc.cfg.workload
+        );
+        assert_eq!(
+            m.opt_compute.to_bits(),
+            0f64.to_bits(),
+            "{:?}: inference row has optimizer time",
+            sc.cfg.workload
+        );
+    }
+    println!("gates: engine == serial reference, no bwd/opt work in rows");
+
+    // -- exact-fidelity sweep throughput (fresh contexts per iteration) ----
+    let budget = Duration::from_millis(if quick { 300 } else { 2000 });
+    let res = Bench::new("inference_exact_sweep")
+        .measure(budget)
+        .max_iters(if quick { 10 } else { 50 })
+        .run(|| run_at(&grid, 0, Fidelity::Exact).len());
+    let exact_secs = res.summary.median;
+    let pts_per_sec = n as f64 / exact_secs;
+    println!(
+        "exact sweep: {} median — {pts_per_sec:.0} points/s",
+        fmt_time(exact_secs)
+    );
+
+    // -- surrogate sweep on the same grid ----------------------------------
+    let sur_res = Bench::new("inference_surrogate_sweep")
+        .measure(budget)
+        .max_iters(if quick { 10 } else { 50 })
+        .run(|| run_at(&grid, 0, Fidelity::Surrogate).len());
+    let sur_secs = sur_res.summary.median;
+    let sur_speedup = exact_secs / sur_secs;
+
+    // surrogate fidelity: max relative makespan error across the grid
+    let surrogate = run_at(&grid, 0, Fidelity::Surrogate);
+    let max_rel_err = reference
+        .iter()
+        .zip(&surrogate)
+        .map(|(e, s)| ((s.makespan - e.makespan) / e.makespan).abs())
+        .fold(0.0f64, f64::max);
+    println!(
+        "surrogate sweep: {} median — {sur_speedup:.1}x vs exact, max rel \
+         makespan err {:.2}%",
+        fmt_time(sur_secs),
+        max_rel_err * 100.0
+    );
+
+    res.write_json_with(
+        Path::new("BENCH_inference.json"),
+        vec![
+            ("grid_points", Json::num(n as f64)),
+            ("exact_sweep_s", Json::num(exact_secs)),
+            ("points_per_sec", Json::num(pts_per_sec)),
+            ("surrogate_sweep_s", Json::num(sur_secs)),
+            ("surrogate_speedup", Json::num(sur_speedup)),
+            ("surrogate_max_rel_err", Json::num(max_rel_err)),
+            ("quick", Json::Bool(quick)),
+        ],
+    )
+    .expect("write BENCH_inference.json");
+    println!("wrote BENCH_inference.json");
+
+    // -- acceptance ---------------------------------------------------------
+    assert!(
+        max_rel_err <= 0.15,
+        "acceptance: surrogate max relative makespan error on the serving \
+         grid must stay within the 15% budget, got {:.2}%",
+        max_rel_err * 100.0
+    );
+    if !quick {
+        assert!(
+            sur_speedup >= 2.0,
+            "acceptance: surrogate must be >= 2x the exact sweep on the \
+             full serving grid, got {sur_speedup:.1}x"
+        );
+    }
+}

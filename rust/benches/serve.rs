@@ -23,11 +23,13 @@ use commscale::util::Json;
 
 const SPEC: &str = "fig10";
 
-/// Minimal close-delimited HTTP client: returns the response body.
+/// One-shot HTTP client (`Connection: close`, body delimited by EOF):
+/// returns the response body.
 fn http_query(addr: std::net::SocketAddr, target: &str, body: &str) -> Vec<u8> {
     let mut s = TcpStream::connect(addr).expect("connect to serve");
     let req = format!(
-        "POST {target} HTTP/1.1\r\nHost: bench\r\nContent-Length: {}\r\n\r\n{body}",
+        "POST {target} HTTP/1.1\r\nHost: bench\r\nConnection: close\r\n\
+         Content-Length: {}\r\n\r\n{body}",
         body.len()
     );
     s.write_all(req.as_bytes()).unwrap();

@@ -22,6 +22,7 @@ fn main() {
         ffn_mult: 4,
         par: commscale::parallelism::ParallelismSpec::tp_dp(64, 16),
         precision: Precision::F16,
+        workload: commscale::inference::Workload::Training,
     };
     let g = build_layer_graph(&cfg, GraphOptions::default());
     let cost = AnalyticCost::new(catalog::mi210(), cfg.precision, cfg.tp(), cfg.dp());

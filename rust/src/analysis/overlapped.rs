@@ -35,6 +35,7 @@ pub fn point_config(hidden: u64, slb: u64) -> ModelConfig {
         ffn_mult: 4,
         par: crate::parallelism::ParallelismSpec::tp_dp(16, 4),
         precision: Precision::F16,
+        workload: crate::inference::Workload::Training,
     }
 }
 

@@ -34,6 +34,7 @@ pub fn point_config(hidden: u64, seq_len: u64, tp: u64) -> ModelConfig {
         ffn_mult: 4,
         par: crate::parallelism::ParallelismSpec::tp_dp(tp, 1),
         precision: Precision::F16,
+        workload: crate::inference::Workload::Training,
     }
 }
 

@@ -1,24 +1,30 @@
-//! Persistent warm-start snapshots of the operator-cost cache.
+//! Persistent warm-start snapshots of the evaluation cache.
 //!
 //! Format: JSON-lines, reusing the shard wire-format conventions
 //! (`shard/payload.rs`) — exact-bits `f64` encoding via
 //! `enc_f64`/`dec_f64`, a leading identity line, and a trailing footer
-//! that doubles as a truncation check:
+//! that doubles as a truncation check. Two body-line kinds: operator
+//! costs (format 1) and, since format 2, fully evaluated point metrics
+//! — so a warm-started server answers repeated queries without
+//! re-simulating even the first time:
 //!
 //! ```text
-//! {"opcache":{"crate":"<CARGO_PKG_VERSION>","format":1}}
+//! {"opcache":{"crate":"<CARGO_PKG_VERSION>","format":2}}
 //! {"fp":"<16 hex>","op":{"kind":"gemm","m":"…","n":"…","k":"…","count":"…"},"t":<enc_f64>}
+//! …
+//! {"pt":{"fp":"<16 hex>","cfg":{…},"opts":{…},"fid":"exact","m":{"makespan":<enc_f64>,…}}}
 //! …
 //! {"end":{"checksum":"<16 hex>","entries":N}}
 //! ```
 //!
-//! `OpKind` byte/shape fields are `u64` and may exceed 2^53, so they ride
-//! as decimal *strings*, not JSON numbers (the hand-rolled JSON layer
-//! stores numbers as `f64`).
+//! `OpKind`/`ModelConfig` shape fields are `u64` and may exceed 2^53, so
+//! they ride as decimal *strings*, not JSON numbers (the hand-rolled
+//! JSON layer stores numbers as `f64`).
 //!
 //! Staleness and corruption are rejected, never repaired: the header
 //! must carry the current format version *and* crate version (cost-model
-//! changes between releases would otherwise replay stale bits), the
+//! changes between releases would otherwise replay stale bits — a
+//! format-1 snapshot is refused wholesale, not partially read), the
 //! footer's entry count and FNV-1a checksum over the body lines must
 //! match, and any malformed line fails the whole load. A failed load
 //! leaves the in-memory cache exactly as it was — the caller falls back
@@ -27,15 +33,20 @@
 
 use std::path::Path;
 
-use crate::graph::{CommClass, OpKind};
+use crate::graph::{CommClass, GraphOptions, OpKind};
+use crate::inference::Workload;
+use crate::model::{ModelConfig, Precision};
+use crate::parallelism::ParallelismSpec;
 use crate::shard::payload::{dec_f64, enc_f64};
+use crate::sweep::{Fidelity, PointMetrics};
 use crate::util::Json;
 use crate::{Error, Result};
 
-use super::{fnv1a_update, SharedCache, FNV_OFFSET};
+use super::{fnv1a_update, PointKey, SharedCache, FNV_OFFSET};
 
-/// Bump when the line format changes shape.
-pub const FORMAT_VERSION: u64 = 1;
+/// Bump when the line format changes shape. Version 2 added the
+/// point-metrics section; format-1 snapshots are rejected (cold start).
+pub const FORMAT_VERSION: u64 = 2;
 
 fn crate_version() -> &'static str {
     env!("CARGO_PKG_VERSION")
@@ -97,6 +108,10 @@ pub(crate) fn op_to_json(k: &OpKind) -> Json {
             ("kind", Json::str("elementwise")),
             ("bytes", u64_str(bytes)),
         ]),
+        OpKind::KvRead { bytes } => Json::obj(vec![
+            ("kind", Json::str("kvread")),
+            ("bytes", u64_str(bytes)),
+        ]),
         OpKind::AllReduce { bytes, class } => Json::obj(vec![
             ("kind", Json::str("allreduce")),
             ("bytes", u64_str(bytes)),
@@ -132,6 +147,7 @@ pub(crate) fn op_from_json(v: &Json) -> Result<OpKind> {
             Ok(OpKind::LayerNorm { rows: field("rows")?, h: field("h")? })
         }
         "elementwise" => Ok(OpKind::Elementwise { bytes: field("bytes")? }),
+        "kvread" => Ok(OpKind::KvRead { bytes: field("bytes")? }),
         "allreduce" => Ok(OpKind::AllReduce {
             bytes: field("bytes")?,
             class: parse_class(v.str_field("class")?)?,
@@ -150,15 +166,200 @@ pub(crate) fn op_from_json(v: &Json) -> Result<OpKind> {
 }
 
 // ---------------------------------------------------------------------------
+// point-metrics entries <-> JSON (format 2)
+// ---------------------------------------------------------------------------
+
+fn precision_from_str(s: &str) -> Result<Precision> {
+    match s {
+        "fp32" => Ok(Precision::F32),
+        "fp16" => Ok(Precision::F16),
+        "bf16" => Ok(Precision::BF16),
+        "fp8" => Ok(Precision::F8),
+        other => Err(Error::Study(format!("unknown precision {other:?}"))),
+    }
+}
+
+fn cfg_to_json(cfg: &ModelConfig) -> Json {
+    let mut fields = vec![
+        ("hidden", u64_str(cfg.hidden)),
+        ("seq_len", u64_str(cfg.seq_len)),
+        ("batch", u64_str(cfg.batch)),
+        ("layers", u64_str(cfg.layers)),
+        ("heads", u64_str(cfg.heads)),
+        ("ffn_mult", u64_str(cfg.ffn_mult)),
+        ("tp", u64_str(cfg.par.tp)),
+        ("pp", u64_str(cfg.par.pp)),
+        ("microbatches", u64_str(cfg.par.microbatches)),
+        ("dp", u64_str(cfg.par.dp)),
+        ("seq_par", Json::Bool(cfg.par.seq_par)),
+        ("precision", Json::str(cfg.precision.name())),
+        ("workload", Json::str(cfg.workload.as_str())),
+    ];
+    if let Workload::Decode { gen_len } = cfg.workload {
+        fields.push(("gen_len", u64_str(gen_len)));
+    }
+    Json::obj(fields)
+}
+
+fn cfg_from_json(v: &Json) -> Result<ModelConfig> {
+    let field = |name: &str| -> Result<u64> { parse_u64(v.req(name)?, name) };
+    let workload = match v.str_field("workload")? {
+        "training" => Workload::Training,
+        "prefill" => Workload::Prefill,
+        "decode" => Workload::Decode { gen_len: field("gen_len")? },
+        other => {
+            return Err(Error::Study(format!("unknown workload {other:?}")))
+        }
+    };
+    Ok(ModelConfig {
+        hidden: field("hidden")?,
+        seq_len: field("seq_len")?,
+        batch: field("batch")?,
+        layers: field("layers")?,
+        heads: field("heads")?,
+        ffn_mult: field("ffn_mult")?,
+        par: ParallelismSpec {
+            tp: field("tp")?,
+            pp: field("pp")?,
+            microbatches: field("microbatches")?,
+            dp: field("dp")?,
+            seq_par: v.req("seq_par")?.as_bool().ok_or_else(|| {
+                Error::Study("seq_par is not a bool".into())
+            })?,
+        },
+        precision: precision_from_str(v.str_field("precision")?)?,
+        workload,
+    })
+}
+
+fn opts_to_json(o: GraphOptions) -> Json {
+    Json::obj(vec![
+        ("tp_allreduce", Json::Bool(o.tp_allreduce)),
+        ("dp_allreduce", Json::Bool(o.dp_allreduce)),
+        ("pp_comm", Json::Bool(o.pp_comm)),
+        ("non_gemm", Json::Bool(o.non_gemm)),
+    ])
+}
+
+fn opts_from_json(v: &Json) -> Result<GraphOptions> {
+    let flag = |name: &str| -> Result<bool> {
+        v.req(name)?.as_bool().ok_or_else(|| {
+            Error::Study(format!("{name} is not a bool"))
+        })
+    };
+    Ok(GraphOptions {
+        tp_allreduce: flag("tp_allreduce")?,
+        dp_allreduce: flag("dp_allreduce")?,
+        pp_comm: flag("pp_comm")?,
+        non_gemm: flag("non_gemm")?,
+    })
+}
+
+const METRIC_FIELDS: [&str; 11] = [
+    "makespan",
+    "compute_time",
+    "serialized_comm",
+    "overlapped_comm",
+    "p2p_comm",
+    "exposed_comm",
+    "hidden_comm",
+    "bubble_time",
+    "fwd_compute",
+    "bwd_compute",
+    "opt_compute",
+];
+
+fn metrics_fields(m: &PointMetrics) -> [f64; 11] {
+    [
+        m.makespan,
+        m.compute_time,
+        m.serialized_comm,
+        m.overlapped_comm,
+        m.p2p_comm,
+        m.exposed_comm,
+        m.hidden_comm,
+        m.bubble_time,
+        m.fwd_compute,
+        m.bwd_compute,
+        m.opt_compute,
+    ]
+}
+
+fn metrics_to_json(m: &PointMetrics) -> Json {
+    Json::obj(
+        METRIC_FIELDS
+            .iter()
+            .zip(metrics_fields(m))
+            .map(|(name, v)| (*name, enc_f64(v)))
+            .collect(),
+    )
+}
+
+fn metrics_from_json(v: &Json) -> Result<PointMetrics> {
+    let field =
+        |name: &str| -> Result<f64> { dec_f64(v.req(name)?, name) };
+    Ok(PointMetrics {
+        makespan: field("makespan")?,
+        compute_time: field("compute_time")?,
+        serialized_comm: field("serialized_comm")?,
+        overlapped_comm: field("overlapped_comm")?,
+        p2p_comm: field("p2p_comm")?,
+        exposed_comm: field("exposed_comm")?,
+        hidden_comm: field("hidden_comm")?,
+        bubble_time: field("bubble_time")?,
+        fwd_compute: field("fwd_compute")?,
+        bwd_compute: field("bwd_compute")?,
+        opt_compute: field("opt_compute")?,
+    })
+}
+
+fn point_to_json(key: &PointKey, m: &PointMetrics) -> Json {
+    let (fp, cfg, opts, fid) = key;
+    Json::obj(vec![(
+        "pt",
+        Json::obj(vec![
+            ("fp", Json::str(&format!("{fp:016x}"))),
+            ("cfg", cfg_to_json(cfg)),
+            ("opts", opts_to_json(*opts)),
+            ("fid", Json::str(fid.as_str())),
+            ("m", metrics_to_json(m)),
+        ]),
+    )])
+}
+
+fn point_from_json(v: &Json) -> Result<(PointKey, PointMetrics)> {
+    let fp = v
+        .str_field("fp")
+        .ok()
+        .and_then(|s| u64::from_str_radix(s, 16).ok())
+        .ok_or_else(|| Error::Study("point line lacks fp".into()))?;
+    let cfg = cfg_from_json(v.req("cfg")?)?;
+    let opts = opts_from_json(v.req("opts")?)?;
+    let fid = Fidelity::parse(v.str_field("fid")?).ok_or_else(|| {
+        Error::Study("unknown point fidelity".into())
+    })?;
+    let m = metrics_from_json(v.req("m")?)?;
+    Ok(((fp, cfg, opts, fid), m))
+}
+
+// ---------------------------------------------------------------------------
 // save / load
 // ---------------------------------------------------------------------------
 
-/// Snapshot the cache's operator-cost table to `path` (atomically: write
-/// a sibling temp file, then rename). Returns the entry count written.
+/// Snapshot the cache's operator-cost and point-metrics tables to `path`
+/// (atomically: write a sibling temp file, then rename). Returns the
+/// total entry count written.
 pub fn save(cache: &SharedCache, path: &Path) -> Result<usize> {
     let entries = cache.op_dump();
+    let points = cache.point_dump();
     let mut body = String::new();
     let mut checksum = FNV_OFFSET;
+    let mut push_line = |body: &mut String, line: &str| {
+        checksum = fnv1a_update(checksum, line.as_bytes());
+        checksum = fnv1a_update(checksum, b"\n");
+        body.push_str(line);
+        body.push('\n');
+    };
     for (fp, op, t) in &entries {
         let line = Json::obj(vec![
             ("fp", Json::str(&format!("{fp:016x}"))),
@@ -166,11 +367,13 @@ pub fn save(cache: &SharedCache, path: &Path) -> Result<usize> {
             ("t", enc_f64(*t)),
         ])
         .to_string();
-        checksum = fnv1a_update(checksum, line.as_bytes());
-        checksum = fnv1a_update(checksum, b"\n");
-        body.push_str(&line);
-        body.push('\n');
+        push_line(&mut body, &line);
     }
+    for (key, m) in &points {
+        push_line(&mut body, &point_to_json(key, m).to_string());
+    }
+    drop(push_line); // release the borrow on `checksum`
+    let total = entries.len() + points.len();
     let header = Json::obj(vec![(
         "opcache",
         Json::obj(vec![
@@ -182,7 +385,7 @@ pub fn save(cache: &SharedCache, path: &Path) -> Result<usize> {
     let footer = Json::obj(vec![(
         "end",
         Json::obj(vec![
-            ("entries", Json::num(entries.len() as f64)),
+            ("entries", Json::num(total as f64)),
             ("checksum", Json::str(&format!("{checksum:016x}"))),
         ]),
     )])
@@ -191,7 +394,7 @@ pub fn save(cache: &SharedCache, path: &Path) -> Result<usize> {
     let tmp = path.with_extension("tmp");
     std::fs::write(&tmp, text)?;
     std::fs::rename(&tmp, path)?;
-    Ok(entries.len())
+    Ok(total)
 }
 
 /// Load a snapshot into `cache`. Strict: any header/version mismatch,
@@ -231,6 +434,7 @@ pub fn load(cache: &SharedCache, path: &Path) -> Result<usize> {
     }
 
     let mut entries: Vec<(u64, OpKind, f64)> = Vec::new();
+    let mut points: Vec<(PointKey, PointMetrics)> = Vec::new();
     let mut checksum = FNV_OFFSET;
     let mut footer: Option<(usize, u64)> = None;
     for line in lines {
@@ -253,6 +457,12 @@ pub fn load(cache: &SharedCache, path: &Path) -> Result<usize> {
         }
         checksum = fnv1a_update(checksum, line.as_bytes());
         checksum = fnv1a_update(checksum, b"\n");
+        if let Some(p) = v.get("pt") {
+            points.push(point_from_json(p).map_err(|e| {
+                bad(path, &format!("bad point line: {e}"))
+            })?);
+            continue;
+        }
         let fp = v
             .str_field("fp")
             .ok()
@@ -267,12 +477,13 @@ pub fn load(cache: &SharedCache, path: &Path) -> Result<usize> {
         entries.push((fp, op, t));
     }
 
+    let total = entries.len() + points.len();
     let (n, sum) =
         footer.ok_or_else(|| bad(path, "missing footer (truncated?)"))?;
-    if n != entries.len() {
+    if n != total {
         return Err(bad(
             path,
-            &format!("footer claims {n} entries, body has {}", entries.len()),
+            &format!("footer claims {n} entries, body has {total}"),
         ));
     }
     if sum != checksum {
@@ -282,7 +493,8 @@ pub fn load(cache: &SharedCache, path: &Path) -> Result<usize> {
         ));
     }
     cache.op_seed(&entries);
-    Ok(entries.len())
+    cache.point_seed(&points);
+    Ok(total)
 }
 
 /// [`load`], but a missing or rejected snapshot is not an error — it just
@@ -324,6 +536,48 @@ mod tests {
             ),
             (7, OpKind::LayerNorm { rows: 2048, h: 4096 }, 3.5e-6),
             (7, OpKind::SendRecv { bytes: 12345 }, 9.0e-5),
+            (7, OpKind::KvRead { bytes: 1 << 55 }, 2.0e-4),
+        ]
+    }
+
+    fn sample_points() -> Vec<(PointKey, PointMetrics)> {
+        let decode_cfg = ModelConfig {
+            hidden: 16384,
+            seq_len: 2048,
+            batch: 8,
+            layers: 32,
+            heads: 128,
+            ffn_mult: 4,
+            par: ParallelismSpec {
+                tp: 8,
+                pp: 2,
+                microbatches: 4,
+                dp: 2,
+                seq_par: false,
+            },
+            precision: Precision::F16,
+            workload: Workload::Decode { gen_len: 128 },
+        };
+        let training_cfg = ModelConfig::default();
+        vec![
+            (
+                (0xabc, training_cfg, GraphOptions::default(), Fidelity::Exact),
+                PointMetrics { makespan: 1.25e-3, ..PointMetrics::default() },
+            ),
+            (
+                (
+                    0xdef,
+                    decode_cfg,
+                    GraphOptions { non_gemm: false, ..Default::default() },
+                    Fidelity::Surrogate,
+                ),
+                PointMetrics {
+                    makespan: 7.5e-2,
+                    exposed_comm: -0.0, // exercises the bits escape
+                    bwd_compute: 0.0,
+                    ..PointMetrics::default()
+                },
+            ),
         ]
     }
 
@@ -357,6 +611,60 @@ mod tests {
             assert_eq!((fa, oa), (fb, ob));
             assert_eq!(ta.to_bits(), tb.to_bits());
         }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn point_entries_roundtrip_bit_exactly() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("commscale_opcache_points.jsonl");
+        let a = SharedCache::new();
+        a.op_seed(&sample_entries());
+        a.point_seed(&sample_points());
+        let wrote = save(&a, &path).unwrap();
+        assert_eq!(wrote, sample_entries().len() + sample_points().len());
+
+        let b = SharedCache::new();
+        let read = load(&b, &path).unwrap();
+        assert_eq!(read, wrote);
+        for ((fp, cfg, opts, fid), want) in sample_points() {
+            let got = b
+                .get_point(fp, &cfg, opts, fid)
+                .unwrap_or_else(|| panic!("point {fp:x} missing after load"));
+            for (g, w) in
+                metrics_fields(&got).iter().zip(metrics_fields(&want))
+            {
+                assert_eq!(g.to_bits(), w.to_bits());
+            }
+        }
+        // the decode surrogate entry must not answer exact queries
+        let (fp, cfg, opts, _) = sample_points()[1].0;
+        assert!(b.get_point(fp, &cfg, opts, Fidelity::Exact).is_none());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn format_1_snapshots_are_rejected_wholesale() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("commscale_opcache_v1.jsonl");
+        let a = SharedCache::new();
+        a.op_seed(&sample_entries());
+        a.point_seed(&sample_points());
+        save(&a, &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let old = text.replacen(
+            &format!("\"format\":{FORMAT_VERSION}"),
+            "\"format\":1",
+            1,
+        );
+        assert_ne!(text, old, "header rewrite did not apply");
+        std::fs::write(&path, old).unwrap();
+        let b = SharedCache::new();
+        let err = load(&b, &path).unwrap_err().to_string();
+        assert!(err.contains("format version 1"), "{err}");
+        assert_eq!(b.op_dump().len(), 0, "strict load must not seed ops");
+        assert_eq!(b.point_dump().len(), 0, "strict load must not seed points");
+        assert_eq!(warm_start(&b, &path), 0, "warm_start must cold-start");
         let _ = std::fs::remove_file(&path);
     }
 

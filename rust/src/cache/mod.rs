@@ -16,7 +16,9 @@
 //! * **surrogate digests** — `(cost fingerprint, surrogate config, graph
 //!   options) → SurrogateDigest`;
 //! * **point metrics** — `(cost fingerprint, config, options, fidelity) →
-//!   PointMetrics`, so a repeated query skips evaluation entirely.
+//!   PointMetrics`, so a repeated query skips evaluation entirely; also
+//!   persisted to disk (snapshot format 2), so a warm-started server
+//!   answers previously seen points without simulating even once.
 //!
 //! Keys are *content* fingerprints (FNV-1a, the PR 5 hash — see
 //! [`cost_fingerprint`]), not per-context ids, so entries are valid
@@ -208,7 +210,7 @@ impl Default for CacheCaps {
 }
 
 type DigestKey = (u64, ModelConfig, GraphOptions);
-type PointKey = (u64, ModelConfig, GraphOptions, Fidelity);
+pub(crate) type PointKey = (u64, ModelConfig, GraphOptions, Fidelity);
 
 struct CacheInner {
     ops: Lru<u64, HashMap<OpKind, f64>>,
@@ -425,6 +427,29 @@ impl SharedCache {
         }
         g.stats.disk_loaded += loaded;
     }
+
+    /// All point-metrics entries, sorted deterministically — the second
+    /// body section of the disk snapshot (`disk::save`).
+    pub(crate) fn point_dump(&self) -> Vec<(PointKey, PointMetrics)> {
+        let g = self.lock();
+        let mut out: Vec<(PointKey, PointMetrics)> = g
+            .points
+            .map
+            .iter()
+            .map(|(k, (_, m))| (*k, *m))
+            .collect();
+        out.sort_by_key(|(k, _)| format!("{k:?}"));
+        out
+    }
+
+    /// Seed the point table from a disk snapshot (insert-if-absent).
+    pub(crate) fn point_seed(&self, entries: &[(PointKey, PointMetrics)]) {
+        let mut g = self.lock();
+        for (k, m) in entries {
+            g.points.insert(*k, *m);
+        }
+        g.stats.disk_loaded += entries.len() as u64;
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -508,6 +533,7 @@ mod tests {
             ffn_mult: 4,
             par: ParallelismSpec::tp_dp(8, 1),
             precision: Precision::F16,
+            workload: crate::inference::Workload::Training,
         };
         let m = PointMetrics { makespan: 1.5, ..PointMetrics::default() };
         cache.put_point(7, &cfg, GraphOptions::default(), Fidelity::Exact, m);

@@ -44,6 +44,7 @@ impl SweepGrid {
                             ffn_mult: 4,
                             par: ParallelismSpec::tp_dp(tp, 1),
                             precision: Precision::F16,
+                            workload: crate::inference::Workload::Training,
                         });
                     }
                 }
@@ -103,6 +104,7 @@ pub fn fig14_config() -> ModelConfig {
         ffn_mult: 4,
         par: ParallelismSpec::tp_dp(128, 4),
         precision: Precision::F16,
+        workload: crate::inference::Workload::Training,
     }
 }
 

@@ -1,7 +1,21 @@
 //! Builds the per-device operator graph of a distributed Transformer
-//! training iteration (forward + backward + optimizer), following the
-//! paper's Fig 4/5 decomposition and Megatron-style TP slicing, extended
-//! with 3D parallelism:
+//! iteration, following the paper's Fig 4/5 decomposition and
+//! Megatron-style TP slicing, extended with 3D parallelism. The workload
+//! family on the config selects what an "iteration" is:
+//!
+//! * **training** — forward + backward + optimizer (the paper's setting);
+//! * **prefill** — the forward pass only: same op shapes as training's
+//!   forward, no gradients, no optimizer, no DP all-reduce;
+//! * **decode** — one token-generation step: sequence-length-1 GEMMs, a
+//!   per-layer [`OpKind::KvRead`] streaming the cached keys/values at the
+//!   full context length, attention GEMMs against `kv_len` columns, and
+//!   TP all-reduces at decode activation sizes. The step is priced at the
+//!   final context length (`seq_len + gen_len`) — a deterministic,
+//!   conservative stand-in for the growing cache — and the full
+//!   `gen_len`-step generation is recovered by scaling
+//!   ([`crate::inference::apply_workload`]).
+//!
+//! 3D parallelism:
 //!
 //! * **PP** — the device holds one pipeline stage (`layers / pp` layers)
 //!   and runs `microbatches` passes per iteration, emitting a
@@ -26,6 +40,7 @@
 //! template graph per shape, rewritten per scenario point with no
 //! per-point dependency-vector allocations.
 
+use crate::inference::WorkloadKind;
 use crate::model::ModelConfig;
 #[cfg(test)]
 use crate::model::LayerCounts;
@@ -76,10 +91,16 @@ pub struct GraphShapeKey {
     pub seq_par: bool,
     /// Pipeline stage-boundary sends are emitted (`opts.pp_comm && pp > 1`).
     pub pp_comm: bool,
-    /// Overlappable DP all-reduces are emitted (`opts.dp_allreduce && dp > 1`).
+    /// Overlappable DP all-reduces are emitted (`opts.dp_allreduce && dp > 1`
+    /// and the workload is training — inference replicas hold no gradients).
     pub dp_ars: bool,
     /// LayerNorm / element-wise / optimizer ops are emitted.
     pub non_gemm: bool,
+    /// Workload family: decode inserts KV-cache reads and drops the
+    /// backward/optimizer sections; prefill drops them but keeps training's
+    /// forward shapes. `gen_len` is payload-only (KV-read bytes, attention
+    /// GEMM dims) and deliberately absent here.
+    pub workload: WorkloadKind,
 }
 
 impl GraphShapeKey {
@@ -91,8 +112,11 @@ impl GraphShapeKey {
             tp_ars,
             seq_par: tp_ars && cfg.seq_par(),
             pp_comm: opts.pp_comm && cfg.pp() > 1,
-            dp_ars: opts.dp_allreduce && cfg.dp() > 1,
+            dp_ars: opts.dp_allreduce
+                && cfg.dp() > 1
+                && cfg.workload.is_training(),
             non_gemm: opts.non_gemm,
+            workload: cfg.workload.kind(),
         }
     }
 }
@@ -190,14 +214,20 @@ fn emit_layer_graph(cfg: &ModelConfig, opts: GraphOptions, em: &mut Emitter<'_>)
     let (h, sl, b) = (cfg.hidden, cfg.seq_len, cfg.batch);
     let tp = cfg.tp();
     let f = cfg.ffn();
-    let bs = b * sl;
+    let wl = cfg.workload.kind();
+    let decode = wl == WorkloadKind::Decode;
+    let training = wl == WorkloadKind::Training;
+    // Token rows flowing through one pass: the whole sequence for
+    // training/prefill, one token per batched sequence for a decode step.
+    let bs = if decode { b } else { b * sl };
+    let kv_len = cfg.kv_len();
     let hd = h / cfg.heads;
     let heads_dev = cfg.heads / tp;
     let p = cfg.precision.bytes();
-    let act_bytes = p * bs * h; // Eq. 5: the full activation
+    let act_bytes = p * bs * h; // Eq. 5 at this workload's token rows
     let tp_on = opts.tp_allreduce && tp > 1;
     let sp_on = tp_on && cfg.seq_par();
-    let dp_on = opts.dp_allreduce && cfg.dp() > 1;
+    let dp_on = opts.dp_allreduce && cfg.dp() > 1 && training;
     let pp_on = opts.pp_comm && cfg.pp() > 1;
     let stage_layers = cfg.stage_layers();
     let microbatches = cfg.microbatches();
@@ -243,13 +273,28 @@ fn emit_layer_graph(cfg: &ModelConfig, opts: GraphOptions, em: &mut Emitter<'_>)
                 Phase::Forward,
                 dep(&attn_in),
             );
+            // A decode step streams this device's K/V shard for the whole
+            // context before attention can run (2 tensors × kv_len × h/tp
+            // per sequence) — the decode phase's bandwidth wall.
+            let attn_src = if decode {
+                em.add(
+                    OpKind::KvRead { bytes: 2 * p * b * kv_len * (h / tp) },
+                    Phase::Forward,
+                    &[qkv],
+                )
+            } else {
+                qkv
+            };
+            // Attention GEMMs: the new tokens attend to kv_len cached
+            // columns under decode, to the sequence itself otherwise.
+            let (q_rows, att_cols) = if decode { (1, kv_len) } else { (sl, sl) };
             let scores = em.add(
-                OpKind::Gemm { m: sl, n: sl, k: hd, count: b * heads_dev },
+                OpKind::Gemm { m: q_rows, n: att_cols, k: hd, count: b * heads_dev },
                 Phase::Forward,
-                &[qkv],
+                &[attn_src],
             );
             let ctx = em.add(
-                OpKind::Gemm { m: sl, n: hd, k: sl, count: b * heads_dev },
+                OpKind::Gemm { m: q_rows, n: hd, k: att_cols, count: b * heads_dev },
                 Phase::Forward,
                 &[scores],
             );
@@ -328,6 +373,13 @@ fn emit_layer_graph(cfg: &ModelConfig, opts: GraphOptions, em: &mut Emitter<'_>)
                 p2p_ids.push(send);
             }
         }
+    }
+
+    // Inference stops here: no gradients, no weight-grad all-reduce, no
+    // optimizer step — the graph is the forward (prefill) or single-step
+    // (decode) pass alone.
+    if !training {
+        return;
     }
 
     // ---- backward (reverse layer order, per microbatch) -------------------
@@ -506,6 +558,7 @@ mod tests {
             ffn_mult: 4,
             par: ParallelismSpec::tp_dp(tp, dp),
             precision: Precision::F16,
+            workload: crate::inference::Workload::Training,
         }
     }
 
@@ -854,5 +907,132 @@ mod tests {
         // different layer count -> different op count -> must panic
         let other = ModelConfig { layers: 2, ..cfg(4, 4) };
         rewrite_layer_graph(&other, opts, &mut g);
+    }
+
+    use crate::inference::Workload;
+
+    #[test]
+    fn inference_graphs_are_forward_only() {
+        for wl in [Workload::Prefill, Workload::Decode { gen_len: 64 }] {
+            let c = cfg(4, 4).with_workload(wl);
+            c.validate().unwrap();
+            let g = build_layer_graph(&c, GraphOptions::default());
+            g.validate().unwrap();
+            assert!(!g.is_empty());
+            assert!(
+                g.ops.iter().all(|o| matches!(o.phase, Phase::Forward)),
+                "{wl:?} emitted non-forward ops"
+            );
+            // no gradient all-reduce even though dp > 1
+            assert_eq!(g.total_comm_bytes(CommClass::Overlappable), 0);
+        }
+    }
+
+    #[test]
+    fn decode_graph_reads_kv_cache_per_layer() {
+        let c = cfg(4, 1).with_workload(Workload::Decode { gen_len: 64 });
+        let g = build_layer_graph(&c, GraphOptions::default());
+        let reads: Vec<u64> = g
+            .ops
+            .iter()
+            .filter_map(|o| match o.kind {
+                OpKind::KvRead { bytes } => Some(bytes),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(reads.len() as u64, c.stage_layers());
+        let p = c.precision.bytes();
+        let expect = 2 * p * c.batch * (c.seq_len + 64) * (c.hidden / c.tp());
+        assert!(reads.iter().all(|&b| b == expect));
+        // ...and prefill/training graphs never touch the cache
+        let t = build_layer_graph(&cfg(4, 1), GraphOptions::default());
+        assert!(!t.ops.iter().any(|o| matches!(o.kind, OpKind::KvRead { .. })));
+    }
+
+    #[test]
+    fn decode_gemms_are_single_token() {
+        let c = cfg(4, 1).with_workload(Workload::Decode { gen_len: 32 });
+        let g = build_layer_graph(&c, GraphOptions::default());
+        for op in &g.ops {
+            if let OpKind::Gemm { m, n, k, .. } = op.kind {
+                // every GEMM row dim is the batch (token rows) or a
+                // single query row — never the full sequence
+                assert!(
+                    m == c.batch || m == 1,
+                    "decode GEMM rows {m} (n={n}, k={k})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_matches_training_forward_exactly() {
+        // prefill must be bit-identical to the forward prefix of the
+        // training graph: same kinds, same deps, just truncated.
+        let t_cfg = cfg(4, 1);
+        let p_cfg = t_cfg.with_workload(Workload::Prefill);
+        let t = build_layer_graph(&t_cfg, GraphOptions::default());
+        let p = build_layer_graph(&p_cfg, GraphOptions::default());
+        assert!(p.ops.len() < t.ops.len());
+        for (a, b) in p.ops.iter().zip(&t.ops) {
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.deps, b.deps);
+        }
+    }
+
+    #[test]
+    fn shape_key_distinguishes_workloads_but_not_gen_len() {
+        let opts = GraphOptions::default();
+        let base = cfg(4, 4);
+        let train = GraphShapeKey::of(&base, opts);
+        let prefill =
+            GraphShapeKey::of(&base.with_workload(Workload::Prefill), opts);
+        let d64 = GraphShapeKey::of(
+            &base.with_workload(Workload::Decode { gen_len: 64 }),
+            opts,
+        );
+        let d256 = GraphShapeKey::of(
+            &base.with_workload(Workload::Decode { gen_len: 256 }),
+            opts,
+        );
+        assert_ne!(train, prefill);
+        assert_ne!(train, d64);
+        assert_ne!(prefill, d64);
+        // gen_len only changes payloads — same template graph serves both
+        assert_eq!(d64, d256);
+    }
+
+    #[test]
+    fn rewrite_across_gen_len_matches_fresh_build() {
+        let opts = GraphOptions::default();
+        let from = cfg(8, 1).with_workload(Workload::Decode { gen_len: 64 });
+        let mut to = from.with_workload(Workload::Decode { gen_len: 512 });
+        to.hidden = 2048;
+        to.heads = 32;
+
+        let mut template = build_layer_graph(&from, opts);
+        rewrite_layer_graph(&to, opts, &mut template);
+        let fresh = build_layer_graph(&to, opts);
+        assert_eq!(template.ops.len(), fresh.ops.len());
+        for (a, b) in template.ops.iter().zip(&fresh.ops) {
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.deps, b.deps);
+        }
+    }
+
+    #[test]
+    fn decode_pipeline_graph_is_valid() {
+        let c = cfg(4, 2)
+            .with_pp(2, 4)
+            .with_workload(Workload::Decode { gen_len: 16 });
+        c.validate().unwrap();
+        let g = build_layer_graph(&c, GraphOptions::default());
+        g.validate().unwrap();
+        // stage-boundary sends carry single-token activations
+        let p = c.precision.bytes();
+        assert_eq!(
+            g.total_p2p_bytes(),
+            c.microbatches() * p * c.batch * c.hidden
+        );
     }
 }

@@ -36,6 +36,11 @@ pub enum OpKind {
     /// Fused element-wise traffic of `bytes` (residual adds, GELU when not
     /// fused, dropout, optimizer math).
     Elementwise { bytes: u64 },
+    /// Streaming read of `bytes` from the per-layer KV cache during a
+    /// decode step — priced at HBM bandwidth like other streaming ops,
+    /// but kept distinct so breakdowns can attribute the decode phase's
+    /// bandwidth wall to the cache (Fernandez et al., arXiv:2411.13055).
+    KvRead { bytes: u64 },
     /// All-reduce of `bytes` with the given scheduling class.
     AllReduce { bytes: u64, class: CommClass },
     /// Reduce-scatter of `bytes` over the TP group — sequence
@@ -92,6 +97,7 @@ impl OpKind {
             }
             OpKind::LayerNorm { rows, h } => format!("layernorm {rows}x{h}"),
             OpKind::Elementwise { bytes } => format!("eltwise {bytes}B"),
+            OpKind::KvRead { bytes } => format!("kv-read {bytes}B"),
             OpKind::AllReduce { bytes, class } => match class {
                 CommClass::Serialized => format!("ar-tp {bytes}B"),
                 CommClass::Overlappable => format!("ar-dp {bytes}B"),
@@ -142,6 +148,9 @@ mod tests {
         let (b, c) = OpKind::SendRecv { bytes: 7 }.comm_payload().unwrap();
         assert_eq!((b, c), (7, None));
         assert!(OpKind::Elementwise { bytes: 1 }.comm_payload().is_none());
+        // KV-cache reads are compute-stream work, not communication
+        assert!(!OpKind::KvRead { bytes: 1 }.is_comm());
+        assert!(OpKind::KvRead { bytes: 1 }.comm_payload().is_none());
     }
 
     #[test]

@@ -1,0 +1,303 @@
+//! The inference workload family: prefill and decode phases of serving.
+//!
+//! Training iterates forward + backward + optimizer; serving splits into
+//! two phases with very different roofline positions (Kundu et al.,
+//! arXiv:2407.14645 extend the paper's operator-model methodology to
+//! inference; Fernandez et al., arXiv:2411.13055 show why bandwidth and
+//! capacity trends make decode the binding constraint on future hardware):
+//!
+//! * **prefill** — the prompt's `seq_len` tokens run one forward pass
+//!   (compute-bound: the training forward emission without backward,
+//!   optimizer, or DP gradient ops). The makespan *is* the
+//!   time-to-first-token.
+//! * **decode** — one token per sequence per step attends over the KV
+//!   cache (memory-bandwidth-bound: seq-len-1 GEMVs plus a per-layer
+//!   [`crate::graph::OpKind::KvRead`] priced at HBM stream bandwidth).
+//!   The graph models **one steady-state step at the fully grown
+//!   context** `seq_len + gen_len` — a conservative upper bound on every
+//!   earlier step — and [`apply_workload`] scales the step report by
+//!   `gen_len` after [`crate::sim::apply_pipeline`].
+//!
+//! The workload rides on [`ModelConfig`] (`cfg.workload`), so every
+//! downstream key — graph templates, memoized op costs, surrogate
+//! digests, shared-cache point entries — disambiguates automatically.
+
+use crate::model::ModelConfig;
+use crate::sim::SimReport;
+
+/// The workload family of a scenario point. `Decode` carries the
+/// generation length because it is a *model* axis: it sets the KV-cache
+/// context the decode step runs against, not just a post-hoc multiplier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Workload {
+    /// Full training iteration (forward + backward + optimizer) — the
+    /// paper's original subject and the default everywhere.
+    #[default]
+    Training,
+    /// Prompt processing: one forward pass over `seq_len` tokens.
+    Prefill,
+    /// Token generation: `gen_len` sequential seq-len-1 steps over a
+    /// KV cache grown to `seq_len + gen_len`.
+    Decode { gen_len: u64 },
+}
+
+impl Workload {
+    pub fn kind(&self) -> WorkloadKind {
+        match self {
+            Workload::Training => WorkloadKind::Training,
+            Workload::Prefill => WorkloadKind::Prefill,
+            Workload::Decode { .. } => WorkloadKind::Decode,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        self.kind().as_str()
+    }
+
+    pub fn is_training(&self) -> bool {
+        matches!(self, Workload::Training)
+    }
+
+    /// Prefill or decode.
+    pub fn is_inference(&self) -> bool {
+        !self.is_training()
+    }
+
+    /// Tokens generated per sequence (0 unless decoding).
+    pub fn gen_len(&self) -> u64 {
+        match *self {
+            Workload::Decode { gen_len } => gen_len,
+            _ => 0,
+        }
+    }
+}
+
+/// The workload discriminant without the decode payload — the axis value
+/// specs and grids enumerate ([`crate::sweep::GridBuilder::workloads`]
+/// crosses it with the `gen_len` axis), and the graph-shape discriminant
+/// ([`crate::graph::GraphShapeKey`]): prefill/decode emit different op
+/// topologies, while `gen_len` changes payloads only.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum WorkloadKind {
+    #[default]
+    Training,
+    Prefill,
+    Decode,
+}
+
+impl WorkloadKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            WorkloadKind::Training => "training",
+            WorkloadKind::Prefill => "prefill",
+            WorkloadKind::Decode => "decode",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<WorkloadKind> {
+        match s {
+            "training" => Some(WorkloadKind::Training),
+            "prefill" => Some(WorkloadKind::Prefill),
+            "decode" => Some(WorkloadKind::Decode),
+            _ => None,
+        }
+    }
+
+    /// The values [`WorkloadKind::parse`] accepts, for error messages.
+    pub fn supported() -> &'static str {
+        "\"training\", \"prefill\", \"decode\""
+    }
+
+    /// Realize the axis value: decode binds the `gen_len` axis value,
+    /// training/prefill ignore it (the axis contributes one iteration).
+    pub fn with_gen_len(self, gen_len: u64) -> Workload {
+        match self {
+            WorkloadKind::Training => Workload::Training,
+            WorkloadKind::Prefill => Workload::Prefill,
+            WorkloadKind::Decode => Workload::Decode { gen_len },
+        }
+    }
+}
+
+/// Per-device KV-cache footprint in bytes (0 for training).
+///
+/// One pipeline stage holds `stage_layers` layers; each caches K and V
+/// (factor 2) for its `1/tp` slice of the hidden dimension, for every
+/// sequence in the batch, out to the full context this workload reaches:
+/// `seq_len` after prefill, `seq_len + gen_len` at the end of decode.
+///
+/// ```text
+/// kv_bytes = stage_layers · 2 · precision · batch · kv_len · hidden / tp
+/// ```
+pub fn kv_cache_bytes(cfg: &ModelConfig) -> u64 {
+    if cfg.workload.is_training() {
+        return 0;
+    }
+    let p = cfg.precision.bytes();
+    cfg.stage_layers() * 2 * p * cfg.batch * cfg.kv_len() * (cfg.hidden / cfg.tp())
+}
+
+/// Expand a one-step decode report to the full generation: every time
+/// field scales by `gen_len` (the graph models the final, largest step, so
+/// this upper-bounds the true sum over growing contexts). No-op for
+/// training and prefill — bit-identical to the pre-inference pipeline.
+///
+/// Ratio metrics (`comm_fraction`, `bubble_fraction`) are computed from
+/// the scaled fields by every consumer, so sweep, optimizer, shard, and
+/// serve paths stay mutually bit-identical. `intervals`, when recorded,
+/// keep the single-step timeline (a per-op Gantt of one decode step).
+///
+/// Call **after** [`crate::sim::apply_pipeline`]: the fill/drain bubble
+/// is paid per step, so it scales with the rest.
+pub fn apply_workload(report: &mut SimReport, cfg: &ModelConfig) {
+    let Workload::Decode { gen_len } = cfg.workload else { return };
+    let g = gen_len as f64;
+    for t in [
+        &mut report.makespan,
+        &mut report.compute_time,
+        &mut report.serialized_comm,
+        &mut report.overlapped_comm,
+        &mut report.p2p_comm,
+        &mut report.exposed_comm,
+        &mut report.hidden_comm,
+        &mut report.bubble_time,
+        &mut report.steady_span,
+        &mut report.fwd_compute,
+        &mut report.bwd_compute,
+        &mut report.opt_compute,
+    ] {
+        *t *= g;
+    }
+}
+
+/// Time-to-first-token: the prefill makespan (0 for other workloads —
+/// decode rows model the post-prefill generation phase).
+pub fn ttft(cfg: &ModelConfig, makespan: f64) -> f64 {
+    match cfg.workload {
+        Workload::Prefill => makespan,
+        _ => 0.0,
+    }
+}
+
+/// Per-token decode latency: the generation makespan over `gen_len`
+/// steps (0 for other workloads).
+pub fn tok_latency(cfg: &ModelConfig, makespan: f64) -> f64 {
+    match cfg.workload {
+        Workload::Decode { gen_len } => makespan / gen_len as f64,
+        _ => 0.0,
+    }
+}
+
+/// Serving throughput per device: tokens produced (decode) or ingested
+/// (prefill) per second, divided across the whole `tp·pp·dp` world
+/// (0 for training).
+pub fn tokens_per_sec_device(cfg: &ModelConfig, makespan: f64) -> f64 {
+    if makespan == 0.0 {
+        return 0.0;
+    }
+    // sequences in flight per iteration across all DP replicas
+    let seqs = (cfg.batch * cfg.microbatches() * cfg.dp()) as f64;
+    let tokens = match cfg.workload {
+        Workload::Training => return 0.0,
+        Workload::Prefill => seqs * cfg.seq_len as f64,
+        Workload::Decode { gen_len } => seqs * gen_len as f64,
+    };
+    let world = (cfg.tp() * cfg.pp() * cfg.dp()) as f64;
+    tokens / (world * makespan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Precision;
+    use crate::parallelism::ParallelismSpec;
+
+    fn cfg(workload: Workload) -> ModelConfig {
+        ModelConfig {
+            hidden: 1024,
+            seq_len: 512,
+            batch: 4,
+            layers: 4,
+            heads: 16,
+            ffn_mult: 4,
+            par: ParallelismSpec::tp_dp(4, 2),
+            precision: Precision::F16,
+            workload,
+        }
+    }
+
+    #[test]
+    fn kind_roundtrips_through_parse() {
+        for k in [WorkloadKind::Training, WorkloadKind::Prefill, WorkloadKind::Decode] {
+            assert_eq!(WorkloadKind::parse(k.as_str()), Some(k));
+        }
+        assert_eq!(WorkloadKind::parse("serving"), None);
+        assert_eq!(
+            WorkloadKind::Decode.with_gen_len(64),
+            Workload::Decode { gen_len: 64 }
+        );
+        assert_eq!(WorkloadKind::Prefill.with_gen_len(64), Workload::Prefill);
+    }
+
+    #[test]
+    fn kv_cache_bytes_formula() {
+        // training never holds a KV cache
+        assert_eq!(kv_cache_bytes(&cfg(Workload::Training)), 0);
+        // decode at kv_len = 512 + 64: 4 layers · 2 · 2B · 4 seqs · 576 · 1024/4
+        let c = cfg(Workload::Decode { gen_len: 64 });
+        assert_eq!(kv_cache_bytes(&c), 4 * 2 * 2 * 4 * 576 * (1024 / 4));
+        // prefill caches the prompt only
+        let p = cfg(Workload::Prefill);
+        assert_eq!(kv_cache_bytes(&p), 4 * 2 * 2 * 4 * 512 * (1024 / 4));
+        // TP shards it, PP splits the layers
+        let mut tp8 = c;
+        tp8.par.tp = 8;
+        assert_eq!(kv_cache_bytes(&tp8), kv_cache_bytes(&c) / 2);
+    }
+
+    #[test]
+    fn apply_workload_scales_decode_only() {
+        let base = SimReport {
+            makespan: 4.0,
+            compute_time: 3.0,
+            exposed_comm: 1.0,
+            serialized_comm: 1.5,
+            ..Default::default()
+        };
+        let mut train = base.clone();
+        apply_workload(&mut train, &cfg(Workload::Training));
+        assert_eq!(train.makespan.to_bits(), base.makespan.to_bits());
+        let mut pre = base.clone();
+        apply_workload(&mut pre, &cfg(Workload::Prefill));
+        assert_eq!(pre.makespan.to_bits(), base.makespan.to_bits());
+
+        let mut dec = base.clone();
+        apply_workload(&mut dec, &cfg(Workload::Decode { gen_len: 16 }));
+        assert_eq!(dec.makespan, 64.0);
+        assert_eq!(dec.compute_time, 48.0);
+        assert_eq!(dec.serialized_comm, 24.0);
+        // ratio metrics are invariant under the uniform scaling
+        assert!((dec.comm_fraction() - base.comm_fraction()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn inference_metrics_by_workload() {
+        let t = cfg(Workload::Training);
+        assert_eq!(ttft(&t, 2.0), 0.0);
+        assert_eq!(tok_latency(&t, 2.0), 0.0);
+        assert_eq!(tokens_per_sec_device(&t, 2.0), 0.0);
+
+        let p = cfg(Workload::Prefill);
+        assert_eq!(ttft(&p, 2.0), 2.0);
+        assert_eq!(tok_latency(&p, 2.0), 0.0);
+        // batch 4 · 512 tokens · dp 2 over (4·2 world · 2 s)
+        let tps = tokens_per_sec_device(&p, 2.0);
+        assert!((tps - (4.0 * 512.0 * 2.0) / (8.0 * 2.0)).abs() < 1e-12);
+
+        let d = cfg(Workload::Decode { gen_len: 64 });
+        assert_eq!(ttft(&d, 2.0), 0.0);
+        assert_eq!(tok_latency(&d, 2.0), 2.0 / 64.0);
+        let tps = tokens_per_sec_device(&d, 2.0);
+        assert!((tps - (4.0 * 64.0 * 2.0) / (8.0 * 2.0)).abs() < 1e-12);
+    }
+}

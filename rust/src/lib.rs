@@ -23,6 +23,9 @@
 //!   shared-memory ring all-reduce used by the data-parallel trainer.
 //! * [`graph`] — the per-layer operator graph (GEMMs, LayerNorm, ARs) with
 //!   serialized-vs-overlappable communication classes.
+//! * [`inference`] — the serving workload family: prefill/decode phases,
+//!   the KV-cache footprint, and latency/throughput metrics
+//!   ([`inference::Workload`] rides on every [`model::ModelConfig`]).
 //! * [`sim`] — a discrete-event simulator with per-device compute and
 //!   communication streams and overlap accounting.
 //! * [`sweep`] — the parallel, allocation-free scenario sweep engine: a
@@ -66,6 +69,7 @@ pub mod config;
 pub mod coordinator;
 pub mod graph;
 pub mod hw;
+pub mod inference;
 pub mod model;
 pub mod opmodel;
 pub mod optimizer;

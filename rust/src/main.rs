@@ -237,10 +237,10 @@ fn serve_cmd(args: &Args, device: &DeviceSpec) -> Result<()> {
 }
 
 /// `--warm-cache PATH` wiring shared by `study`/`optimize`: install the
-/// process-global evaluation cache and seed its operator-cost table from
-/// a previous run's snapshot (leniently — a missing or stale file means
-/// a cold start, never an error). Returns the handle for the post-run
-/// save.
+/// process-global evaluation cache and seed its operator-cost and
+/// point-metrics tables from a previous run's snapshot (leniently — a
+/// missing or stale file means a cold start, never an error). Returns
+/// the handle for the post-run save.
 fn warm_cache(
     args: &Args,
 ) -> Option<(std::sync::Arc<cache::SharedCache>, std::path::PathBuf)> {
@@ -249,7 +249,7 @@ fn warm_cache(
     let n = cache::disk::warm_start(&shared, &path);
     if n > 0 {
         eprintln!(
-            "warm-started {} op-cost entries from {}",
+            "warm-started {} cache entries from {}",
             n,
             path.display()
         );
@@ -262,7 +262,7 @@ fn warm_cache(
 fn save_warm_cache(warm: Option<(std::sync::Arc<cache::SharedCache>, std::path::PathBuf)>) {
     let Some((shared, path)) = warm else { return };
     match cache::disk::save(&shared, &path) {
-        Ok(n) => eprintln!("saved {} op-cost entries to {}", n, path.display()),
+        Ok(n) => eprintln!("saved {} cache entries to {}", n, path.display()),
         Err(e) => eprintln!("warning: cache save failed: {e}"),
     }
 }
@@ -862,9 +862,11 @@ resident query service (cross-run cache reuse; DESIGN.md §14):
                          overrides)
     --warm-cache PATH    load the op-cost snapshot at startup, save it
                          back on graceful shutdown
-    routes: GET /healthz | GET /studies | POST /query[?format=jsonl|csv]
-            (body: {\"name\": \"fig10\"} or a full inline spec JSON;
-             fidelity/execution honored) | POST /shutdown
+    routes: GET /healthz | GET /metrics | GET /studies |
+            POST /query[?format=jsonl|csv] (body: {\"name\": \"fig10\"}
+             or a full inline spec JSON; fidelity/execution honored) |
+            POST /shutdown; connections are HTTP/1.1 keep-alive with
+            Content-Length-framed responses
     curl -s localhost:7177/query -d '{\"name\": \"fig10\"}'   # jsonl rows
 
 sharded scatter/gather (split one study/search across processes or hosts;

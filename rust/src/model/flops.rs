@@ -145,6 +145,7 @@ mod tests {
             ffn_mult: 4,
             par: ParallelismSpec::none(),
             precision: Precision::F16,
+            workload: crate::inference::Workload::Training,
         }
     }
 

@@ -9,6 +9,7 @@ pub mod zoo;
 pub use flops::{LayerCounts, Precision};
 pub use zoo::{zoo, ZooEntry};
 
+use crate::inference::Workload;
 use crate::parallelism::ParallelismSpec;
 
 /// Hyperparameters of a (possibly sliced) Transformer training setup.
@@ -19,7 +20,9 @@ use crate::parallelism::ParallelismSpec;
 /// The distribution strategy is a first-class [`ParallelismSpec`] (`par`):
 /// TP, PP (+ microbatches), DP, and sequence parallelism. Under PP,
 /// `batch` is the per-microbatch batch; the global batch is
-/// `batch · microbatches · dp`.
+/// `batch · microbatches · dp`. The workload family (`workload`) selects
+/// training, prefill, or decode semantics — for decode, `seq_len` is the
+/// prompt length and the generation length lives on the workload.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct ModelConfig {
     pub hidden: u64,
@@ -30,6 +33,7 @@ pub struct ModelConfig {
     pub ffn_mult: u64,
     pub par: ParallelismSpec,
     pub precision: Precision,
+    pub workload: Workload,
 }
 
 impl Default for ModelConfig {
@@ -44,6 +48,7 @@ impl Default for ModelConfig {
             ffn_mult: 4,
             par: ParallelismSpec::none(),
             precision: Precision::F16,
+            workload: Workload::Training,
         }
     }
 }
@@ -90,6 +95,10 @@ impl ModelConfig {
         self.precision = p;
         self
     }
+    pub fn with_workload(mut self, w: Workload) -> Self {
+        self.workload = w;
+        self
+    }
 
     /// Tensor-parallel degree.
     pub fn tp(&self) -> u64 {
@@ -118,6 +127,15 @@ impl ModelConfig {
     /// Layers held by one pipeline stage.
     pub fn stage_layers(&self) -> u64 {
         self.layers / self.par.pp.max(1)
+    }
+    /// Tokens generated per sequence (0 unless the workload is decode).
+    pub fn gen_len(&self) -> u64 {
+        self.workload.gen_len()
+    }
+    /// Context length the KV cache grows to: the prompt plus (for decode)
+    /// the generated tokens. Equals `seq_len` for training/prefill.
+    pub fn kv_len(&self) -> u64 {
+        self.seq_len + self.workload.gen_len()
     }
 
     pub fn ffn(&self) -> u64 {
@@ -168,6 +186,21 @@ impl ModelConfig {
                 self.seq_len * self.batch,
                 p.tp
             )));
+        }
+        if p.seq_par && self.workload.is_inference() {
+            return Err(crate::Error::Config(format!(
+                "seq_par is a training-side optimization (it shards the \
+                 LayerNorm/element-wise token rows); the {} workload does \
+                 not support it — drop seq_par or use training",
+                self.workload.as_str()
+            )));
+        }
+        if matches!(self.workload, Workload::Decode { gen_len: 0 }) {
+            return Err(crate::Error::Config(
+                "decode needs gen_len >= 1: zero generated tokens is an \
+                 empty workload"
+                    .into(),
+            ));
         }
         Ok(())
     }

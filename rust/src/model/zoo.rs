@@ -33,6 +33,7 @@ impl ZooEntry {
             ffn_mult: (self.fc_dim + self.hidden - 1) / self.hidden,
             par: crate::parallelism::ParallelismSpec::tp_dp(tp, 1),
             precision: Precision::F16,
+            workload: crate::inference::Workload::Training,
         }
     }
 

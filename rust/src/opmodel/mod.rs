@@ -186,7 +186,11 @@ impl CostProvider for MeasuredCost {
         match kind {
             OpKind::Gemm { .. } => self.gemm.predict(kind),
             OpKind::LayerNorm { .. } => self.layernorm.predict(kind),
-            OpKind::Elementwise { bytes } => *bytes as f64 * self.eltwise_per_byte,
+            // KV-cache reads stream bytes exactly like fused element-wise
+            // traffic — the fitted per-byte rate is the same HBM curve
+            OpKind::Elementwise { bytes } | OpKind::KvRead { bytes } => {
+                *bytes as f64 * self.eltwise_per_byte
+            }
             _ => panic!("comm op routed to compute_time"),
         }
     }

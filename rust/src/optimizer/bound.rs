@@ -141,9 +141,22 @@ pub fn lower_bound(
         steady_floor.max(ar_total) + opt
     };
 
+    // A decode point's report is the single-step report scaled by gen_len
+    // (`inference::apply_workload`), so the time floors scale by the same
+    // factor. IEEE multiplication by one positive scalar is monotone, so
+    // `lb <= step` survives the scaling in f64. `comm_fraction` is a
+    // ratio and needs no scaling — the guard band absorbs the ulp-level
+    // difference between the scaled and unscaled quotients.
+    let gen_scale = match cfg.workload {
+        crate::inference::Workload::Decode { gen_len } => gen_len as f64,
+        _ => 1.0,
+    };
+
     match obj {
-        Objective::IterTime => makespan_lb * FP_GUARD,
-        Objective::TimePerSample => makespan_lb / samples(cfg) * FP_GUARD,
+        Objective::IterTime => makespan_lb * gen_scale * FP_GUARD,
+        Objective::TimePerSample => {
+            makespan_lb * gen_scale / samples(cfg) * FP_GUARD
+        }
         Objective::CommFraction => {
             // For pp == 1, comm_fraction = exposed/makespan =
             // 1 - compute/makespan — increasing in the makespan and
@@ -224,6 +237,49 @@ mod tests {
         assert!(checked > 1000);
     }
 
+    /// The bound must also hold for serving workloads: forward-only
+    /// digests (no bwd/opt terms) and the decode gen_len scaling.
+    #[test]
+    fn bound_is_sound_for_inference_workloads() {
+        use crate::inference::WorkloadKind;
+        let grid = hw_grid();
+        let mut ctx = EvalCtx::new();
+        let cands = GridBuilder::new(&catalog::mi210())
+            .workloads(&[WorkloadKind::Prefill, WorkloadKind::Decode])
+            .hidden(&[4096, 16384])
+            .gen_len(&[32, 512])
+            .batch(&[1, 16])
+            .layers(&[8])
+            .tp(&[1, 8])
+            .pp(&[1, 2])
+            .microbatches(&[4])
+            .dp(&[1, 2])
+            .build();
+        assert!(cands.len() > 50, "got {}", cands.len());
+        for sc in &cands.points {
+            for hw in 0..grid.hardware.len() as u32 {
+                let sc = Scenario { hw, ..*sc };
+                let m = ctx.eval(&grid, &sc);
+                for obj in [
+                    Objective::IterTime,
+                    Objective::TimePerSample,
+                    Objective::CommFraction,
+                ] {
+                    let lb = lower_bound(&mut ctx, &grid, &sc, obj);
+                    let actual = obj.of(&sc.cfg, &m);
+                    assert!(
+                        lb <= actual,
+                        "bound {lb} > actual {actual} for {:?} / {:?} under \
+                         {:?}",
+                        sc.cfg.workload,
+                        sc.cfg.par,
+                        obj
+                    );
+                }
+            }
+        }
+    }
+
     /// The iteration-time bound is *exact* (modulo the guard band) on a
     /// serial config: no comm at all, so the makespan IS the compute
     /// FIFO total plus the optimizer step.
@@ -240,6 +296,7 @@ mod tests {
             ffn_mult: 4,
             par: ParallelismSpec::none(),
             precision: crate::model::Precision::F16,
+            workload: crate::inference::Workload::Training,
         };
         let sc = Scenario { cfg, opts: GraphOptions::default(), hw: 0 };
         let m = ctx.eval(&grid, &sc);
@@ -264,6 +321,7 @@ mod tests {
             ffn_mult: 4,
             par: ParallelismSpec::tp_dp(8, 1),
             precision: crate::model::Precision::F16,
+            workload: crate::inference::Workload::Training,
         };
         let sc = Scenario { cfg, opts: GraphOptions::default(), hw: 0 };
         let m = ctx.eval(&grid, &sc);
@@ -300,6 +358,7 @@ mod tests {
             ffn_mult: 4,
             par: ParallelismSpec::tp_dp(4, 2).with_pp(2, 4),
             precision: crate::model::Precision::F16,
+            workload: crate::inference::Workload::Training,
         };
         let sc = Scenario { cfg, opts: GraphOptions::default(), hw: 0 };
         let m = ctx.eval(&grid, &sc);

@@ -14,17 +14,26 @@
 //! the equivalence mode runs with the check off and the capacity-aware
 //! mode reports how many candidates it refused to price.
 
+use crate::inference::Workload;
 use crate::model::ModelConfig;
 
-/// Strategy-aware per-device training footprint, in bytes.
+/// Strategy-aware per-device footprint, in bytes. Training points carry
+/// weights+grads, Adam state, and the backprop activation stash;
+/// inference points carry weights only plus this stage's KV cache at its
+/// full (`seq_len + gen_len`) context and a one-layer working set.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct StrategyFootprint {
-    /// Weights + gradients of this rank's parameter shard.
+    /// Weights + gradients of this rank's parameter shard (weights only
+    /// for inference — nothing accumulates gradients).
     pub weight_grad_bytes: u64,
-    /// Adam moments (2 x f32) of the shard.
+    /// Adam moments (2 x f32) of the shard; 0 for inference.
     pub optimizer_bytes: u64,
-    /// Stashed activations for backprop, all in-flight microbatches.
+    /// Stashed activations for backprop, all in-flight microbatches;
+    /// for inference, the live working set of one layer pass.
     pub activation_bytes: u64,
+    /// This stage's KV cache at the full context length
+    /// ([`crate::inference::kv_cache_bytes`]); 0 for training.
+    pub kv_cache_bytes: u64,
 }
 
 impl StrategyFootprint {
@@ -44,6 +53,22 @@ impl StrategyFootprint {
         let replicated =
             3 * cfg.hidden * p / if cfg.seq_par() { cfg.tp() } else { 1 };
         let act_per_token = sharded + replicated;
+        if cfg.workload.is_inference() {
+            // No gradients, no optimizer state, no cross-layer stash —
+            // activations are one layer's live set, and the KV cache
+            // (which the stash-free budget makes room for) becomes the
+            // capacity driver at long contexts.
+            let tokens = match cfg.workload {
+                Workload::Decode { .. } => cfg.batch,
+                _ => cfg.seq_len * cfg.batch,
+            };
+            return StrategyFootprint {
+                weight_grad_bytes: shard * p,
+                optimizer_bytes: 0,
+                activation_bytes: tokens * act_per_token * inflight,
+                kv_cache_bytes: crate::inference::kv_cache_bytes(cfg),
+            };
+        }
         StrategyFootprint {
             weight_grad_bytes: 2 * shard * p,
             optimizer_bytes: shard * 2 * 4,
@@ -52,11 +77,15 @@ impl StrategyFootprint {
                 * cfg.batch
                 * act_per_token
                 * inflight,
+            kv_cache_bytes: 0,
         }
     }
 
     pub fn total(&self) -> u64 {
-        self.weight_grad_bytes + self.optimizer_bytes + self.activation_bytes
+        self.weight_grad_bytes
+            + self.optimizer_bytes
+            + self.activation_bytes
+            + self.kv_cache_bytes
     }
 }
 
@@ -90,6 +119,7 @@ mod tests {
                 seq_par: false,
             },
             precision: crate::model::Precision::F16,
+            workload: crate::inference::Workload::Training,
         }
     }
 
@@ -131,6 +161,60 @@ mod tests {
         let sp = StrategyFootprint::of(&c);
         assert!(sp.activation_bytes < dense.activation_bytes);
         assert_eq!(sp.weight_grad_bytes, dense.weight_grad_bytes);
+    }
+
+    #[test]
+    fn inference_footprint_swaps_stash_for_kv_cache() {
+        let c = cfg(8, 1, 1);
+        let train = StrategyFootprint::of(&c);
+        let dec = StrategyFootprint::of(
+            &c.with_workload(Workload::Decode { gen_len: 2048 }),
+        );
+        // weights only (no grads), no Adam state
+        assert_eq!(2 * dec.weight_grad_bytes, train.weight_grad_bytes);
+        assert_eq!(dec.optimizer_bytes, 0);
+        assert_eq!(train.kv_cache_bytes, 0);
+        // KV cache: layers x 2 x p x B x (SL + gen) x H/tp
+        let p = c.precision.bytes();
+        assert_eq!(
+            dec.kv_cache_bytes,
+            c.layers * 2 * p * c.batch * (c.seq_len + 2048) * (c.hidden / 8)
+        );
+        // decode's live activations are single-token, far below training's
+        assert!(dec.activation_bytes < train.activation_bytes);
+    }
+
+    #[test]
+    fn kv_cache_grows_with_gen_len_and_shards_with_tp() {
+        let short = StrategyFootprint::of(
+            &cfg(8, 1, 1).with_workload(Workload::Decode { gen_len: 128 }),
+        );
+        let long = StrategyFootprint::of(
+            &cfg(8, 1, 1).with_workload(Workload::Decode { gen_len: 4096 }),
+        );
+        assert!(long.kv_cache_bytes > short.kv_cache_bytes);
+        let wide = StrategyFootprint::of(
+            &cfg(16, 1, 1).with_workload(Workload::Decode { gen_len: 128 }),
+        );
+        assert_eq!(short.kv_cache_bytes, 2 * wide.kv_cache_bytes);
+        // prefill holds the prompt-length cache
+        let pre =
+            StrategyFootprint::of(&cfg(8, 1, 1).with_workload(Workload::Prefill));
+        assert!(pre.kv_cache_bytes > 0);
+        assert!(pre.kv_cache_bytes < short.kv_cache_bytes);
+    }
+
+    #[test]
+    fn memory_cap_prunes_long_context_decode() {
+        let d = catalog::mi210(); // 64 GB
+        // an 8-way-sharded decode point fits at moderate context...
+        let fit = cfg(8, 1, 1).with_workload(Workload::Decode { gen_len: 1024 });
+        assert!(fits(&fit, d.mem_capacity, 1.0));
+        // ...but a very long generation at high batch does not
+        let mut oversized =
+            cfg(8, 1, 1).with_workload(Workload::Decode { gen_len: 262_144 });
+        oversized.batch = 64;
+        assert!(!fits(&oversized, d.mem_capacity, 1.0));
     }
 
     #[test]

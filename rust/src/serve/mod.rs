@@ -22,8 +22,9 @@
 //! | route | semantics |
 //! |---|---|
 //! | `GET /healthz` | liveness + cache stats/sizes (JSON) |
+//! | `GET /metrics` | operational counters, text exposition format |
 //! | `GET /studies` | the built-in study list (JSON) |
-//! | `POST /query[?format=jsonl\|csv]` | run a study, stream rows back |
+//! | `POST /query[?format=jsonl\|csv]` | run a study, return the rows |
 //! | `POST /shutdown` | graceful stop (the reply confirms) |
 //!
 //! `POST /query` bodies: `{"name": "fig10"}` (optionally with
@@ -32,13 +33,17 @@
 //! `execution` fields are honored — `"execution": "search"` routes
 //! through the optimizer). The spec's own sinks are ignored: the
 //! response body is exactly the row stream in the requested format
-//! (default jsonl). Responses are close-delimited (`Connection: close`),
-//! so `curl` just works.
+//! (default jsonl).
 //!
-//! Spec errors are detected before the status line goes out (400 + JSON
-//! error). A failure *after* streaming began can only truncate the body —
-//! the connection drops without the final newline-terminated row ever
-//! lying about values.
+//! Connections are **HTTP/1.1 keep-alive**: every response carries a
+//! `Content-Length`, and the handler loops reading requests on the same
+//! socket until the client sends `Connection: close`, closes its end, or
+//! the request is malformed (a 400 closes the connection — after a
+//! framing error the byte stream cannot be trusted for resync).
+//! `POST /shutdown` also closes after confirming. Because bodies are
+//! length-framed, a query is fully evaluated into the response buffer
+//! before the status line goes out — spec errors return 400 and
+//! evaluation failures 500, never a truncated 200.
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -88,7 +93,12 @@ struct ServerState {
     chunk: usize,
     stop: Arc<AtomicBool>,
     addr: SocketAddr,
+    /// `POST /query` requests accepted (successful or not).
     queries: AtomicU64,
+    /// Every request served on any route — the `/metrics` counter.
+    requests: AtomicU64,
+    /// Bind time, for the uptime gauge.
+    start: std::time::Instant,
 }
 
 /// A running server (background accept loop) — the in-process handle the
@@ -163,7 +173,7 @@ fn bind(
         let n = cache::disk::warm_start(&cache, path);
         if n > 0 {
             eprintln!(
-                "commscale serve: warm-started {} op-cost entries from {}",
+                "commscale serve: warm-started {} cache entries from {}",
                 n,
                 path.display()
             );
@@ -177,6 +187,8 @@ fn bind(
         stop: Arc::new(AtomicBool::new(false)),
         addr,
         queries: AtomicU64::new(0),
+        requests: AtomicU64::new(0),
+        start: std::time::Instant::now(),
     });
     Ok((listener, state))
 }
@@ -185,7 +197,7 @@ fn finish(state: &ServerState, opts: &ServeOptions) {
     if let Some(path) = &opts.cache_path {
         match cache::disk::save(&state.cache, path) {
             Ok(n) => eprintln!(
-                "commscale serve: saved {} op-cost entries to {}",
+                "commscale serve: saved {} cache entries to {}",
                 n,
                 path.display()
             ),
@@ -210,7 +222,7 @@ fn accept_loop(listener: TcpListener, state: Arc<ServerState>) {
 }
 
 // ---------------------------------------------------------------------------
-// request plumbing (hand-rolled HTTP/1.1, close-delimited responses)
+// request plumbing (hand-rolled HTTP/1.1, keep-alive, length-framed)
 // ---------------------------------------------------------------------------
 
 const MAX_HEAD: usize = 64 * 1024;
@@ -221,13 +233,18 @@ struct Request {
     path: String,
     query: String,
     body: Vec<u8>,
+    /// The client sent `Connection: close` — answer, then hang up.
+    want_close: bool,
 }
 
 fn find_subslice(haystack: &[u8], needle: &[u8]) -> Option<usize> {
     haystack.windows(needle.len()).position(|w| w == needle)
 }
 
-fn read_request(stream: &mut TcpStream) -> Result<Request> {
+/// Read one request off a keep-alive connection. `Ok(None)` is a clean
+/// end-of-stream (the client closed between requests); bytes followed by
+/// EOF mid-frame are an error.
+fn read_request(stream: &mut TcpStream) -> Result<Option<Request>> {
     let mut buf: Vec<u8> = Vec::with_capacity(1024);
     let mut tmp = [0u8; 4096];
     let head_end = loop {
@@ -239,6 +256,9 @@ fn read_request(stream: &mut TcpStream) -> Result<Request> {
         }
         let n = stream.read(&mut tmp)?;
         if n == 0 {
+            if buf.is_empty() {
+                return Ok(None);
+            }
             return Err(Error::Study("connection closed mid-request".into()));
         }
         buf.extend_from_slice(&tmp[..n]);
@@ -261,12 +281,18 @@ fn read_request(stream: &mut TcpStream) -> Result<Request> {
         None => (target.to_string(), String::new()),
     };
     let mut content_length = 0usize;
+    let mut want_close = false;
     for line in lines {
         if let Some((k, v)) = line.split_once(':') {
             if k.trim().eq_ignore_ascii_case("content-length") {
                 content_length = v.trim().parse().map_err(|_| {
                     Error::Study("bad Content-Length".into())
                 })?;
+            }
+            if k.trim().eq_ignore_ascii_case("connection")
+                && v.trim().eq_ignore_ascii_case("close")
+            {
+                want_close = true;
             }
         }
     }
@@ -282,96 +308,226 @@ fn read_request(stream: &mut TcpStream) -> Result<Request> {
         body.extend_from_slice(&tmp[..n]);
     }
     body.truncate(content_length);
-    Ok(Request { method, path, query, body })
+    Ok(Some(Request { method, path, query, body, want_close }))
 }
 
-fn write_head(
+/// Write one length-framed response. `keep_alive: false` advertises the
+/// close so well-behaved clients stop pipelining.
+fn respond(
     stream: &mut TcpStream,
     status: &str,
     content_type: &str,
+    body: &[u8],
+    keep_alive: bool,
 ) -> std::io::Result<()> {
     let head = format!(
         "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\n\
-         Connection: close\r\n\r\n"
+         Content-Length: {}\r\nConnection: {}\r\n\r\n",
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
     );
-    stream.write_all(head.as_bytes())
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+    stream.flush()
 }
 
 fn respond_json(
     stream: &mut TcpStream,
     status: &str,
     body: &Json,
+    keep_alive: bool,
 ) -> std::io::Result<()> {
-    write_head(stream, status, "application/json")?;
     let mut text = body.to_string();
     text.push('\n');
-    stream.write_all(text.as_bytes())?;
-    stream.flush()
+    respond(stream, status, "application/json", text.as_bytes(), keep_alive)
 }
 
-fn respond_error(stream: &mut TcpStream, status: &str, msg: &str) {
+fn respond_error(
+    stream: &mut TcpStream,
+    status: &str,
+    msg: &str,
+    keep_alive: bool,
+) {
     let _ = respond_json(
         stream,
         status,
         &Json::obj(vec![("error", Json::str(msg))]),
+        keep_alive,
     );
 }
 
+/// Serve requests off one connection until the client closes, asks to
+/// close, sends a frame we cannot trust, or shuts the server down.
 fn handle_connection(mut stream: TcpStream, state: &ServerState) -> Result<()> {
-    let req = match read_request(&mut stream) {
-        Ok(r) => r,
-        Err(e) => {
-            respond_error(&mut stream, "400 Bad Request", &e.to_string());
+    loop {
+        let req = match read_request(&mut stream) {
+            Ok(Some(r)) => r,
+            Ok(None) => return Ok(()), // clean keep-alive EOF
+            Err(e) => {
+                // after a framing error the stream offset is unknowable —
+                // answer 400 and close rather than misparse the next frame
+                respond_error(
+                    &mut stream,
+                    "400 Bad Request",
+                    &e.to_string(),
+                    false,
+                );
+                return Ok(());
+            }
+        };
+        state.requests.fetch_add(1, Ordering::Relaxed);
+        let keep_alive = !req.want_close;
+        match (req.method.as_str(), req.path.as_str()) {
+            ("GET", "/healthz") => {
+                respond_json(&mut stream, "200 OK", &healthz(state), keep_alive)?;
+            }
+            ("GET", "/metrics") => {
+                respond(
+                    &mut stream,
+                    "200 OK",
+                    "text/plain; version=0.0.4",
+                    metrics_text(state).as_bytes(),
+                    keep_alive,
+                )?;
+            }
+            ("GET", "/studies") => {
+                let list = Json::arr(builtin::all().iter().map(|b| {
+                    Json::obj(vec![
+                        ("name", Json::str(b.name)),
+                        (
+                            "artifact",
+                            match b.artifact {
+                                Some(a) => Json::str(a),
+                                None => Json::Null,
+                            },
+                        ),
+                        ("description", Json::str(b.description)),
+                    ])
+                }));
+                respond_json(&mut stream, "200 OK", &list, keep_alive)?;
+            }
+            ("POST", "/shutdown") => {
+                state.stop.store(true, Ordering::SeqCst);
+                respond_json(
+                    &mut stream,
+                    "200 OK",
+                    &Json::obj(vec![("status", Json::str("shutting down"))]),
+                    false,
+                )?;
+                // the acceptor may already be blocked in accept(): wake it
+                let _ = TcpStream::connect(state.addr);
+                return Ok(());
+            }
+            ("POST", "/query") => {
+                state.queries.fetch_add(1, Ordering::Relaxed);
+                handle_query(&mut stream, state, &req, keep_alive)?;
+            }
+            _ => {
+                respond_error(
+                    &mut stream,
+                    "404 Not Found",
+                    &format!(
+                        "{} {} — routes: GET /healthz, GET /metrics, \
+                         GET /studies, POST /query, POST /shutdown",
+                        req.method, req.path
+                    ),
+                    keep_alive,
+                );
+            }
+        }
+        if !keep_alive {
             return Ok(());
         }
-    };
-    match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/healthz") => {
-            respond_json(&mut stream, "200 OK", &healthz(state))?;
-        }
-        ("GET", "/studies") => {
-            let list = Json::arr(builtin::all().iter().map(|b| {
-                Json::obj(vec![
-                    ("name", Json::str(b.name)),
-                    (
-                        "artifact",
-                        match b.artifact {
-                            Some(a) => Json::str(a),
-                            None => Json::Null,
-                        },
-                    ),
-                    ("description", Json::str(b.description)),
-                ])
-            }));
-            respond_json(&mut stream, "200 OK", &list)?;
-        }
-        ("POST", "/shutdown") => {
-            state.stop.store(true, Ordering::SeqCst);
-            respond_json(
-                &mut stream,
-                "200 OK",
-                &Json::obj(vec![("status", Json::str("shutting down"))]),
-            )?;
-            // the acceptor may already be blocked in accept(): wake it
-            let _ = TcpStream::connect(state.addr);
-        }
-        ("POST", "/query") => {
-            state.queries.fetch_add(1, Ordering::Relaxed);
-            handle_query(stream, state, &req)?;
-        }
-        _ => {
-            respond_error(
-                &mut stream,
-                "404 Not Found",
-                &format!(
-                    "{} {} — routes: GET /healthz, GET /studies, \
-                     POST /query, POST /shutdown",
-                    req.method, req.path
-                ),
-            );
-        }
     }
-    Ok(())
+}
+
+/// `GET /metrics` — operational counters in the text exposition format
+/// (one `name{labels} value` sample per line), scrapeable by anything
+/// that speaks the de-facto metrics line protocol.
+fn metrics_text(state: &ServerState) -> String {
+    use std::fmt::Write as _;
+    let s = state.cache.stats();
+    let z = state.cache.sizes();
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "# HELP commscale_requests_total Requests served on any route."
+    );
+    let _ = writeln!(out, "# TYPE commscale_requests_total counter");
+    let _ = writeln!(
+        out,
+        "commscale_requests_total {}",
+        state.requests.load(Ordering::Relaxed)
+    );
+    let _ = writeln!(
+        out,
+        "# HELP commscale_queries_total POST /query requests accepted."
+    );
+    let _ = writeln!(out, "# TYPE commscale_queries_total counter");
+    let _ = writeln!(
+        out,
+        "commscale_queries_total {}",
+        state.queries.load(Ordering::Relaxed)
+    );
+    let _ = writeln!(
+        out,
+        "# HELP commscale_uptime_seconds Seconds since the listener bound."
+    );
+    let _ = writeln!(out, "# TYPE commscale_uptime_seconds gauge");
+    let _ = writeln!(
+        out,
+        "commscale_uptime_seconds {:.3}",
+        state.start.elapsed().as_secs_f64()
+    );
+    let _ = writeln!(
+        out,
+        "# HELP commscale_cache_hits_total Shared-cache hits per table."
+    );
+    let _ = writeln!(out, "# TYPE commscale_cache_hits_total counter");
+    let _ = writeln!(
+        out,
+        "# HELP commscale_cache_misses_total Shared-cache misses per table."
+    );
+    let _ = writeln!(out, "# TYPE commscale_cache_misses_total counter");
+    for (table, hits, misses) in [
+        ("op", s.op_hits, s.op_misses),
+        ("graph", s.graph_hits, s.graph_misses),
+        ("digest", s.digest_hits, s.digest_misses),
+        ("point", s.point_hits, s.point_misses),
+    ] {
+        let _ = writeln!(
+            out,
+            "commscale_cache_hits_total{{table=\"{table}\"}} {hits}"
+        );
+        let _ = writeln!(
+            out,
+            "commscale_cache_misses_total{{table=\"{table}\"}} {misses}"
+        );
+    }
+    let _ = writeln!(
+        out,
+        "# HELP commscale_cache_entries Live entries per cache table."
+    );
+    let _ = writeln!(out, "# TYPE commscale_cache_entries gauge");
+    for (table, n) in [
+        ("op", z.op_entries),
+        ("graph", z.graphs),
+        ("digest", z.digests),
+        ("point", z.points),
+    ] {
+        let _ = writeln!(
+            out,
+            "commscale_cache_entries{{table=\"{table}\"}} {n}"
+        );
+    }
+    let _ = writeln!(
+        out,
+        "# HELP commscale_cache_evictions_total Entries evicted under \
+         memory pressure."
+    );
+    let _ = writeln!(out, "# TYPE commscale_cache_evictions_total counter");
+    let _ = writeln!(out, "commscale_cache_evictions_total {}", s.evictions);
+    out
 }
 
 fn healthz(state: &ServerState) -> Json {
@@ -457,10 +613,33 @@ fn query_spec(body: &str) -> Result<StudySpec> {
     }
 }
 
+/// A clonable in-memory writer: the row sinks own one clone (as their
+/// `Box<dyn Write>`), the handler keeps another to extract the finished
+/// body for length-framing.
+#[derive(Clone, Default)]
+struct BodyBuf(Arc<std::sync::Mutex<Vec<u8>>>);
+
+impl BodyBuf {
+    fn take(&self) -> Vec<u8> {
+        std::mem::take(&mut self.0.lock().unwrap())
+    }
+}
+
+impl Write for BodyBuf {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.0.lock().unwrap().extend_from_slice(buf);
+        Ok(buf.len())
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
 fn handle_query(
-    mut stream: TcpStream,
+    stream: &mut TcpStream,
     state: &ServerState,
     req: &Request,
+    keep_alive: bool,
 ) -> Result<()> {
     let format = match req
         .query
@@ -471,16 +650,16 @@ fn handle_query(
         Some("csv") => Format::Csv,
         Some(other) => {
             respond_error(
-                &mut stream,
+                stream,
                 "400 Bad Request",
                 &format!("unknown format {other:?} (want jsonl or csv)"),
+                keep_alive,
             );
             return Ok(());
         }
     };
     let body = String::from_utf8_lossy(&req.body).into_owned();
 
-    // everything that can fail cheaply happens before the status line
     let resolved = query_spec(&body).and_then(|mut spec| {
         spec.sinks.clear(); // the response body IS the sink
         spec.resolve(&state.device)
@@ -488,38 +667,52 @@ fn handle_query(
     let resolved = match resolved {
         Ok(r) => r,
         Err(e) => {
-            respond_error(&mut stream, "400 Bad Request", &e.to_string());
+            respond_error(stream, "400 Bad Request", &e.to_string(), keep_alive);
             return Ok(());
         }
     };
+
+    // evaluate into a buffer first: the status line only goes out once
+    // the whole row stream exists, so failures are a clean 500, never a
+    // truncated 200
+    let buf = BodyBuf::default();
+    let mut sink: Box<dyn RowSink> = match format {
+        Format::Jsonl => Box::new(JsonlSink::to_writer(Box::new(buf.clone()))),
+        Format::Csv => Box::new(CsvSink::to_writer(Box::new(buf.clone()))),
+    };
+    let run = if resolved.spec.execution == Execution::Search {
+        optimizer::optimize_study(
+            &resolved,
+            &OptimizeOptions { threads: state.threads, memory_cap: None },
+        )
+        .and_then(|report| {
+            sink.begin(&report.columns)?;
+            for row in &report.rows {
+                sink.row(row)?;
+            }
+            sink.finish()?;
+            Ok(())
+        })
+    } else {
+        let opts = RunOptions { threads: state.threads, chunk: state.chunk };
+        let mut refs: Vec<&mut dyn RowSink> = vec![&mut *sink];
+        study::run_study(&resolved, opts, &mut refs).map(|_| ())
+    };
+    drop(sink);
+    if let Err(e) = run {
+        respond_error(
+            stream,
+            "500 Internal Server Error",
+            &e.to_string(),
+            keep_alive,
+        );
+        return Ok(());
+    }
 
     let content_type = match format {
         Format::Jsonl => "application/jsonl",
         Format::Csv => "text/csv",
     };
-    write_head(&mut stream, "200 OK", content_type)?;
-    let writer: Box<dyn Write> =
-        Box::new(std::io::BufWriter::new(stream.try_clone()?));
-    let mut sink: Box<dyn RowSink> = match format {
-        Format::Jsonl => Box::new(JsonlSink::to_writer(writer)),
-        Format::Csv => Box::new(CsvSink::to_writer(writer)),
-    };
-
-    if resolved.spec.execution == Execution::Search {
-        let report = optimizer::optimize_study(
-            &resolved,
-            &OptimizeOptions { threads: state.threads, memory_cap: None },
-        )?;
-        sink.begin(&report.columns)?;
-        for row in &report.rows {
-            sink.row(row)?;
-        }
-        sink.finish()?;
-    } else {
-        let opts = RunOptions { threads: state.threads, chunk: state.chunk };
-        let mut refs: Vec<&mut dyn RowSink> = vec![&mut *sink];
-        study::run_study(&resolved, opts, &mut refs)?;
-    }
-    stream.flush()?;
+    respond(stream, "200 OK", content_type, &buf.take(), keep_alive)?;
     Ok(())
 }

@@ -149,6 +149,8 @@ impl CostProvider for AnalyticCost {
                 self.stream_time(2 * self.precision.bytes() * rows * h)
             }
             OpKind::Elementwise { bytes } => self.stream_time(bytes),
+            // the decode-phase KV-cache read streams at HBM bandwidth
+            OpKind::KvRead { bytes } => self.stream_time(bytes),
             _ => panic!("comm op routed to compute_time"),
         }
     }

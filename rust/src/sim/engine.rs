@@ -475,6 +475,7 @@ mod tests {
             ffn_mult: 4,
             par: ParallelismSpec::tp_dp(16, 4),
             precision: Precision::F16,
+            workload: crate::inference::Workload::Training,
         };
         let g = build_layer_graph(&cfg, GraphOptions::default());
         let cost =
@@ -503,6 +504,7 @@ mod tests {
             ffn_mult: 4,
             par: ParallelismSpec::tp_dp(8, 2).with_pp(4, 8).with_seq_par(true),
             precision: Precision::F16,
+            workload: crate::inference::Workload::Training,
         };
         cfg.validate().unwrap();
         let g = build_layer_graph(&cfg, GraphOptions::default());
@@ -531,6 +533,7 @@ mod tests {
             ffn_mult: 4,
             par: ParallelismSpec::tp_dp(8, 4),
             precision: Precision::F16,
+            workload: crate::inference::Workload::Training,
         };
         let cost =
             AnalyticCost::new(catalog::mi210(), cfg.precision, cfg.tp(), cfg.dp());
@@ -573,6 +576,7 @@ mod tests {
             ffn_mult: 4,
             par: ParallelismSpec::tp_dp(8, 1),
             precision: Precision::F16,
+            workload: crate::inference::Workload::Training,
         };
         let frac = |tp: u64| {
             let c = base.with_tp(tp);

@@ -320,6 +320,7 @@ mod tests {
             ffn_mult: 4,
             par,
             precision: Precision::F16,
+            workload: crate::inference::Workload::Training,
         }
     }
 
@@ -446,6 +447,39 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn inference_estimates_track_exact() {
+        use crate::inference::Workload;
+        // forward-only graphs are a single dependency chain per pass, so
+        // the pp=1 estimate is structurally exact (fold order aside)
+        for wl in [Workload::Prefill, Workload::Decode { gen_len: 128 }] {
+            let c = cfg(ParallelismSpec::tp_dp(8, 2)).with_workload(wl);
+            c.validate().unwrap();
+            let (exact, est) = exact_and_estimate(&c);
+            assert!(
+                (est.makespan / exact.makespan - 1.0).abs() < 1e-12,
+                "{wl:?}: {} vs {}",
+                est.makespan,
+                exact.makespan
+            );
+            assert_eq!(est.bwd_compute, 0.0);
+            assert_eq!(est.opt_compute, 0.0);
+            assert_eq!(exact.bwd_compute, 0.0);
+        }
+        // decode pipeline estimates stay close and carry the p2p stream
+        let c = cfg(ParallelismSpec::tp_dp(4, 1).with_pp(2, 4))
+            .with_workload(Workload::Decode { gen_len: 64 });
+        c.validate().unwrap();
+        let (exact, est) = exact_and_estimate(&c);
+        assert!(est.p2p_comm > 0.0);
+        assert!(
+            (est.makespan / exact.makespan - 1.0).abs() < 0.08,
+            "{} vs {}",
+            est.makespan,
+            exact.makespan
+        );
     }
 
     #[test]

@@ -16,11 +16,14 @@ use crate::analysis::{
 };
 use crate::config::{self, SweepGrid};
 use crate::hw::DeviceSpec;
+use crate::inference::WorkloadKind;
 use crate::model::zoo;
 use crate::report::{ascii_bar_chart, ascii_line_chart, Series, Table};
 use crate::{Error, Result};
 
-use super::spec::{SinkSpec, Source, StudySpec};
+use super::spec::{
+    AggOp, AggSpec, AxesSpec, MetricSpec, SinkSpec, Source, StudySpec,
+};
 
 /// One registry entry: a named spec constructor plus the paper-artifact
 /// alias it reproduces (if any).
@@ -100,6 +103,102 @@ fn strategies_spec() -> StudySpec {
     strategies::study(64)
 }
 
+/// Decode latency vs TP degree, grouped per (batch, gen_len) cell with an
+/// argmin over TP — the serving analogue of the strategies search, and
+/// the spec `commscale optimize` exercises for the search ≡ sweep
+/// equivalence on inference grids.
+fn infer_tp_latency_spec() -> StudySpec {
+    StudySpec {
+        name: "infer_tp_latency".into(),
+        description: "Decode per-token latency vs TP degree: how far \
+                      tensor parallelism cuts the token loop before the \
+                      per-layer all-reduces flatten it"
+            .into(),
+        axes: AxesSpec {
+            hidden: vec![16384],
+            seq_len: vec![2048],
+            batch: vec![1, 16],
+            layers: vec![32],
+            tp: vec![1, 2, 4, 8, 16, 32],
+            workloads: vec![WorkloadKind::Decode],
+            gen_len: vec![64, 512],
+            ..AxesSpec::default()
+        },
+        group_by: vec!["batch".into(), "gen_len".into()],
+        aggregate: vec![AggSpec {
+            metric: "iter_time".into(),
+            ops: vec![AggOp::Min, AggOp::ArgMin],
+            args: vec!["tp".into()],
+        }],
+        ..StudySpec::default()
+    }
+}
+
+/// Decode throughput vs batch size at fixed sharding: the classic
+/// latency/throughput trade of a serving fleet, reported per device.
+fn infer_batch_throughput_spec() -> StudySpec {
+    StudySpec {
+        name: "infer_batch_throughput".into(),
+        description: "Decode tokens/sec/device and per-token latency vs \
+                      batch size at fixed TP — the serving latency vs \
+                      throughput frontier"
+            .into(),
+        axes: AxesSpec {
+            hidden: vec![16384],
+            seq_len: vec![2048],
+            batch: vec![1, 2, 4, 8, 16, 32, 64],
+            layers: vec![32],
+            tp: vec![8],
+            workloads: vec![WorkloadKind::Decode],
+            gen_len: vec![128],
+            ..AxesSpec::default()
+        },
+        columns: vec!["workload".into(), "batch".into(), "gen_len".into()],
+        metrics: vec![
+            MetricSpec::field("tok_latency"),
+            MetricSpec::field("tokens_per_sec_device"),
+            MetricSpec::field("comm_fraction"),
+        ],
+        ..StudySpec::default()
+    }
+}
+
+/// Prefill vs decode comm fraction under hardware evolution: decode's
+/// GEMV-shaped ops starve compute while its all-reduces stay latency
+/// bound, so its comm fraction crosses prefill's as flops outgrow
+/// bandwidth — the paper's Fig 12/13 stress applied to serving.
+fn infer_comm_crossover_spec() -> StudySpec {
+    StudySpec {
+        name: "infer_comm_crossover".into(),
+        description: "Prefill vs decode comm fraction under 1x/2x/4x \
+                      flop-vs-bw evolution — where serving becomes \
+                      communication bound"
+            .into(),
+        axes: AxesSpec {
+            hidden: vec![4096, 16384],
+            seq_len: vec![2048],
+            batch: vec![4],
+            layers: vec![8],
+            tp: vec![8],
+            workloads: vec![WorkloadKind::Prefill, WorkloadKind::Decode],
+            gen_len: vec![256],
+            evolutions: evolution::paper_scenarios(),
+            ..AxesSpec::default()
+        },
+        columns: vec![
+            "flop_vs_bw".into(),
+            "workload".into(),
+            "hidden".into(),
+        ],
+        metrics: vec![
+            MetricSpec::field("comm_fraction"),
+            MetricSpec::field("ttft"),
+            MetricSpec::field("tok_latency"),
+        ],
+        ..StudySpec::default()
+    }
+}
+
 /// Every built-in study, in presentation order.
 pub fn all() -> Vec<Builtin> {
     vec![
@@ -169,6 +268,27 @@ pub fn all() -> Vec<Builtin> {
             description: "TP vs PP vs DP vs SP strategy comparison \
                           (world = 64)",
             spec_fn: strategies_spec,
+        },
+        Builtin {
+            name: "infer_tp_latency",
+            artifact: None,
+            description: "Decode latency vs TP (searchable argmin per \
+                          batch/gen_len cell)",
+            spec_fn: infer_tp_latency_spec,
+        },
+        Builtin {
+            name: "infer_batch_throughput",
+            artifact: None,
+            description: "Decode tokens/sec/device vs batch size \
+                          (latency/throughput frontier)",
+            spec_fn: infer_batch_throughput_spec,
+        },
+        Builtin {
+            name: "infer_comm_crossover",
+            artifact: None,
+            description: "Prefill vs decode comm fraction under hardware \
+                          evolution",
+            spec_fn: infer_comm_crossover_spec,
         },
     ]
 }
@@ -563,6 +683,51 @@ mod tests {
             };
             assert_eq!(outcome.points_evaluated, resolved.total_points());
             assert!(!sink.rows.is_empty(), "{name} emitted no rows");
+        }
+    }
+
+    #[test]
+    fn inference_builtins_run_and_report_serving_metrics() {
+        let d = catalog::mi210();
+        for name in
+            ["infer_tp_latency", "infer_batch_throughput", "infer_comm_crossover"]
+        {
+            let spec = find(name).unwrap().spec();
+            let resolved = spec.resolve(&d).unwrap();
+            assert!(resolved.total_points() > 0, "{name} is empty");
+            let mut sink = VecSink::new();
+            let outcome = {
+                let mut sinks: Vec<&mut dyn RowSink> = vec![&mut sink];
+                run_study(&resolved, RunOptions::default(), &mut sinks)
+                    .unwrap()
+            };
+            assert_eq!(outcome.points_evaluated, resolved.total_points());
+            assert!(!sink.rows.is_empty(), "{name} emitted no rows");
+        }
+        // throughput frontier: tokens/sec/device positive everywhere and
+        // per-token latency non-decreasing in batch at fixed sharding
+        let spec = find("infer_batch_throughput").unwrap().spec();
+        let resolved = spec.resolve(&d).unwrap();
+        let mut sink = VecSink::new();
+        {
+            let mut sinks: Vec<&mut dyn RowSink> = vec![&mut sink];
+            run_study(&resolved, RunOptions::default(), &mut sinks).unwrap();
+        }
+        let b = sink.col("batch");
+        let tl = sink.col("tok_latency");
+        let tput = sink.col("tokens_per_sec_device");
+        let mut prev: Option<(f64, f64)> = None;
+        for row in &sink.rows {
+            assert!(row[tput].as_f64() > 0.0);
+            if let Some((pb, pl)) = prev {
+                assert!(row[b].as_f64() > pb, "batch axis out of order");
+                assert!(
+                    row[tl].as_f64() >= pl,
+                    "per-token latency fell as batch grew: {} < {pl}",
+                    row[tl].as_f64()
+                );
+            }
+            prev = Some((row[b].as_f64(), row[tl].as_f64()));
         }
     }
 

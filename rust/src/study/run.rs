@@ -105,6 +105,8 @@ pub(crate) fn base_schema(source: Source) -> Vec<(&'static str, FieldKind)> {
             ("world", Num),
             ("samples_per_iter", Num),
             ("archetype", Str),
+            ("workload", Str),
+            ("gen_len", Num),
             ("makespan", Num),
             ("iter_time", Num),
             ("compute_time", Num),
@@ -120,6 +122,9 @@ pub(crate) fn base_schema(source: Source) -> Vec<(&'static str, FieldKind)> {
             ("comm_fraction", Num),
             ("bubble_fraction", Num),
             ("time_per_sample", Num),
+            ("ttft", Num),
+            ("tok_latency", Num),
+            ("tokens_per_sec_device", Num),
         ],
         Source::Zoo => vec![
             ("name", Str),
@@ -1578,6 +1583,8 @@ pub(crate) fn fill_grid_identity(
     row.push(Value::Str(
         crate::analysis::strategies::archetype(&cfg.par).to_string(),
     ));
+    row.push(Value::Str(cfg.workload.as_str().to_string()));
+    row.push(Value::Num(cfg.gen_len() as f64));
 }
 
 /// Append the simulated-metric fields onto an identity-filled grid row.
@@ -1602,6 +1609,11 @@ pub(crate) fn fill_grid_metrics(
     row.push(Value::Num(m.comm_fraction()));
     row.push(Value::Num(m.bubble_fraction()));
     row.push(Value::Num(m.makespan / samples));
+    row.push(Value::Num(crate::inference::ttft(cfg, m.makespan)));
+    row.push(Value::Num(crate::inference::tok_latency(cfg, m.makespan)));
+    row.push(Value::Num(crate::inference::tokens_per_sec_device(
+        cfg, m.makespan,
+    )));
 }
 
 fn fill_grid_row(
@@ -1986,6 +1998,62 @@ mod tests {
         assert!(lines[0].starts_with("device,scenario,series,"), "{}", lines[0]);
         assert!(lines[0].contains("comm_fraction"));
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn inference_rows_expose_serving_metrics() {
+        let text = r#"{
+          "name": "inf",
+          "axes": {"workload": ["training", "prefill", "decode"],
+                   "gen_len": [64], "tp": [8], "layers": [4]},
+          "columns": ["workload", "gen_len"],
+          "metrics": ["makespan", "ttft", "tok_latency",
+                      "tokens_per_sec_device"]
+        }"#;
+        let (sink, outcome) = run_spec(text, RunOptions::default());
+        assert_eq!(outcome.rows_matched, 3);
+        let wl = sink.col("workload");
+        let gl = sink.col("gen_len");
+        let mk = sink.col("makespan");
+        let tt = sink.col("ttft");
+        let tl = sink.col("tok_latency");
+        let tp = sink.col("tokens_per_sec_device");
+        let row_for = |name: &str| {
+            sink.rows
+                .iter()
+                .find(|r| r[wl] == Value::Str(name.into()))
+                .unwrap()
+        };
+        let train = row_for("training");
+        assert_eq!(train[gl].as_f64(), 0.0);
+        assert_eq!(train[tt].as_f64(), 0.0);
+        assert_eq!(train[tl].as_f64(), 0.0);
+        assert_eq!(train[tp].as_f64(), 0.0);
+        let pre = row_for("prefill");
+        // time-to-first-token IS the prefill makespan
+        assert_eq!(pre[tt].as_f64().to_bits(), pre[mk].as_f64().to_bits());
+        assert!(pre[tp].as_f64() > 0.0);
+        let dec = row_for("decode");
+        assert_eq!(dec[gl].as_f64(), 64.0);
+        assert_eq!(
+            dec[tl].as_f64().to_bits(),
+            (dec[mk].as_f64() / 64.0).to_bits()
+        );
+        assert!(dec[tp].as_f64() > 0.0);
+    }
+
+    #[test]
+    fn training_schema_prefix_is_unchanged_by_inference_columns() {
+        // default (no workload axis) studies keep their default columns:
+        // the inference fields are opt-in, so pre-inference goldens and
+        // CSV consumers see byte-identical output
+        let (sink, _) = run_spec(
+            r#"{"name":"t","axes":{"hidden":[4096],"tp":[8]}}"#,
+            RunOptions::default(),
+        );
+        assert!(!sink.columns.iter().any(|c| c == "workload"));
+        assert!(!sink.columns.iter().any(|c| c == "ttft"));
+        assert_eq!(sink.columns.last().unwrap(), "time_per_sample");
     }
 
     #[test]

@@ -14,6 +14,7 @@
 use std::collections::BTreeMap;
 
 use crate::hw::{catalog, DeviceSpec, Evolution};
+use crate::inference::WorkloadKind;
 use crate::model::Precision;
 use crate::parallelism::TopologyKind;
 use crate::sim::OverlapModel;
@@ -140,6 +141,13 @@ pub struct AxesSpec {
     pub microbatches: Vec<u64>,
     pub seq_par: Vec<bool>,
     pub dp: Vec<u64>,
+    /// Workload families to sweep (JSON key `"workload"`): training
+    /// iterations, prefill passes, and/or decode steps. Default
+    /// `[Training]` keeps every pre-inference spec bit-identical.
+    pub workloads: Vec<WorkloadKind>,
+    /// Generated tokens per sequence — a decode-only axis; non-decode
+    /// workloads collapse it (the builder enumerates it once).
+    pub gen_len: Vec<u64>,
     /// Hardware evolutions (crossed with `topologies`) — ignored when
     /// `hardware` lists explicit points.
     pub evolutions: Vec<Evolution>,
@@ -167,6 +175,8 @@ impl Default for AxesSpec {
             microbatches: vec![1],
             seq_par: vec![false],
             dp: vec![1],
+            workloads: vec![WorkloadKind::Training],
+            gen_len: vec![128],
             evolutions: vec![Evolution::none()],
             topologies: vec![TopologyKind::SingleTier],
             hardware: Vec::new(),
@@ -556,8 +566,9 @@ impl AxesSpec {
             "axes",
             &[
                 "hidden", "seq_len", "batch", "layers", "ffn_mult", "tp", "pp",
-                "microbatches", "seq_par", "dp", "evolutions", "topologies",
-                "hardware", "series", "world", "heads", "precision",
+                "microbatches", "seq_par", "dp", "workload", "gen_len",
+                "evolutions", "topologies", "hardware", "series", "world",
+                "heads", "precision",
             ],
         )?;
         let mut a = AxesSpec::default();
@@ -578,6 +589,28 @@ impl AxesSpec {
         }
         if let Some(x) = v.get("seq_par") {
             a.seq_par = bool_list(x, "axes.seq_par")?;
+        }
+        if let Some(x) = v.get("workload") {
+            let names = str_list(x, "axes.workload")?;
+            if names.is_empty() {
+                return Err(Error::Study(
+                    "axes.workload: axis must not be empty".into(),
+                ));
+            }
+            a.workloads = names
+                .iter()
+                .map(|n| {
+                    WorkloadKind::parse(n).ok_or_else(|| {
+                        Error::Study(format!(
+                            "axes.workload: unknown {n:?} (expected one of {})",
+                            WorkloadKind::supported()
+                        ))
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(x) = v.get("gen_len") {
+            a.gen_len = u64_list(x, "axes.gen_len")?;
         }
         if let Some(x) = v.get("evolutions") {
             let arr = x.as_arr().ok_or_else(|| {
@@ -783,6 +816,17 @@ impl AxesSpec {
                 "seq_par",
                 Json::arr(self.seq_par.iter().map(|&b| Json::Bool(b))),
             ));
+        }
+        if self.workloads != d.workloads {
+            pairs.push((
+                "workload",
+                Json::arr(
+                    self.workloads.iter().map(|w| Json::str(w.as_str())),
+                ),
+            ));
+        }
+        if self.gen_len != d.gen_len {
+            pairs.push(("gen_len", nums(&self.gen_len)));
         }
         if self.evolutions != d.evolutions {
             pairs.push((
@@ -1389,6 +1433,8 @@ impl StudySpec {
             .microbatches(&pick(&s.microbatches, &a.microbatches))
             .seq_par(s.seq_par.as_ref().unwrap_or(&a.seq_par))
             .dp(&pick(&s.dp, &a.dp))
+            .workloads(&a.workloads)
+            .gen_len(&a.gen_len)
             .heads_policy(a.heads)
             .precision(a.precision);
         if let Some(w) = a.world {
@@ -1799,6 +1845,48 @@ mod tests {
         assert_eq!(a, b);
         let c = StudySpec::parse(&b.to_json().to_string()).unwrap();
         assert_eq!(a, c);
+    }
+
+    #[test]
+    fn workload_axis_parses_and_roundtrips() {
+        let s = StudySpec::parse(
+            r#"{"name":"w","axes":{"workload":["prefill","decode"],
+                "gen_len":[64,256],"tp":[1,8]}}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            s.axes.workloads,
+            vec![WorkloadKind::Prefill, WorkloadKind::Decode]
+        );
+        assert_eq!(s.axes.gen_len, vec![64, 256]);
+        let back = StudySpec::parse(&s.to_json().to_string()).unwrap();
+        assert_eq!(s, back);
+        // prefill ignores gen_len; decode sweeps it: 2 tp x (1 + 2)
+        let r = s.resolve(&mi210()).unwrap();
+        assert_eq!(r.total_points(), 6);
+        // the default axes stay invisible in serialized form
+        let d = StudySpec::parse(r#"{"name":"d","axes":{"tp":[1,8]}}"#).unwrap();
+        let text = d.to_json().to_string();
+        assert!(!text.contains("workload"), "{text}");
+        assert!(!text.contains("gen_len"), "{text}");
+    }
+
+    #[test]
+    fn bad_workload_values_are_rejected() {
+        for (spec, needle) in [
+            (
+                r#"{"name":"x","axes":{"workload":["inference"]}}"#,
+                "\"decode\"",
+            ),
+            (r#"{"name":"x","axes":{"workload":[]}}"#, "must not be empty"),
+            (
+                r#"{"name":"x","axes":{"gen_len":[0]}}"#,
+                "positive integers",
+            ),
+        ] {
+            let err = StudySpec::parse(spec).unwrap_err().to_string();
+            assert!(err.contains(needle), "{spec}: {err}");
+        }
     }
 
     #[test]

@@ -327,6 +327,7 @@ impl EvalCtx {
         let opt = d.opt_time(&memo, sc.cfg.stage_layers());
         let mut r = estimate_report(&sc.cfg, d, opt);
         apply_pipeline(&mut r, sc.cfg.pp(), sc.cfg.microbatches());
+        crate::inference::apply_workload(&mut r, &sc.cfg);
         let pm = PointMetrics::from_report(&r);
         if let Some(s) = shared {
             s.put_point(cost_fp, &sc.cfg, sc.opts, Fidelity::Surrogate, pm);
@@ -358,6 +359,7 @@ impl EvalCtx {
         let memo = MemoCost { inner: cost, id: cost_id, memo: &*memo };
         let mut r = simulate_with(g, &memo, arena, false);
         apply_pipeline(&mut r, sc.cfg.pp(), sc.cfg.microbatches());
+        crate::inference::apply_workload(&mut r, &sc.cfg);
         let pm = PointMetrics::from_report(&r);
         if let Some(s) = shared {
             s.put_point(cost_fp, &sc.cfg, sc.opts, Fidelity::Exact, pm);
@@ -631,6 +633,7 @@ pub fn run_serial_reference(grid: &ScenarioGrid) -> Vec<PointMetrics> {
             let g = build_layer_graph(&sc.cfg, sc.opts);
             let mut r = simulate(&g, &cost);
             apply_pipeline(&mut r, sc.cfg.pp(), sc.cfg.microbatches());
+            crate::inference::apply_workload(&mut r, &sc.cfg);
             PointMetrics::from_report(&r)
         })
         .collect()
@@ -673,6 +676,7 @@ impl PointEvaluator {
         rewrite_layer_graph(cfg, opts, g);
         let mut r = simulate_with(g, cost, &mut self.arena, true);
         apply_pipeline(&mut r, cfg.pp(), cfg.microbatches());
+        crate::inference::apply_workload(&mut r, cfg);
         r
     }
 
@@ -691,6 +695,7 @@ impl PointEvaluator {
         rewrite_layer_graph(cfg, opts, g);
         let mut r = simulate_with(g, cost, &mut self.arena, false);
         apply_pipeline(&mut r, cfg.pp(), cfg.microbatches());
+        crate::inference::apply_workload(&mut r, cfg);
         PointMetrics::from_report(&r)
     }
 }
@@ -841,6 +846,7 @@ mod tests {
                 ffn_mult: 4,
                 par: ParallelismSpec::tp_dp(tp, 1),
                 precision: Precision::F16,
+                workload: crate::inference::Workload::Training,
             };
             let cost = AnalyticCost::new(d.clone(), cfg.precision, tp, 1);
             let naive = simulate(
@@ -898,6 +904,36 @@ mod tests {
                     m.to_bits(),
                     want[i].to_bits(),
                     "pass {pass} point {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn inference_grid_matches_serial_reference_bitwise() {
+        use crate::inference::WorkloadKind;
+        let grid = GridBuilder::new(&catalog::mi210())
+            .workloads(&[
+                WorkloadKind::Training,
+                WorkloadKind::Prefill,
+                WorkloadKind::Decode,
+            ])
+            .hidden(&[4096, 16384])
+            .gen_len(&[64, 512])
+            .batch(&[1, 16])
+            .tp(&[1, 8])
+            .dp(&[1, 2])
+            .build();
+        assert!(grid.len() > 20);
+        let reference = run_serial_reference(&grid);
+        for threads in [1usize, 4] {
+            let got = run_with(&grid, threads);
+            for (i, (a, b)) in reference.iter().zip(&got).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "inference point {i} @ {threads} threads: {:?}",
+                    grid.points[i].cfg.workload
                 );
             }
         }

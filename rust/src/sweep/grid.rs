@@ -4,6 +4,7 @@
 use crate::config;
 use crate::graph::GraphOptions;
 use crate::hw::{DeviceSpec, Evolution};
+use crate::inference::WorkloadKind;
 use crate::model::{ModelConfig, Precision};
 use crate::parallelism::{NetworkTopology, ParallelismSpec, TopologyKind};
 use crate::sim::OverlapModel;
@@ -139,10 +140,13 @@ pub enum HeadsPolicy {
 /// Cartesian grid builder over the paper's axes.
 ///
 /// Axis nesting (outermost → innermost): hardware (devices × evolutions ×
-/// overlap models × topologies, in that order) → hidden → seq_len → batch
-/// → layers → ffn_mult → tp → pp → microbatches → seq_par → dp. Hardware
-/// is outermost so each worker's graph-template and cost caches see long
-/// runs of points sharing a device.
+/// overlap models × topologies, in that order) → workload → hidden →
+/// seq_len → gen_len → batch → layers → ffn_mult → tp → pp → microbatches
+/// → seq_par → dp. Hardware is outermost so each worker's graph-template
+/// and cost caches see long runs of points sharing a device; the workload
+/// axis sits right inside it for the same reason (one template shape per
+/// workload family). Training-only grids — the default — enumerate in
+/// exactly the pre-workload-axis order.
 ///
 /// Combinations the strategy cannot realize (layers % pp != 0, seq-par
 /// token misfits, a `world_size` mismatch) are **skipped
@@ -157,8 +161,10 @@ pub struct GridBuilder {
     evolutions: Vec<Evolution>,
     overlaps: Vec<OverlapModel>,
     topologies: Vec<TopologyKind>,
+    workloads: Vec<WorkloadKind>,
     hidden: Vec<u64>,
     seq_len: Vec<u64>,
+    gen_len: Vec<u64>,
     batch: Vec<u64>,
     layers: Vec<u64>,
     ffn_mult: Vec<u64>,
@@ -184,8 +190,10 @@ impl GridBuilder {
             evolutions: vec![Evolution::none()],
             overlaps: vec![OverlapModel::default()],
             topologies: vec![TopologyKind::SingleTier],
+            workloads: vec![WorkloadKind::Training],
             hidden: vec![4096],
             seq_len: vec![2048],
+            gen_len: vec![128],
             batch: vec![1],
             layers: vec![1],
             ffn_mult: vec![4],
@@ -217,12 +225,23 @@ impl GridBuilder {
         self.topologies = v.to_vec();
         self
     }
+    /// Workload families to sweep (training / prefill / decode).
+    pub fn workloads(mut self, v: &[WorkloadKind]) -> Self {
+        self.workloads = v.to_vec();
+        self
+    }
     pub fn hidden(mut self, v: &[u64]) -> Self {
         self.hidden = v.to_vec();
         self
     }
     pub fn seq_len(mut self, v: &[u64]) -> Self {
         self.seq_len = v.to_vec();
+        self
+    }
+    /// Generated tokens per sequence — a decode-only axis (training and
+    /// prefill points take a single pass through it).
+    pub fn gen_len(mut self, v: &[u64]) -> Self {
+        self.gen_len = v.to_vec();
         self
     }
     pub fn batch(mut self, v: &[u64]) -> Self {
@@ -286,8 +305,10 @@ impl GridBuilder {
             * self.evolutions.len()
             * self.overlaps.len()
             * self.topologies.len()
+            * self.workloads.len()
             * self.hidden.len()
             * self.seq_len.len()
+            * self.gen_len.len()
             * self.batch.len()
             * self.layers.len()
             * self.ffn_mult.len()
@@ -340,30 +361,47 @@ impl GridBuilder {
         &self,
         f: &mut dyn FnMut(ModelConfig) -> bool,
     ) -> bool {
-        for &h in &self.hidden {
-            for &sl in &self.seq_len {
-                for &b in &self.batch {
-                    for &layers in &self.layers {
-                        for &fm in &self.ffn_mult {
-                            for &tp in &self.tp {
-                                for &pp in &self.pp {
-                                    // microbatching is a pipeline concept:
-                                    // pp = 1 takes a single mb = 1 point
-                                    // instead of duplicating the axis.
-                                    let mbs: &[u64] = if pp > 1 {
-                                        &self.microbatches
-                                    } else {
-                                        &[1]
-                                    };
-                                    for &mb in mbs {
-                                        for &sp in &self.seq_par {
-                                            for &dp in &self.dp {
-                                                if let Some(cfg) = self.realize(
-                                                    h, sl, b, layers, fm, tp,
-                                                    pp, mb, sp, dp,
-                                                ) {
-                                                    if !f(cfg) {
-                                                        return false;
+        for &wl in &self.workloads {
+            for &h in &self.hidden {
+                for &sl in &self.seq_len {
+                    // generation length is a decode concept: other
+                    // workloads take a single pass instead of duplicating
+                    // the axis (mirrors the pp=1 microbatch collapse).
+                    let gls: &[u64] = if wl == WorkloadKind::Decode {
+                        &self.gen_len
+                    } else {
+                        &[0]
+                    };
+                    for &gl in gls {
+                        for &b in &self.batch {
+                            for &layers in &self.layers {
+                                for &fm in &self.ffn_mult {
+                                    for &tp in &self.tp {
+                                        for &pp in &self.pp {
+                                            // microbatching is a pipeline
+                                            // concept: pp = 1 takes a
+                                            // single mb = 1 point instead
+                                            // of duplicating the axis.
+                                            let mbs: &[u64] = if pp > 1 {
+                                                &self.microbatches
+                                            } else {
+                                                &[1]
+                                            };
+                                            for &mb in mbs {
+                                                for &sp in &self.seq_par {
+                                                    for &dp in &self.dp {
+                                                        if let Some(cfg) = self
+                                                            .realize(
+                                                                wl, h, sl, gl,
+                                                                b, layers, fm,
+                                                                tp, pp, mb,
+                                                                sp, dp,
+                                                            )
+                                                        {
+                                                            if !f(cfg) {
+                                                                return false;
+                                                            }
+                                                        }
                                                     }
                                                 }
                                             }
@@ -478,6 +516,14 @@ impl GridBuilder {
         }
         // Last rule standing: sequence parallelism.
         if self.seq_par.iter().all(|&sp| sp) {
+            if !self.workloads.contains(&WorkloadKind::Training) {
+                return Some(format!(
+                    "seq_par = [true] with inference-only workloads {:?}: \
+                     sequence parallelism is a training-side optimization — \
+                     add false to seq_par or include the training workload",
+                    self.workloads
+                ));
+            }
             if self.tp.iter().all(|&tp| tp == 1) {
                 return Some(
                     "seq_par = [true] with tp = [1]: sequence parallelism \
@@ -544,8 +590,10 @@ impl GridBuilder {
     #[allow(clippy::too_many_arguments)]
     fn realize(
         &self,
+        wl: WorkloadKind,
         h: u64,
         sl: u64,
+        gl: u64,
         b: u64,
         layers: u64,
         fm: u64,
@@ -566,6 +614,11 @@ impl GridBuilder {
         if sp && (tp == 1 || (sl * b) % tp != 0) {
             return None;
         }
+        // sequence parallelism is a training-side optimization: skip the
+        // pairing deterministically, like the other strategy misfits.
+        if sp && wl != WorkloadKind::Training {
+            return None;
+        }
         let heads = match self.heads {
             HeadsPolicy::RoundToTp => {
                 let base = config::heads_for(h).max(tp);
@@ -582,6 +635,7 @@ impl GridBuilder {
             ffn_mult: fm,
             par: ParallelismSpec { tp, pp, microbatches: mb, dp, seq_par: sp },
             precision: self.precision,
+            workload: wl.with_gen_len(gl),
         };
         if self.heads == HeadsPolicy::RoundToTp {
             if let Err(e) = cfg.validate() {
@@ -834,6 +888,83 @@ mod tests {
             .microbatches(&[8]);
         assert_eq!(b.point_count(), 4);
         assert_eq!(b.realized_model_count(), 3);
+    }
+
+    #[test]
+    fn workload_axis_nests_outside_hidden() {
+        let g = GridBuilder::new(&catalog::mi210())
+            .workloads(&[WorkloadKind::Prefill, WorkloadKind::Decode])
+            .hidden(&[1024, 2048])
+            .gen_len(&[64])
+            .build();
+        assert_eq!(g.len(), 4);
+        assert_eq!(g.points[0].cfg.workload.kind(), WorkloadKind::Prefill);
+        assert_eq!(g.points[1].cfg.workload.kind(), WorkloadKind::Prefill);
+        assert_eq!(g.points[1].cfg.hidden, 2048);
+        assert_eq!(g.points[2].cfg.workload.kind(), WorkloadKind::Decode);
+        assert_eq!(g.points[2].cfg.gen_len(), 64);
+        for p in &g.points {
+            p.cfg.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn gen_len_axis_collapses_for_non_decode() {
+        let g = GridBuilder::new(&catalog::mi210())
+            .workloads(&[
+                WorkloadKind::Training,
+                WorkloadKind::Prefill,
+                WorkloadKind::Decode,
+            ])
+            .gen_len(&[64, 256])
+            .build();
+        // training and prefill contribute one point each; decode fans out
+        assert_eq!(g.len(), 1 + 1 + 2);
+        assert_eq!(g.points[0].cfg.gen_len(), 0);
+        assert_eq!(g.points[1].cfg.gen_len(), 0);
+        assert_eq!(g.points[2].cfg.gen_len(), 64);
+        assert_eq!(g.points[3].cfg.gen_len(), 256);
+    }
+
+    #[test]
+    fn seq_par_skips_inference_workloads() {
+        let g = GridBuilder::new(&catalog::mi210())
+            .workloads(&[WorkloadKind::Training, WorkloadKind::Decode])
+            .seq_len(&[2048])
+            .tp(&[8])
+            .seq_par(&[false, true])
+            .build();
+        // training gets both sp points; decode only sp=false
+        assert_eq!(g.len(), 3);
+        assert!(!g
+            .points
+            .iter()
+            .any(|p| p.cfg.seq_par() && p.cfg.workload.is_inference()));
+        // an inference-only seq_par grid names the binding rule
+        let reason = GridBuilder::new(&catalog::mi210())
+            .workloads(&[WorkloadKind::Decode])
+            .tp(&[8])
+            .seq_par(&[true])
+            .empty_reason()
+            .unwrap();
+        assert!(reason.contains("training-side"), "{reason}");
+    }
+
+    #[test]
+    fn training_grids_keep_pre_workload_ordering() {
+        // the workload axis must be invisible to training-only grids: the
+        // default singleton leaves the point stream untouched
+        let base = GridBuilder::new(&catalog::mi210())
+            .hidden(&[1024, 2048])
+            .tp(&[2, 4])
+            .dp(&[1, 4]);
+        let explicit = base.clone().workloads(&[WorkloadKind::Training]);
+        let a = base.build();
+        let b = explicit.build();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.points.iter().zip(&b.points) {
+            assert_eq!(x.cfg, y.cfg);
+        }
     }
 
     #[test]

@@ -1,0 +1,225 @@
+//! Inference-workload goldens: on a pinned prefill+decode grid the sweep
+//! engine must be bit-identical to the serial no-cache reference path
+//! (`build_layer_graph` → `simulate` → `apply_pipeline` →
+//! `apply_workload`), deterministically across runs — plus structural
+//! invariants (no backward/optimizer work in inference rows, the exact
+//! KV-cache footprint formula) and the decode-makespan monotonicity
+//! property in `gen_len`.
+
+use commscale::graph::{build_layer_graph, GraphOptions};
+use commscale::hw::{catalog, Evolution};
+use commscale::inference::{self, Workload, WorkloadKind};
+use commscale::model::ModelConfig;
+use commscale::sim::{apply_pipeline, simulate, AnalyticCost};
+use commscale::sweep::{
+    run_serial_reference, run_with, GridBuilder, ScenarioGrid,
+};
+
+/// The pinned golden grid: 2 hidden × 2 batch × 2 tp × 2 dp ×
+/// (prefill + decode × 2 gen_len) × 2 evolutions.
+fn inference_grid() -> ScenarioGrid {
+    GridBuilder::new(&catalog::mi210())
+        .hidden(&[4096, 16384])
+        .seq_len(&[2048])
+        .batch(&[1, 8])
+        .layers(&[4])
+        .tp(&[1, 8])
+        .dp(&[1, 2])
+        .workloads(&[WorkloadKind::Prefill, WorkloadKind::Decode])
+        .gen_len(&[64, 256])
+        .evolutions(&[Evolution::none(), Evolution::flop_vs_bw_4x()])
+        .build()
+}
+
+fn metric_bits(m: &commscale::sweep::PointMetrics) -> [u64; 11] {
+    [
+        m.makespan.to_bits(),
+        m.compute_time.to_bits(),
+        m.serialized_comm.to_bits(),
+        m.overlapped_comm.to_bits(),
+        m.p2p_comm.to_bits(),
+        m.exposed_comm.to_bits(),
+        m.hidden_comm.to_bits(),
+        m.bubble_time.to_bits(),
+        m.fwd_compute.to_bits(),
+        m.bwd_compute.to_bits(),
+        m.opt_compute.to_bits(),
+    ]
+}
+
+/// The engine path (threaded, cached, arena-backed) must reproduce the
+/// serial reference bit-for-bit on the inference grid, and repeat runs
+/// must be deterministic.
+#[test]
+fn golden_inference_grid_matches_serial_reference_bitwise() {
+    let grid = inference_grid();
+    assert!(grid.len() >= 64, "golden grid shrank: {}", grid.len());
+
+    let reference: Vec<[u64; 11]> =
+        run_serial_reference(&grid).iter().map(metric_bits).collect();
+    for threads in [1, 4] {
+        let engine: Vec<[u64; 11]> =
+            run_with(&grid, threads).iter().map(metric_bits).collect();
+        assert_eq!(
+            engine, reference,
+            "engine ({threads} threads) diverged from the serial reference"
+        );
+    }
+    // and again: the reference itself is deterministic
+    let again: Vec<[u64; 11]> =
+        run_serial_reference(&grid).iter().map(metric_bits).collect();
+    assert_eq!(again, reference, "serial reference is not deterministic");
+}
+
+/// Inference rows carry no backward or optimizer work; training rows on
+/// the same shapes do. Decode rows additionally scale every time field
+/// by `gen_len`, so makespan >= gen_len × the largest single op.
+#[test]
+fn inference_rows_have_no_backward_or_optimizer_time() {
+    let grid = inference_grid();
+    let metrics = run_serial_reference(&grid);
+    for (sc, m) in grid.points.iter().zip(&metrics) {
+        assert!(
+            !sc.cfg.workload.is_training(),
+            "grid unexpectedly contains training points"
+        );
+        assert_eq!(
+            m.bwd_compute.to_bits(),
+            0f64.to_bits(),
+            "{:?}: inference row has backward time",
+            sc.cfg.workload
+        );
+        assert_eq!(
+            m.opt_compute.to_bits(),
+            0f64.to_bits(),
+            "{:?}: inference row has optimizer time",
+            sc.cfg.workload
+        );
+        assert!(m.makespan > 0.0, "empty inference makespan");
+        assert!(
+            m.fwd_compute > 0.0,
+            "{:?}: inference row lost its forward compute",
+            sc.cfg.workload
+        );
+    }
+}
+
+/// The serving metrics are exact arithmetic on the makespan: prefill
+/// ttft IS the makespan, decode tok_latency IS makespan / gen_len —
+/// bit-identical, not approximately equal.
+#[test]
+fn serving_metrics_are_exact_functions_of_the_makespan() {
+    let grid = inference_grid();
+    let metrics = run_serial_reference(&grid);
+    for (sc, m) in grid.points.iter().zip(&metrics) {
+        match sc.cfg.workload {
+            Workload::Prefill => {
+                assert_eq!(
+                    inference::ttft(&sc.cfg, m.makespan).to_bits(),
+                    m.makespan.to_bits()
+                );
+                assert_eq!(
+                    inference::tok_latency(&sc.cfg, m.makespan).to_bits(),
+                    0f64.to_bits()
+                );
+            }
+            Workload::Decode { gen_len } => {
+                assert_eq!(
+                    inference::tok_latency(&sc.cfg, m.makespan).to_bits(),
+                    (m.makespan / gen_len as f64).to_bits()
+                );
+                assert_eq!(
+                    inference::ttft(&sc.cfg, m.makespan).to_bits(),
+                    0f64.to_bits()
+                );
+            }
+            Workload::Training => unreachable!(),
+        }
+        assert!(
+            inference::tokens_per_sec_device(&sc.cfg, m.makespan) > 0.0,
+            "inference throughput must be positive"
+        );
+    }
+}
+
+/// The KV-cache footprint formula, pinned as exact integer arithmetic:
+/// `stage_layers · 2 · precision_bytes · batch · kv_len · hidden / tp`.
+#[test]
+fn kv_cache_footprint_formula_is_pinned() {
+    let cfg = ModelConfig {
+        hidden: 16384,
+        seq_len: 2048,
+        batch: 8,
+        layers: 32,
+        heads: 128,
+        ffn_mult: 4,
+        par: commscale::parallelism::ParallelismSpec {
+            tp: 8,
+            pp: 2,
+            microbatches: 1,
+            dp: 1,
+            seq_par: false,
+        },
+        precision: commscale::model::Precision::F16,
+        workload: Workload::Decode { gen_len: 128 },
+    };
+    // 16 stage layers · 2 (K and V) · 2 B/elt · 8 seqs · 2176 tokens ·
+    // 2048 hidden-slice elems
+    assert_eq!(inference::kv_cache_bytes(&cfg), 2_281_701_376);
+
+    // prefill stops at seq_len: same config, kv_len = 2048
+    let prefill = ModelConfig { workload: Workload::Prefill, ..cfg };
+    assert_eq!(
+        inference::kv_cache_bytes(&prefill),
+        16 * 2 * 2 * 8 * 2048 * 2048
+    );
+    // training has no KV cache
+    let training = ModelConfig { workload: Workload::Training, ..cfg };
+    assert_eq!(inference::kv_cache_bytes(&training), 0);
+}
+
+fn decode_makespan(cfg: &ModelConfig) -> f64 {
+    let device = catalog::mi210();
+    let cost = AnalyticCost::from_spec(device, cfg.precision, cfg.par);
+    let g = build_layer_graph(cfg, GraphOptions::default());
+    let mut r = simulate(&g, &cost);
+    apply_pipeline(&mut r, cfg.pp(), cfg.microbatches());
+    inference::apply_workload(&mut r, cfg);
+    r.makespan
+}
+
+/// Property: decode makespan is strictly monotone in `gen_len` — the
+/// per-step graph only grows with the KV context, and the workload
+/// expansion multiplies by the step count.
+#[test]
+fn decode_makespan_is_monotone_in_gen_len() {
+    for (tp, batch) in [(1, 1), (8, 1), (8, 16), (32, 4)] {
+        let mut prev = 0.0f64;
+        for gen_len in [1u64, 2, 4, 16, 64, 256, 1024, 4096] {
+            let cfg = ModelConfig {
+                hidden: 8192,
+                seq_len: 2048,
+                batch,
+                layers: 8,
+                heads: 64,
+                ffn_mult: 4,
+                par: commscale::parallelism::ParallelismSpec {
+                    tp,
+                    pp: 1,
+                    microbatches: 1,
+                    dp: 1,
+                    seq_par: false,
+                },
+                precision: commscale::model::Precision::F16,
+                workload: Workload::Decode { gen_len },
+            };
+            let m = decode_makespan(&cfg);
+            assert!(
+                m > prev,
+                "tp={tp} batch={batch}: makespan not monotone at \
+                 gen_len={gen_len} ({m} <= {prev})"
+            );
+            prev = m;
+        }
+    }
+}

@@ -22,13 +22,17 @@ fn run_exhaustive(spec: &StudySpec) -> VecSink {
 /// Returns (evaluated, candidates) for pruning assertions.
 fn assert_search_equals_sweep(spec_text: &str) -> (usize, usize) {
     let spec = StudySpec::parse(spec_text).unwrap();
+    assert_spec_search_equals_sweep(&spec)
+}
+
+fn assert_spec_search_equals_sweep(spec: &StudySpec) -> (usize, usize) {
     let resolved = spec.resolve(&catalog::mi210()).unwrap();
     let report = optimize_study(
         &resolved,
         &OptimizeOptions { threads: 2, memory_cap: None },
     )
     .unwrap();
-    let exhaustive = run_exhaustive(&spec);
+    let exhaustive = run_exhaustive(spec);
 
     report
         .matches_exhaustive(&exhaustive.columns, &exhaustive.rows)
@@ -205,6 +209,49 @@ fn golden_filtered_grid() {
           "aggregate": [{"metric": "time_per_sample",
                          "ops": ["min", "argmin"],
                          "args": ["tp", "pp", "dp"]}]
+        }"#,
+    );
+}
+
+/// The shipped inference study searches identically to its exhaustive
+/// sweep — the ISSUE's serving acceptance bar, at both fidelities.
+#[test]
+fn golden_infer_tp_latency_search_equals_sweep() {
+    let mut spec = commscale::study::builtin::find("infer_tp_latency")
+        .expect("infer_tp_latency is registered")
+        .spec();
+    let (evaluated, candidates) = assert_spec_search_equals_sweep(&spec);
+    assert!(evaluated <= candidates, "{evaluated}/{candidates}");
+
+    spec.fidelity = commscale::sweep::Fidelity::Surrogate;
+    assert_spec_search_equals_sweep(&spec);
+}
+
+/// Mixed-workload grids (training + prefill + decode in one study) keep
+/// the equivalence: the gen-scaled decode bound must never prune a true
+/// winner, and group keys on workload/gen_len partition identically.
+#[test]
+fn golden_mixed_workload_grid() {
+    assert_search_equals_sweep(
+        r#"{
+          "name": "golden_workloads",
+          "axes": {
+            "hidden": [4096, 16384],
+            "seq_len": [2048],
+            "batch": [1, 8],
+            "layers": [8],
+            "tp": [1, 4, 8],
+            "pp": [1, 2],
+            "microbatches": [4],
+            "dp": [1, 2],
+            "workload": ["training", "prefill", "decode"],
+            "gen_len": [32, 512],
+            "evolutions": [1, 4]
+          },
+          "group_by": ["workload", "gen_len", "hidden", "flop_vs_bw"],
+          "aggregate": [{"metric": "time_per_sample",
+                         "ops": ["min", "argmin"],
+                         "args": ["tp", "pp", "dp", "batch"]}]
         }"#,
     );
 }

@@ -27,6 +27,7 @@ fn arb_config(rng: &mut Rng) -> ModelConfig {
         ffn_mult: 4,
         par: ParallelismSpec::tp_dp(tp, 1 << rng.range(0, 4)),
         precision: *rng.choose(&[Precision::F32, Precision::F16, Precision::F8]),
+        workload: commscale::inference::Workload::Training,
     }
 }
 

@@ -1,8 +1,8 @@
 //! `commscale serve` integration: served row streams must be
-//! byte-identical to the cold CLI run of the same spec — across two
-//! built-in paper-figure specs, both fidelities, and the search
-//! execution — plus protocol-level checks (healthz, studies, errors,
-//! shutdown).
+//! byte-identical to the cold CLI run of the same spec — across
+//! built-in paper-figure and inference specs, both fidelities, and the
+//! search execution — plus protocol-level checks (keep-alive framing,
+//! healthz, metrics, studies, errors, shutdown).
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpStream};
@@ -26,7 +26,8 @@ fn spawn_server() -> serve::ServerHandle {
     .expect("spawn serve on an ephemeral port")
 }
 
-/// Minimal close-delimited HTTP client: returns (status line, body).
+/// One-shot HTTP client: sends `Connection: close` so the whole
+/// response is delimited by EOF; returns (status line, body).
 fn http(
     addr: SocketAddr,
     method: &str,
@@ -35,7 +36,8 @@ fn http(
 ) -> (String, Vec<u8>) {
     let mut s = TcpStream::connect(addr).expect("connect");
     let req = format!(
-        "{method} {target} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+        "{method} {target} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\
+         Content-Length: {}\r\n\r\n{body}",
         body.len()
     );
     s.write_all(req.as_bytes()).unwrap();
@@ -48,6 +50,51 @@ fn http(
     let head = String::from_utf8_lossy(&resp[..split]).into_owned();
     let status = head.lines().next().unwrap_or("").to_string();
     (status, resp[split + 4..].to_vec())
+}
+
+/// Write one request on an already-open keep-alive connection.
+fn send_request(s: &mut TcpStream, method: &str, target: &str, body: &str) {
+    let req = format!(
+        "{method} {target} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(req.as_bytes()).unwrap();
+}
+
+/// Read exactly one `Content-Length`-framed response off a keep-alive
+/// connection: (status line, full head, body).
+fn read_framed(s: &mut TcpStream) -> (String, String, Vec<u8>) {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut tmp = [0u8; 4096];
+    let head_end = loop {
+        if let Some(p) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            break p;
+        }
+        let n = s.read(&mut tmp).unwrap();
+        assert!(n > 0, "server closed mid-response head");
+        buf.extend_from_slice(&tmp[..n]);
+    };
+    let head = String::from_utf8_lossy(&buf[..head_end]).into_owned();
+    let status = head.lines().next().unwrap_or("").to_string();
+    let len: usize = head
+        .lines()
+        .find_map(|l| {
+            let (k, v) = l.split_once(':')?;
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                Some(v.trim().parse().expect("numeric Content-Length"))
+            } else {
+                None
+            }
+        })
+        .expect("keep-alive response must carry Content-Length");
+    let mut body = buf[head_end + 4..].to_vec();
+    while body.len() < len {
+        let n = s.read(&mut tmp).unwrap();
+        assert!(n > 0, "server closed mid-body");
+        body.extend_from_slice(&tmp[..n]);
+    }
+    body.truncate(len);
+    (status, head, body)
 }
 
 fn cli_csv(args: &[&str], path: &std::path::Path) -> Vec<u8> {
@@ -70,8 +117,9 @@ fn served_rows_equal_cold_cli_bytes_across_specs_and_fidelities() {
     let server = spawn_server();
     let addr = server.addr();
 
-    // two built-in paper figures × both fidelities
-    for spec in ["fig10", "fig11"] {
+    // two built-in paper figures plus the inference serving study,
+    // × both fidelities
+    for spec in ["fig10", "fig11", "infer_tp_latency"] {
         for fidelity in ["exact", "surrogate"] {
             let path = tmp(&format!("{spec}_{fidelity}.csv"));
             let want =
@@ -177,6 +225,104 @@ fn healthz_studies_and_error_paths() {
     assert!(status.contains("400"), "bad format: {status}");
     let (status, _) = http(addr, "GET", "/nope", "");
     assert!(status.contains("404"), "unknown route: {status}");
+
+    server.shutdown();
+}
+
+/// One socket, many requests: the server must frame every response with
+/// Content-Length, keep the connection open across successes AND
+/// well-framed errors, and honor `Connection: close`.
+#[test]
+fn keep_alive_connection_serves_multiple_framed_requests() {
+    let server = spawn_server();
+    let mut s = TcpStream::connect(server.addr()).expect("connect");
+
+    send_request(&mut s, "GET", "/healthz", "");
+    let (status, head, _) = read_framed(&mut s);
+    assert!(status.contains("200"), "healthz on keep-alive: {status}");
+    assert!(
+        head.to_ascii_lowercase().contains("connection: keep-alive"),
+        "response did not advertise keep-alive: {head}"
+    );
+
+    // two identical queries down the same socket return identical bytes
+    let body = "{\"name\": \"infer_tp_latency\"}";
+    send_request(&mut s, "POST", "/query?format=csv", body);
+    let (status, _, first) = read_framed(&mut s);
+    assert!(status.contains("200"), "first query: {status}");
+    assert!(!first.is_empty(), "query body must not be empty");
+    send_request(&mut s, "POST", "/query?format=csv", body);
+    let (status, _, second) = read_framed(&mut s);
+    assert!(status.contains("200"), "second query: {status}");
+    assert_eq!(first, second, "same query on one connection drifted");
+
+    // a well-framed bad request answers 400 but keeps the socket alive
+    send_request(&mut s, "POST", "/query", "not json");
+    let (status, _, _) = read_framed(&mut s);
+    assert!(status.contains("400"), "bad body: {status}");
+    send_request(&mut s, "GET", "/studies", "");
+    let (status, _, _) = read_framed(&mut s);
+    assert!(status.contains("200"), "connection died after a 400: {status}");
+
+    // Connection: close is honored: one last framed answer, then EOF
+    s.write_all(
+        b"GET /healthz HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\
+          Content-Length: 0\r\n\r\n",
+    )
+    .unwrap();
+    let (status, head, _) = read_framed(&mut s);
+    assert!(status.contains("200"), "final request: {status}");
+    assert!(
+        head.to_ascii_lowercase().contains("connection: close"),
+        "close was not advertised: {head}"
+    );
+    let mut rest = Vec::new();
+    s.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty(), "server wrote past Connection: close");
+
+    server.shutdown();
+}
+
+/// `GET /metrics` exposes request/query counters, uptime, and per-table
+/// cache counters in the text exposition format.
+#[test]
+fn metrics_route_reports_counters_in_text_exposition_format() {
+    let server = spawn_server();
+    let addr = server.addr();
+
+    let (status, _) = http(addr, "GET", "/healthz", "");
+    assert!(status.contains("200"));
+    let (status, _) = http(
+        addr,
+        "POST",
+        "/query?format=csv",
+        "{\"name\": \"infer_tp_latency\"}",
+    );
+    assert!(status.contains("200"));
+
+    let (status, body) = http(addr, "GET", "/metrics", "");
+    assert!(status.contains("200"), "metrics: {status}");
+    let text = String::from_utf8_lossy(&body).into_owned();
+    for needle in [
+        "# TYPE commscale_requests_total counter",
+        "commscale_queries_total 1",
+        "# TYPE commscale_uptime_seconds gauge",
+        "commscale_cache_hits_total{table=\"op\"}",
+        "commscale_cache_misses_total{table=\"point\"}",
+        "commscale_cache_entries{table=\"graph\"}",
+        "commscale_cache_evictions_total",
+    ] {
+        assert!(text.contains(needle), "metrics lacks {needle:?}:\n{text}");
+    }
+    // the healthz + query requests happened before the scrape
+    let served: u64 = text
+        .lines()
+        .find_map(|l| l.strip_prefix("commscale_requests_total "))
+        .expect("requests_total sample")
+        .trim()
+        .parse()
+        .expect("requests_total is an integer");
+    assert!(served >= 2, "requests_total {served} < 2");
 
     server.shutdown();
 }

@@ -309,6 +309,7 @@ fn pp_bubble_fraction_matches_closed_form_on_uniform_stages() {
             par: commscale::parallelism::ParallelismSpec::tp_dp(2, 1)
                 .with_pp(pp, mb),
             precision: commscale::model::Precision::F16,
+            workload: commscale::inference::Workload::Training,
         };
         cfg.validate().unwrap();
         let cost = AnalyticCost::from_spec(d.clone(), cfg.precision, cfg.par);
