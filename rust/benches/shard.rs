@@ -19,27 +19,45 @@ use commscale::util::stats::Summary;
 use commscale::util::Json;
 
 fn run_shard(spec_path: &Path, n: usize, csv: &Path) -> f64 {
+    shard_cmd("run", spec_path, n, csv, None).0
+}
+
+/// Time one `shard run`/`shard launch`; `fault` (a `COMMSCALE_FAULT`
+/// schedule) is set on this command alone so siblings stay clean.
+fn shard_cmd(
+    sub: &str,
+    spec_path: &Path,
+    n: usize,
+    csv: &Path,
+    fault: Option<&str>,
+) -> (f64, String) {
     let t0 = Instant::now();
-    let out = std::process::Command::new(env!("CARGO_BIN_EXE_commscale"))
-        .args([
-            "shard",
-            "run",
-            "-n",
-            &n.to_string(),
-            spec_path.to_str().unwrap(),
-            "--worker-threads",
-            "1",
-            "--csv",
-            csv.to_str().unwrap(),
-        ])
-        .output()
-        .expect("spawn commscale shard run");
+    let mut cmd = std::process::Command::new(env!("CARGO_BIN_EXE_commscale"));
+    cmd.args([
+        "shard",
+        sub,
+        "-n",
+        &n.to_string(),
+        spec_path.to_str().unwrap(),
+        "--worker-threads",
+        "1",
+        "--csv",
+        csv.to_str().unwrap(),
+    ]);
+    match fault {
+        Some(f) => cmd.env("COMMSCALE_FAULT", f),
+        None => cmd.env_remove("COMMSCALE_FAULT"),
+    };
+    let out = cmd.output().expect("spawn commscale shard");
     assert!(
         out.status.success(),
-        "shard run -n {n} failed:\n{}",
+        "shard {sub} -n {n} failed:\n{}",
         String::from_utf8_lossy(&out.stderr)
     );
-    t0.elapsed().as_secs_f64()
+    (
+        t0.elapsed().as_secs_f64(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
 }
 
 fn main() {
@@ -117,6 +135,61 @@ fn main() {
          {cores} cores, got {speedup:.2}x"
     );
 
+    // elastic launch under one injected fault: a ROW-level variant of the
+    // same grid (payloads stream, so an early kill wastes little work;
+    // the group study emits nothing until the shard finishes, which would
+    // bill the whole recompute to the retry). Small spec-level chunk so
+    // the faulted attempt dies after ~one flush.
+    let mut row_spec = spec.clone();
+    row_spec.name = "tp_pp_evolution_rows".into();
+    row_spec.group_by.clear();
+    row_spec.aggregate.clear();
+    row_spec.chunk = 128;
+    let row_path = dir.join("bench_spec_rows.json");
+    std::fs::write(
+        &row_path,
+        row_spec.to_json().to_string_pretty(2) + "\n",
+    )
+    .unwrap();
+
+    let row_csv = dir.join("rows_n4.csv");
+    let elastic_csv = dir.join("rows_elastic.csv");
+    let (row_secs, _) = shard_cmd("run", &row_path, 4, &row_csv, None);
+    let (elastic_secs, stderr) = shard_cmd(
+        "launch",
+        &row_path,
+        4,
+        &elastic_csv,
+        Some("shard:2:after_rows:2"),
+    );
+    assert!(
+        stderr.contains("attempt 1 failed"),
+        "the injected fault never fired:\n{stderr}"
+    );
+    let a = std::fs::read(&row_csv).unwrap();
+    let b = std::fs::read(&elastic_csv).unwrap();
+    assert!(!a.is_empty(), "empty CSV from the row-level shard run");
+    assert_eq!(
+        a, b,
+        "elastic launch with a retried shard produced different CSV bytes"
+    );
+    let overhead = elastic_secs / row_secs - 1.0;
+    println!(
+        "elastic (1 fault, 1 retry): {} vs fault-free {} \
+         (overhead {:+.1}%)",
+        fmt_time(elastic_secs),
+        fmt_time(row_secs),
+        100.0 * overhead,
+    );
+    if !relax {
+        assert!(
+            overhead <= 0.15,
+            "elastic launch with one retried shard must stay within 15% \
+             of a fault-free shard run, got {:+.1}%",
+            100.0 * overhead
+        );
+    }
+
     let res = BenchResult {
         name: "shard_scatter_gather_n4".into(),
         iters: 1,
@@ -134,6 +207,9 @@ fn main() {
             ("secs_n1", Json::num(n1_secs)),
             ("secs_n4", Json::num(n4_secs)),
             ("speedup_n4_vs_n1", Json::num(speedup)),
+            ("elastic_secs", Json::num(elastic_secs)),
+            ("elastic_baseline_secs", Json::num(row_secs)),
+            ("elastic_retry_overhead", Json::num(overhead)),
             ("quick", Json::Bool(quick)),
         ],
     )

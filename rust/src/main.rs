@@ -429,7 +429,11 @@ fn parse_memory_cap(args: &Args) -> Result<Option<f64>> {
 // ---------------------------------------------------------------------------
 
 const SHARD_USAGE: &str = "\
-usage: commscale shard <run|worker|plan|merge> ...
+usage: commscale shard <launch|run|worker|plan|merge> ...
+  shard launch -n N <spec|name> [--max-retries K] [--via local|ssh
+            --hosts h1,h2,...] [--stall-timeout SECS] [--optimize
+            [--memory-cap FRAC]] [--csv PATH] [--emit-spec PATH]
+            [--worker-threads T] [--chunk N]
   shard run -n N <spec|name> [--optimize [--memory-cap FRAC]] [--csv PATH]
             [--emit-spec PATH] [--worker-threads T] [--keep-dir DIR]
   shard worker --shard k/n <spec|name> [--optimize [--memory-cap FRAC]]
@@ -471,6 +475,7 @@ fn shard_cmd(args: &Args, device: &DeviceSpec) -> Result<()> {
         );
     }
     match args.positional.get(1).map(String::as_str) {
+        Some("launch") => shard_launch(args, device),
         Some("run") => shard_run(args, device),
         Some("worker") => shard_worker(args, device),
         Some("plan") => shard_plan(args),
@@ -553,30 +558,39 @@ fn shard_worker(args: &Args, device: &DeviceSpec) -> Result<()> {
     };
     let memory_cap = parse_memory_cap(args)?;
     let out_path = args.get_or("out", "-");
-    let summary = if out_path == "-" {
-        let stdout = std::io::stdout();
-        let mut out = std::io::BufWriter::new(stdout.lock());
-        shard::run_worker_capped(
-            &resolved,
-            id,
-            args.has("optimize"),
-            opts,
-            memory_cap,
-            &mut out,
-        )?
+    let mut out: Box<dyn std::io::Write> = if out_path == "-" {
+        Box::new(std::io::BufWriter::new(std::io::stdout().lock()))
     } else {
-        let mut out = std::io::BufWriter::new(
+        Box::new(std::io::BufWriter::new(
             std::fs::File::create(out_path)
                 .with_context(|| format!("cannot create {out_path:?}"))?,
-        );
-        shard::run_worker_capped(
+        ))
+    };
+    // deterministic fault injection (tests/CI chaos): COMMSCALE_FAULT
+    // arms a kill/truncate/hang at an exact line of this shard's payload
+    let fault = shard::FaultSpec::from_env()?
+        .and_then(|f| f.armed_point(id.k, shard::elastic::env_attempt()));
+    let summary = match fault {
+        Some(point) => {
+            eprintln!("COMMSCALE_FAULT armed for shard {id}: {point:?}");
+            let mut out = shard::FaultWriter::new(out, point);
+            shard::run_worker_capped(
+                &resolved,
+                id,
+                args.has("optimize"),
+                opts,
+                memory_cap,
+                &mut out,
+            )?
+        }
+        None => shard::run_worker_capped(
             &resolved,
             id,
             args.has("optimize"),
             opts,
             memory_cap,
             &mut out,
-        )?
+        )?,
     };
     eprintln!(
         "shard {id} of {:?}: units [{}, {}) of {}, {} points evaluated, {} \
@@ -587,6 +601,93 @@ fn shard_worker(args: &Args, device: &DeviceSpec) -> Result<()> {
         summary.units,
         summary.footer.points_evaluated,
         summary.footer.rows_matched,
+    );
+    Ok(())
+}
+
+/// `commscale shard launch -n N <spec>` — the supervised elastic
+/// scatter/gather: spawn workers with payloads piped straight into the
+/// streaming merge (no temp files; merging starts while slow shards
+/// still run), detect dead/truncated/hung shards, and re-execute each
+/// failed shard up to `--max-retries` times. The merged output is
+/// byte-identical to `commscale study`/`optimize` on the same spec.
+fn shard_launch(args: &Args, device: &DeviceSpec) -> Result<()> {
+    let (n, rest) = shard_n_and_rest(args)?;
+    let n = n.context("shard launch needs -n N (the shard count)")?;
+    shard::ShardId::new(0, n)?;
+    parse_memory_cap(args)?; // fail fast, before any worker spawns
+    let target = rest.first().context("shard launch needs a spec or name")?;
+    let mut spec = load_spec(target)?;
+    apply_fidelity(args, &mut spec)?;
+    let resolved = spec.resolve(device)?;
+    eprint!("{}", resolved.explain());
+
+    let via = shard::Via::parse(args.get_or("via", "local"), args.get("hosts"))?;
+    let cfg = shard::LaunchConfig {
+        n,
+        max_retries: args.get_usize("max-retries", 2),
+        stall_timeout_secs: args.get_f64("stall-timeout", 0.0),
+        via,
+        target: target.clone(),
+        device: args.get_or("device", "mi210").to_string(),
+        optimize: args.has("optimize"),
+        fidelity: args.get("fidelity").map(str::to_string),
+        memory_cap: args.get("memory-cap").map(str::to_string),
+        worker_threads: args.get_usize("worker-threads", 0),
+        chunk: args.get_usize("chunk", 0),
+    };
+
+    if cfg.optimize {
+        let (merged, summary) = shard::launch_optimize(&resolved, &cfg)?;
+        render_search_output(
+            &format!(
+                "elastic optimize {} ({} groups)",
+                spec.name, merged.groups
+            ),
+            &spec,
+            &merged.columns,
+            &merged.rows,
+            csv(args),
+            args.get("emit-spec"),
+        )?;
+        eprintln!(
+            "elastic optimize {:?}: {} groups; evaluated {} of {} candidates \
+             ({:.1}% pruned{}); {}",
+            spec.name,
+            merged.groups,
+            merged.evaluated,
+            merged.candidates,
+            100.0 * merged.pruned_fraction(),
+            if merged.infeasible > 0 {
+                format!(", {} memory-infeasible", merged.infeasible)
+            } else {
+                String::new()
+            },
+            summary.render(),
+        );
+        return Ok(());
+    }
+
+    let mut sinks = study::build_sinks(&spec, csv(args));
+    let (outcome, summary) = {
+        let mut refs: Vec<&mut dyn RowSink> =
+            sinks.iter_mut().map(|b| &mut **b).collect();
+        shard::launch_study(&resolved, &cfg, &mut refs)?
+    };
+    for r in &outcome.renders {
+        print!("{r}");
+    }
+    eprintln!(
+        "elastic study {:?}: {} points evaluated, {} rows matched{}; {}",
+        spec.name,
+        outcome.points_evaluated,
+        outcome.rows_matched,
+        if outcome.groups_emitted > 0 {
+            format!(", {} groups emitted", outcome.groups_emitted)
+        } else {
+            String::new()
+        },
+        summary.render(),
     );
     Ok(())
 }
@@ -871,6 +972,25 @@ resident query service (cross-run cache reuse; DESIGN.md §14):
 
 sharded scatter/gather (split one study/search across processes or hosts;
 merged output is bit-identical to single-process execution):
+  shard launch -n N <spec|name>   the elastic path: a supervising
+                         coordinator pipes worker payloads straight into
+                         the streaming merge (no temp files; merging
+                         overlaps slow shards) and re-executes any shard
+                         that dies, truncates, or hangs — the identical
+                         range replays deterministically, so the merged
+                         bytes never change (DESIGN.md §16)
+    --max-retries K      re-executions allowed per shard (default 2);
+                         exhausted budgets fail loudly, naming the shard
+    --via local|ssh      worker transport (default local); with ssh,
+                         --hosts h1,h2,... runs shard k on host k%len
+                         (same binary + spec path needed on each host)
+    --stall-timeout SECS kill attempts with no payload progress for SECS
+                         (default off; group/optimize payloads emit only
+                         at the end, so size it to the full shard time)
+    (--optimize/--memory-cap/--fidelity/--csv/--emit-spec/--worker-threads
+     as in shard run; COMMSCALE_FAULT=shard:K:<before_write|after_rows:N|
+     no_footer|hang>[:attempts:A] injects deterministic worker faults for
+     tests and chaos drills)
   shard run -n N <spec|name>   partition into N shards, run them as local
                          worker processes, merge through the spec's sinks
     --optimize           shard the `commscale optimize` search by group

@@ -1,0 +1,1111 @@
+//! Elastic shard supervision: run every shard of a study under a
+//! per-shard supervisor that streams the worker's payload into the merge
+//! as it is produced, detects dead / truncated / hung attempts, and
+//! transparently re-executes the identical shard range until the payload
+//! completes or the retry budget runs out.
+//!
+//! Safe retry rests on the determinism contract from DESIGN.md §12: a
+//! shard payload is a pure function of `(spec, device, k, n)`, so
+//! re-running the same range reproduces the same bytes. The supervisor
+//! exploits that in both directions:
+//!
+//! * lines already released into the merge are fingerprinted
+//!   ([`line_fingerprint`], FNV-1a); a retry **replays** its stream and
+//!   every replayed line must match the recorded fingerprint before new
+//!   lines are released. The merge therefore sees each line exactly once,
+//!   in order, and the merged output is byte-identical to a clean run.
+//! * if a replayed line diverges, the premise is broken (spec/binary
+//!   skew, a nondeterministic worker) and retrying would corrupt the
+//!   merge — the supervisor fails the shard immediately with a
+//!   determinism error instead.
+//!
+//! Failure detection is structural, not timing-based: a payload is
+//! complete iff its `{"end": …}` footer arrived (PR 5's truncation
+//! sentinel), so a worker that dies, is killed, or exits early is caught
+//! by EOF-without-footer regardless of timing. The only clock in the
+//! module is the optional stall watchdog ([`ElasticOptions::
+//! stall_timeout`]) for workers that neither progress nor exit.
+//!
+//! The module is backend-agnostic: [`ShardBackend`] starts attempts and
+//! [`AttemptStream`] yields their payload lines. [`super::launch`]
+//! implements the process backend behind `commscale shard launch`;
+//! [`BufferBackend`] here replays pre-computed payloads in-process and,
+//! together with [`FaultSpec`] / [`FaultWriter`] (the
+//! `COMMSCALE_FAULT` knob), forms the deterministic fault-injection
+//! harness the tests and CI chaos smoke drive — every failure mode is
+//! reproducible without racing real clocks.
+
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::study::spec::ResolvedStudy;
+use crate::study::{RowSink, RunOptions, StudyOutcome};
+use crate::{Error, Result};
+
+use super::merge::{merge_optimize, merge_study, MergedOptimize, ShardInput};
+use super::payload::{self, LineClass};
+use super::ShardId;
+
+/// How long a supervisor waits in one [`AttemptStream::pull`] before
+/// re-checking the abandonment flag and the stall watchdog.
+const POLL: Duration = Duration::from_millis(50);
+
+// ---------------------------------------------------------------------------
+// deterministic fault injection (COMMSCALE_FAULT)
+// ---------------------------------------------------------------------------
+
+/// Where an injected fault strikes in a worker's payload stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultPoint {
+    /// Die (exit 9) before the first payload byte — not even the header.
+    BeforeWrite,
+    /// Die (exit 9) right after the N-th body line is flushed.
+    AfterRows(usize),
+    /// Exit 0 with the footer suppressed — a clean-looking truncation.
+    NoFooter,
+    /// Flush everything up to the footer, then sleep forever (the stall
+    /// watchdog's prey).
+    Hang,
+}
+
+/// A parsed `COMMSCALE_FAULT` schedule:
+/// `shard:<k>:<point>[:attempts:<a>]` with `<point>` one of
+/// `before_write`, `no_footer`, `hang`, or `after_rows:<n>`. The fault
+/// arms on shard `<k>` for attempt numbers `<= a` (default 1, so the
+/// first retry already succeeds).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultSpec {
+    pub shard: usize,
+    pub point: FaultPoint,
+    /// Highest attempt number the fault still strikes.
+    pub attempts: usize,
+}
+
+impl FaultSpec {
+    pub fn parse(text: &str) -> Result<FaultSpec> {
+        let bad = |detail: &str| {
+            Error::Study(format!(
+                "COMMSCALE_FAULT={text:?}: {detail}; the grammar is \
+                 shard:<k>:<before_write|no_footer|hang|after_rows:<n>>\
+                 [:attempts:<a>]"
+            ))
+        };
+        let toks: Vec<&str> = text.split(':').collect();
+        if toks.len() < 3 || toks[0] != "shard" {
+            return Err(bad("expected at least shard:<k>:<point>"));
+        }
+        let shard: usize =
+            toks[1].parse().map_err(|_| bad("<k> must be an integer"))?;
+        let (point, used) = match toks[2] {
+            "before_write" => (FaultPoint::BeforeWrite, 3),
+            "no_footer" => (FaultPoint::NoFooter, 3),
+            "hang" => (FaultPoint::Hang, 3),
+            "after_rows" => {
+                let n = toks
+                    .get(3)
+                    .ok_or_else(|| bad("after_rows needs a count"))?
+                    .parse()
+                    .map_err(|_| bad("after_rows count must be an integer"))?;
+                (FaultPoint::AfterRows(n), 4)
+            }
+            other => {
+                return Err(bad(&format!("unknown fault point {other:?}")));
+            }
+        };
+        let mut attempts = 1usize;
+        let mut i = used;
+        while i < toks.len() {
+            match toks[i] {
+                "attempts" => {
+                    attempts = toks
+                        .get(i + 1)
+                        .ok_or_else(|| bad("attempts needs a number"))?
+                        .parse()
+                        .map_err(|_| bad("attempts must be an integer"))?;
+                    i += 2;
+                }
+                other => {
+                    return Err(bad(&format!("unknown modifier {other:?}")));
+                }
+            }
+        }
+        Ok(FaultSpec { shard, point, attempts })
+    }
+
+    /// Read and parse `COMMSCALE_FAULT` (None when unset/empty).
+    pub fn from_env() -> Result<Option<FaultSpec>> {
+        match std::env::var("COMMSCALE_FAULT") {
+            Ok(s) if !s.is_empty() => Self::parse(&s).map(Some),
+            _ => Ok(None),
+        }
+    }
+
+    /// The fault point to inject for `(shard, attempt)`, if armed.
+    pub fn armed_point(
+        &self,
+        shard: usize,
+        attempt: usize,
+    ) -> Option<FaultPoint> {
+        if self.shard == shard && attempt <= self.attempts {
+            Some(self.point)
+        } else {
+            None
+        }
+    }
+}
+
+/// The attempt number the launcher exports to its workers
+/// (`COMMSCALE_SHARD_ATTEMPT`); a worker run by hand is attempt 1.
+pub fn env_attempt() -> usize {
+    std::env::var("COMMSCALE_SHARD_ATTEMPT")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1)
+}
+
+/// A [`Write`] wrapper the worker CLI installs around its payload output
+/// when a `COMMSCALE_FAULT` is armed for this shard + attempt. It
+/// forwards bytes untouched and strikes at exactly the scheduled line
+/// boundary, so injected failures are bit-reproducible.
+pub struct FaultWriter<W: Write> {
+    inner: W,
+    point: FaultPoint,
+    line: Vec<u8>,
+    body_seen: usize,
+}
+
+impl<W: Write> FaultWriter<W> {
+    pub fn new(inner: W, point: FaultPoint) -> FaultWriter<W> {
+        FaultWriter { inner, point, line: Vec::new(), body_seen: 0 }
+    }
+
+    fn finish_line(&mut self) -> std::io::Result<()> {
+        let class = payload::line_class(&self.line);
+        match (self.point, class) {
+            (FaultPoint::NoFooter, LineClass::Footer) => {
+                self.inner.flush()?;
+                eprintln!(
+                    "injected fault: suppressing the end marker and exiting"
+                );
+                std::process::exit(0);
+            }
+            (FaultPoint::Hang, LineClass::Footer) => {
+                self.inner.flush()?;
+                eprintln!("injected fault: hanging before the end marker");
+                loop {
+                    std::thread::sleep(Duration::from_secs(3600));
+                }
+            }
+            _ => {}
+        }
+        self.inner.write_all(&self.line)?;
+        self.inner.write_all(b"\n")?;
+        if class == LineClass::Body {
+            self.body_seen += 1;
+            if let FaultPoint::AfterRows(n) = self.point {
+                if self.body_seen >= n {
+                    self.inner.flush()?;
+                    eprintln!("injected fault: dying after {n} body line(s)");
+                    std::process::exit(9);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<W: Write> Write for FaultWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        if self.point == FaultPoint::BeforeWrite {
+            eprintln!("injected fault: dying before the first payload write");
+            std::process::exit(9);
+        }
+        for &b in buf {
+            if b == b'\n' {
+                self.finish_line()?;
+                self.line.clear();
+            } else {
+                self.line.push(b);
+            }
+        }
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// backends: how attempts start and stream
+// ---------------------------------------------------------------------------
+
+/// One poll of an attempt's payload stream.
+pub enum Pull {
+    /// A complete payload line (newline stripped).
+    Line(String),
+    /// The stream ended — the attempt wrote everything it ever will.
+    Eof,
+    /// Nothing yet; the wait elapsed.
+    Pending,
+    /// The stream broke mid-flight (pipe error).
+    Lost(String),
+}
+
+/// A single running attempt of one shard.
+pub trait AttemptStream: Send {
+    /// Wait up to `wait` for the next payload line.
+    fn pull(&mut self, wait: Duration) -> Pull;
+
+    /// Reap the attempt. `kill` forces termination first (hung or
+    /// abandoned attempts). `Ok(())` means the worker exited cleanly.
+    fn finish(&mut self, kill: bool) -> std::result::Result<(), String>;
+}
+
+/// Starts shard attempts. [`super::launch::launch_study`] spawns real
+/// `shard worker` processes; [`BufferBackend`] replays pre-computed
+/// payloads for deterministic in-process tests.
+pub trait ShardBackend: Sync {
+    fn start(&self, k: usize, attempt: usize) -> Result<Box<dyn AttemptStream>>;
+}
+
+// ---------------------------------------------------------------------------
+// the feed: supervisor -> merge byte pipe
+// ---------------------------------------------------------------------------
+
+enum FeedDone {
+    Open,
+    Clean,
+    Failed(String),
+}
+
+struct FeedState {
+    buf: VecDeque<u8>,
+    done: FeedDone,
+    /// The merge dropped its reader (it errored elsewhere); the
+    /// supervisor should stop streaming and kill its attempt.
+    abandoned: bool,
+}
+
+struct FeedShared {
+    state: Mutex<FeedState>,
+    cv: Condvar,
+}
+
+impl FeedShared {
+    fn new() -> FeedShared {
+        FeedShared {
+            state: Mutex::new(FeedState {
+                buf: VecDeque::new(),
+                done: FeedDone::Open,
+                abandoned: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+}
+
+struct FeedWriter {
+    shared: Arc<FeedShared>,
+    closed: bool,
+}
+
+impl FeedWriter {
+    fn abandoned(&self) -> bool {
+        self.shared.state.lock().unwrap().abandoned
+    }
+
+    fn push(&self, line: &str) {
+        let mut st = self.shared.state.lock().unwrap();
+        if st.abandoned || !matches!(st.done, FeedDone::Open) {
+            return;
+        }
+        st.buf.extend(line.as_bytes());
+        st.buf.push_back(b'\n');
+        self.shared.cv.notify_all();
+    }
+
+    fn close_ok(&mut self) {
+        self.close(FeedDone::Clean);
+    }
+
+    fn close_err(&mut self, msg: &str) {
+        self.close(FeedDone::Failed(msg.to_string()));
+    }
+
+    fn close(&mut self, done: FeedDone) {
+        self.closed = true;
+        let mut st = self.shared.state.lock().unwrap();
+        if matches!(st.done, FeedDone::Open) {
+            st.done = done;
+        }
+        self.shared.cv.notify_all();
+    }
+}
+
+impl Drop for FeedWriter {
+    fn drop(&mut self) {
+        if !self.closed {
+            self.close(FeedDone::Failed(
+                "shard supervisor exited without closing its stream".into(),
+            ));
+        }
+    }
+}
+
+struct FeedReader {
+    shared: Arc<FeedShared>,
+}
+
+impl Read for FeedReader {
+    fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+        if out.is_empty() {
+            return Ok(0);
+        }
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            if !st.buf.is_empty() {
+                let (a, b) = st.buf.as_slices();
+                let n1 = a.len().min(out.len());
+                out[..n1].copy_from_slice(&a[..n1]);
+                let mut n = n1;
+                if n < out.len() && !b.is_empty() {
+                    let n2 = b.len().min(out.len() - n);
+                    out[n..n + n2].copy_from_slice(&b[..n2]);
+                    n += n2;
+                }
+                st.buf.drain(..n);
+                return Ok(n);
+            }
+            match &st.done {
+                FeedDone::Clean => return Ok(0),
+                FeedDone::Failed(msg) => {
+                    return Err(std::io::Error::other(msg.clone()));
+                }
+                FeedDone::Open => st = self.shared.cv.wait(st).unwrap(),
+            }
+        }
+    }
+}
+
+impl Drop for FeedReader {
+    fn drop(&mut self) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.abandoned = true;
+        self.shared.cv.notify_all();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the supervisor
+// ---------------------------------------------------------------------------
+
+/// FNV-1a over one payload line — the per-line fingerprint the
+/// supervisor records for released lines and verifies during replay.
+pub fn line_fingerprint(line: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in line.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Knobs of one elastic run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ElasticOptions {
+    /// Re-executions allowed per shard beyond the first attempt.
+    pub max_retries: usize,
+    /// Kill an attempt whose payload makes no byte progress for this
+    /// long (`None` = wait forever). Byte progress, not compute
+    /// progress: group/optimize shards legitimately emit nothing until
+    /// the whole range is done, so size this to the full shard runtime
+    /// — or leave it off and rely on exit/footer detection.
+    pub stall_timeout: Option<Duration>,
+}
+
+/// What an elastic run did, per shard.
+#[derive(Debug, Clone)]
+pub struct ElasticSummary {
+    /// Attempts used per shard (1 = clean first run).
+    pub attempts: Vec<usize>,
+}
+
+impl ElasticSummary {
+    /// Total re-executions across all shards.
+    pub fn retries(&self) -> usize {
+        self.attempts.iter().map(|a| a - 1).sum()
+    }
+
+    pub fn render(&self) -> String {
+        let retries = self.retries();
+        if retries == 0 {
+            format!("{} shards, no retries", self.attempts.len())
+        } else {
+            let retried = self.attempts.iter().filter(|&&a| a > 1).count();
+            format!(
+                "{} shards, {retried} retried ({retries} extra attempt(s))",
+                self.attempts.len()
+            )
+        }
+    }
+}
+
+struct ShardStat {
+    attempts: usize,
+    /// The terminal failure (None while the shard completed or the run
+    /// was abandoned by the merge side).
+    failure: Option<String>,
+}
+
+enum AttemptOutcome {
+    /// Footer released — the shard is complete.
+    Done,
+    /// The merge dropped its reader; stop without declaring failure.
+    Abandoned,
+    /// This attempt failed; re-execution is safe.
+    Retry(String),
+    /// Retrying cannot help (determinism violation) — fail the shard now.
+    Fatal(String),
+}
+
+fn run_attempt(
+    k: usize,
+    n: usize,
+    attempt: usize,
+    stream: &mut dyn AttemptStream,
+    feed: &FeedWriter,
+    released: &mut Vec<u64>,
+    opts: &ElasticOptions,
+) -> AttemptOutcome {
+    let mut pos = 0usize;
+    let mut last_progress = Instant::now();
+    loop {
+        if feed.abandoned() {
+            let _ = stream.finish(true);
+            return AttemptOutcome::Abandoned;
+        }
+        match stream.pull(POLL) {
+            Pull::Line(line) => {
+                last_progress = Instant::now();
+                if pos < released.len() {
+                    // replayed prefix: every line must reproduce the
+                    // bytes the merge already consumed
+                    if line_fingerprint(&line) != released[pos] {
+                        let _ = stream.finish(true);
+                        return AttemptOutcome::Fatal(format!(
+                            "shard {k}/{n}: retry attempt {attempt} diverged \
+                             from the already-merged stream at payload line \
+                             {} — the worker is not deterministic (spec or \
+                             binary skew between attempts?), so a safe retry \
+                             is impossible",
+                            pos + 1
+                        ));
+                    }
+                    pos += 1;
+                    continue;
+                }
+                let class = payload::line_class(line.as_bytes());
+                feed.push(&line);
+                if class == LineClass::Footer {
+                    // complete payload; the exit status no longer matters
+                    let _ = stream.finish(false);
+                    return AttemptOutcome::Done;
+                }
+                released.push(line_fingerprint(&line));
+                pos += 1;
+            }
+            Pull::Eof => {
+                return AttemptOutcome::Retry(match stream.finish(false) {
+                    Ok(()) => format!(
+                        "worker exited cleanly but its payload is truncated \
+                         ({pos} line(s), no end marker)"
+                    ),
+                    Err(e) => {
+                        format!("worker died after {pos} payload line(s): {e}")
+                    }
+                });
+            }
+            Pull::Pending => {
+                if let Some(t) = opts.stall_timeout {
+                    if last_progress.elapsed() >= t {
+                        let _ = stream.finish(true);
+                        return AttemptOutcome::Retry(format!(
+                            "worker hung (no payload progress in {:.1}s); \
+                             killed",
+                            t.as_secs_f64()
+                        ));
+                    }
+                }
+            }
+            Pull::Lost(e) => {
+                let _ = stream.finish(true);
+                return AttemptOutcome::Retry(format!(
+                    "payload stream lost: {e}"
+                ));
+            }
+        }
+    }
+}
+
+/// Supervise one shard: attempt, verify/stream, retry. Runs on its own
+/// thread; the feed carries released lines to the merge.
+fn supervise(
+    k: usize,
+    n: usize,
+    backend: &dyn ShardBackend,
+    mut feed: FeedWriter,
+    opts: &ElasticOptions,
+) -> ShardStat {
+    let mut released: Vec<u64> = Vec::new();
+    let mut last_failure = String::from("worker never started");
+    let max_attempts = opts.max_retries + 1;
+    for attempt in 1..=max_attempts {
+        let failure = match backend.start(k, attempt) {
+            Err(e) => format!("worker spawn failed: {e}"),
+            Ok(mut stream) => match run_attempt(
+                k,
+                n,
+                attempt,
+                stream.as_mut(),
+                &feed,
+                &mut released,
+                opts,
+            ) {
+                AttemptOutcome::Done => {
+                    feed.close_ok();
+                    return ShardStat { attempts: attempt, failure: None };
+                }
+                AttemptOutcome::Abandoned => {
+                    return ShardStat { attempts: attempt, failure: None };
+                }
+                AttemptOutcome::Fatal(msg) => {
+                    feed.close_err(&msg);
+                    return ShardStat {
+                        attempts: attempt,
+                        failure: Some(msg),
+                    };
+                }
+                AttemptOutcome::Retry(msg) => msg,
+            },
+        };
+        last_failure = format!("attempt {attempt}: {failure}");
+        if attempt < max_attempts {
+            eprintln!(
+                "elastic: shard {k}/{n} attempt {attempt} failed ({failure}); \
+                 retrying"
+            );
+        }
+    }
+    let msg = format!(
+        "shard {k}/{n} failed permanently after {max_attempts} attempt(s) \
+         (--max-retries {}): {last_failure}; the merged output would be \
+         incomplete",
+        opts.max_retries
+    );
+    feed.close_err(&msg);
+    ShardStat { attempts: max_attempts, failure: Some(msg) }
+}
+
+/// Run `n` supervised shards against `backend` and hand their streaming
+/// payloads to `consume` (the merge) while they execute. Returns
+/// `consume`'s result plus the per-shard attempt counts; a shard that
+/// exhausts its retry budget fails the whole run with its supervisor's
+/// loud, shard-identifying error.
+pub fn run_elastic<T>(
+    n: usize,
+    opts: &ElasticOptions,
+    backend: &dyn ShardBackend,
+    consume: impl FnOnce(Vec<ShardInput>) -> Result<T>,
+) -> Result<(T, ElasticSummary)> {
+    ShardId::new(0, n)?; // validates n >= 1 with the canonical error
+    let feeds: Vec<Arc<FeedShared>> =
+        (0..n).map(|_| Arc::new(FeedShared::new())).collect();
+    let (result, stats) = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(n);
+        for (k, feed) in feeds.iter().enumerate() {
+            let writer = FeedWriter { shared: feed.clone(), closed: false };
+            handles
+                .push(scope.spawn(move || supervise(k, n, backend, writer, opts)));
+        }
+        let inputs: Vec<ShardInput> = feeds
+            .iter()
+            .map(|feed| {
+                Box::new(std::io::BufReader::new(FeedReader {
+                    shared: feed.clone(),
+                }))
+            })
+            .enumerate()
+            .map(|(k, reader)| {
+                ShardInput::new(&format!("elastic worker {k}/{n}"), reader)
+            })
+            .collect();
+        let result = consume(inputs);
+        let stats: Vec<ShardStat> = handles
+            .into_iter()
+            .map(|h| h.join().expect("elastic supervisor panicked"))
+            .collect();
+        (result, stats)
+    });
+    let summary =
+        ElasticSummary { attempts: stats.iter().map(|s| s.attempts).collect() };
+    let failures: Vec<String> =
+        stats.into_iter().filter_map(|s| s.failure).collect();
+    if !failures.is_empty() {
+        // a supervisor's terminal error beats the merge's derived one
+        // (the merge only sees its side of a broken feed)
+        return Err(Error::Study(failures.join("; ")));
+    }
+    Ok((result?, summary))
+}
+
+/// Elastic scatter/gather of a study (rows or group-by): byte-identical
+/// to single-process [`crate::study::run_study`] through the same sinks.
+pub fn run_elastic_study(
+    resolved: &ResolvedStudy,
+    n: usize,
+    opts: &ElasticOptions,
+    backend: &dyn ShardBackend,
+    sinks: &mut [&mut dyn RowSink],
+) -> Result<(StudyOutcome, ElasticSummary)> {
+    run_elastic(n, opts, backend, |inputs| {
+        merge_study(resolved, inputs, sinks)
+    })
+}
+
+/// Elastic scatter/gather of an optimizer search: byte-identical to
+/// single-process [`crate::optimizer::optimize_study`].
+pub fn run_elastic_optimize(
+    resolved: &ResolvedStudy,
+    n: usize,
+    opts: &ElasticOptions,
+    backend: &dyn ShardBackend,
+) -> Result<(MergedOptimize, ElasticSummary)> {
+    run_elastic(n, opts, backend, |inputs| merge_optimize(resolved, inputs))
+}
+
+// ---------------------------------------------------------------------------
+// in-process test backend
+// ---------------------------------------------------------------------------
+
+/// A [`ShardBackend`] that pre-computes every shard's payload with
+/// [`super::run_worker`] and replays it line-by-line, optionally
+/// truncated by an armed [`FaultSpec`] with exactly the semantics of
+/// [`FaultWriter`]. This is the deterministic in-process fault-injection
+/// harness: no processes, no clocks, no races.
+pub struct BufferBackend {
+    payloads: Vec<Vec<u8>>,
+    fault: Option<FaultSpec>,
+}
+
+impl BufferBackend {
+    pub fn from_study(
+        resolved: &ResolvedStudy,
+        n: usize,
+        optimize: bool,
+        opts: RunOptions,
+        fault: Option<FaultSpec>,
+    ) -> Result<BufferBackend> {
+        let mut payloads = Vec::with_capacity(n);
+        for k in 0..n {
+            let mut buf = Vec::new();
+            super::run_worker(
+                resolved,
+                ShardId::new(k, n)?,
+                optimize,
+                opts,
+                &mut buf,
+            )?;
+            payloads.push(buf);
+        }
+        Ok(BufferBackend { payloads, fault })
+    }
+}
+
+impl ShardBackend for BufferBackend {
+    fn start(&self, k: usize, attempt: usize) -> Result<Box<dyn AttemptStream>> {
+        let full = &self.payloads[k];
+        match self.fault.as_ref().and_then(|f| f.armed_point(k, attempt)) {
+            None => Ok(Box::new(BufferAttempt::complete(full))),
+            Some(point) => Ok(Box::new(BufferAttempt::faulted(full, point))),
+        }
+    }
+}
+
+/// One replayed attempt of a [`BufferBackend`] shard.
+pub struct BufferAttempt {
+    lines: VecDeque<String>,
+    exit: std::result::Result<(), String>,
+    hang: bool,
+}
+
+impl BufferAttempt {
+    fn split(bytes: &[u8]) -> Vec<String> {
+        String::from_utf8_lossy(bytes).lines().map(str::to_string).collect()
+    }
+
+    pub fn complete(payload: &[u8]) -> BufferAttempt {
+        BufferAttempt {
+            lines: Self::split(payload).into(),
+            exit: Ok(()),
+            hang: false,
+        }
+    }
+
+    pub fn faulted(payload: &[u8], point: FaultPoint) -> BufferAttempt {
+        let all = Self::split(payload);
+        let mut kept = Vec::new();
+        let mut exit: std::result::Result<(), String> = Ok(());
+        let mut hang = false;
+        match point {
+            FaultPoint::BeforeWrite => {
+                exit = Err(
+                    "killed before the first payload write (injected fault)"
+                        .into(),
+                );
+            }
+            FaultPoint::AfterRows(n) => {
+                let mut body = 0usize;
+                for line in &all {
+                    kept.push(line.clone());
+                    if payload::line_class(line.as_bytes()) == LineClass::Body
+                    {
+                        body += 1;
+                        if body >= n {
+                            exit = Err(format!(
+                                "killed after {n} body line(s) (injected \
+                                 fault)"
+                            ));
+                            break;
+                        }
+                    }
+                }
+                // a shard with fewer body lines than n never faults
+            }
+            FaultPoint::NoFooter => {
+                kept = all
+                    .into_iter()
+                    .filter(|l| {
+                        payload::line_class(l.as_bytes()) != LineClass::Footer
+                    })
+                    .collect();
+            }
+            FaultPoint::Hang => {
+                kept = all
+                    .into_iter()
+                    .filter(|l| {
+                        payload::line_class(l.as_bytes()) != LineClass::Footer
+                    })
+                    .collect();
+                hang = true;
+            }
+        }
+        BufferAttempt { lines: kept.into(), exit, hang }
+    }
+}
+
+impl AttemptStream for BufferAttempt {
+    fn pull(&mut self, wait: Duration) -> Pull {
+        match self.lines.pop_front() {
+            Some(l) => Pull::Line(l),
+            None if self.hang => {
+                std::thread::sleep(wait);
+                Pull::Pending
+            }
+            None => Pull::Eof,
+        }
+    }
+
+    fn finish(&mut self, kill: bool) -> std::result::Result<(), String> {
+        if kill {
+            return Err("killed by the supervisor".into());
+        }
+        self.exit.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::catalog;
+    use crate::study::{StudySpec, Value, VecSink};
+
+    fn tiny() -> ResolvedStudy {
+        StudySpec::parse(
+            r#"{"name":"tiny","axes":{"hidden":[1024],"tp":[1,2,4,8]}}"#,
+        )
+        .unwrap()
+        .resolve(&catalog::mi210())
+        .unwrap()
+    }
+
+    fn assert_rows_identical(a: &VecSink, b: &VecSink) {
+        assert_eq!(a.columns, b.columns);
+        assert_eq!(a.rows.len(), b.rows.len());
+        for (x, y) in a.rows.iter().zip(&b.rows) {
+            for (u, v) in x.iter().zip(y) {
+                match (u, v) {
+                    (Value::Num(p), Value::Num(q)) => {
+                        assert_eq!(p.to_bits(), q.to_bits())
+                    }
+                    _ => assert_eq!(u, v),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fault_grammar_parses_and_rejects() {
+        let f = FaultSpec::parse("shard:2:after_rows:100").unwrap();
+        assert_eq!(
+            f,
+            FaultSpec {
+                shard: 2,
+                point: FaultPoint::AfterRows(100),
+                attempts: 1
+            }
+        );
+        let f = FaultSpec::parse("shard:0:before_write:attempts:3").unwrap();
+        assert_eq!(
+            f,
+            FaultSpec { shard: 0, point: FaultPoint::BeforeWrite, attempts: 3 }
+        );
+        assert_eq!(
+            FaultSpec::parse("shard:1:no_footer").unwrap().point,
+            FaultPoint::NoFooter
+        );
+        assert_eq!(
+            FaultSpec::parse("shard:1:hang").unwrap().point,
+            FaultPoint::Hang
+        );
+        for bad in [
+            "",
+            "shard",
+            "shard:1",
+            "worker:1:hang",
+            "shard:x:hang",
+            "shard:1:explode",
+            "shard:1:after_rows",
+            "shard:1:after_rows:x",
+            "shard:1:hang:attempts",
+            "shard:1:hang:attempts:x",
+            "shard:1:hang:banana:2",
+        ] {
+            let err = FaultSpec::parse(bad).unwrap_err().to_string();
+            assert!(err.contains("grammar"), "{bad:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn fault_arming_is_shard_and_attempt_scoped() {
+        let f = FaultSpec::parse("shard:1:no_footer:attempts:2").unwrap();
+        assert_eq!(f.armed_point(1, 1), Some(FaultPoint::NoFooter));
+        assert_eq!(f.armed_point(1, 2), Some(FaultPoint::NoFooter));
+        assert_eq!(f.armed_point(1, 3), None);
+        assert_eq!(f.armed_point(0, 1), None);
+    }
+
+    #[test]
+    fn feed_streams_and_propagates_close() {
+        use std::io::BufRead;
+        let shared = Arc::new(FeedShared::new());
+        let mut w = FeedWriter { shared: shared.clone(), closed: false };
+        w.push("alpha");
+        w.push("beta");
+        w.close_ok();
+        let mut r = std::io::BufReader::new(FeedReader { shared });
+        let mut text = String::new();
+        r.read_to_string(&mut text).unwrap();
+        assert_eq!(text, "alpha\nbeta\n");
+
+        let shared = Arc::new(FeedShared::new());
+        let mut w = FeedWriter { shared: shared.clone(), closed: false };
+        w.push("alpha");
+        w.close_err("boom");
+        let mut r = std::io::BufReader::new(FeedReader { shared });
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert_eq!(line, "alpha\n");
+        let err = r.read_line(&mut line).unwrap_err();
+        assert!(err.to_string().contains("boom"), "{err}");
+
+        let shared = Arc::new(FeedShared::new());
+        let w = FeedWriter { shared: shared.clone(), closed: false };
+        assert!(!w.abandoned());
+        drop(FeedReader { shared });
+        assert!(w.abandoned());
+    }
+
+    #[test]
+    fn buffer_attempt_truncation_classes() {
+        let r = tiny();
+        let mut full = Vec::new();
+        super::super::run_worker(
+            &r,
+            ShardId::new(0, 1).unwrap(),
+            false,
+            RunOptions { threads: 1, chunk: 0 },
+            &mut full,
+        )
+        .unwrap();
+        let total = BufferAttempt::complete(&full).lines.len();
+        assert!(total >= 3, "header + rows + footer");
+
+        let a = BufferAttempt::faulted(&full, FaultPoint::BeforeWrite);
+        assert_eq!(a.lines.len(), 0);
+        assert!(a.exit.is_err());
+
+        let a = BufferAttempt::faulted(&full, FaultPoint::AfterRows(1));
+        assert_eq!(a.lines.len(), 2, "header + 1 body line");
+        assert!(a.exit.is_err());
+
+        let a = BufferAttempt::faulted(&full, FaultPoint::NoFooter);
+        assert_eq!(a.lines.len(), total - 1);
+        assert!(a.exit.is_ok());
+
+        let a = BufferAttempt::faulted(&full, FaultPoint::Hang);
+        assert_eq!(a.lines.len(), total - 1);
+        assert!(a.hang);
+
+        // a fault deeper than the shard's body never fires
+        let a = BufferAttempt::faulted(&full, FaultPoint::AfterRows(10_000));
+        assert_eq!(a.lines.len(), total);
+        assert!(a.exit.is_ok());
+    }
+
+    #[test]
+    fn elastic_retry_reproduces_the_clean_run() {
+        let r = tiny();
+        let run = RunOptions { threads: 1, chunk: 0 };
+        let mut clean = VecSink::new();
+        {
+            let mut sinks: Vec<&mut dyn RowSink> = vec![&mut clean];
+            crate::study::run_study(&r, run, &mut sinks).unwrap();
+        }
+        let fault = FaultSpec::parse("shard:1:after_rows:1").unwrap();
+        let backend =
+            BufferBackend::from_study(&r, 2, false, run, Some(fault)).unwrap();
+        let mut merged = VecSink::new();
+        let summary = {
+            let mut sinks: Vec<&mut dyn RowSink> = vec![&mut merged];
+            let (_, summary) = run_elastic_study(
+                &r,
+                2,
+                &ElasticOptions::default(),
+                &backend,
+                &mut sinks,
+            )
+            .unwrap();
+            summary
+        };
+        assert_rows_identical(&clean, &merged);
+        assert_eq!(summary.attempts, vec![1, 2]);
+        assert_eq!(summary.retries(), 1);
+    }
+
+    #[test]
+    fn hung_worker_is_killed_and_retried() {
+        let r = tiny();
+        let run = RunOptions { threads: 1, chunk: 0 };
+        let fault = FaultSpec::parse("shard:0:hang").unwrap();
+        let backend =
+            BufferBackend::from_study(&r, 2, false, run, Some(fault)).unwrap();
+        let opts = ElasticOptions {
+            max_retries: 1,
+            stall_timeout: Some(Duration::from_millis(200)),
+        };
+        let mut merged = VecSink::new();
+        {
+            let mut sinks: Vec<&mut dyn RowSink> = vec![&mut merged];
+            let (_, summary) =
+                run_elastic_study(&r, 2, &opts, &backend, &mut sinks).unwrap();
+            assert_eq!(summary.attempts, vec![2, 1]);
+        }
+        let mut clean = VecSink::new();
+        {
+            let mut sinks: Vec<&mut dyn RowSink> = vec![&mut clean];
+            crate::study::run_study(&r, run, &mut sinks).unwrap();
+        }
+        assert_rows_identical(&clean, &merged);
+    }
+
+    #[test]
+    fn max_retries_exceeded_fails_loudly_naming_the_shard() {
+        let r = tiny();
+        let run = RunOptions { threads: 1, chunk: 0 };
+        let fault =
+            FaultSpec::parse("shard:1:before_write:attempts:99").unwrap();
+        let backend =
+            BufferBackend::from_study(&r, 2, false, run, Some(fault)).unwrap();
+        let opts = ElasticOptions { max_retries: 1, stall_timeout: None };
+        let mut merged = VecSink::new();
+        let err = {
+            let mut sinks: Vec<&mut dyn RowSink> = vec![&mut merged];
+            run_elastic_study(&r, 2, &opts, &backend, &mut sinks)
+                .expect_err("retry budget exhausted")
+                .to_string()
+        };
+        assert!(err.contains("shard 1/2"), "{err}");
+        assert!(err.contains("failed permanently"), "{err}");
+        assert!(err.contains("--max-retries 1"), "{err}");
+        assert!(err.contains("2 attempt(s)"), "{err}");
+    }
+
+    #[test]
+    fn nondeterministic_retry_is_a_fatal_error() {
+        let r = tiny();
+        let run = RunOptions { threads: 1, chunk: 0 };
+        let mut full = Vec::new();
+        super::super::run_worker(
+            &r,
+            ShardId::new(0, 1).unwrap(),
+            false,
+            run,
+            &mut full,
+        )
+        .unwrap();
+
+        // attempt 1 dies after releasing 2 body lines; attempt 2 replays
+        // with one released line's bytes changed
+        struct TwoFaced {
+            full: Vec<u8>,
+        }
+        impl ShardBackend for TwoFaced {
+            fn start(
+                &self,
+                _k: usize,
+                attempt: usize,
+            ) -> Result<Box<dyn AttemptStream>> {
+                if attempt == 1 {
+                    return Ok(Box::new(BufferAttempt::faulted(
+                        &self.full,
+                        FaultPoint::AfterRows(2),
+                    )));
+                }
+                let text = String::from_utf8_lossy(&self.full)
+                    .replacen("{\"r\"", "{\"r\" ", 1);
+                Ok(Box::new(BufferAttempt::complete(text.as_bytes())))
+            }
+        }
+
+        let backend = TwoFaced { full };
+        let opts = ElasticOptions { max_retries: 3, stall_timeout: None };
+        let mut merged = VecSink::new();
+        let err = {
+            let mut sinks: Vec<&mut dyn RowSink> = vec![&mut merged];
+            run_elastic_study(&r, 1, &opts, &backend, &mut sinks)
+                .expect_err("divergent replay must not merge")
+                .to_string()
+        };
+        assert!(err.contains("diverged"), "{err}");
+        assert!(err.contains("not deterministic"), "{err}");
+    }
+
+    #[test]
+    fn line_fingerprint_matches_spec_fingerprint_algebra() {
+        assert_ne!(line_fingerprint("a"), line_fingerprint("b"));
+        assert_eq!(line_fingerprint(""), 0xcbf29ce484222325);
+    }
+}

@@ -1,0 +1,364 @@
+//! The process-level elastic launcher behind `commscale shard launch`:
+//! spawn `commscale shard worker` children (locally or over ssh) with
+//! their payloads piped straight back, and drive them through the
+//! [`super::elastic`] supervisor — streaming merge while workers run,
+//! retry on death, byte-identical output.
+//!
+//! Each attempt is one child process. A detached reader thread drains
+//! the child's stdout into a channel so the supervisor can poll with a
+//! timeout (the stall watchdog) without blocking on a hung pipe; EOF is
+//! the channel disconnecting after the last buffered line. Workers
+//! receive `COMMSCALE_SHARD_ATTEMPT` so the `COMMSCALE_FAULT` knob can
+//! arm per-attempt (the chaos smoke kills attempt 1, lets attempt 2
+//! finish).
+
+use std::io::{BufRead, BufReader};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError};
+use std::time::Duration;
+
+use crate::study::spec::ResolvedStudy;
+use crate::study::{RowSink, StudyOutcome};
+use crate::{Error, Result};
+
+use super::elastic::{
+    run_elastic, AttemptStream, ElasticOptions, ElasticSummary, Pull,
+    ShardBackend,
+};
+use super::merge::MergedOptimize;
+
+/// How the launcher reaches a worker host.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Via {
+    /// Children of this process on this host.
+    Local,
+    /// `ssh <host> commscale shard worker …`; shard `k` runs on host
+    /// `k % hosts.len()`. The remote host needs the same `commscale`
+    /// binary on `PATH` and the spec path valid remotely.
+    Ssh { hosts: Vec<String> },
+}
+
+impl Via {
+    pub fn parse(via: &str, hosts: Option<&str>) -> Result<Via> {
+        match via {
+            "local" => Ok(Via::Local),
+            "ssh" => {
+                let hosts: Vec<String> = hosts
+                    .unwrap_or("")
+                    .split(',')
+                    .map(str::trim)
+                    .filter(|s| !s.is_empty())
+                    .map(str::to_string)
+                    .collect();
+                if hosts.is_empty() {
+                    return Err(Error::Study(
+                        "--via ssh needs --hosts h1,h2,… (shard k runs on \
+                         host k mod the host count)"
+                            .into(),
+                    ));
+                }
+                Ok(Via::Ssh { hosts })
+            }
+            other => Err(Error::Study(format!(
+                "--via: unknown transport {other:?} (supported: local, ssh)"
+            ))),
+        }
+    }
+}
+
+/// Everything one worker invocation needs, carried by the launcher so
+/// every attempt of every shard is built from the same flags.
+#[derive(Debug, Clone)]
+pub struct LaunchConfig {
+    pub n: usize,
+    pub max_retries: usize,
+    /// Seconds without payload progress before an attempt is killed
+    /// (0 = no watchdog; group/optimize payloads emit only at the end).
+    pub stall_timeout_secs: f64,
+    pub via: Via,
+    /// The spec target exactly as given (file path or built-in name).
+    pub target: String,
+    pub device: String,
+    pub optimize: bool,
+    pub fidelity: Option<String>,
+    pub memory_cap: Option<String>,
+    pub worker_threads: usize,
+    pub chunk: usize,
+}
+
+impl LaunchConfig {
+    fn elastic_options(&self) -> ElasticOptions {
+        ElasticOptions {
+            max_retries: self.max_retries,
+            stall_timeout: if self.stall_timeout_secs > 0.0 {
+                Some(Duration::from_secs_f64(self.stall_timeout_secs))
+            } else {
+                None
+            },
+        }
+    }
+}
+
+/// Spawns one `commscale shard worker` child per attempt, stdout piped.
+struct ProcessBackend {
+    exe: PathBuf,
+    cfg: LaunchConfig,
+}
+
+impl ProcessBackend {
+    fn new(cfg: &LaunchConfig) -> Result<ProcessBackend> {
+        let exe = std::env::current_exe().map_err(|e| {
+            Error::Study(format!("cannot locate the commscale binary: {e}"))
+        })?;
+        Ok(ProcessBackend { exe, cfg: cfg.clone() })
+    }
+
+    /// argv of one worker attempt, without the transport prefix.
+    fn worker_args(&self, k: usize) -> Vec<String> {
+        let cfg = &self.cfg;
+        let mut args = vec![
+            "shard".to_string(),
+            "worker".to_string(),
+            "--shard".to_string(),
+            format!("{k}/{}", cfg.n),
+            cfg.target.clone(),
+            "--device".to_string(),
+            cfg.device.clone(),
+            "--threads".to_string(),
+            cfg.worker_threads.to_string(),
+        ];
+        if cfg.chunk > 0 {
+            args.push("--chunk".to_string());
+            args.push(cfg.chunk.to_string());
+        }
+        if cfg.optimize {
+            args.push("--optimize".to_string());
+        }
+        if let Some(cap) = &cfg.memory_cap {
+            args.push("--memory-cap".to_string());
+            args.push(cap.clone());
+        }
+        if let Some(f) = &cfg.fidelity {
+            args.push("--fidelity".to_string());
+            args.push(f.clone());
+        }
+        args
+    }
+
+    fn command(&self, k: usize, attempt: usize) -> Command {
+        let args = self.worker_args(k);
+        let mut cmd = match &self.cfg.via {
+            Via::Local => {
+                let mut c = Command::new(&self.exe);
+                c.args(&args);
+                c
+            }
+            Via::Ssh { hosts } => {
+                let host = &hosts[k % hosts.len()];
+                let mut c = Command::new("ssh");
+                // the attempt number rides the remote command line — ssh
+                // does not forward the local environment
+                c.arg(host).arg(format!(
+                    "COMMSCALE_SHARD_ATTEMPT={attempt} commscale {}",
+                    args.join(" ")
+                ));
+                c
+            }
+        };
+        cmd.env("COMMSCALE_SHARD_ATTEMPT", attempt.to_string());
+        cmd.stdin(Stdio::null());
+        cmd.stdout(Stdio::piped());
+        cmd
+    }
+}
+
+impl ShardBackend for ProcessBackend {
+    fn start(&self, k: usize, attempt: usize) -> Result<Box<dyn AttemptStream>> {
+        let mut child = self.command(k, attempt).spawn().map_err(|e| {
+            Error::Study(format!(
+                "cannot spawn shard worker {k}/{}: {e}",
+                self.cfg.n
+            ))
+        })?;
+        let stdout = child.stdout.take().expect("stdout was piped");
+        let (tx, rx) = mpsc::channel();
+        // detached drainer: lets the supervisor poll with a timeout and
+        // guarantees the child never blocks on a full pipe
+        std::thread::spawn(move || {
+            let mut reader = BufReader::new(stdout);
+            loop {
+                let mut line = String::new();
+                match reader.read_line(&mut line) {
+                    Ok(0) => break,
+                    Ok(_) => {
+                        while line.ends_with('\n') || line.ends_with('\r') {
+                            line.pop();
+                        }
+                        if line.is_empty() {
+                            continue;
+                        }
+                        if tx.send(Ok(line)).is_err() {
+                            break;
+                        }
+                    }
+                    Err(e) => {
+                        let _ = tx.send(Err(e));
+                        break;
+                    }
+                }
+            }
+        });
+        Ok(Box::new(ProcessAttempt { child, rx }))
+    }
+}
+
+struct ProcessAttempt {
+    child: Child,
+    rx: Receiver<std::io::Result<String>>,
+}
+
+impl AttemptStream for ProcessAttempt {
+    fn pull(&mut self, wait: Duration) -> Pull {
+        match self.rx.recv_timeout(wait) {
+            Ok(Ok(line)) => Pull::Line(line),
+            Ok(Err(e)) => Pull::Lost(format!("payload pipe read failed: {e}")),
+            Err(RecvTimeoutError::Timeout) => Pull::Pending,
+            Err(RecvTimeoutError::Disconnected) => Pull::Eof,
+        }
+    }
+
+    fn finish(&mut self, kill: bool) -> std::result::Result<(), String> {
+        if kill {
+            let _ = self.child.kill();
+        }
+        match self.child.wait() {
+            Ok(status) if status.success() => Ok(()),
+            Ok(status) => Err(format!("worker exited with {status}")),
+            Err(e) => Err(format!("cannot reap worker: {e}")),
+        }
+    }
+}
+
+/// `commscale shard launch` (study mode): supervised scatter/gather
+/// through the spec's sinks, byte-identical to `commscale study`.
+pub fn launch_study(
+    resolved: &ResolvedStudy,
+    cfg: &LaunchConfig,
+    sinks: &mut [&mut dyn RowSink],
+) -> Result<(StudyOutcome, ElasticSummary)> {
+    let backend = ProcessBackend::new(cfg)?;
+    run_elastic(cfg.n, &cfg.elastic_options(), &backend, |inputs| {
+        super::merge_study(resolved, inputs, sinks)
+    })
+}
+
+/// `commscale shard launch --optimize`: supervised scatter/gather of the
+/// argmin search, byte-identical to `commscale optimize`.
+pub fn launch_optimize(
+    resolved: &ResolvedStudy,
+    cfg: &LaunchConfig,
+) -> Result<(MergedOptimize, ElasticSummary)> {
+    let backend = ProcessBackend::new(cfg)?;
+    run_elastic(cfg.n, &cfg.elastic_options(), &backend, |inputs| {
+        super::merge_optimize(resolved, inputs)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> LaunchConfig {
+        LaunchConfig {
+            n: 4,
+            max_retries: 2,
+            stall_timeout_secs: 0.0,
+            via: Via::Local,
+            target: "spec.json".into(),
+            device: "mi210".into(),
+            optimize: false,
+            fidelity: None,
+            memory_cap: None,
+            worker_threads: 1,
+            chunk: 0,
+        }
+    }
+
+    #[test]
+    fn via_parses_and_rejects() {
+        assert_eq!(Via::parse("local", None).unwrap(), Via::Local);
+        assert_eq!(
+            Via::parse("ssh", Some("a, b,")).unwrap(),
+            Via::Ssh { hosts: vec!["a".into(), "b".into()] }
+        );
+        let err = Via::parse("ssh", None).unwrap_err().to_string();
+        assert!(err.contains("--hosts"), "{err}");
+        let err = Via::parse("slurm", None).unwrap_err().to_string();
+        assert!(err.contains("unknown transport"), "{err}");
+    }
+
+    #[test]
+    fn worker_args_carry_every_flag() {
+        let mut c = cfg();
+        c.optimize = true;
+        c.memory_cap = Some("0.9".into());
+        c.fidelity = Some("surrogate".into());
+        c.chunk = 512;
+        let backend = ProcessBackend {
+            exe: PathBuf::from("commscale"),
+            cfg: c,
+        };
+        let args = backend.worker_args(2);
+        let joined = args.join(" ");
+        assert_eq!(
+            joined,
+            "shard worker --shard 2/4 spec.json --device mi210 --threads 1 \
+             --chunk 512 --optimize --memory-cap 0.9 --fidelity surrogate"
+        );
+    }
+
+    #[test]
+    fn ssh_command_wraps_the_worker_and_pins_the_attempt() {
+        let mut c = cfg();
+        c.via = Via::Ssh { hosts: vec!["h0".into(), "h1".into()] };
+        let backend = ProcessBackend {
+            exe: PathBuf::from("commscale"),
+            cfg: c,
+        };
+        // shard 3 of 4 on 2 hosts lands on h1 (3 % 2)
+        let cmd = backend.command(3, 2);
+        assert_eq!(cmd.get_program(), "ssh");
+        let argv: Vec<String> = cmd
+            .get_args()
+            .map(|a| a.to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(argv[0], "h1");
+        assert!(argv[1].starts_with("COMMSCALE_SHARD_ATTEMPT=2 commscale "));
+        assert!(argv[1].contains("--shard 3/4"), "{}", argv[1]);
+    }
+
+    #[test]
+    fn local_command_sets_the_attempt_env() {
+        let backend =
+            ProcessBackend { exe: PathBuf::from("commscale"), cfg: cfg() };
+        let cmd = backend.command(0, 3);
+        let has = cmd.get_envs().any(|(k, v)| {
+            k == "COMMSCALE_SHARD_ATTEMPT"
+                && v.map(|v| v == "3").unwrap_or(false)
+        });
+        assert!(has);
+    }
+
+    #[test]
+    fn stall_timeout_maps_to_elastic_options() {
+        let mut c = cfg();
+        assert!(c.elastic_options().stall_timeout.is_none());
+        assert_eq!(c.elastic_options().max_retries, 2);
+        c.stall_timeout_secs = 1.5;
+        assert_eq!(
+            c.elastic_options().stall_timeout,
+            Some(Duration::from_millis(1500))
+        );
+    }
+}

@@ -341,16 +341,33 @@ pub fn merge_study(
         }
         let Some(f) = footer else {
             return Err(Error::Study(format!(
-                "{}: truncated shard payload (no end marker) — the worker \
-                 died mid-stream; rerun shard {}/{}",
-                shard.label, shard.header.k, shard.header.n
+                "{}: truncated shard payload — shard {}/{} streamed \
+                 {body_rows} body line(s) and no end marker, so the worker \
+                 died (or was killed) mid-stream; re-run it (`commscale \
+                 shard worker --shard {}/{} …`) and merge again, or use \
+                 `commscale shard launch -n {} --max-retries K` to retry \
+                 dead shards automatically",
+                shard.label,
+                shard.header.k,
+                shard.header.n,
+                shard.header.k,
+                shard.header.n,
+                shard.header.n
             )));
         };
         if expect_mode == ShardMode::Rows && body_rows != f.rows_matched {
             return Err(Error::Study(format!(
-                "{}: payload carries {body_rows} rows but its footer counts \
-                 {} — truncated or corrupted stream",
-                shard.label, f.rows_matched
+                "{}: truncated or corrupted stream — shard {}/{}'s footer \
+                 expects {} row(s) but {body_rows} arrived; re-run shard \
+                 {}/{} and merge again, or use `commscale shard launch -n \
+                 {} --max-retries K` to retry bad shards automatically",
+                shard.label,
+                shard.header.k,
+                shard.header.n,
+                f.rows_matched,
+                shard.header.k,
+                shard.header.n,
+                shard.header.n
             )));
         }
         outcome.points_evaluated += f.points_evaluated;
@@ -443,16 +460,33 @@ pub fn merge_optimize(
         }
         let Some(f) = footer else {
             return Err(Error::Study(format!(
-                "{}: truncated shard payload (no end marker) — rerun shard \
-                 {}/{}",
-                shard.label, shard.header.k, shard.header.n
+                "{}: truncated shard payload — shard {}/{} streamed \
+                 {body_rows} winner row(s) and no end marker, so the worker \
+                 died (or was killed) mid-search; re-run it (`commscale \
+                 shard worker --shard {}/{} … --optimize`) and merge again, \
+                 or use `commscale shard launch -n {} --optimize \
+                 --max-retries K` to retry dead shards automatically",
+                shard.label,
+                shard.header.k,
+                shard.header.n,
+                shard.header.k,
+                shard.header.n,
+                shard.header.n
             )));
         };
         if body_rows != f.rows_matched {
             return Err(Error::Study(format!(
-                "{}: payload carries {body_rows} winner rows but its footer \
-                 counts {}",
-                shard.label, f.rows_matched
+                "{}: truncated or corrupted stream — shard {}/{}'s footer \
+                 expects {} winner row(s) but {body_rows} arrived; re-run \
+                 shard {}/{} or use `commscale shard launch -n {} \
+                 --optimize --max-retries K`",
+                shard.label,
+                shard.header.k,
+                shard.header.n,
+                f.rows_matched,
+                shard.header.k,
+                shard.header.n,
+                shard.header.n
             )));
         }
         merged.candidates += f.candidates;
@@ -586,6 +620,96 @@ mod tests {
             vec![("a".into(), payload(&r, 0, 2)), ("b".into(), cut)],
         );
         assert!(err.contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn truncation_error_names_shard_counts_and_retry() {
+        let r = tiny();
+        let full = String::from_utf8(payload(&r, 1, 2)).unwrap();
+        // keep the header + one row: a worker killed mid-stream
+        let cut: Vec<&str> = full.lines().take(2).collect();
+        let err = merge_err(
+            &r,
+            vec![
+                ("a".into(), payload(&r, 0, 2)),
+                ("b".into(), (cut.join("\n") + "\n").into_bytes()),
+            ],
+        );
+        assert!(err.contains("truncated"), "{err}");
+        assert!(err.contains("shard 1/2"), "{err}");
+        assert!(err.contains("1 body line(s)"), "{err}");
+        assert!(err.contains("shard launch"), "{err}");
+        assert!(err.contains("--max-retries"), "{err}");
+    }
+
+    #[test]
+    fn row_count_mismatch_reports_expected_vs_seen() {
+        let r = tiny();
+        let full = String::from_utf8(payload(&r, 1, 2)).unwrap();
+        // drop one row but keep the footer: seen < expected
+        let mut dropped = false;
+        let kept: Vec<&str> = full
+            .lines()
+            .filter(|l| {
+                if !dropped && l.starts_with("{\"r\"") {
+                    dropped = true;
+                    return false;
+                }
+                true
+            })
+            .collect();
+        assert!(dropped, "payload should carry at least one row");
+        let err = merge_err(
+            &r,
+            vec![
+                ("a".into(), payload(&r, 0, 2)),
+                ("b".into(), (kept.join("\n") + "\n").into_bytes()),
+            ],
+        );
+        assert!(err.contains("shard 1/2"), "{err}");
+        assert!(err.contains("expects 2 row(s)"), "{err}");
+        assert!(err.contains("1 arrived"), "{err}");
+        assert!(err.contains("--max-retries"), "{err}");
+    }
+
+    #[test]
+    fn optimize_truncation_error_names_shard_and_retry() {
+        let r = resolve(
+            r#"{"name":"opt","axes":{"hidden":[1024,4096],"tp":[1,2,4,8]},
+                "group_by":["hidden"],
+                "aggregate":[{"metric":"makespan","ops":["min","argmin"],
+                              "args":["tp"]}]}"#,
+        );
+        let mut buf = Vec::new();
+        run_worker(
+            &r,
+            ShardId::new(1, 2).unwrap(),
+            true,
+            RunOptions { threads: 1, chunk: 0 },
+            &mut buf,
+        )
+        .unwrap();
+        let full = String::from_utf8(buf).unwrap();
+        let cut: Vec<&str> =
+            full.lines().filter(|l| !l.contains("\"end\"")).collect();
+        let mut other = Vec::new();
+        run_worker(
+            &r,
+            ShardId::new(0, 2).unwrap(),
+            true,
+            RunOptions { threads: 1, chunk: 0 },
+            &mut other,
+        )
+        .unwrap();
+        let inputs = vec![
+            ShardInput::from_bytes("a", other),
+            ShardInput::from_bytes("b", (cut.join("\n") + "\n").into_bytes()),
+        ];
+        let err = merge_optimize(&r, inputs).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+        assert!(err.contains("shard 1/2"), "{err}");
+        assert!(err.contains("--optimize"), "{err}");
+        assert!(err.contains("--max-retries"), "{err}");
     }
 
     #[test]

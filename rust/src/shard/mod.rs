@@ -23,18 +23,30 @@
 //!   ([`crate::optimizer::optimize_study_shard`]): groups are
 //!   independent, so winner rows concatenate.
 //!
-//! Three CLI surfaces (`commscale shard …`): `run -n N` spawns local
-//! worker processes and merges (the single-host scatter/gather); `worker
-//! --shard k/n` + `merge` are the multi-host path — run workers
-//! anywhere, copy their payload files back, merge once. `plan -n N`
-//! prints that recipe. The wire format is [`payload`]; the merge
-//! validation and fold live in [`merge`]. DESIGN.md §12 documents the
-//! partitioning seams, the mergeable-aggregate algebra, and the
-//! determinism argument.
+//! Four CLI surfaces (`commscale shard …`): `launch -n N` is the
+//! operational path — a supervising coordinator ([`elastic`] +
+//! [`launch`]) that streams worker payloads over pipes, merges while
+//! slow shards still run, and re-executes dead/truncated/hung shards up
+//! to `--max-retries` times with the merged bytes unchanged. `run -n N`
+//! is the simpler temp-file scatter/gather; `worker --shard k/n` +
+//! `merge` are the manual multi-host path — run workers anywhere, copy
+//! their payload files back, merge once; `plan -n N` prints that
+//! recipe. The wire format is [`payload`]; the merge validation and
+//! fold live in [`merge`]. DESIGN.md §12 documents the partitioning
+//! seams, the mergeable-aggregate algebra, and the determinism
+//! argument; §16 covers supervision, retry, and the `COMMSCALE_FAULT`
+//! injection knob.
 
+pub mod elastic;
+pub mod launch;
 pub mod merge;
 pub mod payload;
 
+pub use elastic::{
+    run_elastic, run_elastic_optimize, run_elastic_study, BufferBackend,
+    ElasticOptions, ElasticSummary, FaultPoint, FaultSpec, FaultWriter,
+};
+pub use launch::{launch_optimize, launch_study, LaunchConfig, Via};
 pub use merge::{merge_optimize, merge_study, MergedOptimize, ShardInput};
 pub use payload::{ShardFooter, ShardHeader, ShardMode};
 

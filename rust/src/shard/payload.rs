@@ -91,6 +91,31 @@ pub(crate) enum ShardLine {
     End(ShardFooter),
 }
 
+/// Coarse class of a payload line, decided by its leading key. The
+/// elastic supervisor and the fault injector both need "is this a body
+/// line / the footer?" without a full JSON parse, and they must agree —
+/// so the classification lives here, next to the writers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LineClass {
+    /// The `{"shard": …}` identity line.
+    Header,
+    /// A `{"r": …}` row or `{"g": …}` group line.
+    Body,
+    /// The `{"end": …}` footer.
+    Footer,
+}
+
+/// Classify a raw payload line (the writers emit no leading whitespace).
+pub fn line_class(line: &[u8]) -> LineClass {
+    if line.starts_with(b"{\"shard\"") {
+        LineClass::Header
+    } else if line.starts_with(b"{\"end\"") {
+        LineClass::Footer
+    } else {
+        LineClass::Body
+    }
+}
+
 // ---------------------------------------------------------------------------
 // exact scalar encoding
 // ---------------------------------------------------------------------------
@@ -427,6 +452,27 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn line_classes_match_the_writers() {
+        let h = ShardHeader {
+            spec_name: "s".into(),
+            fingerprint: "deadbeefdeadbeef".into(),
+            device: "MI210".into(),
+            mode: ShardMode::Rows,
+            k: 0,
+            n: 1,
+            units: 4,
+            columns: vec!["tp".into()],
+        };
+        assert_eq!(line_class(h.to_line().as_bytes()), LineClass::Header);
+        let row = row_line(&[Value::Num(1.0)]);
+        assert_eq!(line_class(row.as_bytes()), LineClass::Body);
+        let grp = group_line(&[Value::Num(1.0)], &[AggState::new(false)]);
+        assert_eq!(line_class(grp.as_bytes()), LineClass::Body);
+        let end = end_line(&ShardFooter::default());
+        assert_eq!(line_class(end.as_bytes()), LineClass::Footer);
     }
 
     #[test]

@@ -1,0 +1,363 @@
+//! Fault-injection suite for the elastic launcher (`commscale shard
+//! launch`): workers are killed before their first write, after N body
+//! lines, and at footer-less EOF — in every case the supervised retry
+//! must leave the merged CSV **byte-identical** to an unfaulted
+//! single-process run, for row-level and `--optimize` group-level
+//! studies, at exact and surrogate fidelity. The fault schedule rides
+//! the deterministic `COMMSCALE_FAULT` knob, so nothing here races a
+//! clock.
+
+use std::path::PathBuf;
+use std::process::{Command, Output};
+
+use commscale::hw::catalog;
+use commscale::optimizer::{optimize_study, OptimizeOptions};
+use commscale::shard::elastic::run_elastic_optimize;
+use commscale::shard::{BufferBackend, ElasticOptions, FaultSpec};
+use commscale::study::{RunOptions, StudySpec};
+
+const ROW_SPEC: &str = r#"{
+  "name": "elastic_rows",
+  "axes": {"hidden": [1024, 4096], "seq_len": [2048], "tp": [1, 2, 4, 8]},
+  "metrics": ["comm_fraction", "makespan"]
+}"#;
+
+const OPT_SPEC: &str = r#"{
+  "name": "elastic_opt",
+  "axes": {"hidden": [1024, 4096], "tp": [1, 2, 4, 8], "evolutions": [1, 4]},
+  "group_by": ["hidden", "flop_vs_bw"],
+  "aggregate": [{"metric": "makespan", "ops": ["min", "argmin"],
+                 "args": ["tp"]}]
+}"#;
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("commscale_elastic_{name}"))
+}
+
+fn commscale(args: &[&str], fault: Option<&str>) -> Output {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_commscale"));
+    cmd.args(args);
+    match fault {
+        Some(f) => cmd.env("COMMSCALE_FAULT", f),
+        None => cmd.env_remove("COMMSCALE_FAULT"),
+    };
+    cmd.output().expect("spawn commscale")
+}
+
+fn assert_ok(out: &Output, what: &str) {
+    assert!(
+        out.status.success(),
+        "{what} failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+/// The full matrix: {row-level, optimize} x {exact, surrogate} x
+/// {before_write, after_rows, no_footer}. One golden per (mode,
+/// fidelity); every faulted launch must reproduce its bytes.
+#[test]
+fn faulted_launches_reproduce_single_process_csv_bytes() {
+    let row_spec = tmp("matrix_rows.json");
+    let opt_spec = tmp("matrix_opt.json");
+    std::fs::write(&row_spec, ROW_SPEC).unwrap();
+    std::fs::write(&opt_spec, OPT_SPEC).unwrap();
+
+    let mut cleanup = vec![row_spec.clone(), opt_spec.clone()];
+    for optimize in [false, true] {
+        // 8 points over 3 shards -> ranges [0,2) [2,5) [5,8);
+        // 4 groups over 3 shards -> ranges [0,1) [1,2) [2,4).
+        // The after_rows depth stays inside the faulted shard's body.
+        let (spec_path, faults) = if optimize {
+            (&opt_spec, ["shard:2:before_write", "shard:2:after_rows:1",
+                         "shard:2:no_footer"])
+        } else {
+            (&row_spec, ["shard:1:before_write", "shard:1:after_rows:2",
+                         "shard:1:no_footer"])
+        };
+        for fidelity in ["exact", "surrogate"] {
+            let tag = format!(
+                "{}_{fidelity}",
+                if optimize { "opt" } else { "rows" }
+            );
+            let golden = tmp(&format!("golden_{tag}.csv"));
+            let mut args = vec![
+                if optimize { "optimize" } else { "study" },
+                spec_path.to_str().unwrap(),
+            ];
+            args.extend(["--fidelity", fidelity, "--csv"]);
+            args.push(golden.to_str().unwrap());
+            args.extend(["--threads", "1"]);
+            let out = commscale(&args, None);
+            assert_ok(&out, &format!("golden {tag}"));
+            let golden_bytes = std::fs::read(&golden).unwrap();
+            assert!(!golden_bytes.is_empty(), "golden {tag} is empty");
+            cleanup.push(golden.clone());
+
+            for fault in faults {
+                let merged = tmp(&format!(
+                    "launch_{tag}_{}.csv",
+                    fault.replace([':', '/'], "_")
+                ));
+                let mut args = vec![
+                    "shard",
+                    "launch",
+                    "-n",
+                    "3",
+                    spec_path.to_str().unwrap(),
+                    "--max-retries",
+                    "2",
+                    "--worker-threads",
+                    "1",
+                    "--fidelity",
+                    fidelity,
+                    "--csv",
+                ];
+                args.push(merged.to_str().unwrap());
+                if optimize {
+                    args.push("--optimize");
+                }
+                let out = commscale(&args, Some(fault));
+                assert_ok(&out, &format!("launch {tag} {fault}"));
+                let stderr = String::from_utf8_lossy(&out.stderr);
+                assert!(
+                    stderr.contains("retrying"),
+                    "{tag} {fault}: the fault never fired:\n{stderr}"
+                );
+                let merged_bytes = std::fs::read(&merged).unwrap();
+                assert_eq!(
+                    golden_bytes, merged_bytes,
+                    "{tag} {fault}: merged CSV differs from the \
+                     single-process golden"
+                );
+                cleanup.push(merged);
+            }
+        }
+    }
+    for p in cleanup {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+/// A fault that outlives `--max-retries` fails the launch loudly,
+/// naming the shard and the budget.
+#[test]
+fn launch_fails_loudly_when_the_retry_budget_is_exhausted() {
+    let spec = tmp("budget.json");
+    std::fs::write(&spec, ROW_SPEC).unwrap();
+    let csv = tmp("budget.csv");
+    let out = commscale(
+        &[
+            "shard",
+            "launch",
+            "-n",
+            "3",
+            spec.to_str().unwrap(),
+            "--max-retries",
+            "1",
+            "--worker-threads",
+            "1",
+            "--csv",
+            csv.to_str().unwrap(),
+        ],
+        Some("shard:1:before_write:attempts:99"),
+    );
+    assert!(!out.status.success(), "launch should fail");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("shard 1/3"), "{err}");
+    assert!(err.contains("failed permanently"), "{err}");
+    assert!(err.contains("--max-retries 1"), "{err}");
+    let _ = std::fs::remove_file(&spec);
+    let _ = std::fs::remove_file(&csv);
+}
+
+/// An unfaulted launch works end-to-end and reports no retries.
+#[test]
+fn clean_launch_matches_study_and_reports_no_retries() {
+    let spec = tmp("clean.json");
+    std::fs::write(&spec, ROW_SPEC).unwrap();
+    let golden = tmp("clean_golden.csv");
+    let merged = tmp("clean_launch.csv");
+    let out = commscale(
+        &[
+            "study",
+            spec.to_str().unwrap(),
+            "--threads",
+            "1",
+            "--csv",
+            golden.to_str().unwrap(),
+        ],
+        None,
+    );
+    assert_ok(&out, "study golden");
+    let out = commscale(
+        &[
+            "shard",
+            "launch",
+            "-n",
+            "4",
+            spec.to_str().unwrap(),
+            "--worker-threads",
+            "1",
+            "--csv",
+            merged.to_str().unwrap(),
+        ],
+        None,
+    );
+    assert_ok(&out, "clean launch");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("no retries"), "{stderr}");
+    assert_eq!(
+        std::fs::read(&golden).unwrap(),
+        std::fs::read(&merged).unwrap()
+    );
+    for p in [&spec, &golden, &merged] {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+/// The worker-side `COMMSCALE_FAULT` hook by itself: each fault point
+/// truncates the payload exactly as scheduled (this is what the
+/// launcher's supervisor observes from the outside).
+#[test]
+fn worker_fault_hook_truncates_payloads_deterministically() {
+    let spec = tmp("hook.json");
+    std::fs::write(&spec, ROW_SPEC).unwrap();
+    let worker = |fault: Option<&str>| -> Output {
+        commscale(
+            &[
+                "shard",
+                "worker",
+                "--shard",
+                "1/3",
+                spec.to_str().unwrap(),
+                "--threads",
+                "1",
+            ],
+            fault,
+        )
+    };
+
+    let clean = worker(None);
+    assert_ok(&clean, "clean worker");
+    let clean_lines: Vec<String> = String::from_utf8_lossy(&clean.stdout)
+        .lines()
+        .map(str::to_string)
+        .collect();
+    assert!(clean_lines.last().unwrap().starts_with("{\"end\""));
+
+    // before_write: death before any payload byte
+    let out = worker(Some("shard:1:before_write"));
+    assert!(!out.status.success());
+    assert!(out.stdout.is_empty(), "no payload bytes before the fault");
+
+    // after_rows:2 — the header plus exactly 2 body lines made it out
+    let out = worker(Some("shard:1:after_rows:2"));
+    assert!(!out.status.success());
+    let lines: Vec<String> = String::from_utf8_lossy(&out.stdout)
+        .lines()
+        .map(str::to_string)
+        .collect();
+    assert_eq!(lines.len(), 3, "header + 2 body lines");
+    assert_eq!(lines[..3], clean_lines[..3], "prefix is bit-identical");
+
+    // no_footer: a clean exit whose payload still lacks the end marker
+    let out = worker(Some("shard:1:no_footer"));
+    assert!(out.status.success(), "no_footer exits 0");
+    let lines: Vec<String> = String::from_utf8_lossy(&out.stdout)
+        .lines()
+        .map(str::to_string)
+        .collect();
+    assert_eq!(lines.len(), clean_lines.len() - 1);
+    assert_eq!(lines[..], clean_lines[..clean_lines.len() - 1]);
+
+    // a fault armed for another shard or a later attempt never fires
+    let out = worker(Some("shard:0:before_write"));
+    assert_ok(&out, "fault for another shard");
+    assert_eq!(out.stdout, clean.stdout);
+    let out = commscale(
+        &[
+            "shard",
+            "worker",
+            "--shard",
+            "1/3",
+            spec.to_str().unwrap(),
+            "--threads",
+            "1",
+        ],
+        Some("shard:1:before_write"),
+    );
+    // same fault, but attempt 2: disarmed
+    let out2 = {
+        let mut cmd = Command::new(env!("CARGO_BIN_EXE_commscale"));
+        cmd.args([
+            "shard",
+            "worker",
+            "--shard",
+            "1/3",
+            spec.to_str().unwrap(),
+            "--threads",
+            "1",
+        ]);
+        cmd.env("COMMSCALE_FAULT", "shard:1:before_write");
+        cmd.env("COMMSCALE_SHARD_ATTEMPT", "2");
+        cmd.output().expect("spawn commscale")
+    };
+    assert!(!out.status.success(), "attempt 1 is armed");
+    assert_ok(&out2, "attempt 2 is disarmed");
+    assert_eq!(out2.stdout, clean.stdout);
+
+    // a malformed schedule is a loud grammar error, not a silent no-op
+    let out = worker(Some("shard:1:explode"));
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("grammar"), "{err}");
+
+    let _ = std::fs::remove_file(&spec);
+}
+
+/// Library-level optimize path: an elastic search with a retried shard
+/// merges to exactly the single-process optimizer report, at both
+/// fidelities.
+#[test]
+fn elastic_optimize_retry_matches_the_search_report() {
+    for fidelity in ["exact", "surrogate"] {
+        let mut spec = StudySpec::parse(OPT_SPEC).unwrap();
+        spec.fidelity = commscale::sweep::Fidelity::parse(fidelity).unwrap();
+        let resolved = spec.resolve(&catalog::mi210()).unwrap();
+        let report = optimize_study(
+            &resolved,
+            &OptimizeOptions { threads: 1, memory_cap: None },
+        )
+        .unwrap();
+
+        let fault = FaultSpec::parse("shard:0:no_footer").unwrap();
+        let opts = RunOptions { threads: 1, chunk: 0 };
+        let backend =
+            BufferBackend::from_study(&resolved, 3, true, opts, Some(fault))
+                .unwrap();
+        let (merged, summary) = run_elastic_optimize(
+            &resolved,
+            3,
+            &ElasticOptions { max_retries: 2, stall_timeout: None },
+            &backend,
+        )
+        .unwrap();
+        assert_eq!(summary.attempts, vec![2, 1, 1], "{fidelity}");
+        assert_eq!(merged.columns, report.columns, "{fidelity}");
+        assert_eq!(merged.rows.len(), report.rows.len(), "{fidelity}");
+        for (ri, (got, want)) in
+            merged.rows.iter().zip(&report.rows).enumerate()
+        {
+            for (got, want) in got.iter().zip(want) {
+                assert_eq!(
+                    got.render(),
+                    want.render(),
+                    "{fidelity} row {ri}"
+                );
+            }
+        }
+        assert_eq!(merged.candidates, report.candidates, "{fidelity}");
+        assert_eq!(merged.evaluated, report.evaluated, "{fidelity}");
+        assert_eq!(merged.infeasible, report.infeasible, "{fidelity}");
+    }
+}

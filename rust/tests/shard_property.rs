@@ -7,7 +7,11 @@
 //! single-process run, every time.
 
 use commscale::hw::catalog;
-use commscale::shard::{self, ShardId, ShardInput};
+use commscale::shard::elastic::run_elastic_study;
+use commscale::shard::{
+    self, BufferBackend, ElasticOptions, FaultPoint, FaultSpec, ShardId,
+    ShardInput,
+};
 use commscale::study::{
     run_study, ResolvedStudy, RowSink, RunOptions, StudySpec, Value, VecSink,
 };
@@ -212,6 +216,115 @@ fn random_specs_merge_bit_identically_for_every_shard_count() {
             );
         }
     }
+}
+
+/// Run the study elastically (in-process [`BufferBackend`]) under an
+/// injected fault schedule and return the merged sink + retry count.
+fn run_elastic_faulted(
+    resolved: &ResolvedStudy,
+    n: usize,
+    opts: RunOptions,
+    fault: FaultSpec,
+) -> (VecSink, usize) {
+    let backend = BufferBackend::from_study(resolved, n, false, opts, Some(fault))
+        .expect("payload precompute");
+    let elastic = ElasticOptions {
+        max_retries: 2,
+        // only hang faults need the watchdog; generous enough to never
+        // race a healthy replay, tight enough to keep the test fast
+        stall_timeout: if fault.point == FaultPoint::Hang {
+            Some(std::time::Duration::from_millis(250))
+        } else {
+            None
+        },
+    };
+    let mut sink = VecSink::new();
+    let summary = {
+        let mut sinks: Vec<&mut dyn RowSink> = vec![&mut sink];
+        let (outcome, summary) =
+            run_elastic_study(resolved, n, &elastic, &backend, &mut sinks)
+                .unwrap_or_else(|e| panic!("elastic n={n} {fault:?}: {e}"));
+        assert_eq!(
+            outcome.points_evaluated,
+            resolved.total_points(),
+            "elastic point count, n={n}"
+        );
+        summary
+    };
+    (sink, summary.retries())
+}
+
+/// Random single-fault schedules: the shard index and injection point
+/// are drawn from the seed, and the supervised retry must keep the
+/// merged output bit-identical to the single-process run for every
+/// shard count.
+#[test]
+fn random_fault_schedules_merge_bit_identically() {
+    let mut rng = Lcg(0xfa17_0005_eedc_0de5 ^ 0x5eed_0d15_71b3_37e3);
+    let device = catalog::mi210();
+    for case in 0..6usize {
+        let text = gen_spec(&mut rng, case % 2 == 0);
+        let spec = StudySpec::parse(&text)
+            .unwrap_or_else(|e| panic!("case {case} spec invalid: {e}\n{text}"));
+        let resolved = spec.resolve(&device).unwrap();
+        let opts = RunOptions { threads: 1, chunk: 0 };
+        let single = run_single(&resolved, opts);
+        for n in [2usize, 3, 5] {
+            let shard = rng.below(n as u64) as usize;
+            let point = match rng.below(4) {
+                0 => FaultPoint::BeforeWrite,
+                1 => FaultPoint::AfterRows(1 + rng.below(3) as usize),
+                2 => FaultPoint::NoFooter,
+                _ => FaultPoint::Hang,
+            };
+            let fault = FaultSpec { shard, point, attempts: 1 };
+            let (merged, retries) =
+                run_elastic_faulted(&resolved, n, opts, fault);
+            assert_identical(
+                &single,
+                &merged,
+                &format!("case {case} n={n} fault {fault:?}\n{text}"),
+            );
+            // every fault class except a too-deep after_rows must
+            // actually have forced a re-execution
+            if !matches!(point, FaultPoint::AfterRows(_)) {
+                assert_eq!(retries, 1, "case {case} n={n} fault {fault:?}");
+            }
+        }
+    }
+}
+
+/// A shard that fails more times than `--max-retries` allows must fail
+/// the whole run with a loud, shard-identifying error.
+#[test]
+fn exhausted_retry_budget_names_the_shard() {
+    let spec = StudySpec::parse(
+        r#"{"name": "tiny", "axes": {"hidden": [1024], "tp": [1, 2, 4]}}"#,
+    )
+    .unwrap();
+    let resolved = spec.resolve(&catalog::mi210()).unwrap();
+    let opts = RunOptions { threads: 1, chunk: 0 };
+    let fault = FaultSpec {
+        shard: 2,
+        point: FaultPoint::NoFooter,
+        attempts: usize::MAX,
+    };
+    let backend =
+        BufferBackend::from_study(&resolved, 3, false, opts, Some(fault))
+            .unwrap();
+    let elastic = ElasticOptions { max_retries: 2, stall_timeout: None };
+    let mut sink = VecSink::new();
+    let err = {
+        let mut sinks: Vec<&mut dyn RowSink> = vec![&mut sink];
+        run_elastic_study(&resolved, 3, &elastic, &backend, &mut sinks)
+            .expect_err("the fault outlives the retry budget")
+            .to_string()
+    };
+    assert!(err.contains("shard 2/3"), "{err}");
+    assert!(err.contains("failed permanently"), "{err}");
+    assert!(err.contains("3 attempt(s)"), "{err}");
+    assert!(err.contains("--max-retries 2"), "{err}");
+    assert!(err.contains("truncated"), "{err}");
 }
 
 /// The zoo source shards by row index the same way.
