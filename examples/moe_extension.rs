@@ -1,79 +1,97 @@
 //! Extension (paper §6.1.1): Mixture-of-Experts Comp-vs.-Comm.
 //!
 //! MoEs add expert-parallel all-to-all on the critical path while cutting
-//! per-token compute (only top-k experts activate). This example extends
-//! the analysis to a Switch-Transformer-style layer and shows the paper's
-//! argument: MoE's compute savings make the communication share *larger*.
+//! per-token compute (only top-k experts activate). Since expert
+//! parallelism is a first-class strategy axis, this example builds the
+//! *real* MoE graph — `ep > 1` emits dispatch/combine `AllToAll` ops
+//! around the FC sub-layer, priced on the EP topology group — instead of
+//! the old hand-priced wide-FFN proxy, and shows the paper's argument:
+//! MoE's compute savings make the communication share *larger*.
 //!
 //! Run: `cargo run --release --example moe_extension`
 
-use commscale::collectives::{CollectiveCost, CollectiveKind};
 use commscale::graph::{build_layer_graph, GraphOptions};
 use commscale::hw::catalog;
-use commscale::model::{ModelConfig, Precision};
+use commscale::model::{ModelConfig, MoeConfig, Precision};
 use commscale::report::Table;
 use commscale::sim::{simulate, AnalyticCost};
 
 fn main() {
     let device = catalog::mi210();
-    let cfg = ModelConfig {
+    let dense_cfg = ModelConfig {
         hidden: 16384,
         seq_len: 2048,
         batch: 1,
         layers: 1,
         heads: 128,
         ffn_mult: 4,
-        par: commscale::parallelism::ParallelismSpec::tp_dp(16, 1),
+        par: commscale::parallelism::ParallelismSpec::tp_dp(16, 64),
         precision: Precision::F16,
+        workload: commscale::inference::Workload::Training,
+        moe: MoeConfig::dense(),
     };
 
     // dense baseline
-    let g = build_layer_graph(&cfg, GraphOptions::default());
-    let cost = AnalyticCost::new(device.clone(), cfg.precision, cfg.tp(), cfg.dp());
+    let g = build_layer_graph(&dense_cfg, GraphOptions::default());
+    let cost =
+        AnalyticCost::from_spec(device.clone(), dense_cfg.precision, dense_cfg.par);
     let dense = simulate(&g, &cost);
 
-    // MoE variant: top-1 routing over E experts sharded expert-parallel.
-    // Per-token FC compute stays the size of ONE expert's FFN (same as
-    // dense FC), but with capacity factor c tokens move twice through an
-    // all-to-all of the full activation (dispatch + combine).
-    let coll = CollectiveCost::new(device.clone());
-    let act_bytes = cfg.precision.bytes() * cfg.batch * cfg.seq_len * cfg.hidden;
+    // MoE variants: Switch-style top-1 routing over E experts, one expert
+    // per EP rank, capacity factor 1.25. Per-token FC compute stays the
+    // size of ONE expert's FFN (same as dense FC), but every routed token
+    // moves through a dispatch + combine all-to-all each direction.
+    let capacity = 1.25;
     let ep_degrees = [8u64, 16, 32, 64];
 
     let mut t = Table::new(
-        "dense vs MoE (Switch-style, top-1, capacity 1.25)",
-        &["setup", "compute/iter", "AR comm", "A2A comm", "comm %"],
+        &format!("dense vs MoE (Switch-style, top-1, capacity x{capacity})"),
+        &["setup", "compute/iter", "AR comm", "A2A comm", "comm %", "weights"],
     );
-    let pct = |comm: f64, comp: f64| 100.0 * comm / (comm + comp);
     t.row(vec![
         "dense TP=16".into(),
         format!("{:.2} ms", dense.compute_time * 1e3),
         format!("{:.2} ms", dense.serialized_comm * 1e3),
         "-".into(),
         format!("{:.1}", 100.0 * dense.comm_fraction()),
+        "1x".into(),
     ]);
 
     for ep in ep_degrees {
-        let capacity = 1.25;
-        // 2 all-to-alls (dispatch/combine) fwd + 2 bwd, each of c·act bytes
-        let a2a_bytes = (capacity * act_bytes as f64) as u64;
-        let a2a_time =
-            4.0 * coll.time(CollectiveKind::AllToAll, a2a_bytes, ep);
-        // compute is unchanged (top-1: one expert FFN per token) — the MoE
-        // *capacity* grew by E for free, which is the whole MoE pitch.
-        let comm = dense.serialized_comm + a2a_time;
+        let cfg = ModelConfig {
+            par: dense_cfg.par.with_ep(ep),
+            // E = ep experts (one per EP rank); top-1 keeps per-token
+            // compute at a single expert's FFN.
+            moe: MoeConfig {
+                experts: ep,
+                top_k: 1,
+                capacity_pct: (capacity * 100.0) as u64,
+            },
+            ..dense_cfg
+        };
+        cfg.validate().expect("MoE config must validate");
+        let g = build_layer_graph(&cfg, GraphOptions::default());
+        let cost =
+            AnalyticCost::from_spec(device.clone(), cfg.precision, cfg.par);
+        let moe = simulate(&g, &cost);
+        let a2a_time = moe.serialized_comm - dense.serialized_comm;
+        // the EP degree and the FFN-weight growth are *different* facts:
+        // EP={ep} shards E={ep} experts one-per-rank, which grows the FFN
+        // parameter count x{ep}; the token buffers grow only x{capacity}.
         t.row(vec![
-            format!("MoE EP={ep} (capacity x{ep})"),
-            format!("{:.2} ms", dense.compute_time * 1e3),
+            format!("MoE E={ep} EP={ep} (capacity x{capacity})"),
+            format!("{:.2} ms", moe.compute_time * 1e3),
             format!("{:.2} ms", dense.serialized_comm * 1e3),
             format!("{:.2} ms", a2a_time * 1e3),
-            format!("{:.1}", pct(comm, dense.compute_time)),
+            format!("{:.1}", 100.0 * moe.comm_fraction()),
+            format!("{ep}x FFN"),
         ]);
     }
     print!("{}", t.render());
     println!(
         "\ntakeaway (§6.1.1): expert parallelism adds serialized all-to-all, so the \
          communication share rises even though model capacity grows — MoEs make \
-         the paper's communication problem MORE pressing, not less."
+         the paper's communication problem MORE pressing, not less.\n\
+         (try `commscale study moe_comm_crossover` for the searchable grid)"
     );
 }

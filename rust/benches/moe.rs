@@ -1,0 +1,186 @@
+//! Bench: MoE expert-parallel sweeps through the sweep engine — exact
+//! throughput on a routed (top-k, capacity-factored) grid, the surrogate
+//! speedup on the same grid, and the structural gates that make the
+//! numbers trustworthy: engine bits == serial reference, every MoE point
+//! pays a strictly positive serialized all-to-all on top of its dense
+//! twin, and a dense-default grid built with explicit MoE axes stays
+//! bit-identical to one built without them (the byte-freeze contract).
+//! Writes the machine-readable trajectory record `BENCH_moe.json`.
+//!
+//! Env knobs (used by CI): `COMMSCALE_BENCH_QUICK=1` / `--quick` shrinks
+//! the grid and measurement budget and drops the surrogate-speedup gate
+//! (the grid is too small to amortize digest building on CI runners).
+
+use std::path::Path;
+use std::time::Duration;
+
+use commscale::hw::catalog;
+use commscale::sweep::{
+    run_at, run_serial_reference, Fidelity, GridBuilder, PointMetrics,
+    ScenarioGrid,
+};
+use commscale::util::microbench::{bench_header, fmt_time, Bench};
+use commscale::util::Json;
+
+/// The shared scalar axes: hidden × seq_len × TP at a fixed DP=8 so the
+/// dense grid and the MoE grid cross in the same order and pair
+/// positionally. Quick mode keeps the same shape, fewer cells.
+fn scalar_axes(quick: bool) -> GridBuilder {
+    let d = catalog::mi210();
+    let b = GridBuilder::new(&d).layers(&[2]).dp(&[8]);
+    if quick {
+        b.hidden(&[4096]).seq_len(&[2048]).tp(&[1, 8])
+    } else {
+        b.hidden(&[4096, 8192, 16384])
+            .seq_len(&[2048, 8192])
+            .tp(&[1, 4, 8])
+    }
+}
+
+/// Dense twin: no MoE axes at all — the pre-MoE grid shape.
+fn dense_grid(quick: bool) -> ScenarioGrid {
+    scalar_axes(quick).build()
+}
+
+/// Dense twin with the MoE axes spelled out at their defaults — must be
+/// bit-identical to `dense_grid` (the byte-freeze gate).
+fn dense_grid_explicit(quick: bool) -> ScenarioGrid {
+    scalar_axes(quick)
+        .experts(&[1])
+        .top_k(&[1])
+        .capacity_pct(&[100])
+        .ep(&[1])
+        .build()
+}
+
+/// The routed grid: 8 experts, top-2, 1.25× capacity, EP=4 over the same
+/// scalar axes — one MoE point per dense point, in the same order.
+fn moe_grid(quick: bool) -> ScenarioGrid {
+    scalar_axes(quick)
+        .experts(&[8])
+        .top_k(&[2])
+        .capacity_pct(&[125])
+        .ep(&[4])
+        .build()
+}
+
+fn bits(rows: &[PointMetrics]) -> Vec<[u64; 11]> {
+    rows.iter().map(|m| m.to_bits()).collect()
+}
+
+fn main() {
+    bench_header("commscale moe (expert-parallel all-to-all)");
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("COMMSCALE_BENCH_QUICK").is_ok();
+
+    let grid = moe_grid(quick);
+    let n = grid.len();
+    println!("moe grid: {n} points (8 experts, top-2, capacity 1.25, EP=4)");
+
+    // -- correctness gates before timing anything --------------------------
+    let reference = run_serial_reference(&grid);
+    let engine = run_at(&grid, 4, Fidelity::Exact);
+    assert_eq!(
+        bits(&engine),
+        bits(&reference),
+        "engine diverged from the serial reference on the MoE grid"
+    );
+
+    // dense byte-freeze: spelling out the default MoE axes must not move
+    // a single bit relative to a grid that never mentions them
+    let dense = dense_grid(quick);
+    let dense_explicit = dense_grid_explicit(quick);
+    assert_eq!(dense.len(), dense_explicit.len());
+    let dense_rows = run_serial_reference(&dense);
+    assert_eq!(
+        bits(&dense_rows),
+        bits(&run_serial_reference(&dense_explicit)),
+        "explicit default MoE axes broke the dense byte-freeze"
+    );
+
+    // a2a share: every MoE point pays a strictly positive serialized
+    // all-to-all on top of its positionally-paired dense twin (the TP
+    // all-reduces are activation-shaped and identical across the pair)
+    assert_eq!(dense_rows.len(), reference.len());
+    let mut max_share = 0.0f64;
+    for (i, (d, m)) in dense_rows.iter().zip(&reference).enumerate() {
+        let delta = m.serialized_comm - d.serialized_comm;
+        assert!(
+            delta > 0.0,
+            "point {i}: MoE serialized comm did not exceed its dense twin"
+        );
+        max_share = max_share.max(delta / m.makespan);
+    }
+    println!(
+        "gates: engine == serial reference, dense byte-freeze holds, \
+         a2a share up to {:.2}% of makespan",
+        max_share * 100.0
+    );
+
+    // -- exact-fidelity sweep throughput (fresh contexts per iteration) ----
+    let budget = Duration::from_millis(if quick { 300 } else { 2000 });
+    let res = Bench::new("moe_exact_sweep")
+        .measure(budget)
+        .max_iters(if quick { 10 } else { 50 })
+        .run(|| run_at(&grid, 0, Fidelity::Exact).len());
+    let exact_secs = res.summary.median;
+    let pts_per_sec = n as f64 / exact_secs;
+    println!(
+        "exact sweep: {} median — {pts_per_sec:.0} points/s",
+        fmt_time(exact_secs)
+    );
+
+    // -- surrogate sweep on the same grid ----------------------------------
+    let sur_res = Bench::new("moe_surrogate_sweep")
+        .measure(budget)
+        .max_iters(if quick { 10 } else { 50 })
+        .run(|| run_at(&grid, 0, Fidelity::Surrogate).len());
+    let sur_secs = sur_res.summary.median;
+    let sur_speedup = exact_secs / sur_secs;
+
+    // surrogate fidelity: the digest's MoE term must keep the routed
+    // grid inside the same error budget as the dense studies
+    let surrogate = run_at(&grid, 0, Fidelity::Surrogate);
+    let max_rel_err = reference
+        .iter()
+        .zip(&surrogate)
+        .map(|(e, s)| ((s.makespan - e.makespan) / e.makespan).abs())
+        .fold(0.0f64, f64::max);
+    println!(
+        "surrogate sweep: {} median — {sur_speedup:.1}x vs exact, max rel \
+         makespan err {:.2}%",
+        fmt_time(sur_secs),
+        max_rel_err * 100.0
+    );
+
+    res.write_json_with(
+        Path::new("BENCH_moe.json"),
+        vec![
+            ("grid_points", Json::num(n as f64)),
+            ("exact_sweep_s", Json::num(exact_secs)),
+            ("points_per_sec", Json::num(pts_per_sec)),
+            ("surrogate_sweep_s", Json::num(sur_secs)),
+            ("surrogate_speedup", Json::num(sur_speedup)),
+            ("surrogate_max_rel_err", Json::num(max_rel_err)),
+            ("a2a_share_max", Json::num(max_share)),
+            ("quick", Json::Bool(quick)),
+        ],
+    )
+    .expect("write BENCH_moe.json");
+    println!("wrote BENCH_moe.json");
+
+    // -- acceptance ---------------------------------------------------------
+    assert!(
+        max_rel_err <= 0.15,
+        "acceptance: surrogate max relative makespan error on the MoE \
+         grid must stay within the 15% budget, got {:.2}%",
+        max_rel_err * 100.0
+    );
+    if !quick {
+        assert!(
+            sur_speedup >= 2.0,
+            "acceptance: surrogate must be >= 2x the exact sweep on the \
+             full MoE grid, got {sur_speedup:.1}x"
+        );
+    }
+}

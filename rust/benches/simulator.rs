@@ -23,6 +23,7 @@ fn main() {
         par: commscale::parallelism::ParallelismSpec::tp_dp(64, 16),
         precision: Precision::F16,
         workload: commscale::inference::Workload::Training,
+        moe: commscale::model::MoeConfig::dense(),
     };
     let g = build_layer_graph(&cfg, GraphOptions::default());
     let cost = AnalyticCost::new(catalog::mi210(), cfg.precision, cfg.tp(), cfg.dp());

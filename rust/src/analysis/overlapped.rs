@@ -36,6 +36,7 @@ pub fn point_config(hidden: u64, slb: u64) -> ModelConfig {
         par: crate::parallelism::ParallelismSpec::tp_dp(16, 4),
         precision: Precision::F16,
         workload: crate::inference::Workload::Training,
+        moe: crate::model::MoeConfig::dense(),
     }
 }
 

@@ -35,6 +35,7 @@ pub fn point_config(hidden: u64, seq_len: u64, tp: u64) -> ModelConfig {
         par: crate::parallelism::ParallelismSpec::tp_dp(tp, 1),
         precision: Precision::F16,
         workload: crate::inference::Workload::Training,
+        moe: crate::model::MoeConfig::dense(),
     }
 }
 

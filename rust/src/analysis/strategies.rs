@@ -106,6 +106,7 @@ pub fn factorizations(world: u64) -> Vec<ParallelismSpec> {
                 pp,
                 microbatches: if pp > 1 { MICROBATCHES } else { 1 },
                 dp,
+                ep: 1,
                 seq_par: false,
             };
             out.push(base);

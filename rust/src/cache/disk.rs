@@ -131,6 +131,11 @@ pub(crate) fn op_to_json(k: &OpKind) -> Json {
             ("kind", Json::str("sendrecv")),
             ("bytes", u64_str(bytes)),
         ]),
+        OpKind::AllToAll { bytes, class } => Json::obj(vec![
+            ("kind", Json::str("alltoall")),
+            ("bytes", u64_str(bytes)),
+            ("class", Json::str(class_str(class))),
+        ]),
     }
 }
 
@@ -161,6 +166,10 @@ pub(crate) fn op_from_json(v: &Json) -> Result<OpKind> {
             class: parse_class(v.str_field("class")?)?,
         }),
         "sendrecv" => Ok(OpKind::SendRecv { bytes: field("bytes")? }),
+        "alltoall" => Ok(OpKind::AllToAll {
+            bytes: field("bytes")?,
+            class: parse_class(v.str_field("class")?)?,
+        }),
         other => Err(Error::Study(format!("unknown op kind {other:?}"))),
     }
 }
@@ -198,11 +207,30 @@ fn cfg_to_json(cfg: &ModelConfig) -> Json {
     if let Workload::Decode { gen_len } = cfg.workload {
         fields.push(("gen_len", u64_str(gen_len)));
     }
+    // MoE fields ride only on MoE points: a dense config's snapshot line
+    // stays byte-identical to the pre-MoE format, and old snapshots
+    // (which never carry these keys) keep parsing as dense.
+    if cfg.par.ep != 1 {
+        fields.push(("ep", u64_str(cfg.par.ep)));
+    }
+    if !cfg.moe.is_dense() {
+        fields.push(("experts", u64_str(cfg.moe.experts)));
+        fields.push(("top_k", u64_str(cfg.moe.top_k)));
+        fields.push(("capacity_pct", u64_str(cfg.moe.capacity_pct)));
+    }
     Json::obj(fields)
 }
 
 fn cfg_from_json(v: &Json) -> Result<ModelConfig> {
     let field = |name: &str| -> Result<u64> { parse_u64(v.req(name)?, name) };
+    // Absent MoE keys mean a dense point (possibly from a pre-MoE
+    // snapshot — same crate version, same cost model, still valid).
+    let opt = |name: &str, default: u64| -> Result<u64> {
+        match v.get(name) {
+            Some(j) => parse_u64(j, name),
+            None => Ok(default),
+        }
+    };
     let workload = match v.str_field("workload")? {
         "training" => Workload::Training,
         "prefill" => Workload::Prefill,
@@ -223,12 +251,18 @@ fn cfg_from_json(v: &Json) -> Result<ModelConfig> {
             pp: field("pp")?,
             microbatches: field("microbatches")?,
             dp: field("dp")?,
+            ep: opt("ep", 1)?,
             seq_par: v.req("seq_par")?.as_bool().ok_or_else(|| {
                 Error::Study("seq_par is not a bool".into())
             })?,
         },
         precision: precision_from_str(v.str_field("precision")?)?,
         workload,
+        moe: crate::model::MoeConfig {
+            experts: opt("experts", 1)?,
+            top_k: opt("top_k", 1)?,
+            capacity_pct: opt("capacity_pct", 100)?,
+        },
     })
 }
 
@@ -537,6 +571,14 @@ mod tests {
             (7, OpKind::LayerNorm { rows: 2048, h: 4096 }, 3.5e-6),
             (7, OpKind::SendRecv { bytes: 12345 }, 9.0e-5),
             (7, OpKind::KvRead { bytes: 1 << 55 }, 2.0e-4),
+            (
+                7,
+                OpKind::AllToAll {
+                    bytes: 1 << 53,
+                    class: CommClass::Serialized,
+                },
+                4.2e-4,
+            ),
         ]
     }
 
@@ -553,10 +595,17 @@ mod tests {
                 pp: 2,
                 microbatches: 4,
                 dp: 2,
+                ep: 2,
                 seq_par: false,
             },
             precision: Precision::F16,
             workload: Workload::Decode { gen_len: 128 },
+            // non-dense so the roundtrip covers the optional MoE keys
+            moe: crate::model::MoeConfig {
+                experts: 8,
+                top_k: 2,
+                capacity_pct: 125,
+            },
         };
         let training_cfg = ModelConfig::default();
         vec![

@@ -534,6 +534,7 @@ mod tests {
             par: ParallelismSpec::tp_dp(8, 1),
             precision: Precision::F16,
             workload: crate::inference::Workload::Training,
+            moe: crate::model::MoeConfig::dense(),
         };
         let m = PointMetrics { makespan: 1.5, ..PointMetrics::default() };
         cache.put_point(7, &cfg, GraphOptions::default(), Fidelity::Exact, m);

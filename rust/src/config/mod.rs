@@ -45,6 +45,7 @@ impl SweepGrid {
                             par: ParallelismSpec::tp_dp(tp, 1),
                             precision: Precision::F16,
                             workload: crate::inference::Workload::Training,
+                            moe: crate::model::MoeConfig::dense(),
                         });
                     }
                 }
@@ -105,6 +106,7 @@ pub fn fig14_config() -> ModelConfig {
         par: ParallelismSpec::tp_dp(128, 4),
         precision: Precision::F16,
         workload: crate::inference::Workload::Training,
+        moe: crate::model::MoeConfig::dense(),
     }
 }
 

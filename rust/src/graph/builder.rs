@@ -101,6 +101,11 @@ pub struct GraphShapeKey {
     /// forward shapes. `gen_len` is payload-only (KV-read bytes, attention
     /// GEMM dims) and deliberately absent here.
     pub workload: WorkloadKind,
+    /// Expert-parallel all-to-alls are emitted around the FC sub-layer
+    /// (`ep > 1`). The MoE payload knobs (`experts`, `top_k`,
+    /// `capacity_factor`) only move GEMM dims and collective bytes and are
+    /// deliberately absent here.
+    pub ep_a2a: bool,
 }
 
 impl GraphShapeKey {
@@ -117,6 +122,7 @@ impl GraphShapeKey {
                 && cfg.workload.is_training(),
             non_gemm: opts.non_gemm,
             workload: cfg.workload.kind(),
+            ep_a2a: cfg.ep() > 1,
         }
     }
 }
@@ -235,8 +241,31 @@ fn emit_layer_graph(cfg: &ModelConfig, opts: GraphOptions, em: &mut Emitter<'_>)
     let sp_div = if sp_on { tp } else { 1 };
     let sp_rows = bs / sp_div;
 
-    // layer weight parameters per device (for DP gradient ARs, Eq. 8)
-    let layer_param_bytes = p * ((3 * h * h) + (h * h) + (h * f) + (f * h)) / tp;
+    // MoE: each device holds `experts/ep` experts; across the EP group the
+    // routed assignments (bs·ep·top_k, padded to the capacity factor)
+    // split evenly over the experts, so one local expert's buffer is
+    // `cap_rows` token rows. At the dense default this is exactly `bs` —
+    // every FC GEMM shape below reduces to the dense one.
+    let experts = cfg.experts();
+    let ep = cfg.ep();
+    let local_experts = experts / ep;
+    let cap_rows =
+        bs * ep * cfg.top_k() * cfg.moe.capacity_pct / (100 * experts);
+    // Token dispatch/combine payload: the routed rows this device sends
+    // (top_k × capacity × the dense activation, Eq. 5); the collective
+    // model applies the (n−1)/n wire factor.
+    let a2a_bytes = p * cfg.moe_rows(bs) * h;
+    let a2a_on = ep > 1;
+
+    // layer weight parameters per device (for DP gradient ARs, Eq. 8);
+    // the dense expression is kept verbatim so its integer divisions —
+    // and therefore every existing golden — never move.
+    let layer_param_bytes = if experts > 1 {
+        p * ((3 * h * h) + (h * h)) / tp
+            + p * local_experts * ((h * f) + (f * h)) / tp
+    } else {
+        p * ((3 * h * h) + (h * h) + (h * f) + (f * h)) / tp
+    };
 
     // Collected only when building: rewrites never touch deps, and an
     // empty Vec never allocates.
@@ -335,19 +364,36 @@ fn emit_layer_graph(cfg: &ModelConfig, opts: GraphOptions, em: &mut Emitter<'_>)
                     &[fc_in],
                 );
             }
+            if a2a_on {
+                // token dispatch: every token travels to the EP rank
+                // holding its routed expert before fc1 can run
+                fc_in = em.add(
+                    OpKind::AllToAll { bytes: a2a_bytes, class: CommClass::Serialized },
+                    Phase::Forward,
+                    &[fc_in],
+                );
+            }
             let fc1 = em.add(
-                OpKind::Gemm { m: bs, n: f / tp, k: h, count: 1 },
+                OpKind::Gemm { m: cap_rows, n: f / tp, k: h, count: local_experts },
                 Phase::Forward,
                 &[fc_in],
             );
             let fc2 = em.add(
-                OpKind::Gemm { m: bs, n: h, k: f / tp, count: 1 },
+                OpKind::Gemm { m: cap_rows, n: h, k: f / tp, count: local_experts },
                 Phase::Forward,
                 &[fc1],
             );
             let mut tail2 = fc2;
+            if a2a_on {
+                // combine: expert outputs return to their home ranks
+                tail2 = em.add(
+                    OpKind::AllToAll { bytes: a2a_bytes, class: CommClass::Serialized },
+                    Phase::Forward,
+                    &[fc2],
+                );
+            }
             if tp_on {
-                tail2 = tp_reduce(em, sp_on, act_bytes, Phase::Forward, fc2);
+                tail2 = tp_reduce(em, sp_on, act_bytes, Phase::Forward, tail2);
             }
             if opts.non_gemm {
                 tail2 = em.add(
@@ -400,30 +446,47 @@ fn emit_layer_graph(cfg: &ModelConfig, opts: GraphOptions, em: &mut Emitter<'_>)
                     dep(&g_in),
                 ));
             }
+            if a2a_on {
+                // the combine's mirror: output gradients scatter back to
+                // the EP ranks holding each token's experts
+                g_in = Some(em.add(
+                    OpKind::AllToAll { bytes: a2a_bytes, class: CommClass::Serialized },
+                    Phase::Backward,
+                    dep(&g_in),
+                ));
+            }
             let fc2_ig = em.add(
-                OpKind::Gemm { m: bs, n: f / tp, k: h, count: 1 },
+                OpKind::Gemm { m: cap_rows, n: f / tp, k: h, count: local_experts },
                 Phase::Backward,
                 dep(&g_in),
             );
             let fc2_wg = em.add(
-                OpKind::Gemm { m: f / tp, n: h, k: bs, count: 1 },
+                OpKind::Gemm { m: f / tp, n: h, k: cap_rows, count: local_experts },
                 Phase::Backward,
                 dep(&g_in),
             );
             let fc1_ig = em.add(
-                OpKind::Gemm { m: bs, n: h, k: f / tp, count: 1 },
+                OpKind::Gemm { m: cap_rows, n: h, k: f / tp, count: local_experts },
                 Phase::Backward,
                 &[fc2_ig],
             );
             let fc1_wg = em.add(
-                OpKind::Gemm { m: h, n: f / tp, k: bs, count: 1 },
+                OpKind::Gemm { m: h, n: f / tp, k: cap_rows, count: local_experts },
                 Phase::Backward,
                 &[fc2_ig],
             );
             // column-parallel fc1's input-grad is a partial sum
             let mut btail = fc1_ig;
+            if a2a_on {
+                // the dispatch's mirror: token gradients return home
+                btail = em.add(
+                    OpKind::AllToAll { bytes: a2a_bytes, class: CommClass::Serialized },
+                    Phase::Backward,
+                    &[fc1_ig],
+                );
+            }
             if tp_on {
-                btail = tp_reduce(em, sp_on, act_bytes, Phase::Backward, fc1_ig);
+                btail = tp_reduce(em, sp_on, act_bytes, Phase::Backward, btail);
             }
             if opts.non_gemm {
                 btail = em.add(
@@ -559,7 +622,16 @@ mod tests {
             par: ParallelismSpec::tp_dp(tp, dp),
             precision: Precision::F16,
             workload: crate::inference::Workload::Training,
+            moe: crate::model::MoeConfig::dense(),
         }
+    }
+
+    fn moe_cfg(tp: u64, dp: u64, ep: u64, experts: u64) -> ModelConfig {
+        cfg(tp, dp).with_ep(ep).with_moe(crate::model::MoeConfig {
+            experts,
+            top_k: 2,
+            capacity_pct: 125,
+        })
     }
 
     #[test]
@@ -836,6 +908,125 @@ mod tests {
             GraphShapeKey::of(&cfg(4, 4).with_pp(2, 4), opts),
             GraphShapeKey::of(&cfg(4, 4).with_pp(2, 8), opts)
         );
+    }
+
+    #[test]
+    fn moe_emits_four_a2a_per_layer_in_training() {
+        // dispatch + combine × fwd + bwd, every one serialized on the EP
+        // group with the top_k × capacity payload
+        let c = moe_cfg(1, 4, 4, 8);
+        c.validate().unwrap();
+        let g = build_layer_graph(&c, GraphOptions::default());
+        g.validate().unwrap();
+        let a2a: Vec<u64> = g
+            .ops
+            .iter()
+            .filter_map(|o| match o.kind {
+                OpKind::AllToAll { bytes, .. } => Some(bytes),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(a2a.len() as u64, 4 * c.layers);
+        let p = c.precision.bytes();
+        let dense_act = p * c.batch * c.seq_len * c.hidden;
+        // top_k=2, capacity 1.25 → 2.5× the dense activation
+        assert!(a2a.iter().all(|&b| b == dense_act * 250 / 100));
+        // forward-only workloads emit dispatch + combine only
+        let pf = c.with_workload(Workload::Prefill);
+        let g = build_layer_graph(&pf, GraphOptions::default());
+        let n = g
+            .ops
+            .iter()
+            .filter(|o| matches!(o.kind, OpKind::AllToAll { .. }))
+            .count() as u64;
+        assert_eq!(n, 2 * c.layers);
+    }
+
+    #[test]
+    fn moe_without_ep_emits_no_a2a_but_scales_gemm_rows() {
+        // experts on a single rank: payload-only change, no communication
+        let c = moe_cfg(1, 1, 1, 8);
+        c.validate().unwrap();
+        let g = build_layer_graph(&c, GraphOptions::default());
+        assert!(!g.ops.iter().any(|o| matches!(o.kind, OpKind::AllToAll { .. })));
+        // same shape as the dense graph — one template serves both
+        assert_eq!(
+            GraphShapeKey::of(&c, GraphOptions::default()),
+            GraphShapeKey::of(&cfg(1, 1), GraphOptions::default())
+        );
+        // the 8 local experts each run their capacity buffer: total FC
+        // rows = top_k × capacity × dense rows
+        let bs = c.batch * c.seq_len;
+        let fc1_rows: u64 = g
+            .ops
+            .iter()
+            .filter(|o| o.phase == Phase::Forward)
+            .filter_map(|o| match o.kind {
+                OpKind::Gemm { m, n, count, .. } if n == c.ffn() => {
+                    Some(m * count)
+                }
+                _ => None,
+            })
+            .sum();
+        assert_eq!(fc1_rows, c.layers * bs * 250 / 100);
+    }
+
+    #[test]
+    fn dense_default_graph_is_untouched_by_the_moe_axis() {
+        // the core byte-identity claim at the graph layer: a config with
+        // every MoE knob at its default builds the exact op list the
+        // pre-MoE builder produced
+        for (tp, dp) in [(1u64, 1u64), (8, 4)] {
+            let g = build_layer_graph(&cfg(tp, dp), GraphOptions::default());
+            assert!(
+                !g.ops.iter().any(|o| matches!(o.kind, OpKind::AllToAll { .. }))
+            );
+        }
+    }
+
+    #[test]
+    fn moe_shape_key_tracks_ep_only() {
+        let opts = GraphOptions::default();
+        let dense = GraphShapeKey::of(&cfg(2, 4), opts);
+        // ep > 1 changes the topology (a2a ops appear)…
+        assert_ne!(dense, GraphShapeKey::of(&moe_cfg(2, 4, 4, 8), opts));
+        // …but experts/top_k/capacity are payload-only
+        let a = moe_cfg(2, 4, 4, 8);
+        let mut b = moe_cfg(2, 4, 4, 16);
+        b.moe.top_k = 1;
+        b.moe.capacity_pct = 100;
+        assert_eq!(GraphShapeKey::of(&a, opts), GraphShapeKey::of(&b, opts));
+    }
+
+    #[test]
+    fn moe_rewrite_matches_fresh_build() {
+        let opts = GraphOptions::default();
+        let from = moe_cfg(2, 4, 4, 8);
+        let mut to = moe_cfg(2, 4, 4, 16);
+        to.hidden = 2048;
+        to.heads = 32;
+        to.moe.capacity_pct = 100;
+        let mut template = build_layer_graph(&from, opts);
+        rewrite_layer_graph(&to, opts, &mut template);
+        let fresh = build_layer_graph(&to, opts);
+        assert_eq!(template.ops.len(), fresh.ops.len());
+        for (a, b) in template.ops.iter().zip(&fresh.ops) {
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.deps, b.deps);
+        }
+    }
+
+    #[test]
+    fn moe_dp_ar_carries_local_expert_grads() {
+        // ep=4 of 8 experts: each rank holds 2 experts' FC weights, so
+        // the DP gradient AR carries attn + 2× FC bytes
+        let c = moe_cfg(1, 4, 4, 8);
+        let g = build_layer_graph(&c, GraphOptions::default());
+        let h = c.hidden;
+        let f = c.ffn();
+        let p = c.precision.bytes();
+        let want = c.layers * (p * (3 * h * h + h * h) + p * 2 * (h * f + f * h));
+        assert_eq!(g.total_comm_bytes(CommClass::Overlappable), want);
     }
 
     #[test]

@@ -53,6 +53,12 @@ pub enum OpKind {
     /// pipeline stage. Runs on its own stream; nothing but the iteration
     /// end waits on it (the receiving stage is modeled by the bubble).
     SendRecv { bytes: u64 },
+    /// MoE expert-parallel all-to-all of `bytes` over the EP group —
+    /// token dispatch before the expert FFN and combine after it. Sits
+    /// on the serialized stream like the TP collectives: the expert GEMMs
+    /// cannot start until their tokens arrive (LinS prices exactly this
+    /// `Alltoall(volume, scale)` term next to the TP collectives).
+    AllToAll { bytes: u64, class: CommClass },
 }
 
 impl OpKind {
@@ -63,6 +69,7 @@ impl OpKind {
                 | OpKind::ReduceScatter { .. }
                 | OpKind::AllGather { .. }
                 | OpKind::SendRecv { .. }
+                | OpKind::AllToAll { .. }
         )
     }
 
@@ -72,7 +79,8 @@ impl OpKind {
         match *self {
             OpKind::AllReduce { bytes, class }
             | OpKind::ReduceScatter { bytes, class }
-            | OpKind::AllGather { bytes, class } => Some((bytes, Some(class))),
+            | OpKind::AllGather { bytes, class }
+            | OpKind::AllToAll { bytes, class } => Some((bytes, Some(class))),
             OpKind::SendRecv { bytes } => Some((bytes, None)),
             _ => None,
         }
@@ -105,6 +113,7 @@ impl OpKind {
             OpKind::ReduceScatter { bytes, .. } => format!("rs-tp {bytes}B"),
             OpKind::AllGather { bytes, .. } => format!("ag-tp {bytes}B"),
             OpKind::SendRecv { bytes } => format!("p2p-pp {bytes}B"),
+            OpKind::AllToAll { bytes, .. } => format!("a2a-ep {bytes}B"),
         }
     }
 }
@@ -136,6 +145,7 @@ mod tests {
             .is_comm());
         assert!(OpKind::AllGather { bytes: 1, class: CommClass::Serialized }.is_comm());
         assert!(OpKind::SendRecv { bytes: 1 }.is_comm());
+        assert!(OpKind::AllToAll { bytes: 1, class: CommClass::Serialized }.is_comm());
         assert!(!OpKind::Gemm { m: 1, n: 1, k: 1, count: 1 }.is_comm());
     }
 
@@ -147,6 +157,12 @@ mod tests {
         assert_eq!((b, c), (64, Some(CommClass::Overlappable)));
         let (b, c) = OpKind::SendRecv { bytes: 7 }.comm_payload().unwrap();
         assert_eq!((b, c), (7, None));
+        // the EP all-to-all is serialized like the TP collectives: the
+        // expert GEMMs wait on their tokens
+        let (b, c) = OpKind::AllToAll { bytes: 9, class: CommClass::Serialized }
+            .comm_payload()
+            .unwrap();
+        assert_eq!((b, c), (9, Some(CommClass::Serialized)));
         assert!(OpKind::Elementwise { bytes: 1 }.comm_payload().is_none());
         // KV-cache reads are compute-stream work, not communication
         assert!(!OpKind::KvRead { bytes: 1 }.is_comm());
@@ -163,5 +179,8 @@ mod tests {
         assert_ne!(rs.label(), ag.label());
         assert_ne!(rs.label(), a);
         assert!(OpKind::SendRecv { bytes: 64 }.label().contains("p2p"));
+        let a2a = OpKind::AllToAll { bytes: 64, class: CommClass::Serialized };
+        assert!(a2a.label().contains("a2a"));
+        assert_ne!(a2a.label(), rs.label());
     }
 }

@@ -223,6 +223,7 @@ mod tests {
             par: ParallelismSpec::tp_dp(4, 2),
             precision: Precision::F16,
             workload,
+            moe: crate::model::MoeConfig::dense(),
         }
     }
 

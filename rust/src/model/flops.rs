@@ -146,6 +146,7 @@ mod tests {
             par: ParallelismSpec::none(),
             precision: Precision::F16,
             workload: crate::inference::Workload::Training,
+            moe: crate::model::MoeConfig::dense(),
         }
     }
 

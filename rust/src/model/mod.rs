@@ -12,6 +12,51 @@ pub use zoo::{zoo, ZooEntry};
 use crate::inference::Workload;
 use crate::parallelism::ParallelismSpec;
 
+/// Mixture-of-experts shape of the FFN sub-layer (§6.1.1 extension).
+///
+/// The dense default (`experts = 1`, `top_k = 1`, capacity 1.0) is the
+/// plain Transformer: every knob at its default leaves every byte of the
+/// dense model's graphs, costs, and studies untouched. With `experts > 1`
+/// each layer carries `experts` copies of the FC block, each token is
+/// routed to `top_k` of them, and the per-expert buffers are padded to
+/// `capacity_factor ×` the even-split token count.
+///
+/// The capacity factor is stored as fixed-point percent (`125` = 1.25×)
+/// so the config stays `Eq`/`Hash` — it is a cache key throughout the
+/// sweep engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct MoeConfig {
+    /// Experts per MoE layer (1 = dense).
+    pub experts: u64,
+    /// Experts each token is routed to.
+    pub top_k: u64,
+    /// Capacity factor in fixed-point percent (100 = 1.0, 125 = 1.25).
+    pub capacity_pct: u64,
+}
+
+impl Default for MoeConfig {
+    fn default() -> Self {
+        MoeConfig { experts: 1, top_k: 1, capacity_pct: 100 }
+    }
+}
+
+impl MoeConfig {
+    /// The plain dense Transformer (no MoE anywhere).
+    pub fn dense() -> MoeConfig {
+        MoeConfig::default()
+    }
+
+    /// True when the FFN is a single dense block.
+    pub fn is_dense(&self) -> bool {
+        self.experts <= 1
+    }
+
+    /// Capacity factor as a float (`capacity_pct / 100`).
+    pub fn capacity_factor(&self) -> f64 {
+        self.capacity_pct as f64 / 100.0
+    }
+}
+
 /// Hyperparameters of a (possibly sliced) Transformer training setup.
 ///
 /// Follows the paper's Table 1 naming: `hidden` = H, `seq_len` = SL,
@@ -34,6 +79,7 @@ pub struct ModelConfig {
     pub par: ParallelismSpec,
     pub precision: Precision,
     pub workload: Workload,
+    pub moe: MoeConfig,
 }
 
 impl Default for ModelConfig {
@@ -49,6 +95,7 @@ impl Default for ModelConfig {
             par: ParallelismSpec::none(),
             precision: Precision::F16,
             workload: Workload::Training,
+            moe: MoeConfig::dense(),
         }
     }
 }
@@ -99,6 +146,15 @@ impl ModelConfig {
         self.workload = w;
         self
     }
+    pub fn with_moe(mut self, moe: MoeConfig) -> Self {
+        self.moe = moe;
+        self
+    }
+    /// Expert-parallel degree (shorthand for setting `par.ep`).
+    pub fn with_ep(mut self, ep: u64) -> Self {
+        self.par.ep = ep;
+        self
+    }
 
     /// Tensor-parallel degree.
     pub fn tp(&self) -> u64 {
@@ -123,6 +179,29 @@ impl ModelConfig {
     /// Megatron-style sequence parallelism enabled.
     pub fn seq_par(&self) -> bool {
         self.par.seq_par
+    }
+    /// Expert-parallel degree.
+    pub fn ep(&self) -> u64 {
+        self.par.ep
+    }
+    /// Experts per MoE layer (1 = dense).
+    pub fn experts(&self) -> u64 {
+        self.moe.experts
+    }
+    /// Experts each token is routed to.
+    pub fn top_k(&self) -> u64 {
+        self.moe.top_k
+    }
+    /// MoE capacity factor as a float.
+    pub fn capacity_factor(&self) -> f64 {
+        self.moe.capacity_factor()
+    }
+    /// Token rows entering the expert FFNs, given `rows` dense token rows:
+    /// every token goes to `top_k` experts and per-expert buffers pad to
+    /// the capacity factor. Exactly `rows` at the dense default
+    /// (`top_k = 1`, capacity 1.0), so dense GEMM shapes never move.
+    pub fn moe_rows(&self, rows: u64) -> u64 {
+        rows * self.moe.top_k * self.moe.capacity_pct / 100
     }
     /// Layers held by one pipeline stage.
     pub fn stage_layers(&self) -> u64 {
@@ -198,21 +277,70 @@ impl ModelConfig {
         if matches!(self.workload, Workload::Decode { gen_len: 0 }) {
             return Err(crate::Error::Config(
                 "decode needs gen_len >= 1: zero generated tokens is an \
-                 empty workload"
+                 empty workload (the x gen_len step expansion and the \
+                 tok_latency / tokens_per_sec_device metrics all scale by \
+                 it) — set gen_len, or use prefill for a prompt-only pass"
                     .into(),
             ));
+        }
+        let m = &self.moe;
+        if m.experts == 0 || m.top_k == 0 || m.capacity_pct == 0 {
+            return Err(crate::Error::Config(format!(
+                "MoE knobs must be >= 1, got experts={} top_k={} \
+                 capacity_pct={}",
+                m.experts, m.top_k, m.capacity_pct
+            )));
+        }
+        if m.top_k > m.experts {
+            return Err(crate::Error::Config(format!(
+                "top_k {} cannot exceed experts {}: a token routes to at \
+                 most every expert",
+                m.top_k, m.experts
+            )));
+        }
+        if p.ep > 1 && m.experts == 1 {
+            return Err(crate::Error::Config(format!(
+                "ep {} needs a mixture to shard: set experts > 1 (or drop \
+                 ep for the dense model)",
+                p.ep
+            )));
+        }
+        if m.experts % p.ep != 0 {
+            return Err(crate::Error::Config(format!(
+                "ep {} must divide experts {}: every EP rank holds an equal \
+                 expert shard (adjust experts or ep)",
+                p.ep, m.experts
+            )));
         }
         Ok(())
     }
 
-    /// Total parameter count of the dense Transformer stack
-    /// (per-layer: QKV 3H²+3H, out H²+H, FC 2·f·H + f + H, 2 LayerNorms).
+    /// Total parameter count of the Transformer stack (per-layer: QKV
+    /// 3H²+3H, out H²+H, `experts` copies of the FC block 2·f·H + f + H,
+    /// 2 LayerNorms). At `experts = 1` this is exactly the dense formula.
     pub fn param_count(&self) -> u64 {
         let h = self.hidden;
         let f = self.ffn();
-        let per_layer =
-            (3 * h * h + 3 * h) + (h * h + h) + (h * f + f) + (f * h + h) + 4 * h;
+        let per_layer = (3 * h * h + 3 * h)
+            + (h * h + h)
+            + self.moe.experts * ((h * f + f) + (f * h + h))
+            + 4 * h;
         self.layers * per_layer
+    }
+
+    /// Parameters of the attention/LayerNorm part of the stack — these
+    /// stay dense-replicated across EP ranks.
+    pub fn attn_param_count(&self) -> u64 {
+        let h = self.hidden;
+        self.layers * ((3 * h * h + 3 * h) + (h * h + h) + 4 * h)
+    }
+
+    /// Parameters of all expert FFNs across the stack (`experts` copies
+    /// of the dense FC block per layer) — these shard over `ep`.
+    pub fn expert_param_count(&self) -> u64 {
+        let h = self.hidden;
+        let f = self.ffn();
+        self.layers * self.moe.experts * ((h * f + f) + (f * h + h))
     }
 
     /// The paper's H·SL memory-demand proxy (Fig 6).
@@ -285,6 +413,69 @@ mod tests {
         assert_eq!(c.microbatches(), 6);
         // microbatches are a pipeline concept: pp=1 reports 1
         assert_eq!(ModelConfig::default().microbatches(), 1);
+    }
+
+    #[test]
+    fn moe_knobs_validate_and_scale_params() {
+        let moe = MoeConfig { experts: 8, top_k: 2, capacity_pct: 125 };
+        let c = ModelConfig::default().with_moe(moe).with_dp(4).with_ep(4);
+        c.validate().unwrap();
+        assert!((c.capacity_factor() - 1.25).abs() < 1e-12);
+        // expert params are the dense FC block × experts; attention
+        // params never move
+        let dense = ModelConfig::default();
+        assert_eq!(c.attn_param_count(), dense.attn_param_count());
+        assert_eq!(c.expert_param_count(), 8 * dense.expert_param_count());
+        assert_eq!(c.param_count(), c.attn_param_count() + c.expert_param_count());
+        // the dense default splits to the same total
+        assert_eq!(
+            dense.param_count(),
+            dense.attn_param_count() + dense.expert_param_count()
+        );
+        // routed token rows: top_k × capacity on top of the dense rows
+        assert_eq!(c.moe_rows(1000), 2500);
+        assert_eq!(dense.moe_rows(1000), 1000);
+    }
+
+    #[test]
+    fn validate_rejects_moe_misfits() {
+        // ep without a mixture
+        let err = ModelConfig::default()
+            .with_dp(4)
+            .with_ep(4)
+            .validate()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("needs a mixture"), "{err}");
+        // ep must divide experts
+        let moe = MoeConfig { experts: 6, top_k: 1, capacity_pct: 100 };
+        let err = ModelConfig::default()
+            .with_moe(moe)
+            .with_dp(4)
+            .with_ep(4)
+            .validate()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("must divide experts"), "{err}");
+        // top_k bounded by experts
+        let moe = MoeConfig { experts: 2, top_k: 3, capacity_pct: 100 };
+        let err = ModelConfig::default().with_moe(moe).validate().unwrap_err();
+        assert!(err.to_string().contains("top_k"), "{err}");
+        // zero knobs are out
+        let moe = MoeConfig { experts: 4, top_k: 1, capacity_pct: 0 };
+        assert!(ModelConfig::default().with_moe(moe).validate().is_err());
+    }
+
+    #[test]
+    fn decode_gen_len_zero_is_rejected() {
+        let c = ModelConfig::default()
+            .with_workload(Workload::Decode { gen_len: 0 });
+        let msg = c.validate().unwrap_err().to_string();
+        assert!(msg.contains("gen_len >= 1"), "{msg}");
+        ModelConfig::default()
+            .with_workload(Workload::Decode { gen_len: 1 })
+            .validate()
+            .unwrap();
     }
 
     #[test]

@@ -34,6 +34,7 @@ impl ZooEntry {
             par: crate::parallelism::ParallelismSpec::tp_dp(tp, 1),
             precision: Precision::F16,
             workload: crate::inference::Workload::Training,
+            moe: crate::model::MoeConfig::dense(),
         }
     }
 

@@ -297,6 +297,7 @@ mod tests {
             par: ParallelismSpec::none(),
             precision: crate::model::Precision::F16,
             workload: crate::inference::Workload::Training,
+            moe: crate::model::MoeConfig::dense(),
         };
         let sc = Scenario { cfg, opts: GraphOptions::default(), hw: 0 };
         let m = ctx.eval(&grid, &sc);
@@ -322,6 +323,7 @@ mod tests {
             par: ParallelismSpec::tp_dp(8, 1),
             precision: crate::model::Precision::F16,
             workload: crate::inference::Workload::Training,
+            moe: crate::model::MoeConfig::dense(),
         };
         let sc = Scenario { cfg, opts: GraphOptions::default(), hw: 0 };
         let m = ctx.eval(&grid, &sc);
@@ -359,6 +361,7 @@ mod tests {
             par: ParallelismSpec::tp_dp(4, 2).with_pp(2, 4),
             precision: crate::model::Precision::F16,
             workload: crate::inference::Workload::Training,
+            moe: crate::model::MoeConfig::dense(),
         };
         let sc = Scenario { cfg, opts: GraphOptions::default(), hw: 0 };
         let m = ctx.eval(&grid, &sc);

@@ -40,8 +40,16 @@ impl StrategyFootprint {
     pub fn of(cfg: &ModelConfig) -> StrategyFootprint {
         let p = cfg.precision.bytes();
         // TP shards every weight matrix, PP shards the layer stack; DP
-        // replicates (no ZeRO modeled).
-        let shard = cfg.param_count() / (cfg.tp() * cfg.pp());
+        // replicates (no ZeRO modeled). Expert weights additionally shard
+        // over `ep` — each EP rank holds `experts/ep` of the FC blocks.
+        // The dense expression is kept verbatim so its integer divisions
+        // never move for existing points.
+        let shard = if cfg.experts() > 1 {
+            cfg.attn_param_count() / (cfg.tp() * cfg.pp())
+                + cfg.expert_param_count() / (cfg.tp() * cfg.pp() * cfg.ep())
+        } else {
+            cfg.param_count() / (cfg.tp() * cfg.pp())
+        };
         // 1F1B keeps at most `pp` microbatches' activations alive on a
         // stage (one per in-flight slot), never more than `microbatches`.
         let inflight = cfg.microbatches().min(cfg.pp()).max(1);
@@ -116,10 +124,12 @@ mod tests {
                 pp,
                 microbatches: if pp > 1 { 8 } else { 1 },
                 dp,
+                ep: 1,
                 seq_par: false,
             },
             precision: crate::model::Precision::F16,
             workload: crate::inference::Workload::Training,
+            moe: crate::model::MoeConfig::dense(),
         }
     }
 
@@ -202,6 +212,28 @@ mod tests {
             StrategyFootprint::of(&cfg(8, 1, 1).with_workload(Workload::Prefill));
         assert!(pre.kv_cache_bytes > 0);
         assert!(pre.kv_cache_bytes < short.kv_cache_bytes);
+    }
+
+    #[test]
+    fn ep_shards_the_expert_weights() {
+        use crate::model::MoeConfig;
+        let moe = MoeConfig { experts: 8, top_k: 2, capacity_pct: 125 };
+        let unsharded = StrategyFootprint::of(
+            &cfg(1, 1, 8).with_moe(moe).with_ep(1),
+        );
+        let sharded = StrategyFootprint::of(
+            &cfg(1, 1, 8).with_moe(moe).with_ep(8),
+        );
+        // attention weights replicate; the 8 experts' FC weights shard
+        // 8 ways, so the EP rank holds attn + 1 expert instead of attn + 8
+        let c = cfg(1, 1, 8).with_moe(moe);
+        let p = 2u64; // f16
+        let want_unsharded = c.attn_param_count() + c.expert_param_count();
+        let want_sharded = c.attn_param_count() + c.expert_param_count() / 8;
+        assert_eq!(unsharded.weight_grad_bytes, 2 * want_unsharded * p);
+        assert_eq!(sharded.weight_grad_bytes, 2 * want_sharded * p);
+        // and that feasibility flip is exactly what --memory-cap prunes on
+        assert!(unsharded.total() > sharded.total());
     }
 
     #[test]

@@ -23,6 +23,11 @@ pub use topology::{CommGroup, NetworkTopology, Tier, TierSpec, TopologyKind};
 ///   the closed-form fraction `(pp − 1) / (microbatches + pp − 1)` of the
 ///   iteration ([`ParallelismSpec::bubble_fraction`]).
 /// * `dp` — data-parallel degree (gradient all-reduce, §2.3.2).
+/// * `ep` — expert-parallel degree for MoE models: the expert FFNs shard
+///   over `ep` ranks *within* each data-parallel group (so `ep` divides
+///   `dp` and does not change [`ParallelismSpec::world_size`]), and token
+///   dispatch/combine all-to-alls land on the EP communication group.
+///   `ep = 1` (the dense default) emits no all-to-all at all.
 /// * `seq_par` — Megatron-style sequence parallelism: the TP activation
 ///   all-reduces become reduce-scatter + all-gather pairs and the
 ///   LayerNorm/element-wise regions run on `1/tp` of the tokens.
@@ -35,6 +40,7 @@ pub struct ParallelismSpec {
     pub pp: u64,
     pub microbatches: u64,
     pub dp: u64,
+    pub ep: u64,
     pub seq_par: bool,
 }
 
@@ -47,12 +53,26 @@ impl Default for ParallelismSpec {
 impl ParallelismSpec {
     /// Single device: no parallelism anywhere.
     pub fn none() -> ParallelismSpec {
-        ParallelismSpec { tp: 1, pp: 1, microbatches: 1, dp: 1, seq_par: false }
+        ParallelismSpec {
+            tp: 1,
+            pp: 1,
+            microbatches: 1,
+            dp: 1,
+            ep: 1,
+            seq_par: false,
+        }
     }
 
     /// The pre-refactor (TP, DP) strategy — the paper's baseline.
     pub fn tp_dp(tp: u64, dp: u64) -> ParallelismSpec {
-        ParallelismSpec { tp, pp: 1, microbatches: 1, dp, seq_par: false }
+        ParallelismSpec {
+            tp,
+            pp: 1,
+            microbatches: 1,
+            dp,
+            ep: 1,
+            seq_par: false,
+        }
     }
 
     pub fn with_tp(mut self, tp: u64) -> Self {
@@ -71,6 +91,11 @@ impl ParallelismSpec {
     }
     pub fn with_seq_par(mut self, on: bool) -> Self {
         self.seq_par = on;
+        self
+    }
+    /// Expert parallelism over `ep` ranks of each DP group.
+    pub fn with_ep(mut self, ep: u64) -> Self {
+        self.ep = ep;
         self
     }
 
@@ -101,6 +126,9 @@ impl ParallelismSpec {
         if self.dp > 1 {
             parts.push(format!("dp{}", self.dp));
         }
+        if self.ep > 1 {
+            parts.push(format!("ep{}", self.ep));
+        }
         if self.seq_par {
             parts.push("sp".to_string());
         }
@@ -114,11 +142,23 @@ impl ParallelismSpec {
     /// Internal consistency of the spec alone (model-coupled divisibility
     /// lives in `ModelConfig::validate`).
     pub fn validate(&self) -> crate::Result<()> {
-        if self.tp == 0 || self.pp == 0 || self.dp == 0 || self.microbatches == 0 {
+        if self.tp == 0
+            || self.pp == 0
+            || self.dp == 0
+            || self.ep == 0
+            || self.microbatches == 0
+        {
             return Err(crate::Error::Config(format!(
                 "parallelism degrees must be >= 1, got tp={} pp={} dp={} \
-                 microbatches={}",
-                self.tp, self.pp, self.dp, self.microbatches
+                 ep={} microbatches={}",
+                self.tp, self.pp, self.dp, self.ep, self.microbatches
+            )));
+        }
+        if self.ep > 1 && self.dp % self.ep != 0 {
+            return Err(crate::Error::Config(format!(
+                "ep={} must divide dp={}: expert parallelism shards the \
+                 experts over ranks of each data-parallel group",
+                self.ep, self.dp
             )));
         }
         if self.pp == 1 && self.microbatches > 1 {
@@ -184,6 +224,18 @@ mod tests {
             .validate()
             .is_err());
         ParallelismSpec::tp_dp(8, 1).with_seq_par(true).validate().unwrap();
+        // ep must divide dp …
+        let err = ParallelismSpec::tp_dp(1, 4)
+            .with_ep(3)
+            .validate()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("ep=3 must divide dp=4"), "{err}");
+        // … and zero is out like every other degree
+        assert!(ParallelismSpec { ep: 0, ..ParallelismSpec::none() }
+            .validate()
+            .is_err());
+        ParallelismSpec::tp_dp(2, 8).with_ep(4).validate().unwrap();
     }
 
     #[test]
@@ -196,5 +248,17 @@ mod tests {
             ParallelismSpec::tp_dp(8, 1).with_seq_par(true).label(),
             ParallelismSpec::tp_dp(8, 1).label()
         );
+        let moe = ParallelismSpec::tp_dp(8, 4).with_ep(4).label();
+        assert!(moe.contains("ep4"), "{moe}");
+        // dense specs never mention ep
+        assert!(!ParallelismSpec::tp_dp(8, 4).label().contains("ep"));
+    }
+
+    #[test]
+    fn ep_does_not_change_world_size() {
+        // EP sub-partitions the DP group: same devices, different sharding
+        let dense = ParallelismSpec::tp_dp(8, 4);
+        let moe = dense.with_ep(4);
+        assert_eq!(moe.world_size(), dense.world_size());
     }
 }

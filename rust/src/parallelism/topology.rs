@@ -55,6 +55,10 @@ pub enum CommGroup {
     PipelineParallel,
     /// Overlappable gradient all-reduces across the DP group.
     DataParallel,
+    /// Serialized MoE token dispatch/combine all-to-alls across the EP
+    /// group (the `ep` ranks of one data-parallel group that share each
+    /// expert shard).
+    ExpertParallel,
 }
 
 /// A two-tier cluster fabric derived from a [`DeviceSpec`].
@@ -116,6 +120,9 @@ impl NetworkTopology {
             CommGroup::PipelineParallel => {
                 2u64.saturating_mul(spec.tp).saturating_mul(spec.dp)
             }
+            // the EP group is the first `ep` DP ranks, stride `tp`, so its
+            // rank extent is `tp·ep` — a strict sub-span of the DP extent
+            CommGroup::ExpertParallel => spec.tp.saturating_mul(spec.ep),
         };
         if extent <= self.node_size {
             Tier::IntraNode
@@ -192,6 +199,7 @@ mod tests {
             pp,
             microbatches: if pp > 1 { 8 } else { 1 },
             dp,
+            ep: 1,
             seq_par: false,
         }
     }
@@ -279,6 +287,23 @@ mod tests {
         // the realized topology carries the same label
         assert_eq!(t.label(), "node8");
         assert_eq!(NetworkTopology::single_tier(&d).label(), "flat");
+    }
+
+    #[test]
+    fn ep_tier_is_a_sub_span_of_dp() {
+        let d = catalog::mi210();
+        let t = NetworkTopology::tiered(&d, 8, 1.0 / 8.0, 10.0);
+        // tp=2, dp=8: DP spans 16 ranks (inter-node) but an ep=4 group
+        // spans only 8 — it fits one node and stays on the fast fabric
+        let s = ParallelismSpec { ep: 4, ..spec(2, 1, 8) };
+        assert_eq!(t.tier_for(CommGroup::DataParallel, &s), Tier::InterNode);
+        assert_eq!(t.tier_for(CommGroup::ExpertParallel, &s), Tier::IntraNode);
+        // ep = dp: the EP group spans the whole DP extent, same tier
+        let full = ParallelismSpec { ep: 8, ..spec(2, 1, 8) };
+        assert_eq!(
+            t.tier_for(CommGroup::ExpertParallel, &full),
+            t.tier_for(CommGroup::DataParallel, &full)
+        );
     }
 
     #[test]

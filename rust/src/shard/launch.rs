@@ -33,9 +33,10 @@ use super::merge::MergedOptimize;
 pub enum Via {
     /// Children of this process on this host.
     Local,
-    /// `ssh <host> commscale shard worker …`; shard `k` runs on host
-    /// `k % hosts.len()`. The remote host needs the same `commscale`
-    /// binary on `PATH` and the spec path valid remotely.
+    /// `ssh <host> commscale shard worker …`; attempt `a` of shard `k`
+    /// runs on host `(k + a) % hosts.len()`, so a retry rotates off the
+    /// host that just killed the worker. The remote host needs the same
+    /// `commscale` binary on `PATH` and the spec path valid remotely.
     Ssh { hosts: Vec<String> },
 }
 
@@ -53,8 +54,8 @@ impl Via {
                     .collect();
                 if hosts.is_empty() {
                     return Err(Error::Study(
-                        "--via ssh needs --hosts h1,h2,… (shard k runs on \
-                         host k mod the host count)"
+                        "--via ssh needs --hosts h1,h2,… (attempt a of \
+                         shard k runs on host (k + a) mod the host count)"
                             .into(),
                     ));
                 }
@@ -155,7 +156,9 @@ impl ProcessBackend {
                 c
             }
             Via::Ssh { hosts } => {
-                let host = &hosts[k % hosts.len()];
+                // rotate by attempt: a retried worker must not land back
+                // on the host that just killed it
+                let host = &hosts[(k + attempt) % hosts.len()];
                 let mut c = Command::new("ssh");
                 // the attempt number rides the remote command line — ssh
                 // does not forward the local environment
@@ -326,7 +329,7 @@ mod tests {
             exe: PathBuf::from("commscale"),
             cfg: c,
         };
-        // shard 3 of 4 on 2 hosts lands on h1 (3 % 2)
+        // attempt 2 of shard 3 on 2 hosts lands on h1 ((3 + 2) % 2)
         let cmd = backend.command(3, 2);
         assert_eq!(cmd.get_program(), "ssh");
         let argv: Vec<String> = cmd
@@ -336,6 +339,43 @@ mod tests {
         assert_eq!(argv[0], "h1");
         assert!(argv[1].starts_with("COMMSCALE_SHARD_ATTEMPT=2 commscale "));
         assert!(argv[1].contains("--shard 3/4"), "{}", argv[1]);
+    }
+
+    #[test]
+    fn ssh_retries_rotate_off_the_failing_host() {
+        let mut c = cfg();
+        c.via = Via::Ssh {
+            hosts: vec!["h0".into(), "h1".into(), "h2".into()],
+        };
+        let backend = ProcessBackend {
+            exe: PathBuf::from("commscale"),
+            cfg: c,
+        };
+        let host_of = |k: usize, attempt: usize| -> String {
+            let cmd = backend.command(k, attempt);
+            cmd.get_args()
+                .next()
+                .expect("ssh host argument")
+                .to_string_lossy()
+                .into_owned()
+        };
+        // first attempt keeps the k % hosts placement …
+        assert_eq!(host_of(1, 0), "h1");
+        // … and each retry advances one host, wrapping around
+        assert_eq!(host_of(1, 1), "h2");
+        assert_eq!(host_of(1, 2), "h0");
+        assert_eq!(host_of(1, 3), "h1");
+        // consecutive attempts never repeat a host (the bug being fixed:
+        // every attempt of shard k re-ran on the same host)
+        for k in 0..4 {
+            for attempt in 0..3 {
+                assert_ne!(
+                    host_of(k, attempt),
+                    host_of(k, attempt + 1),
+                    "shard {k} attempt {attempt} retried on the same host"
+                );
+            }
+        }
     }
 
     #[test]

@@ -184,6 +184,11 @@ impl CostProvider for AnalyticCost {
             OpKind::SendRecv { bytes } => {
                 self.collective(CommGroup::PipelineParallel).p2p_time(bytes)
             }
+            // MoE token dispatch/combine: an all-to-all over the `ep`
+            // ranks of the EP group, on whatever tier that group lands on
+            OpKind::AllToAll { bytes, .. } => self
+                .collective(CommGroup::ExpertParallel)
+                .time(CollectiveKind::AllToAll, bytes, self.spec.ep),
             _ => panic!("compute op routed to comm_time"),
         }
     }
@@ -323,6 +328,38 @@ mod tests {
         assert!(flat.comm_time(&send) > 0.0);
         // pp spans nodes (extent 8 > node 2) → slower on the tiered fabric
         assert!(tiered.comm_time(&send) > 5.0 * flat.comm_time(&send));
+    }
+
+    #[test]
+    fn alltoall_priced_on_the_ep_group() {
+        let d = catalog::mi210();
+        let bytes = 64u64 << 20;
+        let a2a = OpKind::AllToAll { bytes, class: CommClass::Serialized };
+        // ep=1: no peers, the exchange is free
+        let dense = AnalyticCost::from_spec(
+            d.clone(),
+            Precision::F16,
+            ParallelismSpec::tp_dp(2, 4),
+        );
+        assert_eq!(dense.comm_time(&a2a), 0.0);
+        // ep=4 matches the bare collective model on the device wire
+        let moe = AnalyticCost::from_spec(
+            d.clone(),
+            Precision::F16,
+            ParallelismSpec::tp_dp(2, 4).with_ep(4),
+        );
+        let want = CollectiveCost::new(d.clone())
+            .time(CollectiveKind::AllToAll, bytes, 4);
+        assert_eq!(moe.comm_time(&a2a).to_bits(), want.to_bits());
+        // tp=2, ep=4 spans 8 ranks: a 2-rank node pushes the EP group
+        // onto the NIC tier and the exchange slows down
+        let tiered = AnalyticCost::from_spec(
+            d.clone(),
+            Precision::F16,
+            ParallelismSpec::tp_dp(2, 4).with_ep(4),
+        )
+        .with_topology(TopologyKind::tiered_8x(2).realize(&d));
+        assert!(tiered.comm_time(&a2a) > 5.0 * moe.comm_time(&a2a));
     }
 
     #[test]

@@ -476,6 +476,7 @@ mod tests {
             par: ParallelismSpec::tp_dp(16, 4),
             precision: Precision::F16,
             workload: crate::inference::Workload::Training,
+            moe: crate::model::MoeConfig::dense(),
         };
         let g = build_layer_graph(&cfg, GraphOptions::default());
         let cost =
@@ -505,6 +506,7 @@ mod tests {
             par: ParallelismSpec::tp_dp(8, 2).with_pp(4, 8).with_seq_par(true),
             precision: Precision::F16,
             workload: crate::inference::Workload::Training,
+            moe: crate::model::MoeConfig::dense(),
         };
         cfg.validate().unwrap();
         let g = build_layer_graph(&cfg, GraphOptions::default());
@@ -534,6 +536,7 @@ mod tests {
             par: ParallelismSpec::tp_dp(8, 4),
             precision: Precision::F16,
             workload: crate::inference::Workload::Training,
+            moe: crate::model::MoeConfig::dense(),
         };
         let cost =
             AnalyticCost::new(catalog::mi210(), cfg.precision, cfg.tp(), cfg.dp());
@@ -577,6 +580,7 @@ mod tests {
             par: ParallelismSpec::tp_dp(8, 1),
             precision: Precision::F16,
             workload: crate::inference::Workload::Training,
+            moe: crate::model::MoeConfig::dense(),
         };
         let frac = |tp: u64| {
             let c = base.with_tp(tp);

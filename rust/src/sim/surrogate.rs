@@ -321,6 +321,7 @@ mod tests {
             par,
             precision: Precision::F16,
             workload: crate::inference::Workload::Training,
+            moe: crate::model::MoeConfig::dense(),
         }
     }
 

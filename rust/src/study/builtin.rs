@@ -18,6 +18,7 @@ use crate::config::{self, SweepGrid};
 use crate::hw::DeviceSpec;
 use crate::inference::WorkloadKind;
 use crate::model::zoo;
+use crate::parallelism::TopologyKind;
 use crate::report::{ascii_bar_chart, ascii_line_chart, Series, Table};
 use crate::{Error, Result};
 
@@ -199,6 +200,43 @@ fn infer_comm_crossover_spec() -> StudySpec {
     }
 }
 
+/// Where does expert parallelism beat wider tensor parallelism? Sweeps
+/// an MoE layer over (experts, capacity) with ep crossed against tp at a
+/// fixed device budget, then argmins iteration time per cell — the MoE
+/// analogue of the strategies search, and the built-in grid `commscale
+/// optimize` exercises for the MoE search ≡ sweep equivalence.
+fn moe_comm_crossover_spec() -> StudySpec {
+    StudySpec {
+        name: "moe_comm_crossover".into(),
+        description: "MoE all-to-all vs TP all-reduce crossover: best \
+                      (tp, ep) split per (experts, capacity) cell at a \
+                      fixed 32-device budget"
+            .into(),
+        axes: AxesSpec {
+            hidden: vec![8192],
+            seq_len: vec![2048],
+            batch: vec![4],
+            layers: vec![4],
+            experts: vec![8, 16],
+            top_k: vec![2],
+            capacity_pct: vec![100, 125],
+            tp: vec![1, 2, 4, 8],
+            dp: vec![4, 8, 16, 32],
+            ep: vec![1, 2, 4, 8],
+            world: Some(32),
+            topologies: vec![TopologyKind::tiered_8x(8)],
+            ..AxesSpec::default()
+        },
+        group_by: vec!["experts".into(), "capacity_factor".into()],
+        aggregate: vec![AggSpec {
+            metric: "iter_time".into(),
+            ops: vec![AggOp::Min, AggOp::ArgMin],
+            args: vec!["tp".into(), "ep".into()],
+        }],
+        ..StudySpec::default()
+    }
+}
+
 /// Every built-in study, in presentation order.
 pub fn all() -> Vec<Builtin> {
     vec![
@@ -289,6 +327,13 @@ pub fn all() -> Vec<Builtin> {
             description: "Prefill vs decode comm fraction under hardware \
                           evolution",
             spec_fn: infer_comm_crossover_spec,
+        },
+        Builtin {
+            name: "moe_comm_crossover",
+            artifact: None,
+            description: "MoE all-to-all vs TP all-reduce crossover \
+                          (searchable argmin per experts/capacity cell)",
+            spec_fn: moe_comm_crossover_spec,
         },
     ]
 }

@@ -107,6 +107,10 @@ pub(crate) fn base_schema(source: Source) -> Vec<(&'static str, FieldKind)> {
             ("archetype", Str),
             ("workload", Str),
             ("gen_len", Num),
+            ("ep", Num),
+            ("experts", Num),
+            ("top_k", Num),
+            ("capacity_factor", Num),
             ("makespan", Num),
             ("iter_time", Num),
             ("compute_time", Num),
@@ -489,9 +493,9 @@ impl RowSink for ChartSink {
 }
 
 /// The model/strategy axes a seeded series may pin, in `AxesSpec` order.
-const SERIES_AXES: [&str; 10] = [
+const SERIES_AXES: [&str; 11] = [
     "hidden", "seq_len", "batch", "layers", "ffn_mult", "tp", "pp",
-    "microbatches", "seq_par", "dp",
+    "microbatches", "seq_par", "dp", "ep",
 ];
 
 /// Collecting sink that re-emits grouped argmin/argmax rows as a **new**
@@ -658,6 +662,7 @@ impl SpecSink {
                     "pp" => series.pp = Some(val),
                     "microbatches" => series.microbatches = Some(val),
                     "dp" => series.dp = Some(val),
+                    "ep" => series.ep = Some(val),
                     _ => unreachable!("SERIES_AXES is exhaustive"),
                 }
             }
@@ -1585,6 +1590,10 @@ pub(crate) fn fill_grid_identity(
     ));
     row.push(Value::Str(cfg.workload.as_str().to_string()));
     row.push(Value::Num(cfg.gen_len() as f64));
+    row.push(Value::Num(cfg.ep() as f64));
+    row.push(Value::Num(cfg.experts() as f64));
+    row.push(Value::Num(cfg.top_k() as f64));
+    row.push(Value::Num(cfg.capacity_factor()));
 }
 
 /// Append the simulated-metric fields onto an identity-filled grid row.
@@ -2054,6 +2063,28 @@ mod tests {
         assert!(!sink.columns.iter().any(|c| c == "workload"));
         assert!(!sink.columns.iter().any(|c| c == "ttft"));
         assert_eq!(sink.columns.last().unwrap(), "time_per_sample");
+        // ... and the MoE identity fields are opt-in the same way
+        assert!(!sink.columns.iter().any(|c| c == "experts"));
+        assert!(!sink.columns.iter().any(|c| c == "ep"));
+    }
+
+    #[test]
+    fn moe_identity_columns_are_selectable() {
+        let (sink, _) = run_spec(
+            r#"{"name":"m",
+                "axes":{"experts":[4],"top_k":[2],"capacity_factor":[1.25],
+                        "dp":[4],"ep":[2],"tp":[2]},
+                "columns":["tp","dp","ep","experts","top_k",
+                           "capacity_factor"],
+                "metrics":["makespan"]}"#,
+            RunOptions::default(),
+        );
+        assert_eq!(sink.rows.len(), 1);
+        let row = &sink.rows[0];
+        assert_eq!(row[sink.col("ep")], Value::Num(2.0));
+        assert_eq!(row[sink.col("experts")], Value::Num(4.0));
+        assert_eq!(row[sink.col("top_k")], Value::Num(2.0));
+        assert_eq!(row[sink.col("capacity_factor")], Value::Num(1.25));
     }
 
     #[test]

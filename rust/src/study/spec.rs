@@ -125,6 +125,7 @@ pub struct SeriesSpec {
     pub microbatches: Option<Vec<u64>>,
     pub seq_par: Option<Vec<bool>>,
     pub dp: Option<Vec<u64>>,
+    pub ep: Option<Vec<u64>>,
 }
 
 /// The scenario axes of a grid-source study — the declarative form of
@@ -141,6 +142,16 @@ pub struct AxesSpec {
     pub microbatches: Vec<u64>,
     pub seq_par: Vec<bool>,
     pub dp: Vec<u64>,
+    /// Expert-parallel degrees (MoE-only: collapses for dense points).
+    pub ep: Vec<u64>,
+    /// Expert counts per FC block; `[1]` (the default) is dense and
+    /// keeps every pre-MoE spec bit-identical.
+    pub experts: Vec<u64>,
+    /// Experts routed per token (MoE-only).
+    pub top_k: Vec<u64>,
+    /// Capacity factors as fixed-point percent (JSON key
+    /// `"capacity_factor"`, authored as a float: 1.25 → 125).
+    pub capacity_pct: Vec<u64>,
     /// Workload families to sweep (JSON key `"workload"`): training
     /// iterations, prefill passes, and/or decode steps. Default
     /// `[Training]` keeps every pre-inference spec bit-identical.
@@ -175,6 +186,10 @@ impl Default for AxesSpec {
             microbatches: vec![1],
             seq_par: vec![false],
             dp: vec![1],
+            ep: vec![1],
+            experts: vec![1],
+            top_k: vec![1],
+            capacity_pct: vec![100],
             workloads: vec![WorkloadKind::Training],
             gen_len: vec![128],
             evolutions: vec![Evolution::none()],
@@ -398,6 +413,39 @@ fn u64_list(v: &Json, what: &str) -> Result<Vec<u64>> {
     Ok(out)
 }
 
+/// Capacity factors are authored as floats (`[1.0, 1.25]`) but stored as
+/// fixed-point percent (`[100, 125]`) so configs stay `Eq`/hashable.
+/// Factors finer than 1% of a token row would be lost to the rounding,
+/// so they are rejected rather than silently snapped.
+fn capacity_list(v: &Json, what: &str) -> Result<Vec<u64>> {
+    let arr = v.as_arr().ok_or_else(|| {
+        Error::Study(format!("{what}: expected an array of numbers"))
+    })?;
+    let mut out = Vec::with_capacity(arr.len());
+    for item in arr {
+        let x = item.as_f64().ok_or_else(|| {
+            Error::Study(format!("{what}: expected numbers, found {item:?}"))
+        })?;
+        if !(x > 0.0) || x > 100.0 {
+            return Err(Error::Study(format!(
+                "{what}: capacity factors must be in (0, 100], got {x}"
+            )));
+        }
+        let pct = (x * 100.0).round();
+        if (pct - x * 100.0).abs() > 1e-9 {
+            return Err(Error::Study(format!(
+                "{what}: capacity factor {x} is not a multiple of 0.01 \
+                 (factors are stored as fixed-point percent)"
+            )));
+        }
+        out.push(pct as u64);
+    }
+    if out.is_empty() {
+        return Err(Error::Study(format!("{what}: axis must not be empty")));
+    }
+    Ok(out)
+}
+
 fn bool_list(v: &Json, what: &str) -> Result<Vec<bool>> {
     let arr = v.as_arr().ok_or_else(|| {
         Error::Study(format!("{what}: expected an array of booleans"))
@@ -566,9 +614,10 @@ impl AxesSpec {
             "axes",
             &[
                 "hidden", "seq_len", "batch", "layers", "ffn_mult", "tp", "pp",
-                "microbatches", "seq_par", "dp", "workload", "gen_len",
-                "evolutions", "topologies", "hardware", "series", "world",
-                "heads", "precision",
+                "microbatches", "seq_par", "dp", "ep", "experts", "top_k",
+                "capacity_factor", "workload", "gen_len", "evolutions",
+                "topologies", "hardware", "series", "world", "heads",
+                "precision",
             ],
         )?;
         let mut a = AxesSpec::default();
@@ -582,10 +631,16 @@ impl AxesSpec {
             ("pp", &mut a.pp),
             ("microbatches", &mut a.microbatches),
             ("dp", &mut a.dp),
+            ("ep", &mut a.ep),
+            ("experts", &mut a.experts),
+            ("top_k", &mut a.top_k),
         ] {
             if let Some(x) = v.get(key) {
                 *field = u64_list(x, &format!("axes.{key}"))?;
             }
+        }
+        if let Some(x) = v.get("capacity_factor") {
+            a.capacity_pct = capacity_list(x, "axes.capacity_factor")?;
         }
         if let Some(x) = v.get("seq_par") {
             a.seq_par = bool_list(x, "axes.seq_par")?;
@@ -707,6 +762,7 @@ impl AxesSpec {
                     &[
                         "label", "hidden", "seq_len", "batch", "layers",
                         "ffn_mult", "tp", "pp", "microbatches", "seq_par", "dp",
+                        "ep",
                     ],
                 )?;
                 let mut ss = SeriesSpec::default();
@@ -732,6 +788,7 @@ impl AxesSpec {
                     ("pp", &mut ss.pp),
                     ("microbatches", &mut ss.microbatches),
                     ("dp", &mut ss.dp),
+                    ("ep", &mut ss.ep),
                 ] {
                     if let Some(x) = s.get(key) {
                         // scalar shorthand: {"hidden": 4096} == [4096]
@@ -806,10 +863,23 @@ impl AxesSpec {
             ("pp", &self.pp, &d.pp),
             ("microbatches", &self.microbatches, &d.microbatches),
             ("dp", &self.dp, &d.dp),
+            ("ep", &self.ep, &d.ep),
+            ("experts", &self.experts, &d.experts),
+            ("top_k", &self.top_k, &d.top_k),
         ] {
             if ours != default {
                 pairs.push((key, nums(ours)));
             }
+        }
+        if self.capacity_pct != d.capacity_pct {
+            pairs.push((
+                "capacity_factor",
+                Json::arr(
+                    self.capacity_pct
+                        .iter()
+                        .map(|&pct| Json::num(pct as f64 / 100.0)),
+                ),
+            ));
         }
         if self.seq_par != d.seq_par {
             pairs.push((
@@ -875,6 +945,7 @@ impl AxesSpec {
                         ("pp", &s.pp),
                         ("microbatches", &s.microbatches),
                         ("dp", &s.dp),
+                        ("ep", &s.ep),
                     ] {
                         if let Some(list) = v {
                             p.push((key, nums(list)));
@@ -1433,6 +1504,10 @@ impl StudySpec {
             .microbatches(&pick(&s.microbatches, &a.microbatches))
             .seq_par(s.seq_par.as_ref().unwrap_or(&a.seq_par))
             .dp(&pick(&s.dp, &a.dp))
+            .ep(&pick(&s.ep, &a.ep))
+            .experts(&a.experts)
+            .top_k(&a.top_k)
+            .capacity_pct(&a.capacity_pct)
             .workloads(&a.workloads)
             .gen_len(&a.gen_len)
             .heads_policy(a.heads)
@@ -1869,6 +1944,56 @@ mod tests {
         let text = d.to_json().to_string();
         assert!(!text.contains("workload"), "{text}");
         assert!(!text.contains("gen_len"), "{text}");
+    }
+
+    #[test]
+    fn moe_axes_parse_and_roundtrip() {
+        let s = StudySpec::parse(
+            r#"{"name":"m","axes":{"experts":[1,8],"top_k":[2],
+                "capacity_factor":[1.0,1.25],"dp":[4],"ep":[1,4]}}"#,
+        )
+        .unwrap();
+        assert_eq!(s.axes.experts, vec![1, 8]);
+        assert_eq!(s.axes.top_k, vec![2]);
+        assert_eq!(s.axes.capacity_pct, vec![100, 125]);
+        assert_eq!(s.axes.ep, vec![1, 4]);
+        let back = StudySpec::parse(&s.to_json().to_string()).unwrap();
+        assert_eq!(s, back);
+        // dense point collapses the MoE axes (1); experts=8 fans out
+        // top_k=2 (skipless) x capacity {1.0, 1.25} x ep {1, 4}
+        let r = s.resolve(&mi210()).unwrap();
+        assert_eq!(r.total_points(), 1 + 2 * 2);
+        // the default axes stay invisible in serialized form
+        let d = StudySpec::parse(r#"{"name":"d","axes":{"tp":[1,8]}}"#).unwrap();
+        let text = d.to_json().to_string();
+        for key in ["experts", "top_k", "capacity_factor", "\"ep\""] {
+            assert!(!text.contains(key), "{key} in {text}");
+        }
+    }
+
+    #[test]
+    fn bad_moe_values_are_rejected() {
+        for (spec, needle) in [
+            (
+                r#"{"name":"x","axes":{"experts":[0]}}"#,
+                "positive integers",
+            ),
+            (
+                r#"{"name":"x","axes":{"capacity_factor":[0.0]}}"#,
+                "capacity factors must be",
+            ),
+            (
+                r#"{"name":"x","axes":{"capacity_factor":[1.0001]}}"#,
+                "multiple of 0.01",
+            ),
+            (
+                r#"{"name":"x","axes":{"expert_parallel":[2]}}"#,
+                "unknown key",
+            ),
+        ] {
+            let err = StudySpec::parse(spec).unwrap_err().to_string();
+            assert!(err.contains(needle), "{spec}: {err}");
+        }
     }
 
     #[test]

@@ -847,6 +847,7 @@ mod tests {
                 par: ParallelismSpec::tp_dp(tp, 1),
                 precision: Precision::F16,
                 workload: crate::inference::Workload::Training,
+                moe: crate::model::MoeConfig::dense(),
             };
             let cost = AnalyticCost::new(d.clone(), cfg.precision, tp, 1);
             let naive = simulate(

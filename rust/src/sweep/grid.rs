@@ -141,15 +141,18 @@ pub enum HeadsPolicy {
 ///
 /// Axis nesting (outermost → innermost): hardware (devices × evolutions ×
 /// overlap models × topologies, in that order) → workload → hidden →
-/// seq_len → gen_len → batch → layers → ffn_mult → tp → pp → microbatches
-/// → seq_par → dp. Hardware is outermost so each worker's graph-template
-/// and cost caches see long runs of points sharing a device; the workload
-/// axis sits right inside it for the same reason (one template shape per
-/// workload family). Training-only grids — the default — enumerate in
-/// exactly the pre-workload-axis order.
+/// seq_len → gen_len → batch → layers → ffn_mult → experts → top_k →
+/// capacity → tp → pp → microbatches → seq_par → dp → ep. Hardware is
+/// outermost so each worker's graph-template and cost caches see long
+/// runs of points sharing a device; the workload axis sits right inside
+/// it for the same reason (one template shape per workload family).
+/// Training-only grids — the default — enumerate in exactly the
+/// pre-workload-axis order, and dense grids (experts = [1], the default)
+/// collapse every MoE axis so the point stream is untouched.
 ///
 /// Combinations the strategy cannot realize (layers % pp != 0, seq-par
-/// token misfits, a `world_size` mismatch) are **skipped
+/// token misfits, a `world_size` mismatch, `ep` not dividing `dp` or the
+/// expert count, `top_k` exceeding the expert count) are **skipped
 /// deterministically**: the surviving point list is a pure function of
 /// the axes, so two builds of the same grid are identical element-for-
 /// element. Model-level misfits (e.g. a hidden size the rounded head
@@ -168,11 +171,15 @@ pub struct GridBuilder {
     batch: Vec<u64>,
     layers: Vec<u64>,
     ffn_mult: Vec<u64>,
+    experts: Vec<u64>,
+    top_k: Vec<u64>,
+    capacity_pct: Vec<u64>,
     tp: Vec<u64>,
     pp: Vec<u64>,
     microbatches: Vec<u64>,
     seq_par: Vec<bool>,
     dp: Vec<u64>,
+    ep: Vec<u64>,
     world: Option<u64>,
     heads: HeadsPolicy,
     precision: Precision,
@@ -197,11 +204,15 @@ impl GridBuilder {
             batch: vec![1],
             layers: vec![1],
             ffn_mult: vec![4],
+            experts: vec![1],
+            top_k: vec![1],
+            capacity_pct: vec![100],
             tp: vec![1],
             pp: vec![1],
             microbatches: vec![1],
             seq_par: vec![false],
             dp: vec![1],
+            ep: vec![1],
             world: None,
             heads: HeadsPolicy::RoundToTp,
             precision: Precision::F16,
@@ -257,6 +268,24 @@ impl GridBuilder {
         self.ffn_mult = v.to_vec();
         self
     }
+    /// Expert counts per FC block. `1` (the default) is a dense model;
+    /// values above 1 make the `top_k`, `capacity_pct`, and `ep` axes
+    /// live (they collapse to singletons for dense points).
+    pub fn experts(mut self, v: &[u64]) -> Self {
+        self.experts = v.to_vec();
+        self
+    }
+    /// Experts routed per token (MoE-only; collapses for dense points).
+    pub fn top_k(mut self, v: &[u64]) -> Self {
+        self.top_k = v.to_vec();
+        self
+    }
+    /// Capacity factors as fixed-point percent (125 = 1.25×; MoE-only,
+    /// collapses for dense points).
+    pub fn capacity_pct(mut self, v: &[u64]) -> Self {
+        self.capacity_pct = v.to_vec();
+        self
+    }
     pub fn tp(mut self, v: &[u64]) -> Self {
         self.tp = v.to_vec();
         self
@@ -275,6 +304,14 @@ impl GridBuilder {
     }
     pub fn dp(mut self, v: &[u64]) -> Self {
         self.dp = v.to_vec();
+        self
+    }
+    /// Expert-parallel degrees. `ep` sub-partitions each DP group (it
+    /// does not change `world_size`), so combinations where `ep` divides
+    /// neither `dp` nor the expert count are skipped deterministically;
+    /// the axis collapses to `[1]` for dense points.
+    pub fn ep(mut self, v: &[u64]) -> Self {
+        self.ep = v.to_vec();
         self
     }
     /// Keep only strategies whose `tp·pp·dp` equals `world` — the "same
@@ -312,11 +349,15 @@ impl GridBuilder {
             * self.batch.len()
             * self.layers.len()
             * self.ffn_mult.len()
+            * self.experts.len()
+            * self.top_k.len()
+            * self.capacity_pct.len()
             * self.tp.len()
             * self.pp.len()
             * self.microbatches.len()
             * self.seq_par.len()
             * self.dp.len()
+            * self.ep.len()
     }
 
     /// Stream every *model-axis* combination (hardware axes excluded) in
@@ -376,36 +417,79 @@ impl GridBuilder {
                         for &b in &self.batch {
                             for &layers in &self.layers {
                                 for &fm in &self.ffn_mult {
-                                    for &tp in &self.tp {
-                                        for &pp in &self.pp {
-                                            // microbatching is a pipeline
-                                            // concept: pp = 1 takes a
-                                            // single mb = 1 point instead
-                                            // of duplicating the axis.
-                                            let mbs: &[u64] = if pp > 1 {
-                                                &self.microbatches
-                                            } else {
-                                                &[1]
-                                            };
-                                            for &mb in mbs {
-                                                for &sp in &self.seq_par {
-                                                    for &dp in &self.dp {
-                                                        if let Some(cfg) = self
-                                                            .realize(
-                                                                wl, h, sl, gl,
-                                                                b, layers, fm,
-                                                                tp, pp, mb,
-                                                                sp, dp,
-                                                            )
-                                                        {
-                                                            if !f(cfg) {
-                                                                return false;
-                                                            }
-                                                        }
-                                                    }
+                                    // the MoE payload knobs and the ep
+                                    // degree are expert concepts: a dense
+                                    // point (experts = 1) takes single
+                                    // (top_k = 1, capacity = 100%, ep = 1)
+                                    // values instead of duplicating the
+                                    // axes (mirrors the pp=1 microbatch
+                                    // collapse).
+                                    for &ex in &self.experts {
+                                        let tks: &[u64] =
+                                            if ex > 1 { &self.top_k } else { &[1] };
+                                        let caps: &[u64] = if ex > 1 {
+                                            &self.capacity_pct
+                                        } else {
+                                            &[100]
+                                        };
+                                        let eps: &[u64] =
+                                            if ex > 1 { &self.ep } else { &[1] };
+                                        for &tk in tks {
+                                            for &cap in caps {
+                                                if !self.strategy_loops(
+                                                    wl, h, sl, gl, b, layers,
+                                                    fm, ex, tk, cap, eps, f,
+                                                ) {
+                                                    return false;
                                                 }
                                             }
                                         }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        true
+    }
+
+    /// The strategy-axis (tp → pp → microbatches → seq_par → dp → ep)
+    /// tail of the enumeration, split out of `model_configs_until` so the
+    /// model-axis loops stay readable. Returns `false` when `f` does.
+    #[allow(clippy::too_many_arguments)]
+    fn strategy_loops(
+        &self,
+        wl: WorkloadKind,
+        h: u64,
+        sl: u64,
+        gl: u64,
+        b: u64,
+        layers: u64,
+        fm: u64,
+        ex: u64,
+        tk: u64,
+        cap: u64,
+        eps: &[u64],
+        f: &mut dyn FnMut(ModelConfig) -> bool,
+    ) -> bool {
+        for &tp in &self.tp {
+            for &pp in &self.pp {
+                // microbatching is a pipeline concept: pp = 1 takes a
+                // single mb = 1 point instead of duplicating the axis.
+                let mbs: &[u64] =
+                    if pp > 1 { &self.microbatches } else { &[1] };
+                for &mb in mbs {
+                    for &sp in &self.seq_par {
+                        for &dp in &self.dp {
+                            for &ep in eps {
+                                if let Some(cfg) = self.realize(
+                                    wl, h, sl, gl, b, layers, fm, ex, tk,
+                                    cap, tp, pp, mb, sp, dp, ep,
+                                ) {
+                                    if !f(cfg) {
+                                        return false;
                                     }
                                 }
                             }
@@ -514,6 +598,29 @@ impl GridBuilder {
                 self.pp, self.layers
             ));
         }
+        // MoE rules next: every expert count must find an ep that divides
+        // both it and some dp, and a top_k it can route. (Dense points,
+        // experts = 1, collapse the axes and always survive these rules.)
+        if self.experts.iter().all(|&e| e > 1) {
+            let moe_ok = self.experts.iter().any(|&ex| {
+                self.ep.iter().any(|&ep| {
+                    (ep == 1
+                        || (ex % ep == 0
+                            && self.dp.iter().any(|&dp| dp % ep == 0)))
+                        && self.top_k.iter().any(|&tk| tk <= ex)
+                })
+            });
+            if !moe_ok {
+                return Some(format!(
+                    "no MoE combination from experts {:?} x top_k {:?} x \
+                     ep {:?} over dp {:?} is realizable (ep must divide \
+                     both the expert count and dp; top_k cannot exceed \
+                     the expert count) — adjust the MoE axes or add \
+                     experts = 1 for dense points",
+                    self.experts, self.top_k, self.ep, self.dp
+                ));
+            }
+        }
         // Last rule standing: sequence parallelism.
         if self.seq_par.iter().all(|&sp| sp) {
             if !self.workloads.contains(&WorkloadKind::Training) {
@@ -597,11 +704,15 @@ impl GridBuilder {
         b: u64,
         layers: u64,
         fm: u64,
+        ex: u64,
+        tk: u64,
+        cap: u64,
         tp: u64,
         pp: u64,
         mb: u64,
         sp: bool,
         dp: u64,
+        ep: u64,
     ) -> Option<ModelConfig> {
         if let Some(w) = self.world {
             if tp * pp * dp != w {
@@ -619,6 +730,15 @@ impl GridBuilder {
         if sp && wl != WorkloadKind::Training {
             return None;
         }
+        // MoE misfits, same treatment: ep sub-partitions the DP group and
+        // shards the expert set, so it must divide both; routing more
+        // experts per token than exist is not realizable either.
+        if ep > 1 && (dp % ep != 0 || ex % ep != 0) {
+            return None;
+        }
+        if tk > ex {
+            return None;
+        }
         let heads = match self.heads {
             HeadsPolicy::RoundToTp => {
                 let base = config::heads_for(h).max(tp);
@@ -633,9 +753,21 @@ impl GridBuilder {
             layers,
             heads,
             ffn_mult: fm,
-            par: ParallelismSpec { tp, pp, microbatches: mb, dp, seq_par: sp },
+            par: ParallelismSpec {
+                tp,
+                pp,
+                microbatches: mb,
+                dp,
+                ep,
+                seq_par: sp,
+            },
             precision: self.precision,
             workload: wl.with_gen_len(gl),
+            moe: crate::model::MoeConfig {
+                experts: ex,
+                top_k: tk,
+                capacity_pct: cap,
+            },
         };
         if self.heads == HeadsPolicy::RoundToTp {
             if let Err(e) = cfg.validate() {
@@ -965,6 +1097,81 @@ mod tests {
         for (x, y) in a.points.iter().zip(&b.points) {
             assert_eq!(x.cfg, y.cfg);
         }
+    }
+
+    #[test]
+    fn moe_axes_collapse_for_dense_points() {
+        let g = GridBuilder::new(&catalog::mi210())
+            .experts(&[1, 8])
+            .top_k(&[1, 2])
+            .capacity_pct(&[100, 125])
+            .dp(&[2])
+            .ep(&[1, 2])
+            .build();
+        // experts=1 contributes one dense point (top_k/capacity/ep all
+        // collapsed); experts=8 fans out 2 x 2 x 2 = 8 MoE points
+        assert_eq!(g.len(), 1 + 8);
+        assert!(g.points[0].cfg.moe.is_dense());
+        assert_eq!(g.points[0].cfg.ep(), 1);
+        for p in &g.points[1..] {
+            assert_eq!(p.cfg.experts(), 8);
+            p.cfg.validate().unwrap();
+        }
+        // innermost MoE axis is ep, then dp outside it
+        assert_eq!(g.points[1].cfg.ep(), 1);
+        assert_eq!(g.points[2].cfg.ep(), 2);
+    }
+
+    #[test]
+    fn moe_divisibility_misfits_are_skipped() {
+        // ep=3 divides neither dp=4 nor experts=8; top_k=16 > experts=8
+        let g = GridBuilder::new(&catalog::mi210())
+            .experts(&[8])
+            .top_k(&[2, 16])
+            .dp(&[4])
+            .ep(&[1, 2, 3])
+            .build();
+        // top_k=2 x ep in {1, 2} survive; everything else is skipped
+        assert_eq!(g.len(), 2);
+        for p in &g.points {
+            p.cfg.validate().unwrap();
+            assert_eq!(p.cfg.top_k(), 2);
+            assert!(p.cfg.ep() <= 2);
+        }
+    }
+
+    #[test]
+    fn dense_grids_ignore_the_moe_axes_entirely() {
+        // the MoE axes must be invisible to dense grids: explicit
+        // defaults leave the point stream untouched
+        let base = GridBuilder::new(&catalog::mi210())
+            .hidden(&[1024, 2048])
+            .tp(&[2, 4])
+            .dp(&[1, 4]);
+        let explicit = base
+            .clone()
+            .experts(&[1])
+            .top_k(&[1])
+            .capacity_pct(&[100])
+            .ep(&[1]);
+        let a = base.build();
+        let b = explicit.build();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.points.iter().zip(&b.points) {
+            assert_eq!(x.cfg, y.cfg);
+            assert!(x.cfg.moe.is_dense());
+        }
+    }
+
+    #[test]
+    fn moe_empty_grid_names_the_binding_rule() {
+        let reason = GridBuilder::new(&catalog::mi210())
+            .experts(&[8])
+            .dp(&[4])
+            .ep(&[3])
+            .empty_reason()
+            .unwrap();
+        assert!(reason.contains("ep must divide"), "{reason}");
     }
 
     #[test]

@@ -158,10 +158,12 @@ fn kv_cache_footprint_formula_is_pinned() {
             pp: 2,
             microbatches: 1,
             dp: 1,
+            ep: 1,
             seq_par: false,
         },
         precision: commscale::model::Precision::F16,
         workload: Workload::Decode { gen_len: 128 },
+        moe: commscale::model::MoeConfig::dense(),
     };
     // 16 stage layers · 2 (K and V) · 2 B/elt · 8 seqs · 2176 tokens ·
     // 2048 hidden-slice elems
@@ -208,10 +210,12 @@ fn decode_makespan_is_monotone_in_gen_len() {
                     pp: 1,
                     microbatches: 1,
                     dp: 1,
+                    ep: 1,
                     seq_par: false,
                 },
                 precision: commscale::model::Precision::F16,
                 workload: Workload::Decode { gen_len },
+                moe: commscale::model::MoeConfig::dense(),
             };
             let m = decode_makespan(&cfg);
             assert!(

@@ -1,0 +1,176 @@
+//! MoE golden pins: the expert-parallel all-to-all's payload formula,
+//! its (n−1)/n wire volume, its price on the EP topology group, and the
+//! sweep engine's bit-identity to the serial reference on mixed
+//! dense/MoE grids (the graph-template cache must key on the a2a shape).
+
+use commscale::collectives::{CollectiveCost, CollectiveKind};
+use commscale::graph::{build_layer_graph, GraphOptions, OpKind, Phase};
+use commscale::hw::catalog;
+use commscale::model::{ModelConfig, MoeConfig, Precision};
+use commscale::parallelism::{CommGroup, ParallelismSpec};
+use commscale::sweep::{
+    self, GridBuilder, HwPoint, Scenario, ScenarioGrid,
+};
+
+fn moe_config(ep: u64, moe: MoeConfig) -> ModelConfig {
+    let cfg = ModelConfig {
+        hidden: 2048,
+        seq_len: 512,
+        batch: 1,
+        layers: 2,
+        heads: 16,
+        ffn_mult: 4,
+        par: ParallelismSpec {
+            tp: 2,
+            pp: 1,
+            microbatches: 1,
+            dp: 2,
+            ep,
+            seq_par: false,
+        },
+        precision: Precision::F16,
+        workload: commscale::inference::Workload::Training,
+        moe,
+    };
+    cfg.validate().expect("golden config must validate");
+    cfg
+}
+
+/// Dispatch + combine, forward + backward: four all-to-alls per layer,
+/// each carrying `top_k · capacity · act_bytes` (the routed token rows at
+/// the dense activation width, Eq. 5) — the (n−1)/n factor belongs to the
+/// collective model, not the payload.
+#[test]
+fn a2a_payload_is_topk_capacity_scaled_activation() {
+    let cfg = moe_config(
+        2,
+        MoeConfig { experts: 4, top_k: 2, capacity_pct: 125 },
+    );
+    let g = build_layer_graph(&cfg, GraphOptions::default());
+    let a2a: Vec<(u64, Phase)> = g
+        .ops
+        .iter()
+        .filter_map(|o| match o.kind {
+            OpKind::AllToAll { bytes, .. } => Some((bytes, o.phase)),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(a2a.len() as u64, 4 * cfg.layers, "dispatch+combine, fwd+bwd");
+    let fwd = a2a.iter().filter(|(_, p)| *p == Phase::Forward).count();
+    let bwd = a2a.iter().filter(|(_, p)| *p == Phase::Backward).count();
+    assert_eq!(fwd as u64, 2 * cfg.layers);
+    assert_eq!(bwd as u64, 2 * cfg.layers);
+    // act_bytes = p·bs·h with bs = batch·seq_len training token rows
+    let act_bytes =
+        cfg.precision.bytes() * cfg.batch * cfg.seq_len * cfg.hidden;
+    let expect = act_bytes * cfg.top_k() * 125 / 100;
+    for (bytes, _) in &a2a {
+        assert_eq!(*bytes, expect, "a2a payload formula drifted");
+    }
+}
+
+/// The collective model's all-to-all: each device keeps its own 1/n slice,
+/// so (n−1)/n of the payload crosses the wire, in n−1 unpipelined
+/// per-peer messages — time grows with the group span.
+#[test]
+fn alltoall_wire_volume_is_n_minus_1_over_n() {
+    let cost = CollectiveCost::new(catalog::mi210());
+    let b = 1_000_000u64;
+    for n in [2u64, 4, 8] {
+        let wire = cost.wire_bytes(CollectiveKind::AllToAll, b, n);
+        let expect = (n - 1) as f64 / n as f64 * b as f64;
+        assert_eq!(wire.to_bits(), expect.to_bits(), "n={n}");
+    }
+    let t4 = cost.time(CollectiveKind::AllToAll, b, 4);
+    let t8 = cost.time(CollectiveKind::AllToAll, b, 8);
+    assert!(t4 > 0.0);
+    assert!(t8 > t4, "a wider group pays more hops and wire volume");
+    assert_eq!(cost.time(CollectiveKind::AllToAll, 0, 8), 0.0);
+    assert_eq!(cost.time(CollectiveKind::AllToAll, b, 1), 0.0);
+}
+
+/// End-to-end price pin against the serial reference: the MoE point's
+/// serialized-comm stream is exactly the dense point's (same TP
+/// all-reduces — payloads are activation-shaped) plus 4 per-layer
+/// all-to-alls priced on the EP group's tier.
+#[test]
+fn moe_serialized_delta_matches_the_priced_a2a() {
+    let d = catalog::mi210();
+    let dense = moe_config(1, MoeConfig::dense());
+    let moe = moe_config(
+        2,
+        MoeConfig { experts: 4, top_k: 2, capacity_pct: 125 },
+    );
+    let hw = HwPoint::today(&d);
+    let grid = ScenarioGrid::from_parts(
+        vec![hw.clone()],
+        vec![
+            Scenario { cfg: dense, opts: GraphOptions::default(), hw: 0 },
+            Scenario { cfg: moe, opts: GraphOptions::default(), hw: 0 },
+        ],
+    );
+    let m = sweep::run_serial_reference(&grid);
+    let delta = m[1].serialized_comm - m[0].serialized_comm;
+
+    let a2a_bytes = moe.precision.bytes()
+        * moe.batch
+        * moe.seq_len
+        * moe.hidden
+        * moe.top_k()
+        * 125
+        / 100;
+    let coll = CollectiveCost::new(hw.device.clone()).with_tier(
+        hw.topology.spec_for(CommGroup::ExpertParallel, &moe.par),
+    );
+    let expect = 4.0
+        * moe.layers as f64
+        * coll.time(CollectiveKind::AllToAll, a2a_bytes, moe.ep());
+    assert!(expect > 0.0);
+    // the serialized stream is a float sum accumulated in op order, so
+    // compare to a tight relative tolerance rather than bit-for-bit
+    assert!(
+        (delta - expect).abs() <= 1e-12 * expect.max(1.0),
+        "serialized a2a delta {delta} != priced {expect}"
+    );
+}
+
+/// The cached sweep engine (graph templates keyed on shape, payload
+/// rewrites per point) must stay bit-identical to the naive serial loop
+/// on a grid that mixes dense and MoE points over shared (H, SL) shapes —
+/// a template cache that ignored the a2a shape bit would cross-wire them.
+#[test]
+fn moe_sweep_engine_matches_the_serial_reference() {
+    let d = catalog::mi210();
+    let grid = GridBuilder::new(&d)
+        .hidden(&[1024])
+        .seq_len(&[2048])
+        .layers(&[2])
+        .experts(&[1, 4])
+        .top_k(&[1, 2])
+        .capacity_pct(&[125])
+        .tp(&[1, 2])
+        .dp(&[2])
+        .ep(&[1, 2])
+        .build();
+    assert!(
+        grid.points.iter().any(|s| s.cfg.ep() > 1),
+        "grid must realize MoE points"
+    );
+    assert!(
+        grid.points.iter().any(|s| s.cfg.experts() == 1),
+        "grid must realize dense points"
+    );
+    let reference = sweep::run_serial_reference(&grid);
+    let engine = sweep::run(&grid);
+    assert_eq!(reference.len(), engine.len());
+    for (i, (a, b)) in reference.iter().zip(&engine).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "point {i} ({:?}, experts={}, ep={}) drifted",
+            grid.points[i].cfg.par,
+            grid.points[i].cfg.experts(),
+            grid.points[i].cfg.ep()
+        );
+    }
+}

@@ -256,6 +256,49 @@ fn golden_mixed_workload_grid() {
     );
 }
 
+/// MoE grids keep the equivalence at both fidelities: the all-to-all
+/// sharpener in the lower bound must never prune a true winner, dense
+/// points collapse the MoE axes without duplicating, and the surrogate's
+/// payload-digest MoE term ranks exactly like the exact simulator's own
+/// argmin stream.
+#[test]
+fn golden_moe_grid_search_equals_sweep_at_both_fidelities() {
+    let mut spec = StudySpec::parse(
+        r#"{
+          "name": "golden_moe",
+          "axes": {
+            "hidden": [4096],
+            "seq_len": [2048],
+            "layers": [4],
+            "experts": [1, 8],
+            "top_k": [1, 2],
+            "capacity_factor": [1.0, 1.25],
+            "tp": [1, 2],
+            "pp": [1],
+            "microbatches": [4],
+            "dp": [2, 4],
+            "ep": [1, 2, 4],
+            "evolutions": [1, 4],
+            "topologies": ["node8"]
+          },
+          "group_by": ["experts", "flop_vs_bw"],
+          "aggregate": [{"metric": "time_per_sample",
+                         "ops": ["min", "argmin"],
+                         "args": ["tp", "dp", "ep", "top_k",
+                                  "capacity_factor"]}]
+        }"#,
+    )
+    .unwrap();
+    let (evaluated, candidates) = assert_spec_search_equals_sweep(&spec);
+    // exact collapse/skip counts are pinned in the grid unit tests; here
+    // only the search/sweep equivalence and pruning soundness matter
+    assert!(candidates > 0, "MoE grid realized no points");
+    assert!(evaluated <= candidates, "{evaluated}/{candidates}");
+
+    spec.fidelity = commscale::sweep::Fidelity::Surrogate;
+    assert_spec_search_equals_sweep(&spec);
+}
+
 /// The winners round-trip through the spec sink into a runnable study
 /// whose grid is exactly the winner set.
 #[test]

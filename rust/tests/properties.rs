@@ -28,6 +28,7 @@ fn arb_config(rng: &mut Rng) -> ModelConfig {
         par: ParallelismSpec::tp_dp(tp, 1 << rng.range(0, 4)),
         precision: *rng.choose(&[Precision::F32, Precision::F16, Precision::F8]),
         workload: commscale::inference::Workload::Training,
+        moe: commscale::model::MoeConfig::dense(),
     }
 }
 

@@ -327,6 +327,48 @@ fn exhausted_retry_budget_names_the_shard() {
     assert!(err.contains("truncated"), "{err}");
 }
 
+/// MoE grids shard the same way: the expert axes (experts, top_k,
+/// capacity_factor, ep) ride the deterministic point stream, so a merged
+/// scatter/gather run — raw rows and grouped argmins over `ep` alike —
+/// stays bit-identical to the single process for n ∈ {2, 3, 5}.
+#[test]
+fn moe_specs_merge_bit_identically() {
+    let raw = r#"{"name": "moe_raw",
+        "axes": {"hidden": [1024], "seq_len": [2048], "layers": [2],
+                 "experts": [1, 4], "top_k": [1, 2],
+                 "capacity_factor": [1.25],
+                 "tp": [1, 2], "dp": [2, 4], "ep": [1, 2, 4],
+                 "topologies": ["node4"]},
+        "metrics": ["comm_fraction"]}"#;
+    let grouped = r#"{"name": "moe_grouped",
+        "axes": {"hidden": [1024], "seq_len": [2048], "layers": [2],
+                 "experts": [1, 4], "top_k": [1, 2],
+                 "capacity_factor": [1.0, 1.25],
+                 "tp": [1, 2], "dp": [2, 4], "ep": [1, 2, 4],
+                 "evolutions": [1, 4], "topologies": ["node4"]},
+        "group_by": ["experts", "flop_vs_bw"],
+        "aggregate": [{"metric": "time_per_sample",
+                       "ops": ["min", "argmin"],
+                       "args": ["tp", "dp", "ep", "top_k",
+                                "capacity_factor"]}]}"#;
+    let device = catalog::mi210();
+    for text in [raw, grouped] {
+        let spec = StudySpec::parse(text).unwrap();
+        let resolved = spec.resolve(&device).unwrap();
+        assert!(resolved.total_points() > 0, "MoE grid resolved empty");
+        let opts = RunOptions { threads: 1, chunk: 0 };
+        let single = run_single(&resolved, opts);
+        for n in [2usize, 3, 5] {
+            let merged = run_sharded(&resolved, n, opts);
+            assert_identical(
+                &single,
+                &merged,
+                &format!("{} n={n}", spec.name),
+            );
+        }
+    }
+}
+
 /// The zoo source shards by row index the same way.
 #[test]
 fn zoo_source_shards_bit_identically() {

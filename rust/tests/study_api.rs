@@ -187,32 +187,49 @@ fn moe_example_runs_and_respects_its_filter() {
     assert_eq!(outcome.points_evaluated, resolved.total_points());
     assert!(!sink.rows.is_empty());
     let cf = sink.col("comm_fraction");
-    let fm = sink.col("ffn_mult");
     for row in &sink.rows {
         assert!(row[cf].as_f64() < 0.95, "filter must hold");
     }
-    // the study's thesis: at fixed (H, SL, TP, hw), wider FFNs dilute the
-    // serialized-comm share
+    // the study's thesis: the expert-parallel all-to-all rides the
+    // serialized stream, so at a fixed (H, SL, TP, DP, experts, hw) cell
+    // the serialized comm time strictly exceeds the dense cell's (same TP
+    // all-reduces + dispatch/combine a2a), and grows again as the EP span
+    // widens (more latency hops, a larger (n-1)/n wire factor)
+    let ser = sink.col("serialized_comm");
+    let ex = sink.col("experts");
+    let tk = sink.col("top_k");
+    let ep = sink.col("ep");
     let tp = sink.col("tp");
+    let dp = sink.col("dp");
     let h = sink.col("hidden");
     let sl = sink.col("seq_len");
     let sc = sink.col("scenario");
     let sp = sink.col("seq_par");
-    let pick = |want_fm: f64| -> f64 {
+    let pick = |want_ex: f64, want_ep: f64| -> f64 {
         sink.rows
             .iter()
             .find(|r| {
-                r[fm].as_f64() == want_fm
-                    && r[tp].as_f64() == 16.0
-                    && r[h].as_f64() == 16384.0
+                r[ex].as_f64() == want_ex
+                    // dense rows collapse top_k to 1; MoE picks route top-2
+                    && r[tk].as_f64() == if want_ex > 1.0 { 2.0 } else { 1.0 }
+                    && r[ep].as_f64() == want_ep
+                    && r[tp].as_f64() == 8.0
+                    && r[dp].as_f64() == 8.0
+                    && r[h].as_f64() == 8192.0
                     && r[sl].as_f64() == 2048.0
                     && r[sp] == Value::Bool(false)
                     && r[sc].render().starts_with("1x")
             })
-            .expect("cell present")[cf]
+            .expect("cell present")[ser]
             .as_f64()
     };
-    assert!(pick(16.0) < pick(4.0), "wider FFN must dilute comm share");
+    let dense = pick(1.0, 1.0);
+    assert!(dense > 0.0, "TP=8 all-reduces are serialized");
+    assert!(pick(8.0, 4.0) > dense, "EP a2a must add serialized comm");
+    assert!(
+        pick(8.0, 8.0) > pick(8.0, 4.0),
+        "a wider EP span must cost more a2a time"
+    );
 }
 
 #[test]

@@ -80,6 +80,16 @@ fn unknown_fidelity_is_named_with_alternatives() {
 }
 
 #[test]
+fn zero_gen_len_is_rejected_at_the_spec_boundary() {
+    // the model-level guard (Workload::Decode { gen_len: 0 }) is pinned in
+    // model::tests; here the *spec* path must refuse before a degenerate
+    // decode workload can ever reach validate
+    let err = first_error("bad_gen_len.json");
+    assert!(err.contains("gen_len"), "{err}");
+    assert!(err.contains("positive integers"), "{err}");
+}
+
+#[test]
 fn unknown_execution_is_named_with_alternatives() {
     let err = first_error("bad_execution.json");
     assert!(err.contains("paralel"), "{err}");
@@ -127,6 +137,7 @@ fn every_fixture_is_covered_by_a_test() {
             "bad_execution.json",
             "bad_fidelity.json",
             "bad_filter_op.json",
+            "bad_gen_len.json",
             "bad_sink_kind.json",
             "cyclic_metric.json",
             "shard_mismatch.jsonl",

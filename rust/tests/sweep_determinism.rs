@@ -310,6 +310,7 @@ fn pp_bubble_fraction_matches_closed_form_on_uniform_stages() {
                 .with_pp(pp, mb),
             precision: commscale::model::Precision::F16,
             workload: commscale::inference::Workload::Training,
+            moe: commscale::model::MoeConfig::dense(),
         };
         cfg.validate().unwrap();
         let cost = AnalyticCost::from_spec(d.clone(), cfg.precision, cfg.par);
